@@ -1,0 +1,98 @@
+//! Ablation scenario: J-LRD vs S-LRD at matched KV-cache budgets (paper
+//! §4.3.2 / Figure 5), plus the Appendix-C dimension-allocation solver.
+//!
+//! Run: cargo run --release --example ablation_lrd -- \
+//!        [--ckpt pretrained_tiny.ekvc] [--steps 120]
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use elitekv::cli::Args;
+use elitekv::config::ModelConfig;
+use elitekv::convert::{self, allocation};
+use elitekv::data::CorpusGen;
+use elitekv::runtime::{Engine, HostTensor, ModelRunner, TrainState};
+use elitekv::search;
+use elitekv::train::{TrainLoop, TrainOpts};
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let cfg = ModelConfig::tiny();
+    let engine = Arc::new(Engine::new()?);
+    let base_runner =
+        ModelRunner::new(Arc::clone(&engine), "artifacts", "tiny", "mha")?;
+
+    // A trained baseline (loaded or freshly pretrained).
+    let params = match args.get("ckpt") {
+        Some(p) => base_runner
+            .params_from_ckpt(&elitekv::io::Checkpoint::load(p)?)?,
+        None => {
+            let steps = args.usize_or("steps", 120)?;
+            println!("pretraining {steps} steps...");
+            let mut st = TrainState::fresh(base_runner.init(42)?);
+            let o = TrainOpts { steps, lr: 1e-3, log_every: 40,
+                                ..Default::default() };
+            TrainLoop::new(&base_runner, &o).run(&mut st, &o)?;
+            st.params
+        }
+    };
+    let base_ckpt = base_runner.ckpt_from_params(&params)?;
+
+    // Appendix-C solver: shortlist (r, d_ckv) at a 25 % budget.
+    let budget = cfg.kv_elems_per_token() / 4;
+    let cands = allocation::enumerate_configs(&cfg, budget, 16);
+    println!("Appendix-C shortlist at budget {budget} elems/token/layer:");
+    for c in cands.iter().take(5) {
+        println!(
+            "  {:<18} cache {:>3}  param delta {:>9}",
+            c.variant.tag(), c.cache_per_token, c.param_delta
+        );
+    }
+
+    // Fig-5-style comparison: fixed latent budget, J-LRD vs S-LRD splits.
+    let r = cfg.n_chunks() / 4;
+    let latent = 128usize; // elems left for latents after 2*r*nh rotated
+    let mut cal = CorpusGen::new(cfg.vocab, 1);
+    cal.reseed(1, 0xca11b);
+    let sel = search::ropelite_search(&base_runner, &params, &mut cal, r)?;
+    let theta = convert::elitekv::elite_thetas_flat(&cfg, &sel);
+
+    let eval = |tag: &str, ckpt: &elitekv::io::Checkpoint| -> Result<f64> {
+        let mut runner = ModelRunner::new(
+            Arc::clone(&engine), "artifacts", "tiny", tag)?;
+        let rvar = runner.manifest.variant.r().unwrap();
+        runner.set_extras(vec![HostTensor::F32(
+            theta.clone(), vec![cfg.n_layers, cfg.n_heads, rvar])])?;
+        let p = runner.params_from_ckpt(ckpt)?;
+        let mut gen = CorpusGen::new(cfg.vocab, 1);
+        gen.reseed(1, 0xe7a1);
+        runner.perplexity(&p, &mut gen, 3)
+    };
+
+    println!("\nJ-LRD vs S-LRD at latent budget {latent} (r = {r}):");
+    let jtag = format!("elitekv_r{r}_c{latent}");
+    let jl = convert::convert_elitekv(&cfg, &base_ckpt, &sel, latent)?;
+    let jppl = eval(&jtag, &jl)?;
+    println!("  J-LRD {:<22} ppl {jppl:.3}", jtag);
+    let mut best_s = f64::INFINITY;
+    for frac in [0.25f64, 0.5, 0.75] {
+        let ck = (((latent as f64 * frac) / 16.0).round() as usize * 16).max(16);
+        let cv = latent - ck;
+        if cv < 16 {
+            continue;
+        }
+        let stag = format!("slrd_r{r}_ck{ck}_cv{cv}");
+        let sl = convert::convert_slrd(&cfg, &base_ckpt, &sel, ck, cv)?;
+        let sppl = eval(&stag, &sl)?;
+        best_s = best_s.min(sppl);
+        println!("  S-LRD {:<22} ppl {sppl:.3}", stag);
+    }
+    println!(
+        "\n=> J-LRD {} the best S-LRD split at equal cache \
+         ({jppl:.3} vs {best_s:.3}) — paper §4.3.2's claim",
+        if jppl <= best_s { "beats" } else { "does NOT beat" }
+    );
+    println!("ablation_lrd OK");
+    Ok(())
+}

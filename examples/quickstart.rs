@@ -1,0 +1,109 @@
+//! Quickstart: the full EliteKV pipeline on the tiny model in one binary.
+//!
+//!   1. pretrain a baseline MHA transformer on the synthetic corpus
+//!   2. RoPElite search (Algorithm 1) for each head's elite chunks
+//!   3. J-LRD conversion to a 25 % KV cache
+//!   4. brief uptraining
+//!   5. compare perplexity + generate through the compressed cache
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+//! (~5 minutes on one CPU core; tune steps via env QUICKSTART_STEPS)
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use elitekv::config::{ModelConfig, Variant};
+use elitekv::convert;
+use elitekv::coordinator::{GenParams, InferenceServer, Request};
+use elitekv::data::CorpusGen;
+use elitekv::runtime::{Engine, HostTensor, ModelRunner, TrainState};
+use elitekv::search;
+use elitekv::train::{TrainLoop, TrainOpts};
+
+fn main() -> Result<()> {
+    let steps: usize = std::env::var("QUICKSTART_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(150);
+    let cfg = ModelConfig::tiny();
+    let engine = Arc::new(Engine::new()?);
+
+    // 1. Pretrain the baseline.
+    println!("[1/5] pretraining tiny MHA baseline ({steps} steps)...");
+    let base_runner =
+        ModelRunner::new(Arc::clone(&engine), "artifacts", "tiny", "mha")?;
+    let params = base_runner.init(42)?;
+    let mut state = TrainState::fresh(params);
+    let opts = TrainOpts { steps, lr: 1e-3, log_every: 25, ..Default::default() };
+    let mut lp = TrainLoop::new(&base_runner, &opts);
+    let report = lp.run(&mut state, &opts)?;
+    println!("      baseline ppl {:.2}", report.final_ppl);
+    let base_ckpt = base_runner.ckpt_from_params(&state.params)?;
+
+    // 2. RoPElite search.
+    let r = cfg.n_chunks() / 4; // 2r dims per head stay rotated
+    println!("[2/5] RoPElite greedy search (r = {r})...");
+    let mut gen = CorpusGen::new(cfg.vocab, 1);
+    gen.reseed(1, 0xca11b);
+    let sel = search::ropelite_search(&base_runner, &state.params, &mut gen, r)?;
+    println!("      layer 0 head 0 elite chunks: {:?}", sel.chunks[0][0]);
+
+    // 3. J-LRD conversion to 25 % cache.
+    let d_ckv = {
+        let t = 0.25 * cfg.kv_elems_per_token() as f64
+            - (2 * r * cfg.n_heads) as f64;
+        (t as usize / 16) * 16
+    };
+    let variant = Variant::EliteKv { r, d_ckv };
+    println!("[3/5] J-LRD conversion -> {} ({:.1}% cache)...",
+             variant.tag(), 100.0 * variant.cache_ratio(&cfg));
+    let converted = convert::convert_elitekv(&cfg, &base_ckpt, &sel, d_ckv)?;
+    let mut kv_runner = ModelRunner::new(
+        Arc::clone(&engine), "artifacts", "tiny", &variant.tag())?;
+    let theta = convert::elitekv::elite_thetas_flat(&cfg, &sel);
+    kv_runner.set_extras(vec![HostTensor::F32(
+        theta, vec![cfg.n_layers, cfg.n_heads, r])])?;
+    let kv_params = kv_runner.params_from_ckpt(&converted)?;
+
+    // 4. Uptrain briefly.
+    let up_steps = steps / 3;
+    println!("[4/5] uptraining {up_steps} steps...");
+    let mut kv_state = TrainState::fresh(kv_params);
+    let opts = TrainOpts {
+        steps: up_steps, lr: 3e-4, log_every: 25, data_seed: 7,
+        ..Default::default()
+    };
+    let mut lp = TrainLoop::new(&kv_runner, &opts);
+    let kv_report = lp.run(&mut kv_state, &opts)?;
+    println!(
+        "      ppl: baseline {:.2} -> converted+uptrained {:.2} at 25% cache",
+        report.final_ppl, kv_report.final_ppl
+    );
+
+    // 5. Serve a few generations through the compressed cache.
+    println!("[5/5] serving through the compressed KV cache...");
+    let mut server = InferenceServer::new(kv_runner, kv_state.params, 8 << 20)?;
+    let mut probe_gen = CorpusGen::new(cfg.vocab, 1);
+    let prompt = probe_gen.stream(12);
+    for i in 0..4 {
+        server.submit(Request::new(
+            i,
+            prompt.clone(),
+            GenParams { max_new_tokens: 12, ..Default::default() },
+        ));
+    }
+    let responses = server.run_to_completion()?;
+    for r in &responses {
+        println!("      req {}: {} tokens, latency {:.0} ms",
+                 r.id, r.tokens.len(), r.latency * 1e3);
+    }
+    println!(
+        "      peak cache {} KiB ({} decode steps, {} prefills)",
+        server.stats.peak_cache_bytes / 1024,
+        server.stats.decode_steps,
+        server.stats.prefills
+    );
+    println!("quickstart OK");
+    Ok(())
+}

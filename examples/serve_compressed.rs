@@ -1,0 +1,141 @@
+//! Serving scenario: multi-worker router + continuous batching over the
+//! compressed KV cache, comparing capacity/latency against the baseline
+//! layout under the same memory budget — the systems payoff of EliteKV
+//! (paper intro: long-context, real-time serving is KV-cache bound).
+//!
+//! Run: cargo run --release --example serve_compressed -- \
+//!        [--ckpt pretrained.ekvc] [--requests 32] [--budget-mb 2]
+//!
+//! Without --ckpt the demo initializes random weights (layout effects —
+//! admission, cache bytes, batching — are weight-independent).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use elitekv::cli::Args;
+use elitekv::config::{ModelConfig, Variant};
+use elitekv::coordinator::router::EngineFactory;
+use elitekv::coordinator::{GenParams, InferenceServer, Request, Router};
+use elitekv::data::{CorpusGen, ProbeSet};
+use elitekv::kvcache::{BlockAllocator, CacheLayout};
+use elitekv::runtime::{Engine, HostTensor, ModelRunner};
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let n_requests = args.usize_or("requests", 32)?;
+    let budget = args.usize_or("budget-mb", 2)? << 20;
+    let cfg = ModelConfig::tiny();
+    let nc = cfg.n_chunks();
+    let variants = [
+        Variant::Mha,
+        Variant::Gqa { n_kv_heads: cfg.n_heads / 4 },
+        Variant::EliteKv { r: nc / 4, d_ckv: 64 },
+    ];
+
+    println!("== capacity under a {} MiB cache budget ==", budget >> 20);
+    for v in &variants {
+        let layout = CacheLayout::new(&cfg, v.clone());
+        let alloc = BlockAllocator::with_budget(
+            budget, layout.bytes_per_token(), 16);
+        println!(
+            "  {:<18} cache {:>5.1}%  {:>8} tokens  {:>5} blocks",
+            v.tag(),
+            100.0 * layout.ratio,
+            layout.tokens_in_budget(budget),
+            alloc.n_blocks(),
+        );
+    }
+
+    println!("\n== serving {} requests per variant ==", n_requests);
+    let gen = CorpusGen::new(cfg.vocab, 1);
+    let probes = ProbeSet::generate(&gen, n_requests.div_ceil(6), 2024);
+    for v in &variants {
+        let tag = v.tag();
+        let mut server = build_server(&args, &tag, budget)?;
+        let t0 = std::time::Instant::now();
+        for (i, item) in probes.items.iter().take(n_requests).enumerate() {
+            server.submit(Request::new(
+                i as u64,
+                item.prompt.clone(),
+                GenParams { max_new_tokens: 8, ..Default::default() },
+            ));
+        }
+        let responses = server.run_to_completion()?;
+        let wall = t0.elapsed().as_secs_f64();
+        let toks: usize = responses.iter().map(|r| r.tokens.len()).sum();
+        println!(
+            "  {:<18} {:>6.1} tok/s  peak cache {:>6} KiB  \
+             {} prefills, {} decode steps",
+            tag,
+            toks as f64 / wall,
+            server.stats.peak_cache_bytes / 1024,
+            server.stats.prefills,
+            server.stats.decode_steps,
+        );
+    }
+
+    // Router demo: two workers behind a least-loaded router.
+    println!("\n== leader/worker router (2 engines) ==");
+    let mk = |args: &Args, budget: usize| -> EngineFactory {
+        let tag = Variant::EliteKv { r: nc / 4, d_ckv: 64 }.tag();
+        let ckpt = args.get("ckpt").map(|s| s.to_string());
+        Box::new(move || {
+            let args2 = match ckpt {
+                Some(c) => format!("--ckpt {c}"),
+                None => String::new(),
+            };
+            let parsed = elitekv::cli::Args::parse(
+                args2.split_whitespace().map(String::from))?;
+            build_server(&parsed, &tag, budget)
+        })
+    };
+    let mut router = Router::new(vec![mk(&args, budget), mk(&args, budget)]);
+    let t0 = std::time::Instant::now();
+    for (i, item) in probes.items.iter().take(n_requests).enumerate() {
+        router.submit(Request::new(
+            1000 + i as u64,
+            item.prompt.clone(),
+            GenParams { max_new_tokens: 8, ..Default::default() },
+        ))?;
+    }
+    let responses = router.drain()?;
+    println!(
+        "  routed {} requests across {} workers in {:.2}s",
+        responses.len(),
+        router.n_workers(),
+        t0.elapsed().as_secs_f64()
+    );
+    println!("serve_compressed OK");
+    Ok(())
+}
+
+/// Build a single-engine server for a variant, loading --ckpt when given
+/// (extras default to the ladder-prefix selection for demo purposes).
+fn build_server(
+    args: &Args,
+    tag: &str,
+    budget: usize,
+) -> Result<InferenceServer> {
+    let engine = Arc::new(Engine::new()?);
+    let mut runner = ModelRunner::new(engine, "artifacts", "tiny", tag)?;
+    let cfg = runner.manifest.config.clone();
+    if !runner.manifest.extras.is_empty() {
+        // demo selection: first r chunks of the ladder per head
+        let r = runner.manifest.variant.r().unwrap();
+        let elite = vec![vec![(0..r).collect::<Vec<_>>(); cfg.n_heads];
+                         cfg.n_layers];
+        runner.set_extras(vec![HostTensor::F32(
+            elitekv::rope::elite_thetas(&cfg, &elite),
+            vec![cfg.n_layers, cfg.n_heads, r],
+        )])?;
+    }
+    let params = match args.get("ckpt") {
+        Some(path) => {
+            let ckpt = elitekv::io::Checkpoint::load(path)?;
+            runner.params_from_ckpt(&ckpt)?
+        }
+        None => runner.init(7)?,
+    };
+    InferenceServer::new(runner, params, budget)
+}

@@ -1,0 +1,166 @@
+//! End-to-end training driver (the repository's headline validation run):
+//! train a transformer from scratch through the full three-layer stack —
+//! Rust coordinator -> PJRT -> AOT-lowered JAX graph — logging the loss
+//! curve, then convert to EliteKV and show recovery.
+//!
+//! Default config is `small` (~13 M params, ~10 s/step on one CPU core);
+//! pass `--config 100m` for the ~97 M-parameter model (same code path;
+//! step time ~1 min/step on this single-core CPU testbed, so budget
+//! accordingly — EXPERIMENTS.md §E2E records the reference runs).
+//!
+//! Run: cargo run --release --example uptrain_e2e -- \
+//!        [--config small] [--steps 300] [--uptrain 60] [--out results]
+
+use std::io::Write;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use elitekv::cli::Args;
+use elitekv::config::{ModelConfig, Variant};
+use elitekv::convert;
+use elitekv::data::{CorpusGen, ProbeSet};
+use elitekv::runtime::{Engine, HostTensor, ModelRunner, TrainState};
+use elitekv::search;
+use elitekv::train::{scorer, TrainLoop, TrainOpts};
+use elitekv::util::Json;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let cfg_name = args.str_or("config", "small");
+    let steps = args.usize_or("steps", 300)?;
+    let up_steps = args.usize_or("uptrain", 60)?;
+    let out_dir = args.str_or("out", "results");
+    std::fs::create_dir_all(&out_dir)?;
+    let cfg = ModelConfig::by_name(&cfg_name).context("unknown config")?;
+    println!(
+        "e2e: {} ({} layers, d={}, ~{:.0}M params), {} pretrain steps",
+        cfg.name, cfg.n_layers, cfg.d_model,
+        cfg.approx_params() as f64 / 1e6, steps
+    );
+
+    let engine = Arc::new(Engine::new()?);
+    let runner =
+        ModelRunner::new(Arc::clone(&engine), "artifacts", &cfg_name, "mha")?;
+
+    // --- pretrain with a logged loss curve ---
+    let params = runner.init(42)?;
+    let mut state = TrainState::fresh(params);
+    let opts = TrainOpts {
+        steps,
+        lr: 1e-3,
+        eval_every: (steps / 6).max(1),
+        eval_batches: 2,
+        log_every: 10,
+        data_seed: 1,
+    };
+    let mut lp = TrainLoop::new(&runner, &opts);
+    let report = lp.run(&mut state, &opts)?;
+    println!(
+        "pretrain done: loss {:.4}, ppl {:.3}, {} tokens, {:.1}s \
+         ({:.2} s/step)",
+        report.final_loss, report.final_ppl, report.tokens_seen,
+        report.seconds, report.seconds / steps as f64
+    );
+    // write the loss curve
+    let curve = Json::Arr(
+        report
+            .points
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("step", Json::num(p.step as f64)),
+                    ("tokens", Json::num(p.tokens as f64)),
+                    ("loss", Json::num(p.loss)),
+                    ("ppl", p.ppl.map(Json::num).unwrap_or(Json::Null)),
+                ])
+            })
+            .collect(),
+    );
+    let curve_path = format!("{out_dir}/e2e_{cfg_name}_losscurve.json");
+    std::fs::write(&curve_path, curve.to_string())?;
+    println!("loss curve -> {curve_path}");
+    let mut f = std::fs::File::create(
+        format!("{out_dir}/e2e_{cfg_name}_losscurve.tsv"))?;
+    writeln!(f, "step\ttokens\tloss\tppl")?;
+    for p in &report.points {
+        writeln!(f, "{}\t{}\t{:.5}\t{}", p.step, p.tokens, p.loss,
+                 p.ppl.map(|x| format!("{x:.4}")).unwrap_or_default())?;
+    }
+
+    // Save the pretrained checkpoint where the experiment harness caches
+    // it, so `elitekv experiment` reuses this run instead of retraining.
+    let mut ckpt = runner.ckpt_from_params(&state.params)?;
+    ckpt.set_meta("pretrain_steps", steps);
+    ckpt.set_meta("pretrain_tokens", report.tokens_seen);
+    let ckpt_path = format!("{out_dir}/pretrained_{cfg_name}.ekvc");
+    if !std::path::Path::new(&ckpt_path).exists() {
+        ckpt.save(&ckpt_path)?;
+        println!("checkpoint -> {ckpt_path}");
+    }
+
+    // --- probe the baseline ---
+    let gen = CorpusGen::new(cfg.vocab, 1);
+    let probes = ProbeSet::generate(&gen, 15, 99);
+    let base_rep = scorer::full_report(&runner, &state.params, &probes, 2)?;
+    println!("baseline probes: avg {:.1}%, ppl {:.3}",
+             100.0 * base_rep.scores.average, base_rep.ppl);
+
+    // --- EliteKV at 25 % cache: search -> convert -> uptrain -> compare ---
+    let r = cfg.n_chunks() / 4;
+    let align = if cfg.d_model >= 512 { 32 } else { 16 };
+    let d_ckv = {
+        let t = 0.25 * cfg.kv_elems_per_token() as f64
+            - (2 * r * cfg.n_heads) as f64;
+        ((t / align as f64).round() as usize * align).max(align)
+    };
+    let variant = Variant::EliteKv { r, d_ckv };
+    println!("EliteKV conversion: {} ({:.1}% cache)", variant.tag(),
+             100.0 * variant.cache_ratio(&cfg));
+    let mut cal = CorpusGen::new(cfg.vocab, 1);
+    cal.reseed(1, 0xca11b);
+    let sel = search::ropelite_search(&runner, &state.params, &mut cal, r)?;
+    let base_ckpt = runner.ckpt_from_params(&state.params)?;
+    let converted = convert::convert_elitekv(&cfg, &base_ckpt, &sel, d_ckv)?;
+    let mut kv_runner = ModelRunner::new(
+        Arc::clone(&engine), "artifacts", &cfg_name, &variant.tag())?;
+    kv_runner.set_extras(vec![HostTensor::F32(
+        convert::elitekv::elite_thetas_flat(&cfg, &sel),
+        vec![cfg.n_layers, cfg.n_heads, r],
+    )])?;
+    let kv_params = kv_runner.params_from_ckpt(&converted)?;
+    let mut kv_state = TrainState::fresh(kv_params);
+    let opts = TrainOpts {
+        steps: up_steps, lr: 3e-4, log_every: 10, data_seed: 7,
+        ..Default::default()
+    };
+    let mut lp = TrainLoop::new(&kv_runner, &opts);
+    let kv_report = lp.run(&mut kv_state, &opts)?;
+    let kv_rep = scorer::full_report(&kv_runner, &kv_state.params, &probes, 2)?;
+    println!(
+        "EliteKV@25%: ppl {:.3} (baseline {:.3}), probe avg {:.1}% \
+         (baseline {:.1}%), uptrain tokens = {:.1}% of pretraining",
+        kv_rep.ppl, base_rep.ppl,
+        100.0 * kv_rep.scores.average, 100.0 * base_rep.scores.average,
+        100.0 * kv_report.tokens_seen as f64 / report.tokens_seen as f64
+    );
+
+    let summary = Json::obj(vec![
+        ("config", Json::str(cfg_name.as_str())),
+        ("params_m", Json::num(cfg.approx_params() as f64 / 1e6)),
+        ("pretrain_steps", Json::num(steps as f64)),
+        ("pretrain_tokens", Json::num(report.tokens_seen as f64)),
+        ("pretrain_final_loss", Json::num(report.final_loss)),
+        ("pretrain_final_ppl", Json::num(report.final_ppl)),
+        ("seconds_per_step", Json::num(report.seconds / steps as f64)),
+        ("baseline_probe_avg", Json::num(base_rep.scores.average)),
+        ("elitekv_variant", Json::str(&variant.tag())),
+        ("elitekv_ppl", Json::num(kv_rep.ppl)),
+        ("elitekv_probe_avg", Json::num(kv_rep.scores.average)),
+        ("uptrain_tokens", Json::num(kv_report.tokens_seen as f64)),
+    ]);
+    let sum_path = format!("{out_dir}/e2e_{cfg_name}_summary.json");
+    std::fs::write(&sum_path, summary.to_string())?;
+    println!("summary -> {sum_path}\ne2e OK");
+    Ok(())
+}

@@ -1,0 +1,400 @@
+"""AOT lowering: JAX/Pallas -> HLO text + JSON manifests for the Rust L3.
+
+Interchange is HLO *text* (not serialized HloModuleProto): jax >= 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 (behind the
+published `xla` 0.1.6 crate) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Every (config, variant) pair produces
+    artifacts/<cfg>_<tag>_<fn>.hlo.txt     one module per entry point
+    artifacts/<cfg>_<tag>.json             manifest: exact input/output
+                                           order, names, shapes, dtypes
+Parameters, optimizer state, extras (elite mask / elite frequencies), and
+caches are all runtime inputs — nothing is baked, so one artifact covers
+every checkpoint and every searched chunk set of that shape.
+
+Usage: cd python && python -m compile.aot --out ../artifacts [--sets core]
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .configs import (CONFIGS, ModelConfig, Variant, parse_variant,
+                      table1_grid)
+
+F32, I32 = jnp.float32, jnp.int32
+
+
+def sds(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+class IoSpec:
+    """Ordered, named input/output layout of one lowered function."""
+
+    def __init__(self):
+        self.inputs: List[Dict] = []
+        self.outputs: List[Dict] = []
+
+    def inp(self, name, shape, dtype="f32"):
+        self.inputs.append({"name": name, "shape": list(shape), "dtype": dtype})
+        return sds(shape, I32 if dtype == "i32" else F32)
+
+    def out(self, name, shape, dtype="f32"):
+        self.outputs.append({"name": name, "shape": list(shape),
+                             "dtype": dtype})
+
+
+# --------------------------------------------------------------------------
+# Per-function builders: (flat-arg wrapper, input specs, io manifest)
+# --------------------------------------------------------------------------
+
+def _unflatten(names, flat, start):
+    return dict(zip(names, flat[start:start + len(names)])), start + len(names)
+
+
+def build_init(cfg: ModelConfig, var: Variant):
+    pspecs = M.param_specs(cfg, var)
+    io = IoSpec()
+    in_sds = [io.inp("seed", (), "i32")]
+    for n, s in pspecs:
+        io.out(f"param:{n}", s)
+
+    def fn(seed):
+        p = M.init_params(cfg, var, seed)
+        return tuple(p[n] for n, _ in pspecs)
+
+    return fn, in_sds, io
+
+
+def _param_inputs(io: IoSpec, pspecs, prefix: str):
+    return [io.inp(f"{prefix}:{n}", s) for n, s in pspecs]
+
+
+def build_train_step(cfg, var, batch, seq):
+    pspecs = M.param_specs(cfg, var)
+    especs = M.extras_specs(cfg, var)
+    pnames = [n for n, _ in pspecs]
+    enames = [n for n, _ in especs]
+    io = IoSpec()
+    in_sds = []
+    in_sds += _param_inputs(io, pspecs, "param")
+    in_sds += _param_inputs(io, pspecs, "m")
+    in_sds += _param_inputs(io, pspecs, "v")
+    in_sds.append(io.inp("step", (), "i32"))
+    in_sds.append(io.inp("lr", ()))
+    in_sds += [io.inp(f"extra:{n}", s) for n, s in especs]
+    in_sds.append(io.inp("tokens", (batch, seq), "i32"))
+    in_sds.append(io.inp("targets", (batch, seq), "i32"))
+    in_sds.append(io.inp("mask", (batch, seq)))
+    for pre in ("param", "m", "v"):
+        for n, s in pspecs:
+            io.out(f"{pre}:{n}", s)
+    io.out("step", (), "i32")
+    io.out("loss", ())
+    io.out("gnorm", ())
+
+    np_ = len(pspecs)
+
+    def fn(*flat):
+        p, i = _unflatten(pnames, flat, 0)
+        m, i = _unflatten(pnames, flat, i)
+        v, i = _unflatten(pnames, flat, i)
+        step, lr = flat[i], flat[i + 1]
+        extras, i = _unflatten(enames, flat, i + 2)
+        tokens, targets, mask = flat[i], flat[i + 1], flat[i + 2]
+        new_p, new_m, new_v, new_step, loss, gnorm = M.train_step(
+            cfg, var, p, m, v, step, lr, extras, tokens, targets, mask)
+        outs = tuple(new_p[n] for n in pnames) + \
+            tuple(new_m[n] for n in pnames) + \
+            tuple(new_v[n] for n in pnames) + (new_step, loss, gnorm)
+        return outs
+
+    return fn, in_sds, io
+
+
+def build_eval_loss(cfg, var, batch, seq):
+    pspecs = M.param_specs(cfg, var)
+    especs = M.extras_specs(cfg, var)
+    pnames = [n for n, _ in pspecs]
+    enames = [n for n, _ in especs]
+    io = IoSpec()
+    in_sds = _param_inputs(io, pspecs, "param")
+    in_sds += [io.inp(f"extra:{n}", s) for n, s in especs]
+    in_sds.append(io.inp("tokens", (batch, seq), "i32"))
+    in_sds.append(io.inp("targets", (batch, seq), "i32"))
+    in_sds.append(io.inp("mask", (batch, seq)))
+    io.out("sum_nll", ())
+    io.out("count", ())
+
+    def fn(*flat):
+        p, i = _unflatten(pnames, flat, 0)
+        extras, i = _unflatten(enames, flat, i)
+        tokens, targets, mask = flat[i], flat[i + 1], flat[i + 2]
+        return M.eval_loss(cfg, var, p, extras, tokens, targets, mask)
+
+    return fn, in_sds, io
+
+
+def build_prefill(cfg, var, batch, s):
+    pspecs = M.param_specs(cfg, var)
+    especs = M.extras_specs(cfg, var)
+    cspecs = M.cache_specs(cfg, var, batch, s)
+    pnames = [n for n, _ in pspecs]
+    enames = [n for n, _ in especs]
+    io = IoSpec()
+    in_sds = _param_inputs(io, pspecs, "param")
+    in_sds += [io.inp(f"extra:{n}", s_) for n, s_ in especs]
+    in_sds.append(io.inp("tokens", (batch, s), "i32"))
+    in_sds.append(io.inp("true_len", (batch,), "i32"))
+    io.out("logits", (batch, cfg.vocab))
+    for n, s_ in cspecs:
+        io.out(f"cache:{n}", s_)
+
+    def fn(*flat):
+        p, i = _unflatten(pnames, flat, 0)
+        extras, i = _unflatten(enames, flat, i)
+        tokens, true_len = flat[i], flat[i + 1]
+        return M.prefill(cfg, var, p, extras, tokens, true_len)
+
+    return fn, in_sds, io
+
+
+def build_decode(cfg, var, batch, s, use_pallas=False):
+    pspecs = M.param_specs(cfg, var)
+    especs = M.extras_specs(cfg, var)
+    cspecs = M.cache_specs(cfg, var, batch, s)
+    pnames = [n for n, _ in pspecs]
+    enames = [n for n, _ in especs]
+    cnames = [n for n, _ in cspecs]
+    io = IoSpec()
+    in_sds = _param_inputs(io, pspecs, "param")
+    in_sds += [io.inp(f"extra:{n}", s_) for n, s_ in especs]
+    in_sds.append(io.inp("token", (batch,), "i32"))
+    in_sds.append(io.inp("pos", (batch,), "i32"))
+    in_sds += [io.inp(f"cache:{n}", s_) for n, s_ in cspecs]
+    io.out("logits", (batch, cfg.vocab))
+    for n, s_ in cspecs:
+        io.out(f"cache:{n}", s_)
+
+    def fn(*flat):
+        p, i = _unflatten(pnames, flat, 0)
+        extras, i = _unflatten(enames, flat, i)
+        token, pos = flat[i], flat[i + 1]
+        caches = list(flat[i + 2:i + 2 + len(cnames)])
+        return M.decode_step(cfg, var, p, extras, token, pos, caches,
+                             use_pallas=use_pallas)
+
+    return fn, in_sds, io
+
+
+def build_capture_qk(cfg, batch, seq):
+    var = Variant("mha")
+    pspecs = M.param_specs(cfg, var)
+    pnames = [n for n, _ in pspecs]
+    io = IoSpec()
+    in_sds = _param_inputs(io, pspecs, "param")
+    in_sds.append(io.inp("tokens", (batch, seq), "i32"))
+    shp = (cfg.n_layers, batch, seq, cfg.n_heads, cfg.d_head)
+    io.out("q_pre", shp)
+    io.out("k_pre", shp)
+
+    def fn(*flat):
+        p, i = _unflatten(pnames, flat, 0)
+        return M.capture_qk(cfg, p, flat[i])
+
+    return fn, in_sds, io
+
+
+def build_ropelite_delta(cfg, batch, seq):
+    io = IoSpec()
+    shp = (batch, seq, cfg.n_heads, cfg.d_head)
+    in_sds = [io.inp("q_pre", shp), io.inp("k_pre", shp),
+              io.inp("elite_mask", (cfg.n_heads, cfg.n_chunks))]
+    io.out("distance", (cfg.n_heads, cfg.n_chunks))
+
+    def fn(q, k, mask):
+        return (M.ropelite_delta(cfg, q, k, mask),)
+
+    return fn, in_sds, io
+
+
+def build_contribution(cfg, batch, seq):
+    io = IoSpec()
+    shp = (cfg.n_layers, batch, seq, cfg.n_heads, cfg.d_head)
+    in_sds = [io.inp("q_pre", shp), io.inp("k_pre", shp)]
+    io.out("scores", (cfg.n_layers, cfg.n_heads, cfg.n_chunks))
+
+    def fn(q, k):
+        return (M.contribution_scores(cfg, q, k),)
+
+    return fn, in_sds, io
+
+
+# --------------------------------------------------------------------------
+# Lowering driver
+# --------------------------------------------------------------------------
+
+# Baked batch/seq per config (documented in the manifest).
+SHAPES = {
+    "tiny": {"train": (8, 128), "eval": (8, 128), "serve": (4, 256),
+             "capture": (2, 128)},
+    "small": {"train": (8, 128), "eval": (8, 128), "serve": (4, 256),
+              "capture": (2, 128)},
+    "100m": {"train": (4, 128), "eval": (4, 128), "serve": (2, 256),
+             "capture": (1, 128)},
+}
+
+
+def functions_for(cfg: ModelConfig, var: Variant, shapes) -> Dict[str, tuple]:
+    bt, st = shapes["train"]
+    be, se = shapes["eval"]
+    bs, ss = shapes["serve"]
+    bc, sc = shapes["capture"]
+    fns = {
+        "init": build_init(cfg, var),
+        "train_step": build_train_step(cfg, var, bt, st),
+        "eval_loss": build_eval_loss(cfg, var, be, se),
+        "prefill": build_prefill(cfg, var, bs, ss),
+        "decode": build_decode(cfg, var, bs, ss, use_pallas=False),
+    }
+    if var.kind == "elitekv":
+        fns["decode_pallas"] = build_decode(cfg, var, bs, ss, use_pallas=True)
+    if var.kind == "mha":
+        fns["capture_qk"] = build_capture_qk(cfg, bc, sc)
+        fns["ropelite_delta"] = build_ropelite_delta(cfg, bc, sc)
+        fns["contribution"] = build_contribution(cfg, bc, sc)
+    return fns
+
+
+def lower_pair(cfg: ModelConfig, var: Variant, out_dir: str,
+               only_fns=None) -> None:
+    tag = var.tag()
+    shapes = SHAPES[cfg.name]
+    manifest = {
+        "config": {
+            "name": cfg.name, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "d_head": cfg.d_head, "d_ffn": cfg.d_ffn, "vocab": cfg.vocab,
+            "max_seq": cfg.max_seq, "rope_base": cfg.rope_base,
+        },
+        "variant": {
+            "kind": var.kind, "tag": tag, "r": var.r, "d_ckv": var.d_ckv,
+            "d_ck": var.d_ck, "d_cv": var.d_cv, "n_kv_heads": var.n_kv_heads,
+        },
+        "cache_per_token": var.cache_per_token(cfg),
+        "cache_ratio": var.cache_ratio(cfg),
+        "params": [{"name": n, "shape": list(s)}
+                   for n, s in M.param_specs(cfg, var)],
+        "extras": [{"name": n, "shape": list(s)}
+                   for n, s in M.extras_specs(cfg, var)],
+        "shapes": shapes,
+        "functions": {},
+    }
+    for fname, (fn, in_sds, io) in functions_for(cfg, var, shapes).items():
+        if only_fns and fname not in only_fns:
+            continue
+        t0 = time.time()
+        hlo_file = f"{cfg.name}_{tag}_{fname}.hlo.txt"
+        path = os.path.join(out_dir, hlo_file)
+        lowered = jax.jit(fn, keep_unused=True).lower(*in_sds)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["functions"][fname] = {
+            "file": hlo_file, "inputs": io.inputs, "outputs": io.outputs,
+        }
+        print(f"  {hlo_file}: {len(text) / 1e6:.2f} MB "
+              f"({time.time() - t0:.1f}s)", flush=True)
+    mpath = os.path.join(out_dir, f"{cfg.name}_{tag}.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def core_pairs() -> List[Tuple[str, str]]:
+    """The default artifact set: everything tests + experiments need."""
+    pairs: List[Tuple[str, str]] = []
+    for cname in ("tiny", "small"):
+        cfg = CONFIGS[cname]
+        pairs.append((cname, "mha"))
+        pairs.append((cname, "ropelite"))
+        seen = set()
+        for _, var in table1_grid(cfg):
+            if var.kind == "mha" or var.tag() in seen:
+                continue
+            seen.add(var.tag())
+            pairs.append((cname, var.tag()))
+    # S-LRD ablation grid (fig 5) on tiny: three cache budgets x three splits.
+    tiny = CONFIGS["tiny"]
+    nc = tiny.n_chunks
+    for r, budget in ((nc // 4, 192), (nc // 4, 128), (nc // 8, 96)):
+        for frac in (0.25, 0.5, 0.75):
+            ck = max(16, int(round(budget * frac / 16)) * 16)
+            cv = budget - ck
+            if cv < 16:
+                continue
+            pairs.append((cname_t := "tiny",
+                          f"slrd_r{r}_ck{ck}_cv{cv}"))
+    # Matching J-LRD points for fig5 (same total cache budget).
+    for r, budget in ((nc // 4, 192), (nc // 4, 128), (nc // 8, 96)):
+        tag = f"elitekv_r{r}_c{budget}"
+        if ("tiny", tag) not in pairs:
+            pairs.append(("tiny", tag))
+    return pairs
+
+
+def e2e_pairs() -> List[Tuple[str, str]]:
+    cfg = CONFIGS["100m"]
+    nc = cfg.n_chunks
+    return [("100m", "mha"),
+            ("100m", f"elitekv_r{nc // 4}_c{cfg.d_model // 4}")]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--sets", default="core", choices=["core", "e2e", "all"])
+    ap.add_argument("--pairs", default="",
+                    help="comma list of cfg:variant overrides")
+    ap.add_argument("--fns", default="", help="comma list filter")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.pairs:
+        pairs = [tuple(p.split(":")) for p in args.pairs.split(",")]
+    elif args.sets == "core":
+        pairs = core_pairs()
+    elif args.sets == "e2e":
+        pairs = e2e_pairs()
+    else:
+        pairs = core_pairs() + e2e_pairs()
+
+    only_fns = set(args.fns.split(",")) if args.fns else None
+    t0 = time.time()
+    for cname, tag in dict.fromkeys(pairs):
+        cfg = CONFIGS[cname]
+        var = parse_variant(tag)
+        print(f"[aot] {cname} / {tag} "
+              f"(cache {100 * var.cache_ratio(cfg):.1f}%)", flush=True)
+        lower_pair(cfg, var, args.out, only_fns)
+    print(f"[aot] done in {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

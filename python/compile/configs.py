@@ -1,0 +1,159 @@
+"""Model family and architecture-variant configuration.
+
+The model family scales down LLaMA2 (the paper's subject) to sizes that
+pretrain from scratch on a single CPU core:
+
+    elite-tiny   d=256  L=4   8 heads  d_h=32  (~2 M params)  — sweeps/tests
+    elite-small  d=512  L=8   8 heads  d_h=64  (~13 M params) — main tables
+    elite-100m   d=768  L=12 12 heads  d_h=64  (~97 M params) — e2e example
+
+Architecture variants mirror the paper:
+
+    mha        — baseline multi-head attention with full RoPE
+    ropelite   — RoPElite only (§3.1): elite-mask blended partial RoPE;
+                 the mask is a *runtime input*, so a single artifact covers
+                 every r and every search method (RoPElite/Uniform/Contribution)
+    gqa<g>     — grouped-query attention baseline with g KV heads
+    elitekv    — RoPElite + J-LRD (§3.2): per-head elite chunks rotated and
+                 cached; everything else lives in a shared d_ckv latent
+    slrd       — RoPElite + S-LRD ablation: separate d_ck / d_cv latents
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Static shape of one model in the family."""
+
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_head: int
+    d_ffn: int
+    vocab: int
+    max_seq: int = 256
+    rope_base: float = 10000.0
+
+    @property
+    def n_chunks(self) -> int:
+        """Number of 2-D RoPE chunks per head (|I| in the paper)."""
+        return self.d_head // 2
+
+    @property
+    def kv_elems_per_token(self) -> int:
+        """Vanilla KV cache elements per token per layer (2 * n_h * d_h)."""
+        return 2 * self.n_heads * self.d_head
+
+
+@dataclass(frozen=True)
+class Variant:
+    """One architecture variant (paper §3).
+
+    kind in {"mha", "ropelite", "gqa", "elitekv", "slrd"}.
+    """
+
+    kind: str
+    # gqa:
+    n_kv_heads: int = 0
+    # ropelite / elitekv / slrd:
+    r: int = 0  # elite chunks per head
+    # elitekv (J-LRD):
+    d_ckv: int = 0
+    # slrd (S-LRD):
+    d_ck: int = 0
+    d_cv: int = 0
+
+    def tag(self) -> str:
+        if self.kind == "mha":
+            return "mha"
+        if self.kind == "ropelite":
+            return "ropelite"
+        if self.kind == "gqa":
+            return f"gqa{self.n_kv_heads}"
+        if self.kind == "elitekv":
+            return f"elitekv_r{self.r}_c{self.d_ckv}"
+        if self.kind == "slrd":
+            return f"slrd_r{self.r}_ck{self.d_ck}_cv{self.d_cv}"
+        raise ValueError(self.kind)
+
+    def cache_per_token(self, cfg: ModelConfig) -> int:
+        """KV cache elements per token per layer (paper §3.2 formulas)."""
+        if self.kind == "mha" or self.kind == "ropelite":
+            return cfg.kv_elems_per_token
+        if self.kind == "gqa":
+            return 2 * self.n_kv_heads * cfg.d_head
+        if self.kind == "elitekv":
+            return 2 * self.r * cfg.n_heads + self.d_ckv
+        if self.kind == "slrd":
+            return 2 * self.r * cfg.n_heads + self.d_ck + self.d_cv
+        raise ValueError(self.kind)
+
+    def cache_ratio(self, cfg: ModelConfig) -> float:
+        return self.cache_per_token(cfg) / cfg.kv_elems_per_token
+
+
+TINY = ModelConfig(
+    name="tiny", d_model=256, n_layers=4, n_heads=8, d_head=32,
+    d_ffn=704, vocab=512, max_seq=256,
+)
+SMALL = ModelConfig(
+    name="small", d_model=512, n_layers=8, n_heads=8, d_head=64,
+    d_ffn=1408, vocab=512, max_seq=256,
+)
+M100 = ModelConfig(
+    name="100m", d_model=768, n_layers=12, n_heads=12, d_head=64,
+    d_ffn=2048, vocab=2048, max_seq=256,
+)
+
+CONFIGS = {c.name: c for c in (TINY, SMALL, M100)}
+
+
+def parse_variant(tag: str) -> Variant:
+    """Inverse of Variant.tag()."""
+    if tag == "mha":
+        return Variant("mha")
+    if tag == "ropelite":
+        return Variant("ropelite")
+    if tag.startswith("gqa"):
+        return Variant("gqa", n_kv_heads=int(tag[3:]))
+    if tag.startswith("elitekv_"):
+        parts = tag.split("_")  # elitekv_r8_c128
+        return Variant("elitekv", r=int(parts[1][1:]), d_ckv=int(parts[2][1:]))
+    if tag.startswith("slrd_"):
+        parts = tag.split("_")  # slrd_r8_ck96_cv160
+        return Variant(
+            "slrd", r=int(parts[1][1:]), d_ck=int(parts[2][2:]),
+            d_cv=int(parts[3][2:]),
+        )
+    raise ValueError(f"unknown variant tag: {tag}")
+
+
+# The cache-ratio grid used in the paper's Table 1, realized for the
+# `small` config (d_h = 64, so paper r at d_h=128 maps to r/2 here).
+def table1_grid(cfg: ModelConfig) -> List[Tuple[str, Variant]]:
+    nc = cfg.n_chunks
+    grid: List[Tuple[str, Variant]] = [
+        ("100.0", Variant("mha")),
+        ("50.0", Variant("elitekv", r=nc // 2, d_ckv=cfg.d_model // 2)),
+        ("50.0", Variant("gqa", n_kv_heads=cfg.n_heads // 2)),
+        ("34.4", Variant("elitekv", r=nc // 4, d_ckv=_r32(0.344, cfg, nc // 4))),
+        ("28.1", Variant("elitekv", r=nc // 4, d_ckv=_r32(0.281, cfg, nc // 4))),
+        ("25.0", Variant("elitekv", r=nc // 4, d_ckv=_r32(0.25, cfg, nc // 4))),
+        ("25.0", Variant("gqa", n_kv_heads=cfg.n_heads // 4)),
+        ("21.9", Variant("elitekv", r=nc // 8, d_ckv=_r32(0.219, cfg, nc // 8))),
+        ("12.5", Variant("elitekv", r=nc // 8, d_ckv=_r32(0.125, cfg, nc // 8))),
+        ("12.5", Variant("gqa", n_kv_heads=1)),
+    ]
+    return grid
+
+
+def _r32(ratio: float, cfg: ModelConfig, r: int) -> int:
+    """d_ckv hitting `ratio` of the vanilla cache, rounded to the
+    hardware-friendly alignment (the paper's multiple-of-128 constraint,
+    scaled to our model widths: 32 for d>=512, 16 for the tiny config)."""
+    align = 32 if cfg.d_model >= 512 else 16
+    target = ratio * cfg.kv_elems_per_token - 2 * r * cfg.n_heads
+    return max(align, int(round(target / align)) * align)

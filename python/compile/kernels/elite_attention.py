@@ -1,0 +1,137 @@
+"""L1 Pallas kernels: the EliteKV decode hot spot.
+
+``elite_attention_decode`` is the paper's serving-time attention over the
+*compressed* cache: per (batch, head) the score row is
+
+    s[n] = q_rot . k_rot[n]^T  +  q_lat . c_kv[n]^T          (absorbed form)
+
+where ``q_rot [2r]`` is the elite-rotated query slice, ``k_rot`` the cached
+rotated elite keys, ``q_lat = q_nope @ B_k[h]^T  [d_ckv]`` the absorbed
+no-RoPE query, and ``c_kv [S, d_ckv]`` the shared latent cache. The output
+is returned *in latent space* (``o_lat = softmax(s) @ c_kv``); the caller
+applies ``B_v`` (which in a production deployment is absorbed into W_o).
+
+TPU mapping (DESIGN.md §8): the kernel streams the latent cache HBM→VMEM in
+``BLOCK_S``-row tiles with an online (flash) softmax, so the full score row
+never materializes and VMEM holds only one tile of ``c_kv``/``k_rot`` plus
+the running (m, l, acc) carries. On this CPU image it must run under
+``interpret=True`` (real-TPU lowering emits Mosaic custom-calls the CPU
+PJRT plugin cannot execute).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_S = 64  # cache-length tile (TPU: 128; 64 keeps interpret tests fast)
+
+_NEG = -1e30
+
+
+def _decode_kernel(qr_ref, ql_ref, kr_ref, ckv_ref, len_ref, o_ref, *,
+                   block_s: int, scale: float):
+    """One (batch, head) program: online-softmax attention over the cache.
+
+    qr_ref: [2r], ql_ref: [d_ckv], kr_ref: [S, 2r], ckv_ref: [S, d_ckv],
+    len_ref: [1] valid cache length, o_ref: [d_ckv].
+    """
+    s_total = kr_ref.shape[0]
+    d_ckv = ckv_ref.shape[1]
+    n_blocks = s_total // block_s
+
+    qr = qr_ref[...].astype(jnp.float32)
+    ql = ql_ref[...].astype(jnp.float32)
+    length = len_ref[...]  # scalar (BlockSpec squeezed the batch axis)
+
+    def body(i, carry):
+        m_prev, l_prev, acc_prev = carry
+        kr = kr_ref[pl.dslice(i * block_s, block_s), :].astype(jnp.float32)
+        ckv = ckv_ref[pl.dslice(i * block_s, block_s), :].astype(jnp.float32)
+        # Two MXU contractions: rotated-elite + absorbed-latent scores.
+        s = (jnp.dot(kr, qr) + jnp.dot(ckv, ql)) * scale  # [block_s]
+        idx = i * block_s + jax.lax.iota(jnp.int32, block_s)
+        s = jnp.where(idx < length, s, _NEG)
+        # Online softmax update (VPU).
+        m_new = jnp.maximum(m_prev, jnp.max(s))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)  # [block_s]
+        l_new = l_prev * alpha + jnp.sum(p)
+        acc_new = acc_prev * alpha + jnp.dot(p, ckv)  # [d_ckv]
+        return m_new, l_new, acc_new
+
+    init = (jnp.float32(_NEG), jnp.float32(0.0),
+            jnp.zeros((d_ckv,), jnp.float32))
+    _, l_fin, acc = jax.lax.fori_loop(0, n_blocks, body, init)
+    o_ref[...] = (acc / l_fin).astype(o_ref.dtype)
+
+
+def elite_attention_decode(q_rot, q_lat, k_rot, c_kv, lengths, *,
+                           scale: float, block_s: int = BLOCK_S,
+                           interpret: bool = True):
+    """Fused decode attention over the compressed EliteKV cache.
+
+    q_rot:  [B, H, 2r]     elite-rotated query
+    q_lat:  [B, H, d_ckv]  absorbed no-RoPE query (q_nope @ B_k[h]^T)
+    k_rot:  [B, S, H, 2r]  cached rotated elite keys
+    c_kv:   [B, S, d_ckv]  shared latent KV cache
+    lengths:[B] int32      valid cache length per sequence
+    returns o_lat [B, H, d_ckv] = softmax(s) @ c_kv
+    """
+    b, h, dr = q_rot.shape
+    s_total = k_rot.shape[1]
+    d_ckv = c_kv.shape[-1]
+    assert s_total % block_s == 0, (s_total, block_s)
+
+    kernel = functools.partial(_decode_kernel, block_s=block_s, scale=scale)
+    grid = (b, h)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, None, dr), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, None, d_ckv), lambda i, j: (i, j, 0)),
+            # Full cache rows for this (batch, head); the kernel itself
+            # tiles over S with pl.dslice (flash-style streaming).
+            pl.BlockSpec((None, s_total, None, dr), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((None, s_total, d_ckv), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((None, None, d_ckv), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d_ckv), q_lat.dtype),
+        interpret=interpret,
+    )(q_rot, q_lat, k_rot, c_kv, lengths)
+
+
+def _rope_kernel(x_ref, cos_ref, sin_ref, o_ref):
+    """Per-(batch, head) partial-RoPE rotation: x [r, 2] chunk layout."""
+    x = x_ref[...].astype(jnp.float32)  # [r, 2]
+    cos = cos_ref[...].astype(jnp.float32)  # [r]
+    sin = sin_ref[...].astype(jnp.float32)
+    x0, x1 = x[:, 0], x[:, 1]
+    o = jnp.stack((x0 * cos - x1 * sin, x0 * sin + x1 * cos), axis=-1)
+    o_ref[...] = o.astype(o_ref.dtype)
+
+
+def rope_rotate_elite(x, cos, sin, *, interpret: bool = True):
+    """Pallas partial-RoPE for decode-time elite chunks.
+
+    x: [B, H, 2r]; cos/sin: [B, H, r] (angle = pos * theta_e per head).
+    """
+    b, h, dr = x.shape
+    r = dr // 2
+    xc = x.reshape(b, h, r, 2)
+    out = pl.pallas_call(
+        _rope_kernel,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((None, None, r, 2), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((None, None, r), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, None, r), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, r, 2), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, r, 2), x.dtype),
+        interpret=interpret,
+    )(xc, cos, sin)
+    return out.reshape(b, h, dr)

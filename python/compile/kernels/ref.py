@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the Pallas kernels (the CORE correctness signal).
+
+Every kernel in this package has a reference twin here implementing the
+same contract with plain jax.numpy; pytest asserts allclose between the
+two across shape/dtype sweeps (python/tests/test_kernel.py), and the Rust
+integration suite re-checks parity through PJRT on the lowered HLO.
+"""
+
+import jax.numpy as jnp
+
+
+def ref_elite_attention_decode(q_rot, q_lat, k_rot, c_kv, lengths, *,
+                               scale: float):
+    """Reference for elite_attention_decode.
+
+    q_rot: [B, H, 2r]; q_lat: [B, H, C]; k_rot: [B, S, H, 2r];
+    c_kv: [B, S, C]; lengths: [B] -> o_lat [B, H, C].
+    """
+    s = (jnp.einsum("bhd,bshd->bhs", q_rot, k_rot)
+         + jnp.einsum("bhc,bsc->bhs", q_lat, c_kv)) * scale
+    mask = jnp.arange(k_rot.shape[1])[None, None, :] < lengths[:, None, None]
+    s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhs,bsc->bhc", p, c_kv)
+
+
+def ref_rope_rotate_elite(x, cos, sin):
+    """Reference for rope_rotate_elite. x: [B, H, 2r]; cos/sin: [B, H, r]."""
+    b, h, dr = x.shape
+    r = dr // 2
+    xc = x.reshape(b, h, r, 2)
+    x0, x1 = xc[..., 0], xc[..., 1]
+    out = jnp.stack((x0 * cos - x1 * sin, x0 * sin + x1 * cos), axis=-1)
+    return out.reshape(b, h, dr)

@@ -1,0 +1,90 @@
+"""Rotary position embedding utilities (chunked, per-head-frequency aware).
+
+RoPE convention: head dim ``d_h`` is split into ``nc = d_h/2`` adjacent 2-D
+chunks; chunk ``i`` covers dims ``(2i, 2i+1)`` and carries frequency
+``theta_i = base ** (-i / nc)`` (paper §2.2, Su et al. 2024).
+
+Two layouts are needed:
+
+* full / masked RoPE over all chunks with the shared frequency ladder
+  (``mha`` and ``ropelite`` variants); the elite mask blends rotated and
+  unrotated chunks so the mask can be a *runtime* input.
+* per-head *elite* frequencies ``theta_e [n_heads, r]`` for the ``elitekv``
+  variant, where conversion permuted each head's elite chunks to the front.
+"""
+
+import jax.numpy as jnp
+
+
+def chunk_thetas(n_chunks: int, base: float) -> jnp.ndarray:
+    """Frequency ladder theta_i = base^(-i/nc), shape [nc]."""
+    i = jnp.arange(n_chunks, dtype=jnp.float32)
+    return base ** (-i / n_chunks)
+
+
+def rope_cos_sin(positions: jnp.ndarray, thetas: jnp.ndarray):
+    """Angles for every (position, frequency) pair.
+
+    positions: [...P] int32/float; thetas: [...F] -> cos/sin [..., P, F]
+    broadcasting positions against a trailing frequency axis.
+    """
+    ang = positions.astype(jnp.float32)[..., None] * thetas[None, ...]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def rotate_chunks(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray):
+    """Rotate chunked input. x: [..., nc, 2]; cos/sin broadcastable [..., nc]."""
+    x0, x1 = x[..., 0], x[..., 1]
+    return jnp.stack((x0 * cos - x1 * sin, x0 * sin + x1 * cos), axis=-1)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, base: float):
+    """Full RoPE. x: [B, T, H, D]; positions: [T] or [B, T] -> same shape."""
+    b, t, h, d = x.shape
+    nc = d // 2
+    thetas = chunk_thetas(nc, base)
+    cos, sin = rope_cos_sin(positions, thetas)  # [T, nc] or [B, T, nc]
+    if cos.ndim == 2:
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    xc = x.reshape(b, t, h, nc, 2)
+    out = rotate_chunks(xc, cos, sin)
+    return out.reshape(b, t, h, d)
+
+
+def apply_rope_masked(x: jnp.ndarray, positions: jnp.ndarray, base: float,
+                      mask: jnp.ndarray):
+    """RoPElite partial RoPE: rotate only masked chunks (paper §3.1).
+
+    x: [B, T, H, D]; mask: [H, nc] in {0,1} (1 = elite, keep rotation).
+    Unmasked chunks are passed through linearly.
+    """
+    b, t, h, d = x.shape
+    nc = d // 2
+    rot = apply_rope(x, positions, base).reshape(b, t, h, nc, 2)
+    xc = x.reshape(b, t, h, nc, 2)
+    m = mask[None, None, :, :, None]
+    return (m * rot + (1.0 - m) * xc).reshape(b, t, h, d)
+
+
+def apply_rope_elite(x: jnp.ndarray, positions: jnp.ndarray,
+                     theta_e: jnp.ndarray):
+    """Per-head elite-frequency RoPE for the elitekv/slrd layout.
+
+    x: [B, T, H, 2r] — each head's elite chunks, already permuted to the
+    front by weight surgery; theta_e: [H, r] per-head chunk frequencies;
+    positions: [T] or [B, T].
+    """
+    b, t, h, dr = x.shape
+    r = dr // 2
+    pos = positions.astype(jnp.float32)
+    if pos.ndim == 1:
+        ang = pos[None, :, None, None] * theta_e[None, None, :, :]
+    else:
+        ang = pos[:, :, None, None] * theta_e[None, None, :, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)  # [B?, T, H, r]
+    xc = x.reshape(b, t, h, r, 2)
+    return rotate_chunks(xc, cos, sin).reshape(b, t, h, dr)

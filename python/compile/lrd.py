@@ -1,0 +1,161 @@
+"""Low-rank decomposition and weight surgery (paper §3.2) — python reference.
+
+The production converter lives in Rust (rust/src/convert/, using the
+in-repo Jacobi SVD); this module is the *mathematical reference* used by
+pytest to validate the architecture end-to-end, including the exactness
+invariant: a full-rank J-LRD conversion of an MHA checkpoint must
+reproduce the RoPElite model's forward pass bit-for-nearly-bit.
+
+Weight surgery layout (shared contract with rust/src/convert/elitekv.rs):
+
+* ``wq`` columns are permuted per head: the r elite chunks (in greedy
+  selection order) move to the front, non-elite chunks follow in
+  ascending index order. Chunk c occupies column pair (2c, 2c+1).
+* ``wk_e``  = elite column pairs of ``wk``   [d, nh*2r]
+* ``wk_ne`` = non-elite column pairs         [d, nh*(dh-2r)]
+* J-LRD:  SVD([wk_ne | wv]) -> A_kv = U[:, :c], B = S[:c, :c] @ Vt[:c, :]
+          b_k = B[:, :nh*(dh-2r)], b_v = B[:, nh*(dh-2r):]
+* S-LRD:  independent SVDs of wk_ne (rank d_ck) and wv (rank d_cv).
+* ``theta_e[l, h, i] = rope_base ** (-e_i / nc)`` for elite chunk e_i.
+"""
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+from .configs import ModelConfig, Variant
+
+
+def head_permutation(elite: np.ndarray, d_head: int) -> np.ndarray:
+    """Column permutation for one head: elite chunk dims first (selection
+    order), then remaining chunks ascending. elite: [r] chunk ids."""
+    nc = d_head // 2
+    rest = [c for c in range(nc) if c not in set(elite.tolist())]
+    order = list(elite.tolist()) + rest
+    cols = []
+    for c in order:
+        cols += [2 * c, 2 * c + 1]
+    return np.asarray(cols, dtype=np.int64)
+
+
+def permute_heads(w: np.ndarray, elite_l: np.ndarray, n_heads: int,
+                  d_head: int) -> np.ndarray:
+    """Apply per-head column permutation to a [d, nh*dh] projection."""
+    d = w.shape[0]
+    out = w.reshape(d, n_heads, d_head).copy()
+    for h in range(n_heads):
+        out[:, h, :] = out[:, h, head_permutation(elite_l[h], d_head)]
+    return out.reshape(d, n_heads * d_head)
+
+
+def elite_thetas(cfg: ModelConfig, elite: np.ndarray) -> np.ndarray:
+    """theta_e [L, nh, r] from elite chunk indices [L, nh, r]."""
+    nc = cfg.n_chunks
+    return (cfg.rope_base ** (-elite.astype(np.float64) / nc)).astype(
+        np.float32)
+
+
+def elite_mask(cfg: ModelConfig, elite: np.ndarray) -> np.ndarray:
+    """{0,1} mask [L, nh, nc] from elite chunk indices [L, nh, r]."""
+    m = np.zeros((cfg.n_layers, cfg.n_heads, cfg.n_chunks), np.float32)
+    for l in range(cfg.n_layers):
+        for h in range(cfg.n_heads):
+            m[l, h, elite[l, h]] = 1.0
+    return m
+
+
+def svd_truncate(w: np.ndarray, rank: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Optimal rank-r approximation (paper §2.3): A = U, B = S Vt."""
+    u, s, vt = np.linalg.svd(w, full_matrices=False)
+    a = u[:, :rank]
+    b = s[:rank, None] * vt[:rank, :]
+    return a.astype(np.float32), b.astype(np.float32)
+
+
+def convert_elitekv(cfg: ModelConfig, params: Dict[str, np.ndarray],
+                    elite: np.ndarray, d_ckv: int) -> Dict[str, np.ndarray]:
+    """MHA checkpoint -> elitekv (J-LRD) checkpoint. elite: [L, nh, r]."""
+    nh, dh = cfg.n_heads, cfg.d_head
+    r = elite.shape[-1]
+    r2 = 2 * r
+    out: Dict[str, np.ndarray] = {"embed": params["embed"],
+                                  "final_norm": params["final_norm"]}
+    for l in range(cfg.n_layers):
+        p = f"l{l}."
+        wq_p = permute_heads(params[p + "wq"], elite[l], nh, dh)
+        wk_p = permute_heads(params[p + "wk"], elite[l], nh, dh)
+        wk_p = wk_p.reshape(-1, nh, dh)
+        wk_e = wk_p[:, :, :r2].reshape(-1, nh * r2)
+        wk_ne = wk_p[:, :, r2:].reshape(-1, nh * (dh - r2))
+        w_kv = np.concatenate([wk_ne, params[p + "wv"]], axis=1)
+        a_kv, b = svd_truncate(w_kv, d_ckv)
+        split = nh * (dh - r2)
+        out[p + "wq"] = wq_p
+        out[p + "wk_e"] = wk_e
+        out[p + "a_kv"] = a_kv
+        out[p + "b_k"] = b[:, :split]
+        out[p + "b_v"] = b[:, split:]
+        for suffix in ("attn_norm", "wo", "ffn_norm", "w1", "w2", "w3"):
+            out[p + suffix] = params[p + suffix]
+    return out
+
+
+def convert_slrd(cfg: ModelConfig, params: Dict[str, np.ndarray],
+                 elite: np.ndarray, d_ck: int,
+                 d_cv: int) -> Dict[str, np.ndarray]:
+    """MHA checkpoint -> slrd (S-LRD ablation) checkpoint."""
+    nh, dh = cfg.n_heads, cfg.d_head
+    r = elite.shape[-1]
+    r2 = 2 * r
+    out: Dict[str, np.ndarray] = {"embed": params["embed"],
+                                  "final_norm": params["final_norm"]}
+    for l in range(cfg.n_layers):
+        p = f"l{l}."
+        wq_p = permute_heads(params[p + "wq"], elite[l], nh, dh)
+        wk_p = permute_heads(params[p + "wk"], elite[l], nh, dh)
+        wk_p = wk_p.reshape(-1, nh, dh)
+        wk_e = wk_p[:, :, :r2].reshape(-1, nh * r2)
+        wk_ne = wk_p[:, :, r2:].reshape(-1, nh * (dh - r2))
+        a_k, b_k = svd_truncate(wk_ne, d_ck)
+        a_v, b_v = svd_truncate(params[p + "wv"], d_cv)
+        out[p + "wq"] = wq_p
+        out[p + "wk_e"] = wk_e
+        out[p + "a_k"] = a_k
+        out[p + "b_k"] = b_k
+        out[p + "a_v"] = a_v
+        out[p + "b_v"] = b_v
+        for suffix in ("attn_norm", "wo", "ffn_norm", "w1", "w2", "w3"):
+            out[p + suffix] = params[p + suffix]
+    return out
+
+
+def convert_gqa(cfg: ModelConfig, params: Dict[str, np.ndarray],
+                n_kv_heads: int) -> Dict[str, np.ndarray]:
+    """MHA -> GQA by mean-pooling KV head groups (Ainslie et al. 2023)."""
+    nh, dh = cfg.n_heads, cfg.d_head
+    g = n_kv_heads
+    rep = nh // g
+    out = dict(params)
+    for l in range(cfg.n_layers):
+        p = f"l{l}."
+        for w in ("wk", "wv"):
+            m = params[p + w].reshape(-1, g, rep, dh)
+            out[p + w] = m.mean(axis=2).reshape(-1, g * dh)
+    return out
+
+
+def storage_cost(cfg: ModelConfig, var: Variant) -> int:
+    """KV-projection parameter count per layer (paper §3.2 formulas)."""
+    d, nh, dh = cfg.d_model, cfg.n_heads, cfg.d_head
+    if var.kind in ("mha", "ropelite"):
+        return 2 * d * nh * dh
+    if var.kind == "gqa":
+        return 2 * d * var.n_kv_heads * dh
+    if var.kind == "elitekv":
+        r = var.r
+        return 2 * r * nh * d + var.d_ckv * (d + 2 * dh * nh - 2 * r * nh)
+    if var.kind == "slrd":
+        r = var.r
+        return (2 * r * nh * d + var.d_ck * (d + dh * nh - 2 * r * nh)
+                + var.d_cv * (d + dh * nh))
+    raise ValueError(var.kind)

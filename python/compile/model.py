@@ -1,0 +1,567 @@
+"""L2: LLaMA-style transformer with EliteKV architecture variants.
+
+Build-time only — every entry point here is lowered by ``aot.py`` to HLO
+text and executed from Rust through PJRT. Parameters and the variant's
+static side-inputs ("extras": the RoPElite mask or the per-head elite
+frequency table) are *runtime inputs*, so one HLO artifact per architecture
+shape serves every checkpoint and every searched chunk set.
+
+Variants (configs.Variant):
+  mha       — baseline full-RoPE multi-head attention
+  gqa       — grouped-query attention (mean-pooled conversion happens in Rust)
+  ropelite  — paper §3.1: elite-mask blended partial RoPE (mask is runtime)
+  elitekv   — paper §3.2 J-LRD: elite-rotated keys + shared latent cache
+  slrd      — paper §4.3.2 S-LRD ablation: separate K / V latents
+
+Entry points (see aot.py for the lowering matrix):
+  init_params, forward/loss, train_step (AdamW in-graph), eval_loss,
+  prefill, decode_step (jnp and Pallas flavours), capture_qk,
+  ropelite_delta (the Algorithm-1 inner step, vectorized over heads+chunks).
+"""
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig, Variant
+from .kernels import rope as rk
+from .kernels.elite_attention import elite_attention_decode
+
+EPS = 1e-5
+ADAM_B1, ADAM_B2, ADAM_EPS, WEIGHT_DECAY, CLIP_NORM = 0.9, 0.95, 1e-8, 0.1, 1.0
+
+Params = Dict[str, jnp.ndarray]
+
+
+# --------------------------------------------------------------------------
+# Parameter / extras specs (single source of truth for argument order)
+# --------------------------------------------------------------------------
+
+def param_specs(cfg: ModelConfig, var: Variant) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list defining the flat argument layout."""
+    d, nh, dh = cfg.d_model, cfg.n_heads, cfg.d_head
+    specs: List[Tuple[str, Tuple[int, ...]]] = [("embed", (cfg.vocab, d))]
+    for i in range(cfg.n_layers):
+        p = f"l{i}."
+        specs.append((p + "attn_norm", (d,)))
+        specs.append((p + "wq", (d, nh * dh)))
+        if var.kind in ("mha", "ropelite"):
+            specs.append((p + "wk", (d, nh * dh)))
+            specs.append((p + "wv", (d, nh * dh)))
+        elif var.kind == "gqa":
+            g = var.n_kv_heads
+            specs.append((p + "wk", (d, g * dh)))
+            specs.append((p + "wv", (d, g * dh)))
+        elif var.kind == "elitekv":
+            r2 = 2 * var.r
+            specs.append((p + "wk_e", (d, nh * r2)))
+            specs.append((p + "a_kv", (d, var.d_ckv)))
+            specs.append((p + "b_k", (var.d_ckv, nh * (dh - r2))))
+            specs.append((p + "b_v", (var.d_ckv, nh * dh)))
+        elif var.kind == "slrd":
+            r2 = 2 * var.r
+            specs.append((p + "wk_e", (d, nh * r2)))
+            specs.append((p + "a_k", (d, var.d_ck)))
+            specs.append((p + "b_k", (var.d_ck, nh * (dh - r2))))
+            specs.append((p + "a_v", (d, var.d_cv)))
+            specs.append((p + "b_v", (var.d_cv, nh * dh)))
+        else:
+            raise ValueError(var.kind)
+        specs.append((p + "wo", (nh * dh, d)))
+        specs.append((p + "ffn_norm", (d,)))
+        specs.append((p + "w1", (d, cfg.d_ffn)))
+        specs.append((p + "w2", (cfg.d_ffn, d)))
+        specs.append((p + "w3", (d, cfg.d_ffn)))
+    specs.append(("final_norm", (d,)))
+    return specs
+
+
+def extras_specs(cfg: ModelConfig, var: Variant) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Variant side-inputs, runtime-fed so artifacts stay search-agnostic."""
+    if var.kind == "ropelite":
+        return [("elite_mask", (cfg.n_layers, cfg.n_heads, cfg.n_chunks))]
+    if var.kind in ("elitekv", "slrd"):
+        return [("theta_e", (cfg.n_layers, cfg.n_heads, var.r))]
+    return []
+
+
+def cache_specs(cfg: ModelConfig, var: Variant, batch: int, s: int):
+    """Decode-cache tensors, stacked over layers: ordered (name, shape)."""
+    L, nh, dh = cfg.n_layers, cfg.n_heads, cfg.d_head
+    if var.kind in ("mha", "ropelite"):
+        return [("cache_k", (L, batch, s, nh, dh)),
+                ("cache_v", (L, batch, s, nh, dh))]
+    if var.kind == "gqa":
+        g = var.n_kv_heads
+        return [("cache_k", (L, batch, s, g, dh)),
+                ("cache_v", (L, batch, s, g, dh))]
+    if var.kind == "elitekv":
+        return [("cache_ke", (L, batch, s, nh, 2 * var.r)),
+                ("cache_c", (L, batch, s, var.d_ckv))]
+    if var.kind == "slrd":
+        return [("cache_ke", (L, batch, s, nh, 2 * var.r)),
+                ("cache_ck", (L, batch, s, var.d_ck)),
+                ("cache_cv", (L, batch, s, var.d_cv))]
+    raise ValueError(var.kind)
+
+
+def init_params(cfg: ModelConfig, var: Variant, seed) -> Params:
+    """Normal(0, 0.02) init, wo/w2 scaled by 1/sqrt(2L) (GPT-2 style)."""
+    key = jax.random.PRNGKey(seed)
+    out: Params = {}
+    resid_scale = 1.0 / jnp.sqrt(2.0 * cfg.n_layers)
+    for name, shape in param_specs(cfg, var):
+        if name.endswith("norm"):
+            out[name] = jnp.ones(shape, jnp.float32)
+        else:
+            key, sub = jax.random.split(key)
+            w = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+            if name.endswith(("wo", "w2")):
+                w = w * resid_scale
+            out[name] = w
+    return out
+
+
+# --------------------------------------------------------------------------
+# Building blocks
+# --------------------------------------------------------------------------
+
+def rmsnorm(x, g):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + EPS) * g
+
+
+def swiglu(x, w1, w2, w3):
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    return h @ w2
+
+
+def _heads(x, n, dh):
+    return x.reshape(x.shape[0], x.shape[1], n, dh)
+
+
+def _kv_states(cfg: ModelConfig, var: Variant, p: Params, i: int, xn,
+               positions, extras):
+    """Per-layer key/value states for the full-sequence (training) path.
+
+    Returns (k [B,T,nh,dh], v [B,T,nh,dh]) with the variant's cache
+    semantics already applied (rotation baked in where it would be cached).
+    """
+    nh, dh = cfg.n_heads, cfg.d_head
+    pre = f"l{i}."
+    if var.kind == "mha":
+        k = _heads(xn @ p[pre + "wk"], nh, dh)
+        v = _heads(xn @ p[pre + "wv"], nh, dh)
+        k = rk.apply_rope(k, positions, cfg.rope_base)
+        return k, v
+    if var.kind == "gqa":
+        g = var.n_kv_heads
+        rep = nh // g
+        k = _heads(xn @ p[pre + "wk"], g, dh)
+        v = _heads(xn @ p[pre + "wv"], g, dh)
+        k = rk.apply_rope(k, positions, cfg.rope_base)
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+        return k, v
+    if var.kind == "ropelite":
+        mask = extras["elite_mask"][i]  # [nh, nc]
+        k = _heads(xn @ p[pre + "wk"], nh, dh)
+        v = _heads(xn @ p[pre + "wv"], nh, dh)
+        k = rk.apply_rope_masked(k, positions, cfg.rope_base, mask)
+        return k, v
+    if var.kind in ("elitekv", "slrd"):
+        r2 = 2 * var.r
+        theta = extras["theta_e"][i]  # [nh, r]
+        ke = _heads(xn @ p[pre + "wk_e"], nh, r2)
+        ke = rk.apply_rope_elite(ke, positions, theta)
+        if var.kind == "elitekv":
+            c = xn @ p[pre + "a_kv"]  # [B,T,ckv]
+            kn = _heads(c @ p[pre + "b_k"], nh, dh - r2)
+            v = _heads(c @ p[pre + "b_v"], nh, dh)
+        else:
+            ck = xn @ p[pre + "a_k"]
+            cv = xn @ p[pre + "a_v"]
+            kn = _heads(ck @ p[pre + "b_k"], nh, dh - r2)
+            v = _heads(cv @ p[pre + "b_v"], nh, dh)
+        k = jnp.concatenate([ke, kn], axis=-1)  # elite chunks live up front
+        return k, v
+    raise ValueError(var.kind)
+
+
+def _query(cfg: ModelConfig, var: Variant, p: Params, i: int, xn,
+           positions, extras):
+    """Query states matching the variant's key rotation layout."""
+    nh, dh = cfg.n_heads, cfg.d_head
+    q = _heads(xn @ p[f"l{i}.wq"], nh, dh)
+    if var.kind in ("mha", "gqa"):
+        return rk.apply_rope(q, positions, cfg.rope_base)
+    if var.kind == "ropelite":
+        mask = extras["elite_mask"][i]
+        return rk.apply_rope_masked(q, positions, cfg.rope_base, mask)
+    # elitekv / slrd: first 2r dims are the (permuted) elite chunks.
+    r2 = 2 * var.r
+    theta = extras["theta_e"][i]
+    q_rot = rk.apply_rope_elite(q[..., :r2], positions, theta)
+    return jnp.concatenate([q_rot, q[..., r2:]], axis=-1)
+
+
+def _attend(q, k, v, causal_mask, scale):
+    s = jnp.einsum("bmhd,bnhd->bhmn", q, k) * scale
+    s = jnp.where(causal_mask[None, None, :, :], s, -1e30)
+    pmax = jnp.max(s, axis=-1, keepdims=True)
+    pexp = jnp.exp(s - pmax)
+    pr = pexp / jnp.sum(pexp, axis=-1, keepdims=True)
+    return jnp.einsum("bhmn,bnhd->bmhd", pr, v)
+
+
+def forward(cfg: ModelConfig, var: Variant, p: Params, extras,
+            tokens) -> jnp.ndarray:
+    """Full-sequence forward -> logits [B, T, vocab] (training path)."""
+    b, t = tokens.shape
+    positions = jnp.arange(t, dtype=jnp.int32)
+    causal = jnp.tril(jnp.ones((t, t), bool))
+    scale = 1.0 / float(cfg.d_head) ** 0.5
+    x = p["embed"][tokens]
+    for i in range(cfg.n_layers):
+        pre = f"l{i}."
+        xn = rmsnorm(x, p[pre + "attn_norm"])
+        q = _query(cfg, var, p, i, xn, positions, extras)
+        k, v = _kv_states(cfg, var, p, i, xn, positions, extras)
+        o = _attend(q, k, v, causal, scale)
+        x = x + o.reshape(b, t, -1) @ p[pre + "wo"]
+        xn = rmsnorm(x, p[pre + "ffn_norm"])
+        x = x + swiglu(xn, p[pre + "w1"], p[pre + "w2"], p[pre + "w3"])
+    x = rmsnorm(x, p["final_norm"])
+    return x @ p["embed"].T
+
+
+def loss_fn(cfg, var, p, extras, tokens, targets, mask):
+    """Masked mean cross-entropy next-token loss."""
+    logits = forward(cfg, var, p, extras, tokens)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# --------------------------------------------------------------------------
+# Training (AdamW in-graph, constant LR per paper §4.1)
+# --------------------------------------------------------------------------
+
+def train_step(cfg, var, p, m, v, step, lr, extras, tokens, targets, mask):
+    """One AdamW step. Returns (new_p, new_m, new_v, new_step, loss, gnorm)."""
+    loss, grads = jax.value_and_grad(
+        lambda pp: loss_fn(cfg, var, pp, extras, tokens, targets, mask))(p)
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads.values()))
+    clip = jnp.minimum(1.0, CLIP_NORM / (gnorm + 1e-12))
+    step = step + 1
+    stepf = step.astype(jnp.float32)
+    bc1 = 1.0 - ADAM_B1 ** stepf
+    bc2 = 1.0 - ADAM_B2 ** stepf
+    new_p, new_m, new_v = {}, {}, {}
+    for name in p:
+        g = grads[name] * clip
+        mn = ADAM_B1 * m[name] + (1 - ADAM_B1) * g
+        vn = ADAM_B2 * v[name] + (1 - ADAM_B2) * g * g
+        upd = (mn / bc1) / (jnp.sqrt(vn / bc2) + ADAM_EPS)
+        wd = WEIGHT_DECAY if p[name].ndim >= 2 else 0.0
+        new_p[name] = p[name] - lr * (upd + wd * p[name])
+        new_m[name], new_v[name] = mn, vn
+    return new_p, new_m, new_v, step, loss, gnorm
+
+
+def eval_loss(cfg, var, p, extras, tokens, targets, mask):
+    """Sum NLL + token count (Rust accumulates exact corpus perplexity)."""
+    logits = forward(cfg, var, p, extras, tokens)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return jnp.sum(nll), jnp.sum(mask)
+
+
+# --------------------------------------------------------------------------
+# Serving: prefill + decode over explicit caches
+# --------------------------------------------------------------------------
+
+def prefill(cfg, var, p, extras, tokens, true_len):
+    """Process a padded prompt batch, build decode caches.
+
+    tokens: [B, S]; true_len: [B] — returns (last_logits [B, vocab],
+    *cache tensors [L, B, S, ...]) with positions >= true_len unmasked
+    garbage (decode masks by length).
+    """
+    b, s = tokens.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+    causal = jnp.tril(jnp.ones((s, s), bool))
+    scale = 1.0 / float(cfg.d_head) ** 0.5
+    x = p["embed"][tokens]
+    caches = [jnp.zeros(shape, jnp.float32)
+              for _, shape in cache_specs(cfg, var, b, s)]
+    for i in range(cfg.n_layers):
+        pre = f"l{i}."
+        xn = rmsnorm(x, p[pre + "attn_norm"])
+        q = _query(cfg, var, p, i, xn, positions, extras)
+        k, v, layer_cache = _kv_and_cache_full(cfg, var, p, i, xn,
+                                               positions, extras)
+        for ci, tensor in enumerate(layer_cache):
+            caches[ci] = caches[ci].at[i].set(tensor)
+        o = _attend(q, k, v, causal, scale)
+        x = x + o.reshape(b, s, -1) @ p[pre + "wo"]
+        xn = rmsnorm(x, p[pre + "ffn_norm"])
+        x = x + swiglu(xn, p[pre + "w1"], p[pre + "w2"], p[pre + "w3"])
+    x = rmsnorm(x, p["final_norm"])
+    idx = jnp.clip(true_len - 1, 0, s - 1)
+    last = x[jnp.arange(b), idx]  # [B, d]
+    logits = last @ p["embed"].T
+    return (logits, *caches)
+
+
+def _kv_and_cache_full(cfg, var, p, i, xn, positions, extras):
+    """Full-seq KV plus what the decode cache stores for this layer."""
+    nh, dh = cfg.n_heads, cfg.d_head
+    pre = f"l{i}."
+    if var.kind in ("mha", "ropelite", "gqa"):
+        k, v = _kv_states(cfg, var, p, i, xn, positions, extras)
+        if var.kind == "gqa":
+            # cache stores the *grouped* heads; recompute them for storage
+            g = var.n_kv_heads
+            kg = _heads(xn @ p[pre + "wk"], g, dh)
+            vg = _heads(xn @ p[pre + "wv"], g, dh)
+            kg = rk.apply_rope(kg, positions, cfg.rope_base)
+            return k, v, [kg, vg]
+        return k, v, [k, v]
+    r2 = 2 * var.r
+    theta = extras["theta_e"][i]
+    ke = _heads(xn @ p[pre + "wk_e"], nh, r2)
+    ke = rk.apply_rope_elite(ke, positions, theta)
+    if var.kind == "elitekv":
+        c = xn @ p[pre + "a_kv"]
+        kn = _heads(c @ p[pre + "b_k"], nh, dh - r2)
+        v = _heads(c @ p[pre + "b_v"], nh, dh)
+        k = jnp.concatenate([ke, kn], axis=-1)
+        return k, v, [ke, c]
+    ck = xn @ p[pre + "a_k"]
+    cv = xn @ p[pre + "a_v"]
+    kn = _heads(ck @ p[pre + "b_k"], nh, dh - r2)
+    v = _heads(cv @ p[pre + "b_v"], nh, dh)
+    k = jnp.concatenate([ke, kn], axis=-1)
+    return k, v, [ke, ck, cv]
+
+
+def decode_step(cfg, var, p, extras, token, pos, caches, *,
+                use_pallas: bool = False):
+    """One decode step over explicit caches.
+
+    token: [B] int32; pos: [B] int32 (write position = current length);
+    caches: list of [L, B, S, ...]; returns (logits [B, vocab], *new caches).
+    """
+    b = token.shape[0]
+    s = caches[0].shape[2]
+    nh, dh = cfg.n_heads, cfg.d_head
+    scale = 1.0 / float(cfg.d_head) ** 0.5
+    bi = jnp.arange(b)
+    length = pos + 1  # after writing the new token
+    valid = jnp.arange(s)[None, :] < length[:, None]  # [B, S]
+    x = p["embed"][token][:, None, :]  # [B, 1, d]
+    posb = pos[:, None]  # [B, 1] per-sequence positions
+    new_caches = list(caches)
+    for i in range(cfg.n_layers):
+        pre = f"l{i}."
+        xn = rmsnorm(x, p[pre + "attn_norm"])
+        q = _query(cfg, var, p, i, xn, posb, extras)[:, 0]  # [B, nh, dh]
+        if var.kind in ("mha", "ropelite", "gqa"):
+            new_caches, k_all, v_all = _decode_kv_dense(
+                cfg, var, p, i, xn, posb, extras, new_caches, bi, pos)
+            o = _masked_attend_dense(q, k_all, v_all, valid, scale)
+        elif var.kind == "elitekv":
+            r2 = 2 * var.r
+            theta = extras["theta_e"][i]
+            ke = _heads(xn @ p[pre + "wk_e"], nh, r2)
+            ke = rk.apply_rope_elite(ke, posb, theta)[:, 0]  # [B, nh, 2r]
+            c = (xn @ p[pre + "a_kv"])[:, 0]  # [B, ckv]
+            new_caches[0] = new_caches[0].at[i, bi, pos].set(ke)
+            new_caches[1] = new_caches[1].at[i, bi, pos].set(c)
+            o = _elitekv_decode_attend(
+                cfg, var, p, i, q, new_caches[0][i], new_caches[1][i],
+                length, scale, use_pallas)
+        else:  # slrd
+            r2 = 2 * var.r
+            theta = extras["theta_e"][i]
+            ke = _heads(xn @ p[pre + "wk_e"], nh, r2)
+            ke = rk.apply_rope_elite(ke, posb, theta)[:, 0]
+            ck = (xn @ p[pre + "a_k"])[:, 0]
+            cv = (xn @ p[pre + "a_v"])[:, 0]
+            new_caches[0] = new_caches[0].at[i, bi, pos].set(ke)
+            new_caches[1] = new_caches[1].at[i, bi, pos].set(ck)
+            new_caches[2] = new_caches[2].at[i, bi, pos].set(cv)
+            o = _slrd_decode_attend(
+                cfg, var, p, i, q, new_caches[0][i], new_caches[1][i],
+                new_caches[2][i], valid, scale)
+        x = x + (o.reshape(b, -1) @ p[pre + "wo"])[:, None, :]
+        xn = rmsnorm(x, p[pre + "ffn_norm"])
+        x = x + swiglu(xn, p[pre + "w1"], p[pre + "w2"], p[pre + "w3"])
+    x = rmsnorm(x[:, 0], p["final_norm"])
+    return (x @ p["embed"].T, *new_caches)
+
+
+def _decode_kv_dense(cfg, var, p, i, xn, posb, extras, caches, bi, pos):
+    """Write this token's dense K/V into the cache; return full K/V views."""
+    nh, dh = cfg.n_heads, cfg.d_head
+    pre = f"l{i}."
+    if var.kind == "gqa":
+        g = var.n_kv_heads
+        k = _heads(xn @ p[pre + "wk"], g, dh)
+        v = _heads(xn @ p[pre + "wv"], g, dh)
+        k = rk.apply_rope(k, posb, cfg.rope_base)
+    else:
+        k = _heads(xn @ p[pre + "wk"], nh, dh)
+        v = _heads(xn @ p[pre + "wv"], nh, dh)
+        if var.kind == "mha":
+            k = rk.apply_rope(k, posb, cfg.rope_base)
+        else:
+            k = rk.apply_rope_masked(k, posb, cfg.rope_base,
+                                     extras["elite_mask"][i])
+    caches[0] = caches[0].at[i, bi, pos].set(k[:, 0])
+    caches[1] = caches[1].at[i, bi, pos].set(v[:, 0])
+    k_all, v_all = caches[0][i], caches[1][i]  # [B, S, g|nh, dh]
+    if var.kind == "gqa":
+        rep = nh // var.n_kv_heads
+        k_all = jnp.repeat(k_all, rep, axis=2)
+        v_all = jnp.repeat(v_all, rep, axis=2)
+    return caches, k_all, v_all
+
+
+def _masked_attend_dense(q, k_all, v_all, valid, scale):
+    s = jnp.einsum("bhd,bnhd->bhn", q, k_all) * scale
+    s = jnp.where(valid[:, None, :], s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhn,bnhd->bhd", pr, v_all)
+
+
+def _elitekv_decode_attend(cfg, var, p, i, q, ke_all, c_all, length, scale,
+                           use_pallas):
+    """Absorbed-form attention over the compressed cache (paper Fig 1).
+
+    score = q_rot . k_rot^T + (q_nope @ B_k[h]^T) . c^T;  out per head
+    = (p . c) @ B_v[h] — the latent is attended directly, then lifted.
+    """
+    nh, dh = cfg.n_heads, cfg.d_head
+    r2 = 2 * var.r
+    d_ckv = var.d_ckv
+    pre = f"l{i}."
+    q_rot, q_nope = q[..., :r2], q[..., r2:]  # [B,nh,2r], [B,nh,dh-2r]
+    bk = p[pre + "b_k"].reshape(d_ckv, nh, dh - r2)  # [C, nh, dn]
+    q_lat = jnp.einsum("bhn,chn->bhc", q_nope, bk)  # absorbed query
+    if use_pallas:
+        o_lat = elite_attention_decode(q_rot, q_lat, ke_all, c_all, length,
+                                       scale=scale)
+    else:
+        from .kernels.ref import ref_elite_attention_decode
+        o_lat = ref_elite_attention_decode(q_rot, q_lat, ke_all, c_all,
+                                           length, scale=scale)
+    bv = p[pre + "b_v"].reshape(d_ckv, nh, dh)
+    return jnp.einsum("bhc,chd->bhd", o_lat, bv)  # [B, nh, dh]
+
+
+def _slrd_decode_attend(cfg, var, p, i, q, ke_all, ck_all, cv_all, valid,
+                        scale):
+    nh, dh = cfg.n_heads, cfg.d_head
+    r2 = 2 * var.r
+    pre = f"l{i}."
+    q_rot, q_nope = q[..., :r2], q[..., r2:]
+    bk = p[pre + "b_k"].reshape(var.d_ck, nh, dh - r2)
+    q_lat = jnp.einsum("bhn,chn->bhc", q_nope, bk)
+    s = (jnp.einsum("bhd,bshd->bhs", q_rot, ke_all)
+         + jnp.einsum("bhc,bsc->bhs", q_lat, ck_all)) * scale
+    s = jnp.where(valid[:, None, :], s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhs,bsc->bhc", pr, cv_all)
+    bv = p[pre + "b_v"].reshape(var.d_cv, nh, dh)
+    return jnp.einsum("bhc,chd->bhd", o_lat, bv)
+
+
+# --------------------------------------------------------------------------
+# RoPElite search support (paper §3.1 Algorithm 1, Appendix B)
+# --------------------------------------------------------------------------
+
+def capture_qk(cfg: ModelConfig, p: Params, tokens):
+    """Forward the *baseline mha* model, exporting pre-RoPE q/k per layer.
+
+    Per Appendix B the capture uses full-RoPE attention in the forward pass
+    while the search probes alternative rotations offline. Returns
+    (q_pre [L,B,T,nh,dh], k_pre [L,B,T,nh,dh]).
+    """
+    var = Variant("mha")
+    b, t = tokens.shape
+    positions = jnp.arange(t, dtype=jnp.int32)
+    causal = jnp.tril(jnp.ones((t, t), bool))
+    scale = 1.0 / float(cfg.d_head) ** 0.5
+    nh, dh = cfg.n_heads, cfg.d_head
+    x = p["embed"][tokens]
+    qs, ks = [], []
+    for i in range(cfg.n_layers):
+        pre = f"l{i}."
+        xn = rmsnorm(x, p[pre + "attn_norm"])
+        q_pre = _heads(xn @ p[pre + "wq"], nh, dh)
+        k_pre = _heads(xn @ p[pre + "wk"], nh, dh)
+        v = _heads(xn @ p[pre + "wv"], nh, dh)
+        qs.append(q_pre)
+        ks.append(k_pre)
+        q = rk.apply_rope(q_pre, positions, cfg.rope_base)
+        k = rk.apply_rope(k_pre, positions, cfg.rope_base)
+        o = _attend(q, k, v, causal, scale)
+        x = x + o.reshape(b, t, -1) @ p[pre + "wo"]
+        xn = rmsnorm(x, p[pre + "ffn_norm"])
+        x = x + swiglu(xn, p[pre + "w1"], p[pre + "w2"], p[pre + "w3"])
+    return jnp.stack(qs), jnp.stack(ks)
+
+
+def ropelite_delta(cfg: ModelConfig, q_pre, k_pre, elite_mask):
+    """Algorithm 1 inner loop, vectorized over heads AND candidate chunks.
+
+    Scores decompose per 2-D chunk: s_X = sum_j c_j(rot if j in X else lin),
+    so s_{E ∪ {j}} = s_E + (c_j_rot − c_j_lin). One call returns
+
+        distance[h, j] = || s_full − s_{E ∪ {j}} ||_1   (causal, scaled)
+
+    for every head h and candidate j — the single-forward-pass parallelism
+    of Appendix B. Already-elite chunks get +inf so argmin skips them.
+
+    q_pre/k_pre: [B, T, nh, dh] pre-RoPE states for ONE layer;
+    elite_mask: [nh, nc] in {0,1}. Returns [nh, nc] f32.
+    """
+    b, t, nh, dh = q_pre.shape
+    nc = dh // 2
+    positions = jnp.arange(t, dtype=jnp.int32)
+    thetas = rk.chunk_thetas(nc, cfg.rope_base)
+    cos, sin = rk.rope_cos_sin(positions, thetas)  # [T, nc]
+    qc = q_pre.reshape(b, t, nh, nc, 2)
+    kc = k_pre.reshape(b, t, nh, nc, 2)
+    cs, sn = cos[None, :, None, :], sin[None, :, None, :]
+    qr = rk.rotate_chunks(qc, cs, sn)
+    kr = rk.rotate_chunks(kc, cs, sn)
+    scale = 1.0 / float(dh) ** 0.5
+    # Per-chunk score contributions [B, nh, nc, T, T].
+    c_rot = jnp.einsum("bmhcx,bnhcx->bhcmn", qr, kr) * scale
+    c_lin = jnp.einsum("bmhcx,bnhcx->bhcmn", qc, kc) * scale
+    causal = jnp.tril(jnp.ones((t, t), bool))[None, None, None]
+    m = elite_mask[None, :, :, None, None]
+    s_full = jnp.sum(c_rot, axis=2)  # [B, nh, T, T]
+    s_e = jnp.sum(m * c_rot + (1.0 - m) * c_lin, axis=2)
+    delta = c_rot - c_lin  # [B, nh, nc, T, T]
+    resid = s_full[:, :, None] - s_e[:, :, None] - delta
+    dist = jnp.sum(jnp.abs(jnp.where(causal, resid, 0.0)), axis=(0, 3, 4))
+    return dist + elite_mask * 1e30  # [nh, nc]
+
+
+def contribution_scores(cfg: ModelConfig, q_pre, k_pre):
+    """The `Contribution` baseline (§4.3.1): mean L2 norm of each RoPE
+    chunk's q/k product magnitude per head. q_pre/k_pre: [L,B,T,nh,dh]
+    -> [L, nh, nc]."""
+    L, b, t, nh, dh = q_pre.shape
+    nc = dh // 2
+    qc = q_pre.reshape(L, b, t, nh, nc, 2)
+    kc = k_pre.reshape(L, b, t, nh, nc, 2)
+    qn = jnp.sqrt(jnp.sum(qc * qc, axis=-1)).mean(axis=(1, 2))  # [L, nh, nc]
+    kn = jnp.sqrt(jnp.sum(kc * kc, axis=-1)).mean(axis=(1, 2))
+    return qn * kn

@@ -1,0 +1,82 @@
+"""AOT lowering sanity: manifests, HLO text, shape bookkeeping."""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+from compile.configs import CONFIGS, TINY, Variant, parse_variant, table1_grid
+
+
+def test_variant_tag_roundtrip():
+    for var in (Variant("mha"), Variant("ropelite"),
+                Variant("gqa", n_kv_heads=2),
+                Variant("elitekv", r=8, d_ckv=128),
+                Variant("slrd", r=4, d_ck=32, d_cv=64)):
+        assert parse_variant(var.tag()) == var
+
+
+def test_table1_grid_ratios():
+    for cfg_name in ("tiny", "small"):
+        cfg = CONFIGS[cfg_name]
+        for label, var in table1_grid(cfg):
+            assert abs(var.cache_ratio(cfg) - float(label) / 100) < 0.005, \
+                (cfg_name, label, var.tag(), var.cache_ratio(cfg))
+
+
+def test_core_pairs_unique_and_parseable():
+    pairs = aot.core_pairs()
+    for cname, tag in pairs:
+        assert cname in CONFIGS
+        parse_variant(tag)  # must not raise
+
+
+def test_build_train_step_io_spec():
+    var = Variant("elitekv", r=4, d_ckv=64)
+    fn, in_sds, io = aot.build_train_step(TINY, var, 2, 16)
+    n_params = len(M.param_specs(TINY, var))
+    # params + m + v + step + lr + extras + tokens + targets + mask
+    assert len(in_sds) == 3 * n_params + 2 + 1 + 3
+    assert len(io.inputs) == len(in_sds)
+    assert io.outputs[-2]["name"] == "loss"
+    # output count: params*3 + step + loss + gnorm
+    assert len(io.outputs) == 3 * n_params + 3
+
+
+def test_lower_small_function_produces_hlo(tmp_path):
+    """Lower the cheapest entry point end-to-end and check HLO text."""
+    fn, in_sds, io = aot.build_ropelite_delta(TINY, 1, 16)
+    lowered = jax.jit(fn, keep_unused=True).lower(*in_sds)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+
+
+def test_manifest_written(tmp_path):
+    aot.lower_pair(TINY, Variant("gqa", n_kv_heads=2), str(tmp_path),
+                   only_fns={"eval_loss"})
+    mpath = tmp_path / "tiny_gqa2.json"
+    assert mpath.exists()
+    man = json.loads(mpath.read_text())
+    assert man["cache_per_token"] == 2 * 2 * TINY.d_head
+    assert "eval_loss" in man["functions"]
+    f = man["functions"]["eval_loss"]
+    assert (tmp_path / f["file"]).exists()
+    assert f["inputs"][0]["name"] == "param:embed"
+    assert f["outputs"][0]["name"] == "sum_nll"
+
+
+def test_decode_cache_io_order_matches_cache_specs():
+    var = Variant("elitekv", r=2, d_ckv=32)
+    fn, in_sds, io = aot.build_decode(TINY, var, 2, 64)
+    cspecs = M.cache_specs(TINY, var, 2, 64)
+    cache_inputs = [i for i in io.inputs if i["name"].startswith("cache:")]
+    assert [i["name"][6:] for i in cache_inputs] == [n for n, _ in cspecs]
+    cache_outputs = [o for o in io.outputs if o["name"].startswith("cache:")]
+    assert [o["name"][6:] for o in cache_outputs] == [n for n, _ in cspecs]
+    for i, (n, s) in zip(cache_inputs, cspecs):
+        assert tuple(i["shape"]) == tuple(s)

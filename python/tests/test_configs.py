@@ -1,0 +1,82 @@
+"""Config/variant bookkeeping: cache formulas, grids, storage costs.
+
+These assertions are mirrored by rust/src/config tests — the two layers
+must agree on every geometry number or artifacts and runtime diverge.
+"""
+
+import numpy as np
+import pytest
+
+from compile import lrd
+from compile.configs import (CONFIGS, SMALL, TINY, Variant, parse_variant,
+                             table1_grid)
+
+
+def test_chunk_count_is_half_head_dim():
+    for cfg in CONFIGS.values():
+        assert cfg.n_chunks == cfg.d_head // 2
+        assert cfg.kv_elems_per_token == 2 * cfg.n_heads * cfg.d_head
+
+
+def test_mha_structural_assumption():
+    # The paper's storage simplifications assume d = n_h * d_h.
+    for cfg in CONFIGS.values():
+        assert cfg.d_model == cfg.n_heads * cfg.d_head
+
+
+@pytest.mark.parametrize("cfg", [TINY, SMALL], ids=lambda c: c.name)
+def test_cache_per_token_formulas(cfg):
+    assert Variant("mha").cache_per_token(cfg) == 2 * cfg.n_heads * cfg.d_head
+    g = Variant("gqa", n_kv_heads=2)
+    assert g.cache_per_token(cfg) == 2 * 2 * cfg.d_head
+    e = Variant("elitekv", r=4, d_ckv=64)
+    assert e.cache_per_token(cfg) == 2 * 4 * cfg.n_heads + 64
+    s = Variant("slrd", r=4, d_ck=32, d_cv=64)
+    assert s.cache_per_token(cfg) == 2 * 4 * cfg.n_heads + 96
+
+
+def test_ropelite_cache_is_full_size():
+    # §3.1: RoPElite alone does not shrink the cache.
+    for cfg in CONFIGS.values():
+        assert (Variant("ropelite").cache_per_token(cfg)
+                == Variant("mha").cache_per_token(cfg))
+
+
+@pytest.mark.parametrize("cfg", [TINY, SMALL], ids=lambda c: c.name)
+def test_grid_is_monotone_in_cache(cfg):
+    grid = table1_grid(cfg)
+    ratios = [float(label) for label, _ in grid]
+    assert ratios == sorted(ratios, reverse=True)
+
+
+@pytest.mark.parametrize("cfg", [TINY, SMALL], ids=lambda c: c.name)
+def test_grid_no_extra_parameters(cfg):
+    """Appendix C: converted variants must not add parameters."""
+    base = lrd.storage_cost(cfg, Variant("mha"))
+    for _, var in table1_grid(cfg):
+        if var.kind == "elitekv":
+            assert lrd.storage_cost(cfg, var) <= base, var.tag()
+
+
+def test_parse_variant_rejects_garbage():
+    for bad in ("mla", "elitekv", "gqa", "slrd_r4", "elitekv_r4"):
+        with pytest.raises((ValueError, IndexError)):
+            parse_variant(bad)
+
+
+def test_jlrd_vs_slrd_cache_at_equal_params():
+    """§3.2: at (approximately) equal parameter budgets J-LRD yields a
+    strictly smaller cache than any S-LRD split (shared latent)."""
+    cfg = SMALL
+    r = 8
+    var_j = Variant("elitekv", r=r, d_ckv=128)
+    pj = lrd.storage_cost(cfg, var_j)
+    cache_j = var_j.cache_per_token(cfg)
+    found_comparable = False
+    for ck in range(32, 512, 32):
+        for cv in range(32, 512, 32):
+            var_s = Variant("slrd", r=r, d_ck=ck, d_cv=cv)
+            if abs(lrd.storage_cost(cfg, var_s) - pj) <= cfg.d_model:
+                found_comparable = True
+                assert var_s.cache_per_token(cfg) >= cache_j, (ck, cv)
+    assert found_comparable

@@ -1,0 +1,150 @@
+"""L1 kernel correctness: Pallas (interpret) vs pure-jnp oracle.
+
+Hypothesis sweeps shapes and contents; tolerances are tight because both
+paths run f32 on CPU.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.elite_attention import (elite_attention_decode,
+                                             rope_rotate_elite)
+from compile.kernels.ref import (ref_elite_attention_decode,
+                                 ref_rope_rotate_elite)
+from compile.kernels import rope as rk
+
+ATOL = 2e-5
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 4),
+    s_blocks=st.integers(1, 4),
+    r=st.sampled_from([2, 4, 8]),
+    c=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_elite_attention_matches_ref(b, h, s_blocks, r, c, seed):
+    rng = np.random.default_rng(seed)
+    block = 16
+    s = s_blocks * block
+    qr = _rand(rng, b, h, 2 * r)
+    ql = _rand(rng, b, h, c)
+    kr = _rand(rng, b, s, h, 2 * r)
+    ckv = _rand(rng, b, s, h if False else c)  # [B,S,C]
+    lengths = jnp.asarray(rng.integers(1, s + 1, size=b), jnp.int32)
+    scale = 1.0 / np.sqrt(2 * r + c)
+    got = elite_attention_decode(qr, ql, kr, ckv, lengths, scale=scale,
+                                 block_s=block)
+    want = ref_elite_attention_decode(qr, ql, kr, ckv, lengths, scale=scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=ATOL)
+
+
+def test_elite_attention_length_one():
+    """Only the first cache row attends when length == 1."""
+    rng = np.random.default_rng(0)
+    b, h, s, r2, c = 1, 2, 64, 4, 16
+    qr, ql = _rand(rng, b, h, r2), _rand(rng, b, h, c)
+    kr, ckv = _rand(rng, b, s, h, r2), _rand(rng, b, s, c)
+    lengths = jnp.asarray([1], jnp.int32)
+    got = elite_attention_decode(qr, ql, kr, ckv, lengths, scale=0.1)
+    # softmax over one element == 1 -> output is exactly c_kv[0]
+    np.testing.assert_allclose(
+        np.asarray(got), np.broadcast_to(np.asarray(ckv)[:, 0][:, None, :],
+                                         (b, h, c)), atol=ATOL)
+
+
+def test_elite_attention_full_length():
+    rng = np.random.default_rng(1)
+    b, h, s, r2, c = 2, 2, 128, 8, 32
+    qr, ql = _rand(rng, b, h, r2), _rand(rng, b, h, c)
+    kr, ckv = _rand(rng, b, s, h, r2), _rand(rng, b, s, c)
+    lengths = jnp.asarray([s, s], jnp.int32)
+    got = elite_attention_decode(qr, ql, kr, ckv, lengths, scale=0.05)
+    want = ref_elite_attention_decode(qr, ql, kr, ckv, lengths, scale=0.05)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=ATOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    h=st.integers(1, 8),
+    r=st.sampled_from([1, 2, 4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rope_rotate_elite_matches_ref(b, h, r, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, b, h, 2 * r)
+    cos = _rand(rng, b, h, r)
+    sin = _rand(rng, b, h, r)
+    got = rope_rotate_elite(x, cos, sin)
+    want = ref_rope_rotate_elite(x, cos, sin)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=ATOL)
+
+
+def test_rope_rotation_preserves_norm():
+    """True rotations (cos^2+sin^2=1) preserve chunk norms."""
+    rng = np.random.default_rng(2)
+    b, h, r = 2, 3, 5
+    ang = jnp.asarray(rng.standard_normal((b, h, r)), jnp.float32)
+    x = _rand(rng, b, h, 2 * r)
+    out = rope_rotate_elite(x, jnp.cos(ang), jnp.sin(ang))
+    n_in = np.linalg.norm(np.asarray(x).reshape(b, h, r, 2), axis=-1)
+    n_out = np.linalg.norm(np.asarray(out).reshape(b, h, r, 2), axis=-1)
+    np.testing.assert_allclose(n_in, n_out, atol=ATOL)
+
+
+def test_rope_relative_position_property():
+    """Paper Eq. 1a == 1b: (R(m t)q).(R(n t)k) == q.R((m-n)t).k"""
+    rng = np.random.default_rng(3)
+    base = 10000.0
+    d = 16
+    q = jnp.asarray(rng.standard_normal((1, 1, 1, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 1, 1, d)), jnp.float32)
+    for m, n in [(5, 3), (10, 0), (7, 7), (100, 1)]:
+        qm = rk.apply_rope(q, jnp.asarray([m]), base)[0, 0, 0]
+        kn = rk.apply_rope(k, jnp.asarray([n]), base)[0, 0, 0]
+        krel = rk.apply_rope(k, jnp.asarray([n - m]), base)[0, 0, 0]
+        q0 = np.asarray(q)[0, 0, 0]
+        lhs = float(np.dot(np.asarray(qm), np.asarray(kn)))
+        rhs = float(np.dot(q0, np.asarray(krel)))
+        assert abs(lhs - rhs) < 1e-4, (m, n, lhs, rhs)
+
+
+def test_rope_masked_blend():
+    """mask==1 everywhere -> full RoPE; mask==0 -> identity."""
+    rng = np.random.default_rng(4)
+    b, t, h, d = 2, 8, 4, 16
+    x = _rand(rng, b, t, h, d)
+    pos = jnp.arange(t)
+    ones = jnp.ones((h, d // 2))
+    zeros = jnp.zeros((h, d // 2))
+    full = rk.apply_rope(x, pos, 10000.0)
+    np.testing.assert_allclose(
+        np.asarray(rk.apply_rope_masked(x, pos, 10000.0, ones)),
+        np.asarray(full), atol=ATOL)
+    np.testing.assert_allclose(
+        np.asarray(rk.apply_rope_masked(x, pos, 10000.0, zeros)),
+        np.asarray(x), atol=ATOL)
+
+
+def test_rope_elite_matches_full_when_ladder():
+    """apply_rope_elite with the standard ladder == apply_rope."""
+    rng = np.random.default_rng(5)
+    b, t, h, d = 1, 6, 2, 8
+    nc = d // 2
+    x = _rand(rng, b, t, h, d)
+    pos = jnp.arange(t)
+    thetas = rk.chunk_thetas(nc, 10000.0)
+    theta_e = jnp.broadcast_to(thetas[None, :], (h, nc))
+    got = rk.apply_rope_elite(x, pos, theta_e)
+    want = rk.apply_rope(x, pos, 10000.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=ATOL)

@@ -1,0 +1,204 @@
+"""L2 model correctness across all architecture variants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.configs import TINY, Variant
+
+RNG = np.random.RandomState(7)
+
+
+def _extras(cfg, var, r_elite=4):
+    if var.kind == "ropelite":
+        m = jnp.zeros((cfg.n_layers, cfg.n_heads, cfg.n_chunks))
+        return {"elite_mask": m.at[:, :, :r_elite].set(1.0)}
+    if var.kind in ("elitekv", "slrd"):
+        from compile.kernels.rope import chunk_thetas
+        th = chunk_thetas(cfg.n_chunks, cfg.rope_base)[:var.r]
+        return {"theta_e": jnp.broadcast_to(
+            th[None, None, :], (cfg.n_layers, cfg.n_heads, var.r))}
+    return {}
+
+
+VARIANTS = [
+    Variant("mha"),
+    Variant("ropelite"),
+    Variant("gqa", n_kv_heads=4),
+    Variant("gqa", n_kv_heads=1),
+    Variant("elitekv", r=4, d_ckv=64),
+    Variant("elitekv", r=2, d_ckv=32),
+    Variant("slrd", r=4, d_ck=32, d_cv=64),
+]
+
+
+@pytest.mark.parametrize("var", VARIANTS, ids=lambda v: v.tag())
+def test_forward_shapes_finite(var):
+    p = M.init_params(TINY, var, 0)
+    toks = jnp.asarray(RNG.randint(0, TINY.vocab, (2, 16)), jnp.int32)
+    logits = M.forward(TINY, var, p, _extras(TINY, var), toks)
+    assert logits.shape == (2, 16, TINY.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("var", VARIANTS, ids=lambda v: v.tag())
+def test_prefill_matches_forward(var):
+    """Prefill's last-position logits == full forward logits."""
+    p = M.init_params(TINY, var, 1)
+    ex = _extras(TINY, var)
+    b, s, t = 2, 64, 11
+    toks = jnp.asarray(RNG.randint(0, TINY.vocab, (b, t)), jnp.int32)
+    full = M.forward(TINY, var, p, ex, toks)
+    padded = jnp.zeros((b, s), jnp.int32).at[:, :t].set(toks)
+    out = M.prefill(TINY, var, p, ex, padded, jnp.asarray([t] * b, jnp.int32))
+    np.testing.assert_allclose(np.asarray(out[0]),
+                               np.asarray(full[:, t - 1]), atol=3e-5)
+
+
+@pytest.mark.parametrize("var", VARIANTS, ids=lambda v: v.tag())
+def test_decode_matches_forward(var):
+    """prefill(t-1) + decode_step == forward logits at position t-1."""
+    p = M.init_params(TINY, var, 2)
+    ex = _extras(TINY, var)
+    b, s, t = 2, 64, 9
+    toks = jnp.asarray(RNG.randint(0, TINY.vocab, (b, t)), jnp.int32)
+    full = M.forward(TINY, var, p, ex, toks)
+    padded = jnp.zeros((b, s), jnp.int32).at[:, :t].set(toks)
+    out = M.prefill(TINY, var, p, ex, padded,
+                    jnp.asarray([t - 1] * b, jnp.int32))
+    caches = list(out[1:])
+    pos = jnp.asarray([t - 1] * b, jnp.int32)
+    dec = M.decode_step(TINY, var, p, ex, toks[:, t - 1], pos, caches)
+    np.testing.assert_allclose(np.asarray(dec[0]),
+                               np.asarray(full[:, t - 1]), atol=3e-5)
+
+
+def test_decode_multi_step_chain():
+    """Decoding token-by-token reproduces full-sequence logits everywhere."""
+    var = Variant("elitekv", r=4, d_ckv=64)
+    p = M.init_params(TINY, var, 3)
+    ex = _extras(TINY, var)
+    b, s, t = 1, 64, 8
+    toks = jnp.asarray(RNG.randint(0, TINY.vocab, (b, t)), jnp.int32)
+    full = M.forward(TINY, var, p, ex, toks)
+    padded = jnp.zeros((b, s), jnp.int32).at[:, :t].set(toks)
+    out = M.prefill(TINY, var, p, ex, padded, jnp.asarray([1], jnp.int32))
+    caches = list(out[1:])
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(full[:, 0]),
+                               atol=3e-5)
+    for i in range(1, t):
+        pos = jnp.asarray([i], jnp.int32)
+        dec = M.decode_step(TINY, var, p, ex, toks[:, i], pos, caches)
+        caches = list(dec[1:])
+        np.testing.assert_allclose(np.asarray(dec[0]),
+                                   np.asarray(full[:, i]), atol=5e-5,
+                                   err_msg=f"step {i}")
+
+
+def test_pallas_decode_matches_jnp_decode():
+    var = Variant("elitekv", r=4, d_ckv=64)
+    p = M.init_params(TINY, var, 4)
+    ex = _extras(TINY, var)
+    b, s, t = 2, 64, 12
+    toks = jnp.asarray(RNG.randint(0, TINY.vocab, (b, t)), jnp.int32)
+    padded = jnp.zeros((b, s), jnp.int32).at[:, :t].set(toks)
+    out = M.prefill(TINY, var, p, ex, padded,
+                    jnp.asarray([t - 1] * b, jnp.int32))
+    caches = list(out[1:])
+    pos = jnp.asarray([t - 1] * b, jnp.int32)
+    d1 = M.decode_step(TINY, var, p, ex, toks[:, t - 1], pos, caches,
+                       use_pallas=False)
+    d2 = M.decode_step(TINY, var, p, ex, toks[:, t - 1], pos, caches,
+                       use_pallas=True)
+    np.testing.assert_allclose(np.asarray(d1[0]), np.asarray(d2[0]),
+                               atol=2e-5)
+
+
+def test_ropelite_full_mask_equals_mha():
+    """RoPElite with every chunk elite == baseline MHA (same params)."""
+    var_m, var_r = Variant("mha"), Variant("ropelite")
+    p = M.init_params(TINY, var_m, 5)
+    toks = jnp.asarray(RNG.randint(0, TINY.vocab, (2, 12)), jnp.int32)
+    full_mask = {"elite_mask": jnp.ones(
+        (TINY.n_layers, TINY.n_heads, TINY.n_chunks))}
+    a = M.forward(TINY, var_m, p, {}, toks)
+    b = M.forward(TINY, var_r, p, full_mask, toks)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_init_loss_near_uniform():
+    var = Variant("mha")
+    p = M.init_params(TINY, var, 6)
+    toks = jnp.asarray(RNG.randint(0, TINY.vocab, (4, 32)), jnp.int32)
+    tg = jnp.asarray(RNG.randint(0, TINY.vocab, (4, 32)), jnp.int32)
+    loss = M.loss_fn(TINY, var, p, {}, toks, tg, jnp.ones((4, 32)))
+    assert abs(float(loss) - np.log(TINY.vocab)) < 0.3
+
+
+def test_train_step_learns_repeated_batch():
+    """A few AdamW steps on one batch must drop the loss materially."""
+    var = Variant("mha")
+    p = M.init_params(TINY, var, 7)
+    m = {k: jnp.zeros_like(x) for k, x in p.items()}
+    v = {k: jnp.zeros_like(x) for k, x in p.items()}
+    toks = jnp.asarray(RNG.randint(0, TINY.vocab, (4, 32)), jnp.int32)
+    tg = jnp.roll(toks, -1, axis=1)
+    mask = jnp.ones((4, 32))
+    step = jnp.asarray(0, jnp.int32)
+    losses = []
+    jit_step = jax.jit(lambda p, m, v, s: M.train_step(
+        TINY, var, p, m, v, s, jnp.float32(3e-3), {}, toks, tg, mask))
+    for _ in range(12):
+        p, m, v, step, loss, gnorm = jit_step(p, m, v, step)
+        losses.append(float(loss))
+        assert np.isfinite(losses[-1])
+    assert losses[-1] < losses[0] - 1.0, losses
+
+
+def test_train_step_gnorm_clip_applied():
+    var = Variant("mha")
+    p = M.init_params(TINY, var, 8)
+    m = {k: jnp.zeros_like(x) for k, x in p.items()}
+    v = {k: jnp.zeros_like(x) for k, x in p.items()}
+    toks = jnp.asarray(RNG.randint(0, TINY.vocab, (2, 16)), jnp.int32)
+    tg = jnp.asarray(RNG.randint(0, TINY.vocab, (2, 16)), jnp.int32)
+    _, _, _, _, loss, gnorm = M.train_step(
+        TINY, var, p, m, v, jnp.asarray(0, jnp.int32), jnp.float32(1e-3),
+        {}, toks, tg, jnp.ones((2, 16)))
+    assert float(gnorm) > 0.0
+
+
+def test_eval_loss_matches_loss_fn():
+    var = Variant("mha")
+    p = M.init_params(TINY, var, 9)
+    toks = jnp.asarray(RNG.randint(0, TINY.vocab, (2, 24)), jnp.int32)
+    tg = jnp.asarray(RNG.randint(0, TINY.vocab, (2, 24)), jnp.int32)
+    mask = jnp.ones((2, 24))
+    s, n = M.eval_loss(TINY, var, p, {}, toks, tg, mask)
+    mean = M.loss_fn(TINY, var, p, {}, toks, tg, mask)
+    assert abs(float(s) / float(n) - float(mean)) < 1e-5
+
+
+def test_eval_loss_respects_mask():
+    """Masked positions must not contribute to NLL."""
+    var = Variant("mha")
+    p = M.init_params(TINY, var, 10)
+    toks = jnp.asarray(RNG.randint(0, TINY.vocab, (1, 16)), jnp.int32)
+    tg = jnp.asarray(RNG.randint(0, TINY.vocab, (1, 16)), jnp.int32)
+    m_half = jnp.ones((1, 16)).at[:, 8:].set(0.0)
+    s_half, n_half = M.eval_loss(TINY, var, p, {}, toks, tg, m_half)
+    assert float(n_half) == 8.0
+    # changing targets in the masked region must not change the sum
+    tg2 = tg.at[:, 8:].set((tg[:, 8:] + 1) % TINY.vocab)
+    s2, _ = M.eval_loss(TINY, var, p, {}, toks, tg2, m_half)
+    assert abs(float(s_half) - float(s2)) < 1e-6
+
+
+def test_cache_specs_sizes_match_paper_formula():
+    """cache tensors' per-token element count == Variant.cache_per_token."""
+    for var in VARIANTS:
+        specs = M.cache_specs(TINY, var, batch=1, s=1)
+        elems = sum(int(np.prod(s)) for _, s in specs) // TINY.n_layers
+        assert elems == var.cache_per_token(TINY), var.tag()

@@ -1,0 +1,196 @@
+//! Component benchmarks behind the paper's tables/figures (custom
+//! harness; the offline crate set has no criterion). One section per
+//! experiment, measuring the hot operations each experiment exercises:
+//!
+//!   [T1/F6]  train_step latency per architecture variant (uptraining cost)
+//!   [T1]     eval_loss latency (benchmark scoring cost)
+//!   [SRV]    prefill + decode latency per variant; pallas vs jnp decode
+//!   [T2/F2]  ropelite_delta (Algorithm-1 inner step) + capture latency
+//!   [F5]     J-LRD / S-LRD conversion (Jacobi SVD) wall time
+//!   [SRV]    kv-cache substrate ops (block allocator, lane splice)
+//!
+//! Run: `make artifacts && cargo bench` (results also land in
+//! EXPERIMENTS.md §Perf).
+
+use std::sync::Arc;
+
+use elitekv::bench::{bench, BenchOpts};
+use elitekv::config::{ModelConfig, Variant};
+use elitekv::convert::{self, EliteSelection};
+use elitekv::data::CorpusGen;
+use elitekv::kvcache::BlockAllocator;
+use elitekv::runtime::{Engine, HostTensor, ModelRunner, TrainState};
+use elitekv::tensor::Tensor;
+use elitekv::util::Pcg64;
+
+fn ladder_selection(cfg: &ModelConfig, r: usize) -> EliteSelection {
+    EliteSelection {
+        chunks: vec![vec![(0..r).collect(); cfg.n_heads]; cfg.n_layers],
+    }
+}
+
+fn runner_for(
+    engine: &Arc<Engine>,
+    cfg: &ModelConfig,
+    tag: &str,
+) -> ModelRunner {
+    let mut runner =
+        ModelRunner::new(Arc::clone(engine), "artifacts", &cfg.name, tag)
+            .expect("runner (run `make artifacts`)");
+    if !runner.manifest.extras.is_empty() {
+        let var = runner.manifest.variant.clone();
+        // ropelite has no intrinsic r — bench with a quarter-ladder mask
+        let r = var.r().unwrap_or(cfg.n_chunks() / 4);
+        let sel = ladder_selection(cfg, r);
+        let extras = match var {
+            Variant::RopeLite => vec![HostTensor::F32(
+                convert::elitekv::elite_mask_flat(cfg, &sel),
+                vec![cfg.n_layers, cfg.n_heads, cfg.n_chunks()],
+            )],
+            _ => vec![HostTensor::F32(
+                convert::elitekv::elite_thetas_flat(cfg, &sel),
+                vec![cfg.n_layers, cfg.n_heads, r],
+            )],
+        };
+        runner.set_extras(extras).unwrap();
+    }
+    runner
+}
+
+fn main() {
+    let cfg = ModelConfig::tiny();
+    let engine = Arc::new(Engine::new().expect("pjrt"));
+    let opts = BenchOpts { warmup_iters: 2, iters: 8 };
+    let nc = cfg.n_chunks();
+    let variants = [
+        "mha".to_string(),
+        format!("gqa{}", cfg.n_heads / 4),
+        format!("elitekv_r{}_c{}", nc / 4, 64),
+        "ropelite".to_string(),
+    ];
+
+    println!("== [T1/F6] train_step per variant (tiny, batch 8 x 128) ==");
+    for tag in &variants {
+        let runner = runner_for(&engine, &cfg, tag);
+        let params = runner.init(1).unwrap();
+        let mut state = TrainState::fresh(params);
+        let (b, t) = runner.train_shape().unwrap();
+        let mut gen = CorpusGen::new(cfg.vocab, 1);
+        let batch = gen.next_batch(b, t);
+        bench(&format!("train_step/{tag}"), opts, || {
+            runner.train_step(&mut state, &batch, 1e-3).unwrap();
+        });
+    }
+
+    println!("\n== [T1] eval_loss per variant ==");
+    for tag in &variants {
+        let runner = runner_for(&engine, &cfg, tag);
+        let params = runner.init(1).unwrap();
+        let (b, t) = runner.eval_shape().unwrap();
+        let mut gen = CorpusGen::new(cfg.vocab, 2);
+        let batch = gen.next_batch(b, t);
+        bench(&format!("eval_loss/{tag}"), opts, || {
+            runner.eval_loss(&params, &batch).unwrap();
+        });
+    }
+
+    println!("\n== [SRV] prefill + decode per variant (batch 4, S 256) ==");
+    for tag in &variants {
+        let runner = runner_for(&engine, &cfg, tag);
+        let params = runner.init(1).unwrap();
+        let (b, s) = runner.manifest.serve_shape().unwrap();
+        let mut gen = CorpusGen::new(cfg.vocab, 3);
+        let mut tokens = vec![0i32; b * s];
+        for row in 0..b {
+            for (i, &t) in gen.stream(32).iter().enumerate() {
+                tokens[row * s + i] = t as i32;
+            }
+        }
+        let lens = vec![32i32; b];
+        bench(&format!("prefill/{tag}"), opts, || {
+            runner.prefill(&params, &tokens, &lens).unwrap();
+        });
+        let (_l, caches) = runner.prefill(&params, &tokens, &lens).unwrap();
+        let token = vec![7i32; b];
+        let pos = vec![32i32; b];
+        bench(&format!("decode/{tag}"), opts, || {
+            runner
+                .decode(&params, &token, &pos, caches.clone(), false)
+                .unwrap();
+        });
+        if runner.manifest.functions.contains_key("decode_pallas") {
+            bench(&format!("decode_pallas/{tag}"), opts, || {
+                runner
+                    .decode(&params, &token, &pos, caches.clone(), true)
+                    .unwrap();
+            });
+        }
+    }
+
+    println!("\n== [T2/F2] RoPElite search primitives ==");
+    {
+        let runner = runner_for(&engine, &cfg, "mha");
+        let params = runner.init(1).unwrap();
+        let f = runner.manifest.function("capture_qk").unwrap();
+        let tok = &f.inputs[f.input_index("tokens").unwrap()];
+        let (b, t) = (tok.shape[0], tok.shape[1]);
+        let mut gen = CorpusGen::new(cfg.vocab, 4);
+        let tokens: Vec<i32> =
+            gen.stream(b * t).iter().map(|&x| x as i32).collect();
+        bench("capture_qk/tiny", opts, || {
+            runner.capture_qk(&params, &tokens).unwrap();
+        });
+        let (q, k) = runner.capture_qk(&params, &tokens).unwrap();
+        let per = b * t * cfg.n_heads * cfg.d_head;
+        let q0 = HostTensor::F32(q.as_f32().unwrap()[..per].to_vec(),
+                                 vec![b, t, cfg.n_heads, cfg.d_head]);
+        let k0 = HostTensor::F32(k.as_f32().unwrap()[..per].to_vec(),
+                                 vec![b, t, cfg.n_heads, cfg.d_head]);
+        let mask = HostTensor::F32(vec![0.0; cfg.n_heads * nc],
+                                   vec![cfg.n_heads, nc]);
+        bench("ropelite_delta/layer", opts, || {
+            runner.ropelite_delta(&q0, &k0, &mask).unwrap();
+        });
+    }
+
+    println!("\n== [F5] conversion (Jacobi SVD weight surgery) ==");
+    {
+        let runner = runner_for(&engine, &cfg, "mha");
+        let params = runner.init(1).unwrap();
+        let ckpt = runner.ckpt_from_params(&params).unwrap();
+        let sel = ladder_selection(&cfg, nc / 4);
+        bench("convert/jlrd_tiny_c64",
+              BenchOpts { warmup_iters: 1, iters: 3 }, || {
+            convert::convert_elitekv(&cfg, &ckpt, &sel, 64).unwrap();
+        });
+        bench("convert/slrd_tiny_32_64",
+              BenchOpts { warmup_iters: 1, iters: 3 }, || {
+            convert::convert_slrd(&cfg, &ckpt, &sel, 32, 64).unwrap();
+        });
+        bench("convert/gqa2_tiny",
+              BenchOpts { warmup_iters: 1, iters: 3 }, || {
+            convert::convert_gqa(&cfg, &ckpt, 2).unwrap();
+        });
+    }
+
+    println!("\n== [SRV] kv-cache substrate ops ==");
+    {
+        let many = BenchOpts { warmup_iters: 2, iters: 10 };
+        bench("block_alloc/1k-seqs", many, || {
+            let mut a = BlockAllocator::new(4096, 16);
+            let mut chains = Vec::new();
+            for i in 0..1000 {
+                chains.push(a.alloc(17 + (i % 32)).unwrap());
+            }
+            for c in &chains {
+                a.release(c);
+            }
+        });
+        let mut rng = Pcg64::seeded(9);
+        let a = Tensor::randn(vec![256, 512], &mut rng);
+        bench("svd/256x512", BenchOpts { warmup_iters: 1, iters: 3 }, || {
+            elitekv::linalg::svd_truncate(&a, 64);
+        });
+    }
+    println!("\nbench_main done");
+}

@@ -1,0 +1,95 @@
+//! End-to-end serving benchmark (the paper's implicit systems claim:
+//! smaller KV cache -> cheaper decode steps and more capacity under a
+//! fixed memory budget). Measures tokens/s, per-request latency, and
+//! peak cache bytes per variant on the tiny model, plus the capacity
+//! table under a fixed budget.
+
+use std::sync::Arc;
+
+use elitekv::config::{ModelConfig, Variant};
+use elitekv::convert::{self, EliteSelection};
+use elitekv::coordinator::{GenParams, InferenceServer, Request};
+use elitekv::data::{CorpusGen, ProbeSet};
+use elitekv::kvcache::CacheLayout;
+use elitekv::runtime::{Engine, HostTensor, ModelRunner};
+use elitekv::util::stats::percentile;
+
+fn main() {
+    let cfg = ModelConfig::tiny();
+    let nc = cfg.n_chunks();
+    let engine = Arc::new(Engine::new().expect("pjrt"));
+    let n_requests: usize = 24;
+    let max_new = 12;
+    let budget = 16usize << 20;
+
+    let variants = [
+        Variant::Mha,
+        Variant::Gqa { n_kv_heads: cfg.n_heads / 2 },
+        Variant::Gqa { n_kv_heads: 1 },
+        Variant::EliteKv { r: nc / 4, d_ckv: 64 },  // 25 %
+        Variant::EliteKv { r: nc / 8, d_ckv: 32 },  // 12.5 %
+    ];
+
+    println!("== capacity at a {} MiB budget ==", budget >> 20);
+    for v in &variants {
+        let layout = CacheLayout::new(&cfg, v.clone());
+        println!(
+            "  {:<20} {:>6.1}% cache  {:>9} tokens fit",
+            v.tag(), 100.0 * layout.ratio, layout.tokens_in_budget(budget)
+        );
+    }
+
+    println!("\n== throughput/latency ({n_requests} requests x {max_new} new tokens) ==");
+    println!("{:<20} {:>9} {:>12} {:>12} {:>14}",
+             "variant", "tok/s", "p50 ms", "p99 ms", "peak KiB");
+    for v in &variants {
+        let tag = v.tag();
+        let mut runner = ModelRunner::new(
+            Arc::clone(&engine), "artifacts", &cfg.name, &tag)
+            .expect("runner (run `make artifacts`)");
+        if !runner.manifest.extras.is_empty() {
+            let r = v.r().unwrap();
+            let sel = EliteSelection {
+                chunks: vec![vec![(0..r).collect(); cfg.n_heads];
+                             cfg.n_layers],
+            };
+            runner
+                .set_extras(vec![HostTensor::F32(
+                    convert::elitekv::elite_thetas_flat(&cfg, &sel),
+                    vec![cfg.n_layers, cfg.n_heads, r],
+                )])
+                .unwrap();
+        }
+        let params = runner.init(5).unwrap();
+        let mut server = InferenceServer::new(runner, params, budget).unwrap();
+        let gen = CorpusGen::new(cfg.vocab, 1);
+        let probes = ProbeSet::generate(&gen, n_requests.div_ceil(6), 77);
+        let t0 = std::time::Instant::now();
+        for (i, item) in probes.items.iter().take(n_requests).enumerate() {
+            server.submit(Request::new(
+                i as u64,
+                item.prompt.clone(),
+                GenParams {
+                    max_new_tokens: max_new,
+                    stop_token: None, // force fixed-length decode
+                    ..Default::default()
+                },
+            ));
+        }
+        let responses = server.run_to_completion().unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        let toks: usize = responses.iter().map(|r| r.tokens.len()).sum();
+        let mut lat: Vec<f64> =
+            responses.iter().map(|r| r.latency * 1e3).collect();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        println!(
+            "{:<20} {:>9.1} {:>12.1} {:>12.1} {:>14}",
+            tag,
+            toks as f64 / wall,
+            percentile(&lat, 0.5),
+            percentile(&lat, 0.99),
+            server.stats.peak_cache_bytes / 1024,
+        );
+    }
+    println!("\nserve_throughput done");
+}

@@ -1,0 +1,502 @@
+//! One function per paper table/figure (DESIGN.md §7 experiment index).
+
+use anyhow::{Context, Result};
+
+use crate::bench::pipeline::ExperimentCtx;
+use crate::bench::report::{self, Table};
+use crate::config::{table1_grid, ModelConfig, Variant};
+use crate::convert::{self};
+use crate::coordinator::{GenParams, InferenceServer, Request};
+use crate::data::{CorpusGen, ProbeSet};
+use crate::util::Json;
+
+/// Table 1: EliteKV vs GQA across the cache-ratio grid, after uptraining.
+pub fn table1(ctx: &ExperimentCtx, cfg_name: &str) -> Result<Json> {
+    let cfg = ModelConfig::by_name(cfg_name).context("config")?;
+    let mut table = Table::new(&[
+        "Cache", "Method", "copy", "reverse", "recall", "induction",
+        "arith", "sort", "Avg", "ppl",
+    ]);
+    let mut records = Vec::new();
+    for (label, variant) in table1_grid(&cfg) {
+        let tag = variant.tag();
+        log::info!("table1 [{cfg_name}]: {label}% {tag}");
+        let (runner, params) = match variant {
+            Variant::Mha => {
+                let (r, p, _) = ctx.converted(cfg_name, &variant, "ropelite")?;
+                (r, p) // baseline evaluated as-is (no uptraining needed)
+            }
+            _ => {
+                let (r, p, _) = ctx.converted(cfg_name, &variant, "ropelite")?;
+                let (state, _rep) =
+                    ctx.uptrain(&r, p, ctx.opts.uptrain_steps, 0)?;
+                (r, state.params)
+            }
+        };
+        let rep = ctx.evaluate(&runner, &params)?;
+        let method = match variant {
+            Variant::Mha => "baseline",
+            Variant::Gqa { .. } => "GQA",
+            _ => "EliteKV",
+        };
+        let mut cells = vec![label.to_string(), method.to_string()];
+        for (_, acc) in &rep.scores.task_acc {
+            cells.push(report::fmt_pct(*acc));
+        }
+        cells.push(report::fmt_pct(rep.scores.average));
+        cells.push(report::fmt_f(rep.ppl, 3));
+        table.row(cells);
+        records.push(Json::obj(vec![
+            ("cache", Json::str(label)),
+            ("variant", Json::str(&tag)),
+            ("method", Json::str(method)),
+            ("avg", Json::num(rep.scores.average)),
+            ("ppl", Json::num(rep.ppl)),
+            (
+                "tasks",
+                Json::Arr(
+                    rep.scores
+                        .task_acc
+                        .iter()
+                        .map(|(k, v)| {
+                            Json::obj(vec![
+                                ("task", Json::str(k.as_str())),
+                                ("acc", Json::num(*v)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]));
+    }
+    table.print(&format!("Table 1 ({cfg_name}): EliteKV vs GQA"));
+    let json = Json::obj(vec![
+        ("experiment", Json::str("table1")),
+        ("config", Json::str(cfg_name)),
+        ("rows", Json::Arr(records)),
+    ]);
+    report::write_json(&ctx.results, &format!("table1_{cfg_name}"), &json)?;
+    report::append_report(
+        &ctx.results,
+        &format!("## Table 1 ({cfg_name})\n\n{}", table.to_markdown()),
+    )?;
+    Ok(json)
+}
+
+/// Table 2: Uniform vs Contribution vs RoPElite at shrinking r
+/// (RoPElite-only models, short uptraining).
+pub fn table2(ctx: &ExperimentCtx, cfg_name: &str) -> Result<Json> {
+    let cfg = ModelConfig::by_name(cfg_name).context("config")?;
+    let nc = cfg.n_chunks();
+    let rs = [nc / 2, nc / 4, nc / 8, nc / 16.max(1)];
+    let steps = (ctx.opts.uptrain_steps / 2).max(10); // paper: <0.1 % tokens
+    let mut table = Table::new(&["Method", "r/2nc", "Avg", "ppl"]);
+    let mut records = Vec::new();
+    for method in ["uniform", "contribution", "ropelite"] {
+        for &r in &rs {
+            if r == 0 {
+                continue;
+            }
+            log::info!("table2 [{cfg_name}]: {method} r={r}");
+            let (runner, params) =
+                ctx.converted_ropelite(cfg_name, method, r)?;
+            let (state, _rep) = ctx.uptrain(&runner, params, steps, 0)?;
+            let rep = ctx.evaluate(&runner, &state.params)?;
+            table.row(vec![
+                method.to_string(),
+                format!("{r}/{nc}"),
+                report::fmt_pct(rep.scores.average),
+                report::fmt_f(rep.ppl, 3),
+            ]);
+            records.push(Json::obj(vec![
+                ("method", Json::str(method)),
+                ("r", Json::num(r as f64)),
+                ("avg", Json::num(rep.scores.average)),
+                ("ppl", Json::num(rep.ppl)),
+            ]));
+        }
+    }
+    table.print(&format!(
+        "Table 2 ({cfg_name}): rotation-dimension search methods"
+    ));
+    let json = Json::obj(vec![
+        ("experiment", Json::str("table2")),
+        ("config", Json::str(cfg_name)),
+        ("rows", Json::Arr(records)),
+    ]);
+    report::write_json(&ctx.results, &format!("table2_{cfg_name}"), &json)?;
+    report::append_report(
+        &ctx.results,
+        &format!("## Table 2 ({cfg_name})\n\n{}", table.to_markdown()),
+    )?;
+    Ok(json)
+}
+
+/// Figure 2/8: elite-chunk heat map across layers/heads (CSV + ASCII).
+pub fn fig2(ctx: &ExperimentCtx, cfg_name: &str, r: usize) -> Result<Json> {
+    let cfg = ModelConfig::by_name(cfg_name).context("config")?;
+    let sel = ctx.selection(cfg_name, "ropelite", r)?;
+    let nc = cfg.n_chunks();
+    // CSV: layer,head,slot,chunk
+    let mut csv = String::from("layer,head,slot,chunk\n");
+    for (l, layer) in sel.chunks.iter().enumerate() {
+        for (h, head) in layer.iter().enumerate() {
+            for (s, &c) in head.iter().enumerate() {
+                csv.push_str(&format!("{l},{h},{s},{c}\n"));
+            }
+        }
+    }
+    let csv_path = ctx.results.join(format!("fig2_{cfg_name}_r{r}.csv"));
+    std::fs::write(&csv_path, &csv)?;
+    // ASCII heat map: rows = layer x head, cols = chunks (low idx = high
+    // frequency, matching the paper's figure orientation).
+    println!("\n## Figure 2 ({cfg_name}, r={r}): elite chunks (# = elite)\n");
+    println!("          chunk 0 (high freq) {} {nc} (low freq)",
+             " ".repeat(nc.saturating_sub(28)));
+    for (l, layer) in sel.chunks.iter().enumerate() {
+        for (h, head) in layer.iter().enumerate() {
+            let mut row = vec!['.'; nc];
+            for &c in head {
+                row[c] = '#';
+            }
+            println!("L{l:02}H{h:02}  |{}|", row.iter().collect::<String>());
+        }
+    }
+    // Frequency-band statistics (the paper's qualitative claims).
+    let mut band_counts = [0usize; 3]; // high/mid/low thirds
+    let mut shallow_high = 0usize;
+    let mut total = 0usize;
+    for (l, layer) in sel.chunks.iter().enumerate() {
+        for head in layer {
+            for &c in head {
+                let band = (3 * c / nc).min(2);
+                band_counts[band] += 1;
+                if band == 0 && l < cfg.n_layers / 2 {
+                    shallow_high += 1;
+                }
+                total += 1;
+            }
+        }
+    }
+    let json = Json::obj(vec![
+        ("experiment", Json::str("fig2")),
+        ("config", Json::str(cfg_name)),
+        ("r", Json::num(r as f64)),
+        ("csv", Json::str(csv_path.to_string_lossy().as_ref())),
+        ("high_band", Json::num(band_counts[0] as f64 / total as f64)),
+        ("mid_band", Json::num(band_counts[1] as f64 / total as f64)),
+        ("low_band", Json::num(band_counts[2] as f64 / total as f64)),
+        (
+            "shallow_share_of_high",
+            Json::num(if band_counts[0] > 0 {
+                shallow_high as f64 / band_counts[0] as f64
+            } else {
+                0.0
+            }),
+        ),
+    ]);
+    report::write_json(&ctx.results, &format!("fig2_{cfg_name}_r{r}"), &json)?;
+    Ok(json)
+}
+
+/// Figure 3: probe average vs uptraining proportion at several top-r.
+pub fn fig3(ctx: &ExperimentCtx, cfg_name: &str) -> Result<Json> {
+    let cfg = ModelConfig::by_name(cfg_name).context("config")?;
+    let nc = cfg.n_chunks();
+    let rs = [nc / 2, nc / 4, nc / 8];
+    let pre_tokens = ctx.pretrain_tokens(cfg_name)? as f64;
+    let steps = ctx.opts.uptrain_steps;
+    let eval_every = (steps / 4).max(1);
+    let mut series = Vec::new();
+    let mut table = Table::new(&["r", "uptrain %", "ppl"]);
+    for &r in &rs {
+        log::info!("fig3 [{cfg_name}]: r={r}");
+        let (runner, params) = ctx.converted_ropelite(cfg_name, "ropelite", r)?;
+        let (_state, rep) = ctx.uptrain(&runner, params, steps, eval_every)?;
+        let mut points = Vec::new();
+        for p in rep.points.iter().filter(|p| p.ppl.is_some()) {
+            let prop = p.tokens as f64 / pre_tokens;
+            table.row(vec![
+                r.to_string(),
+                report::fmt_pct(prop),
+                report::fmt_f(p.ppl.unwrap(), 3),
+            ]);
+            points.push(Json::obj(vec![
+                ("tokens", Json::num(p.tokens as f64)),
+                ("proportion", Json::num(prop)),
+                ("ppl", Json::num(p.ppl.unwrap())),
+            ]));
+        }
+        series.push(Json::obj(vec![
+            ("r", Json::num(r as f64)),
+            ("points", Json::Arr(points)),
+        ]));
+    }
+    table.print(&format!("Figure 3 ({cfg_name}): recovery vs uptraining"));
+    let json = Json::obj(vec![
+        ("experiment", Json::str("fig3")),
+        ("config", Json::str(cfg_name)),
+        ("pretrain_tokens", Json::num(pre_tokens)),
+        ("series", Json::Arr(series)),
+    ]);
+    report::write_json(&ctx.results, &format!("fig3_{cfg_name}"), &json)?;
+    Ok(json)
+}
+
+/// Figure 5: S-LRD vs J-LRD perplexity at fixed cache budgets
+/// (direct post-conversion ppl of a RoPElite-uptrained model).
+pub fn fig5(ctx: &ExperimentCtx, cfg_name: &str) -> Result<Json> {
+    let cfg = ModelConfig::by_name(cfg_name).context("config")?;
+    let nc = cfg.n_chunks();
+    // budgets mirror the aot core set for tiny (see aot.core_pairs)
+    let budgets: &[(usize, usize)] = &[(nc / 4, 192), (nc / 4, 128), (nc / 8, 96)];
+    let align = 16; // slrd split grid — must match aot.core_pairs exactly
+    let mut table = Table::new(&["cache/layer", "r", "method", "split", "ppl"]);
+    let mut records = Vec::new();
+    for &(r, latent_budget) in budgets {
+        let cache = 2 * r * cfg.n_heads + latent_budget;
+        // J-LRD point
+        let var_j = Variant::EliteKv { r, d_ckv: latent_budget };
+        let (runner, params, _) = ctx.converted(cfg_name, &var_j, "ropelite")?;
+        let rep = ctx.evaluate(&runner, &params)?;
+        table.row(vec![
+            cache.to_string(), r.to_string(), "J-LRD".into(), "-".into(),
+            report::fmt_f(rep.ppl, 3),
+        ]);
+        records.push(Json::obj(vec![
+            ("cache", Json::num(cache as f64)),
+            ("r", Json::num(r as f64)),
+            ("method", Json::str("jlrd")),
+            ("ppl", Json::num(rep.ppl)),
+        ]));
+        // S-LRD splits (greedy-lite over three splits, paper §4.3.2)
+        let mut best = f64::INFINITY;
+        for frac in [0.25f64, 0.5, 0.75] {
+            let ck = ((latent_budget as f64 * frac / align as f64).round()
+                as usize * align).max(align);
+            let cv = latent_budget.saturating_sub(ck);
+            if cv < align {
+                continue;
+            }
+            let var_s = Variant::Slrd { r, d_ck: ck, d_cv: cv };
+            let Ok((runner, params, _)) =
+                ctx.converted(cfg_name, &var_s, "ropelite")
+            else {
+                log::warn!("no artifact for {}; skipping", var_s.tag());
+                continue;
+            };
+            let rep = ctx.evaluate(&runner, &params)?;
+            best = best.min(rep.ppl);
+            table.row(vec![
+                cache.to_string(), r.to_string(), "S-LRD".into(),
+                format!("{ck}/{cv}"), report::fmt_f(rep.ppl, 3),
+            ]);
+            records.push(Json::obj(vec![
+                ("cache", Json::num(cache as f64)),
+                ("r", Json::num(r as f64)),
+                ("method", Json::str("slrd")),
+                ("d_ck", Json::num(ck as f64)),
+                ("d_cv", Json::num(cv as f64)),
+                ("ppl", Json::num(rep.ppl)),
+            ]));
+        }
+    }
+    table.print(&format!("Figure 5 ({cfg_name}): S-LRD vs J-LRD"));
+    let json = Json::obj(vec![
+        ("experiment", Json::str("fig5")),
+        ("config", Json::str(cfg_name)),
+        ("rows", Json::Arr(records)),
+    ]);
+    report::write_json(&ctx.results, &format!("fig5_{cfg_name}"), &json)?;
+    report::append_report(
+        &ctx.results,
+        &format!("## Figure 5 ({cfg_name})\n\n{}", table.to_markdown()),
+    )?;
+    Ok(json)
+}
+
+/// Figure 6: probe-average recovery trend during uptraining, per ratio.
+pub fn fig6(ctx: &ExperimentCtx, cfg_name: &str) -> Result<Json> {
+    let cfg = ModelConfig::by_name(cfg_name).context("config")?;
+    let grid: Vec<(String, Variant)> = table1_grid(&cfg)
+        .into_iter()
+        .filter(|(_, v)| matches!(v, Variant::EliteKv { .. }))
+        .map(|(l, v)| (l.to_string(), v))
+        .collect();
+    let steps = ctx.opts.uptrain_steps;
+    let eval_every = (steps / 4).max(1);
+    let mut series = Vec::new();
+    let mut table = Table::new(&["cache %", "tokens", "ppl"]);
+    for (label, variant) in grid {
+        log::info!("fig6 [{cfg_name}]: {label}% {}", variant.tag());
+        let (runner, params, _) = ctx.converted(cfg_name, &variant, "ropelite")?;
+        let (_state, rep) = ctx.uptrain(&runner, params, steps, eval_every)?;
+        let mut points = Vec::new();
+        for p in rep.points.iter().filter(|p| p.ppl.is_some()) {
+            table.row(vec![
+                label.clone(),
+                p.tokens.to_string(),
+                report::fmt_f(p.ppl.unwrap(), 3),
+            ]);
+            points.push(Json::obj(vec![
+                ("tokens", Json::num(p.tokens as f64)),
+                ("ppl", Json::num(p.ppl.unwrap())),
+            ]));
+        }
+        series.push(Json::obj(vec![
+            ("cache", Json::str(label.as_str())),
+            ("variant", Json::str(&variant.tag())),
+            ("points", Json::Arr(points)),
+        ]));
+    }
+    table.print(&format!("Figure 6 ({cfg_name}): recovery during uptraining"));
+    let json = Json::obj(vec![
+        ("experiment", Json::str("fig6")),
+        ("config", Json::str(cfg_name)),
+        ("series", Json::Arr(series)),
+    ]);
+    report::write_json(&ctx.results, &format!("fig6_{cfg_name}"), &json)?;
+    Ok(json)
+}
+
+/// Figure 7: relative performance loss across model scales.
+pub fn fig7(ctx: &ExperimentCtx, cfg_names: &[&str]) -> Result<Json> {
+    let mut table = Table::new(&["model", "cache %", "rel. avg loss %"]);
+    let mut records = Vec::new();
+    for &cfg_name in cfg_names {
+        let cfg = ModelConfig::by_name(cfg_name).context("config")?;
+        // baseline score
+        let (runner, params, _) =
+            ctx.converted(cfg_name, &Variant::Mha, "ropelite")?;
+        let base = ctx.evaluate(&runner, &params)?;
+        let nc = cfg.n_chunks();
+        for (label, r, frac) in [
+            ("50.0", nc / 2, 0.5f64),
+            ("25.0", nc / 4, 0.25),
+            ("12.5", nc / 8, 0.125),
+        ] {
+            let rot = 2 * r * cfg.n_heads;
+            let align = convert::allocation::alignment(&cfg);
+            let target = frac * cfg.kv_elems_per_token() as f64 - rot as f64;
+            let d_ckv = ((target / align as f64).round() as usize * align)
+                .max(align);
+            let variant = Variant::EliteKv { r, d_ckv };
+            log::info!("fig7 [{cfg_name}]: {label}% {}", variant.tag());
+            let (runner, params, _) =
+                ctx.converted(cfg_name, &variant, "ropelite")?;
+            let (state, _rep) =
+                ctx.uptrain(&runner, params, ctx.opts.uptrain_steps, 0)?;
+            let rep = ctx.evaluate(&runner, &state.params)?;
+            let rel_loss = (base.scores.average - rep.scores.average)
+                / base.scores.average.max(1e-9);
+            table.row(vec![
+                cfg_name.to_string(),
+                label.to_string(),
+                report::fmt_pct(rel_loss),
+            ]);
+            records.push(Json::obj(vec![
+                ("model", Json::str(cfg_name)),
+                ("cache", Json::str(label)),
+                ("base_avg", Json::num(base.scores.average)),
+                ("avg", Json::num(rep.scores.average)),
+                ("rel_loss", Json::num(rel_loss)),
+            ]));
+        }
+    }
+    table.print("Figure 7: relative loss across model scales");
+    let json = Json::obj(vec![
+        ("experiment", Json::str("fig7")),
+        ("rows", Json::Arr(records)),
+    ]);
+    report::write_json(&ctx.results, "fig7", &json)?;
+    report::append_report(
+        &ctx.results,
+        &format!("## Figure 7\n\n{}", table.to_markdown()),
+    )?;
+    Ok(json)
+}
+
+/// Serving benchmark: throughput/latency/cache bytes per variant — the
+/// systems-level consequence of cache compression.
+pub fn serve_bench(
+    ctx: &ExperimentCtx,
+    cfg_name: &str,
+    n_requests: usize,
+) -> Result<Json> {
+    let cfg = ModelConfig::by_name(cfg_name).context("config")?;
+    let nc = cfg.n_chunks();
+    let variants = vec![
+        Variant::Mha,
+        Variant::Gqa { n_kv_heads: cfg.n_heads / 4 },
+        Variant::EliteKv {
+            r: nc / 4,
+            d_ckv: {
+                let align = convert::allocation::alignment(&cfg);
+                let t = 0.25 * cfg.kv_elems_per_token() as f64
+                    - (2 * (nc / 4) * cfg.n_heads) as f64;
+                ((t / align as f64).round() as usize * align).max(align)
+            },
+        },
+    ];
+    let mut table = Table::new(&[
+        "variant", "cache %", "tok/s", "p50 latency ms", "p99 latency ms",
+        "peak cache KiB",
+    ]);
+    let mut records = Vec::new();
+    for variant in variants {
+        log::info!("serve_bench [{cfg_name}]: {}", variant.tag());
+        let (runner, params, _) = ctx.converted(cfg_name, &variant, "ropelite")?;
+        let ratio = variant.cache_ratio(&cfg);
+        let mut server = InferenceServer::new(runner, params, 64 << 20)?;
+        // probe-like prompts as the workload
+        let gen = CorpusGen::new(cfg.vocab, 1);
+        let probes = ProbeSet::generate(&gen, n_requests.div_ceil(6), 1234);
+        let t0 = std::time::Instant::now();
+        for (i, item) in probes.items.iter().take(n_requests).enumerate() {
+            server.submit(Request::new(
+                i as u64,
+                item.prompt.clone(),
+                GenParams { max_new_tokens: 16, ..Default::default() },
+            ));
+        }
+        let responses = server.run_to_completion()?;
+        let wall = t0.elapsed().as_secs_f64();
+        let toks: usize = responses.iter().map(|r| r.tokens.len()).sum();
+        let mut lat: Vec<f64> =
+            responses.iter().map(|r| r.latency * 1e3).collect();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p50 = crate::util::stats::percentile(&lat, 0.5);
+        let p99 = crate::util::stats::percentile(&lat, 0.99);
+        table.row(vec![
+            variant.tag(),
+            report::fmt_pct(ratio),
+            report::fmt_f(toks as f64 / wall, 1),
+            report::fmt_f(p50, 1),
+            report::fmt_f(p99, 1),
+            format!("{}", server.stats.peak_cache_bytes / 1024),
+        ]);
+        records.push(Json::obj(vec![
+            ("variant", Json::str(&variant.tag())),
+            ("cache_ratio", Json::num(ratio)),
+            ("tokens_per_s", Json::num(toks as f64 / wall)),
+            ("p50_ms", Json::num(p50)),
+            ("p99_ms", Json::num(p99)),
+            ("peak_cache_bytes",
+             Json::num(server.stats.peak_cache_bytes as f64)),
+            ("decode_steps", Json::num(server.stats.decode_steps as f64)),
+            ("completed", Json::num(server.stats.completed as f64)),
+        ]));
+    }
+    table.print(&format!("Serving benchmark ({cfg_name})"));
+    let json = Json::obj(vec![
+        ("experiment", Json::str("serve")),
+        ("config", Json::str(cfg_name)),
+        ("rows", Json::Arr(records)),
+    ]);
+    report::write_json(&ctx.results, &format!("serve_{cfg_name}"), &json)?;
+    report::append_report(
+        &ctx.results,
+        &format!("## Serving ({cfg_name})\n\n{}", table.to_markdown()),
+    )?;
+    Ok(json)
+}

@@ -1,0 +1,86 @@
+//! Micro-benchmark runner (criterion-core substitute): warmup + timed
+//! iterations + summary statistics, with a stable one-line report format
+//! that `cargo bench` emits for every paper table/figure target.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// Benchmark settings.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchOpts {
+    pub warmup_iters: usize,
+    pub iters: usize,
+}
+
+impl Default for BenchOpts {
+    fn default() -> BenchOpts {
+        BenchOpts { warmup_iters: 3, iters: 10 }
+    }
+}
+
+/// Measure `f` and report milliseconds per iteration.
+pub fn bench<F: FnMut()>(name: &str, opts: BenchOpts, mut f: F) -> Summary {
+    for _ in 0..opts.warmup_iters {
+        f();
+    }
+    let samples: Vec<f64> = (0..opts.iters)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64() * 1e3
+        })
+        .collect();
+    let s = Summary::of(&samples);
+    println!("bench {name:<44} {}", s.fmt("ms"));
+    s
+}
+
+/// Measure throughput: `f` returns a work count per call (e.g. tokens).
+pub fn bench_throughput<F: FnMut() -> usize>(
+    name: &str,
+    opts: BenchOpts,
+    unit: &str,
+    mut f: F,
+) -> f64 {
+    for _ in 0..opts.warmup_iters {
+        f();
+    }
+    let mut total_work = 0usize;
+    let t0 = Instant::now();
+    for _ in 0..opts.iters {
+        total_work += f();
+    }
+    let rate = total_work as f64 / t0.elapsed().as_secs_f64();
+    println!("bench {name:<44} {rate:10.1} {unit}/s");
+    rate
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_positive_times() {
+        let s = bench(
+            "noop-spin",
+            BenchOpts { warmup_iters: 1, iters: 5 },
+            || {
+                std::hint::black_box((0..1000).sum::<u64>());
+            },
+        );
+        assert!(s.mean >= 0.0);
+        assert_eq!(s.n, 5);
+    }
+
+    #[test]
+    fn throughput_counts_work() {
+        let r = bench_throughput(
+            "fixed-work",
+            BenchOpts { warmup_iters: 0, iters: 3 },
+            "items",
+            || 100,
+        );
+        assert!(r > 0.0);
+    }
+}

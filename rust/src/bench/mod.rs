@@ -1,0 +1,15 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation (DESIGN.md §7 experiment index) on the in-repo model family.
+//!
+//! Each experiment writes `results/<id>.json` (machine-readable series)
+//! and prints a markdown table mirroring the paper's layout. Shared
+//! stages (pretraining, RoPElite search) are cached on disk so the sweep
+//! can resume.
+
+pub mod experiments;
+pub mod microbench;
+pub mod pipeline;
+pub mod report;
+
+pub use microbench::{bench, bench_throughput, BenchOpts};
+pub use pipeline::ExperimentCtx;

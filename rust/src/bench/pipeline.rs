@@ -1,0 +1,261 @@
+//! Shared experiment stages with on-disk caching: pretraining, search,
+//! conversion, uptraining, evaluation.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::config::{ModelConfig, Variant};
+use crate::convert::{self, EliteSelection};
+use crate::data::{CorpusGen, ProbeSet};
+use crate::io::Checkpoint;
+use crate::runtime::{Engine, HostTensor, ModelRunner, TrainState};
+use crate::search;
+use crate::train::scorer;
+use crate::train::{TrainLoop, TrainOpts};
+
+/// Knobs for the whole experiment sweep.
+#[derive(Clone, Debug)]
+pub struct SweepOpts {
+    pub pretrain_steps: usize,
+    pub uptrain_steps: usize,
+    pub pretrain_lr: f32,
+    /// Paper §4.1: constant LR at the end-of-pretraining value.
+    pub uptrain_lr: f32,
+    pub probes_per_task: usize,
+    pub ppl_batches: usize,
+}
+
+impl SweepOpts {
+    /// Quick mode: tens of minutes on one CPU core; the paper's *shapes*
+    /// (who wins, how gaps widen as cache shrinks) hold at this budget.
+    pub fn quick() -> SweepOpts {
+        SweepOpts {
+            pretrain_steps: 600,
+            uptrain_steps: 100,
+            pretrain_lr: 1e-3,
+            uptrain_lr: 3e-4,
+            probes_per_task: 20,
+            ppl_batches: 3,
+        }
+    }
+
+    pub fn full() -> SweepOpts {
+        SweepOpts {
+            pretrain_steps: 1200,
+            uptrain_steps: 240,
+            pretrain_lr: 1e-3,
+            uptrain_lr: 3e-4,
+            probes_per_task: 50,
+            ppl_batches: 8,
+        }
+    }
+}
+
+/// Engine + directories + caching for experiment stages.
+pub struct ExperimentCtx {
+    pub engine: Arc<Engine>,
+    pub artifacts: PathBuf,
+    pub results: PathBuf,
+    pub opts: SweepOpts,
+}
+
+impl ExperimentCtx {
+    pub fn new(
+        artifacts: impl Into<PathBuf>,
+        results: impl Into<PathBuf>,
+        opts: SweepOpts,
+    ) -> Result<ExperimentCtx> {
+        let results = results.into();
+        std::fs::create_dir_all(&results)?;
+        Ok(ExperimentCtx {
+            engine: Arc::new(Engine::new()?),
+            artifacts: artifacts.into(),
+            results,
+            opts,
+        })
+    }
+
+    pub fn runner(&self, cfg: &str, tag: &str) -> Result<ModelRunner> {
+        ModelRunner::new(Arc::clone(&self.engine), &self.artifacts, cfg, tag)
+    }
+
+    /// Pretrain (or load the cached) baseline MHA model for a config.
+    pub fn pretrained(&self, cfg_name: &str) -> Result<Checkpoint> {
+        let path = self.results.join(format!("pretrained_{cfg_name}.ekvc"));
+        if path.exists() {
+            log::info!("using cached {path:?}");
+            return Checkpoint::load(&path);
+        }
+        let runner = self.runner(cfg_name, "mha")?;
+        log::info!("pretraining {cfg_name} for {} steps",
+                   self.opts.pretrain_steps);
+        let params = runner.init(42)?;
+        let mut state = TrainState::fresh(params);
+        let opts = TrainOpts {
+            steps: self.opts.pretrain_steps,
+            lr: self.opts.pretrain_lr,
+            eval_every: 0,
+            eval_batches: self.opts.ppl_batches,
+            log_every: 50,
+            data_seed: 1,
+        };
+        let mut lp = TrainLoop::new(&runner, &opts);
+        let report = lp.run(&mut state, &opts)?;
+        log::info!(
+            "pretrain {cfg_name}: loss {:.3}, ppl {:.2}, {:.0}s",
+            report.final_loss, report.final_ppl, report.seconds
+        );
+        let mut ckpt = runner.ckpt_from_params(&state.params)?;
+        ckpt.set_meta("pretrain_steps", self.opts.pretrain_steps);
+        ckpt.set_meta("pretrain_tokens", report.tokens_seen);
+        ckpt.save(&path)?;
+        Ok(ckpt)
+    }
+
+    /// RoPElite / baseline chunk selection with caching.
+    pub fn selection(
+        &self,
+        cfg_name: &str,
+        method: &str,
+        r: usize,
+    ) -> Result<EliteSelection> {
+        let cfg = ModelConfig::by_name(cfg_name).context("config")?;
+        if method == "uniform" {
+            return Ok(search::uniform_selection(&cfg, r));
+        }
+        let path = self
+            .results
+            .join(format!("elite_{cfg_name}_{method}_r{r}.ekvc"));
+        if path.exists() {
+            return EliteSelection::from_checkpoint(&Checkpoint::load(&path)?,
+                                                   &cfg);
+        }
+        let base = self.pretrained(cfg_name)?;
+        let runner = self.runner(cfg_name, "mha")?;
+        let params = runner.params_from_ckpt(&base)?;
+        let mut gen = CorpusGen::new(cfg.vocab, 1);
+        gen.reseed(1, 0xca11b); // calibration stream
+        let sel = match method {
+            "ropelite" => search::ropelite_search(&runner, &params, &mut gen, r)?,
+            "contribution" => {
+                search::contribution_selection(&runner, &params, &mut gen, r)?
+            }
+            m => anyhow::bail!("unknown search method `{m}`"),
+        };
+        sel.to_checkpoint(&cfg).save(&path)?;
+        Ok(sel)
+    }
+
+    /// Build a ready-to-run ModelRunner for a converted variant: converts
+    /// the pretrained baseline, installs extras, returns (runner, params).
+    pub fn converted(
+        &self,
+        cfg_name: &str,
+        variant: &Variant,
+        method: &str,
+    ) -> Result<(ModelRunner, Vec<HostTensor>, Option<EliteSelection>)> {
+        let cfg = ModelConfig::by_name(cfg_name).context("config")?;
+        let base = self.pretrained(cfg_name)?;
+        let tag = variant.tag();
+        let mut runner = self.runner(cfg_name, &tag)?;
+        match variant {
+            Variant::Mha => {
+                let params = runner.params_from_ckpt(&base)?;
+                Ok((runner, params, None))
+            }
+            Variant::RopeLite => {
+                anyhow::bail!("use converted_ropelite with an explicit r")
+            }
+            Variant::Gqa { n_kv_heads } => {
+                let ckpt = convert::convert_gqa(&cfg, &base, *n_kv_heads)?;
+                let params = runner.params_from_ckpt(&ckpt)?;
+                Ok((runner, params, None))
+            }
+            Variant::EliteKv { r, d_ckv } => {
+                let sel = self.selection(cfg_name, method, *r)?;
+                let ckpt = convert::convert_elitekv(&cfg, &base, &sel, *d_ckv)?;
+                let params = runner.params_from_ckpt(&ckpt)?;
+                let theta = convert::elitekv::elite_thetas_flat(&cfg, &sel);
+                runner.set_extras(vec![HostTensor::F32(
+                    theta,
+                    vec![cfg.n_layers, cfg.n_heads, *r],
+                )])?;
+                Ok((runner, params, Some(sel)))
+            }
+            Variant::Slrd { r, d_ck, d_cv } => {
+                let sel = self.selection(cfg_name, method, *r)?;
+                let ckpt = convert::convert_slrd(&cfg, &base, &sel, *d_ck, *d_cv)?;
+                let params = runner.params_from_ckpt(&ckpt)?;
+                let theta = convert::elitekv::elite_thetas_flat(&cfg, &sel);
+                runner.set_extras(vec![HostTensor::F32(
+                    theta,
+                    vec![cfg.n_layers, cfg.n_heads, *r],
+                )])?;
+                Ok((runner, params, Some(sel)))
+            }
+        }
+    }
+
+    /// RoPElite-only model (mask extras, weights unchanged).
+    pub fn converted_ropelite(
+        &self,
+        cfg_name: &str,
+        method: &str,
+        r: usize,
+    ) -> Result<(ModelRunner, Vec<HostTensor>)> {
+        let cfg = ModelConfig::by_name(cfg_name).context("config")?;
+        let base = self.pretrained(cfg_name)?;
+        let sel = self.selection(cfg_name, method, r)?;
+        let mut runner = self.runner(cfg_name, "ropelite")?;
+        let mask = convert::elitekv::elite_mask_flat(&cfg, &sel);
+        runner.set_extras(vec![HostTensor::F32(
+            mask,
+            vec![cfg.n_layers, cfg.n_heads, cfg.n_chunks()],
+        )])?;
+        let params = runner.params_from_ckpt(&base)?;
+        Ok((runner, params))
+    }
+
+    /// Uptrain a converted model for the sweep's uptrain budget.
+    /// Returns the trained state + report.
+    pub fn uptrain(
+        &self,
+        runner: &ModelRunner,
+        params: Vec<HostTensor>,
+        steps: usize,
+        eval_every: usize,
+    ) -> Result<(TrainState, crate::train::TrainReport)> {
+        let mut state = TrainState::fresh(params);
+        let opts = TrainOpts {
+            steps,
+            lr: self.opts.uptrain_lr,
+            eval_every,
+            eval_batches: self.opts.ppl_batches,
+            log_every: 50,
+            data_seed: 7, // uptraining stream differs from pretraining
+        };
+        let mut lp = TrainLoop::new(runner, &opts);
+        let report = lp.run(&mut state, &opts)?;
+        Ok((state, report))
+    }
+
+    /// The standard evaluation bundle (probe battery + holdout ppl).
+    pub fn evaluate(
+        &self,
+        runner: &ModelRunner,
+        params: &[HostTensor],
+    ) -> Result<scorer::ScoreReport> {
+        let gen = CorpusGen::new(runner.manifest.config.vocab, 1);
+        let probes = ProbeSet::generate(&gen, self.opts.probes_per_task, 99);
+        scorer::full_report(runner, params, &probes, self.opts.ppl_batches)
+    }
+
+    /// Tokens per pretraining run (for "uptraining proportion" axes).
+    pub fn pretrain_tokens(&self, cfg_name: &str) -> Result<usize> {
+        let runner = self.runner(cfg_name, "mha")?;
+        let (b, t) = runner.train_shape()?;
+        Ok(self.opts.pretrain_steps * b * t)
+    }
+}

@@ -1,0 +1,95 @@
+//! Result output: markdown tables + JSON series files.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::Json;
+
+/// A markdown table builder (paper-style rows).
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("| {} |\n", self.header.join(" | ")));
+        out.push_str(&format!(
+            "|{}\n",
+            "---|".repeat(self.header.len())
+        ));
+        for r in &self.rows {
+            out.push_str(&format!("| {} |\n", r.join(" | ")));
+        }
+        out
+    }
+
+    pub fn print(&self, title: &str) {
+        println!("\n## {title}\n");
+        println!("{}", self.to_markdown());
+    }
+}
+
+/// Write a JSON result record to `<results>/<name>.json`.
+pub fn write_json(results: &Path, name: &str, value: &Json) -> Result<()> {
+    let path = results.join(format!("{name}.json"));
+    std::fs::write(&path, value.to_string())?;
+    log::info!("wrote {path:?}");
+    Ok(())
+}
+
+/// Append a markdown section to `<results>/REPORT.md`.
+pub fn append_report(results: &Path, section: &str) -> Result<()> {
+    use std::io::Write;
+    let path = results.join("REPORT.md");
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)?;
+    writeln!(f, "{section}")?;
+    Ok(())
+}
+
+pub fn fmt_pct(x: f64) -> String {
+    format!("{:.2}", 100.0 * x)
+}
+
+pub fn fmt_f(x: f64, prec: usize) -> String {
+    format!("{x:.prec$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_layout() {
+        let mut t = Table::new(&["Cache", "Method", "Avg"]);
+        t.row(vec!["100.0".into(), "mha".into(), "58.1".into()]);
+        let md = t.to_markdown();
+        assert!(md.starts_with("| Cache | Method | Avg |\n"));
+        assert!(md.contains("|---|---|---|"));
+        assert!(md.contains("| 100.0 | mha | 58.1 |"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["x".into()]);
+    }
+}

@@ -1,0 +1,147 @@
+//! Command-line argument parser substrate (offline substitute for clap).
+//!
+//! Grammar: `elitekv <command> [subcommand] [--flag value] [--switch] [pos]`.
+//! Flags may appear anywhere after the command. Values parse on demand.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line: positionals + `--key value` / `--switch` flags.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare `--` not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn pos(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(|s| s.as_str())
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{key} expects an integer, got `{v}`")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{key} expects an integer, got `{v}`")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{key} expects a float, got `{v}`")),
+        }
+    }
+
+    /// Required flag.
+    pub fn req(&self, key: &str) -> Result<&str> {
+        self.get(key)
+            .with_context(|| format!("missing required flag --{key}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        // NOTE: flags greedily take the next non-flag token as their value,
+        // so positionals go before trailing switches (or use --switch=val).
+        let a = parse("train ckpt.ekvc --config small --steps 100 --verbose");
+        assert_eq!(a.pos(0), Some("train"));
+        assert_eq!(a.pos(1), Some("ckpt.ekvc"));
+        assert_eq!(a.get("config"), Some("small"));
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 100);
+        assert!(a.has("verbose"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("serve --batch=8 --lr=0.001");
+        assert_eq!(a.usize_or("batch", 0).unwrap(), 8);
+        assert!((a.f64_or("lr", 0.0).unwrap() - 0.001).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse("eval --fast");
+        assert!(a.has("fast"));
+        assert_eq!(a.get("fast"), None);
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse("x --steps abc");
+        assert!(a.usize_or("steps", 0).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("x");
+        assert_eq!(a.usize_or("steps", 42).unwrap(), 42);
+        assert_eq!(a.str_or("config", "tiny"), "tiny");
+    }
+}

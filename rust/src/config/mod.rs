@@ -1,0 +1,245 @@
+//! Model family and variant configuration (mirrors python/compile/configs.py
+//! — the manifest produced by aot.py is the authoritative source at runtime;
+//! this module provides the same grids for planning and experiments).
+
+/// Static shape of one model in the family.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub d_ffn: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub rope_base: f64,
+}
+
+impl ModelConfig {
+    /// Number of 2-D RoPE chunks per head (|I| in the paper).
+    pub fn n_chunks(&self) -> usize {
+        self.d_head / 2
+    }
+
+    /// Vanilla KV cache elements per token per layer.
+    pub fn kv_elems_per_token(&self) -> usize {
+        2 * self.n_heads * self.d_head
+    }
+
+    pub fn tiny() -> ModelConfig {
+        ModelConfig {
+            name: "tiny".into(), d_model: 256, n_layers: 4, n_heads: 8,
+            d_head: 32, d_ffn: 704, vocab: 512, max_seq: 256,
+            rope_base: 10000.0,
+        }
+    }
+
+    pub fn small() -> ModelConfig {
+        ModelConfig {
+            name: "small".into(), d_model: 512, n_layers: 8, n_heads: 8,
+            d_head: 64, d_ffn: 1408, vocab: 512, max_seq: 256,
+            rope_base: 10000.0,
+        }
+    }
+
+    pub fn m100() -> ModelConfig {
+        ModelConfig {
+            name: "100m".into(), d_model: 768, n_layers: 12, n_heads: 12,
+            d_head: 64, d_ffn: 2048, vocab: 2048, max_seq: 256,
+            rope_base: 10000.0,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<ModelConfig> {
+        match name {
+            "tiny" => Some(Self::tiny()),
+            "small" => Some(Self::small()),
+            "100m" => Some(Self::m100()),
+            _ => None,
+        }
+    }
+
+    /// Approximate parameter count (tied embeddings).
+    pub fn approx_params(&self) -> usize {
+        let d = self.d_model;
+        let per_layer = 4 * d * self.n_heads * self.d_head / self.n_heads
+            * self.n_heads // attn (wq,wk,wv,wo at full width)
+            + 3 * d * self.d_ffn
+            + 2 * d;
+        self.vocab * d + self.n_layers * per_layer + d
+    }
+}
+
+/// Architecture variant (paper §3). Mirrors `configs.Variant`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Variant {
+    Mha,
+    RopeLite,
+    Gqa { n_kv_heads: usize },
+    EliteKv { r: usize, d_ckv: usize },
+    Slrd { r: usize, d_ck: usize, d_cv: usize },
+}
+
+impl Variant {
+    pub fn tag(&self) -> String {
+        match self {
+            Variant::Mha => "mha".into(),
+            Variant::RopeLite => "ropelite".into(),
+            Variant::Gqa { n_kv_heads } => format!("gqa{n_kv_heads}"),
+            Variant::EliteKv { r, d_ckv } => format!("elitekv_r{r}_c{d_ckv}"),
+            Variant::Slrd { r, d_ck, d_cv } => {
+                format!("slrd_r{r}_ck{d_ck}_cv{d_cv}")
+            }
+        }
+    }
+
+    pub fn parse(tag: &str) -> Option<Variant> {
+        if tag == "mha" {
+            return Some(Variant::Mha);
+        }
+        if tag == "ropelite" {
+            return Some(Variant::RopeLite);
+        }
+        if let Some(rest) = tag.strip_prefix("gqa") {
+            return rest.parse().ok().map(|g| Variant::Gqa { n_kv_heads: g });
+        }
+        if let Some(rest) = tag.strip_prefix("elitekv_r") {
+            let (r, c) = rest.split_once("_c")?;
+            return Some(Variant::EliteKv {
+                r: r.parse().ok()?,
+                d_ckv: c.parse().ok()?,
+            });
+        }
+        if let Some(rest) = tag.strip_prefix("slrd_r") {
+            let (r, rest) = rest.split_once("_ck")?;
+            let (ck, cv) = rest.split_once("_cv")?;
+            return Some(Variant::Slrd {
+                r: r.parse().ok()?,
+                d_ck: ck.parse().ok()?,
+                d_cv: cv.parse().ok()?,
+            });
+        }
+        None
+    }
+
+    /// KV cache elements per token per layer (paper §3.2 formulas).
+    pub fn cache_per_token(&self, cfg: &ModelConfig) -> usize {
+        match self {
+            Variant::Mha | Variant::RopeLite => cfg.kv_elems_per_token(),
+            Variant::Gqa { n_kv_heads } => 2 * n_kv_heads * cfg.d_head,
+            Variant::EliteKv { r, d_ckv } => 2 * r * cfg.n_heads + d_ckv,
+            Variant::Slrd { r, d_ck, d_cv } => {
+                2 * r * cfg.n_heads + d_ck + d_cv
+            }
+        }
+    }
+
+    pub fn cache_ratio(&self, cfg: &ModelConfig) -> f64 {
+        self.cache_per_token(cfg) as f64 / cfg.kv_elems_per_token() as f64
+    }
+
+    /// KV-projection parameter count per layer (paper §3.2 storage cost).
+    pub fn storage_cost(&self, cfg: &ModelConfig) -> usize {
+        let (d, nh, dh) = (cfg.d_model, cfg.n_heads, cfg.d_head);
+        match self {
+            Variant::Mha | Variant::RopeLite => 2 * d * nh * dh,
+            Variant::Gqa { n_kv_heads } => 2 * d * n_kv_heads * dh,
+            Variant::EliteKv { r, d_ckv } => {
+                2 * r * nh * d + d_ckv * (d + 2 * dh * nh - 2 * r * nh)
+            }
+            Variant::Slrd { r, d_ck, d_cv } => {
+                2 * r * nh * d
+                    + d_ck * (d + dh * nh - 2 * r * nh)
+                    + d_cv * (d + dh * nh)
+            }
+        }
+    }
+
+    /// Elite chunks per head, if the variant has them.
+    pub fn r(&self) -> Option<usize> {
+        match self {
+            Variant::EliteKv { r, .. } | Variant::Slrd { r, .. } => Some(*r),
+            _ => None,
+        }
+    }
+}
+
+/// The paper's Table-1 cache-ratio grid realized for a config
+/// (label, variant) — mirrors configs.table1_grid.
+pub fn table1_grid(cfg: &ModelConfig) -> Vec<(&'static str, Variant)> {
+    let nc = cfg.n_chunks();
+    let g = |ratio: f64, r: usize| {
+        let align = if cfg.d_model >= 512 { 32 } else { 16 };
+        let target =
+            ratio * cfg.kv_elems_per_token() as f64 - (2 * r * cfg.n_heads) as f64;
+        let c = ((target / align as f64).round() as usize * align).max(align);
+        Variant::EliteKv { r, d_ckv: c }
+    };
+    vec![
+        ("100.0", Variant::Mha),
+        ("50.0", Variant::EliteKv { r: nc / 2, d_ckv: cfg.d_model / 2 }),
+        ("50.0", Variant::Gqa { n_kv_heads: cfg.n_heads / 2 }),
+        ("34.4", g(0.344, nc / 4)),
+        ("28.1", g(0.281, nc / 4)),
+        ("25.0", g(0.25, nc / 4)),
+        ("25.0", Variant::Gqa { n_kv_heads: cfg.n_heads / 4 }),
+        ("21.9", g(0.219, nc / 8)),
+        ("12.5", g(0.125, nc / 8)),
+        ("12.5", Variant::Gqa { n_kv_heads: 1 }),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tag_roundtrip() {
+        for v in [
+            Variant::Mha,
+            Variant::RopeLite,
+            Variant::Gqa { n_kv_heads: 2 },
+            Variant::EliteKv { r: 8, d_ckv: 128 },
+            Variant::Slrd { r: 4, d_ck: 32, d_cv: 64 },
+        ] {
+            assert_eq!(Variant::parse(&v.tag()), Some(v));
+        }
+        assert_eq!(Variant::parse("bogus"), None);
+    }
+
+    #[test]
+    fn table1_ratios_match_labels() {
+        for cfg in [ModelConfig::tiny(), ModelConfig::small()] {
+            for (label, var) in table1_grid(&cfg) {
+                let want: f64 = label.parse::<f64>().unwrap() / 100.0;
+                let got = var.cache_ratio(&cfg);
+                assert!(
+                    (got - want).abs() < 0.005,
+                    "{} {}: {} vs {}", cfg.name, var.tag(), got, want
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn jlrd_storage_simplification() {
+        // 2 r nh d + d_ckv (d + 2 dh nh − 2 r nh) == 2 r nh d + 3 c d − 2 c r nh
+        // under the MHA assumption d = nh * dh.
+        let cfg = ModelConfig::small();
+        assert_eq!(cfg.d_model, cfg.n_heads * cfg.d_head);
+        let v = Variant::EliteKv { r: 8, d_ckv: 160 };
+        let got = v.storage_cost(&cfg);
+        let d = cfg.d_model;
+        let rn = 8 * cfg.n_heads;
+        assert_eq!(got, 2 * rn * d + 3 * 160 * d - 2 * 160 * rn);
+    }
+
+    #[test]
+    fn configs_resolve_by_name() {
+        assert_eq!(ModelConfig::by_name("tiny").unwrap().d_model, 256);
+        assert_eq!(ModelConfig::by_name("small").unwrap().n_layers, 8);
+        assert_eq!(ModelConfig::by_name("100m").unwrap().n_heads, 12);
+        assert!(ModelConfig::by_name("7b").is_none());
+    }
+}

@@ -1,0 +1,154 @@
+//! Appendix-C dimension allocation: pick (r, d_ckv) for a target KV-cache
+//! budget under the paper's three filters —
+//!   1. hardware-friendly: d_ckv aligned (multiple of 128 on H100 tensor
+//!      cores; scaled to 32/16 at our widths),
+//!   2. no additional parameters: storage_cost(variant) <= storage_cost(mha),
+//!   3. lower perplexity: the caller evaluates the shortlisted candidates
+//!      on a holdout set and keeps the best.
+
+use crate::config::{ModelConfig, Variant};
+
+/// One shortlisted (r, d_ckv) configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AllocationCandidate {
+    pub variant: Variant,
+    /// Exact cache elements per token per layer.
+    pub cache_per_token: usize,
+    /// Deviation from the requested budget (elements).
+    pub budget_error: usize,
+    /// KV-projection parameter delta vs. the MHA baseline (<= 0 required
+    /// by the no-extra-params rule).
+    pub param_delta: i64,
+}
+
+/// The alignment granularity for d_ckv at this model width (the paper's
+/// multiple-of-128 rule scaled down).
+pub fn alignment(cfg: &ModelConfig) -> usize {
+    if cfg.d_model >= 512 {
+        32
+    } else {
+        16
+    }
+}
+
+/// Enumerate candidates whose cache/token/layer lands within `tol` of
+/// `budget` elements, obeying alignment + no-extra-params. Sorted by
+/// |budget error| then by more elite chunks (higher r preserves more
+/// rotation capacity at equal cache).
+pub fn enumerate_configs(
+    cfg: &ModelConfig,
+    budget: usize,
+    tol: usize,
+) -> Vec<AllocationCandidate> {
+    let align = alignment(cfg);
+    let base_cost = Variant::Mha.storage_cost(cfg) as i64;
+    let mut out = Vec::new();
+    let nc = cfg.n_chunks();
+    for r in 1..=nc {
+        let rot = 2 * r * cfg.n_heads;
+        if rot >= budget + tol {
+            continue;
+        }
+        let lo = budget.saturating_sub(tol).saturating_sub(rot);
+        let hi = budget + tol - rot;
+        let mut c = lo.div_ceil(align).max(1) * align;
+        while c <= hi {
+            let variant = Variant::EliteKv { r, d_ckv: c };
+            let cache = variant.cache_per_token(cfg);
+            let delta = variant.storage_cost(cfg) as i64 - base_cost;
+            if delta <= 0 {
+                out.push(AllocationCandidate {
+                    cache_per_token: cache,
+                    budget_error: cache.abs_diff(budget),
+                    param_delta: delta,
+                    variant,
+                });
+            }
+            c += align;
+        }
+    }
+    out.sort_by_key(|c| {
+        (
+            c.budget_error,
+            std::cmp::Reverse(c.variant.r().unwrap_or(0)),
+        )
+    });
+    out
+}
+
+/// Pick the candidate minimizing a caller-supplied objective (Appendix C's
+/// "lower perplexity" filter; the objective usually runs eval_loss).
+pub fn best_by<F: FnMut(&AllocationCandidate) -> f64>(
+    candidates: &[AllocationCandidate],
+    max_evals: usize,
+    mut objective: F,
+) -> Option<(AllocationCandidate, f64)> {
+    candidates
+        .iter()
+        .take(max_evals)
+        .map(|c| (c.clone(), objective(c)))
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn candidates_respect_all_filters() {
+        let cfg = ModelConfig::small();
+        let budget = cfg.kv_elems_per_token() / 4; // 25 %
+        let cands = enumerate_configs(&cfg, budget, 16);
+        assert!(!cands.is_empty());
+        let base = Variant::Mha.storage_cost(&cfg) as i64;
+        for c in &cands {
+            let Variant::EliteKv { r, d_ckv } = c.variant else { panic!() };
+            assert_eq!(d_ckv % alignment(&cfg), 0, "alignment");
+            assert!(c.variant.storage_cost(&cfg) as i64 <= base, "params");
+            assert!(c.cache_per_token.abs_diff(budget) <= 16, "budget");
+            assert!(r >= 1 && r <= cfg.n_chunks());
+        }
+    }
+
+    #[test]
+    fn sorted_by_budget_error() {
+        let cfg = ModelConfig::small();
+        let cands = enumerate_configs(&cfg, 256, 32);
+        for w in cands.windows(2) {
+            assert!(w[0].budget_error <= w[1].budget_error);
+        }
+    }
+
+    #[test]
+    fn table1_points_are_enumerable() {
+        // The grid used in Table 1 must appear among candidates.
+        let cfg = ModelConfig::small();
+        for (budget, r, c) in [(512, 16, 256), (256, 8, 128), (128, 4, 64)] {
+            let cands = enumerate_configs(&cfg, budget, 8);
+            assert!(
+                cands
+                    .iter()
+                    .any(|x| x.variant == Variant::EliteKv { r, d_ckv: c }),
+                "missing r={r} c={c} at budget {budget}"
+            );
+        }
+    }
+
+    #[test]
+    fn best_by_picks_minimum() {
+        let cfg = ModelConfig::small();
+        let cands = enumerate_configs(&cfg, 256, 32);
+        let (best, val) =
+            best_by(&cands, 10, |c| c.variant.r().unwrap() as f64).unwrap();
+        assert_eq!(val, best.variant.r().unwrap() as f64);
+        for c in cands.iter().take(10) {
+            assert!(c.variant.r().unwrap() as f64 >= val);
+        }
+    }
+
+    #[test]
+    fn tiny_uses_finer_alignment() {
+        assert_eq!(alignment(&ModelConfig::tiny()), 16);
+        assert_eq!(alignment(&ModelConfig::small()), 32);
+    }
+}

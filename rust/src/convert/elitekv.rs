@@ -1,0 +1,418 @@
+//! EliteKV weight surgery (paper §3.2): permute elite chunks to the front
+//! of each head, split the key projection into rotated/non-rotated parts,
+//! and factorize [W^k_ne | W^v] jointly (J-LRD) or separately (S-LRD).
+//!
+//! Layout contract shared with python/compile/lrd.py (the pytest oracle)
+//! and model.py's elitekv variant:
+//!   wq   — per-head columns reordered: elite chunk dims first (selection
+//!          order), then non-elite ascending; chunk c = dims (2c, 2c+1)
+//!   wk_e — elite column pairs of wk                  [d, nh*2r]
+//!   a_kv — shared down-projection                    [d, d_ckv]
+//!   b_k  — non-elite key up-projection               [d_ckv, nh*(dh-2r)]
+//!   b_v  — value up-projection                       [d_ckv, nh*dh]
+//! and the runtime extra theta_e[l,h,i] = base^(-e_i/nc).
+
+use anyhow::{bail, Result};
+
+use crate::config::ModelConfig;
+use crate::io::Checkpoint;
+use crate::linalg::svd_truncate;
+use crate::tensor::Tensor;
+
+/// Elite chunk selection: per layer, per head, `r` chunk indices in
+/// greedy-selection order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct EliteSelection {
+    pub chunks: Vec<Vec<Vec<usize>>>, // [L][nh][r]
+}
+
+impl EliteSelection {
+    pub fn r(&self) -> usize {
+        self.chunks[0][0].len()
+    }
+
+    pub fn validate(&self, cfg: &ModelConfig) -> Result<()> {
+        if self.chunks.len() != cfg.n_layers {
+            bail!("selection has {} layers, model {}", self.chunks.len(),
+                  cfg.n_layers);
+        }
+        let r = self.r();
+        for (l, layer) in self.chunks.iter().enumerate() {
+            if layer.len() != cfg.n_heads {
+                bail!("layer {l}: {} heads, model {}", layer.len(),
+                      cfg.n_heads);
+            }
+            for (h, head) in layer.iter().enumerate() {
+                if head.len() != r {
+                    bail!("layer {l} head {h}: ragged r");
+                }
+                let mut seen = std::collections::HashSet::new();
+                for &c in head {
+                    if c >= cfg.n_chunks() || !seen.insert(c) {
+                        bail!("layer {l} head {h}: bad chunk {c}");
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Persist into checkpoint-compatible tensors (one [nh, r] per layer).
+    pub fn to_checkpoint(&self, cfg: &ModelConfig) -> Checkpoint {
+        let mut ckpt = Checkpoint::new();
+        ckpt.set_meta("kind", "elite_selection");
+        ckpt.set_meta("r", self.r());
+        for (l, layer) in self.chunks.iter().enumerate() {
+            let mut data = Vec::with_capacity(cfg.n_heads * self.r());
+            for head in layer {
+                data.extend(head.iter().map(|&c| c as f32));
+            }
+            ckpt.insert(
+                &format!("elite.l{l}"),
+                Tensor::new(vec![cfg.n_heads, self.r()], data),
+            );
+        }
+        ckpt
+    }
+
+    pub fn from_checkpoint(ckpt: &Checkpoint, cfg: &ModelConfig) -> Result<EliteSelection> {
+        let mut chunks = Vec::with_capacity(cfg.n_layers);
+        for l in 0..cfg.n_layers {
+            let t = ckpt.get(&format!("elite.l{l}"))?;
+            let r = t.shape[1];
+            let mut layer = Vec::with_capacity(cfg.n_heads);
+            for h in 0..cfg.n_heads {
+                layer.push(
+                    (0..r).map(|i| t.at2(h, i) as usize).collect::<Vec<_>>(),
+                );
+            }
+            chunks.push(layer);
+        }
+        let sel = EliteSelection { chunks };
+        sel.validate(cfg)?;
+        Ok(sel)
+    }
+}
+
+/// Column permutation for one head: elite chunk dims first (selection
+/// order), then remaining chunks ascending.
+pub fn head_permutation(elite: &[usize], d_head: usize) -> Vec<usize> {
+    let nc = d_head / 2;
+    let eset: std::collections::HashSet<usize> = elite.iter().copied().collect();
+    let mut order: Vec<usize> = elite.to_vec();
+    order.extend((0..nc).filter(|c| !eset.contains(c)));
+    let mut cols = Vec::with_capacity(d_head);
+    for c in order {
+        cols.push(2 * c);
+        cols.push(2 * c + 1);
+    }
+    cols
+}
+
+/// Apply per-head column permutations to a [d, nh*dh] projection matrix.
+pub fn permute_heads(
+    w: &Tensor,
+    elite_l: &[Vec<usize>],
+    _n_heads: usize,
+    d_head: usize,
+) -> Tensor {
+    let idx: Vec<usize> = elite_l
+        .iter()
+        .enumerate()
+        .flat_map(|(h, e)| {
+            head_permutation(e, d_head)
+                .into_iter()
+                .map(move |c| h * d_head + c)
+        })
+        .collect();
+    w.gather_cols(&idx)
+}
+
+fn copied_layers(cfg: &ModelConfig) -> [&'static str; 6] {
+    let _ = cfg;
+    ["attn_norm", "wo", "ffn_norm", "w1", "w2", "w3"]
+}
+
+/// MHA checkpoint -> EliteKV (J-LRD) checkpoint.
+pub fn convert_elitekv(
+    cfg: &ModelConfig,
+    mha: &Checkpoint,
+    elite: &EliteSelection,
+    d_ckv: usize,
+) -> Result<Checkpoint> {
+    elite.validate(cfg)?;
+    let (nh, dh) = (cfg.n_heads, cfg.d_head);
+    let r2 = 2 * elite.r();
+    let mut out = Checkpoint::new();
+    out.set_meta("config", &cfg.name);
+    out.set_meta("variant", format!("elitekv_r{}_c{}", elite.r(), d_ckv));
+    out.insert("embed", mha.get("embed")?.clone());
+    out.insert("final_norm", mha.get("final_norm")?.clone());
+    for l in 0..cfg.n_layers {
+        let p = format!("l{l}.");
+        let wq = permute_heads(mha.get(&format!("{p}wq"))?, &elite.chunks[l], nh, dh);
+        let wk = permute_heads(mha.get(&format!("{p}wk"))?, &elite.chunks[l], nh, dh);
+        // split permuted wk into elite (first 2r dims/head) and the rest
+        let (e_idx, ne_idx) = split_indices(nh, dh, r2);
+        let wk_e = wk.gather_cols(&e_idx);
+        let wk_ne = wk.gather_cols(&ne_idx);
+        let wv = mha.get(&format!("{p}wv"))?;
+        let w_kv = Tensor::hcat(&[&wk_ne, wv]);
+        let (a_kv, b) = svd_truncate(&w_kv, d_ckv);
+        let split = nh * (dh - r2);
+        out.insert(&format!("{p}wq"), wq);
+        out.insert(&format!("{p}wk_e"), wk_e);
+        out.insert(&format!("{p}a_kv"), a_kv);
+        out.insert(&format!("{p}b_k"), b.cols(0, split));
+        out.insert(&format!("{p}b_v"), b.cols(split, b.shape[1]));
+        for suffix in copied_layers(cfg) {
+            let name = format!("{p}{suffix}");
+            out.insert(&name, mha.get(&name)?.clone());
+        }
+    }
+    Ok(out)
+}
+
+/// MHA checkpoint -> S-LRD ablation checkpoint (separate K / V latents).
+pub fn convert_slrd(
+    cfg: &ModelConfig,
+    mha: &Checkpoint,
+    elite: &EliteSelection,
+    d_ck: usize,
+    d_cv: usize,
+) -> Result<Checkpoint> {
+    elite.validate(cfg)?;
+    let (nh, dh) = (cfg.n_heads, cfg.d_head);
+    let r2 = 2 * elite.r();
+    let mut out = Checkpoint::new();
+    out.set_meta("config", &cfg.name);
+    out.set_meta(
+        "variant",
+        format!("slrd_r{}_ck{}_cv{}", elite.r(), d_ck, d_cv),
+    );
+    out.insert("embed", mha.get("embed")?.clone());
+    out.insert("final_norm", mha.get("final_norm")?.clone());
+    for l in 0..cfg.n_layers {
+        let p = format!("l{l}.");
+        let wq = permute_heads(mha.get(&format!("{p}wq"))?, &elite.chunks[l], nh, dh);
+        let wk = permute_heads(mha.get(&format!("{p}wk"))?, &elite.chunks[l], nh, dh);
+        let (e_idx, ne_idx) = split_indices(nh, dh, r2);
+        let wk_e = wk.gather_cols(&e_idx);
+        let wk_ne = wk.gather_cols(&ne_idx);
+        let (a_k, b_k) = svd_truncate(&wk_ne, d_ck);
+        let (a_v, b_v) = svd_truncate(mha.get(&format!("{p}wv"))?, d_cv);
+        out.insert(&format!("{p}wq"), wq);
+        out.insert(&format!("{p}wk_e"), wk_e);
+        out.insert(&format!("{p}a_k"), a_k);
+        out.insert(&format!("{p}b_k"), b_k);
+        out.insert(&format!("{p}a_v"), a_v);
+        out.insert(&format!("{p}b_v"), b_v);
+        for suffix in copied_layers(cfg) {
+            let name = format!("{p}{suffix}");
+            out.insert(&name, mha.get(&name)?.clone());
+        }
+    }
+    Ok(out)
+}
+
+/// Column indices of the elite (first 2r dims of each head) and non-elite
+/// parts of an already-permuted [d, nh*dh] matrix.
+fn split_indices(nh: usize, dh: usize, r2: usize) -> (Vec<usize>, Vec<usize>) {
+    let mut e = Vec::with_capacity(nh * r2);
+    let mut ne = Vec::with_capacity(nh * (dh - r2));
+    for h in 0..nh {
+        for c in 0..dh {
+            if c < r2 {
+                e.push(h * dh + c);
+            } else {
+                ne.push(h * dh + c);
+            }
+        }
+    }
+    (e, ne)
+}
+
+/// theta_e extra [L, nh, r] flat, matching the selection order.
+pub fn elite_thetas_flat(cfg: &ModelConfig, elite: &EliteSelection) -> Vec<f32> {
+    crate::rope::elite_thetas(cfg, &elite.chunks)
+}
+
+/// elite_mask extra [L, nh, nc] flat.
+pub fn elite_mask_flat(cfg: &ModelConfig, elite: &EliteSelection) -> Vec<f32> {
+    crate::rope::elite_mask(cfg, &elite.chunks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn fake_mha(cfg: &ModelConfig, seed: u64) -> Checkpoint {
+        let mut rng = Pcg64::seeded(seed);
+        let mut ckpt = Checkpoint::new();
+        let d = cfg.d_model;
+        ckpt.insert("embed", Tensor::randn(vec![cfg.vocab, d], &mut rng));
+        ckpt.insert("final_norm", Tensor::randn(vec![d], &mut rng));
+        for l in 0..cfg.n_layers {
+            let p = format!("l{l}.");
+            let w = cfg.n_heads * cfg.d_head;
+            ckpt.insert(&format!("{p}attn_norm"), Tensor::randn(vec![d], &mut rng));
+            ckpt.insert(&format!("{p}wq"), Tensor::randn(vec![d, w], &mut rng));
+            ckpt.insert(&format!("{p}wk"), Tensor::randn(vec![d, w], &mut rng));
+            ckpt.insert(&format!("{p}wv"), Tensor::randn(vec![d, w], &mut rng));
+            ckpt.insert(&format!("{p}wo"), Tensor::randn(vec![w, d], &mut rng));
+            ckpt.insert(&format!("{p}ffn_norm"), Tensor::randn(vec![d], &mut rng));
+            ckpt.insert(&format!("{p}w1"), Tensor::randn(vec![d, cfg.d_ffn], &mut rng));
+            ckpt.insert(&format!("{p}w2"), Tensor::randn(vec![cfg.d_ffn, d], &mut rng));
+            ckpt.insert(&format!("{p}w3"), Tensor::randn(vec![d, cfg.d_ffn], &mut rng));
+        }
+        ckpt
+    }
+
+    fn sel(cfg: &ModelConfig, r: usize, seed: u64) -> EliteSelection {
+        let mut rng = Pcg64::seeded(seed);
+        let nc = cfg.n_chunks();
+        let chunks = (0..cfg.n_layers)
+            .map(|_| {
+                (0..cfg.n_heads)
+                    .map(|_| {
+                        let mut all: Vec<usize> = (0..nc).collect();
+                        rng.shuffle(&mut all);
+                        all.truncate(r);
+                        all
+                    })
+                    .collect()
+            })
+            .collect();
+        EliteSelection { chunks }
+    }
+
+    fn tiny() -> ModelConfig {
+        ModelConfig::tiny()
+    }
+
+    use crate::config::ModelConfig;
+
+    #[test]
+    fn head_permutation_is_complete() {
+        let perm = head_permutation(&[3, 0, 7], 32);
+        let mut sorted = perm.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..32).collect::<Vec<_>>());
+        assert_eq!(&perm[..6], &[6, 7, 0, 1, 14, 15]);
+    }
+
+    #[test]
+    fn selection_roundtrip_through_checkpoint() {
+        let cfg = tiny();
+        let s = sel(&cfg, 4, 1);
+        let ckpt = s.to_checkpoint(&cfg);
+        let back = EliteSelection::from_checkpoint(&ckpt, &cfg).unwrap();
+        assert_eq!(s, back);
+    }
+
+    #[test]
+    fn selection_validation_rejects_bad() {
+        let cfg = tiny();
+        let mut s = sel(&cfg, 4, 2);
+        s.chunks[0][0][1] = s.chunks[0][0][0]; // duplicate
+        assert!(s.validate(&cfg).is_err());
+        let mut s2 = sel(&cfg, 4, 3);
+        s2.chunks[1][2][0] = cfg.n_chunks(); // out of range
+        assert!(s2.validate(&cfg).is_err());
+    }
+
+    #[test]
+    fn convert_shapes_match_manifest_contract() {
+        let cfg = tiny();
+        let mha = fake_mha(&cfg, 4);
+        let s = sel(&cfg, 4, 5);
+        let out = convert_elitekv(&cfg, &mha, &s, 64).unwrap();
+        let (nh, dh, d) = (cfg.n_heads, cfg.d_head, cfg.d_model);
+        assert_eq!(out.get("l0.wk_e").unwrap().shape, vec![d, nh * 8]);
+        assert_eq!(out.get("l0.a_kv").unwrap().shape, vec![d, 64]);
+        assert_eq!(out.get("l0.b_k").unwrap().shape, vec![64, nh * (dh - 8)]);
+        assert_eq!(out.get("l0.b_v").unwrap().shape, vec![64, nh * dh]);
+        assert_eq!(out.get("l0.wq").unwrap().shape, vec![d, nh * dh]);
+    }
+
+    #[test]
+    fn full_rank_jlrd_reconstructs_wkv_exactly() {
+        // At full rank, a_kv @ [b_k | b_v] must equal [wk_ne | wv].
+        let cfg = tiny();
+        let mha = fake_mha(&cfg, 6);
+        let s = sel(&cfg, 4, 7);
+        let d_full = cfg.d_model; // d < total cols, so rank d is full
+        let out = convert_elitekv(&cfg, &mha, &s, d_full).unwrap();
+        for l in 0..cfg.n_layers {
+            let p = format!("l{l}.");
+            let a = out.get(&format!("{p}a_kv")).unwrap();
+            let bk = out.get(&format!("{p}b_k")).unwrap();
+            let bv = out.get(&format!("{p}b_v")).unwrap();
+            let rec = a.matmul(&Tensor::hcat(&[bk, bv]));
+            // reference: permuted wk non-elite part + wv
+            let wk = permute_heads(
+                mha.get(&format!("{p}wk")).unwrap(),
+                &s.chunks[l], cfg.n_heads, cfg.d_head,
+            );
+            let (_e, ne) = split_indices(cfg.n_heads, cfg.d_head, 8);
+            let want = Tensor::hcat(&[
+                &wk.gather_cols(&ne),
+                mha.get(&format!("{p}wv")).unwrap(),
+            ]);
+            let diff = rec.max_abs_diff(&want);
+            assert!(diff < 2e-3, "layer {l}: {diff}");
+        }
+    }
+
+    #[test]
+    fn truncation_error_decreases_with_rank() {
+        let cfg = tiny();
+        let mha = fake_mha(&cfg, 8);
+        let s = sel(&cfg, 4, 9);
+        let mut errs = Vec::new();
+        for rank in [16usize, 64, 128, 256] {
+            let out = convert_elitekv(&cfg, &mha, &s, rank).unwrap();
+            let a = out.get("l0.a_kv").unwrap();
+            let bk = out.get("l0.b_k").unwrap();
+            let bv = out.get("l0.b_v").unwrap();
+            let rec = a.matmul(&Tensor::hcat(&[bk, bv]));
+            let wk = permute_heads(mha.get("l0.wk").unwrap(), &s.chunks[0],
+                                   cfg.n_heads, cfg.d_head);
+            let (_e, ne) = split_indices(cfg.n_heads, cfg.d_head, 8);
+            let want =
+                Tensor::hcat(&[&wk.gather_cols(&ne), mha.get("l0.wv").unwrap()]);
+            errs.push(rec.sub(&want).fro());
+        }
+        for w in errs.windows(2) {
+            assert!(w[0] > w[1] - 1e-4, "{errs:?}");
+        }
+    }
+
+    #[test]
+    fn slrd_shapes() {
+        let cfg = tiny();
+        let mha = fake_mha(&cfg, 10);
+        let s = sel(&cfg, 4, 11);
+        let out = convert_slrd(&cfg, &mha, &s, 32, 48).unwrap();
+        assert_eq!(out.get("l0.a_k").unwrap().shape, vec![cfg.d_model, 32]);
+        assert_eq!(out.get("l0.a_v").unwrap().shape, vec![cfg.d_model, 48]);
+        assert_eq!(out.get("l0.b_k").unwrap().shape,
+                   vec![32, cfg.n_heads * (cfg.d_head - 8)]);
+        assert_eq!(out.get("l0.b_v").unwrap().shape,
+                   vec![48, cfg.n_heads * cfg.d_head]);
+    }
+
+    #[test]
+    fn thetas_match_selection_order() {
+        let cfg = tiny();
+        let s = sel(&cfg, 3, 12);
+        let t = elite_thetas_flat(&cfg, &s);
+        let nc = cfg.n_chunks();
+        // spot-check layer 1, head 2, slot 0
+        let c = s.chunks[1][2][0];
+        let want = cfg.rope_base.powf(-(c as f64) / nc as f64) as f32;
+        let idx = (1 * cfg.n_heads + 2) * 3;
+        assert!((t[idx] - want).abs() < 1e-7);
+    }
+}

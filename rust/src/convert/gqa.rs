@@ -1,0 +1,130 @@
+//! GQA conversion baseline (Ainslie et al. 2023): mean-pool the K/V
+//! projections of each head group of a trained MHA checkpoint.
+
+use anyhow::{bail, Result};
+
+use crate::config::ModelConfig;
+use crate::io::Checkpoint;
+use crate::tensor::Tensor;
+
+/// MHA checkpoint -> GQA checkpoint with `n_kv_heads` grouped KV heads.
+pub fn convert_gqa(
+    cfg: &ModelConfig,
+    mha: &Checkpoint,
+    n_kv_heads: usize,
+) -> Result<Checkpoint> {
+    if n_kv_heads == 0 || cfg.n_heads % n_kv_heads != 0 {
+        bail!("n_kv_heads {n_kv_heads} must divide n_heads {}", cfg.n_heads);
+    }
+    let mut out = mha.clone();
+    out.set_meta("config", &cfg.name);
+    out.set_meta("variant", format!("gqa{n_kv_heads}"));
+    for l in 0..cfg.n_layers {
+        for w in ["wk", "wv"] {
+            let name = format!("l{l}.{w}");
+            out.insert(&name, pool_heads(mha.get(&name)?, cfg, n_kv_heads));
+        }
+    }
+    Ok(out)
+}
+
+/// Mean-pool a [d, nh*dh] projection into [d, g*dh].
+fn pool_heads(w: &Tensor, cfg: &ModelConfig, g: usize) -> Tensor {
+    let (d, nh, dh) = (cfg.d_model, cfg.n_heads, cfg.d_head);
+    let rep = nh / g;
+    let mut out = Tensor::zeros(vec![d, g * dh]);
+    let scale = 1.0 / rep as f32;
+    for i in 0..d {
+        for grp in 0..g {
+            for c in 0..dh {
+                let mut acc = 0.0f32;
+                for r in 0..rep {
+                    acc += w.at2(i, (grp * rep + r) * dh + c);
+                }
+                out.set2(i, grp * dh + c, acc * scale);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig::tiny()
+    }
+
+    fn fake(c: &ModelConfig) -> Checkpoint {
+        let mut rng = Pcg64::seeded(30);
+        let mut ckpt = Checkpoint::new();
+        let w = c.n_heads * c.d_head;
+        ckpt.insert("embed", Tensor::randn(vec![c.vocab, c.d_model], &mut rng));
+        ckpt.insert("final_norm", Tensor::randn(vec![c.d_model], &mut rng));
+        for l in 0..c.n_layers {
+            for (n, shape) in [
+                ("attn_norm", vec![c.d_model]),
+                ("wq", vec![c.d_model, w]),
+                ("wk", vec![c.d_model, w]),
+                ("wv", vec![c.d_model, w]),
+                ("wo", vec![w, c.d_model]),
+                ("ffn_norm", vec![c.d_model]),
+                ("w1", vec![c.d_model, c.d_ffn]),
+                ("w2", vec![c.d_ffn, c.d_model]),
+                ("w3", vec![c.d_model, c.d_ffn]),
+            ] {
+                ckpt.insert(&format!("l{l}.{n}"), Tensor::randn(shape, &mut rng));
+            }
+        }
+        ckpt
+    }
+
+    #[test]
+    fn full_groups_is_identity() {
+        let c = cfg();
+        let mha = fake(&c);
+        let out = convert_gqa(&c, &mha, c.n_heads).unwrap();
+        assert_eq!(out.get("l0.wk").unwrap().max_abs_diff(
+            mha.get("l0.wk").unwrap()), 0.0);
+    }
+
+    #[test]
+    fn pooled_shapes_and_mean() {
+        let c = cfg();
+        let mha = fake(&c);
+        let g = 2;
+        let out = convert_gqa(&c, &mha, g).unwrap();
+        let wk = out.get("l1.wk").unwrap();
+        assert_eq!(wk.shape, vec![c.d_model, g * c.d_head]);
+        // spot-check one pooled element
+        let orig = mha.get("l1.wk").unwrap();
+        let rep = c.n_heads / g;
+        let mut want = 0.0;
+        for r in 0..rep {
+            want += orig.at2(3, (0 * rep + r) * c.d_head + 5);
+        }
+        want /= rep as f32;
+        assert!((wk.at2(3, 5) - want).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rejects_nondivisor_groups() {
+        let c = cfg();
+        let mha = fake(&c);
+        assert!(convert_gqa(&c, &mha, 3).is_err());
+        assert!(convert_gqa(&c, &mha, 0).is_err());
+    }
+
+    #[test]
+    fn q_and_ffn_untouched() {
+        let c = cfg();
+        let mha = fake(&c);
+        let out = convert_gqa(&c, &mha, 2).unwrap();
+        for n in ["l0.wq", "l0.wo", "l0.w1", "embed"] {
+            assert_eq!(out.get(n).unwrap().max_abs_diff(mha.get(n).unwrap()),
+                       0.0, "{n}");
+        }
+    }
+}

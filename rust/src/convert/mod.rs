@@ -1,0 +1,12 @@
+//! Model conversion: MHA checkpoints -> GQA / EliteKV / S-LRD checkpoints
+//! (paper §3.2 weight surgery), plus the Appendix-C dimension-allocation
+//! solver. All offline, built on the in-repo Jacobi SVD — python is never
+//! needed to convert a model.
+
+pub mod allocation;
+pub mod elitekv;
+pub mod gqa;
+
+pub use allocation::{enumerate_configs, AllocationCandidate};
+pub use elitekv::{convert_elitekv, convert_slrd, EliteSelection};
+pub use gqa::convert_gqa;

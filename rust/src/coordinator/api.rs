@@ -1,0 +1,59 @@
+//! Request/response surface of the serving coordinator.
+
+use std::time::Instant;
+
+/// Sampling parameters.
+#[derive(Clone, Debug)]
+pub struct GenParams {
+    pub max_new_tokens: usize,
+    /// 0.0 = greedy; otherwise softmax temperature sampling.
+    pub temperature: f32,
+    /// Stop token (defaults to the corpus EOS).
+    pub stop_token: Option<u32>,
+    pub seed: u64,
+}
+
+impl Default for GenParams {
+    fn default() -> GenParams {
+        GenParams {
+            max_new_tokens: 32,
+            temperature: 0.0,
+            stop_token: Some(crate::data::corpus::EOS),
+            seed: 0,
+        }
+    }
+}
+
+/// One generation request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub params: GenParams,
+    pub enqueued: Instant,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<u32>, params: GenParams) -> Request {
+        Request { id, prompt, params, enqueued: Instant::now() }
+    }
+}
+
+/// Completed generation.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+    /// Seconds from enqueue to first generated token.
+    pub ttft: f64,
+    /// Seconds from enqueue to completion.
+    pub latency: f64,
+    /// Why generation stopped.
+    pub finish: FinishReason,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    Stop,
+    Length,
+}

@@ -1,0 +1,152 @@
+//! Admission queue + continuous-batching policy.
+//!
+//! Decisions mirror vLLM's scheduler at miniature scale: requests wait in
+//! FIFO; a request is admitted when (a) a decode lane is idle and (b) the
+//! block allocator can cover its worst-case cache need. Because EliteKV
+//! shrinks bytes-per-token, the same block pool admits ~1/ratio times the
+//! sequences — the capacity effect the serving bench measures.
+
+use std::collections::VecDeque;
+
+use crate::coordinator::api::Request;
+use crate::kvcache::{BlockAllocator, SlotManager};
+
+/// FIFO queue with block-budget admission control.
+pub struct AdmissionQueue {
+    queue: VecDeque<Request>,
+    pub allocator: BlockAllocator,
+    /// worst-case generation length used for admission (prompt + max_new)
+    pub conservative: bool,
+}
+
+impl AdmissionQueue {
+    pub fn new(allocator: BlockAllocator) -> AdmissionQueue {
+        AdmissionQueue { queue: VecDeque::new(), allocator, conservative: true }
+    }
+
+    pub fn push(&mut self, req: Request) {
+        self.queue.push_back(req);
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    fn need_tokens(&self, req: &Request) -> usize {
+        if self.conservative {
+            req.prompt.len() + req.params.max_new_tokens
+        } else {
+            req.prompt.len()
+        }
+    }
+
+    /// Admit as many queued requests as the lanes + block pool allow.
+    /// Returns (request, slot, block chain) triples.
+    pub fn admit(
+        &mut self,
+        slots: &mut SlotManager,
+    ) -> Vec<(Request, usize, Vec<crate::kvcache::block::BlockId>)> {
+        let mut admitted = Vec::new();
+        while slots.idle_count() > 0 {
+            let Some(front) = self.queue.front() else { break };
+            let need = self.need_tokens(front);
+            if !self.allocator.can_admit(need) {
+                break; // strict FIFO: no head-of-line bypass
+            }
+            let req = self.queue.pop_front().unwrap();
+            let chain = self.allocator.alloc(need).expect("checked");
+            let slot = slots
+                .claim(req.id, req.prompt.len())
+                .expect("idle slot checked");
+            admitted.push((req, slot, chain));
+        }
+        admitted
+    }
+
+    /// Return a finished request's blocks to the pool.
+    pub fn release(&mut self, chain: &[crate::kvcache::block::BlockId]) {
+        self.allocator.release(chain);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, Variant};
+    use crate::coordinator::api::{GenParams, Request};
+    use crate::kvcache::CacheLayout;
+
+    fn setup(n_blocks: usize) -> (AdmissionQueue, SlotManager) {
+        let cfg = ModelConfig::tiny();
+        let layout = CacheLayout::new(&cfg, Variant::Mha);
+        let q = AdmissionQueue::new(BlockAllocator::new(n_blocks, 16));
+        let slots = SlotManager::new(layout, 4, 256);
+        (q, slots)
+    }
+
+    fn req(id: u64, prompt_len: usize, max_new: usize) -> Request {
+        Request::new(
+            id,
+            vec![1; prompt_len],
+            GenParams { max_new_tokens: max_new, ..Default::default() },
+        )
+    }
+
+    #[test]
+    fn admits_up_to_lane_count() {
+        let (mut q, mut slots) = setup(100);
+        for i in 0..6 {
+            q.push(req(i, 8, 8));
+        }
+        let admitted = q.admit(&mut slots);
+        assert_eq!(admitted.len(), 4); // 4 lanes
+        assert_eq!(q.len(), 2);
+        assert_eq!(slots.idle_count(), 0);
+    }
+
+    #[test]
+    fn admission_blocked_by_pool() {
+        let (mut q, mut slots) = setup(2); // 32 tokens of pool
+        q.push(req(0, 16, 16)); // needs 2 blocks
+        q.push(req(1, 16, 16)); // pool exhausted
+        let admitted = q.admit(&mut slots);
+        assert_eq!(admitted.len(), 1);
+        assert_eq!(q.len(), 1);
+        // releasing lets the second one in
+        let (_r, slot, chain) = &admitted[0];
+        slots.free(*slot);
+        q.release(chain);
+        let second = q.admit(&mut slots);
+        assert_eq!(second.len(), 1);
+    }
+
+    #[test]
+    fn fifo_no_bypass() {
+        let (mut q, mut slots) = setup(3);
+        q.push(req(0, 40, 8)); // needs 3 blocks
+        q.push(req(1, 4, 4));  // would fit, but must wait behind head
+        let _ = q.admit(&mut slots); // admits req 0, pool now empty
+        let admitted = q.admit(&mut slots);
+        assert!(admitted.is_empty());
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn compressed_layout_admits_more() {
+        // Same byte budget, EliteKV 25 % layout -> 4x the block count.
+        let cfg = ModelConfig::tiny();
+        let budget = 1024 * 1024;
+        let base_layout = CacheLayout::new(&cfg, Variant::Mha);
+        let ekv_layout =
+            CacheLayout::new(&cfg, Variant::EliteKv { r: 4, d_ckv: 64 });
+        let base_alloc = BlockAllocator::with_budget(
+            budget, base_layout.bytes_per_token(), 16);
+        let ekv_alloc = BlockAllocator::with_budget(
+            budget, ekv_layout.bytes_per_token(), 16);
+        assert_eq!(ekv_alloc.n_blocks(), 4 * base_alloc.n_blocks());
+    }
+}

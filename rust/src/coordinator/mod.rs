@@ -1,0 +1,20 @@
+//! Serving coordinator (DESIGN.md S11): the vLLM-style L3 layer.
+//!
+//! * [`api`]     — request/response types and generation parameters.
+//! * [`batcher`] — FIFO admission queue + continuous-batching policy over
+//!   the fixed decode lanes (static-shape analog of vLLM's scheduler).
+//! * [`server`]  — the inference engine: prefill-splice + iterative decode
+//!   over the compressed KV cache, greedy/temperature sampling, stop
+//!   handling, per-request latency metrics.
+//! * [`router`]  — leader/worker scale-out: routes requests to the
+//!   least-loaded worker thread, each running its own engine instance.
+
+pub mod api;
+pub mod batcher;
+pub mod router;
+pub mod server;
+
+pub use api::{GenParams, Request, Response};
+pub use batcher::AdmissionQueue;
+pub use router::Router;
+pub use server::InferenceServer;

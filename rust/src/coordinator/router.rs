@@ -1,0 +1,140 @@
+//! Leader/worker router: fan requests out to engine worker threads and
+//! collect responses (the scale-out shape of vllm-project/router, scaled
+//! to threads instead of hosts).
+
+use std::sync::mpsc;
+use std::thread;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::api::{Request, Response};
+use crate::coordinator::server::InferenceServer;
+
+enum Cmd {
+    Submit(Request),
+    Drain,
+    Shutdown,
+}
+
+struct Worker {
+    tx: mpsc::Sender<Cmd>,
+    outstanding: usize,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+/// Least-loaded request router over N single-engine workers.
+pub struct Router {
+    workers: Vec<Worker>,
+    rx: mpsc::Receiver<Response>,
+    resp_tx: mpsc::Sender<Response>,
+    submitted: usize,
+    collected: usize,
+}
+
+/// A thread-local engine constructor. PJRT client handles are not Send,
+/// so each worker builds its own engine *inside* its thread.
+pub type EngineFactory =
+    Box<dyn FnOnce() -> anyhow::Result<InferenceServer> + Send>;
+
+impl Router {
+    /// Build a router with one worker thread per factory.
+    pub fn new(factories: Vec<EngineFactory>) -> Router {
+        let (resp_tx, rx) = mpsc::channel::<Response>();
+        let workers = factories
+            .into_iter()
+            .enumerate()
+            .map(|(i, factory)| {
+                let (tx, cmd_rx) = mpsc::channel::<Cmd>();
+                let out = resp_tx.clone();
+                let handle = thread::Builder::new()
+                    .name(format!("elitekv-engine-{i}"))
+                    .spawn(move || {
+                        let mut engine = match factory() {
+                            Ok(e) => e,
+                            Err(e) => {
+                                log::error!("engine {i} init failed: {e:#}");
+                                return;
+                            }
+                        };
+                        loop {
+                            match cmd_rx.recv() {
+                                Ok(Cmd::Submit(req)) => engine.submit(req),
+                                Ok(Cmd::Drain) => {
+                                    match engine.run_to_completion() {
+                                        Ok(responses) => {
+                                            for r in responses {
+                                                let _ = out.send(r);
+                                            }
+                                        }
+                                        Err(e) => {
+                                            log::error!("engine {i}: {e:#}");
+                                        }
+                                    }
+                                }
+                                Ok(Cmd::Shutdown) | Err(_) => break,
+                            }
+                        }
+                    })
+                    .expect("spawn engine worker");
+                Worker { tx, outstanding: 0, handle: Some(handle) }
+            })
+            .collect();
+        Router { workers, rx, resp_tx, submitted: 0, collected: 0 }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Route to the least-loaded worker.
+    pub fn submit(&mut self, req: Request) -> Result<()> {
+        let Some((idx, _)) = self
+            .workers
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, w)| w.outstanding)
+        else {
+            bail!("router has no workers");
+        };
+        self.workers[idx]
+            .tx
+            .send(Cmd::Submit(req))
+            .map_err(|_| anyhow::anyhow!("worker {idx} hung up"))?;
+        self.workers[idx].outstanding += 1;
+        self.submitted += 1;
+        Ok(())
+    }
+
+    /// Run all workers to completion and collect every response.
+    pub fn drain(&mut self) -> Result<Vec<Response>> {
+        for w in &self.workers {
+            let _ = w.tx.send(Cmd::Drain);
+        }
+        let mut out = Vec::with_capacity(self.submitted - self.collected);
+        while self.collected < self.submitted {
+            let r = self.rx.recv().map_err(|_| {
+                anyhow::anyhow!("all workers exited with responses pending")
+            })?;
+            self.collected += 1;
+            out.push(r);
+        }
+        for w in &mut self.workers {
+            w.outstanding = 0;
+        }
+        Ok(out)
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            let _ = w.tx.send(Cmd::Shutdown);
+        }
+        for w in &mut self.workers {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+        let _ = &self.resp_tx;
+    }
+}

@@ -1,0 +1,353 @@
+//! The inference engine: continuous batching over the fixed-lane decode
+//! artifacts, prefill splicing, sampling, and metrics.
+//!
+//! One engine iteration:
+//!   1. admit queued requests into idle lanes (block-budget permitting),
+//!      run one prefill for the newly admitted lanes and splice their
+//!      cache rows into the live cache tensors;
+//!   2. one decode step across all lanes (idle lanes run a masked dummy);
+//!   3. sample per busy lane, emit finished responses, free lanes/blocks.
+//!
+//! Python is nowhere in this loop — the binary serves self-contained from
+//! `artifacts/`.
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::api::{FinishReason, GenParams, Request, Response};
+use crate::coordinator::batcher::AdmissionQueue;
+use crate::kvcache::block::BlockId;
+use crate::kvcache::{BlockAllocator, CacheLayout, SlotManager};
+use crate::runtime::{HostTensor, ModelRunner};
+use crate::util::Pcg64;
+
+struct Lane {
+    request: Request,
+    blocks: Vec<BlockId>,
+    generated: Vec<u32>,
+    first_token_at: Option<Instant>,
+    rng: Pcg64,
+}
+
+/// Aggregate serving metrics.
+#[derive(Clone, Debug, Default)]
+pub struct ServerStats {
+    pub completed: usize,
+    pub generated_tokens: usize,
+    pub decode_steps: usize,
+    pub prefills: usize,
+    pub peak_cache_bytes: usize,
+}
+
+/// Single-worker inference engine.
+pub struct InferenceServer {
+    pub runner: ModelRunner,
+    params: Vec<HostTensor>,
+    pub queue: AdmissionQueue,
+    slots: SlotManager,
+    lanes: Vec<Option<Lane>>,
+    caches: Vec<HostTensor>,
+    logits: Option<HostTensor>,
+    pub use_pallas: bool,
+    pub stats: ServerStats,
+    batch: usize,
+    max_seq: usize,
+}
+
+impl InferenceServer {
+    /// `cache_budget_bytes` sizes the block pool (admission control).
+    pub fn new(
+        runner: ModelRunner,
+        params: Vec<HostTensor>,
+        cache_budget_bytes: usize,
+    ) -> Result<InferenceServer> {
+        let (batch, max_seq) = runner.manifest.serve_shape()?;
+        let layout = CacheLayout::new(
+            &runner.manifest.config,
+            runner.manifest.variant.clone(),
+        );
+        let allocator = BlockAllocator::with_budget(
+            cache_budget_bytes,
+            layout.bytes_per_token().max(1),
+            16,
+        );
+        let slots = SlotManager::new(layout, batch, max_seq);
+        let caches = runner.empty_caches()?;
+        Ok(InferenceServer {
+            runner,
+            params,
+            queue: AdmissionQueue::new(allocator),
+            slots,
+            lanes: (0..batch).map(|_| None).collect(),
+            caches,
+            logits: None,
+            use_pallas: false,
+            stats: ServerStats::default(),
+            batch,
+            max_seq,
+        })
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        self.queue.push(req);
+    }
+
+    pub fn busy(&self) -> bool {
+        !self.queue.is_empty() || self.lanes.iter().any(|l| l.is_some())
+    }
+
+    pub fn live_cache_bytes(&self) -> usize {
+        self.slots.live_cache_bytes()
+    }
+
+    /// Drive the engine until all submitted requests complete.
+    pub fn run_to_completion(&mut self) -> Result<Vec<Response>> {
+        let mut out = Vec::new();
+        while self.busy() {
+            out.extend(self.step()?);
+        }
+        Ok(out)
+    }
+
+    /// One engine iteration; returns any completed responses.
+    pub fn step(&mut self) -> Result<Vec<Response>> {
+        self.admit()?;
+        self.decode_once()
+    }
+
+    /// Admit queued requests and prefill their lanes.
+    fn admit(&mut self) -> Result<()> {
+        let admitted = self.queue.admit(&mut self.slots);
+        if admitted.is_empty() {
+            return Ok(());
+        }
+        // One prefill covering the newly admitted lanes; others dummy.
+        let mut tokens = vec![0i32; self.batch * self.max_seq];
+        let mut lens = vec![1i32; self.batch];
+        for (req, slot, _chain) in &admitted {
+            if req.prompt.len() >= self.max_seq {
+                bail!("prompt exceeds serving window");
+            }
+            for (i, &t) in req.prompt.iter().enumerate() {
+                tokens[slot * self.max_seq + i] = t as i32;
+            }
+            lens[*slot] = req.prompt.len() as i32;
+        }
+        let (logits, fresh) =
+            self.runner.prefill(&self.params, &tokens, &lens)?;
+        self.stats.prefills += 1;
+        // Splice admitted lanes' cache rows + logits into live state.
+        for (req, slot, chain) in admitted {
+            for (dst, src) in self.caches.iter_mut().zip(&fresh) {
+                splice_lane(dst, src, slot)?;
+            }
+            let lane_logits = self.logits.get_or_insert_with(|| {
+                HostTensor::zeros(logits.shape())
+            });
+            splice_row(lane_logits, &logits, slot)?;
+            let seed = req.params.seed ^ req.id;
+            self.lanes[slot] = Some(Lane {
+                request: req,
+                blocks: chain,
+                generated: Vec::new(),
+                first_token_at: None,
+                rng: Pcg64::seeded(seed),
+            });
+        }
+        Ok(())
+    }
+
+    /// One decode step for every lane; sample + handle completions.
+    fn decode_once(&mut self) -> Result<Vec<Response>> {
+        if self.lanes.iter().all(|l| l.is_none()) {
+            return Ok(Vec::new());
+        }
+        // Sample next token per busy lane from the current logits.
+        let vocab = self.runner.manifest.config.vocab;
+        let logits = self
+            .logits
+            .as_ref()
+            .expect("logits present when lanes busy")
+            .clone();
+        let lvals = logits.as_f32()?;
+        let mut next = vec![0i32; self.batch];
+        let mut pos = vec![0i32; self.batch];
+        for slot in 0..self.batch {
+            if let Some(lane) = &mut self.lanes[slot] {
+                let row = &lvals[slot * vocab..(slot + 1) * vocab];
+                let tok = sample(row, &lane.request.params, &mut lane.rng);
+                if lane.first_token_at.is_none() {
+                    lane.first_token_at = Some(Instant::now());
+                }
+                lane.generated.push(tok);
+                next[slot] = tok as i32;
+                pos[slot] = self.slots.len_of(slot) as i32;
+            }
+        }
+        // Completions BEFORE spending a decode step on finished lanes.
+        let mut done = Vec::new();
+        for slot in 0..self.batch {
+            let finished = match &self.lanes[slot] {
+                Some(lane) => {
+                    let last = *lane.generated.last().unwrap();
+                    let hit_stop =
+                        lane.request.params.stop_token == Some(last);
+                    let hit_len = lane.generated.len()
+                        >= lane.request.params.max_new_tokens;
+                    hit_stop || hit_len
+                }
+                None => false,
+            };
+            if finished {
+                let lane = self.lanes[slot].take().unwrap();
+                let now = Instant::now();
+                let reason = if lane.request.params.stop_token
+                    == lane.generated.last().copied()
+                {
+                    FinishReason::Stop
+                } else {
+                    FinishReason::Length
+                };
+                self.stats.completed += 1;
+                self.stats.generated_tokens += lane.generated.len();
+                done.push(Response {
+                    id: lane.request.id,
+                    tokens: lane.generated,
+                    ttft: lane
+                        .first_token_at
+                        .map(|t| (t - lane.request.enqueued).as_secs_f64())
+                        .unwrap_or(0.0),
+                    latency: (now - lane.request.enqueued).as_secs_f64(),
+                    finish: reason,
+                });
+                self.queue.release(&lane.blocks);
+                self.slots.free(slot);
+            }
+        }
+        // Decode the sampled tokens for lanes still running.
+        if self.lanes.iter().any(|l| l.is_some()) {
+            let caches = std::mem::take(&mut self.caches);
+            let (logits, caches) = self.runner.decode(
+                &self.params, &next, &pos, caches, self.use_pallas)?;
+            self.caches = caches;
+            self.logits = Some(logits);
+            self.stats.decode_steps += 1;
+            for slot in 0..self.batch {
+                if self.lanes[slot].is_some() {
+                    self.slots.advance(slot)?;
+                    if let Some(lane) = &self.lanes[slot] {
+                        let need = self.slots.len_of(slot);
+                        let mut chain = lane.blocks.clone();
+                        self.queue.allocator.extend(&mut chain, need)?;
+                        self.lanes[slot].as_mut().unwrap().blocks = chain;
+                    }
+                }
+            }
+            self.stats.peak_cache_bytes = self
+                .stats
+                .peak_cache_bytes
+                .max(self.slots.live_cache_bytes());
+        } else {
+            self.logits = None;
+        }
+        Ok(done)
+    }
+}
+
+/// Copy lane `b`'s rows of a stacked [L, B, ...] cache tensor.
+fn splice_lane(dst: &mut HostTensor, src: &HostTensor, lane: usize) -> Result<()> {
+    let shape = src.shape().to_vec();
+    if dst.shape() != shape.as_slice() || shape.len() < 2 {
+        bail!("cache splice shape mismatch: {:?} vs {shape:?}", dst.shape());
+    }
+    let (layers, batch) = (shape[0], shape[1]);
+    let lane_stride: usize = shape[2..].iter().product();
+    let layer_stride = batch * lane_stride;
+    let (HostTensor::F32(d, _), HostTensor::F32(s, _)) = (dst, src) else {
+        bail!("cache splice expects f32 tensors");
+    };
+    for l in 0..layers {
+        let off = l * layer_stride + lane * lane_stride;
+        d[off..off + lane_stride].copy_from_slice(&s[off..off + lane_stride]);
+    }
+    Ok(())
+}
+
+/// Copy row `lane` of a [B, V] tensor.
+fn splice_row(dst: &mut HostTensor, src: &HostTensor, lane: usize) -> Result<()> {
+    let shape = src.shape().to_vec();
+    if dst.shape() != shape.as_slice() || shape.len() != 2 {
+        bail!("row splice shape mismatch");
+    }
+    let w = shape[1];
+    let (HostTensor::F32(d, _), HostTensor::F32(s, _)) = (dst, src) else {
+        bail!("row splice expects f32");
+    };
+    d[lane * w..(lane + 1) * w].copy_from_slice(&s[lane * w..(lane + 1) * w]);
+    Ok(())
+}
+
+/// Greedy or temperature sampling from one logit row.
+fn sample(row: &[f32], params: &GenParams, rng: &mut Pcg64) -> u32 {
+    if params.temperature <= 0.0 {
+        let (arg, _) = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        return arg as u32;
+    }
+    let t = params.temperature;
+    let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let weights: Vec<f64> =
+        row.iter().map(|&x| (((x - max) / t) as f64).exp()).collect();
+    let total: f64 = weights.iter().sum();
+    let mut u = rng.f64() * total;
+    for (i, w) in weights.iter().enumerate() {
+        u -= w;
+        if u <= 0.0 {
+            return i as u32;
+        }
+    }
+    (row.len() - 1) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_greedy_is_argmax() {
+        let row = [0.1f32, 2.0, -1.0, 0.5];
+        let mut rng = Pcg64::seeded(1);
+        let p = GenParams::default();
+        assert_eq!(sample(&row, &p, &mut rng), 1);
+    }
+
+    #[test]
+    fn sample_temperature_covers_support() {
+        let row = [1.0f32, 1.0, 1.0];
+        let p = GenParams { temperature: 1.0, ..Default::default() };
+        let mut rng = Pcg64::seeded(2);
+        let mut seen = [false; 3];
+        for _ in 0..200 {
+            seen[sample(&row, &p, &mut rng) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn splice_lane_copies_only_target() {
+        let src = HostTensor::F32((0..24).map(|x| x as f32).collect(),
+                                  vec![2, 3, 4]); // L=2,B=3,rest=4
+        let mut dst = HostTensor::zeros(&[2, 3, 4]);
+        splice_lane(&mut dst, &src, 1).unwrap();
+        let d = dst.as_f32().unwrap();
+        // lane 1 of layer 0 = elems 4..8; layer 1 = 16..20
+        assert_eq!(&d[4..8], &[4.0, 5.0, 6.0, 7.0]);
+        assert_eq!(&d[16..20], &[16.0, 17.0, 18.0, 19.0]);
+        assert!(d[0..4].iter().all(|&x| x == 0.0));
+        assert!(d[8..16].iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,328 @@
+//! Procedural pretraining corpus over a fixed token vocabulary.
+//!
+//! Token id map (stable across vocab sizes; words fill the remainder):
+//!   0 PAD   1 BOS   2 EOS   3 SEP   4 COPY   5 REV   6 FACT  7 SORT
+//!   8 ARITH 9 PLUS 10 EQ   11 Q    12..16 reserved
+//!   16..26 digits 0-9
+//!   26..vocab words (Zipf-distributed content vocabulary)
+//!
+//! Sentence kinds (mixture):
+//!   grammar   — [w][w][w][w][w] template chains, Zipf draw (syntax analog)
+//!   fact      — FACT e SEP o: persistent entity->object map (knowledge)
+//!   copy      — COPY w.. SEP w..                (induction / long range)
+//!   reverse   — REV  w.. SEP reversed(w..)
+//!   sort      — SORT d.. SEP sorted(d..)
+//!   arith     — ARITH a PLUS b EQ (a+b mod 10)
+//!
+//! Every probe task (probes.rs) draws from the same distributions, so
+//! pretraining makes the probes learnable — mirroring how the paper's
+//! benchmarks measure capabilities the base model was trained to have.
+
+use crate::util::rng::{Pcg64, ZipfTable};
+
+pub const PAD: u32 = 0;
+pub const BOS: u32 = 1;
+pub const EOS: u32 = 2;
+pub const SEP: u32 = 3;
+pub const COPY: u32 = 4;
+pub const REV: u32 = 5;
+pub const FACT: u32 = 6;
+pub const SORT: u32 = 7;
+pub const ARITH: u32 = 8;
+pub const PLUS: u32 = 9;
+pub const EQ: u32 = 10;
+pub const Q: u32 = 11;
+pub const DIGIT_BASE: u32 = 16;
+pub const WORD_BASE: u32 = 26;
+
+/// Number of reserved (non-word) token ids.
+pub const SPECIAL_TOKENS: u32 = WORD_BASE;
+
+pub fn digit(d: u32) -> u32 {
+    debug_assert!(d < 10);
+    DIGIT_BASE + d
+}
+
+/// One training batch in the layout train_step expects.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub tokens: Vec<i32>,  // [B*T]
+    pub targets: Vec<i32>, // [B*T]
+    pub mask: Vec<f32>,    // [B*T]
+    pub batch: usize,
+    pub seq: usize,
+}
+
+/// Deterministic corpus generator. Same (vocab, seed) -> same language:
+/// the fact table, word frequencies, and sentence stream all derive from
+/// the seed, so pretraining / uptraining / eval share one world.
+pub struct CorpusGen {
+    pub vocab: usize,
+    n_words: usize,
+    zipf: ZipfTable,
+    /// entity word -> object word (the persistent "world knowledge").
+    facts: Vec<u32>,
+    n_entities: usize,
+    rng: Pcg64,
+}
+
+impl CorpusGen {
+    pub fn new(vocab: usize, seed: u64) -> CorpusGen {
+        assert!(vocab > WORD_BASE as usize + 32, "vocab too small");
+        let n_words = vocab - WORD_BASE as usize;
+        let n_entities = (n_words / 4).min(128);
+        // The fact table is drawn from a *fixed* stream so that train and
+        // eval instances agree on the world.
+        let mut world = Pcg64::new(seed, 0xfac7);
+        let facts = (0..n_entities)
+            .map(|_| WORD_BASE + world.below(n_words as u64) as u32)
+            .collect();
+        CorpusGen {
+            vocab,
+            n_words,
+            zipf: ZipfTable::new(n_words, 1.1),
+            facts,
+            n_entities,
+            rng: Pcg64::new(seed, 0xc0de),
+        }
+    }
+
+    /// Reset the sentence stream (fact table unchanged).
+    pub fn reseed(&mut self, seed: u64, stream: u64) {
+        self.rng = Pcg64::new(seed, stream);
+    }
+
+    pub fn n_entities(&self) -> usize {
+        self.n_entities
+    }
+
+    /// The object word for entity index e (probe ground truth).
+    pub fn fact_object(&self, e: usize) -> u32 {
+        self.facts[e]
+    }
+
+    pub fn entity_token(&self, e: usize) -> u32 {
+        WORD_BASE + e as u32
+    }
+
+    fn word(&mut self) -> u32 {
+        WORD_BASE + self.zipf.sample(&mut self.rng) as u32
+    }
+
+    fn non_entity_word(&mut self) -> u32 {
+        // words outside the entity range, so facts stay unambiguous
+        let lo = self.n_entities;
+        WORD_BASE + self.rng.range(lo, self.n_words) as u32
+    }
+
+    // ---------------- sentence samplers ----------------
+
+    pub fn sent_grammar(&mut self, out: &mut Vec<u32>) {
+        let len = self.rng.range(4, 9);
+        for _ in 0..len {
+            let w = self.word();
+            out.push(w);
+        }
+        out.push(EOS);
+    }
+
+    pub fn sent_fact(&mut self, out: &mut Vec<u32>) {
+        let e = self.rng.range(0, self.n_entities);
+        out.push(FACT);
+        out.push(self.entity_token(e));
+        out.push(SEP);
+        out.push(self.facts[e]);
+        out.push(EOS);
+    }
+
+    pub fn sent_copy(&mut self, out: &mut Vec<u32>) {
+        let len = self.rng.range(2, 7);
+        let span: Vec<u32> = (0..len).map(|_| self.non_entity_word()).collect();
+        out.push(COPY);
+        out.extend(&span);
+        out.push(SEP);
+        out.extend(&span);
+        out.push(EOS);
+    }
+
+    pub fn sent_reverse(&mut self, out: &mut Vec<u32>) {
+        let len = self.rng.range(2, 6);
+        let span: Vec<u32> = (0..len).map(|_| self.non_entity_word()).collect();
+        out.push(REV);
+        out.extend(&span);
+        out.push(SEP);
+        out.extend(span.iter().rev());
+        out.push(EOS);
+    }
+
+    pub fn sent_sort(&mut self, out: &mut Vec<u32>) {
+        let len = self.rng.range(2, 6);
+        let mut ds: Vec<u32> = (0..len)
+            .map(|_| self.rng.below(10) as u32)
+            .collect();
+        out.push(SORT);
+        out.extend(ds.iter().map(|&d| digit(d)));
+        out.push(SEP);
+        ds.sort_unstable();
+        out.extend(ds.iter().map(|&d| digit(d)));
+        out.push(EOS);
+    }
+
+    pub fn sent_arith(&mut self, out: &mut Vec<u32>) {
+        let a = self.rng.below(10) as u32;
+        let b = self.rng.below(10) as u32;
+        out.push(ARITH);
+        out.push(digit(a));
+        out.push(PLUS);
+        out.push(digit(b));
+        out.push(EQ);
+        out.push(digit((a + b) % 10));
+        out.push(EOS);
+    }
+
+    /// Append one mixture-drawn sentence.
+    pub fn sentence(&mut self, out: &mut Vec<u32>) {
+        match self.rng.below(10) {
+            0..=3 => self.sent_grammar(out),
+            4 => self.sent_fact(out),
+            5 => self.sent_copy(out),
+            6 => self.sent_reverse(out),
+            7 => self.sent_sort(out),
+            8 => self.sent_arith(out),
+            _ => self.sent_copy(out),
+        }
+    }
+
+    /// Fill a continuous token stream of exactly `n` tokens.
+    pub fn stream(&mut self, n: usize) -> Vec<u32> {
+        let mut out = Vec::with_capacity(n + 16);
+        out.push(BOS);
+        while out.len() < n {
+            self.sentence(&mut out);
+        }
+        out.truncate(n);
+        out
+    }
+
+    /// Next-token-prediction batch: tokens[t] predicts tokens[t+1].
+    pub fn next_batch(&mut self, batch: usize, seq: usize) -> Batch {
+        let mut tokens = Vec::with_capacity(batch * seq);
+        let mut targets = Vec::with_capacity(batch * seq);
+        for _ in 0..batch {
+            let s = self.stream(seq + 1);
+            tokens.extend(s[..seq].iter().map(|&t| t as i32));
+            targets.extend(s[1..].iter().map(|&t| t as i32));
+        }
+        Batch {
+            tokens,
+            targets,
+            mask: vec![1.0; batch * seq],
+            batch,
+            seq,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = CorpusGen::new(512, 7);
+        let mut b = CorpusGen::new(512, 7);
+        assert_eq!(a.stream(256), b.stream(256));
+    }
+
+    #[test]
+    fn fact_table_stable_across_streams() {
+        let a = CorpusGen::new(512, 7);
+        let mut b = CorpusGen::new(512, 7);
+        b.reseed(99, 1234); // different sentence stream...
+        for e in 0..a.n_entities() {
+            assert_eq!(a.fact_object(e), b.fact_object(e)); // ...same world
+        }
+    }
+
+    #[test]
+    fn tokens_in_range() {
+        let mut g = CorpusGen::new(512, 1);
+        for &t in &g.stream(4096) {
+            assert!((t as usize) < 512, "token {t} out of vocab");
+        }
+    }
+
+    #[test]
+    fn copy_sentences_are_consistent() {
+        let mut g = CorpusGen::new(512, 2);
+        for _ in 0..50 {
+            let mut s = Vec::new();
+            g.sent_copy(&mut s);
+            assert_eq!(s[0], COPY);
+            let sep = s.iter().position(|&t| t == SEP).unwrap();
+            let span = &s[1..sep];
+            let echo = &s[sep + 1..s.len() - 1];
+            assert_eq!(span, echo);
+        }
+    }
+
+    #[test]
+    fn sort_sentences_sorted() {
+        let mut g = CorpusGen::new(512, 3);
+        for _ in 0..50 {
+            let mut s = Vec::new();
+            g.sent_sort(&mut s);
+            let sep = s.iter().position(|&t| t == SEP).unwrap();
+            let out = &s[sep + 1..s.len() - 1];
+            assert!(out.windows(2).all(|w| w[0] <= w[1]));
+            assert_eq!(out.len(), sep - 1);
+        }
+    }
+
+    #[test]
+    fn arith_sentences_correct() {
+        let mut g = CorpusGen::new(512, 4);
+        for _ in 0..50 {
+            let mut s = Vec::new();
+            g.sent_arith(&mut s);
+            assert_eq!(s.len(), 7);
+            let a = s[1] - DIGIT_BASE;
+            let b = s[3] - DIGIT_BASE;
+            let c = s[5] - DIGIT_BASE;
+            assert_eq!(c, (a + b) % 10);
+        }
+    }
+
+    #[test]
+    fn fact_sentences_match_table() {
+        let mut g = CorpusGen::new(512, 5);
+        for _ in 0..50 {
+            let mut s = Vec::new();
+            g.sent_fact(&mut s);
+            let e = (s[1] - WORD_BASE) as usize;
+            assert_eq!(s[3], g.fact_object(e));
+        }
+    }
+
+    #[test]
+    fn batch_shapes_and_shift() {
+        let mut g = CorpusGen::new(512, 6);
+        let b = g.next_batch(3, 32);
+        assert_eq!(b.tokens.len(), 96);
+        assert_eq!(b.targets.len(), 96);
+        assert_eq!(b.mask.len(), 96);
+        // target[t] is token[t+1] within each row
+        for row in 0..3 {
+            for t in 0..31 {
+                assert_eq!(b.targets[row * 32 + t], b.tokens[row * 32 + t + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn larger_vocab_for_100m() {
+        let mut g = CorpusGen::new(2048, 1);
+        let s = g.stream(2048);
+        assert!(s.iter().any(|&t| t as usize > 512));
+    }
+}

@@ -1,0 +1,17 @@
+//! Data pipeline substrate: the synthetic pretraining corpus (RefinedWeb
+//! stand-in), the probe-task battery (lm-eval-harness stand-in), and a
+//! byte-pair tokenizer for real-text ingestion.
+//!
+//! DESIGN.md §2 documents the substitution: the corpus is a procedural
+//! language with genuine positional structure (copy/reversal/recall spans,
+//! arithmetic, Zipfian template grammar, a persistent fact table), so RoPE
+//! heads must learn distinct frequency roles — the property RoPElite
+//! search and uptraining exercise.
+
+pub mod corpus;
+pub mod probes;
+pub mod tokenizer;
+
+pub use corpus::{Batch, CorpusGen, SPECIAL_TOKENS};
+pub use probes::{ProbeKind, ProbeSet};
+pub use tokenizer::Bpe;

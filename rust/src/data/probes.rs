@@ -1,0 +1,258 @@
+//! Probe-task battery: the repository's stand-in for the paper's 8-task
+//! lm-evaluation-harness suite (Table 1/2 columns).
+//!
+//! Each probe is a (prompt, expected-continuation) pair drawn from the
+//! same distributions the corpus pretrains on; the score of a task is
+//! exact-match accuracy of greedy decoding, and `average` mirrors the
+//! paper's "Avg." column.
+
+use crate::data::corpus::{self, CorpusGen, ARITH, BOS, COPY, EQ, FACT, PLUS,
+                          REV, SEP, SORT};
+use crate::util::Pcg64;
+
+/// The six capability probes (paper: BoolQ/HellaSwag/... analog).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ProbeKind {
+    Copy,
+    Reverse,
+    Recall,
+    Induction,
+    Arith,
+    Sort,
+}
+
+pub const ALL_PROBES: [ProbeKind; 6] = [
+    ProbeKind::Copy,
+    ProbeKind::Reverse,
+    ProbeKind::Recall,
+    ProbeKind::Induction,
+    ProbeKind::Arith,
+    ProbeKind::Sort,
+];
+
+impl ProbeKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ProbeKind::Copy => "copy",
+            ProbeKind::Reverse => "reverse",
+            ProbeKind::Recall => "recall",
+            ProbeKind::Induction => "induction",
+            ProbeKind::Arith => "arith",
+            ProbeKind::Sort => "sort",
+        }
+    }
+}
+
+/// One evaluation item: greedy-decode `answer.len()` tokens after `prompt`
+/// and compare exactly.
+#[derive(Clone, Debug)]
+pub struct ProbeItem {
+    pub kind: ProbeKind,
+    pub prompt: Vec<u32>,
+    pub answer: Vec<u32>,
+}
+
+/// A deterministic evaluation set over all probe kinds.
+pub struct ProbeSet {
+    pub items: Vec<ProbeItem>,
+}
+
+impl ProbeSet {
+    /// `n_per_task` items per probe kind, drawn against `gen`'s world.
+    /// The probe stream is independent of the training stream but shares
+    /// the fact table.
+    pub fn generate(gen: &CorpusGen, n_per_task: usize, seed: u64) -> ProbeSet {
+        let mut rng = Pcg64::new(seed, 0x9806e);
+        let mut items = Vec::new();
+        for kind in ALL_PROBES {
+            for _ in 0..n_per_task {
+                items.push(make_item(gen, kind, &mut rng));
+            }
+        }
+        ProbeSet { items }
+    }
+
+    /// Aggregate exact-match accuracy per task given per-item pass flags
+    /// (same order as `items`).
+    pub fn score(&self, passed: &[bool]) -> Scores {
+        assert_eq!(passed.len(), self.items.len());
+        let mut per = std::collections::BTreeMap::new();
+        for (item, &ok) in self.items.iter().zip(passed) {
+            let e = per.entry(item.kind.name()).or_insert((0usize, 0usize));
+            e.1 += 1;
+            if ok {
+                e.0 += 1;
+            }
+        }
+        let task_acc: Vec<(String, f64)> = per
+            .iter()
+            .map(|(k, (hit, tot))| (k.to_string(), *hit as f64 / *tot as f64))
+            .collect();
+        let average =
+            task_acc.iter().map(|(_, a)| a).sum::<f64>() / task_acc.len() as f64;
+        Scores { task_acc, average }
+    }
+
+    /// Longest answer length (the decode budget the scorer needs).
+    pub fn max_answer_len(&self) -> usize {
+        self.items.iter().map(|i| i.answer.len()).max().unwrap_or(0)
+    }
+}
+
+/// Per-task accuracies + their mean (the paper's Avg. column).
+#[derive(Clone, Debug)]
+pub struct Scores {
+    pub task_acc: Vec<(String, f64)>,
+    pub average: f64,
+}
+
+fn word(rng: &mut Pcg64, gen: &CorpusGen) -> u32 {
+    // non-entity words, mirroring corpus sampler constraints
+    let lo = gen.n_entities();
+    let n_words = gen.vocab - corpus::WORD_BASE as usize;
+    corpus::WORD_BASE + rng.range(lo, n_words) as u32
+}
+
+fn make_item(gen: &CorpusGen, kind: ProbeKind, rng: &mut Pcg64) -> ProbeItem {
+    match kind {
+        ProbeKind::Copy => {
+            let len = rng.range(2, 7);
+            let span: Vec<u32> = (0..len).map(|_| word(rng, gen)).collect();
+            let mut prompt = vec![BOS, COPY];
+            prompt.extend(&span);
+            prompt.push(SEP);
+            ProbeItem { kind, prompt, answer: span }
+        }
+        ProbeKind::Reverse => {
+            let len = rng.range(2, 6);
+            let span: Vec<u32> = (0..len).map(|_| word(rng, gen)).collect();
+            let mut prompt = vec![BOS, REV];
+            prompt.extend(&span);
+            prompt.push(SEP);
+            ProbeItem {
+                kind,
+                prompt,
+                answer: span.iter().rev().copied().collect(),
+            }
+        }
+        ProbeKind::Recall => {
+            let e = rng.range(0, gen.n_entities());
+            let prompt = vec![BOS, FACT, gen.entity_token(e), SEP];
+            ProbeItem { kind, prompt, answer: vec![gen.fact_object(e)] }
+        }
+        ProbeKind::Induction => {
+            // x y ... filler ... x -> y (classic induction-head probe);
+            // the pattern pair uses distinct words so the answer is unique.
+            let x = word(rng, gen);
+            let mut y = word(rng, gen);
+            while y == x {
+                y = word(rng, gen);
+            }
+            let mut prompt = vec![BOS, x, y];
+            for _ in 0..rng.range(2, 6) {
+                let mut f = word(rng, gen);
+                while f == x || f == y {
+                    f = word(rng, gen);
+                }
+                prompt.push(f);
+            }
+            prompt.push(x);
+            ProbeItem { kind, prompt, answer: vec![y] }
+        }
+        ProbeKind::Arith => {
+            let a = rng.below(10) as u32;
+            let b = rng.below(10) as u32;
+            let prompt =
+                vec![BOS, ARITH, corpus::digit(a), PLUS, corpus::digit(b), EQ];
+            ProbeItem { kind, prompt, answer: vec![corpus::digit((a + b) % 10)] }
+        }
+        ProbeKind::Sort => {
+            let len = rng.range(2, 6);
+            let mut ds: Vec<u32> = (0..len).map(|_| rng.below(10) as u32).collect();
+            let mut prompt = vec![BOS, SORT];
+            prompt.extend(ds.iter().map(|&d| corpus::digit(d)));
+            prompt.push(SEP);
+            ds.sort_unstable();
+            ProbeItem {
+                kind,
+                prompt,
+                answer: ds.iter().map(|&d| corpus::digit(d)).collect(),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gen() -> CorpusGen {
+        CorpusGen::new(512, 7)
+    }
+
+    #[test]
+    fn generates_all_kinds() {
+        let g = gen();
+        let set = ProbeSet::generate(&g, 5, 1);
+        assert_eq!(set.items.len(), 30);
+        for kind in ALL_PROBES {
+            assert_eq!(set.items.iter().filter(|i| i.kind == kind).count(), 5);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = gen();
+        let a = ProbeSet::generate(&g, 4, 9);
+        let b = ProbeSet::generate(&g, 4, 9);
+        for (x, y) in a.items.iter().zip(&b.items) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.answer, y.answer);
+        }
+    }
+
+    #[test]
+    fn recall_answers_match_world() {
+        let g = gen();
+        let set = ProbeSet::generate(&g, 20, 2);
+        for item in set.items.iter().filter(|i| i.kind == ProbeKind::Recall) {
+            let e = (item.prompt[2] - corpus::WORD_BASE) as usize;
+            assert_eq!(item.answer, vec![g.fact_object(e)]);
+        }
+    }
+
+    #[test]
+    fn induction_answer_is_second_of_pair() {
+        let g = gen();
+        let set = ProbeSet::generate(&g, 20, 3);
+        for item in set.items.iter().filter(|i| i.kind == ProbeKind::Induction) {
+            let x = item.prompt[1];
+            assert_eq!(*item.prompt.last().unwrap(), x);
+            assert_eq!(item.answer[0], item.prompt[2]);
+        }
+    }
+
+    #[test]
+    fn scoring_aggregates_correctly() {
+        let g = gen();
+        let set = ProbeSet::generate(&g, 2, 4);
+        // pass exactly the first item of each pair
+        let passed: Vec<bool> =
+            set.items.iter().enumerate().map(|(i, _)| i % 2 == 0).collect();
+        let s = set.score(&passed);
+        assert_eq!(s.task_acc.len(), 6);
+        for (_, acc) in &s.task_acc {
+            assert!((acc - 0.5).abs() < 1e-9);
+        }
+        assert!((s.average - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prompts_fit_serving_window() {
+        let g = gen();
+        let set = ProbeSet::generate(&g, 50, 5);
+        for i in &set.items {
+            assert!(i.prompt.len() + i.answer.len() <= 64);
+        }
+    }
+}

@@ -1,0 +1,159 @@
+//! Byte-pair-encoding tokenizer substrate for real-text ingestion.
+//!
+//! The synthetic corpus emits token ids directly; this BPE exists for the
+//! quickstart path where a user feeds plain text, and as the data-pipeline
+//! substrate the paper's ecosystem assumes (RefinedWeb is tokenized text).
+//! Greedy merge training over bytes, longest-match encoding.
+
+use std::collections::HashMap;
+
+/// A trained byte-level BPE vocabulary.
+#[derive(Clone, Debug)]
+pub struct Bpe {
+    /// token id -> byte sequence. ids 0..256 are raw bytes.
+    pub pieces: Vec<Vec<u8>>,
+    /// merge ranks: (left id, right id) -> merged id
+    merges: HashMap<(u32, u32), u32>,
+}
+
+impl Bpe {
+    /// Train `n_merges` merges on `text`.
+    pub fn train(text: &str, n_merges: usize) -> Bpe {
+        let mut pieces: Vec<Vec<u8>> = (0..256u16).map(|b| vec![b as u8]).collect();
+        let mut merges = HashMap::new();
+        let mut seq: Vec<u32> = text.bytes().map(|b| b as u32).collect();
+        for _ in 0..n_merges {
+            // count adjacent pairs
+            let mut counts: HashMap<(u32, u32), usize> = HashMap::new();
+            for w in seq.windows(2) {
+                *counts.entry((w[0], w[1])).or_default() += 1;
+            }
+            let Some((&pair, &count)) = counts
+                .iter()
+                .max_by_key(|(p, c)| (**c, std::cmp::Reverse(**p)))
+            else {
+                break;
+            };
+            if count < 2 {
+                break;
+            }
+            let new_id = pieces.len() as u32;
+            let mut merged = pieces[pair.0 as usize].clone();
+            merged.extend(&pieces[pair.1 as usize]);
+            pieces.push(merged);
+            merges.insert(pair, new_id);
+            // apply the merge to the working sequence
+            let mut out = Vec::with_capacity(seq.len());
+            let mut i = 0;
+            while i < seq.len() {
+                if i + 1 < seq.len() && (seq[i], seq[i + 1]) == pair {
+                    out.push(new_id);
+                    i += 2;
+                } else {
+                    out.push(seq[i]);
+                    i += 1;
+                }
+            }
+            seq = out;
+        }
+        Bpe { pieces, merges }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.pieces.len()
+    }
+
+    /// Encode text by iteratively applying the lowest-id (earliest-trained)
+    /// applicable merge — the standard BPE encode order.
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut seq: Vec<u32> = text.bytes().map(|b| b as u32).collect();
+        loop {
+            let mut best: Option<(u32, usize)> = None; // (merged id, pos)
+            for (i, w) in seq.windows(2).enumerate() {
+                if let Some(&m) = self.merges.get(&(w[0], w[1])) {
+                    if best.map(|(b, _)| m < b).unwrap_or(true) {
+                        best = Some((m, i));
+                    }
+                }
+            }
+            let Some((m, _)) = best else { break };
+            // apply this merge everywhere
+            let pair = *self
+                .merges
+                .iter()
+                .find(|(_, &v)| v == m)
+                .map(|(k, _)| k)
+                .unwrap();
+            let mut out = Vec::with_capacity(seq.len());
+            let mut i = 0;
+            while i < seq.len() {
+                if i + 1 < seq.len() && (seq[i], seq[i + 1]) == pair {
+                    out.push(m);
+                    i += 2;
+                } else {
+                    out.push(seq[i]);
+                    i += 1;
+                }
+            }
+            seq = out;
+        }
+        seq
+    }
+
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let mut bytes = Vec::new();
+        for &id in ids {
+            bytes.extend(&self.pieces[id as usize]);
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "the quick brown fox jumps over the lazy dog. \
+                          the quick brown fox jumps again and again. \
+                          the lazy dog sleeps while the quick fox runs.";
+
+    #[test]
+    fn roundtrip_exact() {
+        let bpe = Bpe::train(SAMPLE, 50);
+        let ids = bpe.encode(SAMPLE);
+        assert_eq!(bpe.decode(&ids), SAMPLE);
+    }
+
+    #[test]
+    fn merges_compress() {
+        let bpe = Bpe::train(SAMPLE, 50);
+        let ids = bpe.encode(SAMPLE);
+        assert!(ids.len() < SAMPLE.len(), "{} !< {}", ids.len(), SAMPLE.len());
+        assert!(bpe.vocab_size() > 256);
+    }
+
+    #[test]
+    fn handles_unseen_text() {
+        let bpe = Bpe::train(SAMPLE, 30);
+        let other = "zebra xylophone ðŸ¦“"; // bytes unseen in training
+        let ids = bpe.encode(other);
+        assert_eq!(bpe.decode(&ids), other);
+    }
+
+    #[test]
+    fn zero_merges_is_byte_level() {
+        let bpe = Bpe::train(SAMPLE, 0);
+        assert_eq!(bpe.vocab_size(), 256);
+        let ids = bpe.encode("abc");
+        assert_eq!(ids, vec![97, 98, 99]);
+    }
+
+    #[test]
+    fn trained_merge_used_in_encoding() {
+        let text = "aaaaaaaaaa";
+        let bpe = Bpe::train(text, 3);
+        let ids = bpe.encode("aaaa");
+        assert!(ids.len() < 4);
+        assert_eq!(bpe.decode(&ids), "aaaa");
+    }
+}

@@ -1,0 +1,191 @@
+//! Checkpoint binary format (EKVC): named f32 tensors + metadata.
+//!
+//! Layout (little-endian):
+//!   magic "EKVC" | u32 version | u32 n_meta | n_meta * (str key, str val)
+//!   | u32 n_tensors | per tensor: (str name, u32 rank, u64 dims...,
+//!     f32 data...)
+//! where str = u32 length + utf-8 bytes. Deliberately simple and
+//! versioned; holds model params, optimizer state, and search results.
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+const MAGIC: &[u8; 4] = b"EKVC";
+const VERSION: u32 = 1;
+
+/// A named-tensor container with string metadata.
+#[derive(Clone, Debug, Default)]
+pub struct Checkpoint {
+    pub meta: BTreeMap<String, String>,
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl Checkpoint {
+    pub fn new() -> Checkpoint {
+        Checkpoint::default()
+    }
+
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        self.tensors.insert(name.to_string(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("checkpoint missing tensor `{name}`"))
+    }
+
+    pub fn set_meta(&mut self, key: &str, val: impl ToString) {
+        self.meta.insert(key.to_string(), val.to_string());
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.tensors.values().map(|t| t.numel()).sum()
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let f = File::create(path.as_ref()).with_context(|| {
+            format!("create checkpoint {:?}", path.as_ref())
+        })?;
+        let mut w = BufWriter::new(f);
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&(self.meta.len() as u32).to_le_bytes())?;
+        for (k, v) in &self.meta {
+            write_str(&mut w, k)?;
+            write_str(&mut w, v)?;
+        }
+        w.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for (name, t) in &self.tensors {
+            write_str(&mut w, name)?;
+            w.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+            for &d in &t.shape {
+                w.write_all(&(d as u64).to_le_bytes())?;
+            }
+            // bulk-write the f32 payload
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(
+                    t.data.as_ptr() as *const u8,
+                    t.data.len() * 4,
+                )
+            };
+            w.write_all(bytes)?;
+        }
+        w.flush()?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let f = File::open(path.as_ref())
+            .with_context(|| format!("open checkpoint {:?}", path.as_ref()))?;
+        let mut r = BufReader::new(f);
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("not an EKVC checkpoint (bad magic {magic:?})");
+        }
+        let version = read_u32(&mut r)?;
+        if version != VERSION {
+            bail!("unsupported checkpoint version {version}");
+        }
+        let mut ckpt = Checkpoint::new();
+        let n_meta = read_u32(&mut r)?;
+        for _ in 0..n_meta {
+            let k = read_str(&mut r)?;
+            let v = read_str(&mut r)?;
+            ckpt.meta.insert(k, v);
+        }
+        let n_tensors = read_u32(&mut r)?;
+        for _ in 0..n_tensors {
+            let name = read_str(&mut r)?;
+            let rank = read_u32(&mut r)? as usize;
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                let mut b = [0u8; 8];
+                r.read_exact(&mut b)?;
+                shape.push(u64::from_le_bytes(b) as usize);
+            }
+            let n: usize = shape.iter().product();
+            let mut data = vec![0f32; n];
+            let bytes: &mut [u8] = unsafe {
+                std::slice::from_raw_parts_mut(
+                    data.as_mut_ptr() as *mut u8,
+                    n * 4,
+                )
+            };
+            r.read_exact(bytes)?;
+            ckpt.tensors.insert(name, Tensor::new(shape, data));
+        }
+        Ok(ckpt)
+    }
+}
+
+fn write_str<W: Write>(w: &mut W, s: &str) -> Result<()> {
+    w.write_all(&(s.len() as u32).to_le_bytes())?;
+    w.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_str<R: Read>(r: &mut R) -> Result<String> {
+    let len = read_u32(r)? as usize;
+    if len > 1 << 20 {
+        bail!("implausible string length {len}");
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)?;
+    Ok(String::from_utf8(buf)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut rng = Pcg64::seeded(20);
+        let mut ckpt = Checkpoint::new();
+        ckpt.set_meta("config", "tiny");
+        ckpt.set_meta("step", 123);
+        ckpt.insert("embed", Tensor::randn(vec![16, 8], &mut rng));
+        ckpt.insert("l0.wq", Tensor::randn(vec![8, 8], &mut rng));
+        ckpt.insert("scalar", Tensor::scalar(3.25));
+        let dir = std::env::temp_dir().join("elitekv_test_ckpt.ekvc");
+        ckpt.save(&dir).unwrap();
+        let loaded = Checkpoint::load(&dir).unwrap();
+        assert_eq!(loaded.meta["config"], "tiny");
+        assert_eq!(loaded.meta["step"], "123");
+        assert_eq!(loaded.tensors.len(), 3);
+        for (k, t) in &ckpt.tensors {
+            assert_eq!(&loaded.tensors[k].shape, &t.shape);
+            assert!(loaded.tensors[k].max_abs_diff(t) == 0.0);
+        }
+        std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("elitekv_bad_magic.ekvc");
+        std::fs::write(&dir, b"NOPE....").unwrap();
+        assert!(Checkpoint::load(&dir).is_err());
+        std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    fn missing_tensor_is_error() {
+        let ckpt = Checkpoint::new();
+        assert!(ckpt.get("nope").is_err());
+    }
+}

@@ -1,0 +1,225 @@
+//! AOT artifact manifests: the contract between aot.py and the Rust
+//! runtime. A manifest pins the exact argument order, names, shapes and
+//! dtypes of every lowered function for one (config, variant) pair.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::config::{ModelConfig, Variant};
+use crate::util::Json;
+
+/// Dtype of a runtime tensor (all artifacts use f32/i32 only).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+/// One named tensor slot in a function signature.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> TensorSpec {
+        let dtype = match j.get("dtype").and_then(|d| d.as_str()) {
+            Some("i32") => Dtype::I32,
+            _ => Dtype::F32,
+        };
+        TensorSpec {
+            name: j.req("name").as_str().expect("name").to_string(),
+            shape: j.req("shape").as_shape().expect("shape"),
+            dtype,
+        }
+    }
+}
+
+/// One lowered entry point.
+#[derive(Clone, Debug)]
+pub struct FnSpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl FnSpec {
+    /// Index of the input with the given name.
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|t| t.name == name)
+    }
+
+    pub fn output_index(&self, name: &str) -> Option<usize> {
+        self.outputs.iter().position(|t| t.name == name)
+    }
+}
+
+/// The manifest for one (config, variant) artifact family.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config: ModelConfig,
+    pub variant: Variant,
+    pub cache_per_token: usize,
+    pub cache_ratio: f64,
+    /// Ordered (name, shape) of model parameters.
+    pub params: Vec<(String, Vec<usize>)>,
+    /// Ordered (name, shape) of variant extras (elite_mask / theta_e).
+    pub extras: Vec<(String, Vec<usize>)>,
+    pub functions: std::collections::BTreeMap<String, FnSpec>,
+}
+
+impl Manifest {
+    /// Load `dir/<config>_<variant>.json`.
+    pub fn load(dir: impl AsRef<Path>, config: &str, tag: &str) -> Result<Manifest> {
+        let path = dir.as_ref().join(format!("{config}_{tag}.json"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read manifest {path:?} — run `make artifacts`?"))?;
+        let j = Json::parse(&text).context("parse manifest json")?;
+
+        let c = j.req("config");
+        let cfg = ModelConfig {
+            name: c.req("name").as_str().unwrap().into(),
+            d_model: c.req("d_model").as_usize().unwrap(),
+            n_layers: c.req("n_layers").as_usize().unwrap(),
+            n_heads: c.req("n_heads").as_usize().unwrap(),
+            d_head: c.req("d_head").as_usize().unwrap(),
+            d_ffn: c.req("d_ffn").as_usize().unwrap(),
+            vocab: c.req("vocab").as_usize().unwrap(),
+            max_seq: c.req("max_seq").as_usize().unwrap(),
+            rope_base: c.req("rope_base").as_f64().unwrap(),
+        };
+        let vtag = j.req("variant").req("tag").as_str().unwrap();
+        let variant = Variant::parse(vtag)
+            .with_context(|| format!("unknown variant tag {vtag}"))?;
+
+        let specs = |key: &str| -> Vec<(String, Vec<usize>)> {
+            j.req(key)
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|p| {
+                    (
+                        p.req("name").as_str().unwrap().to_string(),
+                        p.req("shape").as_shape().unwrap(),
+                    )
+                })
+                .collect()
+        };
+
+        let mut functions = std::collections::BTreeMap::new();
+        if let Json::Obj(fns) = j.req("functions") {
+            for (name, f) in fns {
+                functions.insert(
+                    name.clone(),
+                    FnSpec {
+                        file: f.req("file").as_str().unwrap().to_string(),
+                        inputs: f
+                            .req("inputs")
+                            .as_arr()
+                            .unwrap()
+                            .iter()
+                            .map(TensorSpec::from_json)
+                            .collect(),
+                        outputs: f
+                            .req("outputs")
+                            .as_arr()
+                            .unwrap()
+                            .iter()
+                            .map(TensorSpec::from_json)
+                            .collect(),
+                    },
+                );
+            }
+        }
+
+        Ok(Manifest {
+            dir: dir.as_ref().to_path_buf(),
+            config: cfg,
+            variant,
+            cache_per_token: j.req("cache_per_token").as_usize().unwrap(),
+            cache_ratio: j.req("cache_ratio").as_f64().unwrap(),
+            params: specs("params"),
+            extras: specs("extras"),
+            functions,
+        })
+    }
+
+    pub fn function(&self, name: &str) -> Result<&FnSpec> {
+        self.functions
+            .get(name)
+            .with_context(|| format!("manifest has no function `{name}`"))
+    }
+
+    /// Absolute path of a function's HLO text file.
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.function(name)?.file))
+    }
+
+    /// Serving batch/seq baked into the prefill/decode artifacts.
+    pub fn serve_shape(&self) -> Result<(usize, usize)> {
+        let f = self.function("decode")?;
+        let tok = &f.inputs[f.input_index("token").context("token input")?];
+        let cache = f
+            .inputs
+            .iter()
+            .find(|t| t.name.starts_with("cache:"))
+            .context("no cache input")?;
+        Ok((tok.shape[0], cache.shape[2]))
+    }
+
+    /// Training batch/seq baked into train_step.
+    pub fn train_shape(&self) -> Result<(usize, usize)> {
+        let f = self.function("train_step")?;
+        let tok = &f.inputs[f.input_index("tokens").context("tokens input")?];
+        Ok((tok.shape[0], tok.shape[1]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Manifests are produced by aot.py; integration tests covering real
+    /// files live in rust/tests/. Here: the JSON plumbing on a synthetic
+    /// manifest.
+    #[test]
+    fn parses_synthetic_manifest() {
+        let dir = std::env::temp_dir().join("elitekv_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let text = r#"{
+          "config": {"name": "tiny", "d_model": 256, "n_layers": 4,
+                     "n_heads": 8, "d_head": 32, "d_ffn": 704, "vocab": 512,
+                     "max_seq": 256, "rope_base": 10000.0},
+          "variant": {"kind": "elitekv", "tag": "elitekv_r4_c64", "r": 4,
+                      "d_ckv": 64, "d_ck": 0, "d_cv": 0, "n_kv_heads": 0},
+          "cache_per_token": 128, "cache_ratio": 0.25,
+          "params": [{"name": "embed", "shape": [512, 256]}],
+          "extras": [{"name": "theta_e", "shape": [4, 8, 4]}],
+          "shapes": {},
+          "functions": {
+            "decode": {"file": "x.hlo.txt",
+              "inputs": [{"name": "param:embed", "shape": [512, 256], "dtype": "f32"},
+                         {"name": "token", "shape": [4], "dtype": "i32"},
+                         {"name": "cache:cache_c", "shape": [4, 4, 256, 64], "dtype": "f32"}],
+              "outputs": [{"name": "logits", "shape": [4, 512], "dtype": "f32"}]}
+          }
+        }"#;
+        std::fs::write(dir.join("tiny_elitekv_r4_c64.json"), text).unwrap();
+        let m = Manifest::load(&dir, "tiny", "elitekv_r4_c64").unwrap();
+        assert_eq!(m.config.d_model, 256);
+        assert_eq!(m.variant, Variant::EliteKv { r: 4, d_ckv: 64 });
+        assert_eq!(m.cache_per_token, 128);
+        let f = m.function("decode").unwrap();
+        assert_eq!(f.inputs[1].dtype, Dtype::I32);
+        assert_eq!(m.serve_shape().unwrap(), (4, 256));
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

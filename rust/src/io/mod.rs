@@ -1,0 +1,7 @@
+//! Persistence: checkpoint binary format and AOT artifact manifests.
+
+pub mod checkpoint;
+pub mod manifest;
+
+pub use checkpoint::Checkpoint;
+pub use manifest::{FnSpec, Manifest, TensorSpec};

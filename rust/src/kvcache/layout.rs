@@ -1,0 +1,81 @@
+//! Cache geometry per architecture variant.
+
+use crate::config::{ModelConfig, Variant};
+
+/// Bytes per f32 element.
+const ELEM: usize = 4;
+
+/// Geometry of one variant's decode cache.
+#[derive(Clone, Debug)]
+pub struct CacheLayout {
+    pub variant: Variant,
+    pub n_layers: usize,
+    /// f32 elements per token per layer (the paper's unit of account).
+    pub elems_per_token_layer: usize,
+    /// Ratio vs. the vanilla MHA cache of the same config.
+    pub ratio: f64,
+}
+
+impl CacheLayout {
+    pub fn new(cfg: &ModelConfig, variant: Variant) -> CacheLayout {
+        let elems = variant.cache_per_token(cfg);
+        CacheLayout {
+            ratio: variant.cache_ratio(cfg),
+            elems_per_token_layer: elems,
+            n_layers: cfg.n_layers,
+            variant,
+        }
+    }
+
+    /// Bytes of cache consumed by one token across all layers.
+    pub fn bytes_per_token(&self) -> usize {
+        self.elems_per_token_layer * self.n_layers * ELEM
+    }
+
+    /// Bytes for a sequence of `len` tokens.
+    pub fn bytes_for_seq(&self, len: usize) -> usize {
+        self.bytes_per_token() * len
+    }
+
+    /// Max concurrent tokens a memory budget supports (the capacity story:
+    /// smaller cache -> more sequences or longer contexts).
+    pub fn tokens_in_budget(&self, budget_bytes: usize) -> usize {
+        budget_bytes / self.bytes_per_token()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_ratios_hold() {
+        let cfg = ModelConfig::small();
+        let base = CacheLayout::new(&cfg, Variant::Mha);
+        let ekv = CacheLayout::new(&cfg, Variant::EliteKv { r: 8, d_ckv: 128 });
+        assert_eq!(base.elems_per_token_layer, 1024);
+        assert_eq!(ekv.elems_per_token_layer, 256);
+        assert!((ekv.ratio - 0.25).abs() < 1e-12);
+        // 4x more tokens fit in the same budget
+        let budget = 1 << 20;
+        assert_eq!(
+            ekv.tokens_in_budget(budget),
+            4 * base.tokens_in_budget(budget)
+        );
+    }
+
+    #[test]
+    fn bytes_scale_with_layers() {
+        let cfg = ModelConfig::tiny();
+        let l = CacheLayout::new(&cfg, Variant::Mha);
+        assert_eq!(l.bytes_per_token(), 512 * 4 * cfg.n_layers);
+        assert_eq!(l.bytes_for_seq(10), 10 * l.bytes_per_token());
+    }
+
+    #[test]
+    fn gqa_matches_head_fraction() {
+        let cfg = ModelConfig::small();
+        let g = CacheLayout::new(&cfg, Variant::Gqa { n_kv_heads: 2 });
+        assert!((g.ratio - 0.25).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,163 @@
+//! Slot manager: binds logical sequences to lanes of the fixed-batch
+//! decode artifacts and tracks per-slot cache occupancy.
+//!
+//! The AOT decode artifact has a baked batch dimension B; the coordinator
+//! multiplexes live requests onto those B lanes (continuous batching).
+//! Idle lanes decode a masked dummy token (length 0 -> attention masked),
+//! which is how vLLM-style slot reuse maps onto a static-shape runtime.
+
+use anyhow::{bail, Result};
+
+use crate::kvcache::layout::CacheLayout;
+
+/// State of one decode lane.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Slot {
+    Idle,
+    /// Occupied by a request (id, current cached length).
+    Busy { request: u64, len: usize },
+}
+
+/// Lane assignment + occupancy accounting for one model's decode batch.
+#[derive(Debug)]
+pub struct SlotManager {
+    pub layout: CacheLayout,
+    pub max_seq: usize,
+    slots: Vec<Slot>,
+}
+
+impl SlotManager {
+    pub fn new(layout: CacheLayout, batch: usize, max_seq: usize) -> SlotManager {
+        SlotManager { layout, max_seq, slots: vec![Slot::Idle; batch] }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn slots(&self) -> &[Slot] {
+        &self.slots
+    }
+
+    pub fn idle_count(&self) -> usize {
+        self.slots.iter().filter(|s| **s == Slot::Idle).count()
+    }
+
+    /// Claim a lane for a request whose prompt has `prompt_len` tokens.
+    pub fn claim(&mut self, request: u64, prompt_len: usize) -> Result<usize> {
+        if prompt_len >= self.max_seq {
+            bail!("prompt of {prompt_len} tokens exceeds max_seq {}",
+                  self.max_seq);
+        }
+        for (i, s) in self.slots.iter_mut().enumerate() {
+            if *s == Slot::Idle {
+                *s = Slot::Busy { request, len: prompt_len };
+                return Ok(i);
+            }
+        }
+        bail!("no idle slot");
+    }
+
+    /// Record one decoded token on a lane; errors at the context limit.
+    pub fn advance(&mut self, slot: usize) -> Result<usize> {
+        match &mut self.slots[slot] {
+            Slot::Busy { len, .. } => {
+                if *len + 1 >= self.max_seq {
+                    bail!("slot {slot} hit max_seq {}", self.max_seq);
+                }
+                *len += 1;
+                Ok(*len)
+            }
+            Slot::Idle => bail!("advance on idle slot {slot}"),
+        }
+    }
+
+    pub fn len_of(&self, slot: usize) -> usize {
+        match &self.slots[slot] {
+            Slot::Busy { len, .. } => *len,
+            Slot::Idle => 0,
+        }
+    }
+
+    pub fn request_of(&self, slot: usize) -> Option<u64> {
+        match &self.slots[slot] {
+            Slot::Busy { request, .. } => Some(*request),
+            Slot::Idle => None,
+        }
+    }
+
+    pub fn free(&mut self, slot: usize) {
+        self.slots[slot] = Slot::Idle;
+    }
+
+    /// Live cache bytes across all busy lanes (the metric Table-1's cache
+    /// column and the serving bench report).
+    pub fn live_cache_bytes(&self) -> usize {
+        self.slots
+            .iter()
+            .map(|s| match s {
+                Slot::Busy { len, .. } => self.layout.bytes_for_seq(*len),
+                Slot::Idle => 0,
+            })
+            .sum()
+    }
+
+    /// Worst-case bytes if every lane filled to max_seq.
+    pub fn capacity_bytes(&self) -> usize {
+        self.batch() * self.layout.bytes_for_seq(self.max_seq)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, Variant};
+
+    fn mgr(variant: Variant) -> SlotManager {
+        let cfg = ModelConfig::tiny();
+        SlotManager::new(CacheLayout::new(&cfg, variant), 4, 64)
+    }
+
+    #[test]
+    fn claim_advance_free_cycle() {
+        let mut m = mgr(Variant::Mha);
+        let s = m.claim(7, 10).unwrap();
+        assert_eq!(m.idle_count(), 3);
+        assert_eq!(m.len_of(s), 10);
+        assert_eq!(m.advance(s).unwrap(), 11);
+        assert_eq!(m.request_of(s), Some(7));
+        m.free(s);
+        assert_eq!(m.idle_count(), 4);
+    }
+
+    #[test]
+    fn rejects_over_capacity() {
+        let mut m = mgr(Variant::Mha);
+        for i in 0..4 {
+            m.claim(i, 1).unwrap();
+        }
+        assert!(m.claim(99, 1).is_err());
+    }
+
+    #[test]
+    fn rejects_long_prompt_and_context_overflow() {
+        let mut m = mgr(Variant::Mha);
+        assert!(m.claim(1, 64).is_err());
+        let s = m.claim(1, 62).unwrap();
+        m.advance(s).unwrap(); // 63
+        assert!(m.advance(s).is_err()); // would hit 64
+    }
+
+    #[test]
+    fn cache_accounting_tracks_compression() {
+        let mut base = mgr(Variant::Mha);
+        let mut ekv = mgr(Variant::EliteKv { r: 4, d_ckv: 64 }); // 25 %
+        let sb = base.claim(1, 40).unwrap();
+        let se = ekv.claim(1, 40).unwrap();
+        assert_eq!(base.live_cache_bytes(), 4 * ekv.live_cache_bytes());
+        base.advance(sb).unwrap();
+        ekv.advance(se).unwrap();
+        assert_eq!(base.live_cache_bytes(), 4 * ekv.live_cache_bytes());
+        assert_eq!(ekv.capacity_bytes() * 4, base.capacity_bytes());
+    }
+}

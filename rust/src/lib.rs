@@ -1,0 +1,49 @@
+//! # EliteKV — scalable KV cache compression
+//!
+//! Reproduction of *"EliteKV: Scalable KV Cache Compression via RoPE
+//! Frequency Selection and Joint Low-Rank Projection"* (2025) as a
+//! three-layer Rust + JAX + Pallas stack. This crate is Layer 3: the
+//! self-contained coordinator that pretrains, searches (RoPElite,
+//! Algorithm 1), converts (J-LRD / S-LRD / GQA weight surgery with the
+//! in-repo Jacobi SVD), uptrains, serves, and benchmarks the models —
+//! executing AOT-lowered HLO artifacts through the PJRT CPU client.
+//! Python never runs on the request path.
+//!
+//! Module map (see DESIGN.md §4 for the full system inventory):
+//!
+//! * [`util`]    — PRNG, JSON, statistics, thread pool, property testing
+//! * [`tensor`]  — minimal CPU f32 tensor with the ops conversion needs
+//! * [`linalg`]  — one-sided Jacobi SVD (substrate for J-LRD / S-LRD)
+//! * [`io`]      — checkpoint binary format + artifact manifests
+//! * [`config`]  — model family / variant / run configuration
+//! * [`rope`]    — host-side RoPE math (frequency ladders, elite thetas)
+//! * [`data`]    — synthetic corpus generator, probe tasks, tokenizer
+//! * [`runtime`] — PJRT engine: load HLO text, compile, execute
+//! * [`convert`] — GQA / EliteKV / S-LRD weight surgery + dim allocation
+//! * [`search`]  — RoPElite greedy driver + Uniform/Contribution baselines
+//! * [`train`]   — pretraining / uptraining loops with metrics
+//! * [`kvcache`] — paged KV-cache manager with per-variant layouts
+//! * [`coordinator`] — serving: router, continuous batcher, scheduler
+//! * [`bench`]   — experiment harness regenerating every paper table/figure
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod convert;
+pub mod coordinator;
+pub mod data;
+pub mod io;
+pub mod kvcache;
+pub mod linalg;
+pub mod rope;
+pub mod runtime;
+pub mod search;
+pub mod tensor;
+pub mod train;
+pub mod util;
+
+/// Repository-relative default artifact directory.
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Repository-relative default results directory for experiments.
+pub const RESULTS_DIR: &str = "results";

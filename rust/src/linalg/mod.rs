@@ -1,0 +1,6 @@
+//! Numerical linear algebra substrate: the SVD backing J-LRD / S-LRD
+//! weight surgery (paper §2.3, §3.2).
+
+pub mod svd;
+
+pub use svd::{svd, svd_truncate, Svd};

@@ -1,0 +1,229 @@
+//! One-sided Jacobi SVD (Hestenes method) in f64, with rank truncation.
+//!
+//! Sizes here are small (the converter decomposes [d, ~2*d] projection
+//! blocks, d <= 768), so the O(n^2) sweep cost is acceptable and Jacobi
+//! gives high relative accuracy — important because the paper's exactness
+//! invariant (full-rank J-LRD == RoPElite) is validated to f32 noise.
+
+use crate::tensor::Tensor;
+
+/// Thin SVD result: `a ≈ u * diag(s) * vt` with descending singular values.
+pub struct Svd {
+    /// [m, k] left singular vectors (k = min(m, n))
+    pub u: Tensor,
+    /// [k] singular values, descending
+    pub s: Vec<f32>,
+    /// [k, n] right singular vectors (transposed)
+    pub vt: Tensor,
+}
+
+const MAX_SWEEPS: usize = 60;
+const TOL: f64 = 1e-12;
+
+/// Compute the thin SVD of a 2-D tensor via one-sided Jacobi on A (or on
+/// A^T when m < n, transposing the result back).
+pub fn svd(a: &Tensor) -> Svd {
+    assert_eq!(a.rank(), 2);
+    let (m, n) = (a.shape[0], a.shape[1]);
+    if m < n {
+        // svd(A^T) = (V, S, U^T) -> swap
+        let r = svd(&a.t());
+        return Svd { u: r.vt.t(), s: r.s, vt: r.u.t() };
+    }
+    // Work on columns of A (m >= n): orthogonalize column pairs.
+    let k = n;
+    // Column-major working copy in f64 for accumulation accuracy.
+    let mut cols: Vec<Vec<f64>> = (0..n)
+        .map(|j| (0..m).map(|i| a.at2(i, j) as f64).collect())
+        .collect();
+    let mut v = vec![vec![0.0f64; n]; n];
+    for (j, row) in v.iter_mut().enumerate() {
+        row[j] = 1.0;
+    }
+
+    for _sweep in 0..MAX_SWEEPS {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let (mut app, mut aqq, mut apq) = (0.0f64, 0.0f64, 0.0f64);
+                for i in 0..m {
+                    app += cols[p][i] * cols[p][i];
+                    aqq += cols[q][i] * cols[q][i];
+                    apq += cols[p][i] * cols[q][i];
+                }
+                if apq.abs() <= TOL * (app * aqq).sqrt().max(1e-300) {
+                    continue;
+                }
+                off += apq.abs();
+                // Jacobi rotation zeroing the (p, q) off-diagonal of A^T A.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let (xp, xq) = (cols[p][i], cols[q][i]);
+                    cols[p][i] = c * xp - s * xq;
+                    cols[q][i] = s * xp + c * xq;
+                }
+                for i in 0..n {
+                    let (vp, vq) = (v[p][i], v[q][i]);
+                    v[p][i] = c * vp - s * vq;
+                    v[q][i] = s * vp + c * vq;
+                }
+            }
+        }
+        if off < TOL {
+            break;
+        }
+    }
+
+    // Singular values = column norms; U = normalized columns.
+    let mut order: Vec<usize> = (0..n).collect();
+    let norms: Vec<f64> = cols
+        .iter()
+        .map(|c| c.iter().map(|x| x * x).sum::<f64>().sqrt())
+        .collect();
+    order.sort_by(|&i, &j| norms[j].partial_cmp(&norms[i]).unwrap());
+
+    let mut u = Tensor::zeros(vec![m, k]);
+    let mut s_out = Vec::with_capacity(k);
+    let mut vt = Tensor::zeros(vec![k, n]);
+    for (rank, &ci) in order.iter().enumerate() {
+        let nrm = norms[ci];
+        s_out.push(nrm as f32);
+        if nrm > 1e-300 {
+            for i in 0..m {
+                u.set2(i, rank, (cols[ci][i] / nrm) as f32);
+            }
+        } else if rank < m {
+            u.set2(rank, rank, 1.0); // arbitrary unit vector for null dims
+        }
+        for j in 0..n {
+            vt.set2(rank, j, v[ci][j] as f32);
+        }
+    }
+    Svd { u, s: s_out, vt }
+}
+
+/// Rank-r truncation per the paper (§2.3): A = U[:, :r],
+/// B = diag(S[:r]) Vt[:r, :]. Returns (A [m,r], B [r,n]).
+pub fn svd_truncate(a: &Tensor, rank: usize) -> (Tensor, Tensor) {
+    let d = svd(a);
+    let (m, n) = (a.shape[0], a.shape[1]);
+    let k = d.s.len();
+    let r = rank.min(k);
+    let mut au = Tensor::zeros(vec![m, r]);
+    for i in 0..m {
+        for j in 0..r {
+            au.set2(i, j, d.u.at2(i, j));
+        }
+    }
+    let mut b = Tensor::zeros(vec![r, n]);
+    for i in 0..r {
+        for j in 0..n {
+            b.set2(i, j, d.s[i] * d.vt.at2(i, j));
+        }
+    }
+    (au, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn reconstruct(d: &Svd) -> Tensor {
+        let k = d.s.len();
+        let mut sv = Tensor::zeros(vec![k, d.vt.shape[1]]);
+        for i in 0..k {
+            for j in 0..d.vt.shape[1] {
+                sv.set2(i, j, d.s[i] * d.vt.at2(i, j));
+            }
+        }
+        d.u.matmul(&sv)
+    }
+
+    #[test]
+    fn reconstructs_tall_matrix() {
+        let mut rng = Pcg64::seeded(10);
+        let a = Tensor::randn(vec![24, 9], &mut rng);
+        let d = svd(&a);
+        assert!(a.max_abs_diff(&reconstruct(&d)) < 1e-4);
+        // descending singular values
+        for w in d.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-6);
+        }
+    }
+
+    #[test]
+    fn reconstructs_wide_matrix() {
+        let mut rng = Pcg64::seeded(11);
+        let a = Tensor::randn(vec![7, 31], &mut rng);
+        let d = svd(&a);
+        assert!(a.max_abs_diff(&reconstruct(&d)) < 1e-4);
+    }
+
+    #[test]
+    fn u_columns_orthonormal() {
+        let mut rng = Pcg64::seeded(12);
+        let a = Tensor::randn(vec![16, 8], &mut rng);
+        let d = svd(&a);
+        let gram = d.u.t().matmul(&d.u);
+        for i in 0..8 {
+            for j in 0..8 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((gram.at2(i, j) - want).abs() < 1e-4, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_known_diagonal() {
+        let a = Tensor::new(vec![3, 3],
+                            vec![3.0, 0., 0., 0., 1.0, 0., 0., 0., 2.0]);
+        let d = svd(&a);
+        assert!((d.s[0] - 3.0).abs() < 1e-5);
+        assert!((d.s[1] - 2.0).abs() < 1e-5);
+        assert!((d.s[2] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn truncation_error_matches_tail_energy() {
+        // Eckart–Young: ||A - A_r||_F^2 == sum of squared tail singulars.
+        let mut rng = Pcg64::seeded(13);
+        let a = Tensor::randn(vec![20, 12], &mut rng);
+        let d = svd(&a);
+        for r in [2usize, 5, 9] {
+            let (u, b) = svd_truncate(&a, r);
+            let err = a.sub(&u.matmul(&b)).fro();
+            let tail: f64 = d.s[r..]
+                .iter()
+                .map(|&s| (s as f64) * (s as f64))
+                .sum::<f64>()
+                .sqrt();
+            assert!((err - tail).abs() < 1e-3, "r={r}: {err} vs {tail}");
+        }
+    }
+
+    #[test]
+    fn full_rank_truncation_is_exact() {
+        let mut rng = Pcg64::seeded(14);
+        let a = Tensor::randn(vec![10, 18], &mut rng);
+        let (u, b) = svd_truncate(&a, 10);
+        assert!(a.max_abs_diff(&u.matmul(&b)) < 1e-4);
+    }
+
+    #[test]
+    fn rank_deficient_input() {
+        // rank-2 matrix: outer products
+        let mut rng = Pcg64::seeded(15);
+        let x = Tensor::randn(vec![12, 2], &mut rng);
+        let y = Tensor::randn(vec![2, 9], &mut rng);
+        let a = x.matmul(&y);
+        let d = svd(&a);
+        assert!(d.s[2] < 1e-4, "third singular value should vanish: {:?}",
+                &d.s[..4]);
+        let (u, b) = svd_truncate(&a, 2);
+        assert!(a.max_abs_diff(&u.matmul(&b)) < 1e-3);
+    }
+}

@@ -1,0 +1,374 @@
+//! `elitekv` — the Layer-3 coordinator CLI.
+//!
+//! Subcommands (run `elitekv help` for details):
+//!   pretrain    train a baseline MHA model from scratch on the synthetic
+//!               corpus and save a checkpoint
+//!   search      RoPElite (Algorithm 1) / Uniform / Contribution chunk
+//!               selection on a pretrained checkpoint
+//!   convert     weight surgery: MHA checkpoint -> gqa / elitekv / slrd
+//!   uptrain     uptrain a converted checkpoint (paper §4.1 recipe)
+//!   eval        probe battery + holdout perplexity for a checkpoint
+//!   serve       run the inference engine on a synthetic request stream
+//!   experiment  regenerate paper tables/figures (table1, table2, fig2,
+//!               fig3, fig5, fig6, fig7, serve, all)
+//!
+//! Python never runs here: all model compute executes from AOT-compiled
+//! HLO artifacts through the PJRT CPU client (`make artifacts` first).
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use elitekv::bench::experiments;
+use elitekv::bench::pipeline::{ExperimentCtx, SweepOpts};
+use elitekv::cli::Args;
+use elitekv::config::{ModelConfig, Variant};
+use elitekv::convert::{self, EliteSelection};
+use elitekv::coordinator::{GenParams, InferenceServer, Request};
+use elitekv::data::{CorpusGen, ProbeSet};
+use elitekv::io::Checkpoint;
+use elitekv::runtime::{Engine, HostTensor, ModelRunner, TrainState};
+use elitekv::search;
+use elitekv::train::{scorer, TrainLoop, TrainOpts};
+
+fn main() {
+    init_logger();
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e:#}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.pos(0).unwrap_or("help") {
+        "pretrain" => cmd_pretrain(args),
+        "search" => cmd_search(args),
+        "convert" => cmd_convert(args),
+        "uptrain" => cmd_uptrain(args),
+        "eval" => cmd_eval(args),
+        "serve" => cmd_serve(args),
+        "experiment" => cmd_experiment(args),
+        "help" | "--help" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => bail!("unknown command `{other}` (try `elitekv help`)"),
+    }
+}
+
+const HELP: &str = "\
+elitekv — EliteKV reproduction coordinator
+
+USAGE: elitekv <command> [flags]
+
+COMMANDS
+  pretrain   --config tiny|small|100m --steps N [--lr F] [--out PATH]
+  search     --config C --ckpt PATH --r N [--method ropelite|uniform|contribution]
+             [--out PATH]
+  convert    --config C --ckpt PATH --variant TAG [--selection PATH] [--out PATH]
+  uptrain    --config C --variant TAG --ckpt PATH [--selection PATH]
+             --steps N [--lr F] [--out PATH]
+  eval       --config C --variant TAG --ckpt PATH [--selection PATH]
+             [--probes N]
+  serve      --config C --variant TAG --ckpt PATH [--selection PATH]
+             [--requests N] [--max-new N] [--pallas]
+  experiment <table1|table2|fig2|fig3|fig5|fig6|fig7|serve|all>
+             [--config tiny] [--out results] [--full]
+
+COMMON FLAGS
+  --artifacts DIR   artifact directory (default: artifacts)
+  ELITEKV_LOG=debug|info|warn|error controls logging
+";
+
+fn init_logger() {
+    struct Stderr;
+    impl log::Log for Stderr {
+        fn enabled(&self, m: &log::Metadata) -> bool {
+            m.level() <= log::max_level()
+        }
+        fn log(&self, r: &log::Record) {
+            if self.enabled(r.metadata()) {
+                eprintln!("[{}] {}", r.level().as_str().to_lowercase(),
+                          r.args());
+            }
+        }
+        fn flush(&self) {}
+    }
+    static LOGGER: Stderr = Stderr;
+    let _ = log::set_logger(&LOGGER);
+    let level = match std::env::var("ELITEKV_LOG").as_deref() {
+        Ok("debug") => log::LevelFilter::Debug,
+        Ok("warn") => log::LevelFilter::Warn,
+        Ok("error") => log::LevelFilter::Error,
+        _ => log::LevelFilter::Info,
+    };
+    log::set_max_level(level);
+}
+
+fn artifacts_dir(args: &Args) -> String {
+    args.str_or("artifacts", elitekv::ARTIFACTS_DIR)
+}
+
+/// Build a runner + params (+extras from a selection file) for a variant.
+fn load_model(
+    args: &Args,
+    cfg_name: &str,
+    tag: &str,
+) -> Result<(ModelRunner, Vec<HostTensor>)> {
+    let engine = Arc::new(Engine::new()?);
+    let mut runner =
+        ModelRunner::new(engine, artifacts_dir(args), cfg_name, tag)?;
+    let cfg = runner.manifest.config.clone();
+    let variant = runner.manifest.variant.clone();
+    if !runner.manifest.extras.is_empty() {
+        let sel_path = args.req("selection")?;
+        let sel = EliteSelection::from_checkpoint(
+            &Checkpoint::load(sel_path)?, &cfg)?;
+        match variant {
+            Variant::RopeLite => {
+                let mask = convert::elitekv::elite_mask_flat(&cfg, &sel);
+                runner.set_extras(vec![HostTensor::F32(
+                    mask, vec![cfg.n_layers, cfg.n_heads, cfg.n_chunks()])])?;
+            }
+            Variant::EliteKv { r, .. } | Variant::Slrd { r, .. } => {
+                anyhow::ensure!(sel.r() == r, "selection r mismatch");
+                let theta = convert::elitekv::elite_thetas_flat(&cfg, &sel);
+                runner.set_extras(vec![HostTensor::F32(
+                    theta, vec![cfg.n_layers, cfg.n_heads, r])])?;
+            }
+            _ => {}
+        }
+    }
+    let ckpt = Checkpoint::load(args.req("ckpt")?)?;
+    let params = runner.params_from_ckpt(&ckpt)?;
+    Ok((runner, params))
+}
+
+fn cmd_pretrain(args: &Args) -> Result<()> {
+    let cfg_name = args.str_or("config", "tiny");
+    let steps = args.usize_or("steps", 300)?;
+    let lr = args.f64_or("lr", 1e-3)? as f32;
+    let out = args.str_or("out", &format!("pretrained_{cfg_name}.ekvc"));
+    let engine = Arc::new(Engine::new()?);
+    let runner =
+        ModelRunner::new(engine, artifacts_dir(args), &cfg_name, "mha")?;
+    let params = runner.init(args.usize_or("seed", 42)? as i32)?;
+    let mut state = TrainState::fresh(params);
+    let opts = TrainOpts { steps, lr, log_every: 20, ..Default::default() };
+    let mut lp = TrainLoop::new(&runner, &opts);
+    let report = lp.run(&mut state, &opts)?;
+    println!(
+        "pretrained {cfg_name}: {} steps, {} tokens, loss {:.4}, ppl {:.3} \
+         ({:.1}s, {:.2} s/step)",
+        steps, report.tokens_seen, report.final_loss, report.final_ppl,
+        report.seconds, report.seconds / steps as f64
+    );
+    let mut ckpt = runner.ckpt_from_params(&state.params)?;
+    ckpt.set_meta("pretrain_steps", steps);
+    ckpt.set_meta("pretrain_tokens", report.tokens_seen);
+    ckpt.save(&out)?;
+    println!("saved {out}");
+    Ok(())
+}
+
+fn cmd_search(args: &Args) -> Result<()> {
+    let cfg_name = args.str_or("config", "tiny");
+    let r = args.usize_or("r", 4)?;
+    let method = args.str_or("method", "ropelite");
+    let out =
+        args.str_or("out", &format!("elite_{cfg_name}_{method}_r{r}.ekvc"));
+    let cfg = ModelConfig::by_name(&cfg_name).context("config")?;
+    let engine = Arc::new(Engine::new()?);
+    let runner =
+        ModelRunner::new(engine, artifacts_dir(args), &cfg_name, "mha")?;
+    let ckpt = Checkpoint::load(args.req("ckpt")?)?;
+    let params = runner.params_from_ckpt(&ckpt)?;
+    let mut gen = CorpusGen::new(cfg.vocab, 1);
+    gen.reseed(1, 0xca11b);
+    let t0 = std::time::Instant::now();
+    let sel = match method.as_str() {
+        "ropelite" => search::ropelite_search(&runner, &params, &mut gen, r)?,
+        "uniform" => search::uniform_selection(&cfg, r),
+        "contribution" => {
+            search::contribution_selection(&runner, &params, &mut gen, r)?
+        }
+        m => bail!("unknown method `{m}`"),
+    };
+    println!(
+        "search `{method}` r={r} done in {:.1}s",
+        t0.elapsed().as_secs_f64()
+    );
+    sel.to_checkpoint(&cfg).save(&out)?;
+    println!("saved {out}");
+    Ok(())
+}
+
+fn cmd_convert(args: &Args) -> Result<()> {
+    let cfg_name = args.str_or("config", "tiny");
+    let cfg = ModelConfig::by_name(&cfg_name).context("config")?;
+    let tag = args.req("variant")?;
+    let variant = Variant::parse(tag).context("bad variant tag")?;
+    let base = Checkpoint::load(args.req("ckpt")?)?;
+    let out = args.str_or("out", &format!("{cfg_name}_{tag}.ekvc"));
+    let converted = match &variant {
+        Variant::Gqa { n_kv_heads } => {
+            convert::convert_gqa(&cfg, &base, *n_kv_heads)?
+        }
+        Variant::EliteKv { r, d_ckv } => {
+            let sel = EliteSelection::from_checkpoint(
+                &Checkpoint::load(args.req("selection")?)?, &cfg)?;
+            anyhow::ensure!(sel.r() == *r, "selection r mismatch");
+            convert::convert_elitekv(&cfg, &base, &sel, *d_ckv)?
+        }
+        Variant::Slrd { r, d_ck, d_cv } => {
+            let sel = EliteSelection::from_checkpoint(
+                &Checkpoint::load(args.req("selection")?)?, &cfg)?;
+            anyhow::ensure!(sel.r() == *r, "selection r mismatch");
+            convert::convert_slrd(&cfg, &base, &sel, *d_ck, *d_cv)?
+        }
+        v => bail!("convert does not apply to `{}`", v.tag()),
+    };
+    converted.save(&out)?;
+    println!(
+        "converted -> {out} (cache ratio {:.1}%)",
+        100.0 * variant.cache_ratio(&cfg)
+    );
+    Ok(())
+}
+
+fn cmd_uptrain(args: &Args) -> Result<()> {
+    let cfg_name = args.str_or("config", "tiny");
+    let tag = args.req("variant")?.to_string();
+    let steps = args.usize_or("steps", 60)?;
+    let lr = args.f64_or("lr", 3e-4)? as f32;
+    let out = args.str_or("out", &format!("uptrained_{cfg_name}_{tag}.ekvc"));
+    let (runner, params) = load_model(args, &cfg_name, &tag)?;
+    let mut state = TrainState::fresh(params);
+    let opts = TrainOpts {
+        steps, lr, log_every: 20, data_seed: 7, ..Default::default()
+    };
+    let mut lp = TrainLoop::new(&runner, &opts);
+    let report = lp.run(&mut state, &opts)?;
+    println!(
+        "uptrained {tag}: loss {:.4}, ppl {:.3} ({:.1}s)",
+        report.final_loss, report.final_ppl, report.seconds
+    );
+    runner.ckpt_from_params(&state.params)?.save(&out)?;
+    println!("saved {out}");
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let cfg_name = args.str_or("config", "tiny");
+    let tag = args.req("variant")?.to_string();
+    let (runner, params) = load_model(args, &cfg_name, &tag)?;
+    let n = args.usize_or("probes", 25)?;
+    let gen = CorpusGen::new(runner.manifest.config.vocab, 1);
+    let probes = ProbeSet::generate(&gen, n, 99);
+    let rep = scorer::full_report(&runner, &params, &probes, 4)?;
+    println!(
+        "variant {tag} (cache {:.1}%)",
+        100.0 * runner.manifest.cache_ratio
+    );
+    for (task, acc) in &rep.scores.task_acc {
+        println!("  {task:<10} {:6.2}", 100.0 * acc);
+    }
+    println!("  {:<10} {:6.2}", "Avg.", 100.0 * rep.scores.average);
+    println!("  {:<10} {:6.3}", "ppl", rep.ppl);
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg_name = args.str_or("config", "tiny");
+    let tag = args.req("variant")?.to_string();
+    let n = args.usize_or("requests", 24)?;
+    let max_new = args.usize_or("max-new", 16)?;
+    let (runner, params) = load_model(args, &cfg_name, &tag)?;
+    let vocab = runner.manifest.config.vocab;
+    let mut server = InferenceServer::new(runner, params, 64 << 20)?;
+    server.use_pallas = args.has("pallas");
+    let gen = CorpusGen::new(vocab, 1);
+    let probes = ProbeSet::generate(&gen, n.div_ceil(6), 7777);
+    let t0 = std::time::Instant::now();
+    for (i, item) in probes.items.iter().take(n).enumerate() {
+        server.submit(Request::new(
+            i as u64,
+            item.prompt.clone(),
+            GenParams { max_new_tokens: max_new, ..Default::default() },
+        ));
+    }
+    let responses = server.run_to_completion()?;
+    let wall = t0.elapsed().as_secs_f64();
+    let toks: usize = responses.iter().map(|r| r.tokens.len()).sum();
+    println!(
+        "served {} requests, {} tokens in {:.2}s ({:.1} tok/s); \
+         prefills {}, decode steps {}, peak cache {} KiB",
+        responses.len(), toks, wall, toks as f64 / wall,
+        server.stats.prefills, server.stats.decode_steps,
+        server.stats.peak_cache_bytes / 1024
+    );
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let which = args.pos(1).unwrap_or("all");
+    let cfg_name = args.str_or("config", "tiny");
+    let results = args.str_or("out", elitekv::RESULTS_DIR);
+    let opts = if args.has("full") {
+        SweepOpts::full()
+    } else {
+        SweepOpts::quick()
+    };
+    let ctx = ExperimentCtx::new(artifacts_dir(args), &results, opts)?;
+    match which {
+        "table1" => {
+            experiments::table1(&ctx, &cfg_name)?;
+        }
+        "table2" => {
+            experiments::table2(&ctx, &cfg_name)?;
+        }
+        "fig2" => {
+            let cfg = ModelConfig::by_name(&cfg_name).context("config")?;
+            let r = args.usize_or("r", cfg.n_chunks() / 2)?;
+            experiments::fig2(&ctx, &cfg_name, r)?;
+        }
+        "fig3" => {
+            experiments::fig3(&ctx, &cfg_name)?;
+        }
+        "fig5" => {
+            experiments::fig5(&ctx, "tiny")?;
+        }
+        "fig6" => {
+            experiments::fig6(&ctx, &cfg_name)?;
+        }
+        "fig7" => {
+            let models = args.str_or("models", "tiny,small");
+            let names: Vec<&str> = models.split(',').collect();
+            experiments::fig7(&ctx, &names)?;
+        }
+        "serve" => {
+            experiments::serve_bench(&ctx, &cfg_name,
+                                     args.usize_or("requests", 24)?)?;
+        }
+        "all" => {
+            experiments::table1(&ctx, &cfg_name)?;
+            experiments::table2(&ctx, &cfg_name)?;
+            let cfg = ModelConfig::by_name(&cfg_name).context("config")?;
+            experiments::fig2(&ctx, &cfg_name, cfg.n_chunks() / 2)?;
+            experiments::fig3(&ctx, &cfg_name)?;
+            experiments::fig5(&ctx, "tiny")?;
+            experiments::fig6(&ctx, &cfg_name)?;
+            experiments::fig7(&ctx, &["tiny", "small"])?;
+            experiments::serve_bench(&ctx, &cfg_name, 24)?;
+        }
+        other => bail!("unknown experiment `{other}`"),
+    }
+    Ok(())
+}

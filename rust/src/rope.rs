@@ -1,0 +1,150 @@
+//! Host-side RoPE math: frequency ladders, elite-theta tables, rotations.
+//!
+//! The heavy lifting runs inside the HLO artifacts; this module supplies
+//! the *tables* those artifacts consume (the `theta_e` extra for the
+//! elitekv/slrd variants, the `elite_mask` for ropelite) and a reference
+//! rotation used by the kv-cache tests.
+
+use crate::config::ModelConfig;
+
+/// theta_i = base^(-i / nc) for chunk i (paper §2.2 ladder).
+pub fn chunk_theta(base: f64, chunk: usize, n_chunks: usize) -> f64 {
+    base.powf(-(chunk as f64) / n_chunks as f64)
+}
+
+/// Full frequency ladder for a head: [nc].
+pub fn ladder(base: f64, n_chunks: usize) -> Vec<f64> {
+    (0..n_chunks).map(|i| chunk_theta(base, i, n_chunks)).collect()
+}
+
+/// Build the `theta_e` extra [L, nh, r] (row-major flat) from elite chunk
+/// indices [L, nh, r].
+pub fn elite_thetas(cfg: &ModelConfig, elite: &[Vec<Vec<usize>>]) -> Vec<f32> {
+    let nc = cfg.n_chunks();
+    let mut out = Vec::new();
+    for layer in elite {
+        for head in layer {
+            for &c in head {
+                out.push(chunk_theta(cfg.rope_base, c, nc) as f32);
+            }
+        }
+    }
+    out
+}
+
+/// Build the `elite_mask` extra [L, nh, nc] (row-major flat) from elite
+/// chunk indices.
+pub fn elite_mask(cfg: &ModelConfig, elite: &[Vec<Vec<usize>>]) -> Vec<f32> {
+    let nc = cfg.n_chunks();
+    let mut out = vec![0.0f32; cfg.n_layers * cfg.n_heads * nc];
+    for (l, layer) in elite.iter().enumerate() {
+        for (h, head) in layer.iter().enumerate() {
+            for &c in head {
+                debug_assert!(c < nc);
+                out[(l * cfg.n_heads + h) * nc + c] = 1.0;
+            }
+        }
+    }
+    out
+}
+
+/// Rotate one head vector's chunk `c` at position `pos` (reference math
+/// for tests): dims (2c, 2c+1).
+pub fn rotate_chunk(x: &mut [f32], c: usize, theta: f64, pos: i64) {
+    let ang = pos as f64 * theta;
+    let (sin, cos) = ang.sin_cos();
+    let (x0, x1) = (x[2 * c] as f64, x[2 * c + 1] as f64);
+    x[2 * c] = (x0 * cos - x1 * sin) as f32;
+    x[2 * c + 1] = (x0 * sin + x1 * cos) as f32;
+}
+
+/// The `Uniform` baseline (paper §4.3.1): r chunks evenly spaced over the
+/// ladder, identical for every head.
+pub fn uniform_chunks(n_chunks: usize, r: usize) -> Vec<usize> {
+    assert!(r >= 1 && r <= n_chunks);
+    if r == 1 {
+        return vec![0];
+    }
+    (0..r)
+        .map(|i| {
+            ((i as f64) * (n_chunks - 1) as f64 / (r - 1) as f64).round()
+                as usize
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_descends_from_one() {
+        let l = ladder(10000.0, 16);
+        assert!((l[0] - 1.0).abs() < 1e-12);
+        for w in l.windows(2) {
+            assert!(w[0] > w[1]);
+        }
+    }
+
+    #[test]
+    fn rotation_preserves_norm() {
+        let mut x = vec![3.0, 4.0];
+        rotate_chunk(&mut x, 0, 0.123, 77);
+        let n = (x[0] * x[0] + x[1] * x[1]).sqrt();
+        assert!((n - 5.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn rotation_relative_position_property() {
+        // (R(m t) q) . (R(n t) k) == q . (R((n - m) t) k)
+        let theta = 0.37;
+        let q0 = [1.2f32, -0.7];
+        let k0 = [0.4f32, 2.2];
+        let (m, n) = (9i64, 4i64);
+        let mut qm = q0;
+        let mut kn = k0;
+        rotate_chunk(&mut qm, 0, theta, m);
+        rotate_chunk(&mut kn, 0, theta, n);
+        let lhs = qm[0] * kn[0] + qm[1] * kn[1];
+        let mut krel = k0;
+        rotate_chunk(&mut krel, 0, theta, n - m);
+        let rhs = q0[0] * krel[0] + q0[1] * krel[1];
+        assert!((lhs - rhs).abs() < 1e-5, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn mask_marks_exactly_r_chunks_per_head() {
+        let cfg = ModelConfig::tiny();
+        let elite = vec![
+            vec![vec![0usize, 3, 7]; cfg.n_heads];
+            cfg.n_layers
+        ];
+        let m = elite_mask(&cfg, &elite);
+        let nc = cfg.n_chunks();
+        for lh in 0..cfg.n_layers * cfg.n_heads {
+            let row = &m[lh * nc..(lh + 1) * nc];
+            assert_eq!(row.iter().filter(|&&x| x == 1.0).count(), 3);
+            assert_eq!(row[0], 1.0);
+            assert_eq!(row[3], 1.0);
+            assert_eq!(row[7], 1.0);
+        }
+    }
+
+    #[test]
+    fn thetas_follow_ladder() {
+        let cfg = ModelConfig::tiny();
+        let elite = vec![vec![vec![0usize, 5]; cfg.n_heads]; cfg.n_layers];
+        let t = elite_thetas(&cfg, &elite);
+        assert!((t[0] as f64 - 1.0).abs() < 1e-9);
+        let want = chunk_theta(cfg.rope_base, 5, cfg.n_chunks());
+        assert!((t[1] as f64 - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn uniform_chunks_span_ladder() {
+        assert_eq!(uniform_chunks(16, 4), vec![0, 5, 10, 15]);
+        assert_eq!(uniform_chunks(16, 1), vec![0]);
+        assert_eq!(uniform_chunks(16, 16),
+                   (0..16).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,225 @@
+//! Engine: one PJRT CPU client + a compile cache of loaded executables.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::io::manifest::{Dtype, FnSpec};
+
+/// A host-side tensor crossing the PJRT boundary.
+#[derive(Clone, Debug)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl HostTensor {
+    pub fn scalar_f32(x: f32) -> HostTensor {
+        HostTensor::F32(vec![x], vec![])
+    }
+
+    pub fn scalar_i32(x: i32) -> HostTensor {
+        HostTensor::I32(vec![x], vec![])
+    }
+
+    pub fn zeros(shape: &[usize]) -> HostTensor {
+        HostTensor::F32(vec![0.0; shape.iter().product()], shape.to_vec())
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(_, s) | HostTensor::I32(_, s) => s,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            HostTensor::F32(..) => Dtype::F32,
+            HostTensor::I32(..) => Dtype::I32,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(d, _) => Ok(d),
+            _ => bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32(d, _) => Ok(d),
+            _ => bail!("expected i32 tensor, got f32"),
+        }
+    }
+
+    /// Scalar f32 value (accepts rank-0 or single-element tensors).
+    pub fn scalar(&self) -> Result<f32> {
+        let d = self.as_f32()?;
+        if d.len() != 1 {
+            bail!("expected scalar, shape {:?}", self.shape());
+        }
+        Ok(d[0])
+    }
+
+    /// Convert to/from the offline `tensor::Tensor` (f32 only).
+    pub fn from_tensor(t: &crate::tensor::Tensor) -> HostTensor {
+        HostTensor::F32(t.data.clone(), t.shape.clone())
+    }
+
+    pub fn to_tensor(&self) -> Result<crate::tensor::Tensor> {
+        Ok(crate::tensor::Tensor::new(
+            self.shape().to_vec(),
+            self.as_f32()?.to_vec(),
+        ))
+    }
+
+    /// Upload to a device buffer we own (freed on drop — unlike the
+    /// crate's `execute(&[Literal])` path, which leaks its uploads).
+    fn to_device(&self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
+        match self {
+            HostTensor::F32(d, s) => client
+                .buffer_from_host_buffer::<f32>(d, s, None)
+                .map_err(|e| anyhow::anyhow!("upload f32: {e:?}")),
+            HostTensor::I32(d, s) => client
+                .buffer_from_host_buffer::<i32>(d, s, None)
+                .map_err(|e| anyhow::anyhow!("upload i32: {e:?}")),
+        }
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit
+            .array_shape()
+            .map_err(|e| anyhow::anyhow!("literal shape: {e:?}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(HostTensor::F32(
+                lit.to_vec::<f32>()
+                    .map_err(|e| anyhow::anyhow!("to_vec f32: {e:?}"))?,
+                dims,
+            )),
+            xla::ElementType::S32 => Ok(HostTensor::I32(
+                lit.to_vec::<i32>()
+                    .map_err(|e| anyhow::anyhow!("to_vec i32: {e:?}"))?,
+                dims,
+            )),
+            ty => bail!("unsupported output element type {ty:?}"),
+        }
+    }
+}
+
+/// A compiled artifact bound to its manifest signature.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Client handle used to create input buffers. NOTE: we deliberately
+    /// route execution through `execute_b` with buffers we own — the
+    /// crate's `execute(&[Literal])` path leaks every input device buffer
+    /// (`buffer.release()` in xla_rs.cc:900 without a matching free),
+    /// which at ~27 MB of inputs per train step exhausts memory in
+    /// minutes. See EXPERIMENTS.md §Perf for the before/after.
+    client: xla::PjRtClient,
+    /// Signature from the manifest; `None` for ad-hoc loads.
+    pub spec: Option<FnSpec>,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with host tensors; returns the decomposed output tuple.
+    /// Inputs are borrowed — uploads go straight from the caller's memory
+    /// to device buffers without an intermediate host copy.
+    pub fn run(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        if let Some(spec) = &self.spec {
+            if inputs.len() != spec.inputs.len() {
+                bail!(
+                    "{}: expected {} inputs, got {}",
+                    self.name, spec.inputs.len(), inputs.len()
+                );
+            }
+            for (i, (&t, s)) in inputs.iter().zip(&spec.inputs).enumerate() {
+                if t.shape() != s.shape.as_slice() || t.dtype() != s.dtype {
+                    bail!(
+                        "{}: input {i} (`{}`) expects {:?} {:?}, got {:?} {:?}",
+                        self.name, s.name, s.dtype, s.shape, t.dtype(),
+                        t.shape()
+                    );
+                }
+            }
+        }
+        let buffers: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|t| t.to_device(&self.client))
+            .collect::<Result<_>>()?;
+        let outs = self
+            .exe
+            .execute_b::<xla::PjRtBuffer>(&buffers)
+            .map_err(|e| anyhow::anyhow!("{}: execute: {e:?}", self.name))?;
+        drop(buffers); // inputs freed eagerly (outputs alias nothing)
+        // aot.py lowers with return_tuple=True: one tuple output per replica.
+        let tuple = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("{}: to_literal: {e:?}", self.name))?;
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("{}: untuple: {e:?}", self.name))?;
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+}
+
+/// PJRT CPU client + executable cache keyed by artifact path.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, Arc<Executable>>>,
+}
+
+impl Engine {
+    pub fn new() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PjRtClient::cpu: {e:?}"))?;
+        Ok(Engine { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Load and compile an HLO-text artifact (cached by path).
+    pub fn load(
+        &self,
+        path: impl AsRef<Path>,
+        spec: Option<FnSpec>,
+    ) -> Result<Arc<Executable>> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(hit) = self.cache.lock().unwrap().get(&path) {
+            return Ok(Arc::clone(hit));
+        }
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse HLO text {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {path:?}: {e:?}"))?;
+        log::debug!("compiled {path:?} in {:?}", t0.elapsed());
+        let name = path
+            .file_name()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_default();
+        let out = Arc::new(Executable {
+            exe,
+            client: self.client.clone(),
+            spec,
+            name,
+        });
+        self.cache.lock().unwrap().insert(path, Arc::clone(&out));
+        Ok(out)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute many.
+//!
+//! The interchange format is HLO *text* (see DESIGN.md §3): aot.py lowers
+//! jax to stablehlo, converts to an XlaComputation and dumps
+//! `as_hlo_text()`; we parse with `HloModuleProto::from_text_file`, which
+//! reassigns instruction ids and sidesteps the 64-bit-id proto
+//! incompatibility between jax >= 0.5 and xla_extension 0.5.1.
+
+pub mod engine;
+pub mod session;
+
+pub use engine::{Engine, Executable, HostTensor};
+pub use session::{ModelRunner, TrainState};

@@ -1,0 +1,359 @@
+//! ModelRunner: a (config, variant) artifact family bound to the engine —
+//! the typed façade every higher layer (trainer, search, converter,
+//! serving coordinator, benches) talks to.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::corpus::Batch;
+use crate::io::{Checkpoint, Manifest};
+use crate::runtime::engine::{Engine, Executable, HostTensor};
+
+/// Parameters + AdamW state in manifest order.
+pub struct TrainState {
+    pub params: Vec<HostTensor>,
+    pub m: Vec<HostTensor>,
+    pub v: Vec<HostTensor>,
+    pub step: i32,
+}
+
+impl TrainState {
+    /// Fresh optimizer state around existing parameters.
+    pub fn fresh(params: Vec<HostTensor>) -> TrainState {
+        let zeros: Vec<HostTensor> =
+            params.iter().map(|p| HostTensor::zeros(p.shape())).collect();
+        TrainState { m: zeros.clone(), v: zeros, params, step: 0 }
+    }
+}
+
+/// Typed access to one (config, variant) artifact family.
+pub struct ModelRunner {
+    pub engine: Arc<Engine>,
+    pub manifest: Manifest,
+    /// Variant extras (elite_mask / theta_e) in manifest order; must be
+    /// set before running any model function when the variant has extras.
+    extras: Vec<HostTensor>,
+}
+
+impl ModelRunner {
+    pub fn new(
+        engine: Arc<Engine>,
+        artifacts: impl AsRef<Path>,
+        config: &str,
+        tag: &str,
+    ) -> Result<ModelRunner> {
+        let manifest = Manifest::load(artifacts, config, tag)?;
+        Ok(ModelRunner { engine, manifest, extras: Vec::new() })
+    }
+
+    /// Install the variant extras (validated against the manifest).
+    pub fn set_extras(&mut self, extras: Vec<HostTensor>) -> Result<()> {
+        if extras.len() != self.manifest.extras.len() {
+            bail!(
+                "variant `{}` expects {} extras, got {}",
+                self.manifest.variant.tag(),
+                self.manifest.extras.len(),
+                extras.len()
+            );
+        }
+        for (t, (name, shape)) in extras.iter().zip(&self.manifest.extras) {
+            if t.shape() != shape.as_slice() {
+                bail!("extra `{name}` expects shape {shape:?}, got {:?}",
+                      t.shape());
+            }
+        }
+        self.extras = extras;
+        Ok(())
+    }
+
+    fn need_extras(&self) -> Result<&[HostTensor]> {
+        if self.extras.len() != self.manifest.extras.len() {
+            bail!(
+                "variant `{}` requires extras ({:?}) — call set_extras first",
+                self.manifest.variant.tag(),
+                self.manifest.extras.iter().map(|(n, _)| n).collect::<Vec<_>>()
+            );
+        }
+        Ok(&self.extras)
+    }
+
+    pub fn exec(&self, name: &str) -> Result<Arc<Executable>> {
+        let spec = self.manifest.function(name)?.clone();
+        self.engine.load(self.manifest.hlo_path(name)?, Some(spec))
+    }
+
+    // ------------------------------------------------------------------
+    // Parameter plumbing
+    // ------------------------------------------------------------------
+
+    /// Initialize parameters from the AOT init artifact.
+    pub fn init(&self, seed: i32) -> Result<Vec<HostTensor>> {
+        let seed_t = HostTensor::scalar_i32(seed);
+        let outs = self.exec("init")?.run(&[&seed_t])?;
+        Ok(outs)
+    }
+
+    /// Flatten a checkpoint into manifest parameter order.
+    pub fn params_from_ckpt(&self, ckpt: &Checkpoint) -> Result<Vec<HostTensor>> {
+        self.manifest
+            .params
+            .iter()
+            .map(|(name, shape)| {
+                let t = ckpt.get(name)?;
+                if &t.shape != shape {
+                    bail!("param `{name}`: checkpoint {:?} vs manifest {shape:?}",
+                          t.shape);
+                }
+                Ok(HostTensor::from_tensor(t))
+            })
+            .collect()
+    }
+
+    /// Pack manifest-ordered params into a named checkpoint.
+    pub fn ckpt_from_params(&self, params: &[HostTensor]) -> Result<Checkpoint> {
+        let mut ckpt = Checkpoint::new();
+        ckpt.set_meta("config", &self.manifest.config.name);
+        ckpt.set_meta("variant", self.manifest.variant.tag());
+        for ((name, _), t) in self.manifest.params.iter().zip(params) {
+            ckpt.insert(name, t.to_tensor()?);
+        }
+        Ok(ckpt)
+    }
+
+    /// Extract one named parameter tensor from a manifest-ordered list.
+    pub fn param<'a>(
+        &self,
+        params: &'a [HostTensor],
+        name: &str,
+    ) -> Result<&'a HostTensor> {
+        let idx = self
+            .manifest
+            .params
+            .iter()
+            .position(|(n, _)| n == name)
+            .with_context(|| format!("no param `{name}`"))?;
+        Ok(&params[idx])
+    }
+
+    // ------------------------------------------------------------------
+    // Training / evaluation
+    // ------------------------------------------------------------------
+
+    /// One AdamW step in-graph. Updates `state` in place; returns
+    /// (loss, grad_norm).
+    pub fn train_step(
+        &self,
+        state: &mut TrainState,
+        batch: &Batch,
+        lr: f32,
+    ) -> Result<(f32, f32)> {
+        let exe = self.exec("train_step")?;
+        let extras = self.need_extras()?;
+        let np = state.params.len();
+        let step_t = HostTensor::scalar_i32(state.step);
+        let lr_t = HostTensor::scalar_f32(lr);
+        let tokens_t = HostTensor::I32(batch.tokens.clone(),
+                                       vec![batch.batch, batch.seq]);
+        let targets_t = HostTensor::I32(batch.targets.clone(),
+                                        vec![batch.batch, batch.seq]);
+        let mask_t = HostTensor::F32(batch.mask.clone(),
+                                     vec![batch.batch, batch.seq]);
+        let mut inputs: Vec<&HostTensor> =
+            Vec::with_capacity(3 * np + 2 + extras.len() + 3);
+        inputs.extend(state.params.iter());
+        inputs.extend(state.m.iter());
+        inputs.extend(state.v.iter());
+        inputs.push(&step_t);
+        inputs.push(&lr_t);
+        inputs.extend(extras.iter());
+        inputs.push(&tokens_t);
+        inputs.push(&targets_t);
+        inputs.push(&mask_t);
+        let mut outs = exe.run(&inputs)?;
+        // outputs: params*np, m*np, v*np, step, loss, gnorm
+        let gnorm = outs.pop().context("gnorm")?.scalar()?;
+        let loss = outs.pop().context("loss")?.scalar()?;
+        let step = outs.pop().context("step")?;
+        state.step = step.as_i32()?[0];
+        state.v = outs.split_off(2 * np);
+        state.m = outs.split_off(np);
+        state.params = outs;
+        Ok((loss, gnorm))
+    }
+
+    /// Summed NLL + token count over one batch.
+    pub fn eval_loss(&self, params: &[HostTensor], batch: &Batch) -> Result<(f64, f64)> {
+        let exe = self.exec("eval_loss")?;
+        let extras = self.need_extras()?;
+        let tokens_t = HostTensor::I32(batch.tokens.clone(),
+                                       vec![batch.batch, batch.seq]);
+        let targets_t = HostTensor::I32(batch.targets.clone(),
+                                        vec![batch.batch, batch.seq]);
+        let mask_t = HostTensor::F32(batch.mask.clone(),
+                                     vec![batch.batch, batch.seq]);
+        let mut inputs: Vec<&HostTensor> =
+            Vec::with_capacity(params.len() + extras.len() + 3);
+        inputs.extend(params.iter());
+        inputs.extend(extras.iter());
+        inputs.push(&tokens_t);
+        inputs.push(&targets_t);
+        inputs.push(&mask_t);
+        let outs = exe.run(&inputs)?;
+        Ok((outs[0].scalar()? as f64, outs[1].scalar()? as f64))
+    }
+
+    /// Perplexity over `n_batches` freshly drawn eval batches.
+    pub fn perplexity(
+        &self,
+        params: &[HostTensor],
+        gen: &mut crate::data::CorpusGen,
+        n_batches: usize,
+    ) -> Result<f64> {
+        let (b, t) = self.eval_shape()?;
+        let mut sum = 0.0;
+        let mut count = 0.0;
+        for _ in 0..n_batches {
+            let batch = gen.next_batch(b, t);
+            let (s, c) = self.eval_loss(params, &batch)?;
+            sum += s;
+            count += c;
+        }
+        Ok((sum / count).exp())
+    }
+
+    pub fn eval_shape(&self) -> Result<(usize, usize)> {
+        let f = self.manifest.function("eval_loss")?;
+        let tok = &f.inputs[f.input_index("tokens").context("tokens")?];
+        Ok((tok.shape[0], tok.shape[1]))
+    }
+
+    // ------------------------------------------------------------------
+    // Serving
+    // ------------------------------------------------------------------
+
+    /// Prefill a padded prompt batch. Returns (last-position logits
+    /// [B, vocab], cache tensors).
+    pub fn prefill(
+        &self,
+        params: &[HostTensor],
+        tokens: &[i32],
+        true_len: &[i32],
+    ) -> Result<(HostTensor, Vec<HostTensor>)> {
+        let exe = self.exec("prefill")?;
+        let (b, s) = self.manifest.serve_shape()?;
+        if tokens.len() != b * s || true_len.len() != b {
+            bail!("prefill expects tokens [{b},{s}] and true_len [{b}]");
+        }
+        let extras = self.need_extras()?;
+        let tokens_t = HostTensor::I32(tokens.to_vec(), vec![b, s]);
+        let len_t = HostTensor::I32(true_len.to_vec(), vec![b]);
+        let mut inputs: Vec<&HostTensor> =
+            Vec::with_capacity(params.len() + extras.len() + 2);
+        inputs.extend(params.iter());
+        inputs.extend(extras.iter());
+        inputs.push(&tokens_t);
+        inputs.push(&len_t);
+        let mut outs = exe.run(&inputs)?;
+        let caches = outs.split_off(1);
+        Ok((outs.pop().unwrap(), caches))
+    }
+
+    /// One decode step over explicit caches. `pallas` selects the
+    /// Pallas-lowered artifact where available (elitekv variants).
+    pub fn decode(
+        &self,
+        params: &[HostTensor],
+        token: &[i32],
+        pos: &[i32],
+        caches: Vec<HostTensor>,
+        pallas: bool,
+    ) -> Result<(HostTensor, Vec<HostTensor>)> {
+        let name = if pallas && self.manifest.functions.contains_key("decode_pallas")
+        {
+            "decode_pallas"
+        } else {
+            "decode"
+        };
+        let exe = self.exec(name)?;
+        let (b, _s) = self.manifest.serve_shape()?;
+        if token.len() != b || pos.len() != b {
+            bail!("decode expects token/pos of length {b}");
+        }
+        let extras = self.need_extras()?;
+        let token_t = HostTensor::I32(token.to_vec(), vec![b]);
+        let pos_t = HostTensor::I32(pos.to_vec(), vec![b]);
+        let mut inputs: Vec<&HostTensor> =
+            Vec::with_capacity(params.len() + extras.len() + 2 + caches.len());
+        inputs.extend(params.iter());
+        inputs.extend(extras.iter());
+        inputs.push(&token_t);
+        inputs.push(&pos_t);
+        inputs.extend(caches.iter());
+        let mut outs = exe.run(&inputs)?;
+        let caches = outs.split_off(1);
+        Ok((outs.pop().unwrap(), caches))
+    }
+
+    /// Zero-filled cache tensors for the serving artifacts.
+    pub fn empty_caches(&self) -> Result<Vec<HostTensor>> {
+        let f = self.manifest.function("decode")?;
+        Ok(f.inputs
+            .iter()
+            .filter(|t| t.name.starts_with("cache:"))
+            .map(|t| HostTensor::zeros(&t.shape))
+            .collect())
+    }
+
+    // ------------------------------------------------------------------
+    // RoPElite search support (baseline mha artifacts only)
+    // ------------------------------------------------------------------
+
+    /// Per-layer pre-RoPE q/k on a calibration batch:
+    /// returns (q [L,B,T,nh,dh], k [L,B,T,nh,dh]).
+    pub fn capture_qk(
+        &self,
+        params: &[HostTensor],
+        tokens: &[i32],
+    ) -> Result<(HostTensor, HostTensor)> {
+        let exe = self.exec("capture_qk")?;
+        let f = self.manifest.function("capture_qk")?;
+        let tok = &f.inputs[f.input_index("tokens").context("tokens")?];
+        let (b, t) = (tok.shape[0], tok.shape[1]);
+        if tokens.len() != b * t {
+            bail!("capture_qk expects tokens [{b},{t}]");
+        }
+        let tokens_t = HostTensor::I32(tokens.to_vec(), vec![b, t]);
+        let mut inputs: Vec<&HostTensor> = params.iter().collect();
+        inputs.push(&tokens_t);
+        let mut outs = exe.run(&inputs)?;
+        let k = outs.pop().context("k_pre")?;
+        let q = outs.pop().context("q_pre")?;
+        Ok((q, k))
+    }
+
+    /// Algorithm-1 inner step for one layer: distances [nh, nc].
+    pub fn ropelite_delta(
+        &self,
+        q_layer: &HostTensor,
+        k_layer: &HostTensor,
+        mask: &HostTensor,
+    ) -> Result<HostTensor> {
+        let exe = self.exec("ropelite_delta")?;
+        let mut outs = exe.run(&[q_layer, k_layer, mask])?;
+        Ok(outs.pop().context("distance")?)
+    }
+
+    /// Contribution baseline scores [L, nh, nc].
+    pub fn contribution(
+        &self,
+        q: &HostTensor,
+        k: &HostTensor,
+    ) -> Result<HostTensor> {
+        let exe = self.exec("contribution")?;
+        let mut outs = exe.run(&[q, k])?;
+        Ok(outs.pop().context("scores")?)
+    }
+}
+

@@ -1,0 +1,10 @@
+//! RoPElite search (paper §3.1, Algorithm 1) and the §4.3.1 baselines.
+//!
+//! The greedy driver runs in Rust; the vectorized inner step (distances
+//! for every head x candidate chunk in one call — Appendix B's
+//! single-forward-pass parallelism via the incremental-delta trick, see
+//! DESIGN.md §6) executes as the `ropelite_delta` HLO artifact.
+
+pub mod ropelite;
+
+pub use ropelite::{contribution_selection, ropelite_search, uniform_selection};

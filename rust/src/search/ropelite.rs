@@ -1,0 +1,151 @@
+//! Greedy elite-chunk search + Uniform / Contribution baselines.
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ModelConfig;
+use crate::convert::EliteSelection;
+use crate::runtime::{HostTensor, ModelRunner};
+
+/// Capture pre-RoPE q/k on a calibration stream drawn from `gen`.
+/// Returns per-layer tensors sliced out of the stacked capture.
+pub fn capture_calibration(
+    runner: &ModelRunner,
+    params: &[HostTensor],
+    gen: &mut crate::data::CorpusGen,
+) -> Result<(Vec<HostTensor>, Vec<HostTensor>)> {
+    let f = runner.manifest.function("capture_qk")?;
+    let tok = &f.inputs[f.input_index("tokens").context("tokens")?];
+    let (b, t) = (tok.shape[0], tok.shape[1]);
+    let tokens: Vec<i32> = gen.stream(b * t).iter().map(|&x| x as i32).collect();
+    let (q, k) = runner.capture_qk(params, &tokens)?;
+    let cfg = &runner.manifest.config;
+    Ok((split_layers(&q, cfg)?, split_layers(&k, cfg)?))
+}
+
+fn split_layers(x: &HostTensor, cfg: &ModelConfig) -> Result<Vec<HostTensor>> {
+    let shape = x.shape().to_vec();
+    if shape.len() != 5 || shape[0] != cfg.n_layers {
+        bail!("expected [L,B,T,nh,dh] capture, got {shape:?}");
+    }
+    let per = shape[1..].iter().product::<usize>();
+    let data = x.as_f32()?;
+    Ok((0..cfg.n_layers)
+        .map(|l| {
+            HostTensor::F32(
+                data[l * per..(l + 1) * per].to_vec(),
+                shape[1..].to_vec(),
+            )
+        })
+        .collect())
+}
+
+/// Algorithm 1: greedy top-r elite chunks per head, per layer.
+///
+/// For each layer, r iterations of (delta artifact -> per-head argmin ->
+/// mask update). All heads of a layer advance in lock-step within one
+/// artifact call; layers are independent.
+pub fn ropelite_search(
+    runner: &ModelRunner,
+    params: &[HostTensor],
+    gen: &mut crate::data::CorpusGen,
+    r: usize,
+) -> Result<EliteSelection> {
+    let cfg = runner.manifest.config.clone();
+    let (nc, nh) = (cfg.n_chunks(), cfg.n_heads);
+    if r == 0 || r > nc {
+        bail!("r={r} out of range (1..={nc})");
+    }
+    let (qs, ks) = capture_calibration(runner, params, gen)?;
+    let mut chunks = Vec::with_capacity(cfg.n_layers);
+    for l in 0..cfg.n_layers {
+        let mut mask = vec![0.0f32; nh * nc];
+        let mut picks: Vec<Vec<usize>> = vec![Vec::with_capacity(r); nh];
+        for _i in 0..r {
+            let m = HostTensor::F32(mask.clone(), vec![nh, nc]);
+            let dist = runner.ropelite_delta(&qs[l], &ks[l], &m)?;
+            let d = dist.as_f32()?;
+            for h in 0..nh {
+                let row = &d[h * nc..(h + 1) * nc];
+                let (j, _) = row
+                    .iter()
+                    .enumerate()
+                    .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap();
+                picks[h].push(j);
+                mask[h * nc + j] = 1.0;
+            }
+        }
+        chunks.push(picks);
+        log::info!("ropelite: layer {l} done");
+    }
+    let sel = EliteSelection { chunks };
+    sel.validate(&cfg)?;
+    Ok(sel)
+}
+
+/// `Uniform` baseline: the same r evenly spaced chunks for every head.
+pub fn uniform_selection(cfg: &ModelConfig, r: usize) -> EliteSelection {
+    let row = crate::rope::uniform_chunks(cfg.n_chunks(), r);
+    EliteSelection {
+        chunks: vec![vec![row; cfg.n_heads]; cfg.n_layers],
+    }
+}
+
+/// `Contribution` baseline (Hong et al. 2024): top-r chunks per head by
+/// the L2-norm score-contribution measure, computed by the contribution
+/// artifact over the same calibration capture.
+pub fn contribution_selection(
+    runner: &ModelRunner,
+    params: &[HostTensor],
+    gen: &mut crate::data::CorpusGen,
+    r: usize,
+) -> Result<EliteSelection> {
+    let cfg = runner.manifest.config.clone();
+    let f = runner.manifest.function("capture_qk")?;
+    let tok = &f.inputs[f.input_index("tokens").context("tokens")?];
+    let (b, t) = (tok.shape[0], tok.shape[1]);
+    let tokens: Vec<i32> = gen.stream(b * t).iter().map(|&x| x as i32).collect();
+    let (q, k) = runner.capture_qk(params, &tokens)?;
+    let scores = runner.contribution(&q, &k)?;
+    let s = scores.as_f32()?;
+    let (nc, nh) = (cfg.n_chunks(), cfg.n_heads);
+    let chunks = (0..cfg.n_layers)
+        .map(|l| {
+            (0..nh)
+                .map(|h| {
+                    let row = &s[(l * nh + h) * nc..(l * nh + h + 1) * nc];
+                    let mut idx: Vec<usize> = (0..nc).collect();
+                    idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap());
+                    idx.truncate(r);
+                    idx
+                })
+                .collect()
+        })
+        .collect();
+    let sel = EliteSelection { chunks };
+    sel.validate(&cfg)?;
+    Ok(sel)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_selection_shape_and_spread() {
+        let cfg = ModelConfig::tiny();
+        let s = uniform_selection(&cfg, 4);
+        s.validate(&cfg).unwrap();
+        assert_eq!(s.chunks[0][0], vec![0, 5, 10, 15]);
+        // identical across heads and layers (that's the point of Uniform)
+        assert_eq!(s.chunks[0][0], s.chunks[3][7]);
+    }
+
+    #[test]
+    fn uniform_r1_and_full() {
+        let cfg = ModelConfig::tiny();
+        assert_eq!(uniform_selection(&cfg, 1).chunks[0][0], vec![0]);
+        let full = uniform_selection(&cfg, cfg.n_chunks());
+        assert_eq!(full.chunks[0][0].len(), cfg.n_chunks());
+    }
+}

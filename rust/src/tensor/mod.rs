@@ -1,0 +1,241 @@
+//! Minimal CPU f32 tensor — just enough linear algebra for weight surgery
+//! (conversion), checkpoint manipulation, and host-side verification.
+//!
+//! Row-major dense storage. Not a performance path: the model's compute
+//! runs inside XLA; this backs the *offline* converter and tests.
+
+use std::fmt;
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}[{} elems]", self.shape, self.data.len())
+    }
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(),
+                   "shape/data mismatch: {shape:?} vs {}", data.len());
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn scalar(x: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![x] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// 2-D accessor (matrix view).
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert_eq!(self.rank(), 2);
+        let cols = self.shape[1];
+        self.data[i * cols + j] = v;
+    }
+
+    pub fn reshape(mut self, shape: Vec<usize>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape;
+        self
+    }
+
+    /// Matrix transpose (2-D only).
+    pub fn t(&self) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let (r, c) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0f32; r * c];
+        for i in 0..r {
+            for j in 0..c {
+                out[j * r + i] = self.data[i * c + j];
+            }
+        }
+        Tensor::new(vec![c, r], out)
+    }
+
+    /// Matrix multiply (2-D x 2-D), blocked over k for cache friendliness.
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        assert_eq!(other.rank(), 2);
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (other.shape[0], other.shape[1]);
+        assert_eq!(k, k2, "matmul inner dim mismatch");
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let a_row = &self.data[i * k..(i + 1) * k];
+            let o_row = &mut out[i * n..(i + 1) * n];
+            for (kk, &a) in a_row.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let b_row = &other.data[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    o_row[j] += a * b_row[j];
+                }
+            }
+        }
+        Tensor::new(vec![m, n], out)
+    }
+
+    /// Horizontal concat of 2-D matrices (equal rows).
+    pub fn hcat(mats: &[&Tensor]) -> Tensor {
+        assert!(!mats.is_empty());
+        let rows = mats[0].shape[0];
+        let total: usize = mats.iter().map(|m| {
+            assert_eq!(m.rank(), 2);
+            assert_eq!(m.shape[0], rows);
+            m.shape[1]
+        }).sum();
+        let mut out = vec![0.0f32; rows * total];
+        for i in 0..rows {
+            let mut off = 0;
+            for m in mats {
+                let c = m.shape[1];
+                out[i * total + off..i * total + off + c]
+                    .copy_from_slice(&m.data[i * c..(i + 1) * c]);
+                off += c;
+            }
+        }
+        Tensor::new(vec![rows, total], out)
+    }
+
+    /// Column slice [lo, hi) of a 2-D matrix.
+    pub fn cols(&self, lo: usize, hi: usize) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let (r, c) = (self.shape[0], self.shape[1]);
+        assert!(lo <= hi && hi <= c);
+        let w = hi - lo;
+        let mut out = vec![0.0f32; r * w];
+        for i in 0..r {
+            out[i * w..(i + 1) * w]
+                .copy_from_slice(&self.data[i * c + lo..i * c + hi]);
+        }
+        Tensor::new(vec![r, w], out)
+    }
+
+    /// Gather columns of a 2-D matrix by index list.
+    pub fn gather_cols(&self, idx: &[usize]) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let (r, c) = (self.shape[0], self.shape[1]);
+        let w = idx.len();
+        let mut out = vec![0.0f32; r * w];
+        for i in 0..r {
+            for (jj, &j) in idx.iter().enumerate() {
+                debug_assert!(j < c);
+                out[i * w + jj] = self.data[i * c + j];
+            }
+        }
+        Tensor::new(vec![r, w], out)
+    }
+
+    /// Frobenius norm.
+    pub fn fro(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        Tensor::new(
+            self.shape.clone(),
+            self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect(),
+        )
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        Tensor::new(self.shape.clone(), self.data.iter().map(|x| x * s).collect())
+    }
+
+    /// Random normal tensor (testing / synthetic workloads).
+    pub fn randn(shape: Vec<usize>, rng: &mut crate::util::Pcg64) -> Tensor {
+        let n = shape.iter().product();
+        Tensor::new(shape, (0..n).map(|_| rng.normal() as f32).collect())
+    }
+
+    /// Maximum absolute difference (test helper).
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Pcg64::seeded(1);
+        let a = Tensor::randn(vec![5, 7], &mut rng);
+        let mut eye = Tensor::zeros(vec![7, 7]);
+        for i in 0..7 {
+            eye.set2(i, i, 1.0);
+        }
+        let out = a.matmul(&eye);
+        assert!(a.max_abs_diff(&out) < 1e-6);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::new(vec![2, 2], vec![5.0, 6.0, 7.0, 8.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Pcg64::seeded(2);
+        let a = Tensor::randn(vec![3, 9], &mut rng);
+        assert!(a.max_abs_diff(&a.t().t()) < 1e-9);
+    }
+
+    #[test]
+    fn hcat_and_cols_roundtrip() {
+        let mut rng = Pcg64::seeded(3);
+        let a = Tensor::randn(vec![4, 3], &mut rng);
+        let b = Tensor::randn(vec![4, 5], &mut rng);
+        let cat = Tensor::hcat(&[&a, &b]);
+        assert_eq!(cat.shape, vec![4, 8]);
+        assert!(cat.cols(0, 3).max_abs_diff(&a) < 1e-9);
+        assert!(cat.cols(3, 8).max_abs_diff(&b) < 1e-9);
+    }
+
+    #[test]
+    fn gather_cols_permutation() {
+        let a = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let g = a.gather_cols(&[2, 0, 1]);
+        assert_eq!(g.data, vec![3., 1., 2., 6., 4., 5.]);
+    }
+
+    #[test]
+    fn fro_norm() {
+        let a = Tensor::new(vec![1, 2], vec![3.0, 4.0]);
+        assert!((a.fro() - 5.0).abs() < 1e-9);
+    }
+}

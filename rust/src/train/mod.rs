@@ -1,0 +1,8 @@
+//! Training engine: pretraining and uptraining loops (paper §4.1) plus
+//! the probe-battery scorer that produces the Table-1/2 columns.
+
+pub mod scorer;
+pub mod trainer;
+
+pub use scorer::{score_probes, ScoreReport};
+pub use trainer::{TrainLoop, TrainOpts, TrainReport};

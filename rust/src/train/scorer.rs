@@ -1,0 +1,93 @@
+//! Probe-battery scorer: greedy decoding through the serving artifacts,
+//! exact-match accuracy per task — the machinery behind every "Avg."
+//! column in the reproduced tables.
+
+use anyhow::{bail, Result};
+
+use crate::data::probes::{ProbeSet, Scores};
+use crate::runtime::{HostTensor, ModelRunner};
+
+/// Scores plus the holdout perplexity measured alongside them.
+#[derive(Clone, Debug)]
+pub struct ScoreReport {
+    pub scores: Scores,
+    pub ppl: f64,
+    pub n_items: usize,
+}
+
+/// Greedy-decode every probe and compute exact-match accuracies.
+///
+/// Items are multiplexed onto the decode artifact's fixed batch lanes in
+/// groups; lanes beyond the last item decode a masked dummy.
+pub fn score_probes(
+    runner: &ModelRunner,
+    params: &[HostTensor],
+    probes: &ProbeSet,
+) -> Result<Scores> {
+    let (b, s) = runner.manifest.serve_shape()?;
+    let mut passed = Vec::with_capacity(probes.items.len());
+    for group in probes.items.chunks(b) {
+        let mut tokens = vec![0i32; b * s];
+        let mut lens = vec![1i32; b]; // dummy lanes attend to one pad token
+        for (lane, item) in group.iter().enumerate() {
+            if item.prompt.len() + item.answer.len() >= s {
+                bail!("probe longer than serving window");
+            }
+            for (i, &t) in item.prompt.iter().enumerate() {
+                tokens[lane * s + i] = t as i32;
+            }
+            lens[lane] = item.prompt.len() as i32;
+        }
+        let (mut logits, mut caches) = runner.prefill(params, &tokens, &lens)?;
+        let steps = group.iter().map(|i| i.answer.len()).max().unwrap_or(0);
+        let mut ok = vec![true; group.len()];
+        let mut pos: Vec<i32> = lens.clone();
+        for step in 0..steps {
+            // greedy pick per lane
+            let l = logits.as_f32()?;
+            let vocab = runner.manifest.config.vocab;
+            let mut next = vec![0i32; b];
+            for lane in 0..b {
+                let row = &l[lane * vocab..(lane + 1) * vocab];
+                let (arg, _) = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap();
+                next[lane] = arg as i32;
+            }
+            for (lane, item) in group.iter().enumerate() {
+                if step < item.answer.len()
+                    && next[lane] != item.answer[step] as i32
+                {
+                    ok[lane] = false;
+                }
+            }
+            if step + 1 < steps {
+                let (lg, cs) =
+                    runner.decode(params, &next, &pos, caches, false)?;
+                logits = lg;
+                caches = cs;
+                for p in pos.iter_mut() {
+                    *p += 1;
+                }
+            }
+        }
+        passed.extend(ok);
+    }
+    Ok(probes.score(&passed))
+}
+
+/// Probes + perplexity in one call (the standard evaluation bundle).
+pub fn full_report(
+    runner: &ModelRunner,
+    params: &[HostTensor],
+    probes: &ProbeSet,
+    ppl_batches: usize,
+) -> Result<ScoreReport> {
+    let mut gen = crate::data::CorpusGen::new(runner.manifest.config.vocab, 1);
+    gen.reseed(1, 0xe7a1); // the shared holdout stream (see trainer)
+    let ppl = runner.perplexity(params, &mut gen, ppl_batches)?;
+    let scores = score_probes(runner, params, probes)?;
+    Ok(ScoreReport { scores, ppl, n_items: probes.items.len() })
+}

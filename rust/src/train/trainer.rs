@@ -1,0 +1,144 @@
+//! Training loop around the in-graph AdamW step (paper §4.1: constant LR,
+//! beta = [0.9, 0.95], weight decay 0.1 — all baked into the artifact).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::data::CorpusGen;
+use crate::runtime::{ModelRunner, TrainState};
+use crate::util::stats::Ema;
+
+/// Options for one training run.
+#[derive(Clone, Debug)]
+pub struct TrainOpts {
+    pub steps: usize,
+    pub lr: f32,
+    /// Evaluate perplexity every `eval_every` steps (0 = only at the end).
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    /// Log to stdout every `log_every` steps (0 = silent).
+    pub log_every: usize,
+    /// Seed for the training stream (eval uses an independent stream).
+    pub data_seed: u64,
+}
+
+impl Default for TrainOpts {
+    fn default() -> TrainOpts {
+        TrainOpts {
+            steps: 100,
+            lr: 1e-3,
+            eval_every: 0,
+            eval_batches: 4,
+            log_every: 20,
+            data_seed: 1,
+        }
+    }
+}
+
+/// One loss/ppl observation along the run.
+#[derive(Clone, Debug)]
+pub struct TrainPoint {
+    pub step: usize,
+    pub tokens: usize,
+    pub loss: f64,
+    pub ppl: Option<f64>,
+}
+
+/// Outcome of a training run.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub points: Vec<TrainPoint>,
+    pub final_loss: f64,
+    pub final_ppl: f64,
+    pub tokens_seen: usize,
+    pub seconds: f64,
+}
+
+/// Owns the corpus streams and drives train_step/eval_loss artifacts.
+pub struct TrainLoop<'a> {
+    pub runner: &'a ModelRunner,
+    train_gen: CorpusGen,
+}
+
+impl<'a> TrainLoop<'a> {
+    pub fn new(runner: &'a ModelRunner, opts: &TrainOpts) -> TrainLoop<'a> {
+        let vocab = runner.manifest.config.vocab;
+        // NOTE: world seed is fixed at 1 for every run so that pretraining,
+        // uptraining, and evaluation all share one fact table; only the
+        // sentence stream varies with data_seed.
+        let mut train_gen = CorpusGen::new(vocab, 1);
+        train_gen.reseed(opts.data_seed, 0x7261_494e); // train stream
+        TrainLoop { runner, train_gen }
+    }
+
+    /// Fresh holdout generator (same world, eval stream).
+    pub fn holdout(&self) -> CorpusGen {
+        let mut g = CorpusGen::new(self.runner.manifest.config.vocab, 1);
+        // reuse the eval stream id so every caller sees the same holdout
+        g.reseed(1, 0xe7a1);
+        g
+    }
+
+    /// Run `opts.steps` steps of AdamW, mutating `state`.
+    pub fn run(
+        &mut self,
+        state: &mut TrainState,
+        opts: &TrainOpts,
+    ) -> Result<TrainReport> {
+        let (b, t) = self.runner.train_shape()?;
+        let started = Instant::now();
+        let mut ema = Ema::new(0.1);
+        let mut points = Vec::new();
+        let mut tokens = 0usize;
+        let mut last_loss = f64::NAN;
+        for i in 1..=opts.steps {
+            let batch = self.train_gen.next_batch(b, t);
+            let (loss, gnorm) = self.runner.train_step(state, &batch, opts.lr)?;
+            anyhow::ensure!(
+                loss.is_finite() && gnorm.is_finite(),
+                "divergence at step {i}: loss={loss} gnorm={gnorm}"
+            );
+            tokens += b * t;
+            last_loss = ema.push(loss as f64);
+            let want_eval = opts.eval_every > 0 && i % opts.eval_every == 0;
+            if want_eval {
+                let ppl = self.eval_ppl(state, opts.eval_batches)?;
+                points.push(TrainPoint { step: i, tokens, loss: last_loss,
+                                         ppl: Some(ppl) });
+            } else if opts.log_every > 0 && i % opts.log_every == 0 {
+                points.push(TrainPoint { step: i, tokens, loss: last_loss,
+                                         ppl: None });
+            }
+            if opts.log_every > 0 && i % opts.log_every == 0 {
+                log::info!(
+                    "step {i}/{} loss {last_loss:.4} gnorm {gnorm:.3} \
+                     ({:.2} s/step)",
+                    opts.steps,
+                    started.elapsed().as_secs_f64() / i as f64
+                );
+            }
+        }
+        let final_ppl = self.eval_ppl(state, opts.eval_batches)?;
+        Ok(TrainReport {
+            points,
+            final_loss: last_loss,
+            final_ppl,
+            tokens_seen: tokens,
+            seconds: started.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Holdout perplexity for the current parameters (fresh stream each
+    /// call, so every evaluation sees the same held-out distribution).
+    pub fn eval_ppl(&mut self, state: &TrainState, batches: usize) -> Result<f64> {
+        let mut gen = self.holdout();
+        self.runner.perplexity(&state.params, &mut gen, batches)
+    }
+}
+
+impl ModelRunner {
+    pub fn train_shape(&self) -> Result<(usize, usize)> {
+        self.manifest.train_shape()
+    }
+}

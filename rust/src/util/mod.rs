@@ -1,0 +1,12 @@
+//! Substrate utilities standing in for crates unavailable offline
+//! (rand, serde/serde_json, criterion's stats core, proptest, rayon).
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+
+pub use json::Json;
+pub use rng::Pcg64;
+pub use stats::Summary;

@@ -1,0 +1,65 @@
+//! Mini property-testing framework (offline substitute for `proptest`).
+//!
+//! Deterministic, seeded case generation with failure reporting of the
+//! exact seed+case index so any failure replays. Used by the coordinator
+//! and kv-cache invariant suites (DESIGN.md S16).
+
+use crate::util::rng::Pcg64;
+
+/// Number of cases per property (kept modest: single-core CI budget).
+pub const DEFAULT_CASES: usize = 64;
+
+/// Run `prop` against `cases` generated inputs. On failure, panics with
+/// the generating seed and case index for replay.
+pub fn check<T, G, P>(name: &str, cases: usize, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Pcg64) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let base_seed = fnv1a(name);
+    for case in 0..cases {
+        let mut rng = Pcg64::new(base_seed, case as u64);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property `{name}` failed at case {case} \
+                 (seed {base_seed:#x}): {msg}\ninput: {input:#?}"
+            );
+        }
+    }
+}
+
+/// FNV-1a of the property name, so each property gets a stable stream.
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("sum-commutes", 32, |rng| {
+            (rng.below(1000) as i64, rng.below(1000) as i64)
+        }, |(a, b)| {
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("addition not commutative?!".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails` failed")]
+    fn check_reports_failure() {
+        check("always-fails", 4, |rng| rng.below(10), |_| Err("nope".into()));
+    }
+}

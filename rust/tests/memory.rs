@@ -1,0 +1,47 @@
+//! Regression: the PJRT bridge must not leak per execute call.
+//!
+//! History: the published xla 0.1.6 crate's `execute(&[Literal])` path
+//! leaks every input device buffer (xla_rs.cc `buffer.release()` with no
+//! matching free) — ~27 MB per tiny train step, OOM within a sweep. The
+//! runtime now uploads owned buffers and calls `execute_b`. This test
+//! pins that behaviour.
+
+use std::sync::Arc;
+
+use elitekv::data::CorpusGen;
+use elitekv::runtime::{Engine, ModelRunner, TrainState};
+
+fn rss_mb() -> f64 {
+    let s = std::fs::read_to_string("/proc/self/statm").unwrap();
+    let pages: f64 = s.split_whitespace().nth(1).unwrap().parse().unwrap();
+    pages * 4096.0 / 1e6
+}
+
+#[test]
+fn train_step_rss_is_flat() {
+    let eng = Arc::new(Engine::new().unwrap());
+    let runner = ModelRunner::new(
+        eng,
+        concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"),
+        "tiny",
+        "mha",
+    )
+    .unwrap();
+    let params = runner.init(1).unwrap();
+    let mut state = TrainState::fresh(params);
+    let mut gen = CorpusGen::new(512, 1);
+    let (b, t) = runner.train_shape().unwrap();
+    let batch = gen.next_batch(b, t);
+    // warmup: first calls compile + allocate arenas
+    for _ in 0..4 {
+        runner.train_step(&mut state, &batch, 1e-3).unwrap();
+    }
+    let base = rss_mb();
+    for _ in 0..16 {
+        runner.train_step(&mut state, &batch, 1e-3).unwrap();
+    }
+    let grown = rss_mb() - base;
+    // the old literal path grew ~650 MB over 16 steps; owned-buffer path
+    // stays flat modulo allocator noise
+    assert!(grown < 120.0, "train_step leaked {grown:.0} MB over 16 steps");
+}

@@ -1,0 +1,178 @@
+//! Integration: the full AOT bridge on real artifacts (requires
+//! `make artifacts`). Covers init → train_step → eval → prefill → decode
+//! for the baseline and the EliteKV variant, plus Pallas/jnp parity
+//! through PJRT.
+
+use std::sync::Arc;
+
+use elitekv::config::Variant;
+use elitekv::data::CorpusGen;
+use elitekv::rope;
+use elitekv::runtime::{Engine, HostTensor, ModelRunner, TrainState};
+
+fn artifacts() -> &'static str {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")
+}
+
+fn engine() -> Arc<Engine> {
+    Arc::new(Engine::new().expect("pjrt cpu client"))
+}
+
+#[test]
+fn init_train_eval_roundtrip_tiny_mha() {
+    let eng = engine();
+    let runner = ModelRunner::new(eng, artifacts(), "tiny", "mha").unwrap();
+    let params = runner.init(42).unwrap();
+    assert_eq!(params.len(), runner.manifest.params.len());
+    // init loss ~ ln(512) = 6.24
+    let mut gen = CorpusGen::new(runner.manifest.config.vocab, 1);
+    let (b, t) = runner.eval_shape().unwrap();
+    let batch = gen.next_batch(b, t);
+    let (sum, count) = runner.eval_loss(&params, &batch).unwrap();
+    let nll = sum / count;
+    assert!((nll - (512f64).ln()).abs() < 0.5, "init nll {nll}");
+
+    // a few train steps on one repeated batch must reduce the loss
+    let mut state = TrainState::fresh(params);
+    let tb = gen.next_batch(b, t);
+    let (first, _) = runner.train_step(&mut state, &tb, 3e-3).unwrap();
+    let mut last = first;
+    for _ in 0..5 {
+        let (l, g) = runner.train_step(&mut state, &tb, 3e-3).unwrap();
+        assert!(l.is_finite() && g.is_finite());
+        last = l;
+    }
+    assert!(last < first, "loss did not drop: {first} -> {last}");
+    assert_eq!(state.step, 6);
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_eval() {
+    let eng = engine();
+    let runner = ModelRunner::new(eng, artifacts(), "tiny", "mha").unwrap();
+    let params = runner.init(7).unwrap();
+    let ckpt = runner.ckpt_from_params(&params).unwrap();
+    let dir = std::env::temp_dir().join("elitekv_rt_ckpt.ekvc");
+    ckpt.save(&dir).unwrap();
+    let loaded = elitekv::io::Checkpoint::load(&dir).unwrap();
+    let params2 = runner.params_from_ckpt(&loaded).unwrap();
+    let mut gen = CorpusGen::new(runner.manifest.config.vocab, 2);
+    let (b, t) = runner.eval_shape().unwrap();
+    let batch = gen.next_batch(b, t);
+    let (s1, _) = runner.eval_loss(&params, &batch).unwrap();
+    let (s2, _) = runner.eval_loss(&params2, &batch).unwrap();
+    assert!((s1 - s2).abs() < 1e-3, "{s1} vs {s2}");
+    std::fs::remove_file(dir).ok();
+}
+
+#[test]
+fn elitekv_decode_pallas_matches_jnp() {
+    let eng = engine();
+    let mut runner =
+        ModelRunner::new(eng, artifacts(), "tiny", "elitekv_r4_c64").unwrap();
+    let cfg = runner.manifest.config.clone();
+    // ladder-prefix elite set for smoke purposes
+    let elite: Vec<Vec<Vec<usize>>> =
+        vec![vec![(0..4).collect(); cfg.n_heads]; cfg.n_layers];
+    let theta = rope::elite_thetas(&cfg, &elite);
+    runner
+        .set_extras(vec![HostTensor::F32(
+            theta,
+            vec![cfg.n_layers, cfg.n_heads, 4],
+        )])
+        .unwrap();
+    let params = runner.init(3).unwrap();
+    let (b, s) = runner.manifest.serve_shape().unwrap();
+    // build a prompt batch
+    let mut gen = CorpusGen::new(cfg.vocab, 3);
+    let mut tokens = vec![0i32; b * s];
+    let plen = 12usize;
+    for row in 0..b {
+        let stream = gen.stream(plen);
+        for (i, &t) in stream.iter().enumerate() {
+            tokens[row * s + i] = t as i32;
+        }
+    }
+    let lens = vec![plen as i32; b];
+    let (_logits, caches) = runner.prefill(&params, &tokens, &lens).unwrap();
+    let token = vec![5i32; b];
+    let pos = vec![plen as i32; b];
+    let (l1, _) = runner
+        .decode(&params, &token, &pos, caches.clone(), false)
+        .unwrap();
+    let (l2, _) = runner.decode(&params, &token, &pos, caches, true).unwrap();
+    let a = l1.as_f32().unwrap();
+    let bvals = l2.as_f32().unwrap();
+    let max = a
+        .iter()
+        .zip(bvals)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0f32, f32::max);
+    assert!(max < 1e-3, "pallas vs jnp decode diff {max}");
+}
+
+#[test]
+fn prefill_then_decode_matches_longer_prefill() {
+    // decode(prefill(n)) logits == prefill(n+1) logits — the KV cache path
+    // agrees with full attention, through PJRT this time.
+    let eng = engine();
+    let runner = ModelRunner::new(eng, artifacts(), "tiny", "mha").unwrap();
+    let params = runner.init(11).unwrap();
+    let (b, s) = runner.manifest.serve_shape().unwrap();
+    let mut gen = CorpusGen::new(runner.manifest.config.vocab, 4);
+    let plen = 9usize;
+    let mut tokens = vec![0i32; b * s];
+    let mut rows = Vec::new();
+    for row in 0..b {
+        let stream = gen.stream(plen + 1);
+        for (i, &t) in stream.iter().enumerate() {
+            tokens[row * s + i] = t as i32;
+        }
+        rows.push(stream);
+    }
+    // path A: prefill on plen+1 tokens
+    let lens_full = vec![(plen + 1) as i32; b];
+    let (la, _) = runner.prefill(&params, &tokens, &lens_full).unwrap();
+    // path B: prefill plen, decode the final token
+    let lens = vec![plen as i32; b];
+    let (_lp, caches) = runner.prefill(&params, &tokens, &lens).unwrap();
+    let token: Vec<i32> = rows.iter().map(|r| r[plen] as i32).collect();
+    let pos = vec![plen as i32; b];
+    let (lb, _) = runner.decode(&params, &token, &pos, caches, false).unwrap();
+    let max = la
+        .as_f32()
+        .unwrap()
+        .iter()
+        .zip(lb.as_f32().unwrap())
+        .map(|(x, y)| (x - y).abs())
+        .fold(0f32, f32::max);
+    assert!(max < 1e-3, "cache path diverges: {max}");
+}
+
+#[test]
+fn capture_and_delta_shapes() {
+    let eng = engine();
+    let runner = ModelRunner::new(eng, artifacts(), "tiny", "mha").unwrap();
+    let cfg = runner.manifest.config.clone();
+    let params = runner.init(5).unwrap();
+    let f = runner.manifest.function("capture_qk").unwrap();
+    let tok_spec = &f.inputs[f.input_index("tokens").unwrap()];
+    let (b, t) = (tok_spec.shape[0], tok_spec.shape[1]);
+    let mut gen = CorpusGen::new(cfg.vocab, 6);
+    let tokens: Vec<i32> =
+        gen.stream(b * t).iter().map(|&x| x as i32).collect();
+    let (q, k) = runner.capture_qk(&params, &tokens).unwrap();
+    assert_eq!(q.shape(),
+               &[cfg.n_layers, b, t, cfg.n_heads, cfg.d_head][..]);
+    // one delta call on layer 0
+    let layer_elems = b * t * cfg.n_heads * cfg.d_head;
+    let q0 = HostTensor::F32(q.as_f32().unwrap()[..layer_elems].to_vec(),
+                             vec![b, t, cfg.n_heads, cfg.d_head]);
+    let k0 = HostTensor::F32(k.as_f32().unwrap()[..layer_elems].to_vec(),
+                             vec![b, t, cfg.n_heads, cfg.d_head]);
+    let mask = HostTensor::F32(vec![0.0; cfg.n_heads * cfg.n_chunks()],
+                               vec![cfg.n_heads, cfg.n_chunks()]);
+    let dist = runner.ropelite_delta(&q0, &k0, &mask).unwrap();
+    assert_eq!(dist.shape(), &[cfg.n_heads, cfg.n_chunks()][..]);
+    assert!(dist.as_f32().unwrap().iter().all(|x| x.is_finite()));
+}
