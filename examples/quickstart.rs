@@ -17,7 +17,7 @@ use elitekv::config::{ModelConfig, Variant};
 use elitekv::convert;
 use elitekv::coordinator::{GenParams, InferenceServer, Request};
 use elitekv::data::CorpusGen;
-use elitekv::runtime::{Engine, HostTensor, ModelRunner, TrainState};
+use elitekv::runtime::{Engine, HostTensor, ModelRunner, PjrtBackend, TrainState};
 use elitekv::search;
 use elitekv::train::{TrainLoop, TrainOpts};
 
@@ -83,7 +83,8 @@ fn main() -> Result<()> {
 
     // 5. Serve a few generations through the compressed cache.
     println!("[5/5] serving through the compressed KV cache...");
-    let mut server = InferenceServer::new(kv_runner, kv_state.params, 8 << 20)?;
+    let mut server = InferenceServer::new(
+        Box::new(PjrtBackend::new(kv_runner, kv_state.params)), 8 << 20)?;
     let mut probe_gen = CorpusGen::new(cfg.vocab, 1);
     let prompt = probe_gen.stream(12);
     for i in 0..4 {

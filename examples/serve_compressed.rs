@@ -19,7 +19,7 @@ use elitekv::coordinator::router::EngineFactory;
 use elitekv::coordinator::{GenParams, InferenceServer, Request, Router};
 use elitekv::data::{CorpusGen, ProbeSet};
 use elitekv::kvcache::{BlockAllocator, CacheLayout};
-use elitekv::runtime::{Engine, HostTensor, ModelRunner};
+use elitekv::runtime::{Engine, HostTensor, ModelRunner, PjrtBackend};
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
@@ -137,5 +137,5 @@ fn build_server(
         }
         None => runner.init(7)?,
     };
-    InferenceServer::new(runner, params, budget)
+    InferenceServer::new(Box::new(PjrtBackend::new(runner, params)), budget)
 }

@@ -102,7 +102,8 @@ fn main() -> Result<()> {
     // --- probe the baseline ---
     let gen = CorpusGen::new(cfg.vocab, 1);
     let probes = ProbeSet::generate(&gen, 15, 99);
-    let base_rep = scorer::full_report(&runner, &state.params, &probes, 2)?;
+    let base_rep =
+        scorer::full_report(&runner.as_backend(&state.params), &probes, 2)?;
     println!("baseline probes: avg {:.1}%, ppl {:.3}",
              100.0 * base_rep.scores.average, base_rep.ppl);
 
@@ -136,7 +137,8 @@ fn main() -> Result<()> {
     };
     let mut lp = TrainLoop::new(&kv_runner, &opts);
     let kv_report = lp.run(&mut kv_state, &opts)?;
-    let kv_rep = scorer::full_report(&kv_runner, &kv_state.params, &probes, 2)?;
+    let kv_rep = scorer::full_report(
+        &kv_runner.as_backend(&kv_state.params), &probes, 2)?;
     println!(
         "EliteKV@25%: ppl {:.3} (baseline {:.3}), probe avg {:.1}% \
          (baseline {:.1}%), uptrain tokens = {:.1}% of pretraining",

@@ -1,0 +1,347 @@
+"""Rust-native-backend parity oracle.
+
+`RustModel` below is a line-by-line transcription of the native decode
+path in rust/src/native/model.rs — same flat arrays, same index
+arithmetic, same loop structure — checked against this package's jnp
+model. Any logic/indexing drift between the two implementations shows
+up as a numeric mismatch here, with no Rust toolchain needed.
+
+KEEP IN SYNC: if rust/src/native/model.rs changes its equations or
+cache layout, mirror the change here (and vice versa).
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile.configs import ModelConfig, Variant
+
+rng = np.random.default_rng(0)
+
+cfg = ModelConfig(name="t", d_model=32, n_layers=2, n_heads=4, d_head=8,
+                  d_ffn=24, vocab=48, max_seq=16)
+
+EPS = 1e-5
+
+# ---------------------------------------------------------------------------
+# Rust transcription (f64 numpy, mirroring rust/src/native exactly)
+# ---------------------------------------------------------------------------
+
+def ladder(base, nc):
+    return [base ** (-i / nc) for i in range(nc)]
+
+def rotate_pair(x, i0, ang):
+    s, c = np.sin(ang), np.cos(ang)
+    x0, x1 = x[i0], x[i0 + 1]
+    x[i0] = x0 * c - x1 * s
+    x[i0 + 1] = x0 * s + x1 * c
+
+def rope_full(x, heads, dh, lad, pos):
+    nc = dh // 2
+    for h in range(heads):
+        base = h * dh
+        for ci, theta in enumerate(lad):
+            rotate_pair(x, base + 2 * ci, pos * theta)
+
+def rope_masked(x, heads, dh, lad, mask, pos):
+    nc = dh // 2
+    for h in range(heads):
+        base = h * dh
+        for ci, theta in enumerate(lad):
+            if mask[h * nc + ci] != 0.0:
+                rotate_pair(x, base + 2 * ci, pos * theta)
+
+def rope_elite(x, heads, span, r, theta_e, pos):
+    for h in range(heads):
+        base = h * span
+        for i in range(r):
+            theta = theta_e[h * r + i]
+            rotate_pair(x, base + 2 * i, pos * theta)
+
+def rmsnorm(x, g):
+    ms = float(np.mean(x * x))
+    scale = 1.0 / np.sqrt(ms + EPS)
+    return x * scale * g
+
+def softmax(s):
+    m = np.max(s)
+    e = np.exp(s - m)
+    return e / np.sum(e)
+
+class RustModel:
+    """Flat-weight mirror of NativeModel."""
+
+    def __init__(self, cfg, var, params, sel):
+        self.cfg = cfg
+        self.var = var
+        # flat f64 weights, same names
+        self.w = {k: np.asarray(v, np.float64) for k, v in params.items()}
+        self.ladder = ladder(cfg.rope_base, cfg.n_chunks)
+        nh, nc = cfg.n_heads, cfg.n_chunks
+        L = cfg.n_layers
+        self.theta_e = np.zeros(0)
+        self.elite_mask = np.zeros(0)
+        if var.kind in ("elitekv", "slrd"):
+            t = np.zeros(L * nh * var.r)
+            for l in range(L):
+                for h in range(nh):
+                    for i, c in enumerate(sel[l][h]):
+                        # f32 round-trip like rust's `as f32` table
+                        t[(l * nh + h) * var.r + i] = np.float32(
+                            cfg.rope_base ** (-c / nc))
+            self.theta_e = t
+        if var.kind == "ropelite":
+            m = np.zeros(L * nh * nc)
+            for l in range(L):
+                for h in range(nh):
+                    for c in sel[l][h]:
+                        m[(l * nh + h) * nc + c] = 1.0
+            self.elite_mask = m
+
+    def empty_caches(self, b, s):
+        cfg, var = self.cfg, self.var
+        L, nh, dh = cfg.n_layers, cfg.n_heads, cfg.d_head
+        if var.kind in ("mha", "ropelite"):
+            shapes = [(L, b, s, nh, dh), (L, b, s, nh, dh)]
+        elif var.kind == "gqa":
+            g = var.n_kv_heads
+            shapes = [(L, b, s, g, dh), (L, b, s, g, dh)]
+        elif var.kind == "elitekv":
+            shapes = [(L, b, s, nh, 2 * var.r), (L, b, s, var.d_ckv)]
+        else:
+            shapes = [(L, b, s, nh, 2 * var.r), (L, b, s, var.d_ck),
+                      (L, b, s, var.d_cv)]
+        return [np.zeros(int(np.prod(sh))) for sh in shapes], shapes
+
+    def rotate_q(self, layer, pos, q):
+        cfg, var = self.cfg, self.var
+        nh, dh, nc = cfg.n_heads, cfg.d_head, cfg.n_chunks
+        if var.kind in ("mha", "gqa"):
+            rope_full(q, nh, dh, self.ladder, pos)
+        elif var.kind == "ropelite":
+            m = self.elite_mask[layer * nh * nc:(layer + 1) * nh * nc]
+            rope_masked(q, nh, dh, self.ladder, m, pos)
+        else:
+            r = var.r
+            t = self.theta_e[layer * nh * r:(layer + 1) * nh * r]
+            rope_elite(q, nh, dh, r, t, pos)
+
+    def decode_token(self, caches, lane, pos, token, b, s):
+        cfg, var = self.cfg, self.var
+        d, nh, dh, nc = cfg.d_model, cfg.n_heads, cfg.d_head, cfg.n_chunks
+        length = pos + 1
+        scale = 1.0 / np.sqrt(dh)
+        x = self.w["embed"][token].copy()
+        for l in range(cfg.n_layers):
+            p = f"l{l}."
+            xn = rmsnorm(x, self.w[p + "attn_norm"])
+            q = xn @ self.w[p + "wq"]
+            self.rotate_q(l, pos, q)
+            o = np.zeros(nh * dh)
+            if var.kind in ("mha", "ropelite", "gqa"):
+                g = var.n_kv_heads if var.kind == "gqa" else nh
+                kw = g * dh
+                k = xn @ self.w[p + "wk"]
+                v = xn @ self.w[p + "wv"]
+                if var.kind == "ropelite":
+                    m = self.elite_mask[l * nh * nc:(l + 1) * nh * nc]
+                    rope_masked(k, nh, dh, self.ladder, m, pos)
+                else:
+                    rope_full(k, g, dh, self.ladder, pos)
+                base = ((l * b + lane) * s + pos) * kw
+                caches[0][base:base + kw] = k
+                caches[1][base:base + kw] = v
+                kc, vc = caches[0], caches[1]
+                lane_base = (l * b + lane) * s
+                rep = nh // g
+                for h in range(nh):
+                    hk = h // rep
+                    qh = q[h * dh:(h + 1) * dh]
+                    sco = np.zeros(length)
+                    for j in range(length):
+                        off = (lane_base + j) * kw + hk * dh
+                        sco[j] = qh @ kc[off:off + dh] * scale
+                    pr = softmax(sco)
+                    oh = o[h * dh:(h + 1) * dh]
+                    for j in range(length):
+                        off = (lane_base + j) * kw + hk * dh
+                        oh += pr[j] * vc[off:off + dh]
+            elif var.kind == "elitekv":
+                r, d_ckv = var.r, var.d_ckv
+                r2 = 2 * r
+                dn = dh - r2
+                kew = nh * r2
+                ke = xn @ self.w[p + "wk_e"]
+                t = self.theta_e[l * nh * r:(l + 1) * nh * r]
+                rope_elite(ke, nh, r2, r, t, pos)
+                lat = xn @ self.w[p + "a_kv"]
+                ke_base = ((l * b + lane) * s + pos) * kew
+                caches[0][ke_base:ke_base + kew] = ke
+                c_base = ((l * b + lane) * s + pos) * d_ckv
+                caches[1][c_base:c_base + d_ckv] = lat
+                bk = self.w[p + "b_k"].reshape(-1)  # row-major [C, nh*dn]
+                q_lat = np.zeros(nh * d_ckv)
+                for cci in range(d_ckv):
+                    row = bk[cci * nh * dn:(cci + 1) * nh * dn]
+                    for h in range(nh):
+                        qn = q[h * dh + r2:(h + 1) * dh]
+                        q_lat[h * d_ckv + cci] = qn @ row[h * dn:(h + 1) * dn]
+                kec, cc_all = caches[0], caches[1]
+                lane_ke = (l * b + lane) * s
+                lane_c = (l * b + lane) * s
+                bv = self.w[p + "b_v"].reshape(-1)  # [C, nh*dh]
+                for h in range(nh):
+                    q_rot = q[h * dh:h * dh + r2]
+                    ql = q_lat[h * d_ckv:(h + 1) * d_ckv]
+                    sco = np.zeros(length)
+                    for j in range(length):
+                        ke_off = (lane_ke + j) * kew + h * r2
+                        c_off = (lane_c + j) * d_ckv
+                        sco[j] = (q_rot @ kec[ke_off:ke_off + r2]
+                                  + ql @ cc_all[c_off:c_off + d_ckv]) * scale
+                    pr = softmax(sco)
+                    o_lat = np.zeros(d_ckv)
+                    for j in range(length):
+                        c_off = (lane_c + j) * d_ckv
+                        o_lat += pr[j] * cc_all[c_off:c_off + d_ckv]
+                    oh = o[h * dh:(h + 1) * dh]
+                    for cci in range(d_ckv):
+                        row = bv[cci * nh * dh + h * dh:
+                                 cci * nh * dh + (h + 1) * dh]
+                        oh += o_lat[cci] * row
+            else:  # slrd
+                r, d_ck, d_cv = var.r, var.d_ck, var.d_cv
+                r2 = 2 * r
+                dn = dh - r2
+                kew = nh * r2
+                ke = xn @ self.w[p + "wk_e"]
+                t = self.theta_e[l * nh * r:(l + 1) * nh * r]
+                rope_elite(ke, nh, r2, r, t, pos)
+                ckv = xn @ self.w[p + "a_k"]
+                cvv = xn @ self.w[p + "a_v"]
+                ke_base = ((l * b + lane) * s + pos) * kew
+                caches[0][ke_base:ke_base + kew] = ke
+                ck_base = ((l * b + lane) * s + pos) * d_ck
+                caches[1][ck_base:ck_base + d_ck] = ckv
+                cv_base = ((l * b + lane) * s + pos) * d_cv
+                caches[2][cv_base:cv_base + d_cv] = cvv
+                bk = self.w[p + "b_k"].reshape(-1)
+                q_lat = np.zeros(nh * d_ck)
+                for cci in range(d_ck):
+                    row = bk[cci * nh * dn:(cci + 1) * nh * dn]
+                    for h in range(nh):
+                        qn = q[h * dh + r2:(h + 1) * dh]
+                        q_lat[h * d_ck + cci] = qn @ row[h * dn:(h + 1) * dn]
+                kec, ck_all, cv_all = caches[0], caches[1], caches[2]
+                lane_base = (l * b + lane) * s
+                bv = self.w[p + "b_v"].reshape(-1)
+                for h in range(nh):
+                    q_rot = q[h * dh:h * dh + r2]
+                    ql = q_lat[h * d_ck:(h + 1) * d_ck]
+                    sco = np.zeros(length)
+                    for j in range(length):
+                        ke_off = (lane_base + j) * kew + h * r2
+                        ck_off = (lane_base + j) * d_ck
+                        sco[j] = (q_rot @ kec[ke_off:ke_off + r2]
+                                  + ql @ ck_all[ck_off:ck_off + d_ck]) * scale
+                    pr = softmax(sco)
+                    o_lat = np.zeros(d_cv)
+                    for j in range(length):
+                        cv_off = (lane_base + j) * d_cv
+                        o_lat += pr[j] * cv_all[cv_off:cv_off + d_cv]
+                    oh = o[h * dh:(h + 1) * dh]
+                    for cci in range(d_cv):
+                        row = bv[cci * nh * dh + h * dh:
+                                 cci * nh * dh + (h + 1) * dh]
+                        oh += o_lat[cci] * row
+            x = x + o @ self.w[p + "wo"]
+            xn = rmsnorm(x, self.w[p + "ffn_norm"])
+            h1 = xn @ self.w[p + "w1"]
+            h3 = xn @ self.w[p + "w3"]
+            hsw = (h1 / (1.0 + np.exp(-h1))) * h3
+            x = x + hsw @ self.w[p + "w2"]
+        xf = rmsnorm(x, self.w["final_norm"])
+        return xf @ self.w["embed"].T
+
+
+def run_variant(var):
+    nh, nc, L = cfg.n_heads, cfg.n_chunks, cfg.n_layers
+    params = M.init_params(cfg, var, 7)
+    params = {k: np.asarray(v) for k, v in params.items()}
+    # random distinct chunk selection per (layer, head)
+    sel = [[list(rng.choice(nc, size=max(var.r, 1), replace=False))
+            for _ in range(nh)] for _ in range(L)]
+    extras = {}
+    if var.kind == "ropelite":
+        m = np.zeros((L, nh, nc), np.float32)
+        for l in range(L):
+            for h in range(nh):
+                for c in sel[l][h]:
+                    m[l, h, c] = 1.0
+        extras["elite_mask"] = jnp.asarray(m)
+    if var.kind in ("elitekv", "slrd"):
+        t = np.zeros((L, nh, var.r), np.float32)
+        for l in range(L):
+            for h in range(nh):
+                for i, c in enumerate(sel[l][h]):
+                    t[l, h, i] = cfg.rope_base ** (-c / nc)
+        extras["theta_e"] = jnp.asarray(t)
+
+    b, s = 2, cfg.max_seq
+    plen = 5
+    prompts = rng.integers(1, cfg.vocab, size=(b, plen))
+    tokens = np.zeros((b, s), np.int32)
+    tokens[:, :plen] = prompts
+    true_len = np.full((b,), plen, np.int32)
+
+    jparams = {k: jnp.asarray(v, jnp.float32) for k, v in params.items()}
+    out = M.prefill(cfg, var, jparams, extras, jnp.asarray(tokens),
+                    jnp.asarray(true_len))
+    j_logits, j_caches = np.asarray(out[0]), [np.asarray(c) for c in out[1:]]
+
+    rm = RustModel(cfg, var, params, sel)
+    caches, shapes = rm.empty_caches(b, s)
+    r_logits = np.zeros((b, cfg.vocab))
+    for lane in range(b):
+        for i in range(plen):
+            lg = rm.decode_token(caches, lane, i, int(tokens[lane, i]), b, s)
+            if i == plen - 1:
+                r_logits[lane] = lg
+
+    dl = np.max(np.abs(r_logits - j_logits))
+    # compare cache rows < plen
+    dcache = 0.0
+    for ci, sh in enumerate(shapes):
+        mine = caches[ci].reshape(sh)
+        theirs = j_caches[ci]
+        assert theirs.shape == sh, (theirs.shape, sh)
+        dcache = max(dcache,
+                     float(np.max(np.abs(mine[:, :, :plen] -
+                                         theirs[:, :, :plen]))))
+
+    # one decode step
+    tok = rng.integers(1, cfg.vocab, size=(b,))
+    pos = np.full((b,), plen, np.int32)
+    outs = M.decode_step(cfg, var, jparams, extras, jnp.asarray(tok, jnp.int32),
+                         jnp.asarray(pos), [jnp.asarray(c) for c in j_caches])
+    j_logits2 = np.asarray(outs[0])
+    r_logits2 = np.zeros((b, cfg.vocab))
+    for lane in range(b):
+        r_logits2[lane] = rm.decode_token(caches, lane, plen,
+                                          int(tok[lane]), b, s)
+    dl2 = np.max(np.abs(r_logits2 - j_logits2))
+    status = "OK " if max(dl, dl2, dcache) < 2e-4 else "FAIL"
+    print(f"{status} {var.tag():<24} prefill-logits {dl:.2e}  "
+          f"cache {dcache:.2e}  decode-logits {dl2:.2e}")
+    return max(dl, dl2, dcache) < 2e-4
+
+
+@pytest.mark.parametrize("var", [
+    Variant("mha"),
+    Variant("ropelite", r=2),
+    Variant("gqa", n_kv_heads=2),
+    Variant("elitekv", r=2, d_ckv=12),
+    Variant("slrd", r=2, d_ck=10, d_cv=14),
+], ids=lambda v: v.tag())
+def test_rust_native_transcription_matches_jnp(var):
+    assert run_variant(var)

@@ -11,7 +11,7 @@ use elitekv::convert::{self, EliteSelection};
 use elitekv::coordinator::{GenParams, InferenceServer, Request};
 use elitekv::data::{CorpusGen, ProbeSet};
 use elitekv::kvcache::CacheLayout;
-use elitekv::runtime::{Engine, HostTensor, ModelRunner};
+use elitekv::runtime::{Engine, HostTensor, ModelRunner, PjrtBackend};
 use elitekv::util::stats::percentile;
 
 fn main() {
@@ -61,7 +61,8 @@ fn main() {
                 .unwrap();
         }
         let params = runner.init(5).unwrap();
-        let mut server = InferenceServer::new(runner, params, budget).unwrap();
+        let mut server = InferenceServer::new(
+            Box::new(PjrtBackend::new(runner, params)), budget).unwrap();
         let gen = CorpusGen::new(cfg.vocab, 1);
         let probes = ProbeSet::generate(&gen, n_requests.div_ceil(6), 77);
         let t0 = std::time::Instant::now();

@@ -447,7 +447,8 @@ pub fn serve_bench(
         log::info!("serve_bench [{cfg_name}]: {}", variant.tag());
         let (runner, params, _) = ctx.converted(cfg_name, &variant, "ropelite")?;
         let ratio = variant.cache_ratio(&cfg);
-        let mut server = InferenceServer::new(runner, params, 64 << 20)?;
+        let backend = crate::runtime::PjrtBackend::new(runner, params);
+        let mut server = InferenceServer::new(Box::new(backend), 64 << 20)?;
         // probe-like prompts as the workload
         let gen = CorpusGen::new(cfg.vocab, 1);
         let probes = ProbeSet::generate(&gen, n_requests.div_ceil(6), 1234);

@@ -1,15 +1,25 @@
-//! Experiment harness: regenerates every table and figure of the paper's
-//! evaluation (DESIGN.md §7 experiment index) on the in-repo model family.
+//! Experiment harness (DESIGN.md §7 experiment index).
 //!
-//! Each experiment writes `results/<id>.json` (machine-readable series)
-//! and prints a markdown table mirroring the paper's layout. Shared
-//! stages (pretraining, RoPElite search) are cached on disk so the sweep
-//! can resume.
+//! * [`microbench`] / [`report`] — the measurement + output substrate
+//!   (criterion/serde stand-ins), always available.
+//! * [`native`] — the artifact-free native-decode benchmark: tokens/s,
+//!   per-step latency, and cache bytes/token across (r, d_ckv) sweep
+//!   points, emitted as machine-readable `BENCH_native_decode.json`.
+//! * [`pipeline`] / [`experiments`] (feature `pjrt`) — the paper
+//!   table/figure sweeps over the AOT artifacts; each writes
+//!   `results/<id>.json` and a markdown table, with pretraining/search
+//!   stages cached on disk so the sweep can resume.
 
-pub mod experiments;
 pub mod microbench;
-pub mod pipeline;
+pub mod native;
 pub mod report;
 
+#[cfg(feature = "pjrt")]
+pub mod experiments;
+#[cfg(feature = "pjrt")]
+pub mod pipeline;
+
 pub use microbench::{bench, bench_throughput, BenchOpts};
+pub use native::native_decode_bench;
+#[cfg(feature = "pjrt")]
 pub use pipeline::ExperimentCtx;

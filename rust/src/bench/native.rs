@@ -1,0 +1,204 @@
+//! Native decode benchmark: the artifact-free perf baseline that seeds
+//! the repo's CPU-hot-path trajectory.
+//!
+//! Sweeps the J-LRD compression grid — (r, d_ckv) points plus the dense
+//! MHA reference — on a randomly initialized model (decode cost does not
+//! depend on weight values), measuring:
+//!
+//! * tokens/s across a full continuous-decode run,
+//! * per-step latency (mean / p50 / p90 / p99 ms),
+//! * cache bytes per token (the paper's unit of account).
+//!
+//! Emits machine-readable JSON (default `BENCH_native_decode.json`) so
+//! future perf PRs diff against a stable baseline.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::config::{ModelConfig, Variant};
+use crate::kvcache::CacheLayout;
+use crate::native::{NativeModel, NativeRunner};
+use crate::runtime::Backend;
+use crate::search::uniform_selection;
+use crate::util::stats::Summary;
+use crate::util::Json;
+
+/// Settings for one native decode sweep.
+#[derive(Clone, Debug)]
+pub struct NativeBenchOpts {
+    pub batch: usize,
+    pub prompt_len: usize,
+    pub decode_steps: usize,
+    pub max_seq: usize,
+}
+
+impl Default for NativeBenchOpts {
+    fn default() -> NativeBenchOpts {
+        NativeBenchOpts {
+            batch: 4,
+            prompt_len: 16,
+            decode_steps: 48,
+            max_seq: 128,
+        }
+    }
+}
+
+/// Default sweep: the dense baseline plus the paper's 50/25/12.5 % points.
+pub fn default_sweep(cfg: &ModelConfig) -> Vec<Variant> {
+    let nc = cfg.n_chunks();
+    vec![
+        Variant::Mha,
+        Variant::EliteKv { r: nc / 2, d_ckv: cfg.d_model / 2 },
+        Variant::EliteKv { r: nc / 4, d_ckv: cfg.d_model / 4 },
+        Variant::EliteKv { r: nc / 8, d_ckv: cfg.d_model / 8 },
+    ]
+}
+
+/// Run one variant: prefill `batch` prompts, then `decode_steps` timed
+/// steps; returns the measured record.
+fn bench_variant(
+    cfg: &ModelConfig,
+    variant: &Variant,
+    opts: &NativeBenchOpts,
+) -> Result<Json> {
+    ensure!(opts.prompt_len >= 1, "--prompt must be at least 1");
+    ensure!(
+        opts.prompt_len + opts.decode_steps <= opts.max_seq,
+        "prompt ({}) + steps ({}) exceed the serving window ({}); \
+         lower --steps/--prompt or raise --max-seq",
+        opts.prompt_len,
+        opts.decode_steps,
+        opts.max_seq
+    );
+    let sel = variant.r().map(|r| uniform_selection(cfg, r));
+    let model = NativeModel::init(cfg, variant.clone(), 0xbe7c, sel.as_ref())?;
+    let runner = NativeRunner::new(model, opts.batch, opts.max_seq)?;
+    let (b, s) = runner.serve_shape()?;
+    let mut tokens = vec![0i32; b * s];
+    for lane in 0..b {
+        for i in 0..opts.prompt_len {
+            tokens[lane * s + i] = (3 + (lane * 31 + i * 7) % 400) as i32;
+        }
+    }
+    let lens = vec![opts.prompt_len as i32; b];
+    let t_prefill = Instant::now();
+    let (_logits, mut caches) = runner.prefill(&tokens, &lens)?;
+    let prefill_ms = t_prefill.elapsed().as_secs_f64() * 1e3;
+
+    let mut step_ms = Vec::with_capacity(opts.decode_steps);
+    let mut pos: Vec<i32> = lens.clone();
+    let token = vec![7i32; b];
+    let t_total = Instant::now();
+    for _ in 0..opts.decode_steps {
+        let t0 = Instant::now();
+        let (_l, c) = runner.decode(&token, &pos, caches, false)?;
+        caches = c;
+        step_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        for p in pos.iter_mut() {
+            *p += 1;
+        }
+    }
+    let wall = t_total.elapsed().as_secs_f64();
+    let decoded = b * opts.decode_steps;
+    let s_stats = Summary::of(&step_ms);
+    let layout = CacheLayout::new(cfg, variant.clone());
+    Ok(Json::obj(vec![
+        ("variant", Json::str(&variant.tag())),
+        ("r", Json::num(variant.r().unwrap_or(0) as f64)),
+        (
+            "d_ckv",
+            Json::num(match variant {
+                Variant::EliteKv { d_ckv, .. } => *d_ckv as f64,
+                _ => 0.0,
+            }),
+        ),
+        ("cache_ratio", Json::num(layout.ratio)),
+        ("cache_bytes_per_token", Json::num(layout.bytes_per_token() as f64)),
+        ("prefill_ms", Json::num(prefill_ms)),
+        ("tokens_per_s", Json::num(decoded as f64 / wall)),
+        ("step_ms_mean", Json::num(s_stats.mean)),
+        ("step_ms_p50", Json::num(s_stats.p50)),
+        ("step_ms_p90", Json::num(s_stats.p90)),
+        ("step_ms_p99", Json::num(s_stats.p99)),
+        ("decode_steps", Json::num(opts.decode_steps as f64)),
+        ("batch", Json::num(b as f64)),
+    ]))
+}
+
+/// Sweep the native decode benchmark and write `out` as JSON.
+pub fn native_decode_bench(
+    cfg: &ModelConfig,
+    variants: &[Variant],
+    opts: &NativeBenchOpts,
+    out: &Path,
+) -> Result<Json> {
+    let mut rows = Vec::new();
+    for variant in variants {
+        log::info!("native bench: {}", variant.tag());
+        let row = bench_variant(cfg, variant, opts)
+            .with_context(|| format!("bench {}", variant.tag()))?;
+        println!(
+            "bench native_decode/{:<24} {:>8.1} tok/s  p50 {:>7.3} ms  \
+             {:>6} B/token",
+            variant.tag(),
+            row.req("tokens_per_s").as_f64().unwrap_or(0.0),
+            row.req("step_ms_p50").as_f64().unwrap_or(0.0),
+            row.req("cache_bytes_per_token").as_usize().unwrap_or(0),
+        );
+        rows.push(row);
+    }
+    let json = Json::obj(vec![
+        ("experiment", Json::str("native_decode")),
+        ("backend", Json::str("native")),
+        ("config", Json::str(&cfg.name)),
+        ("batch", Json::num(opts.batch as f64)),
+        ("prompt_len", Json::num(opts.prompt_len as f64)),
+        ("decode_steps", Json::num(opts.decode_steps as f64)),
+        ("max_seq", Json::num(opts.max_seq as f64)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    if let Some(parent) = out.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(out, json.to_string())?;
+    log::info!("wrote {out:?}");
+    Ok(json)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_emits_complete_records() {
+        let cfg = ModelConfig::tiny();
+        let opts = NativeBenchOpts {
+            batch: 1,
+            prompt_len: 4,
+            decode_steps: 3,
+            max_seq: 16,
+        };
+        let dir = std::env::temp_dir().join("elitekv_native_bench.json");
+        let variants =
+            vec![Variant::Mha, Variant::EliteKv { r: 4, d_ckv: 32 }];
+        let json =
+            native_decode_bench(&cfg, &variants, &opts, &dir).unwrap();
+        let rows = json.req("rows").as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        for row in rows {
+            assert!(row.req("tokens_per_s").as_f64().unwrap() > 0.0);
+            assert!(row.req("cache_bytes_per_token").as_usize().unwrap() > 0);
+        }
+        // compressed point caches fewer bytes than dense
+        let dense = rows[0].req("cache_bytes_per_token").as_f64().unwrap();
+        let comp = rows[1].req("cache_bytes_per_token").as_f64().unwrap();
+        assert!(comp < dense);
+        let text = std::fs::read_to_string(&dir).unwrap();
+        assert!(Json::parse(&text).is_ok());
+        std::fs::remove_file(dir).ok();
+    }
+}

@@ -249,7 +249,11 @@ impl ExperimentCtx {
     ) -> Result<scorer::ScoreReport> {
         let gen = CorpusGen::new(runner.manifest.config.vocab, 1);
         let probes = ProbeSet::generate(&gen, self.opts.probes_per_task, 99);
-        scorer::full_report(runner, params, &probes, self.opts.ppl_batches)
+        scorer::full_report(
+            &runner.as_backend(params),
+            &probes,
+            self.opts.ppl_batches,
+        )
     }
 
     /// Tokens per pretraining run (for "uptraining proportion" axes).

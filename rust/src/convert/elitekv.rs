@@ -133,7 +133,19 @@ fn copied_layers(cfg: &ModelConfig) -> [&'static str; 6] {
     ["attn_norm", "wo", "ffn_norm", "w1", "w2", "w3"]
 }
 
-/// MHA checkpoint -> EliteKV (J-LRD) checkpoint.
+/// Embed the selection's `elite.l<i>` tensors into a converted (or
+/// uptrained) checkpoint, so serving it later can recover the exact chunk
+/// order the weight permutation was built with (wrong selection =
+/// silently wrong rotations).
+pub fn embed_selection(out: &mut Checkpoint, cfg: &ModelConfig, elite: &EliteSelection) {
+    out.set_meta("selection_r", elite.r());
+    for (name, t) in elite.to_checkpoint(cfg).tensors {
+        out.insert(&name, t);
+    }
+}
+
+/// MHA checkpoint -> EliteKV (J-LRD) checkpoint. The elite selection is
+/// embedded alongside the weights (see [`embed_selection`]).
 pub fn convert_elitekv(
     cfg: &ModelConfig,
     mha: &Checkpoint,
@@ -146,6 +158,7 @@ pub fn convert_elitekv(
     let mut out = Checkpoint::new();
     out.set_meta("config", &cfg.name);
     out.set_meta("variant", format!("elitekv_r{}_c{}", elite.r(), d_ckv));
+    embed_selection(&mut out, cfg, elite);
     out.insert("embed", mha.get("embed")?.clone());
     out.insert("final_norm", mha.get("final_norm")?.clone());
     for l in 0..cfg.n_layers {
@@ -190,6 +203,7 @@ pub fn convert_slrd(
         "variant",
         format!("slrd_r{}_ck{}_cv{}", elite.r(), d_ck, d_cv),
     );
+    embed_selection(&mut out, cfg, elite);
     out.insert("embed", mha.get("embed")?.clone());
     out.insert("final_norm", mha.get("final_norm")?.clone());
     for l in 0..cfg.n_layers {
@@ -387,6 +401,19 @@ mod tests {
         for w in errs.windows(2) {
             assert!(w[0] > w[1] - 1e-4, "{errs:?}");
         }
+    }
+
+    #[test]
+    fn converted_checkpoints_embed_their_selection() {
+        let cfg = tiny();
+        let mha = fake_mha(&cfg, 13);
+        let s = sel(&cfg, 4, 14);
+        let out = convert_elitekv(&cfg, &mha, &s, 32).unwrap();
+        let back = EliteSelection::from_checkpoint(&out, &cfg).unwrap();
+        assert_eq!(back, s);
+        assert_eq!(out.meta["selection_r"], "4");
+        let out_s = convert_slrd(&cfg, &mha, &s, 16, 16).unwrap();
+        assert_eq!(EliteSelection::from_checkpoint(&out_s, &cfg).unwrap(), s);
     }
 
     #[test]

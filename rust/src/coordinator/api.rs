@@ -8,6 +8,9 @@ pub struct GenParams {
     pub max_new_tokens: usize,
     /// 0.0 = greedy; otherwise softmax temperature sampling.
     pub temperature: f32,
+    /// Nucleus (top-p) truncation applied on top of temperature sampling;
+    /// 1.0 disables it. Ignored when `temperature == 0`.
+    pub top_p: f32,
     /// Stop token (defaults to the corpus EOS).
     pub stop_token: Option<u32>,
     pub seed: u64,
@@ -18,6 +21,7 @@ impl Default for GenParams {
         GenParams {
             max_new_tokens: 32,
             temperature: 0.0,
+            top_p: 1.0,
             stop_token: Some(crate::data::corpus::EOS),
             seed: 0,
         }

@@ -1,11 +1,14 @@
 //! Serving coordinator (DESIGN.md S11): the vLLM-style L3 layer.
 //!
-//! * [`api`]     — request/response types and generation parameters.
+//! * [`api`]     — request/response types and generation parameters
+//!   (greedy / temperature / top-p nucleus sampling).
 //! * [`batcher`] — FIFO admission queue + continuous-batching policy over
 //!   the fixed decode lanes (static-shape analog of vLLM's scheduler).
 //! * [`server`]  — the inference engine: prefill-splice + iterative decode
-//!   over the compressed KV cache, greedy/temperature sampling, stop
-//!   handling, per-request latency metrics.
+//!   over the compressed KV cache, sampling, stop handling, per-request
+//!   latency metrics. Drives any [`crate::runtime::Backend`] — the native
+//!   Rust decode path (no artifacts) or the PJRT executor (feature
+//!   `pjrt`).
 //! * [`router`]  — leader/worker scale-out: routes requests to the
 //!   least-loaded worker thread, each running its own engine instance.
 

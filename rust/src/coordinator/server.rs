@@ -1,15 +1,17 @@
-//! The inference engine: continuous batching over the fixed-lane decode
-//! artifacts, prefill splicing, sampling, and metrics.
+//! The inference engine: continuous batching over fixed decode lanes,
+//! prefill splicing, sampling, and metrics — backend-agnostic.
 //!
 //! One engine iteration:
 //!   1. admit queued requests into idle lanes (block-budget permitting),
 //!      run one prefill for the newly admitted lanes and splice their
 //!      cache rows into the live cache tensors;
 //!   2. one decode step across all lanes (idle lanes run a masked dummy);
-//!   3. sample per busy lane, emit finished responses, free lanes/blocks.
+//!   3. sample per busy lane (greedy / temperature / top-p), emit finished
+//!      responses, free lanes/blocks.
 //!
-//! Python is nowhere in this loop — the binary serves self-contained from
-//! `artifacts/`.
+//! The engine drives any [`Backend`]: the pure-Rust native runner (no
+//! artifacts at all) or the PJRT executor (feature `pjrt`). Python is
+//! nowhere in this loop either way.
 
 use std::time::Instant;
 
@@ -19,7 +21,7 @@ use crate::coordinator::api::{FinishReason, GenParams, Request, Response};
 use crate::coordinator::batcher::AdmissionQueue;
 use crate::kvcache::block::BlockId;
 use crate::kvcache::{BlockAllocator, CacheLayout, SlotManager};
-use crate::runtime::{HostTensor, ModelRunner};
+use crate::runtime::{Backend, HostTensor};
 use crate::util::Pcg64;
 
 struct Lane {
@@ -40,10 +42,9 @@ pub struct ServerStats {
     pub peak_cache_bytes: usize,
 }
 
-/// Single-worker inference engine.
+/// Single-worker inference engine over one [`Backend`].
 pub struct InferenceServer {
-    pub runner: ModelRunner,
-    params: Vec<HostTensor>,
+    pub backend: Box<dyn Backend>,
     pub queue: AdmissionQueue,
     slots: SlotManager,
     lanes: Vec<Option<Lane>>,
@@ -58,25 +59,21 @@ pub struct InferenceServer {
 impl InferenceServer {
     /// `cache_budget_bytes` sizes the block pool (admission control).
     pub fn new(
-        runner: ModelRunner,
-        params: Vec<HostTensor>,
+        backend: Box<dyn Backend>,
         cache_budget_bytes: usize,
     ) -> Result<InferenceServer> {
-        let (batch, max_seq) = runner.manifest.serve_shape()?;
-        let layout = CacheLayout::new(
-            &runner.manifest.config,
-            runner.manifest.variant.clone(),
-        );
+        let (batch, max_seq) = backend.serve_shape()?;
+        let layout =
+            CacheLayout::new(backend.config(), backend.variant().clone());
         let allocator = BlockAllocator::with_budget(
             cache_budget_bytes,
             layout.bytes_per_token().max(1),
             16,
         );
         let slots = SlotManager::new(layout, batch, max_seq);
-        let caches = runner.empty_caches()?;
+        let caches = backend.empty_caches()?;
         Ok(InferenceServer {
-            runner,
-            params,
+            backend,
             queue: AdmissionQueue::new(allocator),
             slots,
             lanes: (0..batch).map(|_| None).collect(),
@@ -134,8 +131,7 @@ impl InferenceServer {
             }
             lens[*slot] = req.prompt.len() as i32;
         }
-        let (logits, fresh) =
-            self.runner.prefill(&self.params, &tokens, &lens)?;
+        let (logits, fresh) = self.backend.prefill(&tokens, &lens)?;
         self.stats.prefills += 1;
         // Splice admitted lanes' cache rows + logits into live state.
         for (req, slot, chain) in admitted {
@@ -164,7 +160,7 @@ impl InferenceServer {
             return Ok(Vec::new());
         }
         // Sample next token per busy lane from the current logits.
-        let vocab = self.runner.manifest.config.vocab;
+        let vocab = self.backend.config().vocab;
         let logits = self
             .logits
             .as_ref()
@@ -225,11 +221,14 @@ impl InferenceServer {
                 self.slots.free(slot);
             }
         }
-        // Decode the sampled tokens for lanes still running.
+        // Decode the sampled tokens for lanes still running; idle lanes
+        // are flagged so backends that can skip them (native) do.
         if self.lanes.iter().any(|l| l.is_some()) {
+            let active: Vec<bool> =
+                self.lanes.iter().map(|l| l.is_some()).collect();
             let caches = std::mem::take(&mut self.caches);
-            let (logits, caches) = self.runner.decode(
-                &self.params, &next, &pos, caches, self.use_pallas)?;
+            let (logits, caches) = self.backend.decode_active(
+                &next, &pos, &active, caches, self.use_pallas)?;
             self.caches = caches;
             self.logits = Some(logits);
             self.stats.decode_steps += 1;
@@ -288,7 +287,7 @@ fn splice_row(dst: &mut HostTensor, src: &HostTensor, lane: usize) -> Result<()>
     Ok(())
 }
 
-/// Greedy or temperature sampling from one logit row.
+/// Greedy, temperature, or nucleus (top-p) sampling from one logit row.
 fn sample(row: &[f32], params: &GenParams, rng: &mut Pcg64) -> u32 {
     if params.temperature <= 0.0 {
         let (arg, _) = row
@@ -300,17 +299,43 @@ fn sample(row: &[f32], params: &GenParams, rng: &mut Pcg64) -> u32 {
     }
     let t = params.temperature;
     let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-    let weights: Vec<f64> =
+    let mut weights: Vec<f64> =
         row.iter().map(|&x| (((x - max) / t) as f64).exp()).collect();
+    if params.top_p < 1.0 {
+        // Nucleus truncation: keep the smallest prob-sorted prefix whose
+        // mass reaches top_p; zero the tail.
+        let total: f64 = weights.iter().sum();
+        let mut order: Vec<usize> = (0..weights.len()).collect();
+        order.sort_by(|&a, &b| weights[b].partial_cmp(&weights[a]).unwrap());
+        let target = (params.top_p.max(0.0) as f64) * total;
+        let mut mass = 0.0;
+        let mut keep = 0;
+        for (rank, &i) in order.iter().enumerate() {
+            mass += weights[i];
+            keep = rank + 1;
+            if mass >= target {
+                break;
+            }
+        }
+        for &i in &order[keep..] {
+            weights[i] = 0.0;
+        }
+    }
     let total: f64 = weights.iter().sum();
     let mut u = rng.f64() * total;
     for (i, w) in weights.iter().enumerate() {
         u -= w;
-        if u <= 0.0 {
+        if u <= 0.0 && *w > 0.0 {
             return i as u32;
         }
     }
-    (row.len() - 1) as u32
+    // numerical fallback: the largest surviving weight
+    weights
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i as u32)
+        .unwrap_or(0)
 }
 
 #[cfg(test)]
@@ -332,6 +357,37 @@ mod tests {
         let mut rng = Pcg64::seeded(2);
         let mut seen = [false; 3];
         for _ in 0..200 {
+            seen[sample(&row, &p, &mut rng) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn sample_top_p_truncates_tail() {
+        // One dominant token: tiny top_p must always pick it.
+        let row = [8.0f32, 0.0, 0.0, 0.0];
+        let p = GenParams {
+            temperature: 1.0,
+            top_p: 0.5,
+            ..Default::default()
+        };
+        let mut rng = Pcg64::seeded(3);
+        for _ in 0..100 {
+            assert_eq!(sample(&row, &p, &mut rng), 0);
+        }
+    }
+
+    #[test]
+    fn sample_top_p_one_keeps_full_support() {
+        let row = [1.0f32, 1.0];
+        let p = GenParams {
+            temperature: 1.0,
+            top_p: 1.0,
+            ..Default::default()
+        };
+        let mut rng = Pcg64::seeded(4);
+        let mut seen = [false; 2];
+        for _ in 0..100 {
             seen[sample(&row, &p, &mut rng) as usize] = true;
         }
         assert!(seen.iter().all(|&s| s));

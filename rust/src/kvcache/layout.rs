@@ -1,6 +1,45 @@
-//! Cache geometry per architecture variant.
+//! Cache geometry per architecture variant, including the named decode
+//! slab shapes both backends share (DESIGN.md S10).
 
 use crate::config::{ModelConfig, Variant};
+
+/// Named decode-cache slab shapes for one variant, stacked over layers:
+/// each entry is (name, [L, B, S, ...]). This is the layout contract the
+/// PJRT artifacts bake in (python/compile/model.py::cache_specs) and the
+/// native backend allocates directly:
+///
+/// * mha/ropelite — dense `cache_k` / `cache_v` `[L,B,S,nh,dh]`
+/// * gqa          — grouped `cache_k` / `cache_v` `[L,B,S,g,dh]`
+/// * elitekv      — rotated elite keys `cache_ke` `[L,B,S,nh,2r]` plus the
+///   **shared** J-LRD latent slab `cache_c` `[L,B,S,d_ckv]`
+/// * slrd         — `cache_ke` plus **split** latents `cache_ck` / `cache_cv`
+pub fn slab_specs(
+    cfg: &ModelConfig,
+    variant: &Variant,
+    batch: usize,
+    s: usize,
+) -> Vec<(&'static str, Vec<usize>)> {
+    let (l, nh, dh) = (cfg.n_layers, cfg.n_heads, cfg.d_head);
+    match variant {
+        Variant::Mha | Variant::RopeLite => vec![
+            ("cache_k", vec![l, batch, s, nh, dh]),
+            ("cache_v", vec![l, batch, s, nh, dh]),
+        ],
+        Variant::Gqa { n_kv_heads } => vec![
+            ("cache_k", vec![l, batch, s, *n_kv_heads, dh]),
+            ("cache_v", vec![l, batch, s, *n_kv_heads, dh]),
+        ],
+        Variant::EliteKv { r, d_ckv } => vec![
+            ("cache_ke", vec![l, batch, s, nh, 2 * r]),
+            ("cache_c", vec![l, batch, s, *d_ckv]),
+        ],
+        Variant::Slrd { r, d_ck, d_cv } => vec![
+            ("cache_ke", vec![l, batch, s, nh, 2 * r]),
+            ("cache_ck", vec![l, batch, s, *d_ck]),
+            ("cache_cv", vec![l, batch, s, *d_cv]),
+        ],
+    }
+}
 
 /// Bytes per f32 element.
 const ELEM: usize = 4;
@@ -77,5 +116,35 @@ mod tests {
         let cfg = ModelConfig::small();
         let g = CacheLayout::new(&cfg, Variant::Gqa { n_kv_heads: 2 });
         assert!((g.ratio - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slab_specs_account_for_every_cached_element() {
+        // The sum of per-token elements across a variant's slabs must equal
+        // the paper's cache_per_token formula — the slab layout IS the
+        // compression claim made concrete.
+        let cfg = ModelConfig::tiny();
+        for variant in [
+            Variant::Mha,
+            Variant::RopeLite,
+            Variant::Gqa { n_kv_heads: 2 },
+            Variant::EliteKv { r: 4, d_ckv: 64 },
+            Variant::Slrd { r: 4, d_ck: 32, d_cv: 48 },
+        ] {
+            let slabs = slab_specs(&cfg, &variant, 4, 256);
+            let per_token: usize = slabs
+                .iter()
+                .map(|(_, shape)| shape[3..].iter().product::<usize>())
+                .sum();
+            assert_eq!(
+                per_token,
+                variant.cache_per_token(&cfg),
+                "variant {}",
+                variant.tag()
+            );
+            for (_, shape) in &slabs {
+                assert_eq!(&shape[..3], &[cfg.n_layers, 4, 256]);
+            }
+        }
     }
 }

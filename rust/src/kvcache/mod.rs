@@ -1,13 +1,16 @@
 //! KV-cache management substrate (DESIGN.md S10).
 //!
 //! Three pieces:
-//! * [`layout`]  — per-variant cache geometry and byte accounting; this is
-//!   where the paper's headline claim (2·r·n_h + d_ckv elements per token
-//!   per layer instead of 2·n_h·d_h) becomes measurable.
+//! * [`layout`]  — per-variant cache geometry and byte accounting, plus
+//!   the named decode slab shapes (`slab_specs`) both backends share;
+//!   this is where the paper's headline claim (2·r·n_h + d_ckv elements
+//!   per token per layer instead of 2·n_h·d_h) becomes measurable, and
+//!   where the J-LRD shared-latent vs S-LRD split-latent slabs are
+//!   defined.
 //! * [`block`]   — a paged block allocator with ref-counting (vLLM-style):
 //!   admission control and memory budgeting for the serving coordinator.
 //! * [`manager`] — slot-based cache state bound to the fixed-batch decode
-//!   artifacts: owns the cache tensors, assigns sequence slots, tracks
+//!   lanes: owns the cache tensors, assigns sequence slots, tracks
 //!   lengths, and reports live cache bytes.
 
 pub mod block;
@@ -15,5 +18,5 @@ pub mod layout;
 pub mod manager;
 
 pub use block::BlockAllocator;
-pub use layout::CacheLayout;
+pub use layout::{slab_specs, CacheLayout};
 pub use manager::SlotManager;

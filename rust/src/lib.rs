@@ -2,14 +2,23 @@
 //!
 //! Reproduction of *"EliteKV: Scalable KV Cache Compression via RoPE
 //! Frequency Selection and Joint Low-Rank Projection"* (2025) as a
-//! three-layer Rust + JAX + Pallas stack. This crate is Layer 3: the
-//! self-contained coordinator that pretrains, searches (RoPElite,
-//! Algorithm 1), converts (J-LRD / S-LRD / GQA weight surgery with the
-//! in-repo Jacobi SVD), uptrains, serves, and benchmarks the models —
-//! executing AOT-lowered HLO artifacts through the PJRT CPU client.
-//! Python never runs on the request path.
+//! Rust-first stack. This crate is the self-contained coordinator that
+//! pretrains, searches (RoPElite, Algorithm 1), converts (J-LRD / S-LRD /
+//! GQA weight surgery with the in-repo Jacobi SVD), uptrains, serves, and
+//! benchmarks the models.
 //!
-//! Module map (see DESIGN.md §4 for the full system inventory):
+//! Two serving engines sit behind one [`runtime::Backend`] trait:
+//!
+//! * the **native** backend ([`native`]) — the full EliteKV forward path
+//!   in pure Rust, reading the compressed latent cache directly; zero
+//!   Python, zero artifacts, always available;
+//! * the **PJRT** backend (`--features pjrt`) — AOT-lowered HLO artifacts
+//!   executed through the PJRT CPU client, for training and parity runs.
+//!
+//! Python never runs on the request path either way.
+//!
+//! Module map (see DESIGN.md §4 at the repository root for the full
+//! system inventory):
 //!
 //! * [`util`]    — PRNG, JSON, statistics, thread pool, property testing
 //! * [`tensor`]  — minimal CPU f32 tensor with the ops conversion needs
@@ -18,13 +27,14 @@
 //! * [`config`]  — model family / variant / run configuration
 //! * [`rope`]    — host-side RoPE math (frequency ladders, elite thetas)
 //! * [`data`]    — synthetic corpus generator, probe tasks, tokenizer
-//! * [`runtime`] — PJRT engine: load HLO text, compile, execute
+//! * [`runtime`] — the `Backend` trait + PJRT engine (feature `pjrt`)
+//! * [`native`]  — pure-Rust decode backend over the latent KV cache
 //! * [`convert`] — GQA / EliteKV / S-LRD weight surgery + dim allocation
 //! * [`search`]  — RoPElite greedy driver + Uniform/Contribution baselines
-//! * [`train`]   — pretraining / uptraining loops with metrics
-//! * [`kvcache`] — paged KV-cache manager with per-variant layouts
+//! * [`train`]   — training loops (feature `pjrt`) + backend-generic scorer
+//! * [`kvcache`] — paged KV-cache manager with per-variant slab layouts
 //! * [`coordinator`] — serving: router, continuous batcher, scheduler
-//! * [`bench`]   — experiment harness regenerating every paper table/figure
+//! * [`bench`]   — experiment harness (paper tables/figures + native perf)
 
 pub mod bench;
 pub mod cli;
@@ -35,6 +45,7 @@ pub mod data;
 pub mod io;
 pub mod kvcache;
 pub mod linalg;
+pub mod native;
 pub mod rope;
 pub mod runtime;
 pub mod search;

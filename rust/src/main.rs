@@ -1,35 +1,49 @@
-//! `elitekv` — the Layer-3 coordinator CLI.
+//! `elitekv` — the coordinator CLI.
 //!
 //! Subcommands (run `elitekv help` for details):
 //!   pretrain    train a baseline MHA model from scratch on the synthetic
-//!               corpus and save a checkpoint
+//!               corpus and save a checkpoint [pjrt]
 //!   search      RoPElite (Algorithm 1) / Uniform / Contribution chunk
-//!               selection on a pretrained checkpoint
+//!               selection on a pretrained checkpoint (uniform is native)
 //!   convert     weight surgery: MHA checkpoint -> gqa / elitekv / slrd
-//!   uptrain     uptrain a converted checkpoint (paper §4.1 recipe)
+//!               (pure Rust, no artifacts needed)
+//!   uptrain     uptrain a converted checkpoint (paper §4.1 recipe) [pjrt]
 //!   eval        probe battery + holdout perplexity for a checkpoint
-//!   serve       run the inference engine on a synthetic request stream
-//!   experiment  regenerate paper tables/figures (table1, table2, fig2,
-//!               fig3, fig5, fig6, fig7, serve, all)
+//!               (native backend by default)
+//!   serve       run the inference engine on a synthetic request stream;
+//!               `--backend native` (default) needs zero artifacts,
+//!               `--backend pjrt` executes the AOT path
+//!   bench       native decode benchmark -> BENCH_native_decode.json
+//!   experiment  regenerate paper tables/figures [pjrt]
 //!
-//! Python never runs here: all model compute executes from AOT-compiled
-//! HLO artifacts through the PJRT CPU client (`make artifacts` first).
-
-use std::sync::Arc;
+//! Python never runs here: the native backend computes the forward pass
+//! in-process; the optional pjrt feature executes AOT-compiled HLO
+//! artifacts through the PJRT CPU client (`make artifacts` first).
 
 use anyhow::{bail, Context, Result};
 
-use elitekv::bench::experiments;
-use elitekv::bench::pipeline::{ExperimentCtx, SweepOpts};
 use elitekv::cli::Args;
 use elitekv::config::{ModelConfig, Variant};
 use elitekv::convert::{self, EliteSelection};
 use elitekv::coordinator::{GenParams, InferenceServer, Request};
 use elitekv::data::{CorpusGen, ProbeSet};
 use elitekv::io::Checkpoint;
-use elitekv::runtime::{Engine, HostTensor, ModelRunner, TrainState};
+use elitekv::native::{NativeModel, NativeRunner};
+use elitekv::runtime::Backend;
 use elitekv::search;
-use elitekv::train::{scorer, TrainLoop, TrainOpts};
+use elitekv::train::scorer;
+
+#[cfg(feature = "pjrt")]
+use std::sync::Arc;
+
+#[cfg(feature = "pjrt")]
+use elitekv::bench::experiments;
+#[cfg(feature = "pjrt")]
+use elitekv::bench::pipeline::{ExperimentCtx, SweepOpts};
+#[cfg(feature = "pjrt")]
+use elitekv::runtime::{Engine, HostTensor, ModelRunner, PjrtBackend, TrainState};
+#[cfg(feature = "pjrt")]
+use elitekv::train::{TrainLoop, TrainOpts};
 
 fn main() {
     init_logger();
@@ -54,6 +68,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "uptrain" => cmd_uptrain(args),
         "eval" => cmd_eval(args),
         "serve" => cmd_serve(args),
+        "bench" => cmd_bench(args),
         "experiment" => cmd_experiment(args),
         "help" | "--help" => {
             print!("{HELP}");
@@ -69,22 +84,33 @@ elitekv — EliteKV reproduction coordinator
 USAGE: elitekv <command> [flags]
 
 COMMANDS
-  pretrain   --config tiny|small|100m --steps N [--lr F] [--out PATH]
-  search     --config C --ckpt PATH --r N [--method ropelite|uniform|contribution]
-             [--out PATH]
-  convert    --config C --ckpt PATH --variant TAG [--selection PATH] [--out PATH]
+  serve      [--backend native|pjrt] --config C --variant TAG
+             [--ckpt PATH] [--selection PATH] [--requests N] [--max-new N]
+             [--batch B] [--max-seq S] [--temperature F] [--top-p F]
+             [--seed N] [--r N (ropelite uniform fallback)] [--pallas]
+             native backend (default): no artifacts needed; random-init
+             weights unless --ckpt points at a (converted) checkpoint
+  bench      [--config C] [--steps N] [--batch B] [--prompt N]
+             [--out PATH]   native decode sweep -> BENCH_native_decode.json
+  eval       [--backend native|pjrt] --config C --variant TAG [--ckpt PATH]
+             [--selection PATH] [--probes N] [--seed N] [--r N]
+  convert    --config C --ckpt PATH --variant TAG [--selection PATH]
+             [--out PATH]   (pure Rust; no artifacts needed)
+  search     --config C --r N --method uniform [--out PATH]
+             (ropelite/contribution methods additionally need --ckpt and
+              a pjrt build)
+  pretrain   --config tiny|small|100m --steps N [--lr F] [--out PATH] [pjrt]
   uptrain    --config C --variant TAG --ckpt PATH [--selection PATH]
-             --steps N [--lr F] [--out PATH]
-  eval       --config C --variant TAG --ckpt PATH [--selection PATH]
-             [--probes N]
-  serve      --config C --variant TAG --ckpt PATH [--selection PATH]
-             [--requests N] [--max-new N] [--pallas]
+             --steps N [--lr F] [--out PATH] [pjrt]
   experiment <table1|table2|fig2|fig3|fig5|fig6|fig7|serve|all>
-             [--config tiny] [--out results] [--full]
+             [--config tiny] [--out results] [--full] [pjrt]
 
 COMMON FLAGS
-  --artifacts DIR   artifact directory (default: artifacts)
+  --artifacts DIR   artifact directory for pjrt commands (default: artifacts)
   ELITEKV_LOG=debug|info|warn|error controls logging
+
+Commands marked [pjrt] execute AOT HLO artifacts and require a build with
+`--features pjrt` plus `make artifacts`; everything else is pure Rust.
 ";
 
 fn init_logger() {
@@ -112,102 +138,206 @@ fn init_logger() {
     log::set_max_level(level);
 }
 
-fn artifacts_dir(args: &Args) -> String {
-    args.str_or("artifacts", elitekv::ARTIFACTS_DIR)
-}
+// ---------------------------------------------------------------------------
+// Native backend construction
+// ---------------------------------------------------------------------------
 
-/// Build a runner + params (+extras from a selection file) for a variant.
-fn load_model(
+/// Selection for variants that need one: `--selection PATH` wins, else the
+/// Uniform baseline. For elitekv/slrd the selection's r must match the
+/// variant; ropelite has no intrinsic r, so a selection file of any r is
+/// accepted and the Uniform fallback takes its r from `--r`.
+fn load_selection(
     args: &Args,
-    cfg_name: &str,
-    tag: &str,
-) -> Result<(ModelRunner, Vec<HostTensor>)> {
-    let engine = Arc::new(Engine::new()?);
-    let mut runner =
-        ModelRunner::new(engine, artifacts_dir(args), cfg_name, tag)?;
-    let cfg = runner.manifest.config.clone();
-    let variant = runner.manifest.variant.clone();
-    if !runner.manifest.extras.is_empty() {
-        let sel_path = args.req("selection")?;
-        let sel = EliteSelection::from_checkpoint(
-            &Checkpoint::load(sel_path)?, &cfg)?;
-        match variant {
-            Variant::RopeLite => {
-                let mask = convert::elitekv::elite_mask_flat(&cfg, &sel);
-                runner.set_extras(vec![HostTensor::F32(
-                    mask, vec![cfg.n_layers, cfg.n_heads, cfg.n_chunks()])])?;
-            }
-            Variant::EliteKv { r, .. } | Variant::Slrd { r, .. } => {
-                anyhow::ensure!(sel.r() == r, "selection r mismatch");
-                let theta = convert::elitekv::elite_thetas_flat(&cfg, &sel);
-                runner.set_extras(vec![HostTensor::F32(
-                    theta, vec![cfg.n_layers, cfg.n_heads, r])])?;
-            }
-            _ => {}
-        }
-    }
-    let ckpt = Checkpoint::load(args.req("ckpt")?)?;
-    let params = runner.params_from_ckpt(&ckpt)?;
-    Ok((runner, params))
-}
-
-fn cmd_pretrain(args: &Args) -> Result<()> {
-    let cfg_name = args.str_or("config", "tiny");
-    let steps = args.usize_or("steps", 300)?;
-    let lr = args.f64_or("lr", 1e-3)? as f32;
-    let out = args.str_or("out", &format!("pretrained_{cfg_name}.ekvc"));
-    let engine = Arc::new(Engine::new()?);
-    let runner =
-        ModelRunner::new(engine, artifacts_dir(args), &cfg_name, "mha")?;
-    let params = runner.init(args.usize_or("seed", 42)? as i32)?;
-    let mut state = TrainState::fresh(params);
-    let opts = TrainOpts { steps, lr, log_every: 20, ..Default::default() };
-    let mut lp = TrainLoop::new(&runner, &opts);
-    let report = lp.run(&mut state, &opts)?;
-    println!(
-        "pretrained {cfg_name}: {} steps, {} tokens, loss {:.4}, ppl {:.3} \
-         ({:.1}s, {:.2} s/step)",
-        steps, report.tokens_seen, report.final_loss, report.final_ppl,
-        report.seconds, report.seconds / steps as f64
-    );
-    let mut ckpt = runner.ckpt_from_params(&state.params)?;
-    ckpt.set_meta("pretrain_steps", steps);
-    ckpt.set_meta("pretrain_tokens", report.tokens_seen);
-    ckpt.save(&out)?;
-    println!("saved {out}");
-    Ok(())
-}
-
-fn cmd_search(args: &Args) -> Result<()> {
-    let cfg_name = args.str_or("config", "tiny");
-    let r = args.usize_or("r", 4)?;
-    let method = args.str_or("method", "ropelite");
-    let out =
-        args.str_or("out", &format!("elite_{cfg_name}_{method}_r{r}.ekvc"));
-    let cfg = ModelConfig::by_name(&cfg_name).context("config")?;
-    let engine = Arc::new(Engine::new()?);
-    let runner =
-        ModelRunner::new(engine, artifacts_dir(args), &cfg_name, "mha")?;
-    let ckpt = Checkpoint::load(args.req("ckpt")?)?;
-    let params = runner.params_from_ckpt(&ckpt)?;
-    let mut gen = CorpusGen::new(cfg.vocab, 1);
-    gen.reseed(1, 0xca11b);
-    let t0 = std::time::Instant::now();
-    let sel = match method.as_str() {
-        "ropelite" => search::ropelite_search(&runner, &params, &mut gen, r)?,
-        "uniform" => search::uniform_selection(&cfg, r),
-        "contribution" => {
-            search::contribution_selection(&runner, &params, &mut gen, r)?
-        }
-        m => bail!("unknown method `{m}`"),
+    cfg: &ModelConfig,
+    variant: &Variant,
+) -> Result<Option<EliteSelection>> {
+    let from_file = |path: &str| -> Result<EliteSelection> {
+        EliteSelection::from_checkpoint(&Checkpoint::load(path)?, cfg)
     };
+    match variant {
+        Variant::EliteKv { r, .. } | Variant::Slrd { r, .. } => {
+            if let Some(path) = args.get("selection") {
+                let sel = from_file(path)?;
+                anyhow::ensure!(
+                    sel.r() == *r,
+                    "selection r={} but variant `{}` needs r={r}",
+                    sel.r(),
+                    variant.tag()
+                );
+                return Ok(Some(sel));
+            }
+            log::info!("no --selection: using the Uniform baseline at r={r}");
+            Ok(Some(search::uniform_selection(cfg, *r)))
+        }
+        Variant::RopeLite => {
+            if let Some(path) = args.get("selection") {
+                return Ok(Some(from_file(path)?));
+            }
+            let r = args.usize_or("r", cfg.n_chunks() / 4)?;
+            log::info!("no --selection: using the Uniform baseline at r={r}");
+            Ok(Some(search::uniform_selection(cfg, r)))
+        }
+        _ => Ok(None),
+    }
+}
+
+/// Build the native backend from flags: checkpoint weights when `--ckpt`
+/// is given, random init otherwise (layout/serving behavior is
+/// weight-independent, so the artifact-free demo path stays honest).
+///
+/// Selection precedence for a checkpoint: `--selection` file, then the
+/// selection embedded by `convert` (converted elite weights are permuted
+/// by a specific chunk order — a mismatched selection would rotate the
+/// wrong frequencies silently), then the Uniform fallback (random-init
+/// weights only, where any consistent order is fine).
+fn native_backend(args: &Args) -> Result<NativeRunner> {
+    let cfg_name = args.str_or("config", "tiny");
+    let cfg = ModelConfig::by_name(&cfg_name).context("unknown config")?;
+    let tag = args.str_or("variant", "elitekv_r4_c64");
+    let variant = Variant::parse(&tag)
+        .with_context(|| format!("bad variant tag `{tag}`"))?;
+    let model = match args.get("ckpt") {
+        Some(path) => {
+            let ckpt = Checkpoint::load(path)?;
+            let sel = if args.get("selection").is_some() {
+                load_selection(args, &cfg, &variant)?
+            } else if ckpt.tensors.contains_key("elite.l0") {
+                log::info!("using the selection embedded in {path}");
+                Some(EliteSelection::from_checkpoint(&ckpt, &cfg)?)
+            } else if matches!(
+                variant,
+                Variant::EliteKv { .. } | Variant::Slrd { .. }
+            ) {
+                // A converted elite checkpoint's weights are permuted by a
+                // specific chunk order; guessing one would rotate the
+                // wrong frequencies silently.
+                bail!(
+                    "checkpoint {path} has no embedded elite selection; \
+                     pass --selection (the file used at convert time)"
+                );
+            } else {
+                load_selection(args, &cfg, &variant)?
+            };
+            NativeModel::from_checkpoint(
+                cfg.clone(), variant, ckpt, sel.as_ref())?
+        }
+        None => {
+            let sel = load_selection(args, &cfg, &variant)?;
+            log::info!("no --ckpt: random-init native weights");
+            NativeModel::init(
+                &cfg,
+                variant,
+                args.u64_or("seed", 42)?,
+                sel.as_ref(),
+            )?
+        }
+    };
+    let batch = args.usize_or("batch", 4)?;
+    let max_seq = args.usize_or("max-seq", cfg.max_seq.min(256))?;
+    NativeRunner::new(model, batch, max_seq)
+}
+
+// ---------------------------------------------------------------------------
+// Commands
+// ---------------------------------------------------------------------------
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let backend = args.str_or("backend", "native");
+    let boxed: Box<dyn Backend> = match backend.as_str() {
+        "native" => Box::new(native_backend(args)?),
+        "pjrt" => pjrt_serving_backend(args)?,
+        other => bail!("unknown backend `{other}` (native|pjrt)"),
+    };
+    let n = args.usize_or("requests", 24)?;
+    let max_new = args.usize_or("max-new", 16)?;
+    let temperature = args.f64_or("temperature", 0.0)? as f32;
+    let top_p = args.f64_or("top-p", 1.0)? as f32;
+    let vocab = boxed.config().vocab;
+    let kind = boxed.kind();
+    let variant_tag = boxed.variant().tag();
+    let mut server = InferenceServer::new(boxed, 64 << 20)?;
+    server.use_pallas = args.has("pallas");
+    let gen = CorpusGen::new(vocab, 1);
+    let probes = ProbeSet::generate(&gen, n.div_ceil(6), 7777);
+    let t0 = std::time::Instant::now();
+    for (i, item) in probes.items.iter().take(n).enumerate() {
+        server.submit(Request::new(
+            i as u64,
+            item.prompt.clone(),
+            GenParams {
+                max_new_tokens: max_new,
+                temperature,
+                top_p,
+                ..Default::default()
+            },
+        ));
+    }
+    let responses = server.run_to_completion()?;
+    let wall = t0.elapsed().as_secs_f64();
+    let toks: usize = responses.iter().map(|r| r.tokens.len()).sum();
     println!(
-        "search `{method}` r={r} done in {:.1}s",
-        t0.elapsed().as_secs_f64()
+        "[{kind}/{variant_tag}] served {} requests, {} tokens in {:.2}s \
+         ({:.1} tok/s); prefills {}, decode steps {}, peak cache {} KiB",
+        responses.len(), toks, wall, toks as f64 / wall,
+        server.stats.prefills, server.stats.decode_steps,
+        server.stats.peak_cache_bytes / 1024
     );
-    sel.to_checkpoint(&cfg).save(&out)?;
-    println!("saved {out}");
     Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let cfg_name = args.str_or("config", "tiny");
+    let cfg = ModelConfig::by_name(&cfg_name).context("unknown config")?;
+    let opts = elitekv::bench::native::NativeBenchOpts {
+        batch: args.usize_or("batch", 4)?,
+        prompt_len: args.usize_or("prompt", 16)?,
+        decode_steps: args.usize_or("steps", 48)?,
+        max_seq: args.usize_or("max-seq", cfg.max_seq.min(128))?,
+    };
+    let out = args.str_or("out", "BENCH_native_decode.json");
+    let variants = elitekv::bench::native::default_sweep(&cfg);
+    elitekv::bench::native_decode_bench(
+        &cfg,
+        &variants,
+        &opts,
+        std::path::Path::new(&out),
+    )?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let backend = args.str_or("backend", "native");
+    let n = args.usize_or("probes", 25)?;
+    match backend.as_str() {
+        "native" => {
+            let runner = native_backend(args)?;
+            let gen = CorpusGen::new(runner.config().vocab, 1);
+            let probes = ProbeSet::generate(&gen, n, 99);
+            let rep = scorer::full_report(&runner, &probes, 4)?;
+            print_eval(runner.variant(), runner.config(), &rep);
+            Ok(())
+        }
+        "pjrt" => pjrt_eval(args, n),
+        other => bail!("unknown backend `{other}` (native|pjrt)"),
+    }
+}
+
+fn print_eval(
+    variant: &Variant,
+    cfg: &ModelConfig,
+    rep: &scorer::ScoreReport,
+) {
+    println!(
+        "variant {} (cache {:.1}%)",
+        variant.tag(),
+        100.0 * variant.cache_ratio(cfg)
+    );
+    for (task, acc) in &rep.scores.task_acc {
+        println!("  {task:<10} {:6.2}", 100.0 * acc);
+    }
+    println!("  {:<10} {:6.2}", "Avg.", 100.0 * rep.scores.average);
+    println!("  {:<10} {:6.3}", "ppl", rep.ppl);
 }
 
 fn cmd_convert(args: &Args) -> Result<()> {
@@ -243,6 +373,182 @@ fn cmd_convert(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_search(args: &Args) -> Result<()> {
+    let cfg_name = args.str_or("config", "tiny");
+    let r = args.usize_or("r", 4)?;
+    let method = args.str_or("method", "ropelite");
+    let out =
+        args.str_or("out", &format!("elite_{cfg_name}_{method}_r{r}.ekvc"));
+    let cfg = ModelConfig::by_name(&cfg_name).context("config")?;
+    if method == "uniform" {
+        let sel = search::uniform_selection(&cfg, r);
+        sel.to_checkpoint(&cfg).save(&out)?;
+        println!("saved {out} (uniform selection, r={r})");
+        return Ok(());
+    }
+    pjrt_search(args, &cfg, &cfg_name, &method, r, &out)
+}
+
+// ---------------------------------------------------------------------------
+// PJRT-only paths (gated; graceful error otherwise)
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "pjrt")]
+fn artifacts_dir(args: &Args) -> String {
+    args.str_or("artifacts", elitekv::ARTIFACTS_DIR)
+}
+
+/// Build a runner + params (+extras from a selection file) for a variant.
+#[cfg(feature = "pjrt")]
+fn load_model(
+    args: &Args,
+    cfg_name: &str,
+    tag: &str,
+) -> Result<(ModelRunner, Vec<HostTensor>)> {
+    let engine = Arc::new(Engine::new()?);
+    let mut runner =
+        ModelRunner::new(engine, artifacts_dir(args), cfg_name, tag)?;
+    let cfg = runner.manifest.config.clone();
+    let variant = runner.manifest.variant.clone();
+    if !runner.manifest.extras.is_empty() {
+        let sel_path = args.req("selection")?;
+        let sel = EliteSelection::from_checkpoint(
+            &Checkpoint::load(sel_path)?, &cfg)?;
+        match variant {
+            Variant::RopeLite => {
+                let mask = convert::elitekv::elite_mask_flat(&cfg, &sel);
+                runner.set_extras(vec![HostTensor::F32(
+                    mask, vec![cfg.n_layers, cfg.n_heads, cfg.n_chunks()])])?;
+            }
+            Variant::EliteKv { r, .. } | Variant::Slrd { r, .. } => {
+                anyhow::ensure!(sel.r() == r, "selection r mismatch");
+                let theta = convert::elitekv::elite_thetas_flat(&cfg, &sel);
+                runner.set_extras(vec![HostTensor::F32(
+                    theta, vec![cfg.n_layers, cfg.n_heads, r])])?;
+            }
+            _ => {}
+        }
+    }
+    let ckpt = Checkpoint::load(args.req("ckpt")?)?;
+    let params = runner.params_from_ckpt(&ckpt)?;
+    Ok((runner, params))
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_serving_backend(args: &Args) -> Result<Box<dyn Backend>> {
+    let cfg_name = args.str_or("config", "tiny");
+    let tag = args.req("variant")?.to_string();
+    let (runner, params) = load_model(args, &cfg_name, &tag)?;
+    Ok(Box::new(PjrtBackend::new(runner, params)))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_serving_backend(_args: &Args) -> Result<Box<dyn Backend>> {
+    bail!("this build has no PJRT backend; rebuild with --features pjrt \
+           or use --backend native")
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_eval(args: &Args, n: usize) -> Result<()> {
+    let cfg_name = args.str_or("config", "tiny");
+    let tag = args.req("variant")?.to_string();
+    let (runner, params) = load_model(args, &cfg_name, &tag)?;
+    let gen = CorpusGen::new(runner.manifest.config.vocab, 1);
+    let probes = ProbeSet::generate(&gen, n, 99);
+    let rep = scorer::full_report(&runner.as_backend(&params), &probes, 4)?;
+    let cfg = runner.manifest.config.clone();
+    let variant = runner.manifest.variant.clone();
+    print_eval(&variant, &cfg, &rep);
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_eval(_args: &Args, _n: usize) -> Result<()> {
+    bail!("eval --backend pjrt needs a build with --features pjrt; \
+           use --backend native")
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_search(
+    args: &Args,
+    cfg: &ModelConfig,
+    cfg_name: &str,
+    method: &str,
+    r: usize,
+    out: &str,
+) -> Result<()> {
+    let engine = Arc::new(Engine::new()?);
+    let runner =
+        ModelRunner::new(engine, artifacts_dir(args), cfg_name, "mha")?;
+    let ckpt = Checkpoint::load(args.req("ckpt")?)?;
+    let params = runner.params_from_ckpt(&ckpt)?;
+    let mut gen = CorpusGen::new(cfg.vocab, 1);
+    gen.reseed(1, 0xca11b);
+    let t0 = std::time::Instant::now();
+    let sel = match method {
+        "ropelite" => search::ropelite_search(&runner, &params, &mut gen, r)?,
+        "contribution" => {
+            search::contribution_selection(&runner, &params, &mut gen, r)?
+        }
+        m => bail!("unknown method `{m}`"),
+    };
+    println!(
+        "search `{method}` r={r} done in {:.1}s",
+        t0.elapsed().as_secs_f64()
+    );
+    sel.to_checkpoint(cfg).save(out)?;
+    println!("saved {out}");
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_search(
+    _args: &Args,
+    _cfg: &ModelConfig,
+    _cfg_name: &str,
+    method: &str,
+    _r: usize,
+    _out: &str,
+) -> Result<()> {
+    bail!("search method `{method}` runs the capture/delta artifacts and \
+           needs --features pjrt; `--method uniform` works natively")
+}
+
+#[cfg(feature = "pjrt")]
+fn cmd_pretrain(args: &Args) -> Result<()> {
+    let cfg_name = args.str_or("config", "tiny");
+    let steps = args.usize_or("steps", 300)?;
+    let lr = args.f64_or("lr", 1e-3)? as f32;
+    let out = args.str_or("out", &format!("pretrained_{cfg_name}.ekvc"));
+    let engine = Arc::new(Engine::new()?);
+    let runner =
+        ModelRunner::new(engine, artifacts_dir(args), &cfg_name, "mha")?;
+    let params = runner.init(args.usize_or("seed", 42)? as i32)?;
+    let mut state = TrainState::fresh(params);
+    let opts = TrainOpts { steps, lr, log_every: 20, ..Default::default() };
+    let mut lp = TrainLoop::new(&runner, &opts);
+    let report = lp.run(&mut state, &opts)?;
+    println!(
+        "pretrained {cfg_name}: {} steps, {} tokens, loss {:.4}, ppl {:.3} \
+         ({:.1}s, {:.2} s/step)",
+        steps, report.tokens_seen, report.final_loss, report.final_ppl,
+        report.seconds, report.seconds / steps as f64
+    );
+    let mut ckpt = runner.ckpt_from_params(&state.params)?;
+    ckpt.set_meta("pretrain_steps", steps);
+    ckpt.set_meta("pretrain_tokens", report.tokens_seen);
+    ckpt.save(&out)?;
+    println!("saved {out}");
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_pretrain(_args: &Args) -> Result<()> {
+    bail!("pretrain drives the AdamW train_step artifact and needs a build \
+           with --features pjrt (plus `make artifacts`)")
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_uptrain(args: &Args) -> Result<()> {
     let cfg_name = args.str_or("config", "tiny");
     let tag = args.req("variant")?.to_string();
@@ -260,63 +566,29 @@ fn cmd_uptrain(args: &Args) -> Result<()> {
         "uptrained {tag}: loss {:.4}, ppl {:.3} ({:.1}s)",
         report.final_loss, report.final_ppl, report.seconds
     );
-    runner.ckpt_from_params(&state.params)?.save(&out)?;
+    let mut out_ckpt = runner.ckpt_from_params(&state.params)?;
+    // Keep the elite selection embedded: the permuted weights are only
+    // meaningful together with it (see convert::elitekv::embed_selection).
+    if let Some(sel_path) = args.get("selection") {
+        let cfg = runner.manifest.config.clone();
+        if let Ok(sel) = EliteSelection::from_checkpoint(
+            &Checkpoint::load(sel_path)?, &cfg)
+        {
+            convert::elitekv::embed_selection(&mut out_ckpt, &cfg, &sel);
+        }
+    }
+    out_ckpt.save(&out)?;
     println!("saved {out}");
     Ok(())
 }
 
-fn cmd_eval(args: &Args) -> Result<()> {
-    let cfg_name = args.str_or("config", "tiny");
-    let tag = args.req("variant")?.to_string();
-    let (runner, params) = load_model(args, &cfg_name, &tag)?;
-    let n = args.usize_or("probes", 25)?;
-    let gen = CorpusGen::new(runner.manifest.config.vocab, 1);
-    let probes = ProbeSet::generate(&gen, n, 99);
-    let rep = scorer::full_report(&runner, &params, &probes, 4)?;
-    println!(
-        "variant {tag} (cache {:.1}%)",
-        100.0 * runner.manifest.cache_ratio
-    );
-    for (task, acc) in &rep.scores.task_acc {
-        println!("  {task:<10} {:6.2}", 100.0 * acc);
-    }
-    println!("  {:<10} {:6.2}", "Avg.", 100.0 * rep.scores.average);
-    println!("  {:<10} {:6.3}", "ppl", rep.ppl);
-    Ok(())
+#[cfg(not(feature = "pjrt"))]
+fn cmd_uptrain(_args: &Args) -> Result<()> {
+    bail!("uptrain drives the AdamW train_step artifact and needs a build \
+           with --features pjrt (plus `make artifacts`)")
 }
 
-fn cmd_serve(args: &Args) -> Result<()> {
-    let cfg_name = args.str_or("config", "tiny");
-    let tag = args.req("variant")?.to_string();
-    let n = args.usize_or("requests", 24)?;
-    let max_new = args.usize_or("max-new", 16)?;
-    let (runner, params) = load_model(args, &cfg_name, &tag)?;
-    let vocab = runner.manifest.config.vocab;
-    let mut server = InferenceServer::new(runner, params, 64 << 20)?;
-    server.use_pallas = args.has("pallas");
-    let gen = CorpusGen::new(vocab, 1);
-    let probes = ProbeSet::generate(&gen, n.div_ceil(6), 7777);
-    let t0 = std::time::Instant::now();
-    for (i, item) in probes.items.iter().take(n).enumerate() {
-        server.submit(Request::new(
-            i as u64,
-            item.prompt.clone(),
-            GenParams { max_new_tokens: max_new, ..Default::default() },
-        ));
-    }
-    let responses = server.run_to_completion()?;
-    let wall = t0.elapsed().as_secs_f64();
-    let toks: usize = responses.iter().map(|r| r.tokens.len()).sum();
-    println!(
-        "served {} requests, {} tokens in {:.2}s ({:.1} tok/s); \
-         prefills {}, decode steps {}, peak cache {} KiB",
-        responses.len(), toks, wall, toks as f64 / wall,
-        server.stats.prefills, server.stats.decode_steps,
-        server.stats.peak_cache_bytes / 1024
-    );
-    Ok(())
-}
-
+#[cfg(feature = "pjrt")]
 fn cmd_experiment(args: &Args) -> Result<()> {
     let which = args.pos(1).unwrap_or("all");
     let cfg_name = args.str_or("config", "tiny");
@@ -371,4 +643,11 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         other => bail!("unknown experiment `{other}`"),
     }
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_experiment(_args: &Args) -> Result<()> {
+    bail!("the paper-sweep experiments replay the AOT artifacts and need a \
+           build with --features pjrt; `elitekv bench` runs the native \
+           decode benchmark instead")
 }

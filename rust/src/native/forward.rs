@@ -1,0 +1,234 @@
+//! Math kernels for the native decode path: small, allocation-free
+//! routines over `&[f32]` slices. Row-major weight layout matches the
+//! checkpoint format ([in, out] projections applied as x @ W).
+
+use crate::tensor::Tensor;
+
+/// RMSNorm epsilon (must match python/compile/model.py EPS).
+pub const EPS: f64 = 1e-5;
+
+/// out = rmsnorm(x) * g, RMS taken over the full slice.
+pub fn rmsnorm(x: &[f32], g: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), g.len());
+    debug_assert_eq!(x.len(), out.len());
+    let ms: f64 = x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()
+        / x.len() as f64;
+    let scale = (1.0 / (ms + EPS).sqrt()) as f32;
+    for ((o, &xv), &gv) in out.iter_mut().zip(x).zip(g) {
+        *o = xv * scale * gv;
+    }
+}
+
+/// out = x @ w for a row-major w [in, out]; `out` is overwritten.
+/// Iterates rows of `w` so every inner pass is a contiguous AXPY.
+pub fn matvec(x: &[f32], w: &Tensor, out: &mut [f32]) {
+    debug_assert_eq!(w.rank(), 2);
+    let (rows, cols) = (w.shape[0], w.shape[1]);
+    debug_assert_eq!(x.len(), rows);
+    debug_assert_eq!(out.len(), cols);
+    out.fill(0.0);
+    matvec_acc(x, w, out);
+}
+
+/// out += x @ w (accumulating variant for residual adds).
+pub fn matvec_acc(x: &[f32], w: &Tensor, out: &mut [f32]) {
+    let (rows, cols) = (w.shape[0], w.shape[1]);
+    debug_assert_eq!(x.len(), rows);
+    debug_assert_eq!(out.len(), cols);
+    for (i, &a) in x.iter().enumerate() {
+        if a == 0.0 {
+            continue;
+        }
+        let row = &w.data[i * cols..(i + 1) * cols];
+        for (o, &b) in out.iter_mut().zip(row) {
+            *o += a * b;
+        }
+    }
+}
+
+/// Dot product with f32 accumulation (matches the XLA decode path).
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| x * y).sum()
+}
+
+/// x * sigmoid(x) (the SwiGLU gate).
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// In-place, numerically stable softmax (f64 normalizer).
+pub fn softmax_inplace(s: &mut [f32]) {
+    let max = s.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut total = 0.0f64;
+    for v in s.iter_mut() {
+        *v = (*v - max).exp();
+        total += *v as f64;
+    }
+    let inv = (1.0 / total) as f32;
+    for v in s.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// Rotate the 2-D pair (x[i0], x[i0+1]) by `ang` radians.
+#[inline]
+pub fn rotate_pair(x: &mut [f32], i0: usize, ang: f64) {
+    let (sin, cos) = ang.sin_cos();
+    let (x0, x1) = (x[i0] as f64, x[i0 + 1] as f64);
+    x[i0] = (x0 * cos - x1 * sin) as f32;
+    x[i0 + 1] = (x0 * sin + x1 * cos) as f32;
+}
+
+/// Full-ladder RoPE over `heads` heads of width `dh` at `pos`:
+/// chunk c of every head rotates by pos * ladder[c].
+pub fn rope_full(x: &mut [f32], heads: usize, dh: usize, ladder: &[f64], pos: usize) {
+    let nc = dh / 2;
+    debug_assert_eq!(ladder.len(), nc);
+    debug_assert_eq!(x.len(), heads * dh);
+    for h in 0..heads {
+        let base = h * dh;
+        for (c, &theta) in ladder.iter().enumerate() {
+            rotate_pair(x, base + 2 * c, pos as f64 * theta);
+        }
+    }
+}
+
+/// RoPElite partial rotation (paper §3.1): rotate only chunks with
+/// mask[h * nc + c] != 0; the rest pass through linearly.
+pub fn rope_masked(
+    x: &mut [f32],
+    heads: usize,
+    dh: usize,
+    ladder: &[f64],
+    mask: &[f32],
+    pos: usize,
+) {
+    let nc = dh / 2;
+    debug_assert_eq!(mask.len(), heads * nc);
+    for h in 0..heads {
+        let base = h * dh;
+        for (c, &theta) in ladder.iter().enumerate() {
+            if mask[h * nc + c] != 0.0 {
+                rotate_pair(x, base + 2 * c, pos as f64 * theta);
+            }
+        }
+    }
+}
+
+/// Per-head elite-frequency rotation for the elitekv/slrd layout: the
+/// first `2r` dims of each head's span (width `span`) rotate by
+/// theta_e[h * r + i].
+pub fn rope_elite(
+    x: &mut [f32],
+    heads: usize,
+    span: usize,
+    r: usize,
+    theta_e: &[f32],
+    pos: usize,
+) {
+    debug_assert!(2 * r <= span);
+    debug_assert_eq!(theta_e.len(), heads * r);
+    for h in 0..heads {
+        let base = h * span;
+        for i in 0..r {
+            let theta = theta_e[h * r + i] as f64;
+            rotate_pair(x, base + 2 * i, pos as f64 * theta);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn matvec_matches_tensor_matmul() {
+        let mut rng = Pcg64::seeded(1);
+        let w = Tensor::randn(vec![7, 5], &mut rng);
+        let x = Tensor::randn(vec![1, 7], &mut rng);
+        let want = x.matmul(&w);
+        let mut out = vec![0.0f32; 5];
+        matvec(&x.data, &w, &mut out);
+        for (a, b) in out.iter().zip(&want.data) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn rmsnorm_unit_gain_on_unit_rms() {
+        let x = vec![1.0f32, -1.0, 1.0, -1.0];
+        let g = vec![1.0f32; 4];
+        let mut out = vec![0.0f32; 4];
+        rmsnorm(&x, &g, &mut out);
+        for (o, xv) in out.iter().zip(&x) {
+            assert!((o - xv).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn softmax_normalizes() {
+        let mut s = vec![0.0f32, 1.0, 2.0, -1.0];
+        softmax_inplace(&mut s);
+        let total: f32 = s.iter().sum();
+        assert!((total - 1.0).abs() < 1e-5);
+        assert!(s[2] > s[1] && s[1] > s[0] && s[0] > s[3]);
+    }
+
+    #[test]
+    fn rope_full_matches_reference_rotation() {
+        let cfg = crate::config::ModelConfig::tiny();
+        let ladder = crate::rope::ladder(cfg.rope_base, cfg.n_chunks());
+        let mut rng = Pcg64::seeded(2);
+        let head = Tensor::randn(vec![1, cfg.d_head], &mut rng);
+        let mut mine = head.data.clone();
+        rope_full(&mut mine, 1, cfg.d_head, &ladder, 13);
+        let mut reference = head.data.clone();
+        for (c, &theta) in ladder.iter().enumerate() {
+            crate::rope::rotate_chunk(&mut reference, c, theta, 13);
+        }
+        for (a, b) in mine.iter().zip(&reference) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn rope_masked_blends_rotated_and_linear() {
+        let dh = 8;
+        let ladder = crate::rope::ladder(10000.0, 4);
+        let x0: Vec<f32> = (0..dh).map(|i| i as f32 + 1.0).collect();
+        let mut masked = x0.clone();
+        let mask = [1.0f32, 0.0, 1.0, 0.0];
+        rope_masked(&mut masked, 1, dh, &ladder, &mask, 5);
+        let mut full = x0.clone();
+        rope_full(&mut full, 1, dh, &ladder, 5);
+        for c in 0..4 {
+            for o in 0..2 {
+                let i = 2 * c + o;
+                if mask[c] != 0.0 {
+                    assert_eq!(masked[i], full[i]);
+                } else {
+                    assert_eq!(masked[i], x0[i]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rope_elite_rotates_prefix_only() {
+        let span = 8;
+        let r = 2;
+        let theta_e = [1.0f32, 0.5];
+        let x0: Vec<f32> = (0..span).map(|i| i as f32 - 3.0).collect();
+        let mut x = x0.clone();
+        rope_elite(&mut x, 1, span, r, &theta_e, 7);
+        // rotated prefix norm-preserving, suffix untouched
+        for i in 2 * r..span {
+            assert_eq!(x[i], x0[i]);
+        }
+        let n0: f32 = x0[..2].iter().map(|v| v * v).sum();
+        let n1: f32 = x[..2].iter().map(|v| v * v).sum();
+        assert!((n0 - n1).abs() < 1e-3);
+    }
+}

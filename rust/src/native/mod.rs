@@ -1,0 +1,30 @@
+//! Native decode backend (DESIGN.md §5): the full EliteKV forward path in
+//! pure Rust on the in-repo [`crate::tensor`] substrate — no Python, no
+//! HLO artifacts, no XLA toolchain.
+//!
+//! Pieces:
+//! * [`specs`]   — the parameter inventory per architecture variant
+//!   (single source of truth mirrored from python/compile/model.py).
+//! * [`forward`] — the math kernels: RMSNorm, mat-vec, SwiGLU, the full
+//!   and RoPElite partial rotations, softmax.
+//! * [`model`]   — [`NativeModel`]: weights + variant extras + the cached
+//!   inverse-frequency tables, and the per-token incremental step that
+//!   reads/writes the compressed latent cache directly (J-LRD shares one
+//!   c_kv slab, S-LRD splits c_k / c_v — paper §3.2 / Fig 1 absorbed
+//!   attention).
+//! * [`runner`]  — [`NativeRunner`]: the [`crate::runtime::Backend`]
+//!   implementation driving prefill (threadpool-parallel across lanes)
+//!   and batched decode for the serving coordinator.
+//!
+//! Correctness contract: at full rank the J-LRD latent attention must
+//! match a materialized full-rank K/V path to f32 noise — pinned by
+//! `rust/tests/native_e2e.rs`.
+
+pub mod forward;
+pub mod model;
+pub mod runner;
+pub mod specs;
+
+pub use model::NativeModel;
+pub use runner::NativeRunner;
+pub use specs::param_specs;

@@ -1,0 +1,626 @@
+//! [`NativeModel`]: weights + variant extras + the incremental per-token
+//! forward step over the compressed decode cache.
+//!
+//! Semantics mirror python/compile/model.py exactly (RMSNorm eps, SwiGLU,
+//! tied-embedding logits, per-variant cache contents); the serving
+//! equations are the paper's absorbed form (§3.2 / Fig 1): for J-LRD the
+//! score reads the latent directly through the absorbed query
+//! `q_lat = q_nope @ B_k`, and the attention output is lifted back per
+//! head through `B_v` — the `[L,B,S,d_ckv]` slab is both K and V.
+
+use anyhow::{ensure, Context, Result};
+
+use crate::config::{ModelConfig, Variant};
+use crate::convert::EliteSelection;
+use crate::io::Checkpoint;
+use crate::kvcache::layout::slab_specs;
+use crate::native::forward::{
+    dot, matvec, matvec_acc, rmsnorm, rope_elite, rope_full, rope_masked,
+    silu, softmax_inplace,
+};
+use crate::native::specs::param_specs;
+use crate::runtime::HostTensor;
+use crate::tensor::Tensor;
+use crate::util::Pcg64;
+
+/// A natively executable model: config + variant + validated weights +
+/// precomputed rotation tables.
+pub struct NativeModel {
+    pub cfg: ModelConfig,
+    pub variant: Variant,
+    weights: Checkpoint,
+    /// Cached inverse-frequency ladder theta_i = base^(-i/nc), i in [0,nc).
+    ladder: Vec<f64>,
+    /// theta_e [L, nh, r] flat (elitekv / slrd variants).
+    theta_e: Vec<f32>,
+    /// elite_mask [L, nh, nc] flat (ropelite variant).
+    elite_mask: Vec<f32>,
+    /// Per-layer weight keys, prebuilt so the decode hot path never
+    /// formats strings.
+    layer_names: Vec<LayerNames>,
+}
+
+/// The weight-map keys of one layer (fields unused by a variant stay as
+/// harmless unlooked-up strings).
+struct LayerNames {
+    attn_norm: String,
+    wq: String,
+    wk: String,
+    wv: String,
+    wk_e: String,
+    a_kv: String,
+    a_k: String,
+    a_v: String,
+    b_k: String,
+    b_v: String,
+    wo: String,
+    ffn_norm: String,
+    w1: String,
+    w2: String,
+    w3: String,
+}
+
+impl LayerNames {
+    fn new(l: usize) -> LayerNames {
+        let p = format!("l{l}.");
+        LayerNames {
+            attn_norm: format!("{p}attn_norm"),
+            wq: format!("{p}wq"),
+            wk: format!("{p}wk"),
+            wv: format!("{p}wv"),
+            wk_e: format!("{p}wk_e"),
+            a_kv: format!("{p}a_kv"),
+            a_k: format!("{p}a_k"),
+            a_v: format!("{p}a_v"),
+            b_k: format!("{p}b_k"),
+            b_v: format!("{p}b_v"),
+            wo: format!("{p}wo"),
+            ffn_norm: format!("{p}ffn_norm"),
+            w1: format!("{p}w1"),
+            w2: format!("{p}w2"),
+            w3: format!("{p}w3"),
+        }
+    }
+}
+
+/// Reusable per-step buffers. Obtain one per lane/worker from
+/// [`NativeModel::scratch`] and reuse it across tokens — every field is
+/// fully overwritten before it is read, so no clearing is needed between
+/// calls. Opaque: sized for the model that created it.
+pub struct Scratch {
+    x: Vec<f32>,
+    xn: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    lat: Vec<f32>,
+    lat2: Vec<f32>,
+    q_lat: Vec<f32>,
+    o_lat: Vec<f32>,
+    o: Vec<f32>,
+    scores: Vec<f32>,
+    h1: Vec<f32>,
+    h3: Vec<f32>,
+}
+
+impl NativeModel {
+    /// Wrap validated weights. `selection` is required for the variants
+    /// with frequency extras (ropelite / elitekv / slrd).
+    pub fn new(
+        cfg: ModelConfig,
+        variant: Variant,
+        weights: Checkpoint,
+        selection: Option<&EliteSelection>,
+    ) -> Result<NativeModel> {
+        for (name, shape) in param_specs(&cfg, &variant) {
+            let t = weights
+                .get(&name)
+                .with_context(|| format!("native model missing `{name}`"))?;
+            ensure!(
+                t.shape == shape,
+                "param `{name}`: checkpoint {:?} vs expected {shape:?}",
+                t.shape
+            );
+        }
+        let (theta_e, elite_mask) = match &variant {
+            Variant::EliteKv { r, .. } | Variant::Slrd { r, .. } => {
+                let sel = selection
+                    .context("elitekv/slrd variants need an elite selection")?;
+                ensure!(
+                    sel.r() == *r,
+                    "selection r={} but variant expects r={r}",
+                    sel.r()
+                );
+                sel.validate(&cfg)?;
+                (crate::rope::elite_thetas(&cfg, &sel.chunks), Vec::new())
+            }
+            Variant::RopeLite => {
+                let sel =
+                    selection.context("ropelite variant needs a selection")?;
+                sel.validate(&cfg)?;
+                (Vec::new(), crate::rope::elite_mask(&cfg, &sel.chunks))
+            }
+            _ => (Vec::new(), Vec::new()),
+        };
+        let ladder = crate::rope::ladder(cfg.rope_base, cfg.n_chunks());
+        let layer_names = (0..cfg.n_layers).map(LayerNames::new).collect();
+        Ok(NativeModel {
+            cfg,
+            variant,
+            weights,
+            ladder,
+            theta_e,
+            elite_mask,
+            layer_names,
+        })
+    }
+
+    /// Load a converted checkpoint produced by `convert`/`pretrain`.
+    pub fn from_checkpoint(
+        cfg: ModelConfig,
+        variant: Variant,
+        ckpt: Checkpoint,
+        selection: Option<&EliteSelection>,
+    ) -> Result<NativeModel> {
+        NativeModel::new(cfg, variant, ckpt, selection)
+    }
+
+    /// Random initialization (Normal(0, 0.02), norms at one, wo/w2 scaled
+    /// by 1/sqrt(2L)) — the artifact-free path for demos and tests.
+    pub fn init(
+        cfg: &ModelConfig,
+        variant: Variant,
+        seed: u64,
+        selection: Option<&EliteSelection>,
+    ) -> Result<NativeModel> {
+        let mut rng = Pcg64::new(seed, 0x1217);
+        let resid = 1.0 / (2.0 * cfg.n_layers as f64).sqrt() as f32;
+        let mut ckpt = Checkpoint::new();
+        ckpt.set_meta("config", &cfg.name);
+        ckpt.set_meta("variant", variant.tag());
+        ckpt.set_meta("init", "native");
+        for (name, shape) in param_specs(cfg, &variant) {
+            let t = if name.ends_with("norm") {
+                Tensor::new(shape.clone(), vec![1.0; shape.iter().product()])
+            } else {
+                let mut t = Tensor::randn(shape, &mut rng).scale(0.02);
+                if name.ends_with("wo") || name.ends_with("w2") {
+                    t = t.scale(resid);
+                }
+                t
+            };
+            ckpt.insert(&name, t);
+        }
+        NativeModel::new(cfg.clone(), variant, ckpt, selection)
+    }
+
+    /// The underlying weights (checkpoint save / inspection).
+    pub fn weights(&self) -> &Checkpoint {
+        &self.weights
+    }
+
+    fn w(&self, name: &str) -> &Tensor {
+        self.weights.get(name).expect("validated at construction")
+    }
+
+    /// Zero-filled decode cache slabs `[L, batch, s, ...]`.
+    pub fn empty_caches(&self, batch: usize, s: usize) -> Vec<HostTensor> {
+        slab_specs(&self.cfg, &self.variant, batch, s)
+            .into_iter()
+            .map(|(_, shape)| HostTensor::zeros(&shape))
+            .collect()
+    }
+
+    /// Fresh per-lane working buffers for [`NativeModel::decode_token_with`].
+    pub fn scratch(&self) -> Scratch {
+        let (d, nh, dh) = (self.cfg.d_model, self.cfg.n_heads, self.cfg.d_head);
+        let (mut lat_w, mut lat2_w, mut qlat_w) = (0usize, 0usize, 0usize);
+        match &self.variant {
+            Variant::EliteKv { d_ckv, .. } => {
+                lat_w = *d_ckv;
+                qlat_w = nh * d_ckv;
+            }
+            Variant::Slrd { d_ck, d_cv, .. } => {
+                lat_w = *d_ck;
+                lat2_w = *d_cv;
+                qlat_w = nh * d_ck.max(d_cv);
+            }
+            _ => {}
+        }
+        Scratch {
+            x: vec![0.0; d],
+            xn: vec![0.0; d],
+            q: vec![0.0; nh * dh],
+            k: vec![0.0; nh * dh],
+            v: vec![0.0; nh * dh],
+            lat: vec![0.0; lat_w],
+            lat2: vec![0.0; lat2_w],
+            q_lat: vec![0.0; qlat_w],
+            o_lat: vec![0.0; qlat_w.max(1)],
+            o: vec![0.0; nh * dh],
+            scores: Vec::new(),
+            h1: vec![0.0; self.cfg.d_ffn],
+            h3: vec![0.0; self.cfg.d_ffn],
+        }
+    }
+
+    /// One incremental forward step for `lane` at position `pos`: embeds
+    /// `token`, writes this position's cache entries in every layer,
+    /// attends over positions `0..=pos`, and (optionally) returns the
+    /// tied-embedding logits. Caches are the `[L, B, S, ...]` slabs from
+    /// [`NativeModel::empty_caches`].
+    ///
+    /// Allocates working buffers per call; sequence loops should hold a
+    /// [`Scratch`] and use [`NativeModel::decode_token_with`] instead.
+    pub fn decode_token(
+        &self,
+        caches: &mut [HostTensor],
+        lane: usize,
+        pos: usize,
+        token: u32,
+        want_logits: bool,
+    ) -> Result<Option<Vec<f32>>> {
+        let mut sc = self.scratch();
+        self.decode_token_with(&mut sc, caches, lane, pos, token, want_logits)
+    }
+
+    /// [`NativeModel::decode_token`] with caller-owned scratch buffers
+    /// (the decode hot path: zero heap allocation besides the logits).
+    pub fn decode_token_with(
+        &self,
+        sc: &mut Scratch,
+        caches: &mut [HostTensor],
+        lane: usize,
+        pos: usize,
+        token: u32,
+        want_logits: bool,
+    ) -> Result<Option<Vec<f32>>> {
+        let cfg = &self.cfg;
+        let (d, dh) = (cfg.d_model, cfg.d_head);
+        ensure!(!caches.is_empty(), "no cache slabs");
+        ensure!(sc.x.len() == d, "scratch built for a different model");
+        let shape = caches[0].shape().to_vec();
+        ensure!(shape.len() >= 4 && shape[0] == cfg.n_layers,
+                "bad cache slab shape {shape:?}");
+        let (b, s) = (shape[1], shape[2]);
+        ensure!(lane < b, "lane {lane} out of {b}");
+        ensure!(pos < s, "pos {pos} out of serving window {s}");
+        ensure!((token as usize) < cfg.vocab, "token {token} out of vocab");
+        let len = pos + 1; // attention window after writing this token
+        let scale = 1.0 / (dh as f64).sqrt() as f32;
+
+        sc.scores.resize(len, 0.0);
+        let embed = self.w("embed");
+        sc.x.copy_from_slice(&embed.data[token as usize * d..(token as usize + 1) * d]);
+
+        for l in 0..cfg.n_layers {
+            let n = &self.layer_names[l];
+            rmsnorm(&sc.x, &self.w(&n.attn_norm).data, &mut sc.xn);
+            matvec(&sc.xn, self.w(&n.wq), &mut sc.q);
+            self.rotate_q(l, pos, &mut sc.q);
+            self.attend_layer(caches, l, lane, pos, b, s, scale, &mut sc)?;
+            matvec_acc(&sc.o, self.w(&n.wo), &mut sc.x);
+
+            rmsnorm(&sc.x, &self.w(&n.ffn_norm).data, &mut sc.xn);
+            matvec(&sc.xn, self.w(&n.w1), &mut sc.h1);
+            matvec(&sc.xn, self.w(&n.w3), &mut sc.h3);
+            for (a, &g) in sc.h1.iter_mut().zip(&sc.h3) {
+                *a = silu(*a) * g;
+            }
+            matvec_acc(&sc.h1, self.w(&n.w2), &mut sc.x);
+        }
+
+        if !want_logits {
+            return Ok(None);
+        }
+        rmsnorm(&sc.x, &self.w("final_norm").data, &mut sc.xn);
+        let mut logits = vec![0.0f32; cfg.vocab];
+        for (v, out) in logits.iter_mut().enumerate() {
+            *out = dot(&sc.xn, &embed.data[v * d..(v + 1) * d]);
+        }
+        Ok(Some(logits))
+    }
+
+    /// Apply the variant's rotation scheme to a query vector [nh*dh].
+    fn rotate_q(&self, layer: usize, pos: usize, q: &mut [f32]) {
+        let cfg = &self.cfg;
+        let (nh, dh, nc) = (cfg.n_heads, cfg.d_head, cfg.n_chunks());
+        match &self.variant {
+            Variant::Mha | Variant::Gqa { .. } => {
+                rope_full(q, nh, dh, &self.ladder, pos);
+            }
+            Variant::RopeLite => {
+                let m = &self.elite_mask
+                    [layer * nh * nc..(layer + 1) * nh * nc];
+                rope_masked(q, nh, dh, &self.ladder, m, pos);
+            }
+            Variant::EliteKv { r, .. } | Variant::Slrd { r, .. } => {
+                let t = &self.theta_e[layer * nh * r..(layer + 1) * nh * r];
+                rope_elite(q, nh, dh, *r, t, pos);
+            }
+        }
+    }
+
+    /// Per-layer K/V production, cache write, and attention; fills `sc.o`.
+    #[allow(clippy::too_many_arguments)]
+    fn attend_layer(
+        &self,
+        caches: &mut [HostTensor],
+        l: usize,
+        lane: usize,
+        pos: usize,
+        b: usize,
+        s: usize,
+        scale: f32,
+        sc: &mut Scratch,
+    ) -> Result<()> {
+        let cfg = &self.cfg;
+        let n = &self.layer_names[l];
+        let (nh, dh, nc) = (cfg.n_heads, cfg.d_head, cfg.n_chunks());
+        let len = pos + 1;
+        match self.variant.clone() {
+            Variant::Mha | Variant::RopeLite | Variant::Gqa { .. } => {
+                let g = match &self.variant {
+                    Variant::Gqa { n_kv_heads } => *n_kv_heads,
+                    _ => nh,
+                };
+                let kw = g * dh;
+                let k = &mut sc.k[..kw];
+                let v = &mut sc.v[..kw];
+                matvec(&sc.xn, self.w(&n.wk), k);
+                matvec(&sc.xn, self.w(&n.wv), v);
+                match &self.variant {
+                    Variant::RopeLite => {
+                        let m = &self.elite_mask
+                            [l * nh * nc..(l + 1) * nh * nc];
+                        rope_masked(k, nh, dh, &self.ladder, m, pos);
+                    }
+                    _ => rope_full(k, g, dh, &self.ladder, pos),
+                }
+                let base = ((l * b + lane) * s + pos) * kw;
+                caches[0].as_f32_mut()?[base..base + kw].copy_from_slice(k);
+                caches[1].as_f32_mut()?[base..base + kw].copy_from_slice(v);
+                let kc = caches[0].as_f32()?;
+                let vc = caches[1].as_f32()?;
+                let lane_base = (l * b + lane) * s;
+                let rep = nh / g;
+                for h in 0..nh {
+                    let hk = h / rep; // kv head for this query head
+                    let qh = &sc.q[h * dh..(h + 1) * dh];
+                    for (j, sj) in sc.scores[..len].iter_mut().enumerate() {
+                        let off = (lane_base + j) * kw + hk * dh;
+                        *sj = dot(qh, &kc[off..off + dh]) * scale;
+                    }
+                    softmax_inplace(&mut sc.scores[..len]);
+                    let oh = &mut sc.o[h * dh..(h + 1) * dh];
+                    oh.fill(0.0);
+                    for (j, &pj) in sc.scores[..len].iter().enumerate() {
+                        let off = (lane_base + j) * kw + hk * dh;
+                        for (od, &vd) in oh.iter_mut().zip(&vc[off..off + dh])
+                        {
+                            *od += pj * vd;
+                        }
+                    }
+                }
+            }
+            Variant::EliteKv { r, d_ckv } => {
+                let r2 = 2 * r;
+                let dn = dh - r2;
+                let kew = nh * r2;
+                let ke = &mut sc.k[..kew];
+                matvec(&sc.xn, self.w(&n.wk_e), ke);
+                let t = &self.theta_e[l * nh * r..(l + 1) * nh * r];
+                rope_elite(ke, nh, r2, r, t, pos);
+                matvec(&sc.xn, self.w(&n.a_kv), &mut sc.lat);
+                let ke_base = ((l * b + lane) * s + pos) * kew;
+                caches[0].as_f32_mut()?[ke_base..ke_base + kew]
+                    .copy_from_slice(ke);
+                let c_base = ((l * b + lane) * s + pos) * d_ckv;
+                caches[1].as_f32_mut()?[c_base..c_base + d_ckv]
+                    .copy_from_slice(&sc.lat);
+                // absorbed query: q_lat[h, cc] = q_nope[h] . b_k[cc, h, :]
+                let bk = self.w(&n.b_k);
+                let q_lat = &mut sc.q_lat[..nh * d_ckv];
+                for cc in 0..d_ckv {
+                    let row = &bk.data[cc * nh * dn..(cc + 1) * nh * dn];
+                    for h in 0..nh {
+                        let qn = &sc.q[h * dh + r2..(h + 1) * dh];
+                        q_lat[h * d_ckv + cc] =
+                            dot(qn, &row[h * dn..(h + 1) * dn]);
+                    }
+                }
+                let kec = caches[0].as_f32()?;
+                let cc_all = caches[1].as_f32()?;
+                let lane_ke = (l * b + lane) * s;
+                let lane_c = (l * b + lane) * s;
+                let bv = self.w(&n.b_v);
+                for h in 0..nh {
+                    let q_rot = &sc.q[h * dh..h * dh + r2];
+                    let ql = &q_lat[h * d_ckv..(h + 1) * d_ckv];
+                    for (j, sj) in sc.scores[..len].iter_mut().enumerate() {
+                        let ke_off = (lane_ke + j) * kew + h * r2;
+                        let c_off = (lane_c + j) * d_ckv;
+                        *sj = (dot(q_rot, &kec[ke_off..ke_off + r2])
+                            + dot(ql, &cc_all[c_off..c_off + d_ckv]))
+                            * scale;
+                    }
+                    softmax_inplace(&mut sc.scores[..len]);
+                    // o_lat = p . c_kv  (attend the latent directly)
+                    let o_lat = &mut sc.o_lat[..d_ckv];
+                    o_lat.fill(0.0);
+                    for (j, &pj) in sc.scores[..len].iter().enumerate() {
+                        let c_off = (lane_c + j) * d_ckv;
+                        for (ol, &cv) in
+                            o_lat.iter_mut().zip(&cc_all[c_off..c_off + d_ckv])
+                        {
+                            *ol += pj * cv;
+                        }
+                    }
+                    // lift through B_v: o[h, dd] = o_lat . b_v[:, h, dd]
+                    let oh = &mut sc.o[h * dh..(h + 1) * dh];
+                    oh.fill(0.0);
+                    for (cc, &ol) in o_lat.iter().enumerate() {
+                        if ol == 0.0 {
+                            continue;
+                        }
+                        let row =
+                            &bv.data[cc * nh * dh + h * dh..cc * nh * dh + (h + 1) * dh];
+                        for (od, &bd) in oh.iter_mut().zip(row) {
+                            *od += ol * bd;
+                        }
+                    }
+                }
+            }
+            Variant::Slrd { r, d_ck, d_cv } => {
+                let r2 = 2 * r;
+                let dn = dh - r2;
+                let kew = nh * r2;
+                let ke = &mut sc.k[..kew];
+                matvec(&sc.xn, self.w(&n.wk_e), ke);
+                let t = &self.theta_e[l * nh * r..(l + 1) * nh * r];
+                rope_elite(ke, nh, r2, r, t, pos);
+                matvec(&sc.xn, self.w(&n.a_k), &mut sc.lat);
+                matvec(&sc.xn, self.w(&n.a_v), &mut sc.lat2);
+                let ke_base = ((l * b + lane) * s + pos) * kew;
+                caches[0].as_f32_mut()?[ke_base..ke_base + kew]
+                    .copy_from_slice(ke);
+                let ck_base = ((l * b + lane) * s + pos) * d_ck;
+                caches[1].as_f32_mut()?[ck_base..ck_base + d_ck]
+                    .copy_from_slice(&sc.lat);
+                let cv_base = ((l * b + lane) * s + pos) * d_cv;
+                caches[2].as_f32_mut()?[cv_base..cv_base + d_cv]
+                    .copy_from_slice(&sc.lat2);
+                let bk = self.w(&n.b_k);
+                let q_lat = &mut sc.q_lat[..nh * d_ck];
+                for cc in 0..d_ck {
+                    let row = &bk.data[cc * nh * dn..(cc + 1) * nh * dn];
+                    for h in 0..nh {
+                        let qn = &sc.q[h * dh + r2..(h + 1) * dh];
+                        q_lat[h * d_ck + cc] =
+                            dot(qn, &row[h * dn..(h + 1) * dn]);
+                    }
+                }
+                let kec = caches[0].as_f32()?;
+                let ck_all = caches[1].as_f32()?;
+                let cv_all = caches[2].as_f32()?;
+                let lane_base = (l * b + lane) * s;
+                let bv = self.w(&n.b_v);
+                for h in 0..nh {
+                    let q_rot = &sc.q[h * dh..h * dh + r2];
+                    let ql = &q_lat[h * d_ck..(h + 1) * d_ck];
+                    for (j, sj) in sc.scores[..len].iter_mut().enumerate() {
+                        let ke_off = (lane_base + j) * kew + h * r2;
+                        let ck_off = (lane_base + j) * d_ck;
+                        *sj = (dot(q_rot, &kec[ke_off..ke_off + r2])
+                            + dot(ql, &ck_all[ck_off..ck_off + d_ck]))
+                            * scale;
+                    }
+                    softmax_inplace(&mut sc.scores[..len]);
+                    let o_lat = &mut sc.o_lat[..d_cv];
+                    o_lat.fill(0.0);
+                    for (j, &pj) in sc.scores[..len].iter().enumerate() {
+                        let cv_off = (lane_base + j) * d_cv;
+                        for (ol, &cv) in
+                            o_lat.iter_mut().zip(&cv_all[cv_off..cv_off + d_cv])
+                        {
+                            *ol += pj * cv;
+                        }
+                    }
+                    let oh = &mut sc.o[h * dh..(h + 1) * dh];
+                    oh.fill(0.0);
+                    for (cc, &ol) in o_lat.iter().enumerate() {
+                        if ol == 0.0 {
+                            continue;
+                        }
+                        let row =
+                            &bv.data[cc * nh * dh + h * dh..cc * nh * dh + (h + 1) * dh];
+                        for (od, &bd) in oh.iter_mut().zip(row) {
+                            *od += ol * bd;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::uniform_selection;
+
+    fn tiny() -> ModelConfig {
+        ModelConfig::tiny()
+    }
+
+    #[test]
+    fn init_produces_validated_weights() {
+        let cfg = tiny();
+        let m = NativeModel::init(&cfg, Variant::Mha, 1, None).unwrap();
+        assert_eq!(m.weights().get("embed").unwrap().shape,
+                   vec![cfg.vocab, cfg.d_model]);
+        assert_eq!(m.weights().get("final_norm").unwrap().data[0], 1.0);
+    }
+
+    #[test]
+    fn elite_variants_require_selection() {
+        let cfg = tiny();
+        let var = Variant::EliteKv { r: 4, d_ckv: 64 };
+        assert!(NativeModel::init(&cfg, var.clone(), 1, None).is_err());
+        let sel = uniform_selection(&cfg, 4);
+        assert!(NativeModel::init(&cfg, var, 1, Some(&sel)).is_ok());
+    }
+
+    #[test]
+    fn selection_r_mismatch_rejected() {
+        let cfg = tiny();
+        let sel = uniform_selection(&cfg, 3);
+        let var = Variant::EliteKv { r: 4, d_ckv: 64 };
+        assert!(NativeModel::init(&cfg, var, 1, Some(&sel)).is_err());
+    }
+
+    #[test]
+    fn decode_token_writes_cache_and_returns_logits() {
+        let cfg = tiny();
+        let sel = uniform_selection(&cfg, 4);
+        let var = Variant::EliteKv { r: 4, d_ckv: 64 };
+        let m = NativeModel::init(&cfg, var, 7, Some(&sel)).unwrap();
+        let mut caches = m.empty_caches(2, 16);
+        let logits = m
+            .decode_token(&mut caches, 1, 0, 5, true)
+            .unwrap()
+            .unwrap();
+        assert_eq!(logits.len(), cfg.vocab);
+        assert!(logits.iter().all(|x| x.is_finite()));
+        // lane 1 position 0 of layer 0 must now be non-zero, lane 0 zero
+        let ke = caches[0].as_f32().unwrap();
+        let kew = cfg.n_heads * 8;
+        let lane1 = &ke[16 * kew..17 * kew];
+        assert!(lane1.iter().any(|&x| x != 0.0));
+        let lane0 = &ke[..kew];
+        assert!(lane0.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn decode_token_bounds_checked() {
+        let cfg = tiny();
+        let m = NativeModel::init(&cfg, Variant::Mha, 3, None).unwrap();
+        let mut caches = m.empty_caches(1, 8);
+        assert!(m.decode_token(&mut caches, 1, 0, 1, false).is_err());
+        assert!(m.decode_token(&mut caches, 0, 8, 1, false).is_err());
+        assert!(m.decode_token(&mut caches, 0, 0, 9999, false).is_err());
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let cfg = tiny();
+        let a = NativeModel::init(&cfg, Variant::Mha, 5, None).unwrap();
+        let bm = NativeModel::init(&cfg, Variant::Mha, 5, None).unwrap();
+        let mut ca = a.empty_caches(1, 8);
+        let mut cb = bm.empty_caches(1, 8);
+        let la = a.decode_token(&mut ca, 0, 0, 7, true).unwrap().unwrap();
+        let lb = bm.decode_token(&mut cb, 0, 0, 7, true).unwrap().unwrap();
+        assert_eq!(la, lb);
+    }
+}

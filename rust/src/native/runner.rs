@@ -1,0 +1,323 @@
+//! [`NativeRunner`]: the native [`Backend`] — batched prefill/decode over
+//! the latent cache slabs, artifact-free.
+//!
+//! Prefill runs lanes in parallel on the in-repo thread pool (each lane
+//! builds a private `[L,1,S,...]` slab set, spliced into the batch slabs
+//! afterwards); decode steps the lanes sequentially in one pass. Both are
+//! exact incremental attention, so `decode(prefill(n)) == prefill(n+1)`
+//! holds to f32 noise (pinned in rust/tests/native_e2e.rs).
+
+use anyhow::{bail, ensure, Result};
+
+use crate::config::{ModelConfig, Variant};
+use crate::data::corpus::Batch;
+use crate::native::model::NativeModel;
+use crate::runtime::{Backend, HostTensor};
+use crate::util::threadpool::parallel_map;
+
+/// Native serving engine: a model bound to a fixed lane/window geometry.
+pub struct NativeRunner {
+    pub model: NativeModel,
+    batch: usize,
+    max_seq: usize,
+}
+
+impl NativeRunner {
+    /// `batch` decode lanes over a `max_seq` serving window.
+    pub fn new(model: NativeModel, batch: usize, max_seq: usize) -> Result<NativeRunner> {
+        ensure!(batch > 0, "need at least one decode lane");
+        ensure!(
+            max_seq > 1 && max_seq <= model.cfg.max_seq,
+            "max_seq {max_seq} outside (1, {}]",
+            model.cfg.max_seq
+        );
+        Ok(NativeRunner { model, batch, max_seq })
+    }
+
+    /// Default serving geometry mirroring the AOT artifacts (4 lanes,
+    /// config window capped at 256).
+    pub fn with_defaults(model: NativeModel) -> Result<NativeRunner> {
+        let window = model.cfg.max_seq.min(256);
+        NativeRunner::new(model, 4, window)
+    }
+
+    fn threads(&self) -> usize {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(self.batch)
+    }
+}
+
+impl Backend for NativeRunner {
+    fn kind(&self) -> &'static str {
+        "native"
+    }
+
+    fn config(&self) -> &ModelConfig {
+        &self.model.cfg
+    }
+
+    fn variant(&self) -> &Variant {
+        &self.model.variant
+    }
+
+    fn serve_shape(&self) -> Result<(usize, usize)> {
+        Ok((self.batch, self.max_seq))
+    }
+
+    fn eval_shape(&self) -> Result<(usize, usize)> {
+        Ok((2, self.model.cfg.max_seq.min(128)))
+    }
+
+    fn prefill(
+        &self,
+        tokens: &[i32],
+        true_len: &[i32],
+    ) -> Result<(HostTensor, Vec<HostTensor>)> {
+        let (b, s) = (self.batch, self.max_seq);
+        if tokens.len() != b * s || true_len.len() != b {
+            bail!("prefill expects tokens [{b},{s}] and true_len [{b}]");
+        }
+        for (lane, &len) in true_len.iter().enumerate() {
+            if len < 1 || len as usize > s {
+                bail!("lane {lane}: true_len {len} outside [1, {s}]");
+            }
+        }
+        // Per-lane prefill in parallel: each lane fills a [L,1,S,...] slab
+        // set and reports its last-position logits.
+        let lane_results: Vec<Result<(Vec<f32>, Vec<HostTensor>)>> =
+            parallel_map(b, self.threads(), |lane| {
+                let len = true_len[lane] as usize;
+                let mut caches = self.model.empty_caches(1, s);
+                let mut sc = self.model.scratch();
+                let mut last = None;
+                for i in 0..len {
+                    let tok = tokens[lane * s + i];
+                    if tok < 0 {
+                        bail!("lane {lane}: negative token at {i}");
+                    }
+                    last = self.model.decode_token_with(
+                        &mut sc,
+                        &mut caches,
+                        0,
+                        i,
+                        tok as u32,
+                        i + 1 == len,
+                    )?;
+                }
+                let logits =
+                    last.ok_or_else(|| anyhow::anyhow!("empty prompt"))?;
+                Ok((logits, caches))
+            });
+
+        let mut logits = vec![0.0f32; b * self.model.cfg.vocab];
+        let mut batch_caches = self.empty_caches()?;
+        for (lane, res) in lane_results.into_iter().enumerate() {
+            let (row, lane_caches) = res?;
+            let vocab = self.model.cfg.vocab;
+            logits[lane * vocab..(lane + 1) * vocab].copy_from_slice(&row);
+            for (dst, src) in batch_caches.iter_mut().zip(&lane_caches) {
+                splice_lane_from_single(dst, src, lane)?;
+            }
+        }
+        Ok((
+            HostTensor::F32(logits, vec![b, self.model.cfg.vocab]),
+            batch_caches,
+        ))
+    }
+
+    fn decode(
+        &self,
+        token: &[i32],
+        pos: &[i32],
+        caches: Vec<HostTensor>,
+        pallas: bool,
+    ) -> Result<(HostTensor, Vec<HostTensor>)> {
+        let active = vec![true; self.batch];
+        self.decode_active(token, pos, &active, caches, pallas)
+    }
+
+    /// Native decode skips dead lanes entirely — one full forward per
+    /// *live* request per step (their logit rows stay zero, never read).
+    fn decode_active(
+        &self,
+        token: &[i32],
+        pos: &[i32],
+        active: &[bool],
+        caches: Vec<HostTensor>,
+        _pallas: bool,
+    ) -> Result<(HostTensor, Vec<HostTensor>)> {
+        let b = self.batch;
+        if token.len() != b || pos.len() != b || active.len() != b {
+            bail!("decode expects token/pos/active of length {b}");
+        }
+        let mut caches = caches;
+        let vocab = self.model.cfg.vocab;
+        let mut logits = vec![0.0f32; b * vocab];
+        let mut sc = self.model.scratch();
+        for lane in 0..b {
+            if !active[lane] {
+                continue;
+            }
+            ensure!(pos[lane] >= 0, "negative position on lane {lane}");
+            ensure!(token[lane] >= 0, "negative token on lane {lane}");
+            let row = self
+                .model
+                .decode_token_with(
+                    &mut sc,
+                    &mut caches,
+                    lane,
+                    pos[lane] as usize,
+                    token[lane] as u32,
+                    true,
+                )?
+                .expect("logits requested");
+            logits[lane * vocab..(lane + 1) * vocab].copy_from_slice(&row);
+        }
+        Ok((HostTensor::F32(logits, vec![b, vocab]), caches))
+    }
+
+    fn empty_caches(&self) -> Result<Vec<HostTensor>> {
+        Ok(self.model.empty_caches(self.batch, self.max_seq))
+    }
+
+    fn eval_loss(&self, batch: &Batch) -> Result<(f64, f64)> {
+        ensure!(batch.tokens.len() == batch.batch * batch.seq,
+                "ragged batch");
+        let rows: Vec<Result<(f64, f64)>> = parallel_map(
+            batch.batch,
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+                .min(batch.batch),
+            |row| {
+                let t = batch.seq;
+                let mut caches = self.model.empty_caches(1, t);
+                let mut sc = self.model.scratch();
+                let mut sum = 0.0f64;
+                let mut count = 0.0f64;
+                for i in 0..t {
+                    let tok = batch.tokens[row * t + i];
+                    ensure!(tok >= 0, "negative token");
+                    // The cache write must happen even for masked
+                    // positions; the vocab-wide logits only when scored.
+                    let m = batch.mask[row * t + i] as f64;
+                    let logits = self.model.decode_token_with(
+                        &mut sc, &mut caches, 0, i, tok as u32, m != 0.0)?;
+                    if m == 0.0 {
+                        continue;
+                    }
+                    let logits = logits.expect("logits requested");
+                    let target = batch.targets[row * t + i] as usize;
+                    ensure!(target < logits.len(), "target out of vocab");
+                    let max = logits
+                        .iter()
+                        .cloned()
+                        .fold(f32::NEG_INFINITY, f32::max)
+                        as f64;
+                    let logz: f64 = max
+                        + logits
+                            .iter()
+                            .map(|&x| ((x as f64) - max).exp())
+                            .sum::<f64>()
+                            .ln();
+                    sum += (logz - logits[target] as f64) * m;
+                    count += m;
+                }
+                Ok((sum, count))
+            },
+        );
+        let mut sum = 0.0;
+        let mut count = 0.0;
+        for r in rows {
+            let (s, c) = r?;
+            sum += s;
+            count += c;
+        }
+        Ok((sum, count))
+    }
+}
+
+/// Copy layer rows from a single-lane slab `[L,1,S,...]` into lane `lane`
+/// of a batch slab `[L,B,S,...]`.
+fn splice_lane_from_single(
+    dst: &mut HostTensor,
+    src: &HostTensor,
+    lane: usize,
+) -> Result<()> {
+    let dshape = dst.shape().to_vec();
+    let sshape = src.shape().to_vec();
+    ensure!(
+        dshape.len() == sshape.len()
+            && dshape[0] == sshape[0]
+            && sshape[1] == 1
+            && dshape[2..] == sshape[2..],
+        "slab splice mismatch: {dshape:?} vs {sshape:?}"
+    );
+    let (layers, b) = (dshape[0], dshape[1]);
+    ensure!(lane < b, "lane {lane} out of {b}");
+    let row: usize = dshape[2..].iter().product();
+    let d = dst.as_f32_mut()?;
+    let s = src.as_f32()?;
+    for l in 0..layers {
+        let doff = (l * b + lane) * row;
+        let soff = l * row;
+        d[doff..doff + row].copy_from_slice(&s[soff..soff + row]);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::uniform_selection;
+
+    fn native_tiny(var: Variant, r: Option<usize>) -> NativeRunner {
+        let cfg = ModelConfig::tiny();
+        let sel = r.map(|r| uniform_selection(&cfg, r));
+        let model = NativeModel::init(&cfg, var, 11, sel.as_ref()).unwrap();
+        NativeRunner::new(model, 2, 32).unwrap()
+    }
+
+    #[test]
+    fn prefill_shapes_and_decode_round() {
+        let runner = native_tiny(Variant::EliteKv { r: 4, d_ckv: 64 }, Some(4));
+        let (b, s) = runner.serve_shape().unwrap();
+        let mut tokens = vec![0i32; b * s];
+        for lane in 0..b {
+            for i in 0..6 {
+                tokens[lane * s + i] = (3 + lane + i) as i32;
+            }
+        }
+        let lens = vec![6i32; b];
+        let (logits, caches) = runner.prefill(&tokens, &lens).unwrap();
+        assert_eq!(logits.shape(), &[b, 512]);
+        let (l2, _caches) = runner
+            .decode(&vec![5i32; b], &vec![6i32; b], caches, false)
+            .unwrap();
+        assert_eq!(l2.shape(), &[b, 512]);
+        assert!(l2.as_f32().unwrap().iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn eval_loss_near_uniform_at_init() {
+        let runner = native_tiny(Variant::Mha, None);
+        let mut gen = crate::data::CorpusGen::new(512, 1);
+        let (b, t) = (2, 32);
+        let batch = gen.next_batch(b, t);
+        let (sum, count) = runner.eval_loss(&batch).unwrap();
+        let nll = sum / count;
+        assert!((nll - (512f64).ln()).abs() < 0.5, "init nll {nll}");
+    }
+
+    #[test]
+    fn prefill_validates_lengths() {
+        let runner = native_tiny(Variant::Mha, None);
+        let (b, s) = runner.serve_shape().unwrap();
+        let tokens = vec![0i32; b * s];
+        assert!(runner.prefill(&tokens, &vec![0i32; b]).is_err());
+        assert!(runner.prefill(&tokens, &vec![(s + 1) as i32; b]).is_err());
+        assert!(runner.prefill(&tokens[1..], &vec![1i32; b]).is_err());
+    }
+}

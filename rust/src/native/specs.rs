@@ -1,0 +1,95 @@
+//! Parameter inventory per architecture variant — the native twin of
+//! `python/compile/model.py::param_specs`, and the shape contract the
+//! converter's checkpoints are validated against.
+
+use crate::config::{ModelConfig, Variant};
+
+/// Ordered (name, shape) list defining one model's parameter layout.
+pub fn param_specs(cfg: &ModelConfig, var: &Variant) -> Vec<(String, Vec<usize>)> {
+    let (d, nh, dh) = (cfg.d_model, cfg.n_heads, cfg.d_head);
+    let mut specs: Vec<(String, Vec<usize>)> =
+        vec![("embed".into(), vec![cfg.vocab, d])];
+    for i in 0..cfg.n_layers {
+        let p = format!("l{i}.");
+        specs.push((format!("{p}attn_norm"), vec![d]));
+        specs.push((format!("{p}wq"), vec![d, nh * dh]));
+        match var {
+            Variant::Mha | Variant::RopeLite => {
+                specs.push((format!("{p}wk"), vec![d, nh * dh]));
+                specs.push((format!("{p}wv"), vec![d, nh * dh]));
+            }
+            Variant::Gqa { n_kv_heads } => {
+                specs.push((format!("{p}wk"), vec![d, n_kv_heads * dh]));
+                specs.push((format!("{p}wv"), vec![d, n_kv_heads * dh]));
+            }
+            Variant::EliteKv { r, d_ckv } => {
+                let r2 = 2 * r;
+                specs.push((format!("{p}wk_e"), vec![d, nh * r2]));
+                specs.push((format!("{p}a_kv"), vec![d, *d_ckv]));
+                specs.push((format!("{p}b_k"), vec![*d_ckv, nh * (dh - r2)]));
+                specs.push((format!("{p}b_v"), vec![*d_ckv, nh * dh]));
+            }
+            Variant::Slrd { r, d_ck, d_cv } => {
+                let r2 = 2 * r;
+                specs.push((format!("{p}wk_e"), vec![d, nh * r2]));
+                specs.push((format!("{p}a_k"), vec![d, *d_ck]));
+                specs.push((format!("{p}b_k"), vec![*d_ck, nh * (dh - r2)]));
+                specs.push((format!("{p}a_v"), vec![d, *d_cv]));
+                specs.push((format!("{p}b_v"), vec![*d_cv, nh * dh]));
+            }
+        }
+        specs.push((format!("{p}wo"), vec![nh * dh, d]));
+        specs.push((format!("{p}ffn_norm"), vec![d]));
+        specs.push((format!("{p}w1"), vec![d, cfg.d_ffn]));
+        specs.push((format!("{p}w2"), vec![cfg.d_ffn, d]));
+        specs.push((format!("{p}w3"), vec![d, cfg.d_ffn]));
+    }
+    specs.push(("final_norm".into(), vec![d]));
+    specs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mha_layout_matches_converter_expectations() {
+        let cfg = ModelConfig::tiny();
+        let specs = param_specs(&cfg, &Variant::Mha);
+        assert_eq!(specs[0].0, "embed");
+        assert_eq!(specs.last().unwrap().0, "final_norm");
+        // 1 embed + 9 per layer + 1 final_norm
+        assert_eq!(specs.len(), 1 + 9 * cfg.n_layers + 1);
+        let wk = specs.iter().find(|(n, _)| n == "l0.wk").unwrap();
+        assert_eq!(wk.1, vec![cfg.d_model, cfg.n_heads * cfg.d_head]);
+    }
+
+    #[test]
+    fn elitekv_layout_matches_converted_checkpoints() {
+        let cfg = ModelConfig::tiny();
+        let var = Variant::EliteKv { r: 4, d_ckv: 64 };
+        let specs = param_specs(&cfg, &var);
+        let find = |n: &str| {
+            specs.iter().find(|(name, _)| name == n).unwrap().1.clone()
+        };
+        assert_eq!(find("l0.wk_e"), vec![256, 8 * 8]);
+        assert_eq!(find("l0.a_kv"), vec![256, 64]);
+        assert_eq!(find("l0.b_k"), vec![64, 8 * 24]);
+        assert_eq!(find("l0.b_v"), vec![64, 8 * 32]);
+    }
+
+    #[test]
+    fn slrd_and_gqa_layouts() {
+        let cfg = ModelConfig::tiny();
+        let specs =
+            param_specs(&cfg, &Variant::Slrd { r: 4, d_ck: 32, d_cv: 48 });
+        let find = |n: &str| {
+            specs.iter().find(|(name, _)| name == n).unwrap().1.clone()
+        };
+        assert_eq!(find("l0.a_k"), vec![256, 32]);
+        assert_eq!(find("l0.a_v"), vec![256, 48]);
+        let gqa = param_specs(&cfg, &Variant::Gqa { n_kv_heads: 2 });
+        let wk = gqa.iter().find(|(n, _)| n == "l1.wk").unwrap();
+        assert_eq!(wk.1, vec![256, 2 * 32]);
+    }
+}

@@ -1,0 +1,100 @@
+//! The `Backend` trait: one serving contract, two engines (DESIGN.md §5).
+//!
+//! Every consumer above the runtime — the continuous-batching
+//! [`crate::coordinator::InferenceServer`], the probe scorer, the bench
+//! harness, the CLI — talks to this trait instead of a concrete engine.
+//! Two implementations exist:
+//!
+//! * [`crate::native::NativeRunner`] — the pure-Rust decode path. Always
+//!   available; needs no Python, no HLO artifacts, no XLA toolchain.
+//! * `PjrtBackend` / `PjrtView` (feature `pjrt`) — the AOT path wrapping
+//!   [`crate::runtime::ModelRunner`], executing HLO-text artifacts
+//!   through the PJRT CPU client.
+//!
+//! The cache contract is shared: `prefill` returns per-variant cache
+//! slabs shaped `[L, B, S, ...]` (see `kvcache::layout::slab_specs`) and
+//! `decode` consumes/returns the same slabs, so the coordinator's lane
+//! splicing is backend-agnostic.
+
+use anyhow::Result;
+
+use crate::config::{ModelConfig, Variant};
+use crate::data::corpus::Batch;
+use crate::runtime::HostTensor;
+
+/// A serving engine for one (config, variant) model.
+pub trait Backend {
+    /// Short backend identifier ("native" / "pjrt") for logs and reports.
+    fn kind(&self) -> &'static str;
+
+    fn config(&self) -> &ModelConfig;
+
+    fn variant(&self) -> &Variant;
+
+    /// (decode lanes, serving window) of this engine instance.
+    fn serve_shape(&self) -> Result<(usize, usize)>;
+
+    /// (batch, seq) this backend evaluates loss over.
+    fn eval_shape(&self) -> Result<(usize, usize)>;
+
+    /// Prefill a padded prompt batch `tokens [B*S]` with per-lane true
+    /// lengths. Returns (last-position logits [B, vocab], cache slabs).
+    fn prefill(
+        &self,
+        tokens: &[i32],
+        true_len: &[i32],
+    ) -> Result<(HostTensor, Vec<HostTensor>)>;
+
+    /// One decode step over explicit caches. `pallas` requests the
+    /// Pallas-lowered artifact where the backend has one (PJRT elitekv
+    /// variants); other backends ignore it.
+    fn decode(
+        &self,
+        token: &[i32],
+        pos: &[i32],
+        caches: Vec<HostTensor>,
+        pallas: bool,
+    ) -> Result<(HostTensor, Vec<HostTensor>)>;
+
+    /// [`Backend::decode`] with per-lane liveness: lanes with
+    /// `active[i] == false` carry a masked dummy whose output is never
+    /// read, so backends that can skip them cheaply should. The default
+    /// forwards to `decode` (the static-shape PJRT artifacts compute
+    /// every lane regardless); dead-lane logit rows may be garbage.
+    fn decode_active(
+        &self,
+        token: &[i32],
+        pos: &[i32],
+        active: &[bool],
+        caches: Vec<HostTensor>,
+        pallas: bool,
+    ) -> Result<(HostTensor, Vec<HostTensor>)> {
+        let _ = active;
+        self.decode(token, pos, caches, pallas)
+    }
+
+    /// Zero-filled cache slabs matching this backend's serve shape.
+    fn empty_caches(&self) -> Result<Vec<HostTensor>>;
+
+    /// Summed NLL + token count over one batch (perplexity building block).
+    fn eval_loss(&self, batch: &Batch) -> Result<(f64, f64)>;
+}
+
+/// Perplexity over `n_batches` freshly drawn eval batches (backend-generic
+/// twin of `ModelRunner::perplexity`).
+pub fn perplexity(
+    backend: &dyn Backend,
+    gen: &mut crate::data::CorpusGen,
+    n_batches: usize,
+) -> Result<f64> {
+    let (b, t) = backend.eval_shape()?;
+    let mut sum = 0.0;
+    let mut count = 0.0;
+    for _ in 0..n_batches {
+        let batch = gen.next_batch(b, t);
+        let (s, c) = backend.eval_loss(&batch)?;
+        sum += s;
+        count += c;
+    }
+    Ok((sum / count).exp())
+}

@@ -6,80 +6,12 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
-use crate::io::manifest::{Dtype, FnSpec};
+use crate::io::manifest::FnSpec;
+use crate::runtime::host::HostTensor;
 
-/// A host-side tensor crossing the PJRT boundary.
-#[derive(Clone, Debug)]
-pub enum HostTensor {
-    F32(Vec<f32>, Vec<usize>),
-    I32(Vec<i32>, Vec<usize>),
-}
-
+/// PJRT plumbing for [`HostTensor`] (defined backend-agnostically in
+/// `runtime::host`; these methods only exist in `pjrt` builds).
 impl HostTensor {
-    pub fn scalar_f32(x: f32) -> HostTensor {
-        HostTensor::F32(vec![x], vec![])
-    }
-
-    pub fn scalar_i32(x: i32) -> HostTensor {
-        HostTensor::I32(vec![x], vec![])
-    }
-
-    pub fn zeros(shape: &[usize]) -> HostTensor {
-        HostTensor::F32(vec![0.0; shape.iter().product()], shape.to_vec())
-    }
-
-    pub fn shape(&self) -> &[usize] {
-        match self {
-            HostTensor::F32(_, s) | HostTensor::I32(_, s) => s,
-        }
-    }
-
-    pub fn numel(&self) -> usize {
-        self.shape().iter().product()
-    }
-
-    pub fn dtype(&self) -> Dtype {
-        match self {
-            HostTensor::F32(..) => Dtype::F32,
-            HostTensor::I32(..) => Dtype::I32,
-        }
-    }
-
-    pub fn as_f32(&self) -> Result<&[f32]> {
-        match self {
-            HostTensor::F32(d, _) => Ok(d),
-            _ => bail!("expected f32 tensor, got i32"),
-        }
-    }
-
-    pub fn as_i32(&self) -> Result<&[i32]> {
-        match self {
-            HostTensor::I32(d, _) => Ok(d),
-            _ => bail!("expected i32 tensor, got f32"),
-        }
-    }
-
-    /// Scalar f32 value (accepts rank-0 or single-element tensors).
-    pub fn scalar(&self) -> Result<f32> {
-        let d = self.as_f32()?;
-        if d.len() != 1 {
-            bail!("expected scalar, shape {:?}", self.shape());
-        }
-        Ok(d[0])
-    }
-
-    /// Convert to/from the offline `tensor::Tensor` (f32 only).
-    pub fn from_tensor(t: &crate::tensor::Tensor) -> HostTensor {
-        HostTensor::F32(t.data.clone(), t.shape.clone())
-    }
-
-    pub fn to_tensor(&self) -> Result<crate::tensor::Tensor> {
-        Ok(crate::tensor::Tensor::new(
-            self.shape().to_vec(),
-            self.as_f32()?.to_vec(),
-        ))
-    }
-
     /// Upload to a device buffer we own (freed on drop — unlike the
     /// crate's `execute(&[Literal])` path, which leaks its uploads).
     fn to_device(&self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {

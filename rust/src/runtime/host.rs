@@ -1,0 +1,117 @@
+//! Host-side tensors shared by every backend.
+//!
+//! `HostTensor` is the runtime's exchange type: the PJRT backend uploads
+//! it to device buffers, the native backend computes on it directly, and
+//! the serving coordinator splices cache rows through it either way.
+
+use anyhow::{bail, Result};
+
+use crate::io::manifest::Dtype;
+
+/// A host-side tensor crossing the backend boundary.
+#[derive(Clone, Debug)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl HostTensor {
+    pub fn scalar_f32(x: f32) -> HostTensor {
+        HostTensor::F32(vec![x], vec![])
+    }
+
+    pub fn scalar_i32(x: i32) -> HostTensor {
+        HostTensor::I32(vec![x], vec![])
+    }
+
+    pub fn zeros(shape: &[usize]) -> HostTensor {
+        HostTensor::F32(vec![0.0; shape.iter().product()], shape.to_vec())
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(_, s) | HostTensor::I32(_, s) => s,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            HostTensor::F32(..) => Dtype::F32,
+            HostTensor::I32(..) => Dtype::I32,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(d, _) => Ok(d),
+            _ => bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    /// Mutable f32 payload (native backend cache writes).
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match self {
+            HostTensor::F32(d, _) => Ok(d),
+            _ => bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32(d, _) => Ok(d),
+            _ => bail!("expected i32 tensor, got f32"),
+        }
+    }
+
+    /// Scalar f32 value (accepts rank-0 or single-element tensors).
+    pub fn scalar(&self) -> Result<f32> {
+        let d = self.as_f32()?;
+        if d.len() != 1 {
+            bail!("expected scalar, shape {:?}", self.shape());
+        }
+        Ok(d[0])
+    }
+
+    /// Convert to/from the offline `tensor::Tensor` (f32 only).
+    pub fn from_tensor(t: &crate::tensor::Tensor) -> HostTensor {
+        HostTensor::F32(t.data.clone(), t.shape.clone())
+    }
+
+    pub fn to_tensor(&self) -> Result<crate::tensor::Tensor> {
+        Ok(crate::tensor::Tensor::new(
+            self.shape().to_vec(),
+            self.as_f32()?.to_vec(),
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_shape() {
+        let t = HostTensor::zeros(&[2, 3]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.numel(), 6);
+        assert!(t.as_f32().unwrap().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn dtype_mismatch_is_error() {
+        let t = HostTensor::scalar_i32(4);
+        assert!(t.as_f32().is_err());
+        assert_eq!(t.as_i32().unwrap(), &[4]);
+    }
+
+    #[test]
+    fn mutable_access_round_trip() {
+        let mut t = HostTensor::zeros(&[4]);
+        t.as_f32_mut().unwrap()[2] = 7.0;
+        assert_eq!(t.as_f32().unwrap()[2], 7.0);
+    }
+}

@@ -1,13 +1,30 @@
-//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute many.
+//! Runtime layer: the [`Backend`] serving contract plus its engines.
 //!
-//! The interchange format is HLO *text* (see DESIGN.md §3): aot.py lowers
-//! jax to stablehlo, converts to an XlaComputation and dumps
-//! `as_hlo_text()`; we parse with `HloModuleProto::from_text_file`, which
-//! reassigns instruction ids and sidesteps the 64-bit-id proto
-//! incompatibility between jax >= 0.5 and xla_extension 0.5.1.
+//! * [`backend`] — the trait every higher layer (coordinator, scorer,
+//!   bench, CLI) programs against; see DESIGN.md §5.
+//! * [`host`]    — `HostTensor`, the host-side exchange tensor.
+//! * [`engine`] / [`session`] (feature `pjrt`) — the AOT path: load HLO
+//!   *text* artifacts (DESIGN.md §3), compile once through the PJRT CPU
+//!   client, execute many. aot.py lowers jax to stablehlo, converts to an
+//!   XlaComputation and dumps `as_hlo_text()`; we parse with
+//!   `HloModuleProto::from_text_file`, which reassigns instruction ids
+//!   and sidesteps the 64-bit-id proto incompatibility between jax >= 0.5
+//!   and xla_extension 0.5.1.
+//!
+//! The artifact-free native engine lives in [`crate::native`].
 
+pub mod backend;
+pub mod host;
+
+#[cfg(feature = "pjrt")]
 pub mod engine;
+#[cfg(feature = "pjrt")]
 pub mod session;
 
-pub use engine::{Engine, Executable, HostTensor};
-pub use session::{ModelRunner, TrainState};
+pub use backend::Backend;
+pub use host::HostTensor;
+
+#[cfg(feature = "pjrt")]
+pub use engine::{Engine, Executable};
+#[cfg(feature = "pjrt")]
+pub use session::{ModelRunner, PjrtBackend, PjrtView, TrainState};

@@ -9,7 +9,9 @@ use anyhow::{bail, Context, Result};
 
 use crate::data::corpus::Batch;
 use crate::io::{Checkpoint, Manifest};
-use crate::runtime::engine::{Engine, Executable, HostTensor};
+use crate::runtime::backend::Backend;
+use crate::runtime::engine::{Engine, Executable};
+use crate::runtime::host::HostTensor;
 
 /// Parameters + AdamW state in manifest order.
 pub struct TrainState {
@@ -354,6 +356,131 @@ impl ModelRunner {
         let exe = self.exec("contribution")?;
         let mut outs = exe.run(&[q, k])?;
         Ok(outs.pop().context("scores")?)
+    }
+
+    /// Borrowed [`Backend`] view over this runner + a parameter set
+    /// (evaluation call sites that keep using the runner afterwards).
+    pub fn as_backend<'a>(&'a self, params: &'a [HostTensor]) -> PjrtView<'a> {
+        PjrtView { runner: self, params }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Backend adapters (DESIGN.md §5): the PJRT side of the serving contract.
+// ---------------------------------------------------------------------------
+
+/// Owned PJRT backend: a runner bound to one parameter set. This is what
+/// the serving coordinator boxes when `--backend pjrt` is selected.
+pub struct PjrtBackend {
+    pub runner: ModelRunner,
+    pub params: Vec<HostTensor>,
+}
+
+impl PjrtBackend {
+    pub fn new(runner: ModelRunner, params: Vec<HostTensor>) -> PjrtBackend {
+        PjrtBackend { runner, params }
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn kind(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn config(&self) -> &crate::config::ModelConfig {
+        &self.runner.manifest.config
+    }
+
+    fn variant(&self) -> &crate::config::Variant {
+        &self.runner.manifest.variant
+    }
+
+    fn serve_shape(&self) -> Result<(usize, usize)> {
+        self.runner.manifest.serve_shape()
+    }
+
+    fn eval_shape(&self) -> Result<(usize, usize)> {
+        self.runner.eval_shape()
+    }
+
+    fn prefill(
+        &self,
+        tokens: &[i32],
+        true_len: &[i32],
+    ) -> Result<(HostTensor, Vec<HostTensor>)> {
+        self.runner.prefill(&self.params, tokens, true_len)
+    }
+
+    fn decode(
+        &self,
+        token: &[i32],
+        pos: &[i32],
+        caches: Vec<HostTensor>,
+        pallas: bool,
+    ) -> Result<(HostTensor, Vec<HostTensor>)> {
+        self.runner.decode(&self.params, token, pos, caches, pallas)
+    }
+
+    fn empty_caches(&self) -> Result<Vec<HostTensor>> {
+        self.runner.empty_caches()
+    }
+
+    fn eval_loss(&self, batch: &Batch) -> Result<(f64, f64)> {
+        self.runner.eval_loss(&self.params, batch)
+    }
+}
+
+/// Borrowed PJRT backend view (see [`ModelRunner::as_backend`]).
+pub struct PjrtView<'a> {
+    pub runner: &'a ModelRunner,
+    pub params: &'a [HostTensor],
+}
+
+impl Backend for PjrtView<'_> {
+    fn kind(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn config(&self) -> &crate::config::ModelConfig {
+        &self.runner.manifest.config
+    }
+
+    fn variant(&self) -> &crate::config::Variant {
+        &self.runner.manifest.variant
+    }
+
+    fn serve_shape(&self) -> Result<(usize, usize)> {
+        self.runner.manifest.serve_shape()
+    }
+
+    fn eval_shape(&self) -> Result<(usize, usize)> {
+        self.runner.eval_shape()
+    }
+
+    fn prefill(
+        &self,
+        tokens: &[i32],
+        true_len: &[i32],
+    ) -> Result<(HostTensor, Vec<HostTensor>)> {
+        self.runner.prefill(self.params, tokens, true_len)
+    }
+
+    fn decode(
+        &self,
+        token: &[i32],
+        pos: &[i32],
+        caches: Vec<HostTensor>,
+        pallas: bool,
+    ) -> Result<(HostTensor, Vec<HostTensor>)> {
+        self.runner.decode(self.params, token, pos, caches, pallas)
+    }
+
+    fn empty_caches(&self) -> Result<Vec<HostTensor>> {
+        self.runner.empty_caches()
+    }
+
+    fn eval_loss(&self, batch: &Batch) -> Result<(f64, f64)> {
+        self.runner.eval_loss(self.params, batch)
     }
 }
 

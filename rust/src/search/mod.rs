@@ -3,8 +3,13 @@
 //! The greedy driver runs in Rust; the vectorized inner step (distances
 //! for every head x candidate chunk in one call — Appendix B's
 //! single-forward-pass parallelism via the incremental-delta trick, see
-//! DESIGN.md §6) executes as the `ropelite_delta` HLO artifact.
+//! DESIGN.md §6) executes as the `ropelite_delta` HLO artifact and is
+//! therefore gated on `--features pjrt`. The Uniform baseline is pure
+//! Rust and doubles as the native backend's default selection.
 
 pub mod ropelite;
 
-pub use ropelite::{contribution_selection, ropelite_search, uniform_selection};
+pub use ropelite::uniform_selection;
+
+#[cfg(feature = "pjrt")]
+pub use ropelite::{contribution_selection, ropelite_search};

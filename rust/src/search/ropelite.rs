@@ -1,13 +1,21 @@
 //! Greedy elite-chunk search + Uniform / Contribution baselines.
-
-use anyhow::{bail, Context, Result};
+//!
+//! The greedy driver and the Contribution baseline run the `capture_qk` /
+//! `ropelite_delta` artifacts and therefore need `--features pjrt`; the
+//! Uniform baseline is pure Rust and always available (the native
+//! backend's default selection).
 
 use crate::config::ModelConfig;
 use crate::convert::EliteSelection;
+
+#[cfg(feature = "pjrt")]
+use anyhow::{bail, Context, Result};
+#[cfg(feature = "pjrt")]
 use crate::runtime::{HostTensor, ModelRunner};
 
 /// Capture pre-RoPE q/k on a calibration stream drawn from `gen`.
 /// Returns per-layer tensors sliced out of the stacked capture.
+#[cfg(feature = "pjrt")]
 pub fn capture_calibration(
     runner: &ModelRunner,
     params: &[HostTensor],
@@ -22,6 +30,7 @@ pub fn capture_calibration(
     Ok((split_layers(&q, cfg)?, split_layers(&k, cfg)?))
 }
 
+#[cfg(feature = "pjrt")]
 fn split_layers(x: &HostTensor, cfg: &ModelConfig) -> Result<Vec<HostTensor>> {
     let shape = x.shape().to_vec();
     if shape.len() != 5 || shape[0] != cfg.n_layers {
@@ -44,6 +53,7 @@ fn split_layers(x: &HostTensor, cfg: &ModelConfig) -> Result<Vec<HostTensor>> {
 /// For each layer, r iterations of (delta artifact -> per-head argmin ->
 /// mask update). All heads of a layer advance in lock-step within one
 /// artifact call; layers are independent.
+#[cfg(feature = "pjrt")]
 pub fn ropelite_search(
     runner: &ModelRunner,
     params: &[HostTensor],
@@ -94,6 +104,7 @@ pub fn uniform_selection(cfg: &ModelConfig, r: usize) -> EliteSelection {
 /// `Contribution` baseline (Hong et al. 2024): top-r chunks per head by
 /// the L2-norm score-contribution measure, computed by the contribution
 /// artifact over the same calibration capture.
+#[cfg(feature = "pjrt")]
 pub fn contribution_selection(
     runner: &ModelRunner,
     params: &[HostTensor],

@@ -1,8 +1,13 @@
 //! Training engine: pretraining and uptraining loops (paper §4.1) plus
 //! the probe-battery scorer that produces the Table-1/2 columns.
+//!
+//! The scorer is backend-agnostic (native or PJRT); the train loops drive
+//! the in-graph AdamW artifact and therefore require `--features pjrt`.
 
 pub mod scorer;
+#[cfg(feature = "pjrt")]
 pub mod trainer;
 
 pub use scorer::{score_probes, ScoreReport};
+#[cfg(feature = "pjrt")]
 pub use trainer::{TrainLoop, TrainOpts, TrainReport};

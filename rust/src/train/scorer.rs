@@ -1,11 +1,13 @@
-//! Probe-battery scorer: greedy decoding through the serving artifacts,
+//! Probe-battery scorer: greedy decoding through any serving backend,
 //! exact-match accuracy per task — the machinery behind every "Avg."
-//! column in the reproduced tables.
+//! column in the reproduced tables. Backend-agnostic: runs on the native
+//! decode path with zero artifacts, or through PJRT with `--features
+//! pjrt`.
 
 use anyhow::{bail, Result};
 
 use crate::data::probes::{ProbeSet, Scores};
-use crate::runtime::{HostTensor, ModelRunner};
+use crate::runtime::{backend, Backend};
 
 /// Scores plus the holdout perplexity measured alongside them.
 #[derive(Clone, Debug)]
@@ -17,14 +19,14 @@ pub struct ScoreReport {
 
 /// Greedy-decode every probe and compute exact-match accuracies.
 ///
-/// Items are multiplexed onto the decode artifact's fixed batch lanes in
-/// groups; lanes beyond the last item decode a masked dummy.
+/// Items are multiplexed onto the backend's fixed decode lanes in groups;
+/// lanes beyond the last item decode a masked dummy.
 pub fn score_probes(
-    runner: &ModelRunner,
-    params: &[HostTensor],
+    backend: &dyn Backend,
     probes: &ProbeSet,
 ) -> Result<Scores> {
-    let (b, s) = runner.manifest.serve_shape()?;
+    let (b, s) = backend.serve_shape()?;
+    let vocab = backend.config().vocab;
     let mut passed = Vec::with_capacity(probes.items.len());
     for group in probes.items.chunks(b) {
         let mut tokens = vec![0i32; b * s];
@@ -38,14 +40,13 @@ pub fn score_probes(
             }
             lens[lane] = item.prompt.len() as i32;
         }
-        let (mut logits, mut caches) = runner.prefill(params, &tokens, &lens)?;
+        let (mut logits, mut caches) = backend.prefill(&tokens, &lens)?;
         let steps = group.iter().map(|i| i.answer.len()).max().unwrap_or(0);
         let mut ok = vec![true; group.len()];
         let mut pos: Vec<i32> = lens.clone();
         for step in 0..steps {
             // greedy pick per lane
             let l = logits.as_f32()?;
-            let vocab = runner.manifest.config.vocab;
             let mut next = vec![0i32; b];
             for lane in 0..b {
                 let row = &l[lane * vocab..(lane + 1) * vocab];
@@ -64,8 +65,7 @@ pub fn score_probes(
                 }
             }
             if step + 1 < steps {
-                let (lg, cs) =
-                    runner.decode(params, &next, &pos, caches, false)?;
+                let (lg, cs) = backend.decode(&next, &pos, caches, false)?;
                 logits = lg;
                 caches = cs;
                 for p in pos.iter_mut() {
@@ -80,14 +80,13 @@ pub fn score_probes(
 
 /// Probes + perplexity in one call (the standard evaluation bundle).
 pub fn full_report(
-    runner: &ModelRunner,
-    params: &[HostTensor],
+    be: &dyn Backend,
     probes: &ProbeSet,
     ppl_batches: usize,
 ) -> Result<ScoreReport> {
-    let mut gen = crate::data::CorpusGen::new(runner.manifest.config.vocab, 1);
+    let mut gen = crate::data::CorpusGen::new(be.config().vocab, 1);
     gen.reseed(1, 0xe7a1); // the shared holdout stream (see trainer)
-    let ppl = runner.perplexity(params, &mut gen, ppl_batches)?;
-    let scores = score_probes(runner, params, probes)?;
+    let ppl = backend::perplexity(be, &mut gen, ppl_batches)?;
+    let scores = score_probes(be, probes)?;
     Ok(ScoreReport { scores, ppl, n_items: probes.items.len() })
 }

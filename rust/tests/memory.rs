@@ -1,10 +1,13 @@
-//! Regression: the PJRT bridge must not leak per execute call.
+//! Regression: the PJRT bridge must not leak per execute call. Needs a
+//! `--features pjrt` build against the real xla crate plus
+//! `make artifacts`; compiles to nothing otherwise.
 //!
 //! History: the published xla 0.1.6 crate's `execute(&[Literal])` path
 //! leaks every input device buffer (xla_rs.cc `buffer.release()` with no
 //! matching free) — ~27 MB per tiny train step, OOM within a sweep. The
 //! runtime now uploads owned buffers and calls `execute_b`. This test
 //! pins that behaviour.
+#![cfg(feature = "pjrt")]
 
 use std::sync::Arc;
 

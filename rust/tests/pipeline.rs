@@ -1,6 +1,9 @@
 //! Integration: conversion exactness, RoPElite search, and the serving
 //! coordinator — all through real PJRT execution on `make artifacts`
-//! output. These are the Rust twins of the pytest oracles.
+//! output (build with `--features pjrt` against the real xla crate).
+//! These are the Rust twins of the pytest oracles; the artifact-free
+//! equivalents live in `native_e2e.rs`.
+#![cfg(feature = "pjrt")]
 
 use std::sync::Arc;
 
@@ -8,7 +11,7 @@ use elitekv::config::{ModelConfig, Variant};
 use elitekv::convert::{self, EliteSelection};
 use elitekv::coordinator::{GenParams, InferenceServer, Request};
 use elitekv::data::CorpusGen;
-use elitekv::runtime::{Engine, HostTensor, ModelRunner, TrainState};
+use elitekv::runtime::{Engine, HostTensor, ModelRunner, PjrtBackend, TrainState};
 use elitekv::search;
 use elitekv::train::{scorer, TrainLoop, TrainOpts};
 
@@ -174,7 +177,10 @@ fn server_completes_mixed_request_stream() {
     let runner =
         ModelRunner::new(Arc::clone(&eng), artifacts(), "tiny", "mha").unwrap();
     let params = runner.init(21).unwrap();
-    let mut server = InferenceServer::new(runner, params, 8 << 20).unwrap();
+    let mut server =
+        InferenceServer::new(Box::new(PjrtBackend::new(runner, params)),
+                             8 << 20)
+            .unwrap();
     let mut gen = CorpusGen::new(cfg.vocab, 9);
     let n = 10;
     for i in 0..n {
@@ -187,6 +193,7 @@ fn server_completes_mixed_request_stream() {
                 stop_token: None,
                 temperature: if i % 2 == 0 { 0.0 } else { 0.8 },
                 seed: i,
+                ..Default::default()
             },
         ));
     }
@@ -256,7 +263,10 @@ fn server_greedy_matches_direct_decode() {
         ModelRunner::new(Arc::clone(&eng), artifacts(), "tiny", "mha").unwrap();
     let params2 = runner2.params_from_ckpt(
         &runner.ckpt_from_params(&params).unwrap()).unwrap();
-    let mut server = InferenceServer::new(runner2, params2, 8 << 20).unwrap();
+    let mut server =
+        InferenceServer::new(Box::new(PjrtBackend::new(runner2, params2)),
+                             8 << 20)
+            .unwrap();
     server.submit(Request::new(
         0,
         prompt.clone(),
@@ -275,7 +285,8 @@ fn probe_scorer_runs_and_scores_in_range() {
     let params = runner.init(41).unwrap();
     let gen = CorpusGen::new(runner.manifest.config.vocab, 1);
     let probes = elitekv::data::ProbeSet::generate(&gen, 3, 55);
-    let scores = scorer::score_probes(&runner, &params, &probes).unwrap();
+    let scores =
+        scorer::score_probes(&runner.as_backend(&params), &probes).unwrap();
     assert_eq!(scores.task_acc.len(), 6);
     for (_, acc) in &scores.task_acc {
         assert!((0.0..=1.0).contains(acc));

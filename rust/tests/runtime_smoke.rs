@@ -1,7 +1,11 @@
 //! Integration: the full AOT bridge on real artifacts (requires
-//! `make artifacts`). Covers init → train_step → eval → prefill → decode
-//! for the baseline and the EliteKV variant, plus Pallas/jnp parity
-//! through PJRT.
+//! `make artifacts` and a build with `--features pjrt` against the real
+//! xla crate). Covers init → train_step → eval → prefill → decode for the
+//! baseline and the EliteKV variant, plus Pallas/jnp parity through PJRT.
+//!
+//! Without the feature this file compiles to nothing; the artifact-free
+//! equivalents live in `native_e2e.rs`.
+#![cfg(feature = "pjrt")]
 
 use std::sync::Arc;
 

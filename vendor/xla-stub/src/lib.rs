@@ -1,0 +1,129 @@
+//! Offline stub of the `xla` crate (PJRT bindings) API surface that
+//! `elitekv::runtime::{engine, session}` compiles against.
+//!
+//! The real crate links the XLA C++ runtime, which cannot be built in the
+//! offline container. This stub keeps `--features pjrt` *compiling* so the
+//! PJRT code paths stay type-checked; every constructor returns an error
+//! at runtime ("PJRT unavailable: xla stub build"). To actually execute
+//! HLO artifacts, replace the `vendor/xla-stub` path dependency in the
+//! workspace Cargo.toml with the real `xla` crate (see DESIGN.md §3).
+
+const STUB_MSG: &str = "PJRT unavailable: this binary was built against the \
+                        offline xla stub (vendor/xla-stub); use the native \
+                        backend or link the real xla crate";
+
+/// Stub error carrying the explanation above.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+fn stub_err<T>() -> Result<T, Error> {
+    Err(Error(STUB_MSG.to_string()))
+}
+
+/// Element types the elitekv runtime exchanges with PJRT.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    Pred,
+}
+
+/// Marker for host types that can cross the PJRT boundary.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+
+#[derive(Clone)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        stub_err()
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer, Error> {
+        stub_err()
+    }
+
+    pub fn compile(
+        &self,
+        _computation: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable, Error> {
+        stub_err()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+}
+
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        stub_err()
+    }
+}
+
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<T>(
+        &self,
+        _inputs: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        stub_err()
+    }
+}
+
+pub struct Literal(());
+
+impl Literal {
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        stub_err()
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape, Error> {
+        stub_err()
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        stub_err()
+    }
+}
+
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        stub_err()
+    }
+}
+
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
