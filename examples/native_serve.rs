@@ -67,7 +67,7 @@ fn main() -> Result<()> {
                     stop_token: None, // force fixed-length decode
                     ..Default::default()
                 },
-            ));
+            ))?;
         }
         let responses = server.run_to_completion()?;
         let wall = t0.elapsed().as_secs_f64();

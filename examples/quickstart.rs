@@ -92,7 +92,7 @@ fn main() -> Result<()> {
             i,
             prompt.clone(),
             GenParams { max_new_tokens: 12, ..Default::default() },
-        ));
+        ))?;
     }
     let responses = server.run_to_completion()?;
     for r in &responses {

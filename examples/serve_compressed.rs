@@ -59,7 +59,7 @@ fn main() -> Result<()> {
                 i as u64,
                 item.prompt.clone(),
                 GenParams { max_new_tokens: 8, ..Default::default() },
-            ));
+            ))?;
         }
         let responses = server.run_to_completion()?;
         let wall = t0.elapsed().as_secs_f64();

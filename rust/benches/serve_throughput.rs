@@ -75,7 +75,7 @@ fn main() {
                     stop_token: None, // force fixed-length decode
                     ..Default::default()
                 },
-            ));
+            )).unwrap();
         }
         let responses = server.run_to_completion().unwrap();
         let wall = t0.elapsed().as_secs_f64();

@@ -458,7 +458,7 @@ pub fn serve_bench(
                 i as u64,
                 item.prompt.clone(),
                 GenParams { max_new_tokens: 16, ..Default::default() },
-            ));
+            ))?;
         }
         let responses = server.run_to_completion()?;
         let wall = t0.elapsed().as_secs_f64();

@@ -5,6 +5,10 @@
 //! * [`native`] — the artifact-free native-decode benchmark: tokens/s,
 //!   per-step latency, and cache bytes/token across (r, d_ckv) sweep
 //!   points, emitted as machine-readable `BENCH_native_decode.json`.
+//! * [`serve`] — the continuous-batching scheduler benchmark: one
+//!   deterministic arrival trace replayed per variant under the same
+//!   cache byte budget -> `BENCH_continuous_batching.json` (max
+//!   concurrency, admission latency, block-pool occupancy, throughput).
 //! * [`pipeline`] / [`experiments`] (feature `pjrt`) — the paper
 //!   table/figure sweeps over the AOT artifacts; each writes
 //!   `results/<id>.json` and a markdown table, with pretraining/search
@@ -13,6 +17,7 @@
 pub mod microbench;
 pub mod native;
 pub mod report;
+pub mod serve;
 
 #[cfg(feature = "pjrt")]
 pub mod experiments;
@@ -21,5 +26,6 @@ pub mod pipeline;
 
 pub use microbench::{bench, bench_throughput, BenchOpts};
 pub use native::native_decode_bench;
+pub use serve::continuous_batching_bench;
 #[cfg(feature = "pjrt")]
 pub use pipeline::ExperimentCtx;

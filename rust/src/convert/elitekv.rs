@@ -76,15 +76,46 @@ impl EliteSelection {
     }
 
     pub fn from_checkpoint(ckpt: &Checkpoint, cfg: &ModelConfig) -> Result<EliteSelection> {
+        let nc = cfg.n_chunks();
         let mut chunks = Vec::with_capacity(cfg.n_layers);
         for l in 0..cfg.n_layers {
-            let t = ckpt.get(&format!("elite.l{l}"))?;
+            let name = format!("elite.l{l}");
+            // Missing tensor: `Checkpoint::get` names the tensor (and
+            // thereby the layer) in its error.
+            let t = ckpt.get(&name)?;
+            if t.shape.len() != 2 || t.shape[0] != cfg.n_heads {
+                bail!(
+                    "selection tensor `{name}` has shape {:?}, expected \
+                     [{} heads, r]",
+                    t.shape,
+                    cfg.n_heads
+                );
+            }
             let r = t.shape[1];
+            if r == 0 || r > nc {
+                bail!(
+                    "selection tensor `{name}` has r={r}, expected \
+                     1..={nc} (head_dim/2)"
+                );
+            }
             let mut layer = Vec::with_capacity(cfg.n_heads);
             for h in 0..cfg.n_heads {
-                layer.push(
-                    (0..r).map(|i| t.at2(h, i) as usize).collect::<Vec<_>>(),
-                );
+                let mut head = Vec::with_capacity(r);
+                for i in 0..r {
+                    let v = t.at2(h, i);
+                    // An f32->usize cast saturates (negatives become 0,
+                    // huge values clamp), which would silently remap the
+                    // selection — reject anything non-integral or out of
+                    // the chunk range instead.
+                    if v < 0.0 || v.fract() != 0.0 || v >= nc as f32 {
+                        bail!(
+                            "selection tensor `{name}` head {h} slot {i}: \
+                             chunk index {v} outside 0..{nc} (head_dim/2)"
+                        );
+                    }
+                    head.push(v as usize);
+                }
+                layer.push(head);
             }
             chunks.push(layer);
         }
@@ -323,6 +354,77 @@ mod tests {
         let ckpt = s.to_checkpoint(&cfg);
         let back = EliteSelection::from_checkpoint(&ckpt, &cfg).unwrap();
         assert_eq!(s, back);
+    }
+
+    #[test]
+    fn missing_selection_tensor_error_names_the_layer() {
+        let cfg = tiny();
+        let s = sel(&cfg, 4, 21);
+        let mut ckpt = s.to_checkpoint(&cfg);
+        ckpt.tensors.remove("elite.l2");
+        let err = EliteSelection::from_checkpoint(&ckpt, &cfg)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("elite.l2"), "{err}");
+    }
+
+    #[test]
+    fn wrong_arity_selection_tensor_error_names_the_layer() {
+        let cfg = tiny();
+        let s = sel(&cfg, 4, 22);
+        // rank-1 tensor
+        let mut ckpt = s.to_checkpoint(&cfg);
+        ckpt.insert("elite.l1", Tensor::new(vec![4], vec![0., 1., 2., 3.]));
+        let err = EliteSelection::from_checkpoint(&ckpt, &cfg)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("elite.l1"), "{err}");
+        // wrong head count
+        let mut ckpt = s.to_checkpoint(&cfg);
+        ckpt.insert(
+            "elite.l3",
+            Tensor::new(vec![2, 2], vec![0., 1., 2., 3.]),
+        );
+        let err = EliteSelection::from_checkpoint(&ckpt, &cfg)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("elite.l3"), "{err}");
+        // r wider than the chunk ladder
+        let nc = cfg.n_chunks();
+        let mut ckpt = s.to_checkpoint(&cfg);
+        let wide: Vec<f32> =
+            (0..cfg.n_heads * (nc + 1)).map(|i| (i % nc) as f32).collect();
+        ckpt.insert(
+            "elite.l0",
+            Tensor::new(vec![cfg.n_heads, nc + 1], wide),
+        );
+        let err = EliteSelection::from_checkpoint(&ckpt, &cfg)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("elite.l0"), "{err}");
+    }
+
+    #[test]
+    fn out_of_range_chunk_index_rejected_not_wrapped() {
+        let cfg = tiny();
+        let nc = cfg.n_chunks();
+        let mut s = sel(&cfg, 4, 23);
+        // index == head_dim/2 is one past the last chunk
+        s.chunks[1][0][0] = nc;
+        let ckpt = s.to_checkpoint(&cfg);
+        let err = EliteSelection::from_checkpoint(&ckpt, &cfg)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("elite.l1"), "{err}");
+        // a negative index must not saturate to chunk 0 silently
+        let s2 = sel(&cfg, 4, 24);
+        let mut ckpt = s2.to_checkpoint(&cfg);
+        let t = ckpt.tensors.get_mut("elite.l0").unwrap();
+        t.data[0] = -1.0;
+        let err = EliteSelection::from_checkpoint(&ckpt, &cfg)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("elite.l0"), "{err}");
     }
 
     #[test]

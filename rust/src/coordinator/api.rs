@@ -60,4 +60,8 @@ pub struct Response {
 pub enum FinishReason {
     Stop,
     Length,
+    /// The scheduler refused the request outright (prompt outside the
+    /// serving window, or worst-case cache need larger than the whole
+    /// block pool). `tokens` is empty.
+    Rejected,
 }

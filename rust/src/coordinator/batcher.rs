@@ -8,6 +8,8 @@
 
 use std::collections::VecDeque;
 
+use anyhow::Result;
+
 use crate::coordinator::api::Request;
 use crate::kvcache::{BlockAllocator, SlotManager};
 
@@ -36,12 +38,55 @@ impl AdmissionQueue {
         self.queue.is_empty()
     }
 
-    fn need_tokens(&self, req: &Request) -> usize {
+    /// Worst-case token footprint used for admission control.
+    pub fn need_tokens(&self, req: &Request) -> usize {
         if self.conservative {
             req.prompt.len() + req.params.max_new_tokens
         } else {
             req.prompt.len()
         }
+    }
+
+    /// Can this request EVER be admitted by this queue + slot geometry?
+    /// (Prompt must fit the serving window with room to generate, and the
+    /// worst-case block need must not exceed the whole pool.) Requests
+    /// failing this would park at the head of the FIFO forever.
+    pub fn admissible(&self, req: &Request, slots: &SlotManager) -> Result<()> {
+        anyhow::ensure!(
+            !req.prompt.is_empty(),
+            "request {}: empty prompt (nothing to prefill)",
+            req.id
+        );
+        // The engine always samples at least one token per admitted
+        // lane, so a zero-token request cannot be honored — reject it
+        // instead of returning an unrequested token.
+        anyhow::ensure!(
+            req.params.max_new_tokens > 0,
+            "request {}: max_new_tokens must be at least 1",
+            req.id
+        );
+        // The lane advances once per generated token before the next
+        // decode — prompt + max_new must fit the window or the run
+        // would die at SlotManager::advance mid-decode.
+        let gen = req.params.max_new_tokens;
+        anyhow::ensure!(
+            req.prompt.len() + gen <= slots.max_seq,
+            "request {}: prompt of {} tokens + up to {gen} generated \
+             cannot fit the {}-token serving window",
+            req.id,
+            req.prompt.len(),
+            slots.max_seq
+        );
+        let need = self.allocator.blocks_for(self.need_tokens(req));
+        anyhow::ensure!(
+            need <= self.allocator.n_blocks(),
+            "request {}: worst-case need of {need} blocks exceeds the \
+             whole pool ({} blocks); raise --cache-budget-mb or lower \
+             max_new_tokens",
+            req.id,
+            self.allocator.n_blocks()
+        );
+        Ok(())
     }
 
     /// Admit as many queued requests as the lanes + block pool allow.
@@ -53,7 +98,36 @@ impl AdmissionQueue {
         let mut admitted = Vec::new();
         while slots.idle_count() > 0 {
             let Some(front) = self.queue.front() else { break };
+            if front.prompt.is_empty() || front.prompt.len() >= slots.max_seq
+            {
+                // Defensive: an empty or over-long prompt that slipped
+                // past `admissible` must not panic/error the engine loop
+                // (prefill requires 1 <= len < window). Drop it.
+                let req = self.queue.pop_front().unwrap();
+                log::error!(
+                    "dropping request {}: prompt of {} tokens outside \
+                     [1, {})",
+                    req.id,
+                    req.prompt.len(),
+                    slots.max_seq
+                );
+                continue;
+            }
             let need = self.need_tokens(front);
+            if self.allocator.blocks_for(need) > self.allocator.n_blocks() {
+                // Defensive twin of the prompt-bounds drop above: a head
+                // request larger than the WHOLE pool would never admit
+                // and busy-loop the engine; drop it instead of waiting.
+                let req = self.queue.pop_front().unwrap();
+                log::error!(
+                    "dropping request {}: worst-case need of {} blocks \
+                     exceeds the whole pool ({})",
+                    req.id,
+                    self.allocator.blocks_for(need),
+                    self.allocator.n_blocks()
+                );
+                continue;
+            }
             if !self.allocator.can_admit(need) {
                 break; // strict FIFO: no head-of-line bypass
             }
@@ -61,7 +135,7 @@ impl AdmissionQueue {
             let chain = self.allocator.alloc(need).expect("checked");
             let slot = slots
                 .claim(req.id, req.prompt.len())
-                .expect("idle slot checked");
+                .expect("idle slot and prompt length checked");
             admitted.push((req, slot, chain));
         }
         admitted

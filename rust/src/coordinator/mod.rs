@@ -4,6 +4,9 @@
 //!   (greedy / temperature / top-p nucleus sampling).
 //! * [`batcher`] — FIFO admission queue + continuous-batching policy over
 //!   the fixed decode lanes (static-shape analog of vLLM's scheduler).
+//! * [`scheduler`] — scheduler policy (block granularity, cache byte
+//!   budget, conservative vs. optimistic admission) and the deterministic
+//!   arrival traces the engine is benchmarked with.
 //! * [`server`]  — the inference engine: prefill-splice + iterative decode
 //!   over the compressed KV cache, sampling, stop handling, per-request
 //!   latency metrics. Drives any [`crate::runtime::Backend`] — the native
@@ -15,9 +18,11 @@
 pub mod api;
 pub mod batcher;
 pub mod router;
+pub mod scheduler;
 pub mod server;
 
 pub use api::{GenParams, Request, Response};
 pub use batcher::AdmissionQueue;
 pub use router::Router;
-pub use server::InferenceServer;
+pub use scheduler::{ArrivalTrace, SchedulerConfig, TraceOpts};
+pub use server::{InferenceServer, ServerStats};

@@ -4,16 +4,27 @@
 
 use std::sync::mpsc;
 use std::thread;
+use std::time::Duration;
 
 use anyhow::{bail, Result};
 
-use crate::coordinator::api::{Request, Response};
-use crate::coordinator::server::InferenceServer;
+use crate::coordinator::api::{FinishReason, Request, Response};
+use crate::coordinator::server::{InferenceServer, ServerStats};
 
 enum Cmd {
     Submit(Request),
     Drain,
+    /// Snapshot the engine's scheduler stats through the one-shot sender.
+    Stats(mpsc::Sender<ServerStats>),
     Shutdown,
+}
+
+/// Worker -> router traffic. `DrainDone(i)` is worker `i`'s barrier
+/// marker: it lets `Router::drain` terminate even when an engine errored
+/// mid-drain and some submitted requests will never produce a response.
+enum WorkerMsg {
+    Response(Response),
+    DrainDone(usize),
 }
 
 struct Worker {
@@ -25,8 +36,7 @@ struct Worker {
 /// Least-loaded request router over N single-engine workers.
 pub struct Router {
     workers: Vec<Worker>,
-    rx: mpsc::Receiver<Response>,
-    resp_tx: mpsc::Sender<Response>,
+    rx: mpsc::Receiver<WorkerMsg>,
     submitted: usize,
     collected: usize,
 }
@@ -39,7 +49,7 @@ pub type EngineFactory =
 impl Router {
     /// Build a router with one worker thread per factory.
     pub fn new(factories: Vec<EngineFactory>) -> Router {
-        let (resp_tx, rx) = mpsc::channel::<Response>();
+        let (resp_tx, rx) = mpsc::channel::<WorkerMsg>();
         let workers = factories
             .into_iter()
             .enumerate()
@@ -58,18 +68,48 @@ impl Router {
                         };
                         loop {
                             match cmd_rx.recv() {
-                                Ok(Cmd::Submit(req)) => engine.submit(req),
+                                Ok(Cmd::Submit(req)) => {
+                                    let id = req.id;
+                                    if let Err(e) = engine.submit(req) {
+                                        log::error!(
+                                            "engine {i}: request {id} \
+                                             rejected: {e:#}"
+                                        );
+                                        // Keep the router's response
+                                        // accounting exact: a rejection
+                                        // still produces one response.
+                                        let _ = out.send(
+                                            WorkerMsg::Response(Response {
+                                                id,
+                                                tokens: Vec::new(),
+                                                ttft: 0.0,
+                                                latency: 0.0,
+                                                finish:
+                                                    FinishReason::Rejected,
+                                            }),
+                                        );
+                                    }
+                                }
+                                Ok(Cmd::Stats(tx)) => {
+                                    let _ = tx.send(engine.stats.clone());
+                                }
                                 Ok(Cmd::Drain) => {
                                     match engine.run_to_completion() {
                                         Ok(responses) => {
                                             for r in responses {
-                                                let _ = out.send(r);
+                                                let _ = out.send(
+                                                    WorkerMsg::Response(r),
+                                                );
                                             }
                                         }
                                         Err(e) => {
                                             log::error!("engine {i}: {e:#}");
                                         }
                                     }
+                                    // Always mark the barrier, even after
+                                    // an engine error — in-flight requests
+                                    // may be lost but drain() must return.
+                                    let _ = out.send(WorkerMsg::DrainDone(i));
                                 }
                                 Ok(Cmd::Shutdown) | Err(_) => break,
                             }
@@ -79,7 +119,11 @@ impl Router {
                 Worker { tx, outstanding: 0, handle: Some(handle) }
             })
             .collect();
-        Router { workers, rx, resp_tx, submitted: 0, collected: 0 }
+        // `resp_tx` is dropped here: only workers hold senders, so the
+        // channel disconnects (and drain/recv errors out) when every
+        // worker thread has exited.
+        drop(resp_tx);
+        Router { workers, rx, submitted: 0, collected: 0 }
     }
 
     pub fn n_workers(&self) -> usize {
@@ -105,21 +149,91 @@ impl Router {
         Ok(())
     }
 
-    /// Run all workers to completion and collect every response.
+    /// Snapshot every worker's scheduler stats (admission waits, peak
+    /// concurrency, block occupancy). Call after [`Router::drain`] for
+    /// end-of-run numbers.
+    pub fn stats(&self) -> Result<Vec<crate::coordinator::ServerStats>> {
+        let mut out = Vec::with_capacity(self.workers.len());
+        for (i, w) in self.workers.iter().enumerate() {
+            let (tx, rx) = mpsc::channel();
+            w.tx
+                .send(Cmd::Stats(tx))
+                .map_err(|_| anyhow::anyhow!("worker {i} hung up"))?;
+            out.push(rx.recv().map_err(|_| {
+                anyhow::anyhow!("worker {i} exited before reporting stats")
+            })?);
+        }
+        Ok(out)
+    }
+
+    /// Run all workers to completion and collect every response. Returns
+    /// once every worker has finished draining (or died); if responses
+    /// were lost to engine errors or worker panics, that is reported as
+    /// an error instead of blocking forever.
     pub fn drain(&mut self) -> Result<Vec<Response>> {
-        for w in &self.workers {
-            let _ = w.tx.send(Cmd::Drain);
+        // A worker whose command channel is gone (init failure / panic)
+        // will never send its barrier marker: count it done up front.
+        let mut done_mask = vec![false; self.workers.len()];
+        for (i, w) in self.workers.iter().enumerate() {
+            if w.tx.send(Cmd::Drain).is_err() {
+                done_mask[i] = true;
+            }
         }
+        // Consume until EVERY live worker has marked its barrier —
+        // per-sender FIFO means all of a worker's responses precede its
+        // marker, so nothing is left behind for the next round. The
+        // timeout arm sweeps for workers that panicked mid-drain (their
+        // thread is finished but no marker ever arrives).
         let mut out = Vec::with_capacity(self.submitted - self.collected);
-        while self.collected < self.submitted {
-            let r = self.rx.recv().map_err(|_| {
-                anyhow::anyhow!("all workers exited with responses pending")
-            })?;
-            self.collected += 1;
-            out.push(r);
+        while done_mask.iter().any(|d| !d) {
+            match self.rx.recv_timeout(Duration::from_millis(250)) {
+                Ok(WorkerMsg::Response(r)) => {
+                    self.collected += 1;
+                    out.push(r);
+                }
+                Ok(WorkerMsg::DrainDone(i)) => done_mask[i] = true,
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    for (i, w) in self.workers.iter().enumerate() {
+                        let dead = w
+                            .handle
+                            .as_ref()
+                            .map(|h| h.is_finished())
+                            .unwrap_or(true);
+                        if !done_mask[i] && dead {
+                            log::error!(
+                                "worker {i} died during drain; its \
+                                 in-flight requests are lost"
+                            );
+                            done_mask[i] = true;
+                        }
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
         }
+        // A worker that died between sending responses and its marker
+        // leaves those responses buffered: sweep them up now so they are
+        // not mis-attributed to the NEXT round's accounting.
+        while let Ok(msg) = self.rx.try_recv() {
+            if let WorkerMsg::Response(r) = msg {
+                self.collected += 1;
+                out.push(r);
+            }
+        }
+        let missing = self.submitted.saturating_sub(self.collected);
+        // Full barrier: reset the accounting either way so a later
+        // submit/drain round starts clean.
+        self.submitted = 0;
+        self.collected = 0;
         for w in &mut self.workers {
             w.outstanding = 0;
+        }
+        if missing > 0 {
+            bail!(
+                "{missing} request(s) lost to engine errors during drain \
+                 ({} responses collected; see worker logs)",
+                out.len()
+            );
         }
         Ok(out)
     }
@@ -135,6 +249,5 @@ impl Drop for Router {
                 let _ = h.join();
             }
         }
-        let _ = &self.resp_tx;
     }
 }

@@ -1,0 +1,174 @@
+//! Scheduler policy knobs + the deterministic arrival traces the
+//! continuous-batching engine is driven and benchmarked with.
+//!
+//! The engine loop itself lives in [`crate::coordinator::server`]; this
+//! module owns the pieces that shape its decisions:
+//!
+//! * [`SchedulerConfig`] — block granularity, the cache byte budget the
+//!   [`crate::kvcache::BlockAllocator`] pool is sized from (per variant:
+//!   `CacheLayout::bytes_per_token`, so J-LRD/S-LRD compression directly
+//!   raises achievable concurrency), and the admission policy
+//!   (conservative = reserve prompt + max_new up front, so a decode can
+//!   never die to pool exhaustion mid-sequence).
+//! * [`ArrivalTrace`] — a seeded mixed prefill/decode workload: requests
+//!   with varied prompt/generation lengths arriving over engine steps,
+//!   replayed identically by `elitekv bench` and the scheduler tests.
+
+use crate::coordinator::api::{GenParams, Request};
+use crate::data::CorpusGen;
+use crate::util::Pcg64;
+
+/// Policy + sizing of the continuous-batching scheduler.
+#[derive(Clone, Debug)]
+pub struct SchedulerConfig {
+    /// Tokens per cache block (paging granularity of admission control).
+    pub block_tokens: usize,
+    /// Byte budget the block pool is sized from; the per-variant
+    /// `CacheLayout::bytes_per_token` converts it into a block count.
+    pub cache_budget_bytes: usize,
+    /// Admit only when prompt + max_new worst-case fits the pool (true),
+    /// or on prompt footprint alone, growing chains via `extend` (false).
+    pub conservative: bool,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> SchedulerConfig {
+        SchedulerConfig {
+            block_tokens: 16,
+            cache_budget_bytes: 64 << 20,
+            conservative: true,
+        }
+    }
+}
+
+impl SchedulerConfig {
+    pub fn with_budget(cache_budget_bytes: usize) -> SchedulerConfig {
+        SchedulerConfig { cache_budget_bytes, ..Default::default() }
+    }
+}
+
+/// One request of a replayable workload, tagged with the engine step at
+/// which it becomes visible to the scheduler.
+#[derive(Clone, Debug)]
+pub struct TraceItem {
+    pub arrive_step: usize,
+    pub request: Request,
+}
+
+/// Shape of a generated [`ArrivalTrace`].
+#[derive(Clone, Debug)]
+pub struct TraceOpts {
+    pub n_requests: usize,
+    pub prompt_min: usize,
+    pub prompt_max: usize,
+    pub max_new_min: usize,
+    pub max_new_max: usize,
+    /// Mean engine steps between arrivals (0 = all arrive at step 0).
+    pub inter_arrival_steps: usize,
+}
+
+impl Default for TraceOpts {
+    fn default() -> TraceOpts {
+        TraceOpts {
+            n_requests: 24,
+            prompt_min: 4,
+            prompt_max: 24,
+            max_new_min: 4,
+            max_new_max: 16,
+            inter_arrival_steps: 2,
+        }
+    }
+}
+
+/// A deterministic mixed prefill/decode arrival trace: same (vocab,
+/// seed, opts) -> byte-identical workload, so dense and compressed
+/// variants are benchmarked against exactly the same request stream.
+#[derive(Clone, Debug)]
+pub struct ArrivalTrace {
+    pub items: Vec<TraceItem>,
+}
+
+impl ArrivalTrace {
+    pub fn generate(vocab: usize, seed: u64, opts: &TraceOpts) -> ArrivalTrace {
+        let mut gen = CorpusGen::new(vocab, seed);
+        let mut rng = Pcg64::new(seed, 0x7ace);
+        let mut step = 0usize;
+        let items = (0..opts.n_requests)
+            .map(|i| {
+                let plen = rng.range(opts.prompt_min, opts.prompt_max + 1);
+                let max_new =
+                    rng.range(opts.max_new_min, opts.max_new_max + 1);
+                if opts.inter_arrival_steps > 0 && i > 0 {
+                    step += rng.range(0, 2 * opts.inter_arrival_steps + 1);
+                }
+                TraceItem {
+                    arrive_step: step,
+                    request: Request::new(
+                        i as u64,
+                        gen.stream(plen),
+                        GenParams {
+                            max_new_tokens: max_new,
+                            stop_token: None, // fixed-length: comparable work
+                            temperature: 0.0,
+                            top_p: 1.0,
+                            seed: i as u64,
+                        },
+                    ),
+                }
+            })
+            .collect();
+        ArrivalTrace { items }
+    }
+
+    /// Total tokens the trace will generate (sum of max_new).
+    pub fn total_new_tokens(&self) -> usize {
+        self.items
+            .iter()
+            .map(|t| t.request.params.max_new_tokens)
+            .sum()
+    }
+
+    /// Last arrival step.
+    pub fn horizon(&self) -> usize {
+        self.items.iter().map(|t| t.arrive_step).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_deterministic_and_in_bounds() {
+        let opts = TraceOpts::default();
+        let a = ArrivalTrace::generate(512, 9, &opts);
+        let b = ArrivalTrace::generate(512, 9, &opts);
+        assert_eq!(a.items.len(), opts.n_requests);
+        for (x, y) in a.items.iter().zip(&b.items) {
+            assert_eq!(x.arrive_step, y.arrive_step);
+            assert_eq!(x.request.prompt, y.request.prompt);
+            assert_eq!(
+                x.request.params.max_new_tokens,
+                y.request.params.max_new_tokens
+            );
+        }
+        for t in &a.items {
+            assert!(t.request.prompt.len() >= opts.prompt_min);
+            assert!(t.request.prompt.len() <= opts.prompt_max);
+            assert!(t.request.params.max_new_tokens >= opts.max_new_min);
+            assert!(t.request.params.max_new_tokens <= opts.max_new_max);
+        }
+        // arrivals are non-decreasing in step
+        for w in a.items.windows(2) {
+            assert!(w[0].arrive_step <= w[1].arrive_step);
+        }
+    }
+
+    #[test]
+    fn zero_inter_arrival_is_a_burst() {
+        let opts = TraceOpts { inter_arrival_steps: 0, ..Default::default() };
+        let t = ArrivalTrace::generate(512, 1, &opts);
+        assert!(t.items.iter().all(|i| i.arrive_step == 0));
+        assert_eq!(t.horizon(), 0);
+    }
+}

@@ -19,6 +19,7 @@ use anyhow::{bail, Result};
 
 use crate::coordinator::api::{FinishReason, GenParams, Request, Response};
 use crate::coordinator::batcher::AdmissionQueue;
+use crate::coordinator::scheduler::SchedulerConfig;
 use crate::kvcache::block::BlockId;
 use crate::kvcache::{BlockAllocator, CacheLayout, SlotManager};
 use crate::runtime::{Backend, HostTensor};
@@ -40,6 +41,63 @@ pub struct ServerStats {
     pub decode_steps: usize,
     pub prefills: usize,
     pub peak_cache_bytes: usize,
+    /// Peak number of simultaneously busy lanes (the capacity headline:
+    /// under one byte budget, compressed variants admit more).
+    pub max_concurrency: usize,
+    /// Number of admissions observed (one wait sample each).
+    pub admission_waits: usize,
+    /// Sum of all enqueue-to-admission waits, in seconds.
+    pub admission_wait_sum_s: f64,
+    /// Ring of the most recent admission waits (percentile estimates),
+    /// bounded by [`ADMISSION_WAIT_WINDOW`] so a long-lived engine's
+    /// stats stay O(1) in memory.
+    pub admission_wait_recent_s: Vec<f64>,
+    /// Peak blocks held by live chains.
+    pub peak_blocks_used: usize,
+    /// Pool size (blocks), for occupancy ratios.
+    pub blocks_total: usize,
+    /// Sum of blocks-in-use across occupancy samples (one sample per
+    /// engine iteration with busy lanes, taken BEFORE same-step
+    /// releases so short generations still register).
+    pub blocks_used_sum: usize,
+    /// Number of samples accumulated into `blocks_used_sum`.
+    pub occupancy_samples: usize,
+}
+
+/// Capacity of [`ServerStats::admission_wait_recent_s`].
+pub const ADMISSION_WAIT_WINDOW: usize = 4096;
+
+impl ServerStats {
+    /// Record one enqueue-to-admission wait.
+    pub fn record_admission_wait(&mut self, seconds: f64) {
+        if self.admission_wait_recent_s.len() < ADMISSION_WAIT_WINDOW {
+            self.admission_wait_recent_s.push(seconds);
+        } else {
+            let i = self.admission_waits % ADMISSION_WAIT_WINDOW;
+            self.admission_wait_recent_s[i] = seconds;
+        }
+        self.admission_waits += 1;
+        self.admission_wait_sum_s += seconds;
+    }
+
+    /// Mean admission wait in seconds (0 when nothing was admitted).
+    pub fn mean_admission_wait_s(&self) -> f64 {
+        if self.admission_waits == 0 {
+            0.0
+        } else {
+            self.admission_wait_sum_s / self.admission_waits as f64
+        }
+    }
+
+    /// Mean block-pool occupancy in [0, 1] across busy engine iterations.
+    pub fn mean_block_occupancy(&self) -> f64 {
+        if self.occupancy_samples == 0 || self.blocks_total == 0 {
+            0.0
+        } else {
+            self.blocks_used_sum as f64
+                / (self.occupancy_samples * self.blocks_total) as f64
+        }
+    }
 }
 
 /// Single-worker inference engine over one [`Backend`].
@@ -57,37 +115,74 @@ pub struct InferenceServer {
 }
 
 impl InferenceServer {
-    /// `cache_budget_bytes` sizes the block pool (admission control).
+    /// `cache_budget_bytes` sizes the block pool (admission control);
+    /// everything else takes the [`SchedulerConfig`] defaults.
     pub fn new(
         backend: Box<dyn Backend>,
         cache_budget_bytes: usize,
     ) -> Result<InferenceServer> {
+        Self::with_config(
+            backend,
+            &SchedulerConfig::with_budget(cache_budget_bytes),
+        )
+    }
+
+    /// Build the engine around an explicit scheduler policy. The lane
+    /// count and serving window come from the backend (`serve_shape`);
+    /// the block pool is sized from the byte budget divided by this
+    /// variant's `CacheLayout::bytes_per_token` — the point where cache
+    /// compression becomes admission capacity.
+    pub fn with_config(
+        backend: Box<dyn Backend>,
+        cfg: &SchedulerConfig,
+    ) -> Result<InferenceServer> {
+        anyhow::ensure!(cfg.block_tokens > 0, "block_tokens must be > 0");
         let (batch, max_seq) = backend.serve_shape()?;
         let layout =
             CacheLayout::new(backend.config(), backend.variant().clone());
         let allocator = BlockAllocator::with_budget(
-            cache_budget_bytes,
+            cfg.cache_budget_bytes,
             layout.bytes_per_token().max(1),
-            16,
+            cfg.block_tokens,
+        );
+        anyhow::ensure!(
+            allocator.n_blocks() > 0,
+            "cache budget of {} bytes holds zero {}-token blocks at {} \
+             bytes/token; raise --cache-budget-mb or lower --block-tokens",
+            cfg.cache_budget_bytes,
+            cfg.block_tokens,
+            layout.bytes_per_token()
         );
         let slots = SlotManager::new(layout, batch, max_seq);
         let caches = backend.empty_caches()?;
+        let mut queue = AdmissionQueue::new(allocator);
+        queue.conservative = cfg.conservative;
+        let stats = ServerStats {
+            blocks_total: queue.allocator.n_blocks(),
+            ..Default::default()
+        };
         Ok(InferenceServer {
             backend,
-            queue: AdmissionQueue::new(allocator),
+            queue,
             slots,
             lanes: (0..batch).map(|_| None).collect(),
             caches,
             logits: None,
             use_pallas: false,
-            stats: ServerStats::default(),
+            stats,
             batch,
             max_seq,
         })
     }
 
-    pub fn submit(&mut self, req: Request) {
+    /// Enqueue a request. Errors if the request can NEVER be served by
+    /// this engine (prompt outside the serving window, or a worst-case
+    /// block need larger than the whole pool) — accepting it would park
+    /// the FIFO head forever and hang `run_to_completion`.
+    pub fn submit(&mut self, req: Request) -> Result<()> {
+        self.queue.admissible(&req, &self.slots)?;
         self.queue.push(req);
+        Ok(())
     }
 
     pub fn busy(&self) -> bool {
@@ -113,15 +208,20 @@ impl InferenceServer {
         self.decode_once()
     }
 
-    /// Admit queued requests and prefill their lanes.
+    /// Admit queued requests (lane + block budget permitting) and prefill
+    /// exactly the newly admitted lanes; running lanes are untouched.
     fn admit(&mut self) -> Result<()> {
         let admitted = self.queue.admit(&mut self.slots);
         if admitted.is_empty() {
             return Ok(());
         }
-        // One prefill covering the newly admitted lanes; others dummy.
+        let now = Instant::now();
+        // One prefill covering the newly admitted lanes. `fresh_mask`
+        // tells backends which lanes matter so they can skip the rest
+        // (the native runner does; static PJRT artifacts compute all).
         let mut tokens = vec![0i32; self.batch * self.max_seq];
         let mut lens = vec![1i32; self.batch];
+        let mut fresh_mask = vec![false; self.batch];
         for (req, slot, _chain) in &admitted {
             if req.prompt.len() >= self.max_seq {
                 bail!("prompt exceeds serving window");
@@ -130,8 +230,12 @@ impl InferenceServer {
                 tokens[slot * self.max_seq + i] = t as i32;
             }
             lens[*slot] = req.prompt.len() as i32;
+            fresh_mask[*slot] = true;
+            self.stats
+                .record_admission_wait((now - req.enqueued).as_secs_f64());
         }
-        let (logits, fresh) = self.backend.prefill(&tokens, &lens)?;
+        let (logits, fresh) =
+            self.backend.prefill_lanes(&tokens, &lens, &fresh_mask)?;
         self.stats.prefills += 1;
         // Splice admitted lanes' cache rows + logits into live state.
         for (req, slot, chain) in admitted {
@@ -151,7 +255,35 @@ impl InferenceServer {
                 rng: Pcg64::seeded(seed),
             });
         }
+        let busy = self.lanes.iter().filter(|l| l.is_some()).count();
+        self.stats.max_concurrency = self.stats.max_concurrency.max(busy);
         Ok(())
+    }
+
+    /// Retire a lane: account for its generation, build the response,
+    /// and return slot + blocks to their pools.
+    fn finish_lane(
+        &mut self,
+        slot: usize,
+        lane: Lane,
+        reason: FinishReason,
+    ) -> Response {
+        let now = Instant::now();
+        self.stats.completed += 1;
+        self.stats.generated_tokens += lane.generated.len();
+        let response = Response {
+            id: lane.request.id,
+            tokens: lane.generated,
+            ttft: lane
+                .first_token_at
+                .map(|t| (t - lane.request.enqueued).as_secs_f64())
+                .unwrap_or(0.0),
+            latency: (now - lane.request.enqueued).as_secs_f64(),
+            finish: reason,
+        };
+        self.queue.release(&lane.blocks);
+        self.slots.free(slot);
+        response
     }
 
     /// One decode step for every lane; sample + handle completions.
@@ -159,6 +291,12 @@ impl InferenceServer {
         if self.lanes.iter().all(|l| l.is_none()) {
             return Ok(Vec::new());
         }
+        // Sample the block high-water mark BEFORE this step's releases,
+        // so even a 1-token generation registers its pool footprint.
+        let used = self.queue.allocator.used_blocks();
+        self.stats.peak_blocks_used = self.stats.peak_blocks_used.max(used);
+        self.stats.blocks_used_sum += used;
+        self.stats.occupancy_samples += 1;
         // Sample next token per busy lane from the current logits.
         let vocab = self.backend.config().vocab;
         let logits = self
@@ -197,7 +335,6 @@ impl InferenceServer {
             };
             if finished {
                 let lane = self.lanes[slot].take().unwrap();
-                let now = Instant::now();
                 let reason = if lane.request.params.stop_token
                     == lane.generated.last().copied()
                 {
@@ -205,20 +342,7 @@ impl InferenceServer {
                 } else {
                     FinishReason::Length
                 };
-                self.stats.completed += 1;
-                self.stats.generated_tokens += lane.generated.len();
-                done.push(Response {
-                    id: lane.request.id,
-                    tokens: lane.generated,
-                    ttft: lane
-                        .first_token_at
-                        .map(|t| (t - lane.request.enqueued).as_secs_f64())
-                        .unwrap_or(0.0),
-                    latency: (now - lane.request.enqueued).as_secs_f64(),
-                    finish: reason,
-                });
-                self.queue.release(&lane.blocks);
-                self.slots.free(slot);
+                done.push(self.finish_lane(slot, lane, reason));
             }
         }
         // Decode the sampled tokens for lanes still running; idle lanes
@@ -233,15 +357,29 @@ impl InferenceServer {
             self.logits = Some(logits);
             self.stats.decode_steps += 1;
             for slot in 0..self.batch {
-                if self.lanes[slot].is_some() {
-                    self.slots.advance(slot)?;
-                    if let Some(lane) = &self.lanes[slot] {
-                        let need = self.slots.len_of(slot);
-                        let mut chain = lane.blocks.clone();
-                        self.queue.allocator.extend(&mut chain, need)?;
-                        self.lanes[slot].as_mut().unwrap().blocks = chain;
-                    }
+                if self.lanes[slot].is_none() {
+                    continue;
                 }
+                self.slots.advance(slot)?;
+                let need = self.slots.len_of(slot);
+                let lane = self.lanes[slot].as_mut().unwrap();
+                if self.queue.allocator.extend(&mut lane.blocks, need).is_ok()
+                {
+                    continue;
+                }
+                // Pool exhausted mid-growth — reachable only under
+                // optimistic admission (conservative reservations cover
+                // max_new up front). Truncate THIS lane's generation
+                // rather than killing every other in-flight request.
+                let lane = self.lanes[slot].take().unwrap();
+                log::warn!(
+                    "request {}: block pool exhausted at {} tokens; \
+                     truncating generation ({} tokens emitted)",
+                    lane.request.id,
+                    need,
+                    lane.generated.len()
+                );
+                done.push(self.finish_lane(slot, lane, FinishReason::Length));
             }
             self.stats.peak_cache_bytes = self
                 .stats

@@ -21,6 +21,10 @@ pub struct BlockAllocator {
     n_blocks: usize,
     free: Vec<BlockId>,
     refcnt: HashMap<BlockId, u32>,
+    /// Releases of blocks that were not live (double-release / stale
+    /// chain). Never cleared; `check_invariants` reports it so the bug
+    /// surfaces at the next audit point instead of corrupting the pool.
+    over_released: usize,
 }
 
 impl BlockAllocator {
@@ -40,6 +44,7 @@ impl BlockAllocator {
             n_blocks,
             free: (0..n_blocks as BlockId).rev().collect(),
             refcnt: HashMap::new(),
+            over_released: 0,
         }
     }
 
@@ -49,6 +54,16 @@ impl BlockAllocator {
 
     pub fn free_blocks(&self) -> usize {
         self.free.len()
+    }
+
+    /// Blocks currently held by live chains.
+    pub fn used_blocks(&self) -> usize {
+        self.n_blocks - self.free.len()
+    }
+
+    /// Current reference count of a block (0 when free or unknown).
+    pub fn refcount(&self, b: BlockId) -> u32 {
+        self.refcnt.get(&b).copied().unwrap_or(0)
     }
 
     /// Blocks needed for a sequence of `tokens` tokens.
@@ -89,28 +104,56 @@ impl BlockAllocator {
         Ok(())
     }
 
-    /// Share an existing chain (prefix reuse): bump refcounts.
-    pub fn fork(&mut self, chain: &[BlockId]) -> Vec<BlockId> {
-        for b in chain {
-            *self.refcnt.get_mut(b).expect("live block") += 1;
+    /// Share an existing chain (prefix reuse): bump per-block refcounts.
+    /// Errors if any block of the chain is not live (stale chain) —
+    /// forking it would alias memory another sequence may reuse.
+    pub fn fork(&mut self, chain: &[BlockId]) -> Result<Vec<BlockId>> {
+        for (i, b) in chain.iter().enumerate() {
+            if !self.refcnt.contains_key(b) {
+                // Roll back the bumps already made so a failed fork
+                // leaves refcounts exactly as they were.
+                for bb in &chain[..i] {
+                    *self.refcnt.get_mut(bb).unwrap() -= 1;
+                }
+                bail!("fork of dead block {b} (stale chain)");
+            }
+            *self.refcnt.get_mut(b).unwrap() += 1;
         }
-        chain.to_vec()
+        Ok(chain.to_vec())
     }
 
-    /// Release a chain; blocks return to the pool at refcount zero.
+    /// Release a chain; each block's refcount decrements and the block
+    /// returns to the pool at zero. Releasing a block that is not live
+    /// (double-release / stale chain) is recorded instead of panicking;
+    /// `check_invariants` reports it.
     pub fn release(&mut self, chain: &[BlockId]) {
         for &b in chain {
-            let cnt = self.refcnt.get_mut(&b).expect("live block");
-            *cnt -= 1;
-            if *cnt == 0 {
-                self.refcnt.remove(&b);
-                self.free.push(b);
+            match self.refcnt.get_mut(&b) {
+                Some(cnt) => {
+                    *cnt -= 1;
+                    if *cnt == 0 {
+                        self.refcnt.remove(&b);
+                        self.free.push(b);
+                    }
+                }
+                None => {
+                    log::error!("over-release of block {b} (not live)");
+                    self.over_released += 1;
+                }
             }
         }
     }
 
-    /// Invariant check: every block is either free or ref-counted, once.
+    /// Invariant check: every block is either free or ref-counted, once,
+    /// and no release ever hit a non-live block.
     pub fn check_invariants(&self) -> Result<()> {
+        if self.over_released > 0 {
+            bail!(
+                "{} over-release(s) recorded: some chain was released \
+                 twice or after its blocks were recycled",
+                self.over_released
+            );
+        }
         let mut seen = std::collections::HashSet::new();
         for &b in &self.free {
             if !seen.insert(b) {
@@ -178,11 +221,60 @@ mod tests {
         let mut a = BlockAllocator::new(4, 4);
         let chain = a.alloc(16).unwrap();
         assert_eq!(a.free_blocks(), 0);
-        let shared = a.fork(&chain);
+        let shared = a.fork(&chain).unwrap();
         a.release(&chain);
         assert_eq!(a.free_blocks(), 0); // still referenced by `shared`
         a.release(&shared);
         assert_eq!(a.free_blocks(), 4);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn double_release_is_caught_not_corrupting() {
+        let mut a = BlockAllocator::new(4, 4);
+        let chain = a.alloc(16).unwrap();
+        a.release(&chain);
+        assert_eq!(a.free_blocks(), 4);
+        // the second release must not panic, must not double-free...
+        a.release(&chain);
+        assert_eq!(a.free_blocks(), 4);
+        // ...and must be reported by the invariant check.
+        let err = a.check_invariants().unwrap_err().to_string();
+        assert!(err.contains("over-release"), "{err}");
+    }
+
+    #[test]
+    fn release_one_fork_keeps_sibling_blocks_live() {
+        // The ISSUE-2 scenario: fork a chain, release one side, and the
+        // sibling's blocks must NOT return to the pool (no reuse while
+        // still referenced).
+        let mut a = BlockAllocator::new(4, 4);
+        let original = a.alloc(16).unwrap();
+        let forked = a.fork(&original).unwrap();
+        a.release(&original);
+        // pool still empty: a fresh alloc must fail, proving no block of
+        // the surviving fork was recycled
+        assert!(a.alloc(1).is_err());
+        for &b in &forked {
+            assert_eq!(a.refcount(b), 1);
+        }
+        a.release(&forked);
+        assert_eq!(a.free_blocks(), 4);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fork_of_stale_chain_is_error_and_rolls_back() {
+        let mut a = BlockAllocator::new(4, 4);
+        let chain = a.alloc(8).unwrap(); // 2 blocks
+        let keep = a.alloc(4).unwrap(); // 1 block, stays live
+        a.release(&chain);
+        // chain is stale: forking [live, dead] must fail and leave the
+        // live block's refcount untouched
+        let mixed = vec![keep[0], chain[0]];
+        assert!(a.fork(&mixed).is_err());
+        assert_eq!(a.refcount(keep[0]), 1);
+        a.release(&keep);
         a.check_invariants().unwrap();
     }
 
@@ -226,7 +318,9 @@ mod tests {
                         2 => {
                             if !live.is_empty() {
                                 let i = (op / 4) as usize % live.len();
-                                let f = a.fork(&live[i].clone());
+                                let f = a
+                                    .fork(&live[i].clone())
+                                    .map_err(|e| e.to_string())?;
                                 live.push(f);
                             }
                         }

@@ -25,7 +25,9 @@ use anyhow::{bail, Context, Result};
 use elitekv::cli::Args;
 use elitekv::config::{ModelConfig, Variant};
 use elitekv::convert::{self, EliteSelection};
-use elitekv::coordinator::{GenParams, InferenceServer, Request};
+use elitekv::coordinator::{
+    GenParams, InferenceServer, Request, SchedulerConfig,
+};
 use elitekv::data::{CorpusGen, ProbeSet};
 use elitekv::io::Checkpoint;
 use elitekv::native::{NativeModel, NativeRunner};
@@ -86,12 +88,22 @@ USAGE: elitekv <command> [flags]
 COMMANDS
   serve      [--backend native|pjrt] --config C --variant TAG
              [--ckpt PATH] [--selection PATH] [--requests N] [--max-new N]
-             [--batch B] [--max-seq S] [--temperature F] [--top-p F]
-             [--seed N] [--r N (ropelite uniform fallback)] [--pallas]
+             [--max-batch B] [--max-seq S] [--block-tokens N]
+             [--cache-budget-mb N] [--optimistic-admission]
+             [--temperature F] [--top-p F] [--seed N]
+             [--r N (ropelite uniform fallback)] [--pallas]
              native backend (default): no artifacts needed; random-init
-             weights unless --ckpt points at a (converted) checkpoint
+             weights unless --ckpt points at a (converted) checkpoint.
+             Requests are continuously batched: admission is gated on the
+             block pool (--cache-budget-mb / --block-tokens), lanes
+             recycle the moment a sequence finishes.
   bench      [--config C] [--steps N] [--batch B] [--prompt N]
              [--out PATH]   native decode sweep -> BENCH_native_decode.json
+             then a continuous-batching capacity sweep
+             [--max-batch B] [--cb-requests N] [--cb-max-seq S]
+             [--block-tokens N] [--cache-budget-mb N] [--cb-out PATH]
+             -> BENCH_continuous_batching.json (dense vs J-LRD max
+             concurrency under one cache budget)
   eval       [--backend native|pjrt] --config C --variant TAG [--ckpt PATH]
              [--selection PATH] [--probes N] [--seed N] [--r N]
   convert    --config C --ckpt PATH --variant TAG [--selection PATH]
@@ -232,9 +244,29 @@ fn native_backend(args: &Args) -> Result<NativeRunner> {
             )?
         }
     };
-    let batch = args.usize_or("batch", 4)?;
+    // `--max-batch` is the scheduler-facing name; `--batch` stays as the
+    // historical alias.
+    let batch =
+        args.usize_or("max-batch", args.usize_or("batch", 4)?)?;
     let max_seq = args.usize_or("max-seq", cfg.max_seq.min(256))?;
     NativeRunner::new(model, batch, max_seq)
+}
+
+/// Scheduler policy from the shared serve/bench flags. The commands
+/// differ only in their default budget (serve: 64 MiB; bench: the
+/// deliberately tight `ServeBenchOpts` budget).
+fn scheduler_config(
+    args: &Args,
+    default_budget_mb: usize,
+    default_block_tokens: usize,
+) -> Result<SchedulerConfig> {
+    Ok(SchedulerConfig {
+        block_tokens: args.usize_or("block-tokens", default_block_tokens)?,
+        cache_budget_bytes: args
+            .usize_or("cache-budget-mb", default_budget_mb)?
+            << 20,
+        conservative: !args.has("optimistic-admission"),
+    })
 }
 
 // ---------------------------------------------------------------------------
@@ -255,7 +287,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let vocab = boxed.config().vocab;
     let kind = boxed.kind();
     let variant_tag = boxed.variant().tag();
-    let mut server = InferenceServer::new(boxed, 64 << 20)?;
+    let mut server =
+        InferenceServer::with_config(boxed, &scheduler_config(args, 64, 16)?)?;
     server.use_pallas = args.has("pallas");
     let gen = CorpusGen::new(vocab, 1);
     let probes = ProbeSet::generate(&gen, n.div_ceil(6), 7777);
@@ -270,7 +303,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 top_p,
                 ..Default::default()
             },
-        ));
+        ))?;
     }
     let responses = server.run_to_completion()?;
     let wall = t0.elapsed().as_secs_f64();
@@ -281,6 +314,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         responses.len(), toks, wall, toks as f64 / wall,
         server.stats.prefills, server.stats.decode_steps,
         server.stats.peak_cache_bytes / 1024
+    );
+    println!(
+        "  scheduler: {} blocks of {} tokens, peak used {}, mean \
+         occupancy {:.1}%, max concurrency {}, mean admission wait \
+         {:.2} ms",
+        server.stats.blocks_total,
+        server.queue.allocator.block_tokens,
+        server.stats.peak_blocks_used,
+        100.0 * server.stats.mean_block_occupancy(),
+        server.stats.max_concurrency,
+        1e3 * server.stats.mean_admission_wait_s(),
     );
     Ok(())
 }
@@ -303,6 +347,34 @@ fn cmd_bench(args: &Args) -> Result<()> {
         std::path::Path::new(&out),
     )?;
     println!("wrote {out}");
+
+    // Continuous-batching scheduler sweep: same trace, same byte budget,
+    // dense vs compressed -> the capacity numbers.
+    let defaults = elitekv::bench::serve::ServeBenchOpts::default();
+    let cb_opts = elitekv::bench::serve::ServeBenchOpts {
+        max_batch: args.usize_or("max-batch", defaults.max_batch)?,
+        max_seq: args.usize_or("cb-max-seq", defaults.max_seq)?,
+        scheduler: scheduler_config(
+            args,
+            defaults.scheduler.cache_budget_bytes >> 20,
+            defaults.scheduler.block_tokens,
+        )?,
+        trace: elitekv::coordinator::TraceOpts {
+            n_requests: args
+                .usize_or("cb-requests", defaults.trace.n_requests)?,
+            ..defaults.trace
+        },
+        seed: args.u64_or("seed", defaults.seed)?,
+    };
+    let cb_out = args.str_or("cb-out", "BENCH_continuous_batching.json");
+    let cb_variants = elitekv::bench::serve::default_variants(&cfg);
+    elitekv::bench::continuous_batching_bench(
+        &cfg,
+        &cb_variants,
+        &cb_opts,
+        std::path::Path::new(&cb_out),
+    )?;
+    println!("wrote {cb_out}");
     Ok(())
 }
 

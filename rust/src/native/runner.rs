@@ -75,19 +75,39 @@ impl Backend for NativeRunner {
         tokens: &[i32],
         true_len: &[i32],
     ) -> Result<(HostTensor, Vec<HostTensor>)> {
+        let fresh = vec![true; self.batch];
+        self.prefill_lanes(tokens, true_len, &fresh)
+    }
+
+    /// Native prefill computes ONLY the lanes the scheduler marked fresh:
+    /// one full forward per admitted request, zero work for lanes that
+    /// are idle or mid-decode (their slab rows stay zero and the caller's
+    /// splice never reads them).
+    fn prefill_lanes(
+        &self,
+        tokens: &[i32],
+        true_len: &[i32],
+        fresh: &[bool],
+    ) -> Result<(HostTensor, Vec<HostTensor>)> {
         let (b, s) = (self.batch, self.max_seq);
-        if tokens.len() != b * s || true_len.len() != b {
-            bail!("prefill expects tokens [{b},{s}] and true_len [{b}]");
+        if tokens.len() != b * s || true_len.len() != b || fresh.len() != b {
+            bail!(
+                "prefill expects tokens [{b},{s}], true_len [{b}], \
+                 fresh [{b}]"
+            );
         }
         for (lane, &len) in true_len.iter().enumerate() {
-            if len < 1 || len as usize > s {
+            if fresh[lane] && (len < 1 || len as usize > s) {
                 bail!("lane {lane}: true_len {len} outside [1, {s}]");
             }
         }
-        // Per-lane prefill in parallel: each lane fills a [L,1,S,...] slab
-        // set and reports its last-position logits.
-        let lane_results: Vec<Result<(Vec<f32>, Vec<HostTensor>)>> =
+        // Per-lane prefill in parallel: each fresh lane fills a
+        // [L,1,S,...] slab set and reports its last-position logits.
+        let lane_results: Vec<Result<Option<(Vec<f32>, Vec<HostTensor>)>>> =
             parallel_map(b, self.threads(), |lane| {
+                if !fresh[lane] {
+                    return Ok(None);
+                }
                 let len = true_len[lane] as usize;
                 let mut caches = self.model.empty_caches(1, s);
                 let mut sc = self.model.scratch();
@@ -108,13 +128,13 @@ impl Backend for NativeRunner {
                 }
                 let logits =
                     last.ok_or_else(|| anyhow::anyhow!("empty prompt"))?;
-                Ok((logits, caches))
+                Ok(Some((logits, caches)))
             });
 
         let mut logits = vec![0.0f32; b * self.model.cfg.vocab];
         let mut batch_caches = self.empty_caches()?;
         for (lane, res) in lane_results.into_iter().enumerate() {
-            let (row, lane_caches) = res?;
+            let Some((row, lane_caches)) = res? else { continue };
             let vocab = self.model.cfg.vocab;
             logits[lane * vocab..(lane + 1) * vocab].copy_from_slice(&row);
             for (dst, src) in batch_caches.iter_mut().zip(&lane_caches) {
@@ -309,6 +329,46 @@ mod tests {
         let (sum, count) = runner.eval_loss(&batch).unwrap();
         let nll = sum / count;
         assert!((nll - (512f64).ln()).abs() < 0.5, "init nll {nll}");
+    }
+
+    #[test]
+    fn prefill_lanes_skips_stale_lanes() {
+        let runner = native_tiny(Variant::EliteKv { r: 4, d_ckv: 64 }, Some(4));
+        let (b, s) = runner.serve_shape().unwrap();
+        assert_eq!(b, 2);
+        let mut tokens = vec![0i32; b * s];
+        for lane in 0..b {
+            for i in 0..5 {
+                tokens[lane * s + i] = (2 + lane + 2 * i) as i32;
+            }
+        }
+        let lens = vec![5i32; b];
+        let (full, _) = runner.prefill(&tokens, &lens).unwrap();
+        let (masked, caches) = runner
+            .prefill_lanes(&tokens, &lens, &[true, false])
+            .unwrap();
+        let vocab = runner.config().vocab;
+        // fresh lane identical to the full prefill...
+        assert_eq!(
+            &masked.as_f32().unwrap()[..vocab],
+            &full.as_f32().unwrap()[..vocab]
+        );
+        // ...skipped lane untouched: zero logits and zero cache rows
+        assert!(masked.as_f32().unwrap()[vocab..].iter().all(|&x| x == 0.0));
+        for slab in &caches {
+            let d = slab.as_f32().unwrap();
+            let shape = slab.shape();
+            let row: usize = shape[2..].iter().product();
+            for l in 0..shape[0] {
+                let off = (l * shape[1] + 1) * row;
+                assert!(d[off..off + row].iter().all(|&x| x == 0.0));
+            }
+        }
+        // stale-lane lengths are not validated (they may be stale too)
+        let (bad_len_ok, _) = runner
+            .prefill_lanes(&tokens, &[5, 0], &[true, false])
+            .unwrap();
+        assert_eq!(bad_len_ok.shape(), &[b, vocab]);
     }
 
     #[test]

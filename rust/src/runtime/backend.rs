@@ -45,6 +45,22 @@ pub trait Backend {
         true_len: &[i32],
     ) -> Result<(HostTensor, Vec<HostTensor>)>;
 
+    /// [`Backend::prefill`] with per-lane relevance: the scheduler sets
+    /// `fresh[i] == true` only for newly admitted lanes; the other lanes'
+    /// outputs are never read (their live cache rows are preserved by the
+    /// caller's splice). Backends that can skip stale lanes should — the
+    /// native runner does; the default recomputes everything, which the
+    /// static-shape PJRT artifacts do anyway.
+    fn prefill_lanes(
+        &self,
+        tokens: &[i32],
+        true_len: &[i32],
+        fresh: &[bool],
+    ) -> Result<(HostTensor, Vec<HostTensor>)> {
+        let _ = fresh;
+        self.prefill(tokens, true_len)
+    }
+
     /// One decode step over explicit caches. `pallas` requests the
     /// Pallas-lowered artifact where the backend has one (PJRT elitekv
     /// variants); other backends ignore it.
@@ -58,9 +74,12 @@ pub trait Backend {
 
     /// [`Backend::decode`] with per-lane liveness: lanes with
     /// `active[i] == false` carry a masked dummy whose output is never
-    /// read, so backends that can skip them cheaply should. The default
-    /// forwards to `decode` (the static-shape PJRT artifacts compute
-    /// every lane regardless); dead-lane logit rows may be garbage.
+    /// read, so backends that can skip them cheaply should override this
+    /// (the native runner does). The default forwards to `decode` with
+    /// dead lanes' token/pos sanitized to 0 — static-shape backends
+    /// (PJRT) compute every lane regardless, and stale values must never
+    /// index out of the embedding/cache gathers; dead-lane logit rows
+    /// may still be garbage.
     fn decode_active(
         &self,
         token: &[i32],
@@ -69,8 +88,17 @@ pub trait Backend {
         caches: Vec<HostTensor>,
         pallas: bool,
     ) -> Result<(HostTensor, Vec<HostTensor>)> {
-        let _ = active;
-        self.decode(token, pos, caches, pallas)
+        let token: Vec<i32> = token
+            .iter()
+            .zip(active)
+            .map(|(&t, &a)| if a { t } else { 0 })
+            .collect();
+        let pos: Vec<i32> = pos
+            .iter()
+            .zip(active)
+            .map(|(&p, &a)| if a { p } else { 0 })
+            .collect();
+        self.decode(&token, &pos, caches, pallas)
     }
 
     /// Zero-filled cache slabs matching this backend's serve shape.

@@ -252,7 +252,7 @@ fn server_completes_mixed_request_stream_natively() {
                 top_p: if i % 3 == 0 { 0.9 } else { 1.0 },
                 seed: i,
             },
-        ));
+        )).unwrap();
     }
     let responses = server.run_to_completion().unwrap();
     assert_eq!(responses.len(), n as usize);
@@ -329,7 +329,7 @@ fn server_greedy_matches_direct_decode_natively() {
         prompt.clone(),
         GenParams { max_new_tokens: steps, stop_token: None,
                     ..Default::default() },
-    ));
+    )).unwrap();
     let responses = server.run_to_completion().unwrap();
     assert_eq!(responses[0].tokens, expect);
 }
@@ -363,7 +363,7 @@ fn all_variants_serve_natively() {
                     stop_token: None,
                     ..Default::default()
                 },
-            ));
+            )).unwrap();
         }
         let responses = server.run_to_completion().unwrap();
         assert_eq!(responses.len(), 3, "variant {tag}");

@@ -195,7 +195,7 @@ fn server_completes_mixed_request_stream() {
                 seed: i,
                 ..Default::default()
             },
-        ));
+        )).unwrap();
     }
     let responses = server.run_to_completion().unwrap();
     assert_eq!(responses.len(), n as usize);
@@ -272,7 +272,7 @@ fn server_greedy_matches_direct_decode() {
         prompt.clone(),
         GenParams { max_new_tokens: steps, stop_token: None,
                     ..Default::default() },
-    ));
+    )).unwrap();
     let responses = server.run_to_completion().unwrap();
     assert_eq!(responses[0].tokens, expect);
 }

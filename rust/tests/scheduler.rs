@@ -1,0 +1,280 @@
+//! Scheduler edge cases (ISSUE 2): admission at an exactly-full pool,
+//! lane refill mid-decode, freed-block reuse across readmission,
+//! fork-heavy invariant stability, rejection of never-servable requests,
+//! and the determinism contract — a continuously batched run produces
+//! byte-identical outputs to sequential single-request runs.
+
+use elitekv::config::{ModelConfig, Variant};
+use elitekv::coordinator::{
+    AdmissionQueue, GenParams, InferenceServer, Request, SchedulerConfig,
+};
+use elitekv::kvcache::{BlockAllocator, CacheLayout, SlotManager};
+use elitekv::native::{NativeModel, NativeRunner};
+use elitekv::search::uniform_selection;
+
+fn req(id: u64, prompt_len: usize, max_new: usize) -> Request {
+    Request::new(
+        id,
+        vec![5; prompt_len],
+        GenParams {
+            max_new_tokens: max_new,
+            stop_token: None,
+            ..Default::default()
+        },
+    )
+}
+
+fn jlrd_server(
+    lanes: usize,
+    max_seq: usize,
+    budget: usize,
+    seed: u64,
+) -> InferenceServer {
+    let cfg = ModelConfig::tiny();
+    let sel = uniform_selection(&cfg, 4);
+    let model = NativeModel::init(
+        &cfg,
+        Variant::EliteKv { r: 4, d_ckv: 64 },
+        seed,
+        Some(&sel),
+    )
+    .unwrap();
+    let runner = NativeRunner::new(model, lanes, max_seq).unwrap();
+    InferenceServer::with_config(
+        Box::new(runner),
+        &SchedulerConfig::with_budget(budget),
+    )
+    .unwrap()
+}
+
+/// Admission when the pool is EXACTLY full: a request whose worst-case
+/// need equals the remaining free blocks is admitted; one more token of
+/// need is not.
+#[test]
+fn admission_at_exactly_full_pool() {
+    let cfg = ModelConfig::tiny();
+    let layout = CacheLayout::new(&cfg, Variant::Mha);
+    let mut q = AdmissionQueue::new(BlockAllocator::new(4, 16));
+    let mut slots = SlotManager::new(layout, 4, 256);
+
+    // 64 pool tokens: 32 + 32 fills the pool exactly...
+    q.push(req(0, 16, 16));
+    q.push(req(1, 16, 16));
+    let admitted = q.admit(&mut slots);
+    assert_eq!(admitted.len(), 2);
+    assert_eq!(q.allocator.free_blocks(), 0);
+    q.allocator.check_invariants().unwrap();
+
+    // ...so a third request (1 block of need) parks in the queue, lanes
+    // notwithstanding.
+    q.push(req(2, 4, 4));
+    assert!(q.admit(&mut slots).is_empty());
+    assert_eq!(q.len(), 1);
+
+    // one release later it fits
+    let (_r, slot, chain) = &admitted[0];
+    slots.free(*slot);
+    q.release(chain);
+    let third = q.admit(&mut slots);
+    assert_eq!(third.len(), 1);
+    q.allocator.check_invariants().unwrap();
+}
+
+/// Lanes recycle and refill from the queue mid-batch: with 2 lanes and 6
+/// staggered requests, every request completes, concurrency peaks at the
+/// lane count, and later requests are prefilled in later waves.
+#[test]
+fn lane_refill_mid_decode() {
+    let mut server = jlrd_server(2, 64, 8 << 20, 11);
+    for i in 0..6u64 {
+        // varied service times force lanes to free at different steps
+        server.submit(req(i, 4 + i as usize, 2 + (i as usize % 4))).unwrap();
+    }
+    let responses = server.run_to_completion().unwrap();
+    assert_eq!(responses.len(), 6);
+    for r in &responses {
+        assert_eq!(r.tokens.len(), 2 + (r.id as usize % 4));
+    }
+    let stats = &server.stats;
+    assert_eq!(stats.max_concurrency, 2, "both lanes were used at once");
+    assert!(
+        stats.prefills >= 3,
+        "6 requests through 2 lanes need >= 3 admission waves, saw {}",
+        stats.prefills
+    );
+    assert_eq!(stats.admission_waits, 6);
+    assert_eq!(stats.admission_wait_recent_s.len(), 6);
+    // later arrivals waited for a lane; the first two did not
+    assert_eq!(server.live_cache_bytes(), 0, "all lanes released");
+    server.queue.allocator.check_invariants().unwrap();
+    assert_eq!(
+        server.queue.allocator.free_blocks(),
+        server.queue.allocator.n_blocks(),
+        "all blocks returned to the pool"
+    );
+}
+
+/// Blocks released by a finished sequence are the ones a readmitted
+/// request receives (the pool recycles, it does not leak).
+#[test]
+fn release_then_readmit_reuses_freed_blocks() {
+    let cfg = ModelConfig::tiny();
+    let layout = CacheLayout::new(&cfg, Variant::Mha);
+    let mut q = AdmissionQueue::new(BlockAllocator::new(3, 16));
+    let mut slots = SlotManager::new(layout, 1, 256);
+
+    q.push(req(0, 24, 24)); // 3 blocks: whole pool
+    let first = q.admit(&mut slots);
+    assert_eq!(first.len(), 1);
+    let (_r, slot, chain) = &first[0];
+    let mut owned: Vec<u32> = chain.clone();
+    owned.sort_unstable();
+
+    // finish request 0
+    slots.free(*slot);
+    q.release(chain);
+    assert_eq!(q.allocator.free_blocks(), 3);
+
+    // request 1 must be served from the same physical blocks
+    q.push(req(1, 20, 20));
+    let second = q.admit(&mut slots);
+    assert_eq!(second.len(), 1);
+    let mut reused: Vec<u32> = second[0].2.clone();
+    reused.sort_unstable();
+    assert_eq!(reused, owned, "freed blocks must be recycled");
+    q.allocator.check_invariants().unwrap();
+}
+
+/// A fork-heavy workload (shared prefixes aliasing blocks, interleaved
+/// extends and releases) keeps the allocator invariants at every step.
+#[test]
+fn fork_heavy_workload_holds_invariants() {
+    let mut a = BlockAllocator::new(24, 4);
+    let root = a.alloc(16).unwrap(); // 4 blocks
+    let mut forks = Vec::new();
+    for i in 0..8 {
+        let mut f = a.fork(&root).unwrap();
+        // each fork grows a private tail
+        a.extend(&mut f, 16 + (i % 3) + 1).unwrap();
+        forks.push(f);
+        a.check_invariants().unwrap();
+    }
+    // shared prefix blocks are referenced by root + 8 forks
+    assert_eq!(a.refcount(root[0]), 9);
+    // release forks in an interleaved order
+    for f in forks.drain(..).rev() {
+        a.release(&f);
+        a.check_invariants().unwrap();
+    }
+    assert_eq!(a.refcount(root[0]), 1);
+    a.release(&root);
+    assert_eq!(a.free_blocks(), 24);
+    a.check_invariants().unwrap();
+}
+
+/// Requests that can NEVER be admitted are rejected at submit time
+/// instead of deadlocking `run_to_completion`.
+#[test]
+fn impossible_requests_rejected_at_submit() {
+    // window 32: a 40-token prompt can never fit
+    let mut server = jlrd_server(2, 32, 8 << 20, 3);
+    let err = server.submit(req(0, 40, 4)).unwrap_err().to_string();
+    assert!(err.contains("serving window"), "{err}");
+
+    // tiny pool (64 KiB = two 16-token blocks at the J-LRD layout's
+    // 2 KiB/token) under a roomier 64-token window: a worst-case need
+    // of 33 tokens (3 blocks) fits the window but can never fit the pool
+    let mut small = jlrd_server(2, 64, 64 << 10, 3);
+    assert_eq!(small.queue.allocator.n_blocks(), 2);
+    let err = small.submit(req(1, 20, 13)).unwrap_err().to_string();
+    assert!(err.contains("whole pool"), "{err}");
+
+    // an empty prompt is rejected up front too
+    let err = server.submit(req(3, 0, 4)).unwrap_err().to_string();
+    assert!(err.contains("empty prompt"), "{err}");
+
+    // a rejected submit leaves the engine idle, so completion is instant
+    assert!(small.run_to_completion().unwrap().is_empty());
+
+    // and a servable request still goes through on the same engine
+    server.submit(req(2, 8, 3)).unwrap();
+    let responses = server.run_to_completion().unwrap();
+    assert_eq!(responses.len(), 1);
+    assert_eq!(responses[0].tokens.len(), 3);
+}
+
+/// THE determinism pin: a continuously batched greedy run produces
+/// byte-identical token streams to running every request alone on an
+/// identical engine. Lane multiplexing, admission order, and mid-batch
+/// refills must not leak into the math.
+#[test]
+fn batched_run_matches_sequential_single_request_runs() {
+    let cfg = ModelConfig::tiny();
+    let mut gen = elitekv::data::CorpusGen::new(cfg.vocab, 17);
+    let prompts: Vec<Vec<u32>> =
+        (0..7).map(|i| gen.stream(5 + 3 * (i % 3))).collect();
+    let max_new = |i: usize| 3 + (i % 4);
+
+    // batched: 3 lanes, 7 requests -> forced mid-run refills
+    let mut server = jlrd_server(3, 64, 8 << 20, 99);
+    for (i, p) in prompts.iter().enumerate() {
+        server
+            .submit(Request::new(
+                i as u64,
+                p.clone(),
+                GenParams {
+                    max_new_tokens: max_new(i),
+                    stop_token: None,
+                    temperature: 0.0,
+                    ..Default::default()
+                },
+            ))
+            .unwrap();
+    }
+    let mut batched = server.run_to_completion().unwrap();
+    batched.sort_by_key(|r| r.id);
+    assert!(server.stats.prefills >= 2, "refill did not happen");
+
+    // sequential: a fresh identical engine per request
+    for (i, p) in prompts.iter().enumerate() {
+        let mut solo = jlrd_server(3, 64, 8 << 20, 99);
+        solo.submit(Request::new(
+            i as u64,
+            p.clone(),
+            GenParams {
+                max_new_tokens: max_new(i),
+                stop_token: None,
+                temperature: 0.0,
+                ..Default::default()
+            },
+        ))
+        .unwrap();
+        let solo_responses = solo.run_to_completion().unwrap();
+        assert_eq!(solo_responses.len(), 1);
+        assert_eq!(
+            batched[i].tokens, solo_responses[0].tokens,
+            "request {i}: batched vs sequential outputs diverge"
+        );
+    }
+}
+
+/// Occupancy accounting is consistent: peaks bounded by the pool, means
+/// bounded by peaks.
+#[test]
+fn occupancy_stats_are_consistent() {
+    let mut server = jlrd_server(4, 64, 1 << 20, 5);
+    for i in 0..8u64 {
+        server.submit(req(i, 10, 6)).unwrap();
+    }
+    server.run_to_completion().unwrap();
+    let s = &server.stats;
+    assert!(s.peak_blocks_used > 0);
+    assert!(s.peak_blocks_used <= s.blocks_total);
+    assert!(s.mean_block_occupancy() > 0.0);
+    assert!(
+        s.mean_block_occupancy()
+            <= s.peak_blocks_used as f64 / s.blocks_total as f64 + 1e-12
+    );
+    assert!(s.max_concurrency >= 1 && s.max_concurrency <= 4);
+    assert!(s.mean_admission_wait_s() >= 0.0);
+}
