@@ -1,0 +1,122 @@
+//! `cargo bench --bench native_kernels` — the kernel-layer microbench.
+//!
+//! Unlike the seed benches this target needs NO pjrt feature and no
+//! artifacts: it times the batched GEMM kernels (DESIGN.md S17) on the
+//! decode-step projection shapes of each model config, at several batch
+//! sizes, plus one end-to-end batched decode step per serving variant.
+//! CI compiles it with `cargo bench --no-run` so the kernel API cannot
+//! rot silently.
+
+use elitekv::bench::native::selection_for;
+use elitekv::bench::{bench_ns, BenchOpts};
+use elitekv::config::{ModelConfig, Variant};
+use elitekv::native::kernels::{sgemm, sgemm_nt};
+use elitekv::native::{LaneStep, NativeModel};
+use elitekv::tensor::Tensor;
+use elitekv::util::Pcg64;
+
+fn threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Time `c = a @ w` at the given shape and batch.
+fn bench_sgemm(name: &str, m: usize, k: usize, n: usize) {
+    let mut rng = Pcg64::seeded(0xbe);
+    let w = Tensor::randn(vec![k, n], &mut rng);
+    let a = Tensor::randn(vec![m, k], &mut rng).data;
+    let mut c = vec![0.0f32; m * n];
+    let t = threads();
+    bench_ns(
+        &format!("sgemm/{name}/m{m}k{k}n{n}"),
+        BenchOpts { warmup_iters: 2, iters: 15 },
+        || {
+            sgemm(&a, m, &w, &mut c, t);
+            std::hint::black_box(&c);
+        },
+    );
+}
+
+/// Time the tied-logits dot-product GEMM `c = a @ embed^T`.
+fn bench_logits(cfg: &ModelConfig, m: usize) {
+    let mut rng = Pcg64::seeded(0xef);
+    let embed = Tensor::randn(vec![cfg.vocab, cfg.d_model], &mut rng);
+    let a = Tensor::randn(vec![m, cfg.d_model], &mut rng).data;
+    let mut c = vec![0.0f32; m * cfg.vocab];
+    let t = threads();
+    bench_ns(
+        &format!("sgemm_nt/logits/{}/m{m}", cfg.name),
+        BenchOpts { warmup_iters: 2, iters: 15 },
+        || {
+            sgemm_nt(&a, m, cfg.d_model, &embed.data, cfg.vocab, &mut c, t);
+            std::hint::black_box(&c);
+        },
+    );
+}
+
+/// Time one full batched decode step for a serving variant.
+fn bench_decode_step(cfg: &ModelConfig, variant: Variant, lanes: usize) {
+    let tag = variant.tag();
+    let sel = selection_for(cfg, &variant);
+    let model = NativeModel::init(cfg, variant, 7, sel.as_ref())
+        .expect("bench model init");
+    let s = 64usize;
+    let mut caches = model.empty_caches(lanes, s);
+    let mut sc = model.batch_scratch(lanes);
+    // warm the caches to a mid-window position so attention has work
+    let t = threads();
+    for pos in 0..16 {
+        let steps: Vec<LaneStep> = (0..lanes)
+            .map(|lane| LaneStep {
+                lane,
+                pos,
+                token: (3 + lane + pos) as u32 % cfg.vocab as u32,
+                want_logits: false,
+            })
+            .collect();
+        model
+            .decode_batch(&mut sc, &mut caches, &steps, t)
+            .expect("warm decode");
+    }
+    let mut pos = 16usize;
+    bench_ns(
+        &format!("decode_step/{}/{tag}/b{lanes}", cfg.name),
+        BenchOpts { warmup_iters: 1, iters: 10 },
+        || {
+            let steps: Vec<LaneStep> = (0..lanes)
+                .map(|lane| LaneStep {
+                    lane,
+                    pos,
+                    token: (5 + lane) as u32,
+                    want_logits: true,
+                })
+                .collect();
+            let out = model
+                .decode_batch(&mut sc, &mut caches, &steps, t)
+                .expect("bench decode");
+            std::hint::black_box(&out);
+            pos = (pos + 1).min(s - 1);
+        },
+    );
+}
+
+fn main() {
+    for cfg in [ModelConfig::tiny(), ModelConfig::small()] {
+        println!("== {} ==", cfg.name);
+        let (d, nh, dh, ffn) = (cfg.d_model, cfg.n_heads, cfg.d_head, cfg.d_ffn);
+        for m in [1usize, 4, 8] {
+            bench_sgemm(&format!("{}/qkv", cfg.name), m, d, nh * dh);
+            bench_sgemm(&format!("{}/mlp", cfg.name), m, d, ffn);
+            bench_logits(&cfg, m);
+        }
+        let nc = cfg.n_chunks();
+        for variant in [
+            Variant::Mha,
+            Variant::EliteKv { r: nc / 4, d_ckv: d / 4 },
+        ] {
+            bench_decode_step(&cfg, variant, 4);
+        }
+    }
+    println!("native_kernels bench done");
+}

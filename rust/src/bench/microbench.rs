@@ -9,7 +9,10 @@ use crate::util::stats::Summary;
 /// Benchmark settings.
 #[derive(Clone, Copy, Debug)]
 pub struct BenchOpts {
+    /// Untimed iterations run first (cache warmup, allocator steady
+    /// state).
     pub warmup_iters: usize,
+    /// Timed iterations the summary is computed over.
     pub iters: usize,
 }
 
@@ -19,8 +22,15 @@ impl Default for BenchOpts {
     }
 }
 
-/// Measure `f` and report milliseconds per iteration.
-pub fn bench<F: FnMut()>(name: &str, opts: BenchOpts, mut f: F) -> Summary {
+/// One warmup + timed-sample loop; `scale` converts seconds into the
+/// reported unit (1e3 → ms, 1e9 → ns).
+fn bench_scaled<F: FnMut()>(
+    name: &str,
+    opts: BenchOpts,
+    scale: f64,
+    unit: &str,
+    mut f: F,
+) -> Summary {
     for _ in 0..opts.warmup_iters {
         f();
     }
@@ -28,12 +38,24 @@ pub fn bench<F: FnMut()>(name: &str, opts: BenchOpts, mut f: F) -> Summary {
         .map(|_| {
             let t0 = Instant::now();
             f();
-            t0.elapsed().as_secs_f64() * 1e3
+            t0.elapsed().as_secs_f64() * scale
         })
         .collect();
     let s = Summary::of(&samples);
-    println!("bench {name:<44} {}", s.fmt("ms"));
+    println!("bench {name:<44} {}", s.fmt(unit));
     s
+}
+
+/// Measure `f` and report milliseconds per iteration.
+pub fn bench<F: FnMut()>(name: &str, opts: BenchOpts, f: F) -> Summary {
+    bench_scaled(name, opts, 1e3, "ms", f)
+}
+
+/// Measure `f` and report nanoseconds per iteration — the kernel-level
+/// variant of [`bench`] for sub-millisecond work (a single GEMM call)
+/// where milliseconds lose all precision.
+pub fn bench_ns<F: FnMut()>(name: &str, opts: BenchOpts, f: F) -> Summary {
+    bench_scaled(name, opts, 1e9, "ns", f)
 }
 
 /// Measure throughput: `f` returns a work count per call (e.g. tokens).
@@ -71,6 +93,19 @@ mod tests {
         );
         assert!(s.mean >= 0.0);
         assert_eq!(s.n, 5);
+    }
+
+    #[test]
+    fn bench_ns_scales_milliseconds_up() {
+        let s = bench_ns(
+            "noop-ns",
+            BenchOpts { warmup_iters: 0, iters: 4 },
+            || {
+                std::hint::black_box((0..100).sum::<u64>());
+            },
+        );
+        assert!(s.mean >= 0.0);
+        assert_eq!(s.n, 4);
     }
 
     #[test]

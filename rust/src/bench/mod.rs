@@ -3,13 +3,15 @@
 //! * [`microbench`] / [`report`] — the measurement + output substrate
 //!   (criterion/serde stand-ins), always available.
 //! * [`native`] — the artifact-free native-decode benchmark: tokens/s,
-//!   per-step latency, and cache bytes/token across (r, d_ckv) sweep
-//!   points, emitted as machine-readable `BENCH_native_decode.json`.
+//!   per-step latency, ns/GEMM + GFLOP/s through the batched kernel
+//!   layer, and cache bytes/token across the dense / RoPElite / S-LRD /
+//!   J-LRD 50-25 % grid, emitted as machine-readable
+//!   `BENCH_native_decode.json`.
 //! * [`serve`] — the continuous-batching scheduler benchmark: one
 //!   deterministic arrival trace replayed per variant under the same
 //!   cache byte budget -> `BENCH_continuous_batching.json` (max
 //!   concurrency, admission latency, block-pool occupancy, throughput).
-//! * [`pipeline`] / [`experiments`] (feature `pjrt`) — the paper
+//! * `pipeline` / `experiments` (feature `pjrt`) — the paper
 //!   table/figure sweeps over the AOT artifacts; each writes
 //!   `results/<id>.json` and a markdown table, with pretraining/search
 //!   stages cached on disk so the sweep can resume.
@@ -24,7 +26,7 @@ pub mod experiments;
 #[cfg(feature = "pjrt")]
 pub mod pipeline;
 
-pub use microbench::{bench, bench_throughput, BenchOpts};
+pub use microbench::{bench, bench_ns, bench_throughput, BenchOpts};
 pub use native::native_decode_bench;
 pub use serve::continuous_batching_bench;
 #[cfg(feature = "pjrt")]

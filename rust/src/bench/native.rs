@@ -1,12 +1,16 @@
 //! Native decode benchmark: the artifact-free perf baseline that seeds
 //! the repo's CPU-hot-path trajectory.
 //!
-//! Sweeps the J-LRD compression grid — (r, d_ckv) points plus the dense
-//! MHA reference — on a randomly initialized model (decode cost does not
-//! depend on weight values), measuring:
+//! Sweeps the paper's serving grid — dense MHA, RoPElite (elite
+//! frequency selection alone), S-LRD (split latents), and J-LRD at the
+//! 50 % / 25 % cache points — on a randomly initialized model (decode
+//! cost does not depend on weight values), measuring:
 //!
-//! * tokens/s across a full continuous-decode run,
+//! * tokens/s across a full continuous-decode run through the batched
+//!   GEMM kernel path ([`crate::native::kernels`], DESIGN.md S17),
 //! * per-step latency (mean / p50 / p90 / p99 ms),
+//! * ns per GEMM call + achieved GFLOP/s over the variant's decode-step
+//!   projection shapes (the kernel-level roofline anchor),
 //! * cache bytes per token (the paper's unit of account).
 //!
 //! Emits machine-readable JSON (default `BENCH_native_decode.json`) so
@@ -17,20 +21,28 @@ use std::time::Instant;
 
 use anyhow::{ensure, Context, Result};
 
+use crate::bench::microbench::{bench_ns, BenchOpts};
 use crate::config::{ModelConfig, Variant};
+use crate::convert::EliteSelection;
 use crate::kvcache::CacheLayout;
+use crate::native::kernels::sgemm;
 use crate::native::{NativeModel, NativeRunner};
 use crate::runtime::Backend;
 use crate::search::uniform_selection;
+use crate::tensor::Tensor;
 use crate::util::stats::Summary;
-use crate::util::Json;
+use crate::util::{Json, Pcg64};
 
 /// Settings for one native decode sweep.
 #[derive(Clone, Debug)]
 pub struct NativeBenchOpts {
+    /// Decode lanes driven per step (all lanes stay live for the run).
     pub batch: usize,
+    /// Prompt tokens prefetched per lane before the timed decode.
     pub prompt_len: usize,
+    /// Timed decode steps per variant.
     pub decode_steps: usize,
+    /// Serving window the runner is built with.
     pub max_seq: usize,
 }
 
@@ -45,19 +57,106 @@ impl Default for NativeBenchOpts {
     }
 }
 
-/// Default sweep: the dense baseline plus the paper's 50/25/12.5 % points.
+/// Default sweep — the acceptance grid: dense baseline, RoPElite (elite
+/// frequency selection, full-size cache), S-LRD split latents, and the
+/// paper's J-LRD 50 % and 25 % cache points.
 pub fn default_sweep(cfg: &ModelConfig) -> Vec<Variant> {
     let nc = cfg.n_chunks();
+    let d = cfg.d_model;
     vec![
         Variant::Mha,
-        Variant::EliteKv { r: nc / 2, d_ckv: cfg.d_model / 2 },
-        Variant::EliteKv { r: nc / 4, d_ckv: cfg.d_model / 4 },
-        Variant::EliteKv { r: nc / 8, d_ckv: cfg.d_model / 8 },
+        Variant::RopeLite,
+        Variant::Slrd { r: nc / 4, d_ck: d / 8, d_cv: d / 8 },
+        Variant::EliteKv { r: nc / 2, d_ckv: d / 2 },
+        Variant::EliteKv { r: nc / 4, d_ckv: d / 4 },
     ]
 }
 
+/// The Uniform selection a variant needs to run (RoPElite has no
+/// intrinsic r, so it borrows the 25 %-grid default). Public so the
+/// kernel bench target measures exactly the models this sweep runs.
+pub fn selection_for(cfg: &ModelConfig, variant: &Variant) -> Option<EliteSelection> {
+    match variant {
+        Variant::EliteKv { r, .. } | Variant::Slrd { r, .. } => {
+            Some(uniform_selection(cfg, *r))
+        }
+        Variant::RopeLite => Some(uniform_selection(cfg, cfg.n_chunks() / 4)),
+        _ => None,
+    }
+}
+
+/// The (k, n) shapes of one decode step's per-layer projections for a
+/// variant — the GEMM work the kernel microbench times.
+fn decode_gemm_shapes(cfg: &ModelConfig, variant: &Variant) -> Vec<(usize, usize)> {
+    let (d, nh, dh) = (cfg.d_model, cfg.n_heads, cfg.d_head);
+    let mut shapes = vec![(d, nh * dh)]; // wq
+    match variant {
+        Variant::Mha | Variant::RopeLite => {
+            shapes.push((d, nh * dh)); // wk
+            shapes.push((d, nh * dh)); // wv
+        }
+        Variant::Gqa { n_kv_heads } => {
+            shapes.push((d, n_kv_heads * dh));
+            shapes.push((d, n_kv_heads * dh));
+        }
+        Variant::EliteKv { r, d_ckv } => {
+            shapes.push((d, nh * 2 * r)); // wk_e
+            shapes.push((d, *d_ckv)); // a_kv
+        }
+        Variant::Slrd { r, d_ck, d_cv } => {
+            shapes.push((d, nh * 2 * r)); // wk_e
+            shapes.push((d, *d_ck)); // a_k
+            shapes.push((d, *d_cv)); // a_v
+        }
+    }
+    shapes.push((nh * dh, d)); // wo
+    shapes.push((d, cfg.d_ffn)); // w1
+    shapes.push((d, cfg.d_ffn)); // w3
+    shapes.push((cfg.d_ffn, d)); // w2
+    shapes
+}
+
+/// Time one pass of a variant's decode-step projection GEMMs at batch
+/// `m`: returns (ns per GEMM call, achieved GFLOP/s).
+fn gemm_microbench(cfg: &ModelConfig, variant: &Variant, m: usize) -> (f64, f64) {
+    let shapes = decode_gemm_shapes(cfg, variant);
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let mut rng = Pcg64::seeded(0x6e77);
+    let weights: Vec<Tensor> = shapes
+        .iter()
+        .map(|&(k, n)| Tensor::randn(vec![k, n], &mut rng))
+        .collect();
+    let inputs: Vec<Vec<f32>> = shapes
+        .iter()
+        .map(|&(k, _)| Tensor::randn(vec![m, k], &mut rng).data)
+        .collect();
+    let mut outputs: Vec<Vec<f32>> = shapes
+        .iter()
+        .map(|&(_, n)| vec![0.0f32; m * n])
+        .collect();
+    let flops_per_pass: usize =
+        shapes.iter().map(|&(k, n)| 2 * m * k * n).sum();
+    let s = bench_ns(
+        &format!("native_gemm/{}/b{m}", variant.tag()),
+        BenchOpts { warmup_iters: 2, iters: 12 },
+        || {
+            for ((w, a), c) in
+                weights.iter().zip(&inputs).zip(outputs.iter_mut())
+            {
+                sgemm(a, m, w, c, threads);
+            }
+            std::hint::black_box(&outputs);
+        },
+    );
+    let ns_per_call = s.mean / shapes.len() as f64;
+    let gflops = flops_per_pass as f64 / s.mean; // flops per ns == GFLOP/s
+    (ns_per_call, gflops)
+}
+
 /// Run one variant: prefill `batch` prompts, then `decode_steps` timed
-/// steps; returns the measured record.
+/// steps through the batched kernel path; returns the measured record.
 fn bench_variant(
     cfg: &ModelConfig,
     variant: &Variant,
@@ -72,7 +171,7 @@ fn bench_variant(
         opts.decode_steps,
         opts.max_seq
     );
-    let sel = variant.r().map(|r| uniform_selection(cfg, r));
+    let sel = selection_for(cfg, variant);
     let model = NativeModel::init(cfg, variant.clone(), 0xbe7c, sel.as_ref())?;
     let runner = NativeRunner::new(model, opts.batch, opts.max_seq)?;
     let (b, s) = runner.serve_shape()?;
@@ -103,6 +202,7 @@ fn bench_variant(
     let wall = t_total.elapsed().as_secs_f64();
     let decoded = b * opts.decode_steps;
     let s_stats = Summary::of(&step_ms);
+    let (gemm_ns, gemm_gflops) = gemm_microbench(cfg, variant, opts.batch);
     let layout = CacheLayout::new(cfg, variant.clone());
     Ok(Json::obj(vec![
         ("variant", Json::str(&variant.tag())),
@@ -122,6 +222,8 @@ fn bench_variant(
         ("step_ms_p50", Json::num(s_stats.p50)),
         ("step_ms_p90", Json::num(s_stats.p90)),
         ("step_ms_p99", Json::num(s_stats.p99)),
+        ("gemm_ns_per_call", Json::num(gemm_ns)),
+        ("gemm_gflops", Json::num(gemm_gflops)),
         ("decode_steps", Json::num(opts.decode_steps as f64)),
         ("batch", Json::num(b as f64)),
     ]))
@@ -192,6 +294,8 @@ mod tests {
         for row in rows {
             assert!(row.req("tokens_per_s").as_f64().unwrap() > 0.0);
             assert!(row.req("cache_bytes_per_token").as_usize().unwrap() > 0);
+            assert!(row.req("gemm_ns_per_call").as_f64().unwrap() > 0.0);
+            assert!(row.req("gemm_gflops").as_f64().unwrap() > 0.0);
         }
         // compressed point caches fewer bytes than dense
         let dense = rows[0].req("cache_bytes_per_token").as_f64().unwrap();
@@ -200,5 +304,45 @@ mod tests {
         let text = std::fs::read_to_string(&dir).unwrap();
         assert!(Json::parse(&text).is_ok());
         std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    fn default_sweep_covers_the_acceptance_grid() {
+        // dense, elite (ropelite), S-LRD, and J-LRD at 50 % and 25 %.
+        let cfg = ModelConfig::tiny();
+        let tags: Vec<String> =
+            default_sweep(&cfg).iter().map(|v| v.tag()).collect();
+        assert_eq!(tags.len(), 5);
+        assert!(tags.contains(&"mha".to_string()));
+        assert!(tags.contains(&"ropelite".to_string()));
+        assert!(tags.iter().any(|t| t.starts_with("slrd_")));
+        let jlrd: Vec<_> =
+            tags.iter().filter(|t| t.starts_with("elitekv_")).collect();
+        assert_eq!(jlrd.len(), 2);
+        // every sweep variant can actually build (selection arity etc.)
+        for v in default_sweep(&cfg) {
+            let sel = selection_for(&cfg, &v);
+            NativeModel::init(&cfg, v, 1, sel.as_ref()).unwrap();
+        }
+    }
+
+    #[test]
+    fn gemm_shapes_match_variant_projections() {
+        let cfg = ModelConfig::tiny();
+        // mha: wq wk wv wo w1 w3 w2 = 7; elitekv: wq wk_e a_kv wo w1 w3 w2
+        assert_eq!(decode_gemm_shapes(&cfg, &Variant::Mha).len(), 7);
+        assert_eq!(
+            decode_gemm_shapes(&cfg, &Variant::EliteKv { r: 4, d_ckv: 64 })
+                .len(),
+            7
+        );
+        assert_eq!(
+            decode_gemm_shapes(
+                &cfg,
+                &Variant::Slrd { r: 4, d_ck: 32, d_cv: 32 }
+            )
+            .len(),
+            8
+        );
     }
 }

@@ -13,6 +13,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// Empty table with the given column headers.
     pub fn new(header: &[&str]) -> Table {
         Table {
             header: header.iter().map(|s| s.to_string()).collect(),
@@ -20,11 +21,13 @@ impl Table {
         }
     }
 
+    /// Append one row (must match the header width).
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.header.len());
         self.rows.push(cells);
     }
 
+    /// Render as a GitHub-flavored markdown table.
     pub fn to_markdown(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!("| {} |\n", self.header.join(" | ")));
@@ -38,6 +41,7 @@ impl Table {
         out
     }
 
+    /// Print the table under a markdown section heading.
     pub fn print(&self, title: &str) {
         println!("\n## {title}\n");
         println!("{}", self.to_markdown());
@@ -64,10 +68,12 @@ pub fn append_report(results: &Path, section: &str) -> Result<()> {
     Ok(())
 }
 
+/// Format a [0, 1] ratio as a percentage with two decimals.
 pub fn fmt_pct(x: f64) -> String {
     format!("{:.2}", 100.0 * x)
 }
 
+/// Format a float with the given precision (table cells).
 pub fn fmt_f(x: f64, prec: usize) -> String {
     format!("{x:.prec$}")
 }

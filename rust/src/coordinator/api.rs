@@ -5,6 +5,7 @@ use std::time::Instant;
 /// Sampling parameters.
 #[derive(Clone, Debug)]
 pub struct GenParams {
+    /// Maximum tokens to generate (must be at least 1 to be servable).
     pub max_new_tokens: usize,
     /// 0.0 = greedy; otherwise softmax temperature sampling.
     pub temperature: f32,
@@ -13,6 +14,7 @@ pub struct GenParams {
     pub top_p: f32,
     /// Stop token (defaults to the corpus EOS).
     pub stop_token: Option<u32>,
+    /// Per-request sampling seed (xor'd with the request id).
     pub seed: u64,
 }
 
@@ -31,13 +33,18 @@ impl Default for GenParams {
 /// One generation request.
 #[derive(Clone, Debug)]
 pub struct Request {
+    /// Caller-chosen request id, echoed in the [`Response`].
     pub id: u64,
+    /// Prompt token ids (must be non-empty and fit the serving window).
     pub prompt: Vec<u32>,
+    /// Sampling/stop parameters.
     pub params: GenParams,
+    /// Enqueue timestamp: TTFT/latency/admission waits measure from here.
     pub enqueued: Instant,
 }
 
 impl Request {
+    /// Build a request stamped with the current time.
     pub fn new(id: u64, prompt: Vec<u32>, params: GenParams) -> Request {
         Request { id, prompt, params, enqueued: Instant::now() }
     }
@@ -46,7 +53,9 @@ impl Request {
 /// Completed generation.
 #[derive(Clone, Debug)]
 pub struct Response {
+    /// The originating request's id.
     pub id: u64,
+    /// Generated token ids (empty on rejection).
     pub tokens: Vec<u32>,
     /// Seconds from enqueue to first generated token.
     pub ttft: f64,
@@ -56,9 +65,13 @@ pub struct Response {
     pub finish: FinishReason,
 }
 
+/// Terminal state of a request.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FinishReason {
+    /// The stop token was generated.
     Stop,
+    /// `max_new_tokens` was reached (or the generation was truncated by
+    /// mid-decode pool exhaustion under optimistic admission).
     Length,
     /// The scheduler refused the request outright (prompt outside the
     /// serving window, or worst-case cache need larger than the whole

@@ -16,24 +16,30 @@ use crate::kvcache::{BlockAllocator, SlotManager};
 /// FIFO queue with block-budget admission control.
 pub struct AdmissionQueue {
     queue: VecDeque<Request>,
+    /// The paged block pool admissions are charged against.
     pub allocator: BlockAllocator,
     /// worst-case generation length used for admission (prompt + max_new)
     pub conservative: bool,
 }
 
 impl AdmissionQueue {
+    /// Empty queue over a block pool (conservative admission by default).
     pub fn new(allocator: BlockAllocator) -> AdmissionQueue {
         AdmissionQueue { queue: VecDeque::new(), allocator, conservative: true }
     }
 
+    /// Enqueue at the FIFO tail (no admissibility check — see
+    /// [`AdmissionQueue::admissible`] for the submit-time gate).
     pub fn push(&mut self, req: Request) {
         self.queue.push_back(req);
     }
 
+    /// Requests currently waiting.
     pub fn len(&self) -> usize {
         self.queue.len()
     }
 
+    /// True when nothing is waiting.
     pub fn is_empty(&self) -> bool {
         self.queue.is_empty()
     }

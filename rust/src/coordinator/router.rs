@@ -126,6 +126,7 @@ impl Router {
         Router { workers, rx, submitted: 0, collected: 0 }
     }
 
+    /// Number of engine worker threads.
     pub fn n_workers(&self) -> usize {
         self.workers.len()
     }

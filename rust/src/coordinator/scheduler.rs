@@ -42,6 +42,7 @@ impl Default for SchedulerConfig {
 }
 
 impl SchedulerConfig {
+    /// Default policy with an explicit byte budget.
     pub fn with_budget(cache_budget_bytes: usize) -> SchedulerConfig {
         SchedulerConfig { cache_budget_bytes, ..Default::default() }
     }
@@ -51,17 +52,24 @@ impl SchedulerConfig {
 /// which it becomes visible to the scheduler.
 #[derive(Clone, Debug)]
 pub struct TraceItem {
+    /// Engine step at which the request arrives.
     pub arrive_step: usize,
+    /// The request itself (re-stamp `enqueued` at replay time).
     pub request: Request,
 }
 
 /// Shape of a generated [`ArrivalTrace`].
 #[derive(Clone, Debug)]
 pub struct TraceOpts {
+    /// Total requests in the trace.
     pub n_requests: usize,
+    /// Minimum prompt length (inclusive).
     pub prompt_min: usize,
+    /// Maximum prompt length (inclusive).
     pub prompt_max: usize,
+    /// Minimum generation length (inclusive).
     pub max_new_min: usize,
+    /// Maximum generation length (inclusive).
     pub max_new_max: usize,
     /// Mean engine steps between arrivals (0 = all arrive at step 0).
     pub inter_arrival_steps: usize,
@@ -85,10 +93,13 @@ impl Default for TraceOpts {
 /// variants are benchmarked against exactly the same request stream.
 #[derive(Clone, Debug)]
 pub struct ArrivalTrace {
+    /// Trace items in non-decreasing `arrive_step` order.
     pub items: Vec<TraceItem>,
 }
 
 impl ArrivalTrace {
+    /// Deterministically generate a trace: same (vocab, seed, opts) →
+    /// byte-identical workload.
     pub fn generate(vocab: usize, seed: u64, opts: &TraceOpts) -> ArrivalTrace {
         let mut gen = CorpusGen::new(vocab, seed);
         let mut rng = Pcg64::new(seed, 0x7ace);

@@ -36,10 +36,15 @@ struct Lane {
 /// Aggregate serving metrics.
 #[derive(Clone, Debug, Default)]
 pub struct ServerStats {
+    /// Requests fully served (stop token or length limit).
     pub completed: usize,
+    /// Total tokens generated across all completed requests.
     pub generated_tokens: usize,
+    /// Engine decode iterations executed.
     pub decode_steps: usize,
+    /// Prefill calls issued (one per admission wave, not per request).
     pub prefills: usize,
+    /// High-water mark of live cache bytes across busy lanes.
     pub peak_cache_bytes: usize,
     /// Peak number of simultaneously busy lanes (the capacity headline:
     /// under one byte budget, compressed variants admit more).
@@ -102,13 +107,18 @@ impl ServerStats {
 
 /// Single-worker inference engine over one [`Backend`].
 pub struct InferenceServer {
+    /// The serving engine all forward steps run through.
     pub backend: Box<dyn Backend>,
+    /// FIFO admission queue + the block pool it charges against.
     pub queue: AdmissionQueue,
     slots: SlotManager,
     lanes: Vec<Option<Lane>>,
     caches: Vec<HostTensor>,
     logits: Option<HostTensor>,
+    /// Request the Pallas-lowered decode artifact where the backend has
+    /// one (PJRT elitekv variants); other backends ignore it.
     pub use_pallas: bool,
+    /// Aggregate serving metrics, updated every engine iteration.
     pub stats: ServerStats,
     batch: usize,
     max_seq: usize,
@@ -185,10 +195,12 @@ impl InferenceServer {
         Ok(())
     }
 
+    /// True while requests are queued or lanes are mid-generation.
     pub fn busy(&self) -> bool {
         !self.queue.is_empty() || self.lanes.iter().any(|l| l.is_some())
     }
 
+    /// Cache bytes currently held by busy lanes.
     pub fn live_cache_bytes(&self) -> usize {
         self.slots.live_cache_bytes()
     }

@@ -17,6 +17,7 @@ pub type BlockId = u32;
 /// Fixed-size paged allocator over an abstract block pool.
 #[derive(Debug)]
 pub struct BlockAllocator {
+    /// Tokens per block (the paging granularity of admission control).
     pub block_tokens: usize,
     n_blocks: usize,
     free: Vec<BlockId>,
@@ -38,6 +39,7 @@ impl BlockAllocator {
         Self::new(n_blocks, block_tokens)
     }
 
+    /// Pool of `n_blocks` blocks of `block_tokens` tokens each.
     pub fn new(n_blocks: usize, block_tokens: usize) -> BlockAllocator {
         BlockAllocator {
             block_tokens,
@@ -48,10 +50,12 @@ impl BlockAllocator {
         }
     }
 
+    /// Total pool size in blocks.
     pub fn n_blocks(&self) -> usize {
         self.n_blocks
     }
 
+    /// Blocks currently free.
     pub fn free_blocks(&self) -> usize {
         self.free.len()
     }

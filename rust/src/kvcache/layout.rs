@@ -47,7 +47,9 @@ const ELEM: usize = 4;
 /// Geometry of one variant's decode cache.
 #[derive(Clone, Debug)]
 pub struct CacheLayout {
+    /// The architecture variant the geometry describes.
     pub variant: Variant,
+    /// Model depth (cache slabs stack over layers).
     pub n_layers: usize,
     /// f32 elements per token per layer (the paper's unit of account).
     pub elems_per_token_layer: usize,
@@ -56,6 +58,7 @@ pub struct CacheLayout {
 }
 
 impl CacheLayout {
+    /// Cache geometry of `variant` served on `cfg`.
     pub fn new(cfg: &ModelConfig, variant: Variant) -> CacheLayout {
         let elems = variant.cache_per_token(cfg);
         CacheLayout {

@@ -13,32 +13,44 @@ use crate::kvcache::layout::CacheLayout;
 /// State of one decode lane.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Slot {
+    /// Free for the next admission.
     Idle,
     /// Occupied by a request (id, current cached length).
-    Busy { request: u64, len: usize },
+    Busy {
+        /// Owning request id.
+        request: u64,
+        /// Tokens currently cached on this lane.
+        len: usize,
+    },
 }
 
 /// Lane assignment + occupancy accounting for one model's decode batch.
 #[derive(Debug)]
 pub struct SlotManager {
+    /// Per-variant cache geometry the byte accounting uses.
     pub layout: CacheLayout,
+    /// Serving window per lane (positions `0..max_seq`).
     pub max_seq: usize,
     slots: Vec<Slot>,
 }
 
 impl SlotManager {
+    /// `batch` idle lanes over a `max_seq` serving window.
     pub fn new(layout: CacheLayout, batch: usize, max_seq: usize) -> SlotManager {
         SlotManager { layout, max_seq, slots: vec![Slot::Idle; batch] }
     }
 
+    /// Number of decode lanes.
     pub fn batch(&self) -> usize {
         self.slots.len()
     }
 
+    /// All lane states, indexed by slot.
     pub fn slots(&self) -> &[Slot] {
         &self.slots
     }
 
+    /// Lanes currently idle (admission capacity).
     pub fn idle_count(&self) -> usize {
         self.slots.iter().filter(|s| **s == Slot::Idle).count()
     }
@@ -72,6 +84,7 @@ impl SlotManager {
         }
     }
 
+    /// Cached length of a lane (0 when idle).
     pub fn len_of(&self, slot: usize) -> usize {
         match &self.slots[slot] {
             Slot::Busy { len, .. } => *len,
@@ -79,6 +92,7 @@ impl SlotManager {
         }
     }
 
+    /// Owning request id of a lane, if busy.
     pub fn request_of(&self, slot: usize) -> Option<u64> {
         match &self.slots[slot] {
             Slot::Busy { request, .. } => Some(*request),
@@ -86,6 +100,7 @@ impl SlotManager {
         }
     }
 
+    /// Return a lane to the idle pool.
     pub fn free(&mut self, slot: usize) {
         self.slots[slot] = Slot::Idle;
     }

@@ -36,21 +36,40 @@
 //! * [`coordinator`] — serving: router, continuous batcher, scheduler
 //! * [`bench`]   — experiment harness (paper tables/figures + native perf)
 
+// Doc coverage is warned on crate-wide and enforced (the CI docs job
+// runs rustdoc with `-D warnings`) for the serving surface this repo is
+// growing: `kvcache`, `coordinator`, `runtime`, `native`, and `bench`.
+// The offline crate substitutes and pipeline-internal modules carry
+// targeted allows below — tracked doc debt on non-serving code, lifted
+// module by module as those layers get their own doc passes.
+#![warn(missing_docs)]
+
 pub mod bench;
+#[allow(missing_docs)]
 pub mod cli;
+#[allow(missing_docs)]
 pub mod config;
+#[allow(missing_docs)]
 pub mod convert;
 pub mod coordinator;
+#[allow(missing_docs)]
 pub mod data;
+#[allow(missing_docs)]
 pub mod io;
 pub mod kvcache;
+#[allow(missing_docs)]
 pub mod linalg;
 pub mod native;
+#[allow(missing_docs)]
 pub mod rope;
 pub mod runtime;
+#[allow(missing_docs)]
 pub mod search;
+#[allow(missing_docs)]
 pub mod tensor;
+#[allow(missing_docs)]
 pub mod train;
+#[allow(missing_docs)]
 pub mod util;
 
 /// Repository-relative default artifact directory.

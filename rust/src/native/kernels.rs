@@ -1,0 +1,384 @@
+//! Batched multi-threaded GEMM kernels — the native decode hot path
+//! (DESIGN.md S17).
+//!
+//! EliteKV's serving claim is that J-LRD restores *linearity* to the key
+//! path: the cached latent `c_kv` is consumed by plain absorbed matrix
+//! multiplies, never re-rotated per token. That only pays off in
+//! wall-clock terms if the decode step actually runs as matrix-matrix
+//! products over all active lanes instead of `lanes × matvec` scalar
+//! loops. This module is that kernel layer:
+//!
+//! * [`sgemm`] / [`sgemm_acc`] — `C = A·W` / `C += A·W` for a row-major
+//!   weight `W [k, n]` (the checkpoint layout, applied as `x @ W`), with
+//!   the accumulating variant fusing the residual add of the transformer
+//!   block into the GEMM epilogue.
+//! * [`sgemm_nt`] — `C = A·Bᵀ` for a row-major `B [n, k]`: the
+//!   dot-product form used for tied-embedding logits (`B` = the
+//!   embedding table) and for latent attention scores (`B` = the
+//!   `c_kv` cache slab, rows = cached positions).
+//! * [`sgemm_raw`] — the slice-level entry the model layer uses to run
+//!   per-head absorbed projections out of a larger weight block.
+//!
+//! # Blocking scheme
+//!
+//! The output is partitioned into **column panels** of [`PANEL_COLS`]
+//! columns. One panel is computed entirely by one worker: for each A row
+//! the kernel streams the weight rows `W[k, j0..j1]` in ascending `k`
+//! and accumulates a contiguous AXPY into an `m × PANEL_COLS` panel
+//! buffer that stays L1-resident (decode `m` is the active-lane count,
+//! so a panel is a few KiB). `W` — the large operand — is streamed
+//! exactly once per call, and batching `m` lanes amortizes that stream
+//! across the batch, which is precisely what turns weight-bound
+//! per-lane decode into a GEMM-bound batch step (S17 roofline table).
+//!
+//! # Threading
+//!
+//! Panels are distributed over [`crate::util::threadpool::parallel_map`]
+//! workers. [`gemm_threads`] caps the worker count by the call's FLOP
+//! volume so tiny GEMMs (one lane on the tiny config) never pay a
+//! thread-spawn for microseconds of math. Known headroom: above the
+//! threshold, `parallel_map` spawns fresh *scoped* threads per call
+//! (tens of µs each), which taxes every large GEMM by roughly 5–20 %;
+//! routing panels through a persistent worker pool — without breaking
+//! the determinism contract below — is the next local change in this
+//! layer, alongside SIMD microkernels (DESIGN.md S17).
+//!
+//! # Determinism contract
+//!
+//! Every output element is produced by exactly one panel worker, with a
+//! fixed `k`-ascending accumulation order that does not depend on the
+//! panel split or the worker count. Therefore `1 thread ≡ N threads`
+//! **bitwise**, and row `i` of the output depends only on row `i` of
+//! `A` — so a lane's decode result is independent of which other lanes
+//! are batched with it. Both properties are pinned by tests (this
+//! module and `rust/tests/batched_decode.rs`); the scheduler's
+//! batched ≡ sequential greedy-determinism test rides on the second.
+
+use crate::tensor::Tensor;
+use crate::util::threadpool::parallel_map;
+
+/// Output-column panel width: one worker computes one panel, and the
+/// `m × PANEL_COLS` panel buffer stays L1-resident for decode-sized `m`.
+pub const PANEL_COLS: usize = 64;
+
+/// FLOP volume that justifies one additional worker thread. Scoped
+/// threads cost tens of microseconds to spawn; a worker below this
+/// budget would spend longer spawning than multiplying.
+const FLOPS_PER_THREAD: usize = 1 << 18;
+
+/// Worker count for an `m × k × n` GEMM under a `max_threads` cap:
+/// one worker per `FLOPS_PER_THREAD` (256 KFLOP) of work, at least 1.
+/// The choice never affects results (see the module determinism
+/// contract) — only wall-clock.
+pub fn gemm_threads(m: usize, k: usize, n: usize, max_threads: usize) -> usize {
+    let flops = 2usize
+        .saturating_mul(m)
+        .saturating_mul(k)
+        .saturating_mul(n);
+    (flops / FLOPS_PER_THREAD).clamp(1, max_threads.max(1))
+}
+
+
+/// `c [m, n] = a [m, k] @ w [k, n]` for a row-major weight tensor;
+/// `c` is overwritten. Panel-parallel up to `max_threads` workers.
+pub fn sgemm(a: &[f32], m: usize, w: &Tensor, c: &mut [f32], max_threads: usize) {
+    debug_assert_eq!(w.rank(), 2);
+    sgemm_raw(a, m, w.shape[0], &w.data, w.shape[1], c, max_threads, false);
+}
+
+/// `c [m, n] += a [m, k] @ w [k, n]` — the fused-accumulate variant
+/// (residual adds: the epilogue adds the panel product into `c`).
+pub fn sgemm_acc(a: &[f32], m: usize, w: &Tensor, c: &mut [f32], max_threads: usize) {
+    debug_assert_eq!(w.rank(), 2);
+    sgemm_raw(a, m, w.shape[0], &w.data, w.shape[1], c, max_threads, true);
+}
+
+/// Slice-level GEMM: `c [m, n] = (+=) a [m, k] @ w [k, n]` with `w`
+/// row-major. This is the entry the model layer uses for per-head
+/// absorbed projections (a head's `[dn, d_c]` block of the transposed
+/// `B_k`, or its `[d_c, d_h]` block of the head-major `B_v`).
+///
+/// `m == 0` or `n == 0` is a no-op; `k == 0` zeroes (or, accumulating,
+/// leaves) `c`. Panel boundaries are a pure function of `n`, so results
+/// are bitwise-independent of `max_threads`.
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm_raw(
+    a: &[f32],
+    m: usize,
+    k: usize,
+    w: &[f32],
+    n: usize,
+    c: &mut [f32],
+    max_threads: usize,
+    accumulate: bool,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        if !accumulate {
+            c.fill(0.0);
+        }
+        return;
+    }
+    let panels = n.div_ceil(PANEL_COLS);
+    let threads = gemm_threads(m, k, n, max_threads).min(panels);
+    // One panel's product into `buf [m, pw]`, from zero, k-ascending —
+    // the one accumulation order every path below shares.
+    let fill_panel = |p: usize, buf: &mut [f32]| {
+        let j0 = p * PANEL_COLS;
+        let j1 = (j0 + PANEL_COLS).min(n);
+        let pw = j1 - j0;
+        for i in 0..m {
+            let a_row = &a[i * k..(i + 1) * k];
+            let c_row = &mut buf[i * pw..(i + 1) * pw];
+            for (kk, &av) in a_row.iter().enumerate() {
+                if av == 0.0 {
+                    continue; // exact: finite weights make 0·w a no-op
+                }
+                let w_row = &w[kk * n + j0..kk * n + j1];
+                for (cv, &wv) in c_row.iter_mut().zip(w_row) {
+                    *cv += av * wv;
+                }
+            }
+        }
+    };
+    let add_or_copy = |dst: &mut [f32], src: &[f32]| {
+        if accumulate {
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d += s;
+            }
+        } else {
+            dst.copy_from_slice(src);
+        }
+    };
+    if threads <= 1 {
+        // Serial fast path: one reusable panel buffer for the whole
+        // call (zero allocator churn on the single-lane decode path),
+        // same per-element sums as the parallel path.
+        let mut buf = vec![0.0f32; m * PANEL_COLS.min(n)];
+        for p in 0..panels {
+            let j0 = p * PANEL_COLS;
+            let j1 = (j0 + PANEL_COLS).min(n);
+            let pw = j1 - j0;
+            buf[..m * pw].fill(0.0);
+            fill_panel(p, &mut buf[..m * pw]);
+            for i in 0..m {
+                add_or_copy(
+                    &mut c[i * n + j0..i * n + j1],
+                    &buf[i * pw..(i + 1) * pw],
+                );
+            }
+        }
+    } else {
+        let run_panel = |p: usize| -> Vec<f32> {
+            let j0 = p * PANEL_COLS;
+            let j1 = (j0 + PANEL_COLS).min(n);
+            let mut buf = vec![0.0f32; m * (j1 - j0)];
+            fill_panel(p, &mut buf);
+            buf
+        };
+        for (p, buf) in parallel_map(panels, threads, run_panel)
+            .into_iter()
+            .enumerate()
+        {
+            let j0 = p * PANEL_COLS;
+            let j1 = (j0 + PANEL_COLS).min(n);
+            let pw = j1 - j0;
+            for i in 0..m {
+                add_or_copy(
+                    &mut c[i * n + j0..i * n + j1],
+                    &buf[i * pw..(i + 1) * pw],
+                );
+            }
+        }
+    }
+}
+
+/// `c [m, n] = a [m, k] @ bᵀ` for a row-major `b [n, k]`: every output
+/// element is a contiguous dot product of an `a` row with a `b` row.
+/// Used for tied-embedding logits (`b` = the `[vocab, d]` embedding)
+/// and for latent attention scores (`b` = a lane's `[len, d_c]` window
+/// of the `c_kv` cache slab). `c` is overwritten; panel-parallel over
+/// the `n` dimension with the same determinism contract as [`sgemm`].
+pub fn sgemm_nt(
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+    c: &mut [f32],
+    max_threads: usize,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let panels = n.div_ceil(PANEL_COLS);
+    let threads = gemm_threads(m, k, n, max_threads).min(panels);
+    if threads <= 1 {
+        // Serial fast path: dots land straight in `c`, zero allocation.
+        for i in 0..m {
+            let a_row = &a[i * k..(i + 1) * k];
+            for j in 0..n {
+                c[i * n + j] =
+                    crate::native::forward::dot(a_row, &b[j * k..(j + 1) * k]);
+            }
+        }
+        return;
+    }
+    let run_panel = |p: usize| -> Vec<f32> {
+        let j0 = p * PANEL_COLS;
+        let j1 = (j0 + PANEL_COLS).min(n);
+        let pw = j1 - j0;
+        let mut buf = vec![0.0f32; m * pw];
+        for i in 0..m {
+            let a_row = &a[i * k..(i + 1) * k];
+            for (jj, j) in (j0..j1).enumerate() {
+                buf[i * pw + jj] =
+                    crate::native::forward::dot(a_row, &b[j * k..(j + 1) * k]);
+            }
+        }
+        buf
+    };
+    for (p, buf) in parallel_map(panels, threads, run_panel)
+        .into_iter()
+        .enumerate()
+    {
+        let j0 = p * PANEL_COLS;
+        let j1 = (j0 + PANEL_COLS).min(n);
+        let pw = j1 - j0;
+        for i in 0..m {
+            c[i * n + j0..i * n + j1]
+                .copy_from_slice(&buf[i * pw..(i + 1) * pw]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::native::forward::matvec;
+    use crate::util::Pcg64;
+
+    fn randn(shape: Vec<usize>, seed: u64) -> Tensor {
+        let mut rng = Pcg64::seeded(seed);
+        Tensor::randn(shape, &mut rng)
+    }
+
+    #[test]
+    fn sgemm_matches_tensor_matmul_on_awkward_shapes() {
+        // Deliberately nothing is a multiple of PANEL_COLS: 3 full
+        // panels plus a 2-column tail.
+        let (m, k, n) = (3usize, 17usize, 3 * PANEL_COLS + 2);
+        let a = randn(vec![m, k], 1);
+        let w = randn(vec![k, n], 2);
+        let want = a.matmul(&w);
+        let mut c = vec![0.0f32; m * n];
+        sgemm(&a.data, m, &w, &mut c, 4);
+        for (x, y) in c.iter().zip(&want.data) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn single_row_degenerates_to_matvec_bitwise() {
+        let (k, n) = (31usize, 130usize);
+        let a = randn(vec![1, k], 3);
+        let w = randn(vec![k, n], 4);
+        let mut want = vec![0.0f32; n];
+        matvec(&a.data, &w, &mut want);
+        let mut c = vec![0.0f32; n];
+        sgemm(&a.data, 1, &w, &mut c, 8);
+        assert_eq!(c, want, "m=1 sgemm must equal the scalar matvec bitwise");
+    }
+
+    #[test]
+    fn zero_rows_is_a_noop() {
+        let w = randn(vec![5, 7], 5);
+        let mut c: Vec<f32> = Vec::new();
+        sgemm(&[], 0, &w, &mut c, 4);
+        assert!(c.is_empty());
+        let mut c2: Vec<f32> = Vec::new();
+        sgemm_nt(&[], 0, 5, &w.data, 7, &mut c2, 4);
+        assert!(c2.is_empty());
+    }
+
+    #[test]
+    fn accumulate_adds_on_top() {
+        let (m, k, n) = (2usize, 9usize, 11usize);
+        let a = randn(vec![m, k], 6);
+        let w = randn(vec![k, n], 7);
+        let mut base = vec![1.0f32; m * n];
+        sgemm_acc(&a.data, m, &w, &mut base, 2);
+        let mut fresh = vec![0.0f32; m * n];
+        sgemm(&a.data, m, &w, &mut fresh, 2);
+        for (acc, f) in base.iter().zip(&fresh) {
+            assert!((acc - (f + 1.0)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn thread_count_is_bitwise_invisible() {
+        // Big enough that gemm_threads picks several workers at
+        // max_threads = 8; panel boundaries are the same either way.
+        let (m, k, n) = (4usize, 512usize, 512usize);
+        assert!(gemm_threads(m, k, n, 8) > 1, "shape too small for the test");
+        let a = randn(vec![m, k], 8);
+        let w = randn(vec![k, n], 9);
+        let mut serial = vec![0.0f32; m * n];
+        sgemm(&a.data, m, &w, &mut serial, 1);
+        let mut parallel = vec![0.0f32; m * n];
+        sgemm(&a.data, m, &w, &mut parallel, 8);
+        assert_eq!(serial, parallel, "1 thread != N threads bitwise");
+
+        let mut nt_serial = vec![0.0f32; m * n];
+        let b = randn(vec![n, k], 10);
+        sgemm_nt(&a.data, m, k, &b.data, n, &mut nt_serial, 1);
+        let mut nt_parallel = vec![0.0f32; m * n];
+        sgemm_nt(&a.data, m, k, &b.data, n, &mut nt_parallel, 8);
+        assert_eq!(nt_serial, nt_parallel);
+    }
+
+    #[test]
+    fn rows_are_independent_of_the_batch() {
+        // Row i of C depends only on row i of A: batching lanes must not
+        // perturb a lane's result (the scheduler determinism contract).
+        let (k, n) = (33usize, 70usize);
+        let a = randn(vec![3, k], 11);
+        let w = randn(vec![k, n], 12);
+        let mut full = vec![0.0f32; 3 * n];
+        sgemm(&a.data, 3, &w, &mut full, 4);
+        for i in 0..3 {
+            let mut solo = vec![0.0f32; n];
+            sgemm(&a.data[i * k..(i + 1) * k], 1, &w, &mut solo, 4);
+            assert_eq!(&full[i * n..(i + 1) * n], &solo[..]);
+        }
+    }
+
+    #[test]
+    fn nt_matches_transposed_matmul() {
+        let (m, k, n) = (2usize, 13usize, PANEL_COLS + 5);
+        let a = randn(vec![m, k], 13);
+        let b = randn(vec![n, k], 14);
+        let want = a.matmul(&b.t());
+        let mut c = vec![0.0f32; m * n];
+        sgemm_nt(&a.data, m, k, &b.data, n, &mut c, 4);
+        for (x, y) in c.iter().zip(&want.data) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn gemm_threads_scales_with_work() {
+        assert_eq!(gemm_threads(1, 8, 8, 8), 1);
+        assert!(gemm_threads(8, 1024, 1024, 8) == 8);
+        assert_eq!(gemm_threads(8, 1024, 1024, 1), 1);
+        assert_eq!(gemm_threads(0, 0, 0, 0), 1);
+    }
+}

@@ -5,26 +5,38 @@
 //! Pieces:
 //! * [`specs`]   — the parameter inventory per architecture variant
 //!   (single source of truth mirrored from python/compile/model.py).
-//! * [`forward`] — the math kernels: RMSNorm, mat-vec, SwiGLU, the full
-//!   and RoPElite partial rotations, softmax.
+//! * [`forward`] — the scalar math kernels: RMSNorm, mat-vec, SwiGLU,
+//!   the full and RoPElite partial rotations, softmax. The scalar
+//!   `matvec` path is kept as the numeric *reference* the batched
+//!   kernels are tested against.
+//! * [`kernels`] — the batched multi-threaded GEMM layer (DESIGN.md
+//!   S17): cache-blocked column-panel `sgemm` (+ fused-accumulate and
+//!   `A·Bᵀ` variants), panel-parallel on the in-repo thread pool, with
+//!   a bitwise thread-count/batch-mates determinism contract. This is
+//!   the decode hot path.
 //! * [`model`]   — [`NativeModel`]: weights + variant extras + the cached
-//!   inverse-frequency tables, and the per-token incremental step that
-//!   reads/writes the compressed latent cache directly (J-LRD shares one
-//!   c_kv slab, S-LRD splits c_k / c_v — paper §3.2 / Fig 1 absorbed
+//!   inverse-frequency tables, the per-token incremental step, and the
+//!   batched step ([`NativeModel::decode_batch`]) that advances all
+//!   active lanes with one GEMM per projection per layer and reads the
+//!   compressed latent cache directly (J-LRD shares one `c_kv` slab,
+//!   S-LRD splits `c_k` / `c_v` — paper §3.2 / Fig 1 absorbed
 //!   attention).
 //! * [`runner`]  — [`NativeRunner`]: the [`crate::runtime::Backend`]
-//!   implementation driving prefill (threadpool-parallel across lanes)
-//!   and batched decode for the serving coordinator.
+//!   implementation driving batched prefill and batched decode for the
+//!   serving coordinator.
 //!
-//! Correctness contract: at full rank the J-LRD latent attention must
-//! match a materialized full-rank K/V path to f32 noise — pinned by
-//! `rust/tests/native_e2e.rs`.
+//! Correctness contracts: at full rank the J-LRD latent attention must
+//! match a materialized full-rank K/V path to f32 noise (pinned by
+//! `rust/tests/native_e2e.rs`), and the batched kernel path must match
+//! the scalar reference on every variant (pinned by
+//! `rust/tests/batched_decode.rs`).
 
 pub mod forward;
+pub mod kernels;
 pub mod model;
 pub mod runner;
 pub mod specs;
 
-pub use model::NativeModel;
+pub use model::{BatchScratch, LaneStep, NativeModel};
 pub use runner::NativeRunner;
 pub use specs::param_specs;

@@ -18,6 +18,7 @@ use crate::native::forward::{
     dot, matvec, matvec_acc, rmsnorm, rope_elite, rope_full, rope_masked,
     silu, softmax_inplace,
 };
+use crate::native::kernels::{sgemm, sgemm_acc, sgemm_nt, sgemm_raw};
 use crate::native::specs::param_specs;
 use crate::runtime::HostTensor;
 use crate::tensor::Tensor;
@@ -26,7 +27,9 @@ use crate::util::Pcg64;
 /// A natively executable model: config + variant + validated weights +
 /// precomputed rotation tables.
 pub struct NativeModel {
+    /// Static model geometry (layers, heads, widths, vocab).
     pub cfg: ModelConfig,
+    /// Serving architecture variant (dense / GQA / RoPElite / J-LRD / S-LRD).
     pub variant: Variant,
     weights: Checkpoint,
     /// Cached inverse-frequency ladder theta_i = base^(-i/nc), i in [0,nc).
@@ -38,6 +41,15 @@ pub struct NativeModel {
     /// Per-layer weight keys, prebuilt so the decode hot path never
     /// formats strings.
     layer_names: Vec<LayerNames>,
+    /// Per-layer `B_k` transposed to head-major `[nh*dn, d_c]` blocks
+    /// (rows `h·dn..(h+1)·dn` are head `h`'s absorbed-query projection),
+    /// so the batched path computes `q_lat = q_nope @ B_k` as contiguous
+    /// GEMMs. Empty for variants without latents.
+    absorbed_bk: Vec<Tensor>,
+    /// Per-layer `B_v` regrouped to head-major `[nh*d_c, dh]` blocks
+    /// (rows `h·d_c..(h+1)·d_c` lift head `h`'s attended latent back to
+    /// head width). Empty for variants without latents.
+    absorbed_bv: Vec<Tensor>,
 }
 
 /// The weight-map keys of one layer (fields unused by a variant stay as
@@ -83,6 +95,120 @@ impl LayerNames {
     }
 }
 
+/// Precompute the head-major GEMM layouts of the latent projections.
+///
+/// The checkpoint stores `b_k [d_c, nh*dn]` and `b_v [d_c, nh*dh]`
+/// (latent-major, matching the converter and the scalar reference
+/// path). The batched kernels want each head's block contiguous and
+/// k-major instead:
+///
+/// * `bk_t [nh*dn, d_c]` — plain transpose; rows `h·dn..(h+1)·dn` are
+///   head `h`'s `[dn, d_c]` absorbed-query weight, consumed as
+///   `q_lat_h = q_nope_h @ bk_t[h]` with `k = dn` ascending, the same
+///   accumulation order as the scalar dot loop.
+/// * `bv_h [nh*d_c, dh]` — head-major regrouping; rows
+///   `h·d_c..(h+1)·d_c` are head `h`'s `[d_c, dh]` lift, consumed as
+///   `o_h = o_lat_h @ bv_h[h]` with `k = d_c` ascending, again matching
+///   the scalar loop order exactly.
+///
+/// Memory cost: one extra copy of `b_k`/`b_v` per layer (latent-sized,
+/// a few percent of the checkpoint). Variants without latents return
+/// empty vectors.
+fn absorbed_projections(
+    cfg: &ModelConfig,
+    variant: &Variant,
+    weights: &Checkpoint,
+) -> (Vec<Tensor>, Vec<Tensor>) {
+    let (nh, dh) = (cfg.n_heads, cfg.d_head);
+    let d_cv = match variant {
+        Variant::EliteKv { d_ckv, .. } => *d_ckv,
+        Variant::Slrd { d_cv, .. } => *d_cv,
+        _ => return (Vec::new(), Vec::new()),
+    };
+    let mut bks = Vec::with_capacity(cfg.n_layers);
+    let mut bvs = Vec::with_capacity(cfg.n_layers);
+    for l in 0..cfg.n_layers {
+        let bk = weights
+            .get(&format!("l{l}.b_k"))
+            .expect("validated at construction");
+        let bv = weights
+            .get(&format!("l{l}.b_v"))
+            .expect("validated at construction");
+        // bk [d_ck, nh*dn] -> [nh*dn, d_ck]
+        bks.push(bk.t());
+        // bv [d_cv, nh*dh] -> head-major [nh*d_cv, dh]
+        let mut out = vec![0.0f32; nh * d_cv * dh];
+        for h in 0..nh {
+            for cc in 0..d_cv {
+                let src = &bv.data[cc * nh * dh + h * dh..cc * nh * dh + (h + 1) * dh];
+                out[(h * d_cv + cc) * dh..(h * d_cv + cc + 1) * dh]
+                    .copy_from_slice(src);
+            }
+        }
+        bvs.push(Tensor::new(vec![nh * d_cv, dh], out));
+    }
+    (bks, bvs)
+}
+
+/// One lane's dense attention (MHA / RoPElite / GQA): per query head,
+/// score this lane's rotated queries against its cached keys (grouped
+/// through `rep = nh / g` for GQA), softmax over `0..len`, and
+/// accumulate the probability-weighted cached values into `o [nh*dh]`.
+/// Shared by the scalar reference path and the batched path so the two
+/// dense inner loops cannot silently diverge. `scores` needs at least
+/// `len` slots; `kc`/`vc` are the full cache slabs with rows of width
+/// `kw` starting at `lane_base`.
+#[allow(clippy::too_many_arguments)]
+fn dense_attend_lane(
+    q: &[f32],
+    kc: &[f32],
+    vc: &[f32],
+    lane_base: usize,
+    len: usize,
+    kw: usize,
+    nh: usize,
+    dh: usize,
+    rep: usize,
+    scale: f32,
+    scores: &mut [f32],
+    o: &mut [f32],
+) {
+    for h in 0..nh {
+        let hk = h / rep; // kv head for this query head
+        let qh = &q[h * dh..(h + 1) * dh];
+        for (j, sj) in scores[..len].iter_mut().enumerate() {
+            let off = (lane_base + j) * kw + hk * dh;
+            *sj = dot(qh, &kc[off..off + dh]) * scale;
+        }
+        softmax_inplace(&mut scores[..len]);
+        let oh = &mut o[h * dh..(h + 1) * dh];
+        oh.fill(0.0);
+        for (j, &pj) in scores[..len].iter().enumerate() {
+            let off = (lane_base + j) * kw + hk * dh;
+            for (od, &vd) in oh.iter_mut().zip(&vc[off..off + dh]) {
+                *od += pj * vd;
+            }
+        }
+    }
+}
+
+/// One lane's contribution to a batched decode step: which lane, at
+/// which cache position, feeding which token, and whether the
+/// (vocab-wide, hence not free) logits row is wanted for it. Prefill
+/// steps only want logits at each lane's final prompt position; decode
+/// steps want them for every active lane.
+#[derive(Clone, Copy, Debug)]
+pub struct LaneStep {
+    /// Cache lane (row of the `[L, B, S, ...]` slabs) this step writes.
+    pub lane: usize,
+    /// Position written and attended up to (`0..=pos`).
+    pub pos: usize,
+    /// Input token id.
+    pub token: u32,
+    /// Compute the tied-embedding logits row for this lane.
+    pub want_logits: bool,
+}
+
 /// Reusable per-step buffers. Obtain one per lane/worker from
 /// [`NativeModel::scratch`] and reuse it across tokens — every field is
 /// fully overwritten before it is read, so no clearing is needed between
@@ -101,6 +227,45 @@ pub struct Scratch {
     scores: Vec<f32>,
     h1: Vec<f32>,
     h3: Vec<f32>,
+}
+
+/// Activation matrices for a batched decode step (the GEMM twin of
+/// [`Scratch`]): every matrix stacks the active lanes' rows, so the
+/// per-layer projections run as one GEMM each instead of `lanes ×
+/// matvec`. Obtain from [`NativeModel::batch_scratch`], reuse across
+/// steps; sized for the model and row capacity that created it.
+pub struct BatchScratch {
+    /// Row capacity (max lanes per batched call).
+    rows: usize,
+    /// Residual stream `[rows, d]`.
+    x: Vec<f32>,
+    /// Normed stream `[rows, d]`.
+    xn: Vec<f32>,
+    /// Queries `[rows, nh*dh]`.
+    q: Vec<f32>,
+    /// Keys (dense) or rotated elite keys (latent prefix) `[rows, <=nh*dh]`.
+    k: Vec<f32>,
+    /// Values `[rows, <=nh*dh]` (dense variants only).
+    v: Vec<f32>,
+    /// Key latent `c_k`/`c_kv` rows `[rows, d_ck]`.
+    lat: Vec<f32>,
+    /// Value latent `c_v` rows `[rows, d_cv]` (S-LRD only).
+    lat2: Vec<f32>,
+    /// One row's absorbed queries `[nh, d_ck]`.
+    q_lat: Vec<f32>,
+    /// One row's attended latents `[nh, d_cv]`.
+    o_lat: Vec<f32>,
+    /// One row's score matrix, grown on demand to `[nh, len]` (latent)
+    /// or `[len]` (dense, per head).
+    scores: Vec<f32>,
+    /// Attention outputs `[rows, nh*dh]`.
+    o: Vec<f32>,
+    /// SwiGLU up `[rows, d_ffn]`.
+    h1: Vec<f32>,
+    /// SwiGLU gate `[rows, d_ffn]`.
+    h3: Vec<f32>,
+    /// Gathered final-norm rows for the logits GEMM `[rows, d]`.
+    xl: Vec<f32>,
 }
 
 impl NativeModel {
@@ -144,6 +309,8 @@ impl NativeModel {
         };
         let ladder = crate::rope::ladder(cfg.rope_base, cfg.n_chunks());
         let layer_names = (0..cfg.n_layers).map(LayerNames::new).collect();
+        let (absorbed_bk, absorbed_bv) =
+            absorbed_projections(&cfg, &variant, &weights);
         Ok(NativeModel {
             cfg,
             variant,
@@ -152,6 +319,8 @@ impl NativeModel {
             theta_e,
             elite_mask,
             layer_names,
+            absorbed_bk,
+            absorbed_bv,
         })
     }
 
@@ -242,6 +411,222 @@ impl NativeModel {
             h1: vec![0.0; self.cfg.d_ffn],
             h3: vec![0.0; self.cfg.d_ffn],
         }
+    }
+
+    /// Batched working buffers for [`NativeModel::decode_batch`], sized
+    /// for up to `max_rows` lanes per call.
+    pub fn batch_scratch(&self, max_rows: usize) -> BatchScratch {
+        let (d, nh, dh) = (self.cfg.d_model, self.cfg.n_heads, self.cfg.d_head);
+        let (dc_k, dc_v) = match &self.variant {
+            Variant::EliteKv { d_ckv, .. } => (*d_ckv, *d_ckv),
+            Variant::Slrd { d_ck, d_cv, .. } => (*d_ck, *d_cv),
+            _ => (0, 0),
+        };
+        BatchScratch {
+            rows: max_rows,
+            x: vec![0.0; max_rows * d],
+            xn: vec![0.0; max_rows * d],
+            q: vec![0.0; max_rows * nh * dh],
+            k: vec![0.0; max_rows * nh * dh],
+            v: vec![0.0; max_rows * nh * dh],
+            lat: vec![0.0; max_rows * dc_k],
+            lat2: vec![0.0; max_rows * dc_v],
+            q_lat: vec![0.0; nh * dc_k],
+            o_lat: vec![0.0; nh * dc_v],
+            scores: Vec::new(),
+            o: vec![0.0; max_rows * nh * dh],
+            h1: vec![0.0; max_rows * self.cfg.d_ffn],
+            h3: vec![0.0; max_rows * self.cfg.d_ffn],
+            xl: vec![0.0; max_rows * d],
+        }
+    }
+
+    /// One batched incremental forward step: all `steps` lanes advance
+    /// together, with the QKV / attention-output / MLP projections and
+    /// the J-LRD absorbed latent reads running as single GEMMs per layer
+    /// (`rows × matvec` → one `sgemm`; see [`crate::native::kernels`]).
+    /// Returns one `Option<logits>` per step, `Some` exactly where
+    /// `want_logits` was set.
+    ///
+    /// Semantics per lane are identical to [`NativeModel::decode_token_with`]
+    /// — same cache writes, same attention window `0..=pos` — and each
+    /// output row depends only on that lane's input row and cache, so
+    /// batched decode is bitwise-deterministic regardless of which other
+    /// lanes share the call (the scheduler's batched ≡ sequential pin).
+    /// Lanes must be distinct; `max_threads` caps the kernel worker
+    /// count and never affects results.
+    pub fn decode_batch(
+        &self,
+        sc: &mut BatchScratch,
+        caches: &mut [HostTensor],
+        steps: &[LaneStep],
+        max_threads: usize,
+    ) -> Result<Vec<Option<Vec<f32>>>> {
+        let cfg = &self.cfg;
+        let (d, nh, dh) = (cfg.d_model, cfg.n_heads, cfg.d_head);
+        let rows = steps.len();
+        if rows == 0 {
+            return Ok(Vec::new());
+        }
+        let (dc_k, dc_v) = match &self.variant {
+            Variant::EliteKv { d_ckv, .. } => (*d_ckv, *d_ckv),
+            Variant::Slrd { d_ck, d_cv, .. } => (*d_ck, *d_cv),
+            _ => (0, 0),
+        };
+        // Pin every dimension the step will slice by, so a scratch from
+        // a different model (even one sharing d_model) errors here
+        // instead of panicking mid-layer.
+        ensure!(
+            rows <= sc.rows
+                && sc.x.len() == sc.rows * d
+                && sc.q.len() == sc.rows * nh * dh
+                && sc.h1.len() == sc.rows * cfg.d_ffn
+                && sc.lat.len() == sc.rows * dc_k
+                && sc.lat2.len() == sc.rows * dc_v
+                && sc.q_lat.len() == nh * dc_k,
+            "batch scratch built for {} rows of a different model, got {rows}",
+            sc.rows
+        );
+        ensure!(!caches.is_empty(), "no cache slabs");
+        let shape = caches[0].shape().to_vec();
+        ensure!(shape.len() >= 4 && shape[0] == cfg.n_layers,
+                "bad cache slab shape {shape:?}");
+        let (b, s) = (shape[1], shape[2]);
+        for st in steps {
+            ensure!(st.lane < b, "lane {} out of {b}", st.lane);
+            ensure!(st.pos < s, "pos {} out of serving window {s}", st.pos);
+            ensure!(
+                (st.token as usize) < cfg.vocab,
+                "token {} out of vocab",
+                st.token
+            );
+        }
+        for i in 0..rows {
+            for j in i + 1..rows {
+                ensure!(
+                    steps[i].lane != steps[j].lane,
+                    "duplicate lane {} in batched step",
+                    steps[i].lane
+                );
+            }
+        }
+        let max_len = steps.iter().map(|st| st.pos + 1).max().unwrap_or(1);
+        if sc.scores.len() < nh * max_len {
+            sc.scores.resize(nh * max_len, 0.0);
+        }
+        let scale = 1.0 / (dh as f64).sqrt() as f32;
+
+        let embed = self.w("embed");
+        for (ri, st) in steps.iter().enumerate() {
+            let t = st.token as usize;
+            sc.x[ri * d..(ri + 1) * d]
+                .copy_from_slice(&embed.data[t * d..(t + 1) * d]);
+        }
+
+        for l in 0..cfg.n_layers {
+            let n = &self.layer_names[l];
+            let g = &self.w(&n.attn_norm).data;
+            for ri in 0..rows {
+                rmsnorm(
+                    &sc.x[ri * d..(ri + 1) * d],
+                    g,
+                    &mut sc.xn[ri * d..(ri + 1) * d],
+                );
+            }
+            sgemm(
+                &sc.xn[..rows * d],
+                rows,
+                self.w(&n.wq),
+                &mut sc.q[..rows * nh * dh],
+                max_threads,
+            );
+            for (ri, st) in steps.iter().enumerate() {
+                self.rotate_q(
+                    l,
+                    st.pos,
+                    &mut sc.q[ri * nh * dh..(ri + 1) * nh * dh],
+                );
+            }
+            self.attend_batch(caches, l, steps, b, s, scale, sc, max_threads)?;
+            sgemm_acc(
+                &sc.o[..rows * nh * dh],
+                rows,
+                self.w(&n.wo),
+                &mut sc.x[..rows * d],
+                max_threads,
+            );
+
+            let g = &self.w(&n.ffn_norm).data;
+            for ri in 0..rows {
+                rmsnorm(
+                    &sc.x[ri * d..(ri + 1) * d],
+                    g,
+                    &mut sc.xn[ri * d..(ri + 1) * d],
+                );
+            }
+            let dffn = cfg.d_ffn;
+            sgemm(
+                &sc.xn[..rows * d],
+                rows,
+                self.w(&n.w1),
+                &mut sc.h1[..rows * dffn],
+                max_threads,
+            );
+            sgemm(
+                &sc.xn[..rows * d],
+                rows,
+                self.w(&n.w3),
+                &mut sc.h3[..rows * dffn],
+                max_threads,
+            );
+            for (a, &gate) in sc.h1[..rows * dffn]
+                .iter_mut()
+                .zip(&sc.h3[..rows * dffn])
+            {
+                *a = silu(*a) * gate;
+            }
+            sgemm_acc(
+                &sc.h1[..rows * dffn],
+                rows,
+                self.w(&n.w2),
+                &mut sc.x[..rows * d],
+                max_threads,
+            );
+        }
+
+        let want: Vec<usize> = steps
+            .iter()
+            .enumerate()
+            .filter(|(_, st)| st.want_logits)
+            .map(|(ri, _)| ri)
+            .collect();
+        let mut out: Vec<Option<Vec<f32>>> = vec![None; rows];
+        if want.is_empty() {
+            return Ok(out);
+        }
+        let g = &self.w("final_norm").data;
+        for (wi, &ri) in want.iter().enumerate() {
+            rmsnorm(
+                &sc.x[ri * d..(ri + 1) * d],
+                g,
+                &mut sc.xl[wi * d..(wi + 1) * d],
+            );
+        }
+        let mut logits = vec![0.0f32; want.len() * cfg.vocab];
+        sgemm_nt(
+            &sc.xl[..want.len() * d],
+            want.len(),
+            d,
+            &embed.data,
+            cfg.vocab,
+            &mut logits,
+            max_threads,
+        );
+        for (wi, &ri) in want.iter().enumerate() {
+            out[ri] =
+                Some(logits[wi * cfg.vocab..(wi + 1) * cfg.vocab].to_vec());
+        }
+        Ok(out)
     }
 
     /// One incremental forward step for `lane` at position `pos`: embeds
@@ -384,24 +769,20 @@ impl NativeModel {
                 let vc = caches[1].as_f32()?;
                 let lane_base = (l * b + lane) * s;
                 let rep = nh / g;
-                for h in 0..nh {
-                    let hk = h / rep; // kv head for this query head
-                    let qh = &sc.q[h * dh..(h + 1) * dh];
-                    for (j, sj) in sc.scores[..len].iter_mut().enumerate() {
-                        let off = (lane_base + j) * kw + hk * dh;
-                        *sj = dot(qh, &kc[off..off + dh]) * scale;
-                    }
-                    softmax_inplace(&mut sc.scores[..len]);
-                    let oh = &mut sc.o[h * dh..(h + 1) * dh];
-                    oh.fill(0.0);
-                    for (j, &pj) in sc.scores[..len].iter().enumerate() {
-                        let off = (lane_base + j) * kw + hk * dh;
-                        for (od, &vd) in oh.iter_mut().zip(&vc[off..off + dh])
-                        {
-                            *od += pj * vd;
-                        }
-                    }
-                }
+                dense_attend_lane(
+                    &sc.q,
+                    kc,
+                    vc,
+                    lane_base,
+                    len,
+                    kw,
+                    nh,
+                    dh,
+                    rep,
+                    scale,
+                    &mut sc.scores,
+                    &mut sc.o,
+                );
             }
             Variant::EliteKv { r, d_ckv } => {
                 let r2 = 2 * r;
@@ -542,6 +923,361 @@ impl NativeModel {
             }
         }
         Ok(())
+    }
+
+    /// Batched twin of [`NativeModel::attend_layer`]: produce this
+    /// position's K/V (or elite-key + latent) rows for every step with
+    /// one GEMM per projection, write them into the shared cache slabs,
+    /// then attend per lane. For the latent variants the per-lane
+    /// attention itself is two GEMMs over the shared `c_kv` slab —
+    /// scores `S[h, j] = q_lat_h · c_j` via [`sgemm_nt`] and
+    /// `o_lat = P · C` via [`sgemm_raw`] — plus the small rotated-elite
+    /// score correction; the head lift runs through the precomputed
+    /// head-major `B_v` blocks. Accumulation orders match the scalar
+    /// path element-for-element (see `absorbed_projections`), so both
+    /// paths agree to f32 exactness, not just tolerance.
+    #[allow(clippy::too_many_arguments)]
+    fn attend_batch(
+        &self,
+        caches: &mut [HostTensor],
+        l: usize,
+        steps: &[LaneStep],
+        b: usize,
+        s: usize,
+        scale: f32,
+        sc: &mut BatchScratch,
+        max_threads: usize,
+    ) -> Result<()> {
+        let cfg = &self.cfg;
+        let n = &self.layer_names[l];
+        let (d, nh, dh, nc) =
+            (cfg.d_model, cfg.n_heads, cfg.d_head, cfg.n_chunks());
+        let rows = steps.len();
+        match self.variant.clone() {
+            Variant::Mha | Variant::RopeLite | Variant::Gqa { .. } => {
+                let g = match &self.variant {
+                    Variant::Gqa { n_kv_heads } => *n_kv_heads,
+                    _ => nh,
+                };
+                let kw = g * dh;
+                sgemm(
+                    &sc.xn[..rows * d],
+                    rows,
+                    self.w(&n.wk),
+                    &mut sc.k[..rows * kw],
+                    max_threads,
+                );
+                sgemm(
+                    &sc.xn[..rows * d],
+                    rows,
+                    self.w(&n.wv),
+                    &mut sc.v[..rows * kw],
+                    max_threads,
+                );
+                for (ri, st) in steps.iter().enumerate() {
+                    let krow = &mut sc.k[ri * kw..(ri + 1) * kw];
+                    match &self.variant {
+                        Variant::RopeLite => {
+                            let m = &self.elite_mask
+                                [l * nh * nc..(l + 1) * nh * nc];
+                            rope_masked(krow, nh, dh, &self.ladder, m, st.pos);
+                        }
+                        _ => rope_full(krow, g, dh, &self.ladder, st.pos),
+                    }
+                }
+                {
+                    let kc = caches[0].as_f32_mut()?;
+                    for (ri, st) in steps.iter().enumerate() {
+                        let base = ((l * b + st.lane) * s + st.pos) * kw;
+                        kc[base..base + kw]
+                            .copy_from_slice(&sc.k[ri * kw..(ri + 1) * kw]);
+                    }
+                }
+                {
+                    let vc = caches[1].as_f32_mut()?;
+                    for (ri, st) in steps.iter().enumerate() {
+                        let base = ((l * b + st.lane) * s + st.pos) * kw;
+                        vc[base..base + kw]
+                            .copy_from_slice(&sc.v[ri * kw..(ri + 1) * kw]);
+                    }
+                }
+                let kc = caches[0].as_f32()?;
+                let vc = caches[1].as_f32()?;
+                let rep = nh / g;
+                for (ri, st) in steps.iter().enumerate() {
+                    let len = st.pos + 1;
+                    let lane_base = (l * b + st.lane) * s;
+                    dense_attend_lane(
+                        &sc.q[ri * nh * dh..(ri + 1) * nh * dh],
+                        kc,
+                        vc,
+                        lane_base,
+                        len,
+                        kw,
+                        nh,
+                        dh,
+                        rep,
+                        scale,
+                        &mut sc.scores,
+                        &mut sc.o[ri * nh * dh..(ri + 1) * nh * dh],
+                    );
+                }
+            }
+            Variant::EliteKv { r, d_ckv } => {
+                let r2 = 2 * r;
+                let kew = nh * r2;
+                sgemm(
+                    &sc.xn[..rows * d],
+                    rows,
+                    self.w(&n.wk_e),
+                    &mut sc.k[..rows * kew],
+                    max_threads,
+                );
+                let t = &self.theta_e[l * nh * r..(l + 1) * nh * r];
+                for (ri, st) in steps.iter().enumerate() {
+                    rope_elite(
+                        &mut sc.k[ri * kew..(ri + 1) * kew],
+                        nh,
+                        r2,
+                        r,
+                        t,
+                        st.pos,
+                    );
+                }
+                sgemm(
+                    &sc.xn[..rows * d],
+                    rows,
+                    self.w(&n.a_kv),
+                    &mut sc.lat[..rows * d_ckv],
+                    max_threads,
+                );
+                {
+                    let kec = caches[0].as_f32_mut()?;
+                    for (ri, st) in steps.iter().enumerate() {
+                        let base = ((l * b + st.lane) * s + st.pos) * kew;
+                        kec[base..base + kew]
+                            .copy_from_slice(&sc.k[ri * kew..(ri + 1) * kew]);
+                    }
+                }
+                {
+                    let ccm = caches[1].as_f32_mut()?;
+                    for (ri, st) in steps.iter().enumerate() {
+                        let base = ((l * b + st.lane) * s + st.pos) * d_ckv;
+                        ccm[base..base + d_ckv].copy_from_slice(
+                            &sc.lat[ri * d_ckv..(ri + 1) * d_ckv],
+                        );
+                    }
+                }
+                let kec = caches[0].as_f32()?;
+                let cc_all = caches[1].as_f32()?;
+                // J-LRD: the shared c_kv slab is both the key and the
+                // value latent.
+                self.latent_attend_rows(
+                    &mut *sc,
+                    steps,
+                    l,
+                    b,
+                    s,
+                    scale,
+                    kec,
+                    cc_all,
+                    cc_all,
+                    r,
+                    d_ckv,
+                    d_ckv,
+                    max_threads,
+                );
+            }
+            Variant::Slrd { r, d_ck, d_cv } => {
+                let r2 = 2 * r;
+                let kew = nh * r2;
+                sgemm(
+                    &sc.xn[..rows * d],
+                    rows,
+                    self.w(&n.wk_e),
+                    &mut sc.k[..rows * kew],
+                    max_threads,
+                );
+                let t = &self.theta_e[l * nh * r..(l + 1) * nh * r];
+                for (ri, st) in steps.iter().enumerate() {
+                    rope_elite(
+                        &mut sc.k[ri * kew..(ri + 1) * kew],
+                        nh,
+                        r2,
+                        r,
+                        t,
+                        st.pos,
+                    );
+                }
+                sgemm(
+                    &sc.xn[..rows * d],
+                    rows,
+                    self.w(&n.a_k),
+                    &mut sc.lat[..rows * d_ck],
+                    max_threads,
+                );
+                sgemm(
+                    &sc.xn[..rows * d],
+                    rows,
+                    self.w(&n.a_v),
+                    &mut sc.lat2[..rows * d_cv],
+                    max_threads,
+                );
+                {
+                    let kec = caches[0].as_f32_mut()?;
+                    for (ri, st) in steps.iter().enumerate() {
+                        let base = ((l * b + st.lane) * s + st.pos) * kew;
+                        kec[base..base + kew]
+                            .copy_from_slice(&sc.k[ri * kew..(ri + 1) * kew]);
+                    }
+                }
+                {
+                    let ckm = caches[1].as_f32_mut()?;
+                    for (ri, st) in steps.iter().enumerate() {
+                        let base = ((l * b + st.lane) * s + st.pos) * d_ck;
+                        ckm[base..base + d_ck].copy_from_slice(
+                            &sc.lat[ri * d_ck..(ri + 1) * d_ck],
+                        );
+                    }
+                }
+                {
+                    let cvm = caches[2].as_f32_mut()?;
+                    for (ri, st) in steps.iter().enumerate() {
+                        let base = ((l * b + st.lane) * s + st.pos) * d_cv;
+                        cvm[base..base + d_cv].copy_from_slice(
+                            &sc.lat2[ri * d_cv..(ri + 1) * d_cv],
+                        );
+                    }
+                }
+                let kec = caches[0].as_f32()?;
+                let ck_all = caches[1].as_f32()?;
+                let cv_all = caches[2].as_f32()?;
+                self.latent_attend_rows(
+                    &mut *sc,
+                    steps,
+                    l,
+                    b,
+                    s,
+                    scale,
+                    kec,
+                    ck_all,
+                    cv_all,
+                    r,
+                    d_ck,
+                    d_cv,
+                    max_threads,
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// The shared absorbed-latent attention of the batched J-LRD and
+    /// S-LRD arms: per step row, build the absorbed queries through the
+    /// transposed `B_k` blocks, score all heads against the key-latent
+    /// slab window with one [`sgemm_nt`], add the rotated-elite score
+    /// correction, softmax, attend the value-latent slab with one
+    /// [`sgemm_raw`], and lift each head through its head-major `B_v`
+    /// block into `sc.o`. For J-LRD `ck_all` and `cv_all` are the SAME
+    /// shared `c_kv` slab (and `d_ck == d_cv == d_ckv`); S-LRD passes
+    /// its split slabs.
+    #[allow(clippy::too_many_arguments)]
+    fn latent_attend_rows(
+        &self,
+        sc: &mut BatchScratch,
+        steps: &[LaneStep],
+        l: usize,
+        b: usize,
+        s: usize,
+        scale: f32,
+        kec: &[f32],
+        ck_all: &[f32],
+        cv_all: &[f32],
+        r: usize,
+        d_ck: usize,
+        d_cv: usize,
+        max_threads: usize,
+    ) {
+        let (nh, dh) = (self.cfg.n_heads, self.cfg.d_head);
+        let r2 = 2 * r;
+        let dn = dh - r2;
+        let kew = nh * r2;
+        let bk_t = &self.absorbed_bk[l];
+        let bv_t = &self.absorbed_bv[l];
+        for (ri, st) in steps.iter().enumerate() {
+            let len = st.pos + 1;
+            let lane_base = (l * b + st.lane) * s;
+            // absorbed queries q_lat [nh, d_ck], head by head through
+            // the transposed B_k blocks
+            for h in 0..nh {
+                let qn = &sc.q
+                    [ri * nh * dh + h * dh + r2..ri * nh * dh + (h + 1) * dh];
+                sgemm_raw(
+                    qn,
+                    1,
+                    dn,
+                    &bk_t.data[h * dn * d_ck..(h + 1) * dn * d_ck],
+                    d_ck,
+                    &mut sc.q_lat[h * d_ck..(h + 1) * d_ck],
+                    1,
+                    false,
+                );
+            }
+            // scores S [nh, len] = q_lat @ C_k^T over the key-latent
+            // slab window, one GEMM for all heads
+            let ck_win =
+                &ck_all[lane_base * d_ck..(lane_base + len) * d_ck];
+            sgemm_nt(
+                &sc.q_lat[..nh * d_ck],
+                nh,
+                d_ck,
+                ck_win,
+                len,
+                &mut sc.scores[..nh * len],
+                max_threads,
+            );
+            // rotated-elite correction + scale + softmax per head
+            for h in 0..nh {
+                let q_rot = &sc.q
+                    [ri * nh * dh + h * dh..ri * nh * dh + h * dh + r2];
+                let srow = &mut sc.scores[h * len..(h + 1) * len];
+                for (j, sj) in srow.iter_mut().enumerate() {
+                    let ke_off = (lane_base + j) * kew + h * r2;
+                    *sj =
+                        (dot(q_rot, &kec[ke_off..ke_off + r2]) + *sj) * scale;
+                }
+                softmax_inplace(srow);
+            }
+            // o_lat [nh, d_cv] = P @ C_v — attend the value latent
+            // directly, one GEMM for all heads
+            let cv_win =
+                &cv_all[lane_base * d_cv..(lane_base + len) * d_cv];
+            sgemm_raw(
+                &sc.scores[..nh * len],
+                nh,
+                len,
+                cv_win,
+                d_cv,
+                &mut sc.o_lat[..nh * d_cv],
+                max_threads,
+                false,
+            );
+            // lift each head through its head-major B_v block
+            for h in 0..nh {
+                let oh = &mut sc.o
+                    [ri * nh * dh + h * dh..ri * nh * dh + (h + 1) * dh];
+                sgemm_raw(
+                    &sc.o_lat[h * d_cv..(h + 1) * d_cv],
+                    1,
+                    d_cv,
+                    &bv_t.data[h * d_cv * dh..(h + 1) * d_cv * dh],
+                    dh,
+                    oh,
+                    1,
+                    false,
+                );
+            }
+        }
     }
 }
 

@@ -1,25 +1,42 @@
 //! [`NativeRunner`]: the native [`Backend`] — batched prefill/decode over
 //! the latent cache slabs, artifact-free.
 //!
-//! Prefill runs lanes in parallel on the in-repo thread pool (each lane
-//! builds a private `[L,1,S,...]` slab set, spliced into the batch slabs
-//! afterwards); decode steps the lanes sequentially in one pass. Both are
-//! exact incremental attention, so `decode(prefill(n)) == prefill(n+1)`
-//! holds to f32 noise (pinned in rust/tests/native_e2e.rs).
+//! Both prefill and decode run through the batched kernel path
+//! ([`NativeModel::decode_batch`]): all fresh/active lanes' hidden
+//! states stack into one activation matrix, so every projection (and
+//! the J-LRD absorbed latent attention) is a single panel-parallel GEMM
+//! per layer instead of `lanes × matvec` (DESIGN.md S17). Prefill walks
+//! positions step-synchronized across the fresh lanes; lanes whose
+//! prompt has ended simply drop out of later steps. Dead/stale lanes
+//! are never touched — their logit rows and cache rows stay zero.
+//!
+//! Both paths are exact incremental attention, so
+//! `decode(prefill(n)) == prefill(n+1)` holds to f32 noise (pinned in
+//! rust/tests/native_e2e.rs), and every lane's output is independent of
+//! which other lanes share the batch (pinned in
+//! rust/tests/batched_decode.rs and rust/tests/scheduler.rs).
+
+use std::sync::Mutex;
 
 use anyhow::{bail, ensure, Result};
 
 use crate::config::{ModelConfig, Variant};
 use crate::data::corpus::Batch;
-use crate::native::model::NativeModel;
+use crate::native::model::{BatchScratch, LaneStep, NativeModel};
 use crate::runtime::{Backend, HostTensor};
 use crate::util::threadpool::parallel_map;
 
 /// Native serving engine: a model bound to a fixed lane/window geometry.
 pub struct NativeRunner {
+    /// The underlying weights + batched/scalar forward steps.
     pub model: NativeModel,
     batch: usize,
     max_seq: usize,
+    /// Reusable batched-activation buffers shared by prefill and decode
+    /// (the [`Backend`] API is `&self`, so interior mutability; the lock
+    /// is held for one batched step at a time, which only serializes
+    /// concurrent forward calls on the *same* runner instance).
+    scratch: Mutex<BatchScratch>,
 }
 
 impl NativeRunner {
@@ -31,7 +48,8 @@ impl NativeRunner {
             "max_seq {max_seq} outside (1, {}]",
             model.cfg.max_seq
         );
-        Ok(NativeRunner { model, batch, max_seq })
+        let scratch = Mutex::new(model.batch_scratch(batch));
+        Ok(NativeRunner { model, batch, max_seq, scratch })
     }
 
     /// Default serving geometry mirroring the AOT artifacts (4 lanes,
@@ -41,11 +59,14 @@ impl NativeRunner {
         NativeRunner::new(model, 4, window)
     }
 
+    /// Worker-thread cap handed to the kernel layer; the kernels
+    /// themselves scale workers down to the FLOP volume of each GEMM
+    /// ([`crate::native::kernels::gemm_threads`]), so this is an upper
+    /// bound, not a demand.
     fn threads(&self) -> usize {
         std::thread::available_parallelism()
             .map(|n| n.get())
             .unwrap_or(1)
-            .min(self.batch)
     }
 }
 
@@ -79,10 +100,12 @@ impl Backend for NativeRunner {
         self.prefill_lanes(tokens, true_len, &fresh)
     }
 
-    /// Native prefill computes ONLY the lanes the scheduler marked fresh:
-    /// one full forward per admitted request, zero work for lanes that
-    /// are idle or mid-decode (their slab rows stay zero and the caller's
-    /// splice never reads them).
+    /// Native prefill computes ONLY the lanes the scheduler marked fresh,
+    /// and computes them *together*: at every prompt position the live
+    /// lanes' rows stack into one batched step, so the projections run
+    /// as GEMMs across the whole admission wave instead of lane-by-lane.
+    /// Non-fresh lanes cost zero work — their slab rows and logit rows
+    /// stay zero and the caller's splice never reads them.
     fn prefill_lanes(
         &self,
         tokens: &[i32],
@@ -96,55 +119,57 @@ impl Backend for NativeRunner {
                  fresh [{b}]"
             );
         }
+        let mut max_len = 0usize;
+        let mut n_fresh = 0usize;
         for (lane, &len) in true_len.iter().enumerate() {
-            if fresh[lane] && (len < 1 || len as usize > s) {
+            if !fresh[lane] {
+                continue;
+            }
+            if len < 1 || len as usize > s {
                 bail!("lane {lane}: true_len {len} outside [1, {s}]");
             }
+            for i in 0..len as usize {
+                if tokens[lane * s + i] < 0 {
+                    bail!("lane {lane}: negative token at {i}");
+                }
+            }
+            max_len = max_len.max(len as usize);
+            n_fresh += 1;
         }
-        // Per-lane prefill in parallel: each fresh lane fills a
-        // [L,1,S,...] slab set and reports its last-position logits.
-        let lane_results: Vec<Result<Option<(Vec<f32>, Vec<HostTensor>)>>> =
-            parallel_map(b, self.threads(), |lane| {
-                if !fresh[lane] {
-                    return Ok(None);
-                }
+        let vocab = self.model.cfg.vocab;
+        let mut logits = vec![0.0f32; b * vocab];
+        let mut caches = self.empty_caches()?;
+        if n_fresh == 0 {
+            return Ok((HostTensor::F32(logits, vec![b, vocab]), caches));
+        }
+        let threads = self.threads();
+        let mut sc = self.scratch.lock().unwrap();
+        let mut steps = Vec::with_capacity(n_fresh);
+        for i in 0..max_len {
+            steps.clear();
+            for lane in 0..b {
                 let len = true_len[lane] as usize;
-                let mut caches = self.model.empty_caches(1, s);
-                let mut sc = self.model.scratch();
-                let mut last = None;
-                for i in 0..len {
-                    let tok = tokens[lane * s + i];
-                    if tok < 0 {
-                        bail!("lane {lane}: negative token at {i}");
-                    }
-                    last = self.model.decode_token_with(
-                        &mut sc,
-                        &mut caches,
-                        0,
-                        i,
-                        tok as u32,
-                        i + 1 == len,
-                    )?;
+                if !fresh[lane] || i >= len {
+                    continue;
                 }
-                let logits =
-                    last.ok_or_else(|| anyhow::anyhow!("empty prompt"))?;
-                Ok(Some((logits, caches)))
-            });
-
-        let mut logits = vec![0.0f32; b * self.model.cfg.vocab];
-        let mut batch_caches = self.empty_caches()?;
-        for (lane, res) in lane_results.into_iter().enumerate() {
-            let Some((row, lane_caches)) = res? else { continue };
-            let vocab = self.model.cfg.vocab;
-            logits[lane * vocab..(lane + 1) * vocab].copy_from_slice(&row);
-            for (dst, src) in batch_caches.iter_mut().zip(&lane_caches) {
-                splice_lane_from_single(dst, src, lane)?;
+                steps.push(LaneStep {
+                    lane,
+                    pos: i,
+                    token: tokens[lane * s + i] as u32,
+                    want_logits: i + 1 == len,
+                });
+            }
+            let rows = self
+                .model
+                .decode_batch(&mut sc, &mut caches, &steps, threads)?;
+            for (st, row) in steps.iter().zip(rows) {
+                if let Some(r) = row {
+                    logits[st.lane * vocab..(st.lane + 1) * vocab]
+                        .copy_from_slice(&r);
+                }
             }
         }
-        Ok((
-            HostTensor::F32(logits, vec![b, self.model.cfg.vocab]),
-            batch_caches,
-        ))
+        Ok((HostTensor::F32(logits, vec![b, vocab]), caches))
     }
 
     fn decode(
@@ -158,8 +183,12 @@ impl Backend for NativeRunner {
         self.decode_active(token, pos, &active, caches, pallas)
     }
 
-    /// Native decode skips dead lanes entirely — one full forward per
-    /// *live* request per step (their logit rows stay zero, never read).
+    /// Native decode skips dead lanes entirely and advances the live
+    /// lanes as ONE batched kernel step: their hidden states stack into
+    /// a single activation matrix, so QKV / attention-output / MLP
+    /// projections and the absorbed latent attention run as one GEMM per
+    /// layer instead of `lanes × matvec`. Dead lanes' logit rows stay
+    /// zero (never read); zero live lanes is a cheap no-op.
     fn decode_active(
         &self,
         token: &[i32],
@@ -175,25 +204,33 @@ impl Backend for NativeRunner {
         let mut caches = caches;
         let vocab = self.model.cfg.vocab;
         let mut logits = vec![0.0f32; b * vocab];
-        let mut sc = self.model.scratch();
+        let mut steps = Vec::with_capacity(b);
         for lane in 0..b {
             if !active[lane] {
                 continue;
             }
             ensure!(pos[lane] >= 0, "negative position on lane {lane}");
             ensure!(token[lane] >= 0, "negative token on lane {lane}");
-            let row = self
-                .model
-                .decode_token_with(
-                    &mut sc,
-                    &mut caches,
-                    lane,
-                    pos[lane] as usize,
-                    token[lane] as u32,
-                    true,
-                )?
-                .expect("logits requested");
-            logits[lane * vocab..(lane + 1) * vocab].copy_from_slice(&row);
+            steps.push(LaneStep {
+                lane,
+                pos: pos[lane] as usize,
+                token: token[lane] as u32,
+                want_logits: true,
+            });
+        }
+        if !steps.is_empty() {
+            let mut sc = self.scratch.lock().unwrap();
+            let rows = self.model.decode_batch(
+                &mut sc,
+                &mut caches,
+                &steps,
+                self.threads(),
+            )?;
+            for (st, row) in steps.iter().zip(rows) {
+                let row = row.expect("logits requested");
+                logits[st.lane * vocab..(st.lane + 1) * vocab]
+                    .copy_from_slice(&row);
+            }
         }
         Ok((HostTensor::F32(logits, vec![b, vocab]), caches))
     }
@@ -257,35 +294,6 @@ impl Backend for NativeRunner {
         }
         Ok((sum, count))
     }
-}
-
-/// Copy layer rows from a single-lane slab `[L,1,S,...]` into lane `lane`
-/// of a batch slab `[L,B,S,...]`.
-fn splice_lane_from_single(
-    dst: &mut HostTensor,
-    src: &HostTensor,
-    lane: usize,
-) -> Result<()> {
-    let dshape = dst.shape().to_vec();
-    let sshape = src.shape().to_vec();
-    ensure!(
-        dshape.len() == sshape.len()
-            && dshape[0] == sshape[0]
-            && sshape[1] == 1
-            && dshape[2..] == sshape[2..],
-        "slab splice mismatch: {dshape:?} vs {sshape:?}"
-    );
-    let (layers, b) = (dshape[0], dshape[1]);
-    ensure!(lane < b, "lane {lane} out of {b}");
-    let row: usize = dshape[2..].iter().product();
-    let d = dst.as_f32_mut()?;
-    let s = src.as_f32()?;
-    for l in 0..layers {
-        let doff = (l * b + lane) * row;
-        let soff = l * row;
-        d[doff..doff + row].copy_from_slice(&s[soff..soff + row]);
-    }
-    Ok(())
 }
 
 #[cfg(test)]

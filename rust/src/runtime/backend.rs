@@ -8,7 +8,7 @@
 //! * [`crate::native::NativeRunner`] — the pure-Rust decode path. Always
 //!   available; needs no Python, no HLO artifacts, no XLA toolchain.
 //! * `PjrtBackend` / `PjrtView` (feature `pjrt`) — the AOT path wrapping
-//!   [`crate::runtime::ModelRunner`], executing HLO-text artifacts
+//!   `crate::runtime::ModelRunner`, executing HLO-text artifacts
 //!   through the PJRT CPU client.
 //!
 //! The cache contract is shared: `prefill` returns per-variant cache
@@ -27,8 +27,11 @@ pub trait Backend {
     /// Short backend identifier ("native" / "pjrt") for logs and reports.
     fn kind(&self) -> &'static str;
 
+    /// The model geometry this engine serves.
     fn config(&self) -> &ModelConfig;
 
+    /// The architecture variant this engine serves (determines the
+    /// cache slab layout and the per-token rotation scheme).
     fn variant(&self) -> &Variant;
 
     /// (decode lanes, serving window) of this engine instance.

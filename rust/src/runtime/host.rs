@@ -11,33 +11,41 @@ use crate::io::manifest::Dtype;
 /// A host-side tensor crossing the backend boundary.
 #[derive(Clone, Debug)]
 pub enum HostTensor {
+    /// Dense f32 payload + shape (row-major).
     F32(Vec<f32>, Vec<usize>),
+    /// Dense i32 payload + shape (row-major; token/position inputs).
     I32(Vec<i32>, Vec<usize>),
 }
 
 impl HostTensor {
+    /// Rank-0 f32 tensor.
     pub fn scalar_f32(x: f32) -> HostTensor {
         HostTensor::F32(vec![x], vec![])
     }
 
+    /// Rank-0 i32 tensor.
     pub fn scalar_i32(x: i32) -> HostTensor {
         HostTensor::I32(vec![x], vec![])
     }
 
+    /// Zero-filled f32 tensor of the given shape.
     pub fn zeros(shape: &[usize]) -> HostTensor {
         HostTensor::F32(vec![0.0; shape.iter().product()], shape.to_vec())
     }
 
+    /// The tensor's shape (row-major dims).
     pub fn shape(&self) -> &[usize] {
         match self {
             HostTensor::F32(_, s) | HostTensor::I32(_, s) => s,
         }
     }
 
+    /// Total element count.
     pub fn numel(&self) -> usize {
         self.shape().iter().product()
     }
 
+    /// Element dtype tag (manifest interchange).
     pub fn dtype(&self) -> Dtype {
         match self {
             HostTensor::F32(..) => Dtype::F32,
@@ -45,6 +53,7 @@ impl HostTensor {
         }
     }
 
+    /// Borrow the f32 payload; errors on an i32 tensor.
     pub fn as_f32(&self) -> Result<&[f32]> {
         match self {
             HostTensor::F32(d, _) => Ok(d),
@@ -60,6 +69,7 @@ impl HostTensor {
         }
     }
 
+    /// Borrow the i32 payload; errors on an f32 tensor.
     pub fn as_i32(&self) -> Result<&[i32]> {
         match self {
             HostTensor::I32(d, _) => Ok(d),
@@ -76,11 +86,12 @@ impl HostTensor {
         Ok(d[0])
     }
 
-    /// Convert to/from the offline `tensor::Tensor` (f32 only).
+    /// Convert from the offline `tensor::Tensor` (f32 only).
     pub fn from_tensor(t: &crate::tensor::Tensor) -> HostTensor {
         HostTensor::F32(t.data.clone(), t.shape.clone())
     }
 
+    /// Convert into the offline `tensor::Tensor` (f32 only).
     pub fn to_tensor(&self) -> Result<crate::tensor::Tensor> {
         Ok(crate::tensor::Tensor::new(
             self.shape().to_vec(),

@@ -3,7 +3,7 @@
 //! * [`backend`] — the trait every higher layer (coordinator, scorer,
 //!   bench, CLI) programs against; see DESIGN.md §5.
 //! * [`host`]    — `HostTensor`, the host-side exchange tensor.
-//! * [`engine`] / [`session`] (feature `pjrt`) — the AOT path: load HLO
+//! * `engine` / `session` (feature `pjrt`) — the AOT path: load HLO
 //!   *text* artifacts (DESIGN.md §3), compile once through the PJRT CPU
 //!   client, execute many. aot.py lowers jax to stablehlo, converts to an
 //!   XlaComputation and dumps `as_hlo_text()`; we parse with
