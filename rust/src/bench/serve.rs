@@ -32,6 +32,10 @@ pub struct ServeBenchOpts {
     pub scheduler: SchedulerConfig,
     /// Workload shape (same trace replayed for every variant).
     pub trace: TraceOpts,
+    /// Shared system-prompt length of the second, prefix-sharing trace
+    /// (replayed per variant with the radix cache off and on; 0 skips
+    /// the shared-prefix rows entirely).
+    pub shared_prefix_tokens: usize,
     /// Trace seed.
     pub seed: u64,
 }
@@ -56,7 +60,13 @@ impl Default for ServeBenchOpts {
                 max_new_min: 9,
                 max_new_max: 16,
                 inter_arrival_steps: 1,
+                shared_prefix_tokens: 0,
             },
+            // Two full 16-token blocks of shared system prompt: every
+            // request after the first can skip them under
+            // --prefix-cache. Worst case 32+16+16 = 64 tokens still
+            // fits the serving window.
+            shared_prefix_tokens: 32,
             seed: 0x5eed,
         }
     }
@@ -72,19 +82,25 @@ pub fn default_variants(cfg: &ModelConfig) -> Vec<Variant> {
 }
 
 /// Replay `trace` through a fresh engine for one variant; returns the
-/// measured record.
+/// measured record. `trace_tag` labels the workload ("mixed" /
+/// "shared_prefix") and `prefix_cache` toggles the radix cache for this
+/// run.
 fn bench_variant(
     cfg: &ModelConfig,
     variant: &Variant,
     opts: &ServeBenchOpts,
     trace: &ArrivalTrace,
+    trace_tag: &str,
+    prefix_cache: bool,
 ) -> Result<Json> {
     let sel = variant.r().map(|r| uniform_selection(cfg, r));
     let model =
         NativeModel::init(cfg, variant.clone(), opts.seed, sel.as_ref())?;
     let runner = NativeRunner::new(model, opts.max_batch, opts.max_seq)?;
+    let scheduler =
+        SchedulerConfig { prefix_cache, ..opts.scheduler.clone() };
     let mut server =
-        InferenceServer::with_config(Box::new(runner), &opts.scheduler)?;
+        InferenceServer::with_config(Box::new(runner), &scheduler)?;
 
     let t0 = Instant::now();
     let mut next_arrival = 0usize;
@@ -117,6 +133,8 @@ fn bench_variant(
     let layout = CacheLayout::new(cfg, variant.clone());
     Ok(Json::obj(vec![
         ("variant", Json::str(variant.tag())),
+        ("trace", Json::str(trace_tag)),
+        ("prefix_cache", Json::Bool(prefix_cache)),
         ("cache_ratio", Json::num(layout.ratio)),
         ("cache_bytes_per_token", Json::num(layout.bytes_per_token() as f64)),
         ("pool_blocks", Json::num(stats.blocks_total as f64)),
@@ -129,6 +147,14 @@ fn bench_variant(
         ("peak_blocks_used", Json::num(stats.peak_blocks_used as f64)),
         ("mean_block_occupancy", Json::num(stats.mean_block_occupancy())),
         ("prefills", Json::num(stats.prefills as f64)),
+        ("prefill_tokens", Json::num(stats.prefill_tokens as f64)),
+        ("prefix_hits", Json::num(stats.prefix_hits as f64)),
+        ("prefix_misses", Json::num(stats.prefix_misses as f64)),
+        ("prefix_hit_tokens", Json::num(stats.prefix_hit_tokens as f64)),
+        (
+            "prefix_evicted_blocks",
+            Json::num(stats.prefix_evicted_blocks as f64),
+        ),
         ("decode_steps", Json::num(stats.decode_steps as f64)),
         ("peak_cache_kib", Json::num(stats.peak_cache_bytes as f64 / 1024.0)),
     ]))
@@ -142,21 +168,49 @@ pub fn continuous_batching_bench(
     out: &Path,
 ) -> Result<Json> {
     let trace = ArrivalTrace::generate(cfg.vocab, opts.seed, &opts.trace);
+    // The prefix-sharing workload: same shape, but every prompt starts
+    // with one shared system prompt. Replayed per variant with the radix
+    // cache off and on, so the JSON carries the direct saving (prefix
+    // hit rate, fewer prefill tokens) under each cache layout.
+    let shared_trace = (opts.shared_prefix_tokens > 0).then(|| {
+        ArrivalTrace::generate(
+            cfg.vocab,
+            opts.seed ^ 0x5a5a,
+            &TraceOpts {
+                shared_prefix_tokens: opts.shared_prefix_tokens,
+                ..opts.trace.clone()
+            },
+        )
+    });
     let mut rows = Vec::new();
     for variant in variants {
         log::info!("continuous-batching bench: {}", variant.tag());
-        let row = bench_variant(cfg, variant, opts, &trace)
-            .with_context(|| format!("bench {}", variant.tag()))?;
-        println!(
-            "bench continuous_batching/{:<22} {:>4} max-concurrency  \
-             {:>8.1} tok/s  wait p99 {:>8.2} ms  occupancy {:>5.1}%",
-            variant.tag(),
-            row.req("max_concurrency").as_usize().unwrap_or(0),
-            row.req("tokens_per_s").as_f64().unwrap_or(0.0),
-            1e3 * row.req("admission_wait_p99_s").as_f64().unwrap_or(0.0),
-            100.0 * row.req("mean_block_occupancy").as_f64().unwrap_or(0.0),
-        );
-        rows.push(row);
+        // The mixed run honors the caller's `--prefix-cache` policy
+        // (default off); the shared-prefix pair is always measured with
+        // the cache off AND on so the JSON carries the direct saving.
+        let mut runs: Vec<(&ArrivalTrace, &str, bool)> =
+            vec![(&trace, "mixed", opts.scheduler.prefix_cache)];
+        if let Some(st) = &shared_trace {
+            runs.push((st, "shared_prefix", false));
+            runs.push((st, "shared_prefix", true));
+        }
+        for (t, tag, pc) in runs {
+            let row = bench_variant(cfg, variant, opts, t, tag, pc)
+                .with_context(|| format!("bench {} ({tag})", variant.tag()))?;
+            println!(
+                "bench continuous_batching/{:<22} {:<13} cache={:<3} \
+                 {:>4} max-concurrency  {:>8.1} tok/s  prefill toks \
+                 {:>6}  hits {:>3}",
+                variant.tag(),
+                tag,
+                if pc { "on" } else { "off" },
+                row.req("max_concurrency").as_usize().unwrap_or(0),
+                row.req("tokens_per_s").as_f64().unwrap_or(0.0),
+                row.req("prefill_tokens").as_usize().unwrap_or(0),
+                row.req("prefix_hits").as_usize().unwrap_or(0),
+            );
+            rows.push(row);
+        }
     }
     let json = Json::obj(vec![
         ("experiment", Json::str("continuous_batching")),
@@ -168,6 +222,10 @@ pub fn continuous_batching_bench(
         (
             "cache_budget_bytes",
             Json::num(opts.scheduler.cache_budget_bytes as f64),
+        ),
+        (
+            "shared_prefix_tokens",
+            Json::num(opts.shared_prefix_tokens as f64),
         ),
         ("n_requests", Json::num(trace.items.len() as f64)),
         ("trace_new_tokens", Json::num(trace.total_new_tokens() as f64)),
@@ -206,7 +264,13 @@ mod tests {
         let variants = default_variants(&cfg);
         let json =
             continuous_batching_bench(&cfg, &variants, &opts, &out).unwrap();
-        let rows = json.req("rows").as_arr().unwrap();
+        let rows: Vec<&Json> = json
+            .req("rows")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter(|r| r.req("trace").as_str() == Some("mixed"))
+            .collect();
         assert_eq!(rows.len(), 2);
         let mha = rows[0].req("max_concurrency").as_usize().unwrap();
         let ekv = rows[1].req("max_concurrency").as_usize().unwrap();
@@ -219,5 +283,65 @@ mod tests {
         let text = std::fs::read_to_string(&out).unwrap();
         assert!(Json::parse(&text).is_ok());
         std::fs::remove_file(out).ok();
+    }
+
+    /// The shared-prefix acceptance property (ISSUE 4): with the radix
+    /// cache on, the shared-system-prompt trace shows a nonzero prefix
+    /// hit rate and strictly fewer prefilled tokens than the cache-off
+    /// replay of the SAME trace, at unchanged completion counts.
+    #[test]
+    fn shared_prefix_trace_amortizes_prefills() {
+        let cfg = ModelConfig::tiny();
+        let default = ServeBenchOpts::default();
+        let opts = ServeBenchOpts {
+            trace: TraceOpts { n_requests: 10, ..default.trace.clone() },
+            ..default
+        };
+        let out = std::env::temp_dir().join("elitekv_cb_prefix_test.json");
+        let variants = default_variants(&cfg);
+        let json =
+            continuous_batching_bench(&cfg, &variants, &opts, &out).unwrap();
+        std::fs::remove_file(&out).ok();
+        for variant in variants {
+            let tag = variant.tag();
+            let find = |pc: bool| {
+                json.req("rows")
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .find(|r| {
+                        r.req("variant").as_str() == Some(tag.as_str())
+                            && r.req("trace").as_str()
+                                == Some("shared_prefix")
+                            && r.req("prefix_cache").as_bool() == Some(pc)
+                    })
+                    .cloned()
+                    .unwrap()
+            };
+            let (off, on) = (find(false), find(true));
+            assert_eq!(
+                off.req("completed").as_usize(),
+                on.req("completed").as_usize(),
+                "{tag}: completion counts diverge"
+            );
+            assert!(
+                on.req("prefix_hits").as_usize().unwrap() > 0,
+                "{tag}: no prefix hits on the shared-prefix trace"
+            );
+            let (pt_off, pt_on) = (
+                off.req("prefill_tokens").as_usize().unwrap(),
+                on.req("prefill_tokens").as_usize().unwrap(),
+            );
+            assert!(
+                pt_on < pt_off,
+                "{tag}: prefix cache prefilled {pt_on} tokens, \
+                 cache-off {pt_off}"
+            );
+            assert_eq!(
+                off.req("prefix_hits").as_usize().unwrap(),
+                0,
+                "{tag}: cache-off run reported hits"
+            );
+        }
     }
 }

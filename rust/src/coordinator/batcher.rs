@@ -11,7 +11,29 @@ use std::collections::VecDeque;
 use anyhow::Result;
 
 use crate::coordinator::api::Request;
+use crate::kvcache::block::BlockId;
+use crate::kvcache::radix::{PrefixHit, PrefixStats, RadixCache};
 use crate::kvcache::{BlockAllocator, SlotManager};
+
+/// One admitted request: the lane it was assigned, the block chain
+/// charged for it, and — when the prefix cache hit — how many prompt
+/// tokens are already cached (with their stored slab rows), so the
+/// engine prefills only the suffix.
+pub struct Admission {
+    /// The admitted request.
+    pub request: Request,
+    /// Decode lane assigned by the [`SlotManager`].
+    pub slot: usize,
+    /// Block chain covering the worst-case footprint; its first
+    /// `cached_tokens / block_tokens` blocks alias the radix cache.
+    pub chain: Vec<BlockId>,
+    /// Prompt tokens served from the prefix cache (0 = none; always a
+    /// multiple of `block_tokens` and strictly less than the prompt).
+    pub cached_tokens: usize,
+    /// Stored slab rows for the cached tokens, one `[L, cached, w]`
+    /// buffer per cache slab (empty when `cached_tokens == 0`).
+    pub cached_rows: Vec<Vec<f32>>,
+}
 
 /// FIFO queue with block-budget admission control.
 pub struct AdmissionQueue {
@@ -20,12 +42,21 @@ pub struct AdmissionQueue {
     pub allocator: BlockAllocator,
     /// worst-case generation length used for admission (prompt + max_new)
     pub conservative: bool,
+    /// Prefix radix cache (`SchedulerConfig::prefix_cache`); `None`
+    /// disables sharing entirely.
+    pub prefix: Option<RadixCache>,
 }
 
 impl AdmissionQueue {
-    /// Empty queue over a block pool (conservative admission by default).
+    /// Empty queue over a block pool (conservative admission by default,
+    /// prefix cache off).
     pub fn new(allocator: BlockAllocator) -> AdmissionQueue {
-        AdmissionQueue { queue: VecDeque::new(), allocator, conservative: true }
+        AdmissionQueue {
+            queue: VecDeque::new(),
+            allocator,
+            conservative: true,
+            prefix: None,
+        }
     }
 
     /// Enqueue at the FIFO tail (no admissibility check — see
@@ -96,11 +127,11 @@ impl AdmissionQueue {
     }
 
     /// Admit as many queued requests as the lanes + block pool allow.
-    /// Returns (request, slot, block chain) triples.
-    pub fn admit(
-        &mut self,
-        slots: &mut SlotManager,
-    ) -> Vec<(Request, usize, Vec<crate::kvcache::block::BlockId>)> {
+    /// With the prefix cache enabled, the longest cached full-block
+    /// prefix of each prompt is reused (forked, not re-allocated) and
+    /// only the remaining worst-case footprint draws fresh blocks; when
+    /// fresh blocks run short, LRU cache leaves are evicted first.
+    pub fn admit(&mut self, slots: &mut SlotManager) -> Vec<Admission> {
         let mut admitted = Vec::new();
         while slots.idle_count() > 0 {
             let Some(front) = self.queue.front() else { break };
@@ -134,22 +165,113 @@ impl AdmissionQueue {
                 );
                 continue;
             }
-            if !self.allocator.can_admit(need) {
-                break; // strict FIFO: no head-of-line bypass
+            // Longest cached prefix, capped one token short of the
+            // prompt: the engine must prefill at least the final prompt
+            // position to produce first logits.
+            let hit = match &mut self.prefix {
+                Some(pc) => {
+                    let cap = front.prompt.len() - 1;
+                    match pc.lookup(&front.prompt, cap, &mut self.allocator)
+                    {
+                        Ok(hit) => hit,
+                        Err(e) => {
+                            log::error!("prefix lookup failed: {e:#}");
+                            PrefixHit::default()
+                        }
+                    }
+                }
+                None => PrefixHit::default(),
+            };
+            let need_blocks = self.allocator.blocks_for(need);
+            let fresh_needed = need_blocks - hit.chain.len();
+            if self.allocator.free_blocks() < fresh_needed {
+                if let Some(pc) = &mut self.prefix {
+                    // Pool pressure: shed cold cached prefixes. The hit's
+                    // own blocks are safe — the fork above owns separate
+                    // references, so an evicted node cannot free them.
+                    pc.evict(fresh_needed, &mut self.allocator);
+                }
+                if self.allocator.free_blocks() < fresh_needed {
+                    // strict FIFO: no head-of-line bypass
+                    self.allocator.release(&hit.chain);
+                    break;
+                }
+            }
+            let mut chain = hit.chain;
+            if let Err(e) = self.allocator.extend(&mut chain, need) {
+                log::error!("admission extend failed after check: {e:#}");
+                self.allocator.release(&chain);
+                break;
             }
             let req = self.queue.pop_front().unwrap();
-            let chain = self.allocator.alloc(need).expect("checked");
             let slot = slots
                 .claim(req.id, req.prompt.len())
                 .expect("idle slot and prompt length checked");
-            admitted.push((req, slot, chain));
+            if let Some(pc) = &mut self.prefix {
+                pc.record_admission(hit.tokens);
+            }
+            admitted.push(Admission {
+                request: req,
+                slot,
+                chain,
+                cached_tokens: hit.tokens,
+                cached_rows: hit.rows,
+            });
         }
         admitted
     }
 
     /// Return a finished request's blocks to the pool.
-    pub fn release(&mut self, chain: &[crate::kvcache::block::BlockId]) {
+    pub fn release(&mut self, chain: &[BlockId]) {
         self.allocator.release(chain);
+    }
+
+    /// True when the prefix radix cache is active.
+    pub fn prefix_enabled(&self) -> bool {
+        self.prefix.is_some()
+    }
+
+    /// Prefix-cache counter snapshot (None when disabled).
+    pub fn prefix_stats(&self) -> Option<PrefixStats> {
+        self.prefix.as_ref().map(|pc| pc.stats())
+    }
+
+    /// Insert a finished request's full-block prompt prefix into the
+    /// radix cache (no-op when disabled). `chain` is the request's block
+    /// chain — the cached tail forks it — and `rows` produces the lane's
+    /// slab rows for the aligned prefix, invoked only when a novel tail
+    /// is actually cached. Returns newly cached blocks.
+    pub fn prefix_insert<F>(
+        &mut self,
+        tokens: &[u32],
+        chain: &[BlockId],
+        rows: F,
+    ) -> Result<usize>
+    where
+        F: FnOnce() -> Result<Vec<Vec<f32>>>,
+    {
+        match &mut self.prefix {
+            Some(pc) => pc.insert(tokens, chain, rows, &mut self.allocator),
+            None => Ok(0),
+        }
+    }
+
+    /// Grow a live chain to cover `new_len` tokens, evicting LRU cache
+    /// leaves first if the pool is dry. Mirrors
+    /// [`BlockAllocator::extend`]'s contract otherwise.
+    pub fn extend_with_eviction(
+        &mut self,
+        chain: &mut Vec<BlockId>,
+        new_len: usize,
+    ) -> Result<()> {
+        let need = self.allocator.blocks_for(new_len);
+        let missing = need.saturating_sub(chain.len());
+        if self.allocator.free_blocks() < missing {
+            if let Some(pc) = &mut self.prefix {
+                pc.evict(missing, &mut self.allocator);
+            }
+        }
+        self.allocator.extend(chain, new_len)
     }
 }
 
@@ -197,11 +319,90 @@ mod tests {
         assert_eq!(admitted.len(), 1);
         assert_eq!(q.len(), 1);
         // releasing lets the second one in
-        let (_r, slot, chain) = &admitted[0];
-        slots.free(*slot);
-        q.release(chain);
+        let adm = &admitted[0];
+        slots.free(adm.slot);
+        q.release(&adm.chain);
         let second = q.admit(&mut slots);
         assert_eq!(second.len(), 1);
+    }
+
+    /// With the radix cache on, a second request sharing a cached prefix
+    /// draws fewer fresh blocks and reports its cached token count.
+    #[test]
+    fn prefix_hit_reuses_cached_blocks() {
+        let cfg = ModelConfig::tiny();
+        let layout = CacheLayout::new(&cfg, Variant::Mha);
+        let mut q = AdmissionQueue::new(BlockAllocator::new(8, 4));
+        q.prefix = Some(RadixCache::new(4, cfg.n_layers, vec![2, 2]));
+        let mut slots = SlotManager::new(layout, 2, 256);
+
+        // request 0: 8-token prompt (2 blocks) + 4 new -> 3 blocks
+        q.push(req(0, 8, 4));
+        let first = q.admit(&mut slots);
+        assert_eq!(first.len(), 1);
+        assert_eq!(first[0].cached_tokens, 0);
+        let adm = &first[0];
+        // finish request 0: insert its prompt prefix, then release
+        let l = cfg.n_layers;
+        let rows: Vec<Vec<f32>> =
+            vec![vec![1.0; l * 8 * 2], vec![2.0; l * 8 * 2]];
+        let cached = q
+            .prefix_insert(&adm.request.prompt, &adm.chain, || Ok(rows))
+            .unwrap();
+        assert_eq!(cached, 2);
+        slots.free(adm.slot);
+        q.release(&adm.chain);
+
+        // request 1: same prompt -> both full prompt blocks hit
+        q.push(req(1, 8, 4));
+        let second = q.admit(&mut slots);
+        assert_eq!(second.len(), 1);
+        // cap is prompt-1 = 7 tokens -> only 1 of 2 blocks reusable
+        assert_eq!(second[0].cached_tokens, 4);
+        assert_eq!(second[0].cached_rows.len(), 2);
+        assert_eq!(second[0].cached_rows[0].len(), l * 4 * 2);
+        let stats = q.prefix_stats().unwrap();
+        assert_eq!((stats.hits, stats.misses), (1, 1));
+        assert_eq!(stats.hit_tokens, 4);
+        q.allocator.check_invariants().unwrap();
+    }
+
+    /// Pool pressure evicts cold cache leaves instead of parking the
+    /// FIFO head forever.
+    #[test]
+    fn admission_evicts_cache_under_pressure() {
+        let cfg = ModelConfig::tiny();
+        let layout = CacheLayout::new(&cfg, Variant::Mha);
+        let mut q = AdmissionQueue::new(BlockAllocator::new(4, 4));
+        q.prefix = Some(RadixCache::new(4, cfg.n_layers, vec![1]));
+        let mut slots = SlotManager::new(layout, 2, 256);
+        let l = cfg.n_layers;
+
+        // request 0 fills 3 of 4 pool blocks and leaves its 2-block
+        // prompt prefix cached
+        q.push(req(0, 8, 4));
+        let first = q.admit(&mut slots);
+        assert_eq!(first.len(), 1);
+        let adm = &first[0];
+        let rows = vec![vec![0.5; l * 8]];
+        q.prefix_insert(&adm.request.prompt, &adm.chain, || Ok(rows))
+            .unwrap();
+        slots.free(adm.slot);
+        q.release(&adm.chain);
+        assert_eq!(q.allocator.free_blocks(), 2);
+
+        // request 1 with a DIFFERENT prompt needs 4 blocks: the 2 cached
+        // blocks must be evicted to admit it
+        let mut other = req(1, 12, 4);
+        other.prompt = vec![9; 12];
+        q.push(other);
+        let second = q.admit(&mut slots);
+        assert_eq!(second.len(), 1);
+        assert_eq!(second[0].cached_tokens, 0);
+        let stats = q.prefix_stats().unwrap();
+        assert_eq!(stats.evicted_blocks, 2);
+        assert_eq!(stats.cached_blocks, 0);
+        q.allocator.check_invariants().unwrap();
     }
 
     #[test]

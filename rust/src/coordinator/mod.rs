@@ -22,7 +22,7 @@ pub mod scheduler;
 pub mod server;
 
 pub use api::{GenParams, Request, Response};
-pub use batcher::AdmissionQueue;
+pub use batcher::{Admission, AdmissionQueue};
 pub use router::Router;
 pub use scheduler::{ArrivalTrace, SchedulerConfig, TraceOpts};
 pub use server::{InferenceServer, ServerStats};

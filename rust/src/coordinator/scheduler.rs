@@ -29,6 +29,13 @@ pub struct SchedulerConfig {
     /// Admit only when prompt + max_new worst-case fits the pool (true),
     /// or on prompt footprint alone, growing chains via `extend` (false).
     pub conservative: bool,
+    /// Enable the prefix radix cache (`--prefix-cache`): finished
+    /// prompts' full-block prefixes are retained in a
+    /// [`crate::kvcache::RadixCache`] and later admissions reuse the
+    /// longest cached prefix instead of re-prefilling it (DESIGN.md
+    /// S18). Requires a backend that supports mid-sequence prefill
+    /// resume (the native runner; not the static PJRT artifacts).
+    pub prefix_cache: bool,
 }
 
 impl Default for SchedulerConfig {
@@ -37,6 +44,7 @@ impl Default for SchedulerConfig {
             block_tokens: 16,
             cache_budget_bytes: 64 << 20,
             conservative: true,
+            prefix_cache: false,
         }
     }
 }
@@ -73,6 +81,13 @@ pub struct TraceOpts {
     pub max_new_max: usize,
     /// Mean engine steps between arrivals (0 = all arrive at step 0).
     pub inter_arrival_steps: usize,
+    /// Tokens of a shared "system prompt" prepended to EVERY request's
+    /// prompt (0 = fully independent prompts). The prefix stream is
+    /// drawn once per trace, so all requests share it byte-identically —
+    /// the canonical multi-user workload the prefix radix cache
+    /// amortizes. `prompt_min`/`prompt_max` bound the per-request tail
+    /// AFTER the shared prefix.
+    pub shared_prefix_tokens: usize,
 }
 
 impl Default for TraceOpts {
@@ -84,6 +99,7 @@ impl Default for TraceOpts {
             max_new_min: 4,
             max_new_max: 16,
             inter_arrival_steps: 2,
+            shared_prefix_tokens: 0,
         }
     }
 }
@@ -103,6 +119,7 @@ impl ArrivalTrace {
     pub fn generate(vocab: usize, seed: u64, opts: &TraceOpts) -> ArrivalTrace {
         let mut gen = CorpusGen::new(vocab, seed);
         let mut rng = Pcg64::new(seed, 0x7ace);
+        let shared = gen.stream(opts.shared_prefix_tokens);
         let mut step = 0usize;
         let items = (0..opts.n_requests)
             .map(|i| {
@@ -112,11 +129,13 @@ impl ArrivalTrace {
                 if opts.inter_arrival_steps > 0 && i > 0 {
                     step += rng.range(0, 2 * opts.inter_arrival_steps + 1);
                 }
+                let mut prompt = shared.clone();
+                prompt.extend(gen.stream(plen));
                 TraceItem {
                     arrive_step: step,
                     request: Request::new(
                         i as u64,
-                        gen.stream(plen),
+                        prompt,
                         GenParams {
                             max_new_tokens: max_new,
                             stop_token: None, // fixed-length: comparable work
@@ -173,6 +192,22 @@ mod tests {
         for w in a.items.windows(2) {
             assert!(w[0].arrive_step <= w[1].arrive_step);
         }
+    }
+
+    #[test]
+    fn shared_prefix_trace_shares_byte_identically() {
+        let opts = TraceOpts { shared_prefix_tokens: 32, ..Default::default() };
+        let t = ArrivalTrace::generate(512, 3, &opts);
+        let first = &t.items[0].request.prompt;
+        assert!(first.len() >= 32 + opts.prompt_min);
+        for item in &t.items {
+            let p = &item.request.prompt;
+            assert_eq!(&p[..32], &first[..32], "shared prefix diverged");
+            let tail = p.len() - 32;
+            assert!(tail >= opts.prompt_min && tail <= opts.prompt_max);
+        }
+        // distinct tails exist (not one degenerate request repeated)
+        assert!(t.items.iter().any(|i| i.request.prompt != *first));
     }
 
     #[test]

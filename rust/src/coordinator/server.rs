@@ -21,7 +21,8 @@ use crate::coordinator::api::{FinishReason, GenParams, Request, Response};
 use crate::coordinator::batcher::AdmissionQueue;
 use crate::coordinator::scheduler::SchedulerConfig;
 use crate::kvcache::block::BlockId;
-use crate::kvcache::{BlockAllocator, CacheLayout, SlotManager};
+use crate::kvcache::radix::RadixCache;
+use crate::kvcache::{slab_specs, BlockAllocator, CacheLayout, SlotManager};
 use crate::runtime::{Backend, HostTensor};
 use crate::util::Pcg64;
 
@@ -67,6 +68,20 @@ pub struct ServerStats {
     pub blocks_used_sum: usize,
     /// Number of samples accumulated into `blocks_used_sum`.
     pub occupancy_samples: usize,
+    /// Prompt tokens actually prefilled (suffix-only under prefix-cache
+    /// hits, full prompts otherwise) — the bench's measure of prefill
+    /// work saved by prefix sharing.
+    pub prefill_tokens: usize,
+    /// Admissions that reused a cached prefix (`--prefix-cache` only).
+    pub prefix_hits: usize,
+    /// Admissions that found no cached prefix (`--prefix-cache` only).
+    pub prefix_misses: usize,
+    /// Prompt tokens served from the prefix cache instead of prefilled.
+    pub prefix_hit_tokens: usize,
+    /// Cache blocks released by LRU eviction under pool pressure.
+    pub prefix_evicted_blocks: usize,
+    /// Blocks currently held by the prefix cache (gauge).
+    pub prefix_cached_blocks: usize,
 }
 
 /// Capacity of [`ServerStats::admission_wait_recent_s`].
@@ -167,6 +182,31 @@ impl InferenceServer {
         let caches = backend.empty_caches()?;
         let mut queue = AdmissionQueue::new(allocator);
         queue.conservative = cfg.conservative;
+        if cfg.prefix_cache {
+            anyhow::ensure!(
+                backend.supports_prefix_prefill(),
+                "--prefix-cache needs a backend that can resume a \
+                 prefill mid-sequence (`{}` cannot; use --backend native)",
+                backend.kind()
+            );
+            // One radix tree per engine, keyed to this variant's slab
+            // geometry: rows are stored per slab at `widths[si]` f32
+            // elements per token per layer.
+            let widths: Vec<usize> = slab_specs(
+                backend.config(),
+                backend.variant(),
+                batch,
+                max_seq,
+            )
+            .iter()
+            .map(|(_, shape)| shape[3..].iter().product())
+            .collect();
+            queue.prefix = Some(RadixCache::new(
+                cfg.block_tokens,
+                backend.config().n_layers,
+                widths,
+            ));
+        }
         let stats = ServerStats {
             blocks_total: queue.allocator.n_blocks(),
             ..Default::default()
@@ -205,6 +245,18 @@ impl InferenceServer {
         self.slots.live_cache_bytes()
     }
 
+    /// The most recent logits tensor `[B, vocab]` (None while idle).
+    /// Test/debug surface: the prefix-cache differential suite compares
+    /// these bitwise between cache-on and cache-off engines.
+    pub fn logits_snapshot(&self) -> Option<&HostTensor> {
+        self.logits.as_ref()
+    }
+
+    /// The live cache slabs `[L, B, S, ...]` (same test/debug surface).
+    pub fn cache_snapshot(&self) -> &[HostTensor] {
+        &self.caches
+    }
+
     /// Drive the engine until all submitted requests complete.
     pub fn run_to_completion(&mut self) -> Result<Vec<Response>> {
         let mut out = Vec::new();
@@ -222,6 +274,9 @@ impl InferenceServer {
 
     /// Admit queued requests (lane + block budget permitting) and prefill
     /// exactly the newly admitted lanes; running lanes are untouched.
+    /// Under the prefix cache, each admission's cached prompt rows are
+    /// spliced into the prefill's seed caches and only the suffix is
+    /// computed (per-lane start offset).
     fn admit(&mut self) -> Result<()> {
         let admitted = self.queue.admit(&mut self.slots);
         if admitted.is_empty() {
@@ -234,23 +289,52 @@ impl InferenceServer {
         let mut tokens = vec![0i32; self.batch * self.max_seq];
         let mut lens = vec![1i32; self.batch];
         let mut fresh_mask = vec![false; self.batch];
-        for (req, slot, _chain) in &admitted {
+        let mut starts = vec![0i32; self.batch];
+        // Seed slabs are only materialized when some admission actually
+        // resumes from a cached prefix; the plain path (prefix cache
+        // off, or all misses) keeps the single-allocation prefill.
+        let mut seed_caches: Option<Vec<HostTensor>> = None;
+        for adm in &admitted {
+            let (req, slot) = (&adm.request, adm.slot);
             if req.prompt.len() >= self.max_seq {
                 bail!("prompt exceeds serving window");
             }
             for (i, &t) in req.prompt.iter().enumerate() {
                 tokens[slot * self.max_seq + i] = t as i32;
             }
-            lens[*slot] = req.prompt.len() as i32;
-            fresh_mask[*slot] = true;
+            lens[slot] = req.prompt.len() as i32;
+            fresh_mask[slot] = true;
+            starts[slot] = adm.cached_tokens as i32;
+            if adm.cached_tokens > 0 {
+                if seed_caches.is_none() {
+                    seed_caches = Some(self.backend.empty_caches()?);
+                }
+                let seed = seed_caches.as_mut().unwrap();
+                for (dst, rows) in seed.iter_mut().zip(&adm.cached_rows) {
+                    splice_prefix_rows(dst, rows, slot, adm.cached_tokens)?;
+                }
+            }
             self.stats
                 .record_admission_wait((now - req.enqueued).as_secs_f64());
+            self.stats.prefill_tokens +=
+                req.prompt.len() - adm.cached_tokens;
         }
-        let (logits, fresh) =
-            self.backend.prefill_lanes(&tokens, &lens, &fresh_mask)?;
+        let (logits, fresh) = match seed_caches {
+            Some(seed) => self.backend.prefill_lanes_from(
+                &tokens,
+                &lens,
+                &fresh_mask,
+                &starts,
+                seed,
+            )?,
+            None => {
+                self.backend.prefill_lanes(&tokens, &lens, &fresh_mask)?
+            }
+        };
         self.stats.prefills += 1;
         // Splice admitted lanes' cache rows + logits into live state.
-        for (req, slot, chain) in admitted {
+        for adm in admitted {
+            let slot = adm.slot;
             for (dst, src) in self.caches.iter_mut().zip(&fresh) {
                 splice_lane(dst, src, slot)?;
             }
@@ -258,10 +342,11 @@ impl InferenceServer {
                 HostTensor::zeros(logits.shape())
             });
             splice_row(lane_logits, &logits, slot)?;
+            let req = adm.request;
             let seed = req.params.seed ^ req.id;
             self.lanes[slot] = Some(Lane {
                 request: req,
-                blocks: chain,
+                blocks: adm.chain,
                 generated: Vec::new(),
                 first_token_at: None,
                 rng: Pcg64::seeded(seed),
@@ -269,11 +354,24 @@ impl InferenceServer {
         }
         let busy = self.lanes.iter().filter(|l| l.is_some()).count();
         self.stats.max_concurrency = self.stats.max_concurrency.max(busy);
+        self.sync_prefix_stats();
         Ok(())
     }
 
+    /// Mirror the radix cache's counters into [`ServerStats`].
+    fn sync_prefix_stats(&mut self) {
+        if let Some(ps) = self.queue.prefix_stats() {
+            self.stats.prefix_hits = ps.hits;
+            self.stats.prefix_misses = ps.misses;
+            self.stats.prefix_hit_tokens = ps.hit_tokens;
+            self.stats.prefix_evicted_blocks = ps.evicted_blocks;
+            self.stats.prefix_cached_blocks = ps.cached_blocks;
+        }
+    }
+
     /// Retire a lane: account for its generation, build the response,
-    /// and return slot + blocks to their pools.
+    /// insert the prompt's full-block prefix into the radix cache
+    /// (insert-on-free), and return slot + blocks to their pools.
     fn finish_lane(
         &mut self,
         slot: usize,
@@ -293,6 +391,26 @@ impl InferenceServer {
             latency: (now - lane.request.enqueued).as_secs_f64(),
             finish: reason,
         };
+        if self.queue.prefix_enabled() {
+            let bt = self.queue.allocator.block_tokens;
+            let aligned = lane.request.prompt.len() / bt * bt;
+            if aligned > 0 {
+                // Row extraction is lazy: a prompt whose prefix is
+                // already fully cached (the steady state under a shared
+                // system prompt) walks the tree and copies nothing.
+                // Caching must never take the serving loop down: a
+                // failed insert only loses a sharing opportunity.
+                let caches = &self.caches;
+                if let Err(e) = self.queue.prefix_insert(
+                    &lane.request.prompt[..aligned],
+                    &lane.blocks[..aligned / bt],
+                    || extract_prefix_rows(caches, slot, aligned),
+                ) {
+                    log::error!("prefix insert failed: {e:#}");
+                }
+            }
+            self.sync_prefix_stats();
+        }
         self.queue.release(&lane.blocks);
         self.slots.free(slot);
         response
@@ -375,7 +493,10 @@ impl InferenceServer {
                 self.slots.advance(slot)?;
                 let need = self.slots.len_of(slot);
                 let lane = self.lanes[slot].as_mut().unwrap();
-                if self.queue.allocator.extend(&mut lane.blocks, need).is_ok()
+                if self
+                    .queue
+                    .extend_with_eviction(&mut lane.blocks, need)
+                    .is_ok()
                 {
                     continue;
                 }
@@ -402,6 +523,67 @@ impl InferenceServer {
         }
         Ok(done)
     }
+}
+
+/// Splice `rows` (`[L, tokens, w]` flat, from the prefix radix cache)
+/// into lane `lane`'s positions `0..tokens` of a `[L, B, S, ...]` slab.
+fn splice_prefix_rows(
+    dst: &mut HostTensor,
+    rows: &[f32],
+    lane: usize,
+    tokens: usize,
+) -> Result<()> {
+    let shape = dst.shape().to_vec();
+    if shape.len() < 4 {
+        bail!("prefix splice expects [L, B, S, ...] slabs, got {shape:?}");
+    }
+    let (l_n, b_n, s_n) = (shape[0], shape[1], shape[2]);
+    let w: usize = shape[3..].iter().product();
+    if lane >= b_n || tokens > s_n || rows.len() != l_n * tokens * w {
+        bail!(
+            "prefix splice mismatch: lane {lane}, {tokens} tokens, \
+             {} row elems into {shape:?}",
+            rows.len()
+        );
+    }
+    let d = dst.as_f32_mut()?;
+    for l in 0..l_n {
+        let src = &rows[l * tokens * w..(l + 1) * tokens * w];
+        let base = ((l * b_n + lane) * s_n) * w;
+        d[base..base + tokens * w].copy_from_slice(src);
+    }
+    Ok(())
+}
+
+/// Extract lane `lane`'s positions `0..tokens` from every slab as
+/// `[L, tokens, w]` flat buffers (the radix cache's storage layout).
+fn extract_prefix_rows(
+    caches: &[HostTensor],
+    lane: usize,
+    tokens: usize,
+) -> Result<Vec<Vec<f32>>> {
+    caches
+        .iter()
+        .map(|slab| {
+            let shape = slab.shape().to_vec();
+            if shape.len() < 4 {
+                bail!("prefix extract expects [L, B, S, ...] slabs");
+            }
+            let (l_n, b_n, s_n) = (shape[0], shape[1], shape[2]);
+            let w: usize = shape[3..].iter().product();
+            if lane >= b_n || tokens > s_n {
+                bail!("prefix extract out of range for {shape:?}");
+            }
+            let s = slab.as_f32()?;
+            let mut out = vec![0.0f32; l_n * tokens * w];
+            for l in 0..l_n {
+                let base = ((l * b_n + lane) * s_n) * w;
+                out[l * tokens * w..(l + 1) * tokens * w]
+                    .copy_from_slice(&s[base..base + tokens * w]);
+            }
+            Ok(out)
+        })
+        .collect()
 }
 
 /// Copy lane `b`'s rows of a stacked [L, B, ...] cache tensor.

@@ -290,6 +290,172 @@ mod tests {
         assert_eq!(ekv.n_blocks(), 4 * base.n_blocks());
     }
 
+    /// A naive reference allocator driven as an ORACLE CHECKER: it
+    /// applies the real allocator's outputs (the concrete chains) to its
+    /// own trivial free-set + refcount model and verifies exact
+    /// per-block accounting after every operation. Any divergence —
+    /// handing out a non-free block, freeing too early/late, a refcount
+    /// drifting — is a real bug in one of the two, and the model is
+    /// simple enough to trust.
+    #[derive(Debug)]
+    struct RefAlloc {
+        free: std::collections::BTreeSet<BlockId>,
+        refs: HashMap<BlockId, u32>,
+    }
+
+    impl RefAlloc {
+        fn new(n: usize) -> RefAlloc {
+            RefAlloc {
+                free: (0..n as BlockId).collect(),
+                refs: HashMap::new(),
+            }
+        }
+
+        /// Real allocator handed out `fresh` blocks: each must have been
+        /// free here too.
+        fn on_fresh(&mut self, fresh: &[BlockId]) -> Result<(), String> {
+            for &b in fresh {
+                if !self.free.remove(&b) {
+                    return Err(format!("block {b} handed out but not free"));
+                }
+                self.refs.insert(b, 1);
+            }
+            Ok(())
+        }
+
+        fn on_fork(&mut self, chain: &[BlockId]) -> Result<(), String> {
+            for &b in chain {
+                match self.refs.get_mut(&b) {
+                    Some(c) => *c += 1,
+                    None => return Err(format!("forked dead block {b}")),
+                }
+            }
+            Ok(())
+        }
+
+        fn on_release(&mut self, chain: &[BlockId]) -> Result<(), String> {
+            for &b in chain {
+                match self.refs.get_mut(&b) {
+                    Some(c) if *c > 1 => *c -= 1,
+                    Some(_) => {
+                        self.refs.remove(&b);
+                        self.free.insert(b);
+                    }
+                    None => return Err(format!("released dead block {b}")),
+                }
+            }
+            Ok(())
+        }
+
+        /// Exact agreement: same free count, same live set, same
+        /// per-block refcounts.
+        fn agrees_with(&self, a: &BlockAllocator) -> Result<(), String> {
+            if a.free_blocks() != self.free.len() {
+                return Err(format!(
+                    "free count: real {} vs reference {}",
+                    a.free_blocks(),
+                    self.free.len()
+                ));
+            }
+            for (&b, &c) in &self.refs {
+                if a.refcount(b) != c {
+                    return Err(format!(
+                        "block {b}: refcount real {} vs reference {c}",
+                        a.refcount(b)
+                    ));
+                }
+            }
+            for &b in &self.free {
+                if a.refcount(b) != 0 {
+                    return Err(format!("block {b} free here, live there"));
+                }
+            }
+            Ok(())
+        }
+    }
+
+    /// Property (ISSUE 4): random alloc/extend/fork/release sequences
+    /// keep the real allocator in EXACT agreement with the naive
+    /// reference model — free-block counts and every per-block refcount
+    /// — with `check_invariants` green after every op.
+    #[test]
+    fn prop_allocator_matches_naive_reference() {
+        prop::check(
+            "block-allocator-vs-reference",
+            48,
+            |rng: &mut Pcg64| {
+                (0..80).map(|_| rng.next_u64()).collect::<Vec<u64>>()
+            },
+            |ops| {
+                let mut a = BlockAllocator::new(12, 4);
+                let mut model = RefAlloc::new(12);
+                let mut live: Vec<Vec<BlockId>> = Vec::new();
+                for &op in ops {
+                    match op % 4 {
+                        0 => {
+                            let want = (op / 4 % 24) as usize + 1;
+                            if a.can_admit(want) {
+                                let chain =
+                                    a.alloc(want).map_err(|e| e.to_string())?;
+                                model.on_fresh(&chain)?;
+                                live.push(chain);
+                            } else if a.alloc(want).is_ok() {
+                                return Err(
+                                    "alloc succeeded past can_admit".into()
+                                );
+                            }
+                        }
+                        1 => {
+                            if !live.is_empty() {
+                                let i = (op / 4) as usize % live.len();
+                                let c = live.swap_remove(i);
+                                a.release(&c);
+                                model.on_release(&c)?;
+                            }
+                        }
+                        2 => {
+                            if !live.is_empty() {
+                                let i = (op / 4) as usize % live.len();
+                                let f = a
+                                    .fork(&live[i].clone())
+                                    .map_err(|e| e.to_string())?;
+                                model.on_fork(&f)?;
+                                live.push(f);
+                            }
+                        }
+                        _ => {
+                            if !live.is_empty() {
+                                let i = (op / 4) as usize % live.len();
+                                let mut c = live.swap_remove(i);
+                                let before = c.len();
+                                let cur = before * a.block_tokens;
+                                if a.extend(&mut c, cur + 1).is_ok() {
+                                    model.on_fresh(&c[before..])?;
+                                } else if c.len() != before {
+                                    return Err(
+                                        "failed extend mutated chain".into()
+                                    );
+                                }
+                                live.push(c);
+                            }
+                        }
+                    }
+                    a.check_invariants().map_err(|e| e.to_string())?;
+                    model.agrees_with(&a)?;
+                }
+                for c in live.drain(..) {
+                    a.release(&c);
+                    model.on_release(&c)?;
+                }
+                model.agrees_with(&a)?;
+                if a.free_blocks() != 12 {
+                    return Err(format!("leaked: {} free", a.free_blocks()));
+                }
+                a.check_invariants().map_err(|e| e.to_string())
+            },
+        );
+    }
+
     /// Property: any interleaving of alloc/extend/fork/release keeps the
     /// pool consistent and never loses blocks.
     #[test]

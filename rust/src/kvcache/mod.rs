@@ -12,11 +12,17 @@
 //! * [`manager`] — slot-based cache state bound to the fixed-batch decode
 //!   lanes: owns the cache tensors, assigns sequence slots, tracks
 //!   lengths, and reports live cache bytes.
+//! * [`radix`]   — the prefix radix cache (DESIGN.md S18): automatic
+//!   cross-request sharing of block-aligned prompt prefixes over the
+//!   refcounted pool, with longest-prefix lookup on admission,
+//!   insert-on-free, and LRU leaf eviction under pool pressure.
 
 pub mod block;
 pub mod layout;
 pub mod manager;
+pub mod radix;
 
 pub use block::BlockAllocator;
 pub use layout::{slab_specs, CacheLayout};
 pub use manager::SlotManager;
+pub use radix::{PrefixHit, PrefixStats, RadixCache};

@@ -1,0 +1,856 @@
+//! Prefix radix cache: automatic cross-request KV-prefix sharing over
+//! the paged block pool (DESIGN.md S18).
+//!
+//! EliteKV's J-LRD layout makes prefix reuse unusually cheap: a token's
+//! cache entry is one shared latent row (`c_kv`) plus a small rotated
+//! elite key, so a shared system prompt is a single compressed chain to
+//! refcount — no per-head K/V pair to reconcile. This module is the
+//! structure that exploits it:
+//!
+//! * the tree is **block-granular**: every node owns a block-aligned
+//!   token run (`tokens.len() == blocks.len() * block_tokens`) and the
+//!   slab rows computed for those tokens, keyed from its parent by the
+//!   run's first block of tokens. Partial blocks are never cached — a
+//!   trailing partial block would be mutated by whichever request is
+//!   still appending to it, breaking aliasing.
+//! * **insert-on-free**: when a request completes, the full-block prefix
+//!   of its *prompt* is inserted; the novel tail of the path `fork`s the
+//!   request's chain (per-block refcount bump in the
+//!   [`BlockAllocator`]), so the cache owns its own references and the
+//!   blocks stay accounted in the pool after the request releases.
+//! * **longest-prefix lookup** on admission: the matched chain is
+//!   `fork`ed to the caller (copy-on-write is automatic: the new request
+//!   writes only positions `>= matched`, which live in freshly allocated
+//!   blocks — shared blocks are never written twice).
+//! * **LRU eviction** under pool pressure: least-recently-used leaves
+//!   release the cache's block references until enough blocks are free;
+//!   interior nodes are never evicted before their children (prefix
+//!   closure is preserved).
+//!
+//! The cache stores the actual slab rows (`[L, run, w]` per slab) next
+//! to each node because the serving runtimes use dense per-lane slabs:
+//! a prefix hit is replayed by splicing the stored rows into the
+//! admitted lane and prefilling only the suffix. The refcounted blocks
+//! are the byte accounting for exactly that stored copy.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::kvcache::block::{BlockAllocator, BlockId};
+
+/// Cumulative + gauge counters of one [`RadixCache`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PrefixStats {
+    /// Admissions that reused at least one cached block.
+    pub hits: usize,
+    /// Admissions that found no cached prefix.
+    pub misses: usize,
+    /// Total prompt tokens served from the cache instead of prefilled.
+    pub hit_tokens: usize,
+    /// Blocks released by LRU eviction (cumulative).
+    pub evicted_blocks: usize,
+    /// Blocks currently held by the cache (gauge).
+    pub cached_blocks: usize,
+}
+
+/// Result of a longest-prefix [`RadixCache::lookup`].
+#[derive(Debug, Default)]
+pub struct PrefixHit {
+    /// Matched prompt tokens (a multiple of `block_tokens`; 0 = miss).
+    pub tokens: usize,
+    /// Forked block chain covering the matched tokens — the caller owns
+    /// these references and must `release` them with the rest of its
+    /// chain.
+    pub chain: Vec<BlockId>,
+    /// Stored slab rows for the matched tokens, one `[L, tokens, w]`
+    /// flat buffer per cache slab.
+    pub rows: Vec<Vec<f32>>,
+}
+
+/// One tree node: a block-aligned token run plus its cached slab rows.
+#[derive(Debug)]
+struct Node {
+    parent: usize,
+    /// Token run; `tokens.len() == blocks.len() * block_tokens` (the
+    /// root's run is empty).
+    tokens: Vec<u32>,
+    /// Cache-owned references into the block pool, one per full block.
+    blocks: Vec<BlockId>,
+    /// Stored slab rows, one `[L, run, w]` flat buffer per slab.
+    data: Vec<Vec<f32>>,
+    /// Children keyed by the first `block_tokens` tokens of their run
+    /// (siblings always differ somewhere within that first block).
+    children: HashMap<Vec<u32>, usize>,
+    /// LRU clock stamp of the last lookup/insert touching this node.
+    last_used: u64,
+}
+
+/// Token-keyed radix tree over refcounted block chains.
+#[derive(Debug)]
+pub struct RadixCache {
+    /// Tokens per block (the sharing granularity; matches the pool).
+    pub block_tokens: usize,
+    layers: usize,
+    /// Per-slab row width (f32 elements per token per layer).
+    widths: Vec<usize>,
+    /// Node arena; index 0 is the (empty, unevictable) root.
+    nodes: Vec<Option<Node>>,
+    free_slots: Vec<usize>,
+    clock: u64,
+    stats: PrefixStats,
+}
+
+impl RadixCache {
+    /// Empty cache over blocks of `block_tokens` tokens for a model of
+    /// `layers` layers whose slabs have `widths[si]` f32 elements per
+    /// token per layer.
+    pub fn new(block_tokens: usize, layers: usize, widths: Vec<usize>) -> RadixCache {
+        assert!(block_tokens > 0, "block_tokens must be > 0");
+        assert!(layers > 0, "layers must be > 0");
+        let root = Node {
+            parent: 0,
+            tokens: Vec::new(),
+            blocks: Vec::new(),
+            data: vec![Vec::new(); widths.len()],
+            children: HashMap::new(),
+            last_used: 0,
+        };
+        RadixCache {
+            block_tokens,
+            layers,
+            widths,
+            nodes: vec![Some(root)],
+            free_slots: Vec::new(),
+            clock: 0,
+            stats: PrefixStats::default(),
+        }
+    }
+
+    /// Current counter snapshot.
+    pub fn stats(&self) -> PrefixStats {
+        self.stats
+    }
+
+    /// Blocks currently held by the cache.
+    pub fn cached_blocks(&self) -> usize {
+        self.stats.cached_blocks
+    }
+
+    /// Record the prefix outcome of one *successful* admission (hits and
+    /// miss counters are admission-scoped, not lookup-scoped, so a
+    /// lookup whose admission then fails on pool pressure is not
+    /// counted).
+    pub fn record_admission(&mut self, cached_tokens: usize) {
+        if cached_tokens > 0 {
+            self.stats.hits += 1;
+            self.stats.hit_tokens += cached_tokens;
+        } else {
+            self.stats.misses += 1;
+        }
+    }
+
+    fn node(&self, i: usize) -> &Node {
+        self.nodes[i].as_ref().expect("live node")
+    }
+
+    fn node_mut(&mut self, i: usize) -> &mut Node {
+        self.nodes[i].as_mut().expect("live node")
+    }
+
+    fn touch(&mut self, i: usize) {
+        self.clock += 1;
+        let clock = self.clock;
+        self.node_mut(i).last_used = clock;
+    }
+
+    fn alloc_slot(&mut self, node: Node) -> usize {
+        match self.free_slots.pop() {
+            Some(i) => {
+                self.nodes[i] = Some(node);
+                i
+            }
+            None => {
+                self.nodes.push(Some(node));
+                self.nodes.len() - 1
+            }
+        }
+    }
+
+    /// Longest cached prefix of `prompt`, in full blocks, capped at
+    /// `max_tokens` (callers pass `prompt.len() - 1` so at least one
+    /// prompt token is always left to prefill — the engine needs a
+    /// final-position forward pass to produce first logits). The matched
+    /// chain is `fork`ed: the caller owns those references.
+    pub fn lookup(
+        &mut self,
+        prompt: &[u32],
+        max_tokens: usize,
+        alloc: &mut BlockAllocator,
+    ) -> Result<PrefixHit> {
+        let bt = self.block_tokens;
+        let cap_blocks = prompt.len().min(max_tokens) / bt;
+        let mut segments: Vec<(usize, usize)> = Vec::new(); // (node, blocks used)
+        let mut matched = 0usize; // blocks
+        let mut cur = 0usize;
+        while matched < cap_blocks {
+            let key = &prompt[matched * bt..(matched + 1) * bt];
+            let found = self.node(cur).children.get(key).copied();
+            let Some(child) = found else { break };
+            let nb = self.node(child).blocks.len();
+            let mut m = 1usize; // first block matched via the key
+            while m < nb && matched + m < cap_blocks {
+                let lo = (matched + m) * bt;
+                if self.node(child).tokens[m * bt..(m + 1) * bt]
+                    != prompt[lo..lo + bt]
+                {
+                    break;
+                }
+                m += 1;
+            }
+            segments.push((child, m));
+            matched += m;
+            self.touch(child);
+            if m < nb {
+                break; // partial node match: the run diverges or the cap hit
+            }
+            cur = child;
+        }
+        if matched == 0 {
+            return Ok(PrefixHit::default());
+        }
+        // Assemble the forked chain + stored rows in token order.
+        let mut chain = Vec::with_capacity(matched);
+        for &(node, m) in &segments {
+            chain.extend_from_slice(&self.node(node).blocks[..m]);
+        }
+        let chain = alloc.fork(&chain)?;
+        let tokens = matched * bt;
+        let mut rows = Vec::with_capacity(self.widths.len());
+        for (si, &w) in self.widths.iter().enumerate() {
+            let mut out = vec![0.0f32; self.layers * tokens * w];
+            for l in 0..self.layers {
+                let mut p = 0usize; // output token cursor within the layer
+                for &(node, m) in &segments {
+                    let run = self.node(node).tokens.len();
+                    let seg = m * self.block_tokens;
+                    let src = &self.node(node).data[si]
+                        [(l * run) * w..(l * run + seg) * w];
+                    out[(l * tokens + p) * w..(l * tokens + p + seg) * w]
+                        .copy_from_slice(src);
+                    p += seg;
+                }
+            }
+            rows.push(out);
+        }
+        Ok(PrefixHit { tokens, chain, rows })
+    }
+
+    /// Insert the full-block prefix of `tokens` (a finished request's
+    /// prompt), aliasing `chain` (the request's block chain, which must
+    /// cover it). `rows` produces the slab rows — one `[L, aligned, w]`
+    /// buffer per slab, where `aligned = (tokens.len() / block_tokens)
+    /// * block_tokens` — and is invoked ONLY when a novel tail is
+    /// actually cached, so the steady-state fully-cached completion
+    /// copies nothing. Only the novel tail allocates cache references
+    /// (via `fork`); an already-cached path is just LRU touched.
+    /// Returns the number of newly cached blocks.
+    pub fn insert<F>(
+        &mut self,
+        tokens: &[u32],
+        chain: &[BlockId],
+        rows: F,
+        alloc: &mut BlockAllocator,
+    ) -> Result<usize>
+    where
+        F: FnOnce() -> Result<Vec<Vec<f32>>>,
+    {
+        let bt = self.block_tokens;
+        let total = tokens.len() / bt; // full blocks to ensure cached
+        if total == 0 {
+            return Ok(0);
+        }
+        ensure!(
+            chain.len() >= total,
+            "insert chain of {} blocks cannot cover {total} prompt blocks",
+            chain.len()
+        );
+        let mut matched = 0usize; // blocks
+        let mut cur = 0usize;
+        self.touch(cur);
+        while matched < total {
+            let key = tokens[matched * bt..(matched + 1) * bt].to_vec();
+            let found = self.node(cur).children.get(&key[..]).copied();
+            let Some(child) = found else {
+                // Novel tail: one new leaf holds the whole remainder.
+                // Materialize + validate the rows only now.
+                let rows = rows()?;
+                ensure!(
+                    rows.len() == self.widths.len(),
+                    "insert got {} row buffers for {} slabs",
+                    rows.len(),
+                    self.widths.len()
+                );
+                for (si, &w) in self.widths.iter().enumerate() {
+                    ensure!(
+                        rows[si].len() == self.layers * total * bt * w,
+                        "slab {si}: row buffer {} != {} expected",
+                        rows[si].len(),
+                        self.layers * total * bt * w
+                    );
+                }
+                let fresh = alloc.fork(&chain[matched..total])?;
+                let n_new = fresh.len();
+                let leaf = Node {
+                    parent: cur,
+                    tokens: tokens[matched * bt..total * bt].to_vec(),
+                    blocks: fresh,
+                    data: self.slice_rows(&rows, total, matched, total),
+                    children: HashMap::new(),
+                    last_used: 0,
+                };
+                let slot = self.alloc_slot(leaf);
+                self.node_mut(cur).children.insert(key, slot);
+                self.touch(slot);
+                self.stats.cached_blocks += n_new;
+                return Ok(n_new);
+            };
+            let nb = self.node(child).blocks.len();
+            let mut m = 1usize;
+            while m < nb && matched + m < total {
+                let lo = (matched + m) * bt;
+                if self.node(child).tokens[m * bt..(m + 1) * bt]
+                    != tokens[lo..lo + bt]
+                {
+                    break;
+                }
+                m += 1;
+            }
+            self.touch(child);
+            matched += m;
+            if m == nb {
+                cur = child; // fully consumed this node's run
+                continue;
+            }
+            if matched == total {
+                return Ok(0); // prefix already present mid-run
+            }
+            // Divergence inside the run: split `child` at block m, then
+            // loop back — the next iteration sees the shortened node and
+            // hangs the novel tail off it.
+            self.split(child, m);
+            cur = child;
+        }
+        Ok(0) // the whole prefix was already cached
+    }
+
+    /// Split node `i`'s run after `at` blocks: `i` keeps the head run,
+    /// a new child takes the tail run plus `i`'s former children. Block
+    /// references just move between nodes (no refcount change).
+    fn split(&mut self, i: usize, at: usize) {
+        let bt = self.block_tokens;
+        let (tail_tokens, tail_blocks, old_children, last_used, old_data) = {
+            let node = self.nodes[i].as_mut().expect("live node");
+            debug_assert!(at > 0 && at < node.blocks.len());
+            (
+                node.tokens.split_off(at * bt),
+                node.blocks.split_off(at),
+                std::mem::take(&mut node.children),
+                node.last_used,
+                std::mem::take(&mut node.data),
+            )
+        };
+        let run = at + tail_blocks.len(); // original run length in blocks
+        let mut head_data = Vec::with_capacity(self.widths.len());
+        let mut tail_data = Vec::with_capacity(self.widths.len());
+        for (&w, old) in self.widths.iter().zip(&old_data) {
+            let (head_t, tail_t) = (at * bt, tail_tokens.len());
+            let mut head = vec![0.0f32; self.layers * head_t * w];
+            let mut tail = vec![0.0f32; self.layers * tail_t * w];
+            for l in 0..self.layers {
+                let base = l * run * bt * w;
+                head[l * head_t * w..(l + 1) * head_t * w]
+                    .copy_from_slice(&old[base..base + head_t * w]);
+                tail[l * tail_t * w..(l + 1) * tail_t * w].copy_from_slice(
+                    &old[base + head_t * w..base + (head_t + tail_t) * w],
+                );
+            }
+            head_data.push(head);
+            tail_data.push(tail);
+        }
+        let key = tail_tokens[..bt].to_vec();
+        let tail_node = Node {
+            parent: i,
+            tokens: tail_tokens,
+            blocks: tail_blocks,
+            data: tail_data,
+            children: old_children,
+            last_used,
+        };
+        let slot = self.alloc_slot(tail_node);
+        // Re-parent the moved grandchildren.
+        let grand: Vec<usize> =
+            self.node(slot).children.values().copied().collect();
+        for g in grand {
+            self.node_mut(g).parent = slot;
+        }
+        let node = self.node_mut(i);
+        node.data = head_data;
+        node.children.insert(key, slot);
+    }
+
+    /// Slice `rows` (covering `total` blocks) down to blocks
+    /// `[from, to)`, preserving the per-slab `[L, run, w]` layout.
+    fn slice_rows(
+        &self,
+        rows: &[Vec<f32>],
+        total: usize,
+        from: usize,
+        to: usize,
+    ) -> Vec<Vec<f32>> {
+        let bt = self.block_tokens;
+        let (total_t, seg_t) = (total * bt, (to - from) * bt);
+        self.widths
+            .iter()
+            .enumerate()
+            .map(|(si, &w)| {
+                let mut out = vec![0.0f32; self.layers * seg_t * w];
+                for l in 0..self.layers {
+                    let src = (l * total_t + from * bt) * w;
+                    out[l * seg_t * w..(l + 1) * seg_t * w]
+                        .copy_from_slice(&rows[si][src..src + seg_t * w]);
+                }
+                out
+            })
+            .collect()
+    }
+
+    /// Evict least-recently-used leaves until the pool has at least
+    /// `want_free` free blocks or no evictable leaf remains. Returns the
+    /// number of blocks whose cache reference was released (they return
+    /// to the free pool unless a live request still forks them).
+    ///
+    /// Victim selection is a linear scan of the node arena per evicted
+    /// leaf — O(leaves × arena) under sustained pressure. Fine at
+    /// serving-bench scale (tens of nodes); a heap/intrusive LRU list
+    /// over leaves is the known local change if tree sizes grow.
+    pub fn evict(&mut self, want_free: usize, alloc: &mut BlockAllocator) -> usize {
+        let mut released = 0usize;
+        while alloc.free_blocks() < want_free {
+            let mut victim: Option<(usize, u64)> = None;
+            for (i, slot) in self.nodes.iter().enumerate() {
+                let Some(n) = slot else { continue };
+                if i == 0 || !n.children.is_empty() {
+                    continue;
+                }
+                if victim.map(|(_, lu)| n.last_used < lu).unwrap_or(true) {
+                    victim = Some((i, n.last_used));
+                }
+            }
+            let Some((leaf, _)) = victim else { break };
+            released += self.remove_leaf(leaf, alloc);
+        }
+        released
+    }
+
+    /// Release every cached block and reset the tree (shutdown/tests).
+    pub fn clear(&mut self, alloc: &mut BlockAllocator) -> usize {
+        let mut released = 0usize;
+        loop {
+            let leaf = self.nodes.iter().enumerate().find_map(|(i, slot)| {
+                slot.as_ref()
+                    .filter(|n| i != 0 && n.children.is_empty())
+                    .map(|_| i)
+            });
+            let Some(leaf) = leaf else { break };
+            released += self.remove_leaf(leaf, alloc);
+        }
+        released
+    }
+
+    /// Drop a leaf: release the cache's block references and unlink it.
+    fn remove_leaf(&mut self, leaf: usize, alloc: &mut BlockAllocator) -> usize {
+        let node = self.nodes[leaf].take().expect("live leaf");
+        debug_assert!(node.children.is_empty() && leaf != 0);
+        alloc.release(&node.blocks);
+        let released = node.blocks.len();
+        let key = &node.tokens[..self.block_tokens];
+        self.node_mut(node.parent).children.remove(key);
+        self.free_slots.push(leaf);
+        self.stats.cached_blocks -= released;
+        self.stats.evicted_blocks += released;
+        released
+    }
+
+    /// Structural audit for tests: runs block-aligned, data sized, child
+    /// keys consistent, parents correct, block gauge exact, and every
+    /// cached block live in the allocator.
+    pub fn check_consistency(&self, alloc: &BlockAllocator) -> Result<()> {
+        let bt = self.block_tokens;
+        let mut total_blocks = 0usize;
+        for (i, slot) in self.nodes.iter().enumerate() {
+            let Some(n) = slot else { continue };
+            if n.tokens.len() != n.blocks.len() * bt {
+                bail!("node {i}: {} tokens vs {} blocks", n.tokens.len(),
+                      n.blocks.len());
+            }
+            if i != 0 && n.blocks.is_empty() {
+                bail!("non-root node {i} with empty run");
+            }
+            for (si, &w) in self.widths.iter().enumerate() {
+                if n.data[si].len() != self.layers * n.tokens.len() * w {
+                    bail!("node {i} slab {si}: bad data size");
+                }
+            }
+            for &b in &n.blocks {
+                if alloc.refcount(b) == 0 {
+                    bail!("node {i}: cached block {b} is not live");
+                }
+            }
+            total_blocks += n.blocks.len();
+            for (key, &c) in &n.children {
+                let child = self
+                    .nodes
+                    .get(c)
+                    .and_then(|s| s.as_ref())
+                    .ok_or_else(|| anyhow::anyhow!("node {i}: dead child {c}"))?;
+                if child.parent != i {
+                    bail!("child {c} parent {} != {i}", child.parent);
+                }
+                if child.tokens[..bt] != key[..] {
+                    bail!("child {c}: key mismatch");
+                }
+            }
+        }
+        if total_blocks != self.stats.cached_blocks {
+            bail!(
+                "cached_blocks gauge {} != {} counted",
+                self.stats.cached_blocks,
+                total_blocks
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::Pcg64;
+
+    /// Cache over 2 slabs (widths 3 and 2), 2 layers, 4-token blocks.
+    fn cache() -> RadixCache {
+        RadixCache::new(4, 2, vec![3, 2])
+    }
+
+    /// Deterministic fake slab rows for `tokens` starting at position 0:
+    /// element = (slab, layer, pos, elem) encoded — position-dependent
+    /// like real KV rows.
+    fn rows_for(c: &RadixCache, toks: &[u32]) -> Vec<Vec<f32>> {
+        c.widths
+            .iter()
+            .enumerate()
+            .map(|(si, &w)| {
+                let mut out = vec![0.0f32; c.layers * toks.len() * w];
+                for l in 0..c.layers {
+                    for (p, &t) in toks.iter().enumerate() {
+                        for e in 0..w {
+                            out[(l * toks.len() + p) * w + e] = (si * 1000
+                                + l * 100
+                                + p * 10
+                                + e) as f32
+                                + t as f32 / 64.0;
+                        }
+                    }
+                }
+                out
+            })
+            .collect()
+    }
+
+    #[test]
+    fn insert_then_lookup_roundtrip() {
+        let mut a = BlockAllocator::new(16, 4);
+        let mut c = cache();
+        let toks: Vec<u32> = (0..12).collect(); // 3 full blocks
+        let chain = a.alloc(12).unwrap();
+        let rows = rows_for(&c, &toks);
+        let added =
+            c.insert(&toks, &chain, || Ok(rows.clone()), &mut a).unwrap();
+        assert_eq!(added, 3);
+        a.release(&chain); // request finishes; cache keeps the blocks
+        assert_eq!(a.free_blocks(), 13);
+        c.check_consistency(&a).unwrap();
+
+        // longest prefix of a longer prompt, capped below the full run
+        let prompt: Vec<u32> = (0..16).collect();
+        let hit = c.lookup(&prompt, prompt.len() - 1, &mut a).unwrap();
+        assert_eq!(hit.tokens, 12);
+        assert_eq!(hit.chain.len(), 3);
+        assert_eq!(hit.rows, rows);
+        a.release(&hit.chain);
+        c.check_consistency(&a).unwrap();
+
+        // the cap leaves at least one token to prefill: a prompt equal to
+        // the cached run matches only 2 of its 3 blocks
+        let hit = c.lookup(&toks, toks.len() - 1, &mut a).unwrap();
+        assert_eq!(hit.tokens, 8);
+        a.release(&hit.chain);
+
+        // diverging first block: miss
+        let other: Vec<u32> = (100..112).collect();
+        let miss = c.lookup(&other, 11, &mut a).unwrap();
+        assert_eq!(miss.tokens, 0);
+        assert!(miss.chain.is_empty());
+        c.clear(&mut a);
+        assert_eq!(a.free_blocks(), 16);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn divergence_splits_at_block_boundary() {
+        let mut a = BlockAllocator::new(16, 4);
+        let mut c = cache();
+        let ab: Vec<u32> = (0..12).collect();
+        let chain = a.alloc(12).unwrap();
+        let rows_ab = rows_for(&c, &ab);
+        c.insert(&ab, &chain, || Ok(rows_ab), &mut a).unwrap();
+        a.release(&chain);
+
+        // same first block, diverges inside the second
+        let mut ac = ab.clone();
+        ac[5] = 99;
+        let chain2 = a.alloc(12).unwrap();
+        let rows_ac = rows_for(&c, &ac);
+        let added =
+            c.insert(&ac, &chain2, || Ok(rows_ac), &mut a).unwrap();
+        assert_eq!(added, 2, "only the divergent tail is newly cached");
+        a.release(&chain2);
+        assert_eq!(c.cached_blocks(), 5);
+        c.check_consistency(&a).unwrap();
+
+        // both paths now resolve: shared block + own tails
+        let hit_ab = c.lookup(&ab, 11, &mut a).unwrap();
+        assert_eq!(hit_ab.tokens, 8);
+        assert_eq!(hit_ab.rows, c.slice_rows(&rows_for(&c, &ab), 3, 0, 2));
+        let hit_ac = c.lookup(&ac, 11, &mut a).unwrap();
+        assert_eq!(hit_ac.tokens, 8);
+        assert_eq!(hit_ac.rows, c.slice_rows(&rows_for(&c, &ac), 3, 0, 2));
+        // the shared first block is the SAME physical block on both paths
+        assert_eq!(hit_ab.chain[0], hit_ac.chain[0]);
+        assert_ne!(hit_ab.chain[1], hit_ac.chain[1]);
+        a.release(&hit_ab.chain);
+        a.release(&hit_ac.chain);
+        c.check_consistency(&a).unwrap();
+        c.clear(&mut a);
+        a.check_invariants().unwrap();
+        assert_eq!(a.free_blocks(), 16);
+    }
+
+    #[test]
+    fn insert_is_idempotent() {
+        let mut a = BlockAllocator::new(8, 4);
+        let mut c = cache();
+        let toks: Vec<u32> = (0..8).collect();
+        let chain = a.alloc(8).unwrap();
+        let rows = rows_for(&c, &toks);
+        assert_eq!(
+            c.insert(&toks, &chain, || Ok(rows.clone()), &mut a).unwrap(),
+            2
+        );
+        assert_eq!(
+            c.insert(&toks, &chain, || Ok(rows.clone()), &mut a).unwrap(),
+            0
+        );
+        a.release(&chain);
+        assert_eq!(c.cached_blocks(), 2);
+        c.check_consistency(&a).unwrap();
+    }
+
+    #[test]
+    fn partial_blocks_are_never_cached() {
+        let mut a = BlockAllocator::new(8, 4);
+        let mut c = cache();
+        let toks: Vec<u32> = (0..6).collect(); // 1 full block + 2 tokens
+        let chain = a.alloc(6).unwrap();
+        let full = &toks[..4];
+        let full_rows = rows_for(&c, full);
+        let added =
+            c.insert(full, &chain, || Ok(full_rows), &mut a).unwrap();
+        assert_eq!(added, 1);
+        // a 3-token prompt can never hit (no full block to match)
+        let hit = c.lookup(&toks[..3], 2, &mut a).unwrap();
+        assert_eq!(hit.tokens, 0);
+        a.release(&chain);
+        c.check_consistency(&a).unwrap();
+    }
+
+    #[test]
+    fn lru_eviction_frees_least_recent_leaf_first() {
+        let mut a = BlockAllocator::new(6, 4);
+        let mut c = cache();
+        let p1: Vec<u32> = (0..8).collect();
+        let p2: Vec<u32> = (100..108).collect();
+        for p in [&p1, &p2] {
+            let chain = a.alloc(8).unwrap();
+            let rows = rows_for(&c, p);
+            c.insert(p, &chain, || Ok(rows), &mut a).unwrap();
+            a.release(&chain);
+        }
+        assert_eq!(a.free_blocks(), 2);
+        // touch p1 so p2 is the LRU leaf
+        let hit = c.lookup(&p1, 7, &mut a).unwrap();
+        a.release(&hit.chain);
+        // pressure: want 4 free -> p2's 2 blocks are evicted
+        let released = c.evict(4, &mut a);
+        assert_eq!(released, 2);
+        assert_eq!(a.free_blocks(), 4);
+        assert_eq!(c.lookup(&p2, 7, &mut a).unwrap().tokens, 0);
+        assert_eq!(c.lookup(&p1, 7, &mut a).unwrap().tokens, 4);
+        assert_eq!(c.stats().evicted_blocks, 2);
+        c.check_consistency(&a).unwrap();
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn eviction_respects_live_request_forks() {
+        let mut a = BlockAllocator::new(4, 4);
+        let mut c = cache();
+        let p: Vec<u32> = (0..8).collect();
+        let chain = a.alloc(8).unwrap();
+        let rows = rows_for(&c, &p);
+        c.insert(&p, &chain, || Ok(rows), &mut a).unwrap();
+        a.release(&chain);
+        // a live request forks the cached prefix...
+        let hit = c.lookup(&p, 7, &mut a).unwrap();
+        assert_eq!(hit.chain.len(), 1);
+        // ...then eviction drops the cache's references; the forked
+        // block must stay live (not returned to the free pool)
+        c.evict(4, &mut a);
+        assert_eq!(c.cached_blocks(), 0);
+        assert_eq!(a.free_blocks(), 3);
+        assert_eq!(a.refcount(hit.chain[0]), 1);
+        a.release(&hit.chain);
+        assert_eq!(a.free_blocks(), 4);
+        a.check_invariants().unwrap();
+    }
+
+    /// Property: random insert/lookup/evict workloads keep the tree and
+    /// the allocator consistent, conserve blocks exactly, and lookups
+    /// agree with a naive prefix-set reference model.
+    #[test]
+    fn prop_random_workload_matches_reference() {
+        prop::check(
+            "radix-cache-workload",
+            32,
+            |rng: &mut Pcg64| {
+                (0..40)
+                    .map(|_| (rng.next_u64(), rng.below(4) as u8))
+                    .collect::<Vec<_>>()
+            },
+            |ops| {
+                let mut a = BlockAllocator::new(24, 4);
+                let mut c = cache();
+                // reference: the set of cached block-aligned prefixes
+                let mut reference: Vec<Vec<u32>> = Vec::new();
+                let mut live: Vec<Vec<BlockId>> = Vec::new();
+                for &(x, kind) in ops {
+                    // prompts drawn from a tiny alphabet so prefixes collide
+                    let len = 4 + (x % 17) as usize;
+                    let toks: Vec<u32> =
+                        (0..len).map(|i| ((x >> (i % 8)) & 1) as u32).collect();
+                    match kind {
+                        0 | 1 => {
+                            // simulate a request lifecycle: alloc, insert
+                            // prompt prefix, release
+                            if !a.can_admit(len) {
+                                continue;
+                            }
+                            let chain =
+                                a.alloc(len).map_err(|e| e.to_string())?;
+                            let aligned = len / 4 * 4;
+                            if aligned > 0 {
+                                let full = &toks[..aligned];
+                                let rows = rows_for(&c, full);
+                                c.insert(full, &chain, || Ok(rows), &mut a)
+                                    .map_err(|e| e.to_string())?;
+                                for b in 1..=aligned / 4 {
+                                    let p = toks[..b * 4].to_vec();
+                                    if !reference.contains(&p) {
+                                        reference.push(p);
+                                    }
+                                }
+                            }
+                            a.release(&chain);
+                        }
+                        2 => {
+                            let cap = len.saturating_sub(1);
+                            let hit = c
+                                .lookup(&toks, cap, &mut a)
+                                .map_err(|e| e.to_string())?;
+                            let want = reference
+                                .iter()
+                                .filter(|p| {
+                                    p.len() <= cap
+                                        && toks.starts_with(p)
+                                })
+                                .map(|p| p.len())
+                                .max()
+                                .unwrap_or(0);
+                            if hit.tokens != want {
+                                return Err(format!(
+                                    "lookup matched {} tokens, reference \
+                                     says {want}",
+                                    hit.tokens
+                                ));
+                            }
+                            live.push(hit.chain);
+                        }
+                        _ => {
+                            let want = (x % 8) as usize;
+                            c.evict(want, &mut a);
+                            // mirror: eviction removes whole maximal
+                            // prefixes; rebuild the reference from what
+                            // still resolves
+                            reference.retain(|p| {
+                                let mut probe = p.clone();
+                                probe.push(7); // one spare token past the cap
+                                c.lookup(&probe, p.len(), &mut a)
+                                    .map(|h| {
+                                        a.release(&h.chain);
+                                        h.tokens == p.len()
+                                    })
+                                    .unwrap_or(false)
+                            });
+                        }
+                    }
+                    c.check_consistency(&a).map_err(|e| e.to_string())?;
+                    a.check_invariants().map_err(|e| e.to_string())?;
+                    let held: usize = live.iter().map(|ch| ch.len()).sum();
+                    // exact conservation: free + cache-held + request-held
+                    // >= total only via sharing; the strict check is that
+                    // used blocks never exceed cache + live references
+                    if a.used_blocks() > c.cached_blocks() + held {
+                        return Err(format!(
+                            "leak: {} used > {} cached + {held} held",
+                            a.used_blocks(),
+                            c.cached_blocks()
+                        ));
+                    }
+                }
+                for ch in live.drain(..) {
+                    a.release(&ch);
+                }
+                let released = c.clear(&mut a);
+                if a.free_blocks() != 24 {
+                    return Err(format!(
+                        "leaked blocks: {} free after clearing {released}",
+                        a.free_blocks()
+                    ));
+                }
+                a.check_invariants().map_err(|e| e.to_string())
+            },
+        );
+    }
+}

@@ -90,20 +90,25 @@ COMMANDS
              [--ckpt PATH] [--selection PATH] [--requests N] [--max-new N]
              [--max-batch B] [--max-seq S] [--block-tokens N]
              [--cache-budget-mb N] [--optimistic-admission]
-             [--temperature F] [--top-p F] [--seed N]
+             [--prefix-cache] [--temperature F] [--top-p F] [--seed N]
              [--r N (ropelite uniform fallback)] [--pallas]
              native backend (default): no artifacts needed; random-init
              weights unless --ckpt points at a (converted) checkpoint.
              Requests are continuously batched: admission is gated on the
              block pool (--cache-budget-mb / --block-tokens), lanes
-             recycle the moment a sequence finishes.
+             recycle the moment a sequence finishes. --prefix-cache
+             (native only) retains finished prompts' full-block prefixes
+             in a radix tree and prefills only the novel suffix of later
+             prompts (LRU-evicted under pool pressure).
   bench      [--config C] [--steps N] [--batch B] [--prompt N]
              [--out PATH]   native decode sweep -> BENCH_native_decode.json
              then a continuous-batching capacity sweep
              [--max-batch B] [--cb-requests N] [--cb-max-seq S]
              [--block-tokens N] [--cache-budget-mb N] [--cb-out PATH]
+             [--shared-prefix N]
              -> BENCH_continuous_batching.json (dense vs J-LRD max
-             concurrency under one cache budget)
+             concurrency under one cache budget, plus a shared-system-
+             prompt trace replayed with the prefix radix cache off/on)
   eval       [--backend native|pjrt] --config C --variant TAG [--ckpt PATH]
              [--selection PATH] [--probes N] [--seed N] [--r N]
   convert    --config C --ckpt PATH --variant TAG [--selection PATH]
@@ -266,6 +271,7 @@ fn scheduler_config(
             .usize_or("cache-budget-mb", default_budget_mb)?
             << 20,
         conservative: !args.has("optimistic-admission"),
+        prefix_cache: args.has("prefix-cache"),
     })
 }
 
@@ -326,6 +332,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         server.stats.max_concurrency,
         1e3 * server.stats.mean_admission_wait_s(),
     );
+    if args.has("prefix-cache") {
+        println!(
+            "  prefix cache: {} hits / {} misses, {} tokens reused \
+             ({} prefilled), {} blocks held, {} evicted",
+            server.stats.prefix_hits,
+            server.stats.prefix_misses,
+            server.stats.prefix_hit_tokens,
+            server.stats.prefill_tokens,
+            server.stats.prefix_cached_blocks,
+            server.stats.prefix_evicted_blocks,
+        );
+    }
     Ok(())
 }
 
@@ -364,6 +382,8 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 .usize_or("cb-requests", defaults.trace.n_requests)?,
             ..defaults.trace
         },
+        shared_prefix_tokens: args
+            .usize_or("shared-prefix", defaults.shared_prefix_tokens)?,
         seed: args.u64_or("seed", defaults.seed)?,
     };
     let cb_out = args.str_or("cb-out", "BENCH_continuous_batching.json");

@@ -112,11 +112,45 @@ impl Backend for NativeRunner {
         true_len: &[i32],
         fresh: &[bool],
     ) -> Result<(HostTensor, Vec<HostTensor>)> {
+        let caches = self.empty_caches()?;
+        self.prefill_lanes_from(
+            tokens,
+            true_len,
+            fresh,
+            &vec![0i32; self.batch],
+            caches,
+        )
+    }
+
+    fn supports_prefix_prefill(&self) -> bool {
+        true
+    }
+
+    /// [`NativeRunner::prefill_lanes`] with per-lane start offsets: lane
+    /// `i` skips its first `start[i]` prompt positions — those rows were
+    /// spliced into `caches` from the prefix radix cache by the caller —
+    /// and computes only `start[i]..true_len[i]`, attending over the
+    /// seeded prefix rows exactly as a from-scratch prefill would. The
+    /// kernel determinism contract (row `i` of a batched step depends
+    /// only on row `i`; DESIGN.md S17) makes a resumed prefill
+    /// bitwise-identical to a full one given identical prefix rows.
+    fn prefill_lanes_from(
+        &self,
+        tokens: &[i32],
+        true_len: &[i32],
+        fresh: &[bool],
+        start: &[i32],
+        caches: Vec<HostTensor>,
+    ) -> Result<(HostTensor, Vec<HostTensor>)> {
         let (b, s) = (self.batch, self.max_seq);
-        if tokens.len() != b * s || true_len.len() != b || fresh.len() != b {
+        if tokens.len() != b * s
+            || true_len.len() != b
+            || fresh.len() != b
+            || start.len() != b
+        {
             bail!(
                 "prefill expects tokens [{b},{s}], true_len [{b}], \
-                 fresh [{b}]"
+                 fresh [{b}], start [{b}]"
             );
         }
         let mut max_len = 0usize;
@@ -128,7 +162,14 @@ impl Backend for NativeRunner {
             if len < 1 || len as usize > s {
                 bail!("lane {lane}: true_len {len} outside [1, {s}]");
             }
-            for i in 0..len as usize {
+            let st = start[lane];
+            if st < 0 || st >= len {
+                bail!(
+                    "lane {lane}: start {st} outside [0, {len}) — at \
+                     least the final prompt position must be computed"
+                );
+            }
+            for i in st as usize..len as usize {
                 if tokens[lane * s + i] < 0 {
                     bail!("lane {lane}: negative token at {i}");
                 }
@@ -138,7 +179,7 @@ impl Backend for NativeRunner {
         }
         let vocab = self.model.cfg.vocab;
         let mut logits = vec![0.0f32; b * vocab];
-        let mut caches = self.empty_caches()?;
+        let mut caches = caches;
         if n_fresh == 0 {
             return Ok((HostTensor::F32(logits, vec![b, vocab]), caches));
         }
@@ -149,7 +190,7 @@ impl Backend for NativeRunner {
             steps.clear();
             for lane in 0..b {
                 let len = true_len[lane] as usize;
-                if !fresh[lane] || i >= len {
+                if !fresh[lane] || i >= len || i < start[lane] as usize {
                     continue;
                 }
                 steps.push(LaneStep {
@@ -377,6 +418,71 @@ mod tests {
             .prefill_lanes(&tokens, &[5, 0], &[true, false])
             .unwrap();
         assert_eq!(bad_len_ok.shape(), &[b, vocab]);
+    }
+
+    /// Seeding a lane's prefix rows and resuming the prefill mid-prompt
+    /// must reproduce the from-scratch prefill bitwise (the contract the
+    /// prefix radix cache's differential suite rides on).
+    #[test]
+    fn resumed_prefill_matches_full_prefill_bitwise() {
+        let runner = native_tiny(Variant::EliteKv { r: 4, d_ckv: 64 }, Some(4));
+        let (b, s) = runner.serve_shape().unwrap();
+        let mut tokens = vec![0i32; b * s];
+        for lane in 0..b {
+            for i in 0..9 {
+                tokens[lane * s + i] = (2 + 3 * lane + i) as i32;
+            }
+        }
+        let lens = vec![9i32; b];
+        let (full_logits, full_caches) =
+            runner.prefill(&tokens, &lens).unwrap();
+        // Seed fresh caches with the first 4 positions of each lane from
+        // the full run, then resume at start = 4.
+        let mut seeded = runner.empty_caches().unwrap();
+        for (dst, src) in seeded.iter_mut().zip(&full_caches) {
+            let shape = src.shape().to_vec();
+            let (l_n, b_n, s_n) = (shape[0], shape[1], shape[2]);
+            let w: usize = shape[3..].iter().product();
+            let d = dst.as_f32_mut().unwrap();
+            let sr = src.as_f32().unwrap();
+            for l in 0..l_n {
+                for lane in 0..b_n {
+                    for p in 0..4 {
+                        let off = ((l * b_n + lane) * s_n + p) * w;
+                        d[off..off + w].copy_from_slice(&sr[off..off + w]);
+                    }
+                }
+            }
+        }
+        let (res_logits, res_caches) = runner
+            .prefill_lanes_from(
+                &tokens,
+                &lens,
+                &vec![true; b],
+                &vec![4i32; b],
+                seeded,
+            )
+            .unwrap();
+        assert_eq!(
+            full_logits.as_f32().unwrap(),
+            res_logits.as_f32().unwrap(),
+            "resumed prefill logits diverge from full prefill"
+        );
+        for (f, r) in full_caches.iter().zip(&res_caches) {
+            assert_eq!(f.as_f32().unwrap(), r.as_f32().unwrap());
+        }
+        // start == len is rejected (nothing left to compute)
+        let err = runner
+            .prefill_lanes_from(
+                &tokens,
+                &lens,
+                &vec![true; b],
+                &vec![9i32; b],
+                runner.empty_caches().unwrap(),
+            )
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("final prompt position"), "{err}");
     }
 
     #[test]

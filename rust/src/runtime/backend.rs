@@ -64,6 +64,42 @@ pub trait Backend {
         self.prefill(tokens, true_len)
     }
 
+    /// True when this backend can resume a prefill mid-sequence
+    /// ([`Backend::prefill_lanes_from`] with nonzero `start`), which the
+    /// prefix radix cache needs. The native runner can; static-shape
+    /// AOT artifacts cannot.
+    fn supports_prefix_prefill(&self) -> bool {
+        false
+    }
+
+    /// [`Backend::prefill_lanes`] resuming from cached prefixes: lane
+    /// `i`'s positions `0..start[i]` are already present in the passed
+    /// `caches` (spliced there by the scheduler from the prefix radix
+    /// cache) and only `start[i]..true_len[i]` is computed, attending
+    /// over the seeded rows. Returns the final-position logits and the
+    /// caches with the computed suffix rows filled in.
+    ///
+    /// The default implementation only supports `start == 0` everywhere
+    /// (it ignores the seeded caches and forwards to
+    /// [`Backend::prefill_lanes`]); backends report real support via
+    /// [`Backend::supports_prefix_prefill`].
+    fn prefill_lanes_from(
+        &self,
+        tokens: &[i32],
+        true_len: &[i32],
+        fresh: &[bool],
+        start: &[i32],
+        caches: Vec<HostTensor>,
+    ) -> Result<(HostTensor, Vec<HostTensor>)> {
+        anyhow::ensure!(
+            start.iter().all(|&s| s == 0),
+            "this backend cannot resume a prefill mid-sequence \
+             (prefix cache requires native serving)"
+        );
+        drop(caches);
+        self.prefill_lanes(tokens, true_len, fresh)
+    }
+
     /// One decode step over explicit caches. `pallas` requests the
     /// Pallas-lowered artifact where the backend has one (PJRT elitekv
     /// variants); other backends ignore it.

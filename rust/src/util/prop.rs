@@ -3,28 +3,54 @@
 //! Deterministic, seeded case generation with failure reporting of the
 //! exact seed+case index so any failure replays. Used by the coordinator
 //! and kv-cache invariant suites (DESIGN.md S16).
+//!
+//! The case stream derives from the property name, optionally mixed with
+//! the `ELITEKV_PROP_SEED` environment variable (decimal or `0x` hex):
+//! CI pins it so failures reproduce verbatim from the logged value, and
+//! developers can sweep it to explore fresh cases without code changes.
 
 use crate::util::rng::Pcg64;
 
 /// Number of cases per property (kept modest: single-core CI budget).
 pub const DEFAULT_CASES: usize = 64;
 
+/// Environment variable mixed into every property's case stream.
+pub const PROP_SEED_ENV: &str = "ELITEKV_PROP_SEED";
+
+/// The `ELITEKV_PROP_SEED` override (0 when unset or unparsable).
+fn env_seed() -> u64 {
+    let Ok(raw) = std::env::var(PROP_SEED_ENV) else { return 0 };
+    let raw = raw.trim();
+    let parsed = match raw.strip_prefix("0x").or_else(|| raw.strip_prefix("0X"))
+    {
+        Some(hex) => u64::from_str_radix(hex, 16),
+        None => raw.parse(),
+    };
+    parsed.unwrap_or_else(|_| {
+        eprintln!("warning: ignoring unparsable {PROP_SEED_ENV}=`{raw}`");
+        0
+    })
+}
+
 /// Run `prop` against `cases` generated inputs. On failure, panics with
-/// the generating seed and case index for replay.
+/// the generating seed, case index, and `ELITEKV_PROP_SEED` value so the
+/// exact case replays.
 pub fn check<T, G, P>(name: &str, cases: usize, mut gen: G, mut prop: P)
 where
     T: std::fmt::Debug,
     G: FnMut(&mut Pcg64) -> T,
     P: FnMut(&T) -> Result<(), String>,
 {
-    let base_seed = fnv1a(name);
+    let env = env_seed();
+    let base_seed = fnv1a(name) ^ env;
     for case in 0..cases {
         let mut rng = Pcg64::new(base_seed, case as u64);
         let input = gen(&mut rng);
         if let Err(msg) = prop(&input) {
             panic!(
                 "property `{name}` failed at case {case} \
-                 (seed {base_seed:#x}): {msg}\ninput: {input:#?}"
+                 (seed {base_seed:#x}, {PROP_SEED_ENV}={env}): \
+                 {msg}\ninput: {input:#?}"
             );
         }
     }

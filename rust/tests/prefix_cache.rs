@@ -1,0 +1,278 @@
+//! Prefix radix cache differential suite (ISSUE 4): serving with
+//! `--prefix-cache` ON must be **bitwise** identical to serving with it
+//! OFF — same logits at every engine step, same final cache slabs, same
+//! greedy token streams — for shared-prefix batches across the dense
+//! (mha), split-latent (slrd), and shared-latent (jlrd 25 %) variants.
+//! This extends the `rust/tests/batched_decode.rs` determinism contract
+//! to the sharing path: a cached prefix row spliced into a lane must be
+//! indistinguishable from recomputing it.
+//!
+//! Plus the failure-path cases: LRU eviction under pool pressure keeps
+//! the allocator consistent and every request correct, a prompt that
+//! diverges inside a block reuses exactly the shared full blocks, and a
+//! fully-cached prompt still prefills its final position.
+
+use elitekv::config::{ModelConfig, Variant};
+use elitekv::coordinator::{
+    GenParams, InferenceServer, Request, SchedulerConfig,
+};
+use elitekv::native::{NativeModel, NativeRunner};
+use elitekv::search::uniform_selection;
+
+/// Engine with `lanes` decode lanes over a 64-token window.
+fn server(
+    variant: Variant,
+    sel_r: Option<usize>,
+    lanes: usize,
+    budget: usize,
+    prefix_cache: bool,
+) -> InferenceServer {
+    let cfg = ModelConfig::tiny();
+    let sel = sel_r.map(|r| uniform_selection(&cfg, r));
+    let model =
+        NativeModel::init(&cfg, variant, 0x9e7, sel.as_ref()).unwrap();
+    let runner = NativeRunner::new(model, lanes, 64).unwrap();
+    let cfg = SchedulerConfig {
+        cache_budget_bytes: budget,
+        prefix_cache,
+        ..Default::default()
+    };
+    InferenceServer::with_config(Box::new(runner), &cfg).unwrap()
+}
+
+fn greedy(id: u64, prompt: Vec<u32>, max_new: usize) -> Request {
+    Request::new(
+        id,
+        prompt,
+        GenParams {
+            max_new_tokens: max_new,
+            stop_token: None,
+            temperature: 0.0,
+            ..Default::default()
+        },
+    )
+}
+
+/// A 32-token (two 16-token blocks) shared system prompt plus distinct
+/// per-request tails.
+fn shared_prefix_prompts(n: usize) -> Vec<Vec<u32>> {
+    let mut gen = elitekv::data::CorpusGen::new(512, 23);
+    let shared = gen.stream(32);
+    (0..n)
+        .map(|i| {
+            let mut p = shared.clone();
+            p.extend(gen.stream(5 + 3 * (i % 3)));
+            p
+        })
+        .collect()
+}
+
+/// THE differential pin: drive identical request streams through a
+/// cache-on and a cache-off engine in lockstep and require bitwise
+/// equality of the logits after every engine step, of the final cache
+/// slabs, and of the greedy token streams — while the cache-on engine
+/// demonstrably hits (it prefills fewer tokens).
+fn assert_on_off_bitwise(variant: Variant, sel_r: Option<usize>) {
+    let budget = 8 << 20; // roomy: admission timing identical on/off
+    let mut on = server(variant.clone(), sel_r, 3, budget, true);
+    let mut off = server(variant.clone(), sel_r, 3, budget, false);
+    let prompts = shared_prefix_prompts(5);
+    let tag = variant.tag();
+
+    // Phase 1: request 0 alone — its completion seeds the radix cache.
+    // Phase 2: the remaining requests, overlapping on the lanes — every
+    // admission after the first can hit the shared prefix.
+    let phases: [&[usize]; 2] = [&[0], &[1, 2, 3, 4]];
+    let mut responses_on = Vec::new();
+    let mut responses_off = Vec::new();
+    for phase in phases {
+        for &i in phase {
+            let max_new = 3 + (i % 4);
+            on.submit(greedy(i as u64, prompts[i].clone(), max_new))
+                .unwrap();
+            off.submit(greedy(i as u64, prompts[i].clone(), max_new))
+                .unwrap();
+        }
+        while on.busy() || off.busy() {
+            responses_on.extend(on.step().unwrap());
+            responses_off.extend(off.step().unwrap());
+            match (on.logits_snapshot(), off.logits_snapshot()) {
+                (Some(a), Some(b)) => assert_eq!(
+                    a.as_f32().unwrap(),
+                    b.as_f32().unwrap(),
+                    "{tag}: logits diverge with the prefix cache on"
+                ),
+                (a, b) => assert_eq!(
+                    a.is_some(),
+                    b.is_some(),
+                    "{tag}: engines desynchronized"
+                ),
+            }
+        }
+    }
+    // Final cache slabs bitwise identical (stale lane rows included:
+    // both engines wrote the same values in the same places).
+    for (sa, sb) in on.cache_snapshot().iter().zip(off.cache_snapshot()) {
+        assert_eq!(
+            sa.as_f32().unwrap(),
+            sb.as_f32().unwrap(),
+            "{tag}: final cache slabs diverge"
+        );
+    }
+    responses_on.sort_by_key(|r| r.id);
+    responses_off.sort_by_key(|r| r.id);
+    assert_eq!(responses_on.len(), 5);
+    for (a, b) in responses_on.iter().zip(&responses_off) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(
+            a.tokens, b.tokens,
+            "{tag}: request {} tokens diverge",
+            a.id
+        );
+    }
+    // ...and the sharing actually happened: phase-2 admissions hit the
+    // 32-token prefix, so the cache-on engine prefilled strictly less.
+    assert!(
+        on.stats.prefix_hits >= 4,
+        "{tag}: only {} prefix hits",
+        on.stats.prefix_hits
+    );
+    assert!(
+        on.stats.prefix_hit_tokens >= 4 * 32,
+        "{tag}: only {} tokens reused",
+        on.stats.prefix_hit_tokens
+    );
+    assert!(
+        on.stats.prefill_tokens < off.stats.prefill_tokens,
+        "{tag}: cache on prefilled {} tokens, off {}",
+        on.stats.prefill_tokens,
+        off.stats.prefill_tokens
+    );
+    assert_eq!(off.stats.prefix_hits, 0);
+    on.queue.allocator.check_invariants().unwrap();
+    off.queue.allocator.check_invariants().unwrap();
+}
+
+#[test]
+fn on_off_bitwise_mha() {
+    assert_on_off_bitwise(Variant::Mha, None);
+}
+
+#[test]
+fn on_off_bitwise_slrd() {
+    assert_on_off_bitwise(Variant::Slrd { r: 4, d_ck: 32, d_cv: 48 }, Some(4));
+}
+
+#[test]
+fn on_off_bitwise_jlrd_25pct() {
+    assert_on_off_bitwise(Variant::EliteKv { r: 4, d_ckv: 64 }, Some(4));
+}
+
+/// Pool pressure: a tight pool forces LRU eviction of cached prefixes;
+/// every request must still complete with the correct token counts and
+/// the pool must stay consistent. (J-LRD tiny layout: 2 KiB/token, so a
+/// 192 KiB budget is exactly six 16-token blocks.)
+#[test]
+fn eviction_under_pressure_stays_correct_and_consistent() {
+    let var = Variant::EliteKv { r: 4, d_ckv: 64 };
+    let mut s = server(var.clone(), Some(4), 1, 192 << 10, false);
+    assert_eq!(s.queue.allocator.n_blocks(), 6, "budget sizing changed");
+    let mut on = server(var, Some(4), 1, 192 << 10, true);
+
+    // three DISTINCT 32-token prompts: each completion caches 2 blocks,
+    // so the third admission (3 fresh blocks needed, 2 free) must evict
+    let mut gen = elitekv::data::CorpusGen::new(512, 77);
+    let prompts: Vec<Vec<u32>> = (0..3).map(|_| gen.stream(32)).collect();
+    for (i, p) in prompts.iter().enumerate() {
+        s.submit(greedy(i as u64, p.clone(), 8)).unwrap();
+        on.submit(greedy(i as u64, p.clone(), 8)).unwrap();
+    }
+    let mut base = s.run_to_completion().unwrap();
+    let mut out = on.run_to_completion().unwrap();
+    base.sort_by_key(|r| r.id);
+    out.sort_by_key(|r| r.id);
+    assert_eq!(out.len(), 3);
+    for (a, b) in out.iter().zip(&base) {
+        assert_eq!(a.tokens.len(), 8);
+        assert_eq!(a.tokens, b.tokens, "eviction changed request {}", a.id);
+    }
+    assert!(
+        on.stats.prefix_evicted_blocks >= 2,
+        "no eviction under a 6-block pool ({} evicted)",
+        on.stats.prefix_evicted_blocks
+    );
+    // conservation: everything not cached is back in the free pool
+    let a = &on.queue.allocator;
+    assert_eq!(
+        a.free_blocks() + on.stats.prefix_cached_blocks,
+        a.n_blocks(),
+        "blocks leaked past the cache"
+    );
+    a.check_invariants().unwrap();
+}
+
+/// Prompts that share exactly one full block and then diverge INSIDE the
+/// second block must reuse exactly one block — and still decode
+/// identically to a cache-off engine.
+#[test]
+fn divergence_inside_a_block_shares_only_whole_blocks() {
+    let var = Variant::EliteKv { r: 4, d_ckv: 64 };
+    let mut on = server(var.clone(), Some(4), 1, 8 << 20, true);
+    let mut off = server(var, Some(4), 1, 8 << 20, false);
+    let mut gen = elitekv::data::CorpusGen::new(512, 31);
+    let a = gen.stream(36);
+    let mut b = a.clone();
+    b[20] ^= 1; // diverge mid second block (tokens 16..32)
+
+    for (i, p) in [&a, &b].into_iter().enumerate() {
+        on.submit(greedy(i as u64, p.clone(), 5)).unwrap();
+        off.submit(greedy(i as u64, p.clone(), 5)).unwrap();
+    }
+    let mut r_on = on.run_to_completion().unwrap();
+    let mut r_off = off.run_to_completion().unwrap();
+    r_on.sort_by_key(|r| r.id);
+    r_off.sort_by_key(|r| r.id);
+    for (x, y) in r_on.iter().zip(&r_off) {
+        assert_eq!(x.tokens, y.tokens, "request {} diverged", x.id);
+    }
+    // request 1 matched request 0's first block only: 16 tokens, not 32
+    assert_eq!(on.stats.prefix_hits, 1);
+    assert_eq!(on.stats.prefix_hit_tokens, 16);
+    on.queue.allocator.check_invariants().unwrap();
+}
+
+/// A prompt IDENTICAL to a cached one cannot be served fully from the
+/// cache: the final prompt position must still be prefilled to produce
+/// first logits, so the hit is capped one block short.
+#[test]
+fn fully_cached_prompt_still_prefills_the_final_position() {
+    let var = Variant::EliteKv { r: 4, d_ckv: 64 };
+    let mut on = server(var.clone(), Some(4), 1, 8 << 20, true);
+    let mut off = server(var, Some(4), 1, 8 << 20, false);
+    let mut gen = elitekv::data::CorpusGen::new(512, 41);
+    let p = gen.stream(32); // exactly two blocks
+
+    for i in 0..2u64 {
+        on.submit(greedy(i, p.clone(), 6)).unwrap();
+        off.submit(greedy(i, p.clone(), 6)).unwrap();
+    }
+    let mut r_on = on.run_to_completion().unwrap();
+    let mut r_off = off.run_to_completion().unwrap();
+    r_on.sort_by_key(|r| r.id);
+    r_off.sort_by_key(|r| r.id);
+    assert_eq!(r_on.len(), 2);
+    for (x, y) in r_on.iter().zip(&r_off) {
+        assert_eq!(x.tokens.len(), 6);
+        assert_eq!(x.tokens, y.tokens);
+    }
+    // cap: 32-token prompt, 31-token ceiling -> one 16-token block hit
+    assert_eq!(on.stats.prefix_hits, 1);
+    assert_eq!(on.stats.prefix_hit_tokens, 16);
+    // the second request still prefilled its last 16 tokens
+    assert_eq!(
+        on.stats.prefill_tokens,
+        32 + 16,
+        "suffix prefill accounting off"
+    );
+    on.queue.allocator.check_invariants().unwrap();
+}

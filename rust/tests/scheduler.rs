@@ -72,9 +72,9 @@ fn admission_at_exactly_full_pool() {
     assert_eq!(q.len(), 1);
 
     // one release later it fits
-    let (_r, slot, chain) = &admitted[0];
-    slots.free(*slot);
-    q.release(chain);
+    let adm = &admitted[0];
+    slots.free(adm.slot);
+    q.release(&adm.chain);
     let third = q.admit(&mut slots);
     assert_eq!(third.len(), 1);
     q.allocator.check_invariants().unwrap();
@@ -126,20 +126,20 @@ fn release_then_readmit_reuses_freed_blocks() {
     q.push(req(0, 24, 24)); // 3 blocks: whole pool
     let first = q.admit(&mut slots);
     assert_eq!(first.len(), 1);
-    let (_r, slot, chain) = &first[0];
-    let mut owned: Vec<u32> = chain.clone();
+    let adm = &first[0];
+    let mut owned: Vec<u32> = adm.chain.clone();
     owned.sort_unstable();
 
     // finish request 0
-    slots.free(*slot);
-    q.release(chain);
+    slots.free(adm.slot);
+    q.release(&adm.chain);
     assert_eq!(q.allocator.free_blocks(), 3);
 
     // request 1 must be served from the same physical blocks
     q.push(req(1, 20, 20));
     let second = q.admit(&mut slots);
     assert_eq!(second.len(), 1);
-    let mut reused: Vec<u32> = second[0].2.clone();
+    let mut reused: Vec<u32> = second[0].chain.clone();
     reused.sort_unstable();
     assert_eq!(reused, owned, "freed blocks must be recycled");
     q.allocator.check_invariants().unwrap();
