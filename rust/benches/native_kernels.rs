@@ -55,6 +55,65 @@ fn bench_logits(cfg: &ModelConfig, m: usize) {
     );
 }
 
+/// Time the fused-dequant latent GEMMs (DESIGN.md S19) at a decode-like
+/// shape: scores `S = q_lat · Cᵀ` over `len` quantized latent rows and
+/// `O_lat = P · C` back, vs their f32 twins on the dequantized window.
+fn bench_q8_latent(cfg: &ModelConfig, len: usize) {
+    use elitekv::kvcache::quant::{n_groups, quantize_row, QUANT_GROUP};
+    use elitekv::native::kernels::{sgemm_nt_q8, sgemm_q8, sgemm_raw};
+    let (nh, d_c) = (cfg.n_heads, cfg.d_model / 4);
+    let mut rng = Pcg64::seeded(0x48);
+    let q_lat = Tensor::randn(vec![nh, d_c], &mut rng).data;
+    let c_rows = Tensor::randn(vec![len, d_c], &mut rng).data;
+    let g = n_groups(d_c, QUANT_GROUP);
+    let mut cq = vec![0i8; len * d_c];
+    let mut cs = vec![0.0f32; len * g];
+    for j in 0..len {
+        quantize_row(
+            &c_rows[j * d_c..(j + 1) * d_c],
+            QUANT_GROUP,
+            &mut cq[j * d_c..(j + 1) * d_c],
+            &mut cs[j * g..(j + 1) * g],
+        );
+    }
+    let t = threads();
+    let mut scores = vec![0.0f32; nh * len];
+    bench_ns(
+        &format!("sgemm_nt_q8/{}/len{len}", cfg.name),
+        BenchOpts { warmup_iters: 2, iters: 15 },
+        || {
+            sgemm_nt_q8(&q_lat, nh, d_c, &cq, &cs, QUANT_GROUP, len, &mut scores, t);
+            std::hint::black_box(&scores);
+        },
+    );
+    bench_ns(
+        &format!("sgemm_nt/f32-twin/{}/len{len}", cfg.name),
+        BenchOpts { warmup_iters: 2, iters: 15 },
+        || {
+            sgemm_nt(&q_lat, nh, d_c, &c_rows, len, &mut scores, t);
+            std::hint::black_box(&scores);
+        },
+    );
+    let p = Tensor::randn(vec![nh, len], &mut rng).data;
+    let mut o_lat = vec![0.0f32; nh * d_c];
+    bench_ns(
+        &format!("sgemm_q8/{}/len{len}", cfg.name),
+        BenchOpts { warmup_iters: 2, iters: 15 },
+        || {
+            sgemm_q8(&p, nh, len, &cq, &cs, QUANT_GROUP, d_c, &mut o_lat, t, false);
+            std::hint::black_box(&o_lat);
+        },
+    );
+    bench_ns(
+        &format!("sgemm_raw/f32-twin/{}/len{len}", cfg.name),
+        BenchOpts { warmup_iters: 2, iters: 15 },
+        || {
+            sgemm_raw(&p, nh, len, &c_rows, d_c, &mut o_lat, t, false);
+            std::hint::black_box(&o_lat);
+        },
+    );
+}
+
 /// Time one full batched decode step for a serving variant.
 fn bench_decode_step(cfg: &ModelConfig, variant: Variant, lanes: usize) {
     let tag = variant.tag();
@@ -109,6 +168,9 @@ fn main() {
             bench_sgemm(&format!("{}/qkv", cfg.name), m, d, nh * dh);
             bench_sgemm(&format!("{}/mlp", cfg.name), m, d, ffn);
             bench_logits(&cfg, m);
+        }
+        for len in [64usize, 192] {
+            bench_q8_latent(&cfg, len);
         }
         let nc = cfg.n_chunks();
         for variant in [

@@ -24,7 +24,7 @@ use anyhow::{ensure, Context, Result};
 use crate::bench::microbench::{bench_ns, BenchOpts};
 use crate::config::{ModelConfig, Variant};
 use crate::convert::EliteSelection;
-use crate::kvcache::CacheLayout;
+use crate::kvcache::{CacheDtype, CacheLayout};
 use crate::native::kernels::sgemm;
 use crate::native::{NativeModel, NativeRunner};
 use crate::runtime::Backend;
@@ -155,12 +155,15 @@ fn gemm_microbench(cfg: &ModelConfig, variant: &Variant, m: usize) -> (f64, f64)
     (ns_per_call, gflops)
 }
 
-/// Run one variant: prefill `batch` prompts, then `decode_steps` timed
-/// steps through the batched kernel path; returns the measured record.
+/// Run one variant at one cache dtype: prefill `batch` prompts, then
+/// `decode_steps` timed steps through the batched kernel path (fused
+/// dequant at int8); returns the measured record.
 fn bench_variant(
     cfg: &ModelConfig,
     variant: &Variant,
     opts: &NativeBenchOpts,
+    dtype: CacheDtype,
+    gemm: (f64, f64),
 ) -> Result<Json> {
     ensure!(opts.prompt_len >= 1, "--prompt must be at least 1");
     ensure!(
@@ -172,7 +175,9 @@ fn bench_variant(
         opts.max_seq
     );
     let sel = selection_for(cfg, variant);
-    let model = NativeModel::init(cfg, variant.clone(), 0xbe7c, sel.as_ref())?;
+    let mut model =
+        NativeModel::init(cfg, variant.clone(), 0xbe7c, sel.as_ref())?;
+    model.set_cache_dtype(dtype);
     let runner = NativeRunner::new(model, opts.batch, opts.max_seq)?;
     let (b, s) = runner.serve_shape()?;
     let mut tokens = vec![0i32; b * s];
@@ -202,10 +207,11 @@ fn bench_variant(
     let wall = t_total.elapsed().as_secs_f64();
     let decoded = b * opts.decode_steps;
     let s_stats = Summary::of(&step_ms);
-    let (gemm_ns, gemm_gflops) = gemm_microbench(cfg, variant, opts.batch);
-    let layout = CacheLayout::new(cfg, variant.clone());
+    let (gemm_ns, gemm_gflops) = gemm;
+    let layout = CacheLayout::with_dtype(cfg, variant.clone(), dtype);
     Ok(Json::obj(vec![
         ("variant", Json::str(&variant.tag())),
+        ("cache_dtype", Json::str(dtype.tag())),
         ("r", Json::num(variant.r().unwrap_or(0) as f64)),
         (
             "d_ckv",
@@ -238,18 +244,27 @@ pub fn native_decode_bench(
 ) -> Result<Json> {
     let mut rows = Vec::new();
     for variant in variants {
-        log::info!("native bench: {}", variant.tag());
-        let row = bench_variant(cfg, variant, opts)
-            .with_context(|| format!("bench {}", variant.tag()))?;
-        println!(
-            "bench native_decode/{:<24} {:>8.1} tok/s  p50 {:>7.3} ms  \
-             {:>6} B/token",
-            variant.tag(),
-            row.req("tokens_per_s").as_f64().unwrap_or(0.0),
-            row.req("step_ms_p50").as_f64().unwrap_or(0.0),
-            row.req("cache_bytes_per_token").as_usize().unwrap_or(0),
-        );
-        rows.push(row);
+        // The projection-GEMM microbench times the dtype-independent
+        // f32 weight GEMMs (weights are never quantized): measure once
+        // per variant and share it across the f32/int8 pair.
+        let gemm = gemm_microbench(cfg, variant, opts.batch);
+        for dtype in [CacheDtype::F32, CacheDtype::Int8] {
+            log::info!("native bench: {} ({})", variant.tag(), dtype.tag());
+            let row = bench_variant(cfg, variant, opts, dtype, gemm)
+                .with_context(|| {
+                    format!("bench {} ({})", variant.tag(), dtype.tag())
+                })?;
+            println!(
+                "bench native_decode/{:<24} {:<4} {:>8.1} tok/s  p50 \
+                 {:>7.3} ms  {:>6} B/token",
+                variant.tag(),
+                dtype.tag(),
+                row.req("tokens_per_s").as_f64().unwrap_or(0.0),
+                row.req("step_ms_p50").as_f64().unwrap_or(0.0),
+                row.req("cache_bytes_per_token").as_usize().unwrap_or(0),
+            );
+            rows.push(row);
+        }
     }
     let json = Json::obj(vec![
         ("experiment", Json::str("native_decode")),
@@ -290,17 +305,28 @@ mod tests {
         let json =
             native_decode_bench(&cfg, &variants, &opts, &dir).unwrap();
         let rows = json.req("rows").as_arr().unwrap();
-        assert_eq!(rows.len(), 2);
+        // every variant is measured as an f32/int8 pair
+        assert_eq!(rows.len(), 4);
         for row in rows {
             assert!(row.req("tokens_per_s").as_f64().unwrap() > 0.0);
             assert!(row.req("cache_bytes_per_token").as_usize().unwrap() > 0);
             assert!(row.req("gemm_ns_per_call").as_f64().unwrap() > 0.0);
             assert!(row.req("gemm_gflops").as_f64().unwrap() > 0.0);
         }
-        // compressed point caches fewer bytes than dense
+        // compressed point caches fewer bytes than dense (f32 rows), and
+        // each int8 row is exactly a quarter of its f32 sibling
         let dense = rows[0].req("cache_bytes_per_token").as_f64().unwrap();
-        let comp = rows[1].req("cache_bytes_per_token").as_f64().unwrap();
+        let comp = rows[2].req("cache_bytes_per_token").as_f64().unwrap();
         assert!(comp < dense);
+        for pair in rows.chunks(2) {
+            assert_eq!(pair[0].req("cache_dtype").as_str(), Some("f32"));
+            assert_eq!(pair[1].req("cache_dtype").as_str(), Some("int8"));
+            let bf =
+                pair[0].req("cache_bytes_per_token").as_usize().unwrap();
+            let bq =
+                pair[1].req("cache_bytes_per_token").as_usize().unwrap();
+            assert_eq!(bq * 4, bf);
+        }
         let text = std::fs::read_to_string(&dir).unwrap();
         assert!(Json::parse(&text).is_ok());
         std::fs::remove_file(dir).ok();

@@ -16,7 +16,7 @@ use anyhow::{Context, Result};
 use crate::config::{ModelConfig, Variant};
 use crate::coordinator::scheduler::{ArrivalTrace, SchedulerConfig, TraceOpts};
 use crate::coordinator::InferenceServer;
-use crate::kvcache::CacheLayout;
+use crate::kvcache::{CacheDtype, CacheLayout};
 use crate::native::{NativeModel, NativeRunner};
 use crate::search::uniform_selection;
 use crate::util::Json;
@@ -83,8 +83,9 @@ pub fn default_variants(cfg: &ModelConfig) -> Vec<Variant> {
 
 /// Replay `trace` through a fresh engine for one variant; returns the
 /// measured record. `trace_tag` labels the workload ("mixed" /
-/// "shared_prefix") and `prefix_cache` toggles the radix cache for this
-/// run.
+/// "shared_prefix"), `prefix_cache` toggles the radix cache, and
+/// `dtype` selects the cache element storage (the backend's slabs AND
+/// the scheduler's byte accounting) for this run.
 fn bench_variant(
     cfg: &ModelConfig,
     variant: &Variant,
@@ -92,13 +93,18 @@ fn bench_variant(
     trace: &ArrivalTrace,
     trace_tag: &str,
     prefix_cache: bool,
+    dtype: CacheDtype,
 ) -> Result<Json> {
     let sel = variant.r().map(|r| uniform_selection(cfg, r));
-    let model =
+    let mut model =
         NativeModel::init(cfg, variant.clone(), opts.seed, sel.as_ref())?;
+    model.set_cache_dtype(dtype);
     let runner = NativeRunner::new(model, opts.max_batch, opts.max_seq)?;
-    let scheduler =
-        SchedulerConfig { prefix_cache, ..opts.scheduler.clone() };
+    let scheduler = SchedulerConfig {
+        prefix_cache,
+        cache_dtype: dtype,
+        ..opts.scheduler.clone()
+    };
     let mut server =
         InferenceServer::with_config(Box::new(runner), &scheduler)?;
 
@@ -130,11 +136,12 @@ fn bench_variant(
     } else {
         crate::util::stats::percentile(&waits, 0.99)
     };
-    let layout = CacheLayout::new(cfg, variant.clone());
+    let layout = CacheLayout::with_dtype(cfg, variant.clone(), dtype);
     Ok(Json::obj(vec![
         ("variant", Json::str(variant.tag())),
         ("trace", Json::str(trace_tag)),
         ("prefix_cache", Json::Bool(prefix_cache)),
+        ("cache_dtype", Json::str(dtype.tag())),
         ("cache_ratio", Json::num(layout.ratio)),
         ("cache_bytes_per_token", Json::num(layout.bytes_per_token() as f64)),
         ("pool_blocks", Json::num(stats.blocks_total as f64)),
@@ -186,23 +193,34 @@ pub fn continuous_batching_bench(
     for variant in variants {
         log::info!("continuous-batching bench: {}", variant.tag());
         // The mixed run honors the caller's `--prefix-cache` policy
-        // (default off); the shared-prefix pair is always measured with
-        // the cache off AND on so the JSON carries the direct saving.
-        let mut runs: Vec<(&ArrivalTrace, &str, bool)> =
-            vec![(&trace, "mixed", opts.scheduler.prefix_cache)];
+        // (default off) and is measured as an f32/int8 PAIR — the same
+        // trace under the same byte budget, so the JSON carries the
+        // capacity effect of the dtype axis directly. The shared-prefix
+        // pair is always measured with the radix cache off AND on, at
+        // the caller's dtype.
+        let mut runs: Vec<(&ArrivalTrace, &str, bool, CacheDtype)> = vec![
+            (&trace, "mixed", opts.scheduler.prefix_cache, CacheDtype::F32),
+            (&trace, "mixed", opts.scheduler.prefix_cache, CacheDtype::Int8),
+        ];
         if let Some(st) = &shared_trace {
-            runs.push((st, "shared_prefix", false));
-            runs.push((st, "shared_prefix", true));
+            runs.push((
+                st,
+                "shared_prefix",
+                false,
+                opts.scheduler.cache_dtype,
+            ));
+            runs.push((st, "shared_prefix", true, opts.scheduler.cache_dtype));
         }
-        for (t, tag, pc) in runs {
-            let row = bench_variant(cfg, variant, opts, t, tag, pc)
+        for (t, tag, pc, dtype) in runs {
+            let row = bench_variant(cfg, variant, opts, t, tag, pc, dtype)
                 .with_context(|| format!("bench {} ({tag})", variant.tag()))?;
             println!(
-                "bench continuous_batching/{:<22} {:<13} cache={:<3} \
+                "bench continuous_batching/{:<22} {:<13} {:<4} cache={:<3} \
                  {:>4} max-concurrency  {:>8.1} tok/s  prefill toks \
                  {:>6}  hits {:>3}",
                 variant.tag(),
                 tag,
+                dtype.tag(),
                 if pc { "on" } else { "off" },
                 row.req("max_concurrency").as_usize().unwrap_or(0),
                 row.req("tokens_per_s").as_f64().unwrap_or(0.0),
@@ -269,7 +287,10 @@ mod tests {
             .as_arr()
             .unwrap()
             .iter()
-            .filter(|r| r.req("trace").as_str() == Some("mixed"))
+            .filter(|r| {
+                r.req("trace").as_str() == Some("mixed")
+                    && r.req("cache_dtype").as_str() == Some("f32")
+            })
             .collect();
         assert_eq!(rows.len(), 2);
         let mha = rows[0].req("max_concurrency").as_usize().unwrap();
@@ -283,6 +304,78 @@ mod tests {
         let text = std::fs::read_to_string(&out).unwrap();
         assert!(Json::parse(&text).is_ok());
         std::fs::remove_file(out).ok();
+    }
+
+    /// The S19 acceptance property: at the SAME `--cache-budget-mb`,
+    /// int8 strictly raises max concurrency over f32 for EVERY variant
+    /// of the pair — the quantized pool holds 4x the blocks, and with
+    /// enough lanes and a bursty trace the admission cap moves with it.
+    /// Completion counts stay equal (quantization changes bytes, never
+    /// the request stream).
+    #[test]
+    fn int8_strictly_raises_concurrency_at_same_budget() {
+        let cfg = ModelConfig::tiny();
+        let default = ServeBenchOpts::default();
+        let opts = ServeBenchOpts {
+            // enough lanes that the pool, not the lane count, caps f32
+            // concurrency for both variants: at the 1 MiB budget and 2
+            // blocks/request, dense f32 admits 4 (8-block pool), dense
+            // int8 16; jlrd f32 admits 16, jlrd int8 all 24 (128-block
+            // pool, request-bound)
+            max_batch: 24,
+            trace: TraceOpts {
+                n_requests: 24,
+                inter_arrival_steps: 0, // burst: expose the admission cap
+                ..default.trace.clone()
+            },
+            shared_prefix_tokens: 0, // mixed pairs only: keep it fast
+            ..default
+        };
+        let out = std::env::temp_dir().join("elitekv_cb_int8_test.json");
+        let variants = default_variants(&cfg);
+        let json =
+            continuous_batching_bench(&cfg, &variants, &opts, &out).unwrap();
+        std::fs::remove_file(&out).ok();
+        for variant in &variants {
+            let tag = variant.tag();
+            let find = |dtype: &str| {
+                json.req("rows")
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .find(|r| {
+                        r.req("variant").as_str() == Some(tag.as_str())
+                            && r.req("cache_dtype").as_str() == Some(dtype)
+                    })
+                    .cloned()
+                    .unwrap()
+            };
+            let (f, q) = (find("f32"), find("int8"));
+            // the byte identity the concurrency claim rides on
+            let (bf, bq) = (
+                f.req("cache_bytes_per_token").as_usize().unwrap(),
+                q.req("cache_bytes_per_token").as_usize().unwrap(),
+            );
+            assert_eq!(bq * 4, bf, "{tag}: int8 bytes/token != f32/4");
+            assert_eq!(
+                q.req("pool_blocks").as_usize().unwrap(),
+                4 * f.req("pool_blocks").as_usize().unwrap(),
+                "{tag}: int8 pool != 4x f32 pool at one budget"
+            );
+            let (cf, cq) = (
+                f.req("max_concurrency").as_usize().unwrap(),
+                q.req("max_concurrency").as_usize().unwrap(),
+            );
+            assert!(
+                cq > cf,
+                "{tag}: int8 concurrency {cq} !> f32 {cf} at equal budget"
+            );
+            assert_eq!(
+                f.req("completed").as_usize().unwrap(),
+                q.req("completed").as_usize().unwrap(),
+                "{tag}: completions diverge across dtypes"
+            );
+        }
     }
 
     /// The shared-prefix acceptance property (ISSUE 4): with the radix

@@ -12,6 +12,7 @@ use anyhow::Result;
 
 use crate::coordinator::api::Request;
 use crate::kvcache::block::BlockId;
+use crate::kvcache::quant::SlabRows;
 use crate::kvcache::radix::{PrefixHit, PrefixStats, RadixCache};
 use crate::kvcache::{BlockAllocator, SlotManager};
 
@@ -31,8 +32,9 @@ pub struct Admission {
     /// multiple of `block_tokens` and strictly less than the prompt).
     pub cached_tokens: usize,
     /// Stored slab rows for the cached tokens, one `[L, cached, w]`
-    /// buffer per cache slab (empty when `cached_tokens == 0`).
-    pub cached_rows: Vec<Vec<f32>>,
+    /// payload per cache slab in the engine's cache dtype (empty when
+    /// `cached_tokens == 0`).
+    pub cached_rows: Vec<SlabRows>,
 }
 
 /// FIFO queue with block-budget admission control.
@@ -248,7 +250,7 @@ impl AdmissionQueue {
         rows: F,
     ) -> Result<usize>
     where
-        F: FnOnce() -> Result<Vec<Vec<f32>>>,
+        F: FnOnce() -> Result<Vec<SlabRows>>,
     {
         match &mut self.prefix {
             Some(pc) => pc.insert(tokens, chain, rows, &mut self.allocator),
@@ -333,7 +335,12 @@ mod tests {
         let cfg = ModelConfig::tiny();
         let layout = CacheLayout::new(&cfg, Variant::Mha);
         let mut q = AdmissionQueue::new(BlockAllocator::new(8, 4));
-        q.prefix = Some(RadixCache::new(4, cfg.n_layers, vec![2, 2]));
+        q.prefix = Some(RadixCache::new(
+            4,
+            cfg.n_layers,
+            vec![2, 2],
+            crate::kvcache::CacheDtype::F32,
+        ));
         let mut slots = SlotManager::new(layout, 2, 256);
 
         // request 0: 8-token prompt (2 blocks) + 4 new -> 3 blocks
@@ -344,8 +351,10 @@ mod tests {
         let adm = &first[0];
         // finish request 0: insert its prompt prefix, then release
         let l = cfg.n_layers;
-        let rows: Vec<Vec<f32>> =
-            vec![vec![1.0; l * 8 * 2], vec![2.0; l * 8 * 2]];
+        let rows: Vec<SlabRows> = vec![
+            SlabRows::F32(vec![1.0; l * 8 * 2]),
+            SlabRows::F32(vec![2.0; l * 8 * 2]),
+        ];
         let cached = q
             .prefix_insert(&adm.request.prompt, &adm.chain, || Ok(rows))
             .unwrap();
@@ -360,7 +369,10 @@ mod tests {
         // cap is prompt-1 = 7 tokens -> only 1 of 2 blocks reusable
         assert_eq!(second[0].cached_tokens, 4);
         assert_eq!(second[0].cached_rows.len(), 2);
-        assert_eq!(second[0].cached_rows[0].len(), l * 4 * 2);
+        let SlabRows::F32(row0) = &second[0].cached_rows[0] else {
+            panic!("expected f32 rows")
+        };
+        assert_eq!(row0.len(), l * 4 * 2);
         let stats = q.prefix_stats().unwrap();
         assert_eq!((stats.hits, stats.misses), (1, 1));
         assert_eq!(stats.hit_tokens, 4);
@@ -374,7 +386,12 @@ mod tests {
         let cfg = ModelConfig::tiny();
         let layout = CacheLayout::new(&cfg, Variant::Mha);
         let mut q = AdmissionQueue::new(BlockAllocator::new(4, 4));
-        q.prefix = Some(RadixCache::new(4, cfg.n_layers, vec![1]));
+        q.prefix = Some(RadixCache::new(
+            4,
+            cfg.n_layers,
+            vec![1],
+            crate::kvcache::CacheDtype::F32,
+        ));
         let mut slots = SlotManager::new(layout, 2, 256);
         let l = cfg.n_layers;
 
@@ -384,7 +401,7 @@ mod tests {
         let first = q.admit(&mut slots);
         assert_eq!(first.len(), 1);
         let adm = &first[0];
-        let rows = vec![vec![0.5; l * 8]];
+        let rows = vec![SlabRows::F32(vec![0.5; l * 8])];
         q.prefix_insert(&adm.request.prompt, &adm.chain, || Ok(rows))
             .unwrap();
         slots.free(adm.slot);

@@ -16,6 +16,7 @@
 
 use crate::coordinator::api::{GenParams, Request};
 use crate::data::CorpusGen;
+use crate::kvcache::CacheDtype;
 use crate::util::Pcg64;
 
 /// Policy + sizing of the continuous-batching scheduler.
@@ -36,6 +37,13 @@ pub struct SchedulerConfig {
     /// S18). Requires a backend that supports mid-sequence prefill
     /// resume (the native runner; not the static PJRT artifacts).
     pub prefix_cache: bool,
+    /// Cache element dtype (`--cache-dtype`, DESIGN.md S19). The
+    /// budget-to-block-count math divides the byte budget by the
+    /// *dtype-aware* `CacheLayout::bytes_per_token`, so the same
+    /// `--cache-budget-mb` admits ~4x the tokens at int8 — compression
+    /// compounding straight into concurrency. Must match the backend's
+    /// slabs; the engine constructor enforces agreement.
+    pub cache_dtype: CacheDtype,
 }
 
 impl Default for SchedulerConfig {
@@ -45,6 +53,7 @@ impl Default for SchedulerConfig {
             cache_budget_bytes: 64 << 20,
             conservative: true,
             prefix_cache: false,
+            cache_dtype: CacheDtype::F32,
         }
     }
 }

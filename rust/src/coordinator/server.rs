@@ -21,8 +21,11 @@ use crate::coordinator::api::{FinishReason, GenParams, Request, Response};
 use crate::coordinator::batcher::AdmissionQueue;
 use crate::coordinator::scheduler::SchedulerConfig;
 use crate::kvcache::block::BlockId;
+use crate::kvcache::quant::{n_groups, SlabRows};
 use crate::kvcache::radix::RadixCache;
-use crate::kvcache::{slab_specs, BlockAllocator, CacheLayout, SlotManager};
+use crate::kvcache::{
+    slab_row_widths, BlockAllocator, CacheLayout, SlotManager,
+};
 use crate::runtime::{Backend, HostTensor};
 use crate::util::Pcg64;
 
@@ -163,8 +166,22 @@ impl InferenceServer {
     ) -> Result<InferenceServer> {
         anyhow::ensure!(cfg.block_tokens > 0, "block_tokens must be > 0");
         let (batch, max_seq) = backend.serve_shape()?;
-        let layout =
-            CacheLayout::new(backend.config(), backend.variant().clone());
+        // The dtype is the backend's: its slabs ARE that storage. The
+        // scheduler config must agree or the budget math and the actual
+        // bytes would diverge silently.
+        let dtype = backend.cache_dtype();
+        anyhow::ensure!(
+            cfg.cache_dtype == dtype,
+            "scheduler cache dtype `{}` != backend cache dtype `{}`; \
+             pass the same --cache-dtype to both",
+            cfg.cache_dtype.tag(),
+            dtype.tag()
+        );
+        let layout = CacheLayout::with_dtype(
+            backend.config(),
+            backend.variant().clone(),
+            dtype,
+        );
         let allocator = BlockAllocator::with_budget(
             cfg.cache_budget_bytes,
             layout.bytes_per_token().max(1),
@@ -190,21 +207,17 @@ impl InferenceServer {
                 backend.kind()
             );
             // One radix tree per engine, keyed to this variant's slab
-            // geometry: rows are stored per slab at `widths[si]` f32
-            // elements per token per layer.
-            let widths: Vec<usize> = slab_specs(
-                backend.config(),
-                backend.variant(),
-                batch,
-                max_seq,
-            )
-            .iter()
-            .map(|(_, shape)| shape[3..].iter().product())
-            .collect();
+            // geometry: rows are stored per slab at `widths[si]`
+            // elements per token per layer, in the engine's cache dtype
+            // (quantized rows splice back as stored bytes — no f32
+            // round-trip).
+            let widths =
+                slab_row_widths(backend.config(), backend.variant());
             queue.prefix = Some(RadixCache::new(
                 cfg.block_tokens,
                 backend.config().n_layers,
                 widths,
+                dtype,
             ));
         }
         let stats = ServerStats {
@@ -525,11 +538,14 @@ impl InferenceServer {
     }
 }
 
-/// Splice `rows` (`[L, tokens, w]` flat, from the prefix radix cache)
-/// into lane `lane`'s positions `0..tokens` of a `[L, B, S, ...]` slab.
+/// Splice `rows` (`[L, tokens, w]` from the prefix radix cache, in the
+/// engine's cache dtype) into lane `lane`'s positions `0..tokens` of a
+/// `[L, B, S, ...]` slab. Quantized rows are copied as stored bytes +
+/// scales — the replayed lane is indistinguishable from the lane that
+/// originally computed them.
 fn splice_prefix_rows(
     dst: &mut HostTensor,
-    rows: &[f32],
+    rows: &SlabRows,
     lane: usize,
     tokens: usize,
 ) -> Result<()> {
@@ -539,29 +555,62 @@ fn splice_prefix_rows(
     }
     let (l_n, b_n, s_n) = (shape[0], shape[1], shape[2]);
     let w: usize = shape[3..].iter().product();
-    if lane >= b_n || tokens > s_n || rows.len() != l_n * tokens * w {
-        bail!(
-            "prefix splice mismatch: lane {lane}, {tokens} tokens, \
-             {} row elems into {shape:?}",
-            rows.len()
-        );
+    if lane >= b_n || tokens > s_n {
+        bail!("prefix splice out of range: lane {lane}, {tokens} tokens");
     }
-    let d = dst.as_f32_mut()?;
-    for l in 0..l_n {
-        let src = &rows[l * tokens * w..(l + 1) * tokens * w];
-        let base = ((l * b_n + lane) * s_n) * w;
-        d[base..base + tokens * w].copy_from_slice(src);
+    match (dst, rows) {
+        (HostTensor::F32(d, _), SlabRows::F32(r)) => {
+            if r.len() != l_n * tokens * w {
+                bail!(
+                    "prefix splice mismatch: {} row elems into {shape:?}",
+                    r.len()
+                );
+            }
+            for l in 0..l_n {
+                let src = &r[l * tokens * w..(l + 1) * tokens * w];
+                let base = ((l * b_n + lane) * s_n) * w;
+                d[base..base + tokens * w].copy_from_slice(src);
+            }
+        }
+        (
+            HostTensor::Q8 { data, scales, row, group, .. },
+            SlabRows::Q8 { data: rd, scales: rs },
+        ) => {
+            if *row != w {
+                bail!("prefix splice q8 row width {row} != slab width {w}");
+            }
+            let g = n_groups(w, *group);
+            if rd.len() != l_n * tokens * w || rs.len() != l_n * tokens * g {
+                bail!(
+                    "prefix splice q8 mismatch: {}/{} into {shape:?}",
+                    rd.len(),
+                    rs.len()
+                );
+            }
+            for l in 0..l_n {
+                let base = ((l * b_n + lane) * s_n) * w;
+                data[base..base + tokens * w].copy_from_slice(
+                    &rd[l * tokens * w..(l + 1) * tokens * w],
+                );
+                let sbase = ((l * b_n + lane) * s_n) * g;
+                scales[sbase..sbase + tokens * g].copy_from_slice(
+                    &rs[l * tokens * g..(l + 1) * tokens * g],
+                );
+            }
+        }
+        _ => bail!("prefix splice dtype mismatch (slab vs stored rows)"),
     }
     Ok(())
 }
 
 /// Extract lane `lane`'s positions `0..tokens` from every slab as
-/// `[L, tokens, w]` flat buffers (the radix cache's storage layout).
+/// `[L, tokens, w]` payloads in the slab's dtype (the radix cache's
+/// storage layout; quantized slabs yield their exact bytes + scales).
 fn extract_prefix_rows(
     caches: &[HostTensor],
     lane: usize,
     tokens: usize,
-) -> Result<Vec<Vec<f32>>> {
+) -> Result<Vec<SlabRows>> {
     caches
         .iter()
         .map(|slab| {
@@ -574,19 +623,43 @@ fn extract_prefix_rows(
             if lane >= b_n || tokens > s_n {
                 bail!("prefix extract out of range for {shape:?}");
             }
-            let s = slab.as_f32()?;
-            let mut out = vec![0.0f32; l_n * tokens * w];
-            for l in 0..l_n {
-                let base = ((l * b_n + lane) * s_n) * w;
-                out[l * tokens * w..(l + 1) * tokens * w]
-                    .copy_from_slice(&s[base..base + tokens * w]);
+            match slab {
+                HostTensor::F32(s, _) => {
+                    let mut out = vec![0.0f32; l_n * tokens * w];
+                    for l in 0..l_n {
+                        let base = ((l * b_n + lane) * s_n) * w;
+                        out[l * tokens * w..(l + 1) * tokens * w]
+                            .copy_from_slice(&s[base..base + tokens * w]);
+                    }
+                    Ok(SlabRows::F32(out))
+                }
+                HostTensor::Q8 { data, scales, row, group, .. } => {
+                    if *row != w {
+                        bail!("prefix extract q8 row width mismatch");
+                    }
+                    let g = n_groups(w, *group);
+                    let mut out_d = vec![0i8; l_n * tokens * w];
+                    let mut out_s = vec![0.0f32; l_n * tokens * g];
+                    for l in 0..l_n {
+                        let base = ((l * b_n + lane) * s_n) * w;
+                        out_d[l * tokens * w..(l + 1) * tokens * w]
+                            .copy_from_slice(&data[base..base + tokens * w]);
+                        let sbase = ((l * b_n + lane) * s_n) * g;
+                        out_s[l * tokens * g..(l + 1) * tokens * g]
+                            .copy_from_slice(
+                                &scales[sbase..sbase + tokens * g],
+                            );
+                    }
+                    Ok(SlabRows::Q8 { data: out_d, scales: out_s })
+                }
+                HostTensor::I32(..) => bail!("cache slabs are never i32"),
             }
-            Ok(out)
         })
         .collect()
 }
 
-/// Copy lane `b`'s rows of a stacked [L, B, ...] cache tensor.
+/// Copy lane `b`'s rows of a stacked [L, B, ...] cache tensor (payload
+/// AND scales for quantized slabs).
 fn splice_lane(dst: &mut HostTensor, src: &HostTensor, lane: usize) -> Result<()> {
     let shape = src.shape().to_vec();
     if dst.shape() != shape.as_slice() || shape.len() < 2 {
@@ -595,12 +668,35 @@ fn splice_lane(dst: &mut HostTensor, src: &HostTensor, lane: usize) -> Result<()
     let (layers, batch) = (shape[0], shape[1]);
     let lane_stride: usize = shape[2..].iter().product();
     let layer_stride = batch * lane_stride;
-    let (HostTensor::F32(d, _), HostTensor::F32(s, _)) = (dst, src) else {
-        bail!("cache splice expects f32 tensors");
-    };
-    for l in 0..layers {
-        let off = l * layer_stride + lane * lane_stride;
-        d[off..off + lane_stride].copy_from_slice(&s[off..off + lane_stride]);
+    match (dst, src) {
+        (HostTensor::F32(d, _), HostTensor::F32(s, _)) => {
+            for l in 0..layers {
+                let off = l * layer_stride + lane * lane_stride;
+                d[off..off + lane_stride]
+                    .copy_from_slice(&s[off..off + lane_stride]);
+            }
+        }
+        (
+            HostTensor::Q8 { data: dd, scales: ds, row: dr, group: dg, .. },
+            HostTensor::Q8 { data: sd, scales: ss, row: sr, group: sg, .. },
+        ) => {
+            if dr != sr || dg != sg {
+                bail!("cache splice q8 geometry mismatch");
+            }
+            let g = n_groups(*dr, *dg);
+            let lane_rows = lane_stride / *dr;
+            let scale_lane = lane_rows * g;
+            let scale_layer = batch * scale_lane;
+            for l in 0..layers {
+                let off = l * layer_stride + lane * lane_stride;
+                dd[off..off + lane_stride]
+                    .copy_from_slice(&sd[off..off + lane_stride]);
+                let soff = l * scale_layer + lane * scale_lane;
+                ds[soff..soff + scale_lane]
+                    .copy_from_slice(&ss[soff..soff + scale_lane]);
+            }
+        }
+        _ => bail!("cache splice dtype mismatch"),
     }
     Ok(())
 }

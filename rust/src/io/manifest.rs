@@ -9,11 +9,14 @@ use anyhow::{Context, Result};
 use crate::config::{ModelConfig, Variant};
 use crate::util::Json;
 
-/// Dtype of a runtime tensor (all artifacts use f32/i32 only).
+/// Dtype of a runtime tensor. Artifacts use f32/i32 only; I8 tags the
+/// native backend's group-quantized int8 cache slabs (`--cache-dtype
+/// int8`, DESIGN.md S19) and never appears in a manifest.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Dtype {
     F32,
     I32,
+    I8,
 }
 
 /// One named tensor slot in a function signature.

@@ -1,7 +1,58 @@
 //! Cache geometry per architecture variant, including the named decode
-//! slab shapes both backends share (DESIGN.md S10).
+//! slab shapes both backends share (DESIGN.md S10) and the cache element
+//! dtype axis (DESIGN.md S19): the same slab *shapes* can be stored as
+//! f32 rows or as group-quantized int8 rows, and every byte-accounting
+//! consumer (block pool sizing, admission control, the serving bench)
+//! reads the dtype through [`CacheLayout`].
 
 use crate::config::{ModelConfig, Variant};
+
+/// Element storage of the decode cache slabs (DESIGN.md S19).
+///
+/// * [`CacheDtype::F32`] — 4 bytes/element, the exact-serving baseline.
+/// * [`CacheDtype::Int8`] — 1 byte/element, symmetric group-quantized
+///   rows (group size [`crate::kvcache::quant::QUANT_GROUP`] over the
+///   row/latent dim) with one f32 scale per group stored alongside the
+///   payload. Scale metadata is accounted as pool metadata outside the
+///   per-token byte budget — like vLLM's block tables, it is a few
+///   percent of the payload and amortizes per block — so
+///   `bytes_per_token` compounds the paper's low-rank reduction by
+///   exactly 4x.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheDtype {
+    /// Full-precision f32 cache rows (4 bytes per element).
+    F32,
+    /// Symmetric group-quantized int8 cache rows (1 byte per element
+    /// plus per-group f32 scale metadata).
+    Int8,
+}
+
+impl CacheDtype {
+    /// Payload bytes per cache element.
+    pub fn bytes_per_elem(&self) -> usize {
+        match self {
+            CacheDtype::F32 => 4,
+            CacheDtype::Int8 => 1,
+        }
+    }
+
+    /// CLI/report tag ("f32" / "int8").
+    pub fn tag(&self) -> &'static str {
+        match self {
+            CacheDtype::F32 => "f32",
+            CacheDtype::Int8 => "int8",
+        }
+    }
+
+    /// Parse a `--cache-dtype` value.
+    pub fn parse(s: &str) -> Option<CacheDtype> {
+        match s {
+            "f32" => Some(CacheDtype::F32),
+            "int8" | "i8" | "q8" => Some(CacheDtype::Int8),
+            _ => None,
+        }
+    }
+}
 
 /// Named decode-cache slab shapes for one variant, stacked over layers:
 /// each entry is (name, [L, B, S, ...]). This is the layout contract the
@@ -13,6 +64,11 @@ use crate::config::{ModelConfig, Variant};
 /// * elitekv      — rotated elite keys `cache_ke` `[L,B,S,nh,2r]` plus the
 ///   **shared** J-LRD latent slab `cache_c` `[L,B,S,d_ckv]`
 /// * slrd         — `cache_ke` plus **split** latents `cache_ck` / `cache_cv`
+///
+/// Shapes are dtype-independent; at [`CacheDtype::Int8`] the same shapes
+/// are stored as group-quantized i8 payloads with per-row-group f32
+/// scales (see [`slab_row_widths`] for the quantization row width of
+/// each slab, and `runtime::HostTensor::Q8` for the storage form).
 pub fn slab_specs(
     cfg: &ModelConfig,
     variant: &Variant,
@@ -41,8 +97,17 @@ pub fn slab_specs(
     }
 }
 
-/// Bytes per f32 element.
-const ELEM: usize = 4;
+/// Per-slab quantization row width: the f32 elements one token writes
+/// into one layer of each slab (`shape[3..].product()`). This is the
+/// span int8 quantization groups tile (group-wise over the latent /
+/// head dims, never across tokens or layers), and the row stride the
+/// radix cache stores rows at.
+pub fn slab_row_widths(cfg: &ModelConfig, variant: &Variant) -> Vec<usize> {
+    slab_specs(cfg, variant, 1, 1)
+        .iter()
+        .map(|(_, shape)| shape[3..].iter().product())
+        .collect()
+}
 
 /// Geometry of one variant's decode cache.
 #[derive(Clone, Debug)]
@@ -51,27 +116,47 @@ pub struct CacheLayout {
     pub variant: Variant,
     /// Model depth (cache slabs stack over layers).
     pub n_layers: usize,
-    /// f32 elements per token per layer (the paper's unit of account).
+    /// Cache elements per token per layer (the paper's unit of account;
+    /// dtype-independent).
     pub elems_per_token_layer: usize,
-    /// Ratio vs. the vanilla MHA cache of the same config.
+    /// Ratio vs. the vanilla MHA cache of the same config (element
+    /// count, dtype-independent).
     pub ratio: f64,
+    /// Element storage of the slabs — the second compression axis.
+    pub dtype: CacheDtype,
 }
 
 impl CacheLayout {
-    /// Cache geometry of `variant` served on `cfg`.
+    /// Cache geometry of `variant` served on `cfg` at f32 (the exact
+    /// baseline; see [`CacheLayout::with_dtype`] for the int8 axis).
     pub fn new(cfg: &ModelConfig, variant: Variant) -> CacheLayout {
+        CacheLayout::with_dtype(cfg, variant, CacheDtype::F32)
+    }
+
+    /// Cache geometry of `variant` served on `cfg` with an explicit
+    /// element dtype.
+    pub fn with_dtype(
+        cfg: &ModelConfig,
+        variant: Variant,
+        dtype: CacheDtype,
+    ) -> CacheLayout {
         let elems = variant.cache_per_token(cfg);
         CacheLayout {
             ratio: variant.cache_ratio(cfg),
             elems_per_token_layer: elems,
             n_layers: cfg.n_layers,
             variant,
+            dtype,
         }
     }
 
-    /// Bytes of cache consumed by one token across all layers.
+    /// Bytes of cache payload consumed by one token across all layers.
+    /// At int8 this is exactly 1/4 of the f32 figure — the compounding
+    /// multiplier on the paper's low-rank element reduction (per-group
+    /// scale metadata is pool metadata, not per-token payload; DESIGN.md
+    /// S19).
     pub fn bytes_per_token(&self) -> usize {
-        self.elems_per_token_layer * self.n_layers * ELEM
+        self.elems_per_token_layer * self.n_layers * self.dtype.bytes_per_elem()
     }
 
     /// Bytes for a sequence of `len` tokens.
@@ -104,6 +189,56 @@ mod tests {
             ekv.tokens_in_budget(budget),
             4 * base.tokens_in_budget(budget)
         );
+    }
+
+    #[test]
+    fn int8_quarters_bytes_and_quadruples_capacity() {
+        // The acceptance identity: at int8 the jlrd-25 layout's
+        // bytes_per_token is EXACTLY 1/4 of the f32 value (scale
+        // metadata is pool metadata, not per-token payload), so the
+        // compression compounds to 16x vs the dense f32 baseline.
+        let cfg = ModelConfig::small();
+        let var = Variant::EliteKv { r: 8, d_ckv: 128 };
+        let f32l = CacheLayout::new(&cfg, var.clone());
+        let i8l = CacheLayout::with_dtype(&cfg, var, CacheDtype::Int8);
+        assert_eq!(i8l.bytes_per_token() * 4, f32l.bytes_per_token());
+        let dense = CacheLayout::new(&cfg, Variant::Mha);
+        assert_eq!(i8l.bytes_per_token() * 16, dense.bytes_per_token());
+        // capacity: 4x tokens vs f32 same-variant, 16x vs dense f32
+        let budget = 1 << 22;
+        assert_eq!(
+            i8l.tokens_in_budget(budget),
+            4 * f32l.tokens_in_budget(budget)
+        );
+        assert_eq!(
+            i8l.tokens_in_budget(budget),
+            16 * dense.tokens_in_budget(budget)
+        );
+    }
+
+    #[test]
+    fn dtype_tags_round_trip() {
+        for d in [CacheDtype::F32, CacheDtype::Int8] {
+            assert_eq!(CacheDtype::parse(d.tag()), Some(d));
+        }
+        assert_eq!(CacheDtype::parse("fp16"), None);
+    }
+
+    #[test]
+    fn row_widths_match_slab_specs() {
+        let cfg = ModelConfig::tiny();
+        for variant in [
+            Variant::Mha,
+            Variant::EliteKv { r: 4, d_ckv: 64 },
+            Variant::Slrd { r: 4, d_ck: 32, d_cv: 48 },
+        ] {
+            let widths = slab_row_widths(&cfg, &variant);
+            let specs = slab_specs(&cfg, &variant, 4, 8);
+            assert_eq!(widths.len(), specs.len());
+            for (w, (_, shape)) in widths.iter().zip(&specs) {
+                assert_eq!(*w, shape[3..].iter().product::<usize>());
+            }
+        }
     }
 
     #[test]

@@ -16,13 +16,20 @@
 //!   cross-request sharing of block-aligned prompt prefixes over the
 //!   refcounted pool, with longest-prefix lookup on admission,
 //!   insert-on-free, and LRU leaf eviction under pool pressure.
+//! * [`quant`]   — int8 cache-row quantization (DESIGN.md S19): the
+//!   symmetric group-wise quantize/dequantize primitives behind
+//!   [`layout::CacheDtype::Int8`], and [`quant::SlabRows`], the
+//!   dtype-carrying row payload the radix cache stores so prefix hits
+//!   splice quantized bytes without an f32 round-trip.
 
 pub mod block;
 pub mod layout;
 pub mod manager;
+pub mod quant;
 pub mod radix;
 
 pub use block::BlockAllocator;
-pub use layout::{slab_specs, CacheLayout};
+pub use layout::{slab_row_widths, slab_specs, CacheDtype, CacheLayout};
 pub use manager::SlotManager;
+pub use quant::SlabRows;
 pub use radix::{PrefixHit, PrefixStats, RadixCache};

@@ -1,0 +1,372 @@
+//! Int8 cache-row quantization (DESIGN.md S19): symmetric group-wise
+//! quantize/dequantize of decode cache rows, plus [`SlabRows`], the
+//! dtype-carrying row payload the radix cache and the prefix-splice path
+//! exchange.
+//!
+//! The quantized unit is one *cache row* — the span one token writes
+//! into one layer of one slab (the latent `c_kv` vector, a head-stacked
+//! rotated elite key, or a dense K/V row; see
+//! [`crate::kvcache::layout::slab_row_widths`]). Each row is tiled into
+//! groups of [`QUANT_GROUP`] elements along the latent/head dim; a group
+//! stores `round(x / scale)` clamped to `[-127, 127]` with one f32
+//! `scale = max|x| / 127`. Groups never span tokens or layers, so a
+//! row's quantized bytes + scales are a self-contained unit: the radix
+//! cache can store, slice, and splice them without any round-trip
+//! through f32 — a prefix hit replays the *exact* quantized bytes the
+//! original prefill wrote, which is what makes prefix-cache-on ≡ off
+//! bitwise within the int8 dtype.
+//!
+//! Dequantization is the single expression `(q as f32) * scale`
+//! ([`dequant`]); every consumer — the window dequantizers in
+//! `native::model`, the fused-dequant GEMM panels in `native::kernels`
+//! — goes through it, so all paths see bit-identical f32 values for the
+//! same stored bytes.
+
+use anyhow::{bail, Result};
+
+/// Elements per quantization group along the row (latent/head) dim.
+/// 32 keeps the worst-case group-max dilution low (a row outlier only
+/// costs its own 32-element group precision) while the scale overhead
+/// stays at 4/32 = 12.5 % of the int8 payload — pool metadata, outside
+/// the per-token byte budget (DESIGN.md S19).
+pub const QUANT_GROUP: usize = 32;
+
+/// Number of scale groups for a row of `w` elements.
+pub fn n_groups(w: usize, group: usize) -> usize {
+    w.div_ceil(group)
+}
+
+/// THE dequantization expression. Inlined everywhere so the fused GEMM
+/// panels and the window dequantizers produce bit-identical f32 values
+/// for the same stored bytes.
+#[inline(always)]
+pub fn dequant(q: i8, scale: f32) -> f32 {
+    q as f32 * scale
+}
+
+/// Quantize one row: per group of `group` elements, `scale = max|x|/127`
+/// and `q = round(x / scale)` clamped to `[-127, 127]` (an all-zero
+/// group stores scale 0 and zeros — exact). `q.len() == src.len()`,
+/// `scales.len() == n_groups(src.len(), group)`.
+pub fn quantize_row(src: &[f32], group: usize, q: &mut [i8], scales: &mut [f32]) {
+    debug_assert_eq!(q.len(), src.len());
+    debug_assert_eq!(scales.len(), n_groups(src.len(), group));
+    for (gi, (chunk, qchunk)) in
+        src.chunks(group).zip(q.chunks_mut(group)).enumerate()
+    {
+        let maxabs = chunk.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        if maxabs == 0.0 {
+            scales[gi] = 0.0;
+            qchunk.fill(0);
+            continue;
+        }
+        let scale = maxabs / 127.0;
+        scales[gi] = scale;
+        let inv = 127.0 / maxabs;
+        for (qv, &x) in qchunk.iter_mut().zip(chunk) {
+            *qv = (x * inv).round().clamp(-127.0, 127.0) as i8;
+        }
+    }
+}
+
+/// Dequantize one row quantized by [`quantize_row`] into `out`.
+pub fn dequantize_row(q: &[i8], scales: &[f32], group: usize, out: &mut [f32]) {
+    debug_assert_eq!(q.len(), out.len());
+    debug_assert_eq!(scales.len(), n_groups(q.len(), group));
+    for ((qchunk, ochunk), &scale) in
+        q.chunks(group).zip(out.chunks_mut(group)).zip(scales.iter())
+    {
+        for (o, &qv) in ochunk.iter_mut().zip(qchunk) {
+            *o = dequant(qv, scale);
+        }
+    }
+}
+
+/// Dtype-carrying slab row payload: the rows of one slab for a run of
+/// tokens, laid out `[L, tokens, w]` (and, quantized, scales
+/// `[L, tokens, g]` with `g = n_groups(w, group)`). This is the exchange
+/// type between the radix cache (which stores rows in their cache dtype
+/// so prefix hits splice without an f32 round-trip), the admission path,
+/// and the engine's prefix splice/extract.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SlabRows {
+    /// f32 rows `[L, tokens, w]` flat.
+    F32(Vec<f32>),
+    /// Group-quantized rows: payload `[L, tokens, w]` i8 flat plus
+    /// per-row-group scales `[L, tokens, g]` f32 flat.
+    Q8 {
+        /// Quantized payload `[L, tokens, w]`.
+        data: Vec<i8>,
+        /// Per-row-group scales `[L, tokens, g]`.
+        scales: Vec<f32>,
+    },
+}
+
+impl SlabRows {
+    /// Zero-filled rows for `layers * tokens` rows of width `w`
+    /// (`g` scale groups per row when quantized). `q8` selects the arm.
+    pub fn zeros(q8: bool, layers: usize, tokens: usize, w: usize, g: usize) -> SlabRows {
+        if q8 {
+            SlabRows::Q8 {
+                data: vec![0i8; layers * tokens * w],
+                scales: vec![0.0f32; layers * tokens * g],
+            }
+        } else {
+            SlabRows::F32(vec![0.0f32; layers * tokens * w])
+        }
+    }
+
+    /// True for the quantized arm.
+    pub fn is_q8(&self) -> bool {
+        matches!(self, SlabRows::Q8 { .. })
+    }
+
+    /// Validate this payload covers `layers * tokens` rows of width `w`
+    /// with `g` scale groups per row, and matches the expected arm.
+    pub fn check(
+        &self,
+        q8: bool,
+        layers: usize,
+        tokens: usize,
+        w: usize,
+        g: usize,
+    ) -> Result<()> {
+        match self {
+            SlabRows::F32(d) => {
+                if q8 {
+                    bail!("expected quantized rows, got f32");
+                }
+                if d.len() != layers * tokens * w {
+                    bail!(
+                        "f32 rows: {} elems != {} expected",
+                        d.len(),
+                        layers * tokens * w
+                    );
+                }
+            }
+            SlabRows::Q8 { data, scales } => {
+                if !q8 {
+                    bail!("expected f32 rows, got quantized");
+                }
+                if data.len() != layers * tokens * w
+                    || scales.len() != layers * tokens * g
+                {
+                    bail!(
+                        "q8 rows: {} elems / {} scales != {} / {} expected",
+                        data.len(),
+                        scales.len(),
+                        layers * tokens * w,
+                        layers * tokens * g
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Copy token range `[src_from, src_from + n)` of every layer from
+    /// `src` (laid out for `src_tokens` tokens) into `[dst_from,
+    /// dst_from + n)` of `self` (laid out for `dst_tokens` tokens).
+    /// Both sides must be the same arm, width `w`, `g` groups per row.
+    #[allow(clippy::too_many_arguments)]
+    pub fn copy_tokens(
+        &mut self,
+        dst_tokens: usize,
+        dst_from: usize,
+        src: &SlabRows,
+        src_tokens: usize,
+        src_from: usize,
+        n: usize,
+        layers: usize,
+        w: usize,
+        g: usize,
+    ) {
+        match (self, src) {
+            (SlabRows::F32(d), SlabRows::F32(s)) => {
+                for l in 0..layers {
+                    let so = (l * src_tokens + src_from) * w;
+                    let dof = (l * dst_tokens + dst_from) * w;
+                    d[dof..dof + n * w].copy_from_slice(&s[so..so + n * w]);
+                }
+            }
+            (
+                SlabRows::Q8 { data: dd, scales: ds },
+                SlabRows::Q8 { data: sd, scales: ss },
+            ) => {
+                for l in 0..layers {
+                    let so = (l * src_tokens + src_from) * w;
+                    let dof = (l * dst_tokens + dst_from) * w;
+                    dd[dof..dof + n * w].copy_from_slice(&sd[so..so + n * w]);
+                    let so = (l * src_tokens + src_from) * g;
+                    let dof = (l * dst_tokens + dst_from) * g;
+                    ds[dof..dof + n * g].copy_from_slice(&ss[so..so + n * g]);
+                }
+            }
+            _ => unreachable!("SlabRows dtype mismatch (checked at insert)"),
+        }
+    }
+
+    /// Extract token range `[from, to)` of every layer as a fresh
+    /// payload (the radix `slice`/`split` primitive).
+    pub fn slice_tokens(
+        &self,
+        total_tokens: usize,
+        from: usize,
+        to: usize,
+        layers: usize,
+        w: usize,
+        g: usize,
+    ) -> SlabRows {
+        let mut out =
+            SlabRows::zeros(self.is_q8(), layers, to - from, w, g);
+        out.copy_tokens(
+            to - from,
+            0,
+            self,
+            total_tokens,
+            from,
+            to - from,
+            layers,
+            w,
+            g,
+        );
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn randn_row(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::seeded(seed);
+        crate::tensor::Tensor::randn(vec![n], &mut rng).data
+    }
+
+    /// The error-budget pin (ISSUE 5): per element, symmetric group
+    /// quantization bounds |x - deq(q)| by scale/2 = group_max/254 —
+    /// half a quantization step of the group's own max.
+    #[test]
+    fn roundtrip_error_bounded_by_half_step_per_group() {
+        for (w, seed) in [(64usize, 1u64), (48, 2), (33, 3), (256, 4)] {
+            let src = randn_row(w, seed);
+            let g = n_groups(w, QUANT_GROUP);
+            let mut q = vec![0i8; w];
+            let mut scales = vec![0.0f32; g];
+            quantize_row(&src, QUANT_GROUP, &mut q, &mut scales);
+            let mut back = vec![0.0f32; w];
+            dequantize_row(&q, &scales, QUANT_GROUP, &mut back);
+            for (gi, (chunk, bchunk)) in src
+                .chunks(QUANT_GROUP)
+                .zip(back.chunks(QUANT_GROUP))
+                .enumerate()
+            {
+                let maxabs =
+                    chunk.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+                let bound = maxabs / 254.0 + 1e-7;
+                for (x, b) in chunk.iter().zip(bchunk) {
+                    assert!(
+                        (x - b).abs() <= bound,
+                        "group {gi}: |{x} - {b}| > {bound}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_rows_are_exact_and_max_hits_127() {
+        let src = vec![0.0f32; 32];
+        let mut q = vec![1i8; 32];
+        let mut scales = vec![1.0f32; 1];
+        quantize_row(&src, QUANT_GROUP, &mut q, &mut scales);
+        assert!(q.iter().all(|&v| v == 0));
+        assert_eq!(scales[0], 0.0);
+        let mut back = vec![9.0f32; 32];
+        dequantize_row(&q, &scales, QUANT_GROUP, &mut back);
+        assert!(back.iter().all(|&v| v == 0.0));
+
+        // the group max quantizes to exactly +-127 and round-trips to
+        // itself (127 * maxabs/127)
+        let mut src = vec![0.25f32; 32];
+        src[7] = -2.0;
+        quantize_row(&src, QUANT_GROUP, &mut q, &mut scales);
+        assert_eq!(q[7], -127);
+        let mut back = vec![0.0f32; 32];
+        dequantize_row(&q, &scales, QUANT_GROUP, &mut back);
+        assert!((back[7] + 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn partial_last_group_quantizes_independently() {
+        // 48 elements = one full group + one 16-element tail; a huge
+        // outlier in the tail must not dilute the first group's scale.
+        let mut src = vec![0.01f32; 48];
+        src[40] = 100.0;
+        let g = n_groups(48, QUANT_GROUP);
+        assert_eq!(g, 2);
+        let mut q = vec![0i8; 48];
+        let mut scales = vec![0.0f32; g];
+        quantize_row(&src, QUANT_GROUP, &mut q, &mut scales);
+        let mut back = vec![0.0f32; 48];
+        dequantize_row(&q, &scales, QUANT_GROUP, &mut back);
+        // first group keeps ~full precision despite the tail outlier
+        for i in 0..32 {
+            assert!((back[i] - 0.01).abs() < 0.01 / 127.0 + 1e-7);
+        }
+        assert!((back[40] - 100.0).abs() < 100.0 / 254.0 + 1e-4);
+    }
+
+    #[test]
+    fn slab_rows_slice_and_copy_round_trip() {
+        let (layers, tokens, w) = (2usize, 6usize, 8usize);
+        let g = n_groups(w, QUANT_GROUP);
+        // position-dependent f32 rows
+        let data: Vec<f32> = (0..layers * tokens * w)
+            .map(|i| i as f32 / 7.0)
+            .collect();
+        let rows = SlabRows::F32(data.clone());
+        let mid = rows.slice_tokens(tokens, 2, 5, layers, w, g);
+        let SlabRows::F32(m) = &mid else { panic!() };
+        for l in 0..layers {
+            for t in 0..3 {
+                let want = &data[(l * tokens + 2 + t) * w..][..w];
+                let got = &m[(l * 3 + t) * w..][..w];
+                assert_eq!(want, got);
+            }
+        }
+        // q8 arm: quantize per row, slice, and the sliced bytes+scales
+        // must equal the directly quantized sub-rows (no re-round-trip)
+        let mut qd = vec![0i8; layers * tokens * w];
+        let mut qs = vec![0.0f32; layers * tokens * g];
+        for r in 0..layers * tokens {
+            quantize_row(
+                &data[r * w..(r + 1) * w],
+                QUANT_GROUP,
+                &mut qd[r * w..(r + 1) * w],
+                &mut qs[r * g..(r + 1) * g],
+            );
+        }
+        let qrows = SlabRows::Q8 { data: qd.clone(), scales: qs.clone() };
+        let qmid = qrows.slice_tokens(tokens, 2, 5, layers, w, g);
+        let SlabRows::Q8 { data: md, scales: ms } = &qmid else { panic!() };
+        for l in 0..layers {
+            for t in 0..3 {
+                let r_src = l * tokens + 2 + t;
+                let r_dst = l * 3 + t;
+                assert_eq!(
+                    &qd[r_src * w..(r_src + 1) * w],
+                    &md[r_dst * w..(r_dst + 1) * w]
+                );
+                assert_eq!(
+                    &qs[r_src * g..(r_src + 1) * g],
+                    &ms[r_dst * g..(r_dst + 1) * g]
+                );
+            }
+        }
+        qmid.check(true, layers, 3, w, g).unwrap();
+        assert!(qmid.check(false, layers, 3, w, g).is_err());
+        assert!(qmid.check(true, layers, 4, w, g).is_err());
+    }
+}

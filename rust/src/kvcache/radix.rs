@@ -32,12 +32,21 @@
 //! a prefix hit is replayed by splicing the stored rows into the
 //! admitted lane and prefilling only the suffix. The refcounted blocks
 //! are the byte accounting for exactly that stored copy.
+//!
+//! Rows are stored in the engine's cache dtype ([`SlabRows`]): f32, or
+//! — under `--cache-dtype int8` (DESIGN.md S19) — the quantized i8
+//! payload plus its per-row-group scales. Quantized rows are captured
+//! and replayed as stored bytes, never round-tripped through f32, so a
+//! prefix hit splices exactly what the original prefill wrote and
+//! cache-on ≡ cache-off stays bitwise *within* a dtype.
 
 use std::collections::HashMap;
 
 use anyhow::{bail, ensure, Result};
 
 use crate::kvcache::block::{BlockAllocator, BlockId};
+use crate::kvcache::layout::CacheDtype;
+use crate::kvcache::quant::{n_groups, SlabRows, QUANT_GROUP};
 
 /// Cumulative + gauge counters of one [`RadixCache`].
 #[derive(Clone, Copy, Debug, Default)]
@@ -64,8 +73,8 @@ pub struct PrefixHit {
     /// chain.
     pub chain: Vec<BlockId>,
     /// Stored slab rows for the matched tokens, one `[L, tokens, w]`
-    /// flat buffer per cache slab.
-    pub rows: Vec<Vec<f32>>,
+    /// payload per cache slab, in the engine's cache dtype.
+    pub rows: Vec<SlabRows>,
 }
 
 /// One tree node: a block-aligned token run plus its cached slab rows.
@@ -77,8 +86,9 @@ struct Node {
     tokens: Vec<u32>,
     /// Cache-owned references into the block pool, one per full block.
     blocks: Vec<BlockId>,
-    /// Stored slab rows, one `[L, run, w]` flat buffer per slab.
-    data: Vec<Vec<f32>>,
+    /// Stored slab rows, one `[L, run, w]` payload per slab (dtype from
+    /// the cache).
+    data: Vec<SlabRows>,
     /// Children keyed by the first `block_tokens` tokens of their run
     /// (siblings always differ somewhere within that first block).
     children: HashMap<Vec<u32>, usize>,
@@ -92,8 +102,14 @@ pub struct RadixCache {
     /// Tokens per block (the sharing granularity; matches the pool).
     pub block_tokens: usize,
     layers: usize,
-    /// Per-slab row width (f32 elements per token per layer).
+    /// Per-slab row width (cache elements per token per layer).
     widths: Vec<usize>,
+    /// Per-slab scale groups per row (`n_groups(w, QUANT_GROUP)`; only
+    /// read when `dtype` is int8).
+    groups: Vec<usize>,
+    /// Element dtype the stored rows carry (must match the engine's
+    /// slabs: rows are spliced back verbatim).
+    dtype: CacheDtype,
     /// Node arena; index 0 is the (empty, unevictable) root.
     nodes: Vec<Option<Node>>,
     free_slots: Vec<usize>,
@@ -103,16 +119,29 @@ pub struct RadixCache {
 
 impl RadixCache {
     /// Empty cache over blocks of `block_tokens` tokens for a model of
-    /// `layers` layers whose slabs have `widths[si]` f32 elements per
-    /// token per layer.
-    pub fn new(block_tokens: usize, layers: usize, widths: Vec<usize>) -> RadixCache {
+    /// `layers` layers whose slabs have `widths[si]` elements per token
+    /// per layer, stored in `dtype` (int8 rows carry their quantization
+    /// scales alongside; see [`SlabRows`]).
+    pub fn new(
+        block_tokens: usize,
+        layers: usize,
+        widths: Vec<usize>,
+        dtype: CacheDtype,
+    ) -> RadixCache {
         assert!(block_tokens > 0, "block_tokens must be > 0");
         assert!(layers > 0, "layers must be > 0");
+        let q8 = dtype == CacheDtype::Int8;
+        let groups: Vec<usize> =
+            widths.iter().map(|&w| n_groups(w, QUANT_GROUP)).collect();
         let root = Node {
             parent: 0,
             tokens: Vec::new(),
             blocks: Vec::new(),
-            data: vec![Vec::new(); widths.len()],
+            data: widths
+                .iter()
+                .zip(&groups)
+                .map(|(&w, &g)| SlabRows::zeros(q8, layers, 0, w, g))
+                .collect(),
             children: HashMap::new(),
             last_used: 0,
         };
@@ -120,11 +149,18 @@ impl RadixCache {
             block_tokens,
             layers,
             widths,
+            groups,
+            dtype,
             nodes: vec![Some(root)],
             free_slots: Vec::new(),
             clock: 0,
             stats: PrefixStats::default(),
         }
+    }
+
+    /// The element dtype stored rows carry.
+    pub fn dtype(&self) -> CacheDtype {
+        self.dtype
     }
 
     /// Current counter snapshot.
@@ -226,20 +262,29 @@ impl RadixCache {
         }
         let chain = alloc.fork(&chain)?;
         let tokens = matched * bt;
+        let q8 = self.dtype == CacheDtype::Int8;
         let mut rows = Vec::with_capacity(self.widths.len());
-        for (si, &w) in self.widths.iter().enumerate() {
-            let mut out = vec![0.0f32; self.layers * tokens * w];
-            for l in 0..self.layers {
-                let mut p = 0usize; // output token cursor within the layer
-                for &(node, m) in &segments {
-                    let run = self.node(node).tokens.len();
-                    let seg = m * self.block_tokens;
-                    let src = &self.node(node).data[si]
-                        [(l * run) * w..(l * run + seg) * w];
-                    out[(l * tokens + p) * w..(l * tokens + p + seg) * w]
-                        .copy_from_slice(src);
-                    p += seg;
-                }
+        for (si, (&w, &g)) in
+            self.widths.iter().zip(&self.groups).enumerate()
+        {
+            let mut out = SlabRows::zeros(q8, self.layers, tokens, w, g);
+            let mut p = 0usize; // output token cursor
+            for &(node, m) in &segments {
+                let node_ref = self.node(node);
+                let run = node_ref.tokens.len();
+                let seg = m * self.block_tokens;
+                out.copy_tokens(
+                    tokens,
+                    p,
+                    &node_ref.data[si],
+                    run,
+                    0,
+                    seg,
+                    self.layers,
+                    w,
+                    g,
+                );
+                p += seg;
             }
             rows.push(out);
         }
@@ -263,7 +308,7 @@ impl RadixCache {
         alloc: &mut BlockAllocator,
     ) -> Result<usize>
     where
-        F: FnOnce() -> Result<Vec<Vec<f32>>>,
+        F: FnOnce() -> Result<Vec<SlabRows>>,
     {
         let bt = self.block_tokens;
         let total = tokens.len() / bt; // full blocks to ensure cached
@@ -291,13 +336,13 @@ impl RadixCache {
                     rows.len(),
                     self.widths.len()
                 );
-                for (si, &w) in self.widths.iter().enumerate() {
-                    ensure!(
-                        rows[si].len() == self.layers * total * bt * w,
-                        "slab {si}: row buffer {} != {} expected",
-                        rows[si].len(),
-                        self.layers * total * bt * w
-                    );
+                let q8 = self.dtype == CacheDtype::Int8;
+                for (si, (&w, &g)) in
+                    self.widths.iter().zip(&self.groups).enumerate()
+                {
+                    rows[si]
+                        .check(q8, self.layers, total * bt, w, g)
+                        .map_err(|e| anyhow::anyhow!("slab {si}: {e}"))?;
                 }
                 let fresh = alloc.fork(&chain[matched..total])?;
                 let n_new = fresh.len();
@@ -363,20 +408,26 @@ impl RadixCache {
         let run = at + tail_blocks.len(); // original run length in blocks
         let mut head_data = Vec::with_capacity(self.widths.len());
         let mut tail_data = Vec::with_capacity(self.widths.len());
-        for (&w, old) in self.widths.iter().zip(&old_data) {
-            let (head_t, tail_t) = (at * bt, tail_tokens.len());
-            let mut head = vec![0.0f32; self.layers * head_t * w];
-            let mut tail = vec![0.0f32; self.layers * tail_t * w];
-            for l in 0..self.layers {
-                let base = l * run * bt * w;
-                head[l * head_t * w..(l + 1) * head_t * w]
-                    .copy_from_slice(&old[base..base + head_t * w]);
-                tail[l * tail_t * w..(l + 1) * tail_t * w].copy_from_slice(
-                    &old[base + head_t * w..base + (head_t + tail_t) * w],
-                );
-            }
-            head_data.push(head);
-            tail_data.push(tail);
+        for ((&w, &g), old) in
+            self.widths.iter().zip(&self.groups).zip(&old_data)
+        {
+            let (head_t, run_t) = (at * bt, run * bt);
+            head_data.push(old.slice_tokens(
+                run_t,
+                0,
+                head_t,
+                self.layers,
+                w,
+                g,
+            ));
+            tail_data.push(old.slice_tokens(
+                run_t,
+                head_t,
+                run_t,
+                self.layers,
+                w,
+                g,
+            ));
         }
         let key = tail_tokens[..bt].to_vec();
         let tail_node = Node {
@@ -400,27 +451,29 @@ impl RadixCache {
     }
 
     /// Slice `rows` (covering `total` blocks) down to blocks
-    /// `[from, to)`, preserving the per-slab `[L, run, w]` layout.
+    /// `[from, to)`, preserving the per-slab `[L, run, w]` layout (and
+    /// the per-row scales when quantized).
     fn slice_rows(
         &self,
-        rows: &[Vec<f32>],
+        rows: &[SlabRows],
         total: usize,
         from: usize,
         to: usize,
-    ) -> Vec<Vec<f32>> {
+    ) -> Vec<SlabRows> {
         let bt = self.block_tokens;
-        let (total_t, seg_t) = (total * bt, (to - from) * bt);
         self.widths
             .iter()
+            .zip(&self.groups)
             .enumerate()
-            .map(|(si, &w)| {
-                let mut out = vec![0.0f32; self.layers * seg_t * w];
-                for l in 0..self.layers {
-                    let src = (l * total_t + from * bt) * w;
-                    out[l * seg_t * w..(l + 1) * seg_t * w]
-                        .copy_from_slice(&rows[si][src..src + seg_t * w]);
-                }
-                out
+            .map(|(si, (&w, &g))| {
+                rows[si].slice_tokens(
+                    total * bt,
+                    from * bt,
+                    to * bt,
+                    self.layers,
+                    w,
+                    g,
+                )
             })
             .collect()
     }
@@ -497,9 +550,15 @@ impl RadixCache {
             if i != 0 && n.blocks.is_empty() {
                 bail!("non-root node {i} with empty run");
             }
-            for (si, &w) in self.widths.iter().enumerate() {
-                if n.data[si].len() != self.layers * n.tokens.len() * w {
-                    bail!("node {i} slab {si}: bad data size");
+            let q8 = self.dtype == CacheDtype::Int8;
+            for (si, (&w, &g)) in
+                self.widths.iter().zip(&self.groups).enumerate()
+            {
+                if n.data[si]
+                    .check(q8, self.layers, n.tokens.len(), w, g)
+                    .is_err()
+                {
+                    bail!("node {i} slab {si}: bad data size/dtype");
                 }
             }
             for &b in &n.blocks {
@@ -541,13 +600,13 @@ mod tests {
 
     /// Cache over 2 slabs (widths 3 and 2), 2 layers, 4-token blocks.
     fn cache() -> RadixCache {
-        RadixCache::new(4, 2, vec![3, 2])
+        RadixCache::new(4, 2, vec![3, 2], CacheDtype::F32)
     }
 
     /// Deterministic fake slab rows for `tokens` starting at position 0:
     /// element = (slab, layer, pos, elem) encoded — position-dependent
     /// like real KV rows.
-    fn rows_for(c: &RadixCache, toks: &[u32]) -> Vec<Vec<f32>> {
+    fn rows_for(c: &RadixCache, toks: &[u32]) -> Vec<SlabRows> {
         c.widths
             .iter()
             .enumerate()
@@ -564,7 +623,7 @@ mod tests {
                         }
                     }
                 }
-                out
+                SlabRows::F32(out)
             })
             .collect()
     }
@@ -734,6 +793,80 @@ mod tests {
         a.release(&hit.chain);
         assert_eq!(a.free_blocks(), 4);
         a.check_invariants().unwrap();
+    }
+
+    /// Quantized rows (ISSUE 5): an int8 cache stores the exact i8
+    /// bytes + scales handed to insert, lookups splice them back
+    /// verbatim (no f32 round-trip), splits preserve them, and eviction
+    /// under pool pressure keeps tree + allocator consistent.
+    #[test]
+    fn quantized_rows_round_trip_and_survive_split_and_eviction() {
+        use crate::kvcache::quant::quantize_row;
+        let mut a = BlockAllocator::new(8, 4);
+        let mut c = RadixCache::new(4, 2, vec![3, 2], CacheDtype::Int8);
+        assert_eq!(c.dtype(), CacheDtype::Int8);
+        // quantize the deterministic fake rows per token-layer row
+        let q8_rows_for = |c: &RadixCache, toks: &[u32]| -> Vec<SlabRows> {
+            c.widths
+                .iter()
+                .zip(&c.groups)
+                .enumerate()
+                .map(|(si, (&w, &g))| {
+                    let mut data = vec![0i8; c.layers * toks.len() * w];
+                    let mut scales = vec![0.0f32; c.layers * toks.len() * g];
+                    for r in 0..c.layers * toks.len() {
+                        let src: Vec<f32> = (0..w)
+                            .map(|e| (si * 100 + r * 10 + e) as f32 / 37.0)
+                            .collect();
+                        quantize_row(
+                            &src,
+                            QUANT_GROUP,
+                            &mut data[r * w..(r + 1) * w],
+                            &mut scales[r * g..(r + 1) * g],
+                        );
+                    }
+                    SlabRows::Q8 { data, scales }
+                })
+                .collect()
+        };
+        let ab: Vec<u32> = (0..8).collect();
+        let chain = a.alloc(8).unwrap();
+        let rows_ab = q8_rows_for(&c, &ab);
+        c.insert(&ab, &chain, || Ok(rows_ab.clone()), &mut a).unwrap();
+        a.release(&chain);
+        c.check_consistency(&a).unwrap();
+        // exact-byte lookup (capped at 7 -> first block only)
+        let hit = c.lookup(&ab, 7, &mut a).unwrap();
+        assert_eq!(hit.tokens, 4);
+        assert_eq!(hit.rows, c.slice_rows(&rows_ab, 2, 0, 1));
+        a.release(&hit.chain);
+        // divergence inside the second block forces a split; the shared
+        // first block's quantized bytes survive it
+        let mut ac = ab.clone();
+        ac[5] ^= 1;
+        let chain2 = a.alloc(8).unwrap();
+        let rows_ac = q8_rows_for(&c, &ac);
+        c.insert(&ac, &chain2, || Ok(rows_ac), &mut a).unwrap();
+        a.release(&chain2);
+        c.check_consistency(&a).unwrap();
+        let hit2 = c.lookup(&ab, 7, &mut a).unwrap();
+        assert_eq!(hit2.rows, c.slice_rows(&rows_ab, 2, 0, 1));
+        a.release(&hit2.chain);
+        // f32 rows into an int8 cache are rejected at insert
+        let toks2: Vec<u32> = (100..104).collect();
+        let chain3 = a.alloc(4).unwrap();
+        let bad: Vec<SlabRows> = vec![
+            SlabRows::F32(vec![0.0; 2 * 4 * 3]),
+            SlabRows::F32(vec![0.0; 2 * 4 * 2]),
+        ];
+        assert!(c.insert(&toks2, &chain3, || Ok(bad), &mut a).is_err());
+        a.release(&chain3);
+        // eviction under pressure releases quantized leaves cleanly
+        c.evict(8, &mut a);
+        assert_eq!(c.cached_blocks(), 0);
+        assert_eq!(a.free_blocks(), 8);
+        a.check_invariants().unwrap();
+        c.check_consistency(&a).unwrap();
     }
 
     /// Property: random insert/lookup/evict workloads keep the tree and

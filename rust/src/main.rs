@@ -89,7 +89,8 @@ COMMANDS
   serve      [--backend native|pjrt] --config C --variant TAG
              [--ckpt PATH] [--selection PATH] [--requests N] [--max-new N]
              [--max-batch B] [--max-seq S] [--block-tokens N]
-             [--cache-budget-mb N] [--optimistic-admission]
+             [--cache-budget-mb N] [--cache-dtype f32|int8]
+             [--optimistic-admission]
              [--prefix-cache] [--temperature F] [--top-p F] [--seed N]
              [--r N (ropelite uniform fallback)] [--pallas]
              native backend (default): no artifacts needed; random-init
@@ -99,18 +100,26 @@ COMMANDS
              recycle the moment a sequence finishes. --prefix-cache
              (native only) retains finished prompts' full-block prefixes
              in a radix tree and prefills only the novel suffix of later
-             prompts (LRU-evicted under pool pressure).
+             prompts (LRU-evicted under pool pressure). --cache-dtype
+             int8 (native only) stores the cache slabs group-quantized —
+             1/4 the bytes/token, so the same budget admits ~4x the
+             tokens — with dequantization fused into the decode GEMMs.
   bench      [--config C] [--steps N] [--batch B] [--prompt N]
              [--out PATH]   native decode sweep -> BENCH_native_decode.json
+             (every variant at cache dtype f32 AND int8)
              then a continuous-batching capacity sweep
              [--max-batch B] [--cb-requests N] [--cb-max-seq S]
              [--block-tokens N] [--cache-budget-mb N] [--cb-out PATH]
              [--shared-prefix N]
              -> BENCH_continuous_batching.json (dense vs J-LRD max
-             concurrency under one cache budget, plus a shared-system-
-             prompt trace replayed with the prefix radix cache off/on)
+             concurrency under one cache budget with an f32/int8 pair
+             per variant, plus a shared-system-prompt trace replayed
+             with the prefix radix cache off/on)
   eval       [--backend native|pjrt] --config C --variant TAG [--ckpt PATH]
              [--selection PATH] [--probes N] [--seed N] [--r N]
+             [--cache-dtype f32|int8]  (int8, native only: score the
+             probe battery/perplexity over the QUANTIZED decode cache —
+             the accuracy side of the S19 capacity trade)
   convert    --config C --ckpt PATH --variant TAG [--selection PATH]
              [--out PATH]   (pure Rust; no artifacts needed)
   search     --config C --r N --method uniform [--out PATH]
@@ -249,12 +258,23 @@ fn native_backend(args: &Args) -> Result<NativeRunner> {
             )?
         }
     };
+    let mut model = model;
+    model.set_cache_dtype(cache_dtype(args)?);
     // `--max-batch` is the scheduler-facing name; `--batch` stays as the
     // historical alias.
     let batch =
         args.usize_or("max-batch", args.usize_or("batch", 4)?)?;
     let max_seq = args.usize_or("max-seq", cfg.max_seq.min(256))?;
     NativeRunner::new(model, batch, max_seq)
+}
+
+/// `--cache-dtype f32|int8` (DESIGN.md S19): the cache element storage
+/// of the native backend's slabs AND the scheduler's byte accounting —
+/// parsed once so the two can never disagree.
+fn cache_dtype(args: &Args) -> Result<elitekv::kvcache::CacheDtype> {
+    let tag = args.str_or("cache-dtype", "f32");
+    elitekv::kvcache::CacheDtype::parse(&tag)
+        .with_context(|| format!("bad --cache-dtype `{tag}` (f32|int8)"))
 }
 
 /// Scheduler policy from the shared serve/bench flags. The commands
@@ -272,6 +292,7 @@ fn scheduler_config(
             << 20,
         conservative: !args.has("optimistic-admission"),
         prefix_cache: args.has("prefix-cache"),
+        cache_dtype: cache_dtype(args)?,
     })
 }
 

@@ -18,6 +18,12 @@
 //!   `c_kv` cache slab, rows = cached positions).
 //! * [`sgemm_raw`] — the slice-level entry the model layer uses to run
 //!   per-head absorbed projections out of a larger weight block.
+//! * [`sgemm_q8`] / [`sgemm_nt_q8`] — the layer's first mixed-precision
+//!   members (DESIGN.md S19): the same two latent-attention GEMMs with
+//!   the B operand being an int8 group-quantized cache slab window,
+//!   dequantized *inside* the panel loop. Each is bitwise identical to
+//!   dequantize-the-window-then-run-the-f32-kernel, so the determinism
+//!   contract below covers them unchanged.
 //!
 //! # Blocking scheme
 //!
@@ -54,6 +60,7 @@
 //! module and `rust/tests/batched_decode.rs`); the scheduler's
 //! batched ≡ sequential greedy-determinism test rides on the second.
 
+use crate::kvcache::quant::{dequant, n_groups};
 use crate::tensor::Tensor;
 use crate::util::threadpool::parallel_map;
 
@@ -194,6 +201,206 @@ pub fn sgemm_raw(
                     &buf[i * pw..(i + 1) * pw],
                 );
             }
+        }
+    }
+}
+
+/// `c [m, n] = (+=) a [m, k] @ wq [k, n]` where `wq` is a group-quantized
+/// int8 matrix whose quantization rows are its `k`-index rows: row `kk`
+/// carries `n` i8 elements and `ceil(n/group)` f32 scales at
+/// `w_scales[kk * g ..]`. This is the fused-dequant twin of
+/// [`sgemm_raw`] for the latent attention output `O_lat = P · C` — `wq`
+/// is the int8 `c_kv`/`c_v` slab window, rows = cached positions, groups
+/// tiling the latent dim (DESIGN.md S19).
+///
+/// Dequantization happens inside the panel loop: each weight element is
+/// reconstructed as `(q as f32) * scale` ([`dequant`]) at the moment its
+/// AXPY fires, in the same fixed `k`-ascending order as [`sgemm_raw`].
+/// Therefore the result is **bitwise identical** to dequantizing the
+/// whole window first and running the f32 kernel — the S17 determinism
+/// contract (1 ≡ N threads, row independence) carries over unchanged.
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm_q8(
+    a: &[f32],
+    m: usize,
+    k: usize,
+    w_q: &[i8],
+    w_scales: &[f32],
+    group: usize,
+    n: usize,
+    c: &mut [f32],
+    max_threads: usize,
+    accumulate: bool,
+) {
+    let g = n_groups(n, group);
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(w_q.len(), k * n);
+    debug_assert_eq!(w_scales.len(), k * g);
+    debug_assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        if !accumulate {
+            c.fill(0.0);
+        }
+        return;
+    }
+    let panels = n.div_ceil(PANEL_COLS);
+    let threads = gemm_threads(m, k, n, max_threads).min(panels);
+    // Same accumulation structure as sgemm_raw's fill_panel, with the
+    // weight element dequantized in place of the f32 load.
+    let fill_panel = |p: usize, buf: &mut [f32]| {
+        let j0 = p * PANEL_COLS;
+        let j1 = (j0 + PANEL_COLS).min(n);
+        let pw = j1 - j0;
+        for i in 0..m {
+            let a_row = &a[i * k..(i + 1) * k];
+            let c_row = &mut buf[i * pw..(i + 1) * pw];
+            for (kk, &av) in a_row.iter().enumerate() {
+                if av == 0.0 {
+                    continue; // exact: finite weights make 0·w a no-op
+                }
+                let q_row = &w_q[kk * n + j0..kk * n + j1];
+                let s_row = &w_scales[kk * g..(kk + 1) * g];
+                for (jj, (cv, &qv)) in
+                    c_row.iter_mut().zip(q_row).enumerate()
+                {
+                    *cv += av * dequant(qv, s_row[(j0 + jj) / group]);
+                }
+            }
+        }
+    };
+    let add_or_copy = |dst: &mut [f32], src: &[f32]| {
+        if accumulate {
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d += s;
+            }
+        } else {
+            dst.copy_from_slice(src);
+        }
+    };
+    if threads <= 1 {
+        let mut buf = vec![0.0f32; m * PANEL_COLS.min(n)];
+        for p in 0..panels {
+            let j0 = p * PANEL_COLS;
+            let j1 = (j0 + PANEL_COLS).min(n);
+            let pw = j1 - j0;
+            buf[..m * pw].fill(0.0);
+            fill_panel(p, &mut buf[..m * pw]);
+            for i in 0..m {
+                add_or_copy(
+                    &mut c[i * n + j0..i * n + j1],
+                    &buf[i * pw..(i + 1) * pw],
+                );
+            }
+        }
+    } else {
+        let run_panel = |p: usize| -> Vec<f32> {
+            let j0 = p * PANEL_COLS;
+            let j1 = (j0 + PANEL_COLS).min(n);
+            let mut buf = vec![0.0f32; m * (j1 - j0)];
+            fill_panel(p, &mut buf);
+            buf
+        };
+        for (p, buf) in parallel_map(panels, threads, run_panel)
+            .into_iter()
+            .enumerate()
+        {
+            let j0 = p * PANEL_COLS;
+            let j1 = (j0 + PANEL_COLS).min(n);
+            let pw = j1 - j0;
+            for i in 0..m {
+                add_or_copy(
+                    &mut c[i * n + j0..i * n + j1],
+                    &buf[i * pw..(i + 1) * pw],
+                );
+            }
+        }
+    }
+}
+
+/// `c [m, n] = a [m, k] @ bqᵀ` where `bq [n, k]` is group-quantized with
+/// its quantization rows being its `n`-index rows: row `j` carries `k`
+/// i8 elements and `ceil(k/group)` f32 scales at `b_scales[j * g ..]`.
+/// The fused-dequant twin of [`sgemm_nt`] for the latent attention
+/// scores `S = q_lat · Cᵀ` — `bq` is the int8 key-latent slab window,
+/// rows = cached positions (DESIGN.md S19).
+///
+/// Each cached row is dequantized once per panel into an L1-resident
+/// row buffer via [`dequant`] and then consumed by the same contiguous
+/// [`crate::native::forward::dot`] as the f32 kernel, so the result is
+/// bitwise identical to dequantize-then-[`sgemm_nt`], independent of
+/// `max_threads` and of which rows share the call.
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm_nt_q8(
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b_q: &[i8],
+    b_scales: &[f32],
+    group: usize,
+    n: usize,
+    c: &mut [f32],
+    max_threads: usize,
+) {
+    let g = n_groups(k, group);
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b_q.len(), n * k);
+    debug_assert_eq!(b_scales.len(), n * g);
+    debug_assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let panels = n.div_ceil(PANEL_COLS);
+    let threads = gemm_threads(m, k, n, max_threads).min(panels);
+    // One b row dequantized into `row`, then the same dot as sgemm_nt.
+    let deq_row = |j: usize, row: &mut [f32]| {
+        crate::kvcache::quant::dequantize_row(
+            &b_q[j * k..(j + 1) * k],
+            &b_scales[j * g..(j + 1) * g],
+            group,
+            row,
+        );
+    };
+    if threads <= 1 {
+        let mut row = vec![0.0f32; k];
+        for j in 0..n {
+            deq_row(j, &mut row);
+            for i in 0..m {
+                c[i * n + j] =
+                    crate::native::forward::dot(&a[i * k..(i + 1) * k], &row);
+            }
+        }
+        return;
+    }
+    let run_panel = |p: usize| -> Vec<f32> {
+        let j0 = p * PANEL_COLS;
+        let j1 = (j0 + PANEL_COLS).min(n);
+        let pw = j1 - j0;
+        let mut buf = vec![0.0f32; m * pw];
+        let mut row = vec![0.0f32; k];
+        for (jj, j) in (j0..j1).enumerate() {
+            deq_row(j, &mut row);
+            for i in 0..m {
+                buf[i * pw + jj] = crate::native::forward::dot(
+                    &a[i * k..(i + 1) * k],
+                    &row,
+                );
+            }
+        }
+        buf
+    };
+    for (p, buf) in parallel_map(panels, threads, run_panel)
+        .into_iter()
+        .enumerate()
+    {
+        let j0 = p * PANEL_COLS;
+        let j1 = (j0 + PANEL_COLS).min(n);
+        let pw = j1 - j0;
+        for i in 0..m {
+            c[i * n + j0..i * n + j1]
+                .copy_from_slice(&buf[i * pw..(i + 1) * pw]);
         }
     }
 }
@@ -372,6 +579,128 @@ mod tests {
         for (x, y) in c.iter().zip(&want.data) {
             assert!((x - y).abs() < 1e-5);
         }
+    }
+
+    /// Quantize an `[rows, w]` matrix row-wise; returns (q, scales, g).
+    fn quantize_rows(
+        data: &[f32],
+        rows: usize,
+        w: usize,
+        group: usize,
+    ) -> (Vec<i8>, Vec<f32>, usize) {
+        let g = crate::kvcache::quant::n_groups(w, group);
+        let mut q = vec![0i8; rows * w];
+        let mut s = vec![0.0f32; rows * g];
+        for r in 0..rows {
+            crate::kvcache::quant::quantize_row(
+                &data[r * w..(r + 1) * w],
+                group,
+                &mut q[r * w..(r + 1) * w],
+                &mut s[r * g..(r + 1) * g],
+            );
+        }
+        (q, s, g)
+    }
+
+    /// Dequantize rows quantized by `quantize_rows` back to f32.
+    fn dequantize_rows(
+        q: &[i8],
+        s: &[f32],
+        rows: usize,
+        w: usize,
+        group: usize,
+    ) -> Vec<f32> {
+        let g = crate::kvcache::quant::n_groups(w, group);
+        let mut out = vec![0.0f32; rows * w];
+        for r in 0..rows {
+            crate::kvcache::quant::dequantize_row(
+                &q[r * w..(r + 1) * w],
+                &s[r * g..(r + 1) * g],
+                group,
+                &mut out[r * w..(r + 1) * w],
+            );
+        }
+        out
+    }
+
+    /// The S19 fused-dequant contract: sgemm_nt_q8 over quantized rows
+    /// equals sgemm_nt over the dequantized rows BITWISE, at any thread
+    /// count (awkward non-multiple-of-panel/group shapes included).
+    #[test]
+    fn nt_q8_matches_dequantized_reference_bitwise() {
+        let group = 32usize;
+        for (m, k, n, seed) in
+            [(2usize, 48usize, 70usize, 20u64), (3, 64, PANEL_COLS + 5, 21)]
+        {
+            let a = randn(vec![m, k], seed);
+            let b = randn(vec![n, k], seed + 100);
+            let (bq, bs, _) = quantize_rows(&b.data, n, k, group);
+            let deq = dequantize_rows(&bq, &bs, n, k, group);
+            let mut want = vec![0.0f32; m * n];
+            sgemm_nt(&a.data, m, k, &deq, n, &mut want, 1);
+            for threads in [1usize, 8] {
+                let mut got = vec![0.0f32; m * n];
+                sgemm_nt_q8(
+                    &a.data, m, k, &bq, &bs, group, n, &mut got, threads,
+                );
+                assert_eq!(
+                    got, want,
+                    "m{m} k{k} n{n} threads {threads}: fused dequant \
+                     diverged from the f32 reference"
+                );
+            }
+        }
+    }
+
+    /// Same contract for sgemm_q8 (the O_lat = P · C form), including
+    /// the accumulate epilogue.
+    #[test]
+    fn q8_matches_dequantized_reference_bitwise() {
+        let group = 32usize;
+        let (m, k, n) = (8usize, 21usize, 48usize);
+        let a = randn(vec![m, k], 30);
+        let w = randn(vec![k, n], 31);
+        let (wq, ws, _) = quantize_rows(&w.data, k, n, group);
+        let deq = dequantize_rows(&wq, &ws, k, n, group);
+        for accumulate in [false, true] {
+            let mut want = vec![0.5f32; m * n];
+            sgemm_raw(&a.data, m, k, &deq, n, &mut want, 1, accumulate);
+            for threads in [1usize, 8] {
+                let mut got = vec![0.5f32; m * n];
+                sgemm_q8(
+                    &a.data, m, k, &wq, &ws, group, n, &mut got, threads,
+                    accumulate,
+                );
+                assert_eq!(
+                    got, want,
+                    "acc={accumulate} threads={threads}: fused dequant \
+                     diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn q8_kernels_handle_degenerate_shapes() {
+        let group = 32usize;
+        // m == 0 is a no-op for both
+        let w = randn(vec![4, 8], 40);
+        let (wq, ws, _) = quantize_rows(&w.data, 4, 8, group);
+        let mut c: Vec<f32> = Vec::new();
+        sgemm_q8(&[], 0, 4, &wq, &ws, group, 8, &mut c, 4, false);
+        assert!(c.is_empty());
+        let b = randn(vec![3, 8], 41);
+        let (bq, bs, _) = quantize_rows(&b.data, 3, 8, group);
+        let mut c2: Vec<f32> = Vec::new();
+        sgemm_nt_q8(&[], 0, 8, &bq, &bs, group, 3, &mut c2, 4);
+        assert!(c2.is_empty());
+        // k == 0 zeroes (or preserves) c for sgemm_q8
+        let mut c3 = vec![3.0f32; 2 * 4];
+        sgemm_q8(&[], 2, 0, &[], &[], group, 4, &mut c3, 1, false);
+        assert!(c3.iter().all(|&x| x == 0.0));
+        let mut c4 = vec![3.0f32; 2 * 4];
+        sgemm_q8(&[], 2, 0, &[], &[], group, 4, &mut c4, 1, true);
+        assert!(c4.iter().all(|&x| x == 3.0));
     }
 
     #[test]

@@ -22,6 +22,7 @@ use anyhow::{bail, ensure, Result};
 
 use crate::config::{ModelConfig, Variant};
 use crate::data::corpus::Batch;
+use crate::kvcache::CacheDtype;
 use crate::native::model::{BatchScratch, LaneStep, NativeModel};
 use crate::runtime::{Backend, HostTensor};
 use crate::util::threadpool::parallel_map;
@@ -81,6 +82,10 @@ impl Backend for NativeRunner {
 
     fn variant(&self) -> &Variant {
         &self.model.variant
+    }
+
+    fn cache_dtype(&self) -> CacheDtype {
+        self.model.cache_dtype
     }
 
     fn serve_shape(&self) -> Result<(usize, usize)> {

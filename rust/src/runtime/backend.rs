@@ -20,6 +20,7 @@ use anyhow::Result;
 
 use crate::config::{ModelConfig, Variant};
 use crate::data::corpus::Batch;
+use crate::kvcache::CacheDtype;
 use crate::runtime::HostTensor;
 
 /// A serving engine for one (config, variant) model.
@@ -33,6 +34,15 @@ pub trait Backend {
     /// The architecture variant this engine serves (determines the
     /// cache slab layout and the per-token rotation scheme).
     fn variant(&self) -> &Variant;
+
+    /// Element storage of this engine's cache slabs (DESIGN.md S19).
+    /// The scheduler sizes its block pool from this (int8 quarters
+    /// `bytes_per_token`, quadrupling blocks under one byte budget) and
+    /// the radix cache stores rows in it. Only the native runner
+    /// supports [`CacheDtype::Int8`]; the default is f32.
+    fn cache_dtype(&self) -> CacheDtype {
+        CacheDtype::F32
+    }
 
     /// (decode lanes, serving window) of this engine instance.
     fn serve_shape(&self) -> Result<(usize, usize)>;

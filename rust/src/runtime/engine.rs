@@ -22,6 +22,10 @@ impl HostTensor {
             HostTensor::I32(d, s) => client
                 .buffer_from_host_buffer::<i32>(d, s, None)
                 .map_err(|e| anyhow::anyhow!("upload i32: {e:?}")),
+            HostTensor::Q8 { .. } => bail!(
+                "quantized cache slabs never cross the PJRT boundary \
+                 (--cache-dtype int8 is native-only)"
+            ),
         }
     }
 

@@ -15,6 +15,25 @@ pub enum HostTensor {
     F32(Vec<f32>, Vec<usize>),
     /// Dense i32 payload + shape (row-major; token/position inputs).
     I32(Vec<i32>, Vec<usize>),
+    /// Group-quantized int8 tensor (DESIGN.md S19): the native backend's
+    /// `--cache-dtype int8` slab storage. `shape` is the logical f32
+    /// shape; `data` holds one i8 per logical element; `row` is the
+    /// quantization row width (the contiguous span one token writes —
+    /// `shape[3..].product()` for `[L,B,S,...]` cache slabs); `scales`
+    /// holds `ceil(row/group)` f32 scales per row, row-major. Never
+    /// produced by the PJRT path.
+    Q8 {
+        /// i8 payload, one element per logical f32 element.
+        data: Vec<i8>,
+        /// Per-row-group scales `[n_rows, ceil(row/group)]` flat.
+        scales: Vec<f32>,
+        /// Logical (f32-equivalent) shape.
+        shape: Vec<usize>,
+        /// Elements per quantization row.
+        row: usize,
+        /// Elements per scale group within a row.
+        group: usize,
+    },
 }
 
 impl HostTensor {
@@ -33,10 +52,29 @@ impl HostTensor {
         HostTensor::F32(vec![0.0; shape.iter().product()], shape.to_vec())
     }
 
-    /// The tensor's shape (row-major dims).
+    /// Zero-filled group-quantized int8 tensor: `row` elements per
+    /// quantization row (must divide the total element count), `group`
+    /// elements per scale group. All scales start at 0 (an all-zero
+    /// row dequantizes to exact zeros).
+    pub fn zeros_q8(shape: &[usize], row: usize, group: usize) -> HostTensor {
+        let numel: usize = shape.iter().product();
+        assert!(row > 0 && group > 0, "row/group must be positive");
+        assert_eq!(numel % row, 0, "row {row} must tile shape {shape:?}");
+        let n_rows = numel / row;
+        HostTensor::Q8 {
+            data: vec![0i8; numel],
+            scales: vec![0.0f32; n_rows * row.div_ceil(group)],
+            shape: shape.to_vec(),
+            row,
+            group,
+        }
+    }
+
+    /// The tensor's shape (row-major dims; logical f32 shape for Q8).
     pub fn shape(&self) -> &[usize] {
         match self {
             HostTensor::F32(_, s) | HostTensor::I32(_, s) => s,
+            HostTensor::Q8 { shape, .. } => shape,
         }
     }
 
@@ -50,14 +88,15 @@ impl HostTensor {
         match self {
             HostTensor::F32(..) => Dtype::F32,
             HostTensor::I32(..) => Dtype::I32,
+            HostTensor::Q8 { .. } => Dtype::I8,
         }
     }
 
-    /// Borrow the f32 payload; errors on an i32 tensor.
+    /// Borrow the f32 payload; errors on an i32/q8 tensor.
     pub fn as_f32(&self) -> Result<&[f32]> {
         match self {
             HostTensor::F32(d, _) => Ok(d),
-            _ => bail!("expected f32 tensor, got i32"),
+            _ => bail!("expected f32 tensor, got {:?}", self.dtype()),
         }
     }
 
@@ -65,16 +104,44 @@ impl HostTensor {
     pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
         match self {
             HostTensor::F32(d, _) => Ok(d),
-            _ => bail!("expected f32 tensor, got i32"),
+            _ => bail!("expected f32 tensor, got {:?}", self.dtype()),
         }
     }
 
-    /// Borrow the i32 payload; errors on an f32 tensor.
+    /// Borrow the i32 payload; errors otherwise.
     pub fn as_i32(&self) -> Result<&[i32]> {
         match self {
             HostTensor::I32(d, _) => Ok(d),
-            _ => bail!("expected i32 tensor, got f32"),
+            _ => bail!("expected i32 tensor, got {:?}", self.dtype()),
         }
+    }
+
+    /// Borrow the quantized payload: `(data, scales, row, group)`.
+    /// Errors on dense tensors.
+    pub fn as_q8(&self) -> Result<(&[i8], &[f32], usize, usize)> {
+        match self {
+            HostTensor::Q8 { data, scales, row, group, .. } => {
+                Ok((data, scales, *row, *group))
+            }
+            _ => bail!("expected q8 tensor, got {:?}", self.dtype()),
+        }
+    }
+
+    /// Mutable quantized payload: `(data, scales, row, group)`.
+    pub fn as_q8_mut(
+        &mut self,
+    ) -> Result<(&mut [i8], &mut [f32], usize, usize)> {
+        match self {
+            HostTensor::Q8 { data, scales, row, group, .. } => {
+                Ok((data, scales, *row, *group))
+            }
+            _ => bail!("expected q8 tensor, got {:?}", self.dtype()),
+        }
+    }
+
+    /// True for the group-quantized int8 arm.
+    pub fn is_q8(&self) -> bool {
+        matches!(self, HostTensor::Q8 { .. })
     }
 
     /// Scalar f32 value (accepts rank-0 or single-element tensors).
@@ -124,5 +191,25 @@ mod tests {
         let mut t = HostTensor::zeros(&[4]);
         t.as_f32_mut().unwrap()[2] = 7.0;
         assert_eq!(t.as_f32().unwrap()[2], 7.0);
+    }
+
+    #[test]
+    fn q8_geometry_and_access() {
+        // [2, 1, 3, 8] slab, rows of 8 elements, groups of 4 -> 6 rows,
+        // 2 scales each.
+        let t = HostTensor::zeros_q8(&[2, 1, 3, 8], 8, 4);
+        assert_eq!(t.shape(), &[2, 1, 3, 8]);
+        assert_eq!(t.numel(), 48);
+        assert!(t.is_q8());
+        let (d, s, row, group) = t.as_q8().unwrap();
+        assert_eq!((d.len(), s.len(), row, group), (48, 12, 8, 4));
+        assert!(t.as_f32().is_err());
+        assert_eq!(t.dtype(), Dtype::I8);
+        let mut t = t;
+        let (d, s, ..) = t.as_q8_mut().unwrap();
+        d[9] = -3;
+        s[2] = 0.5;
+        let (d, s, ..) = t.as_q8().unwrap();
+        assert_eq!((d[9], s[2]), (-3, 0.5));
     }
 }

@@ -1,0 +1,325 @@
+//! Int8 quantized latent KV cache suite (ISSUE 5 / DESIGN.md S19).
+//!
+//! Four pins:
+//! * **accuracy** — int8 decode logits stay within a pinned tolerance
+//!   of the f32 engine across the dense (mha), split-latent (slrd), and
+//!   shared-latent (jlrd 25 %) variants, at prefill AND across decode
+//!   steps;
+//! * **capacity** — `bytes_per_token` at int8 is exactly 1/4 of f32 for
+//!   every grid variant, `tokens_in_budget` scales 4x (so it more than
+//!   doubles — the compounding claim), and halving bytes/token doubles
+//!   tokens in ANY budget;
+//! * **sharing** — serving with `--prefix-cache` on is **bitwise**
+//!   identical to off *within* the int8 dtype: same per-step logits,
+//!   same final quantized slabs (payload AND scales), same greedy
+//!   tokens — the radix cache stores and replays quantized bytes, never
+//!   round-tripping through f32;
+//! * **eviction** — the quantized radix cache under pool pressure keeps
+//!   every request correct and the allocator consistent.
+
+use elitekv::config::{ModelConfig, Variant};
+use elitekv::coordinator::{
+    GenParams, InferenceServer, Request, SchedulerConfig,
+};
+use elitekv::kvcache::{CacheDtype, CacheLayout};
+use elitekv::native::{NativeModel, NativeRunner};
+use elitekv::runtime::Backend;
+use elitekv::search::uniform_selection;
+
+/// Pinned accuracy budget for int8-vs-f32 logits on the tiny random-init
+/// models: group-wise symmetric quantization bounds each cached element's
+/// error by group_max/254 (~0.4 % relative); through 4 layers of
+/// attention + residuals that lands orders of magnitude below these
+/// bounds, so a regression (wrong scale indexing, double quantization,
+/// stale rows) trips them immediately.
+const MAX_ABS: f32 = 0.5;
+const MEAN_ABS: f32 = 0.06;
+
+fn grid() -> Vec<(Variant, Option<usize>)> {
+    vec![
+        (Variant::Mha, None),
+        (Variant::Slrd { r: 4, d_ck: 32, d_cv: 48 }, Some(4)),
+        (Variant::EliteKv { r: 4, d_ckv: 64 }, Some(4)),
+    ]
+}
+
+fn runner(
+    variant: &Variant,
+    sel_r: Option<usize>,
+    dtype: CacheDtype,
+    lanes: usize,
+    window: usize,
+) -> NativeRunner {
+    let cfg = ModelConfig::tiny();
+    let sel = sel_r.map(|r| uniform_selection(&cfg, r));
+    let mut model =
+        NativeModel::init(&cfg, variant.clone(), 0xa11, sel.as_ref())
+            .unwrap();
+    model.set_cache_dtype(dtype);
+    NativeRunner::new(model, lanes, window).unwrap()
+}
+
+fn compare_rows(tag: &str, phase: &str, a: &[f32], b: &[f32]) {
+    let max = a
+        .iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    let mean = a
+        .iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .sum::<f32>()
+        / a.len() as f32;
+    assert!(
+        max <= MAX_ABS,
+        "{tag} {phase}: int8 max |dlogit| {max} > {MAX_ABS}"
+    );
+    assert!(
+        mean <= MEAN_ABS,
+        "{tag} {phase}: int8 mean |dlogit| {mean} > {MEAN_ABS}"
+    );
+}
+
+/// The accuracy pin across the variant grid: identical prompts and
+/// identical (forced) decode token streams through an f32 and an int8
+/// engine; every logits row stays inside the pinned budget — and the
+/// comparison is non-vacuous (the f32 logits are O(1), far above the
+/// tolerance).
+#[test]
+fn int8_logits_within_pinned_tolerance_of_f32_across_grid() {
+    for (variant, sel_r) in grid() {
+        let tag = variant.tag();
+        let f = runner(&variant, sel_r, CacheDtype::F32, 2, 32);
+        let q = runner(&variant, sel_r, CacheDtype::Int8, 2, 32);
+        let (b, s) = f.serve_shape().unwrap();
+        let mut tokens = vec![0i32; b * s];
+        for lane in 0..b {
+            for i in 0..8 {
+                tokens[lane * s + i] = (3 + 7 * lane + 2 * i) as i32 % 500;
+            }
+        }
+        let lens = vec![8i32; b];
+        let (lf, mut cf) = f.prefill(&tokens, &lens).unwrap();
+        let (lq, mut cq) = q.prefill(&tokens, &lens).unwrap();
+        let (lf, lq) = (lf.as_f32().unwrap(), lq.as_f32().unwrap());
+        let scale_check =
+            lf.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        assert!(
+            scale_check > MAX_ABS,
+            "{tag}: f32 logits too small ({scale_check}) for the bound \
+             to mean anything"
+        );
+        compare_rows(&tag, "prefill", lf, lq);
+        // decode 6 forced steps so both engines see the same stream
+        let mut pos = vec![8i32; b];
+        for step in 0..6 {
+            let tok = vec![(11 + 3 * step) as i32; b];
+            let (lf, ncf) = f.decode(&tok, &pos, cf, false).unwrap();
+            let (lq, ncq) = q.decode(&tok, &pos, cq, false).unwrap();
+            cf = ncf;
+            cq = ncq;
+            compare_rows(
+                &tag,
+                &format!("decode step {step}"),
+                lf.as_f32().unwrap(),
+                lq.as_f32().unwrap(),
+            );
+            for p in pos.iter_mut() {
+                *p += 1;
+            }
+        }
+    }
+}
+
+/// The capacity pins: exact 4x bytes/token reduction per variant (the
+/// acceptance criterion asks <= 1/4 for jlrd-25; it holds with equality
+/// for the whole grid), 4x `tokens_in_budget` (hence "at least
+/// doubles"), and the generic halving-doubles property the scheduler's
+/// budget math rides on.
+#[test]
+fn int8_quarters_bytes_and_at_least_doubles_tokens_in_budget() {
+    let cfg = ModelConfig::tiny();
+    for (variant, _) in grid() {
+        let f = CacheLayout::new(&cfg, variant.clone());
+        let q = CacheLayout::with_dtype(&cfg, variant, CacheDtype::Int8);
+        assert_eq!(q.bytes_per_token() * 4, f.bytes_per_token());
+        // a budget that is an exact multiple of the f32 footprint makes
+        // the 4x identity exact (no integer-division slack)
+        let budget = 96 * f.bytes_per_token();
+        let (tf, tq) =
+            (f.tokens_in_budget(budget), q.tokens_in_budget(budget));
+        assert_eq!(tf, 96);
+        assert_eq!(tq, 4 * tf);
+        assert!(tq >= 2 * tf, "int8 must at least double capacity");
+        // halving bytes/token doubles tokens for any budget (the jlrd
+        // ratio-vs-dtype compounding argument in DESIGN.md S19)
+        for b in [budget, budget + 123, 1 << 20] {
+            assert!(
+                q.tokens_in_budget(b) >= 2 * f.tokens_in_budget(b),
+                "halving bytes twice must at least double tokens twice"
+            );
+        }
+    }
+}
+
+fn greedy(id: u64, prompt: Vec<u32>, max_new: usize) -> Request {
+    Request::new(
+        id,
+        prompt,
+        GenParams {
+            max_new_tokens: max_new,
+            stop_token: None,
+            temperature: 0.0,
+            ..Default::default()
+        },
+    )
+}
+
+fn int8_server(
+    variant: Variant,
+    sel_r: Option<usize>,
+    lanes: usize,
+    budget: usize,
+    prefix_cache: bool,
+) -> InferenceServer {
+    let r = runner(&variant, sel_r, CacheDtype::Int8, lanes, 64);
+    let cfg = SchedulerConfig {
+        cache_budget_bytes: budget,
+        prefix_cache,
+        cache_dtype: CacheDtype::Int8,
+        ..Default::default()
+    };
+    InferenceServer::with_config(Box::new(r), &cfg).unwrap()
+}
+
+/// THE int8 sharing pin: prefix-cache on ≡ off bitwise *within* the
+/// dtype. Quantized rows are stored and replayed as bytes + scales, so
+/// a lane resumed from the radix cache is indistinguishable — per-step
+/// logits, final quantized slabs, and greedy token streams all match
+/// exactly, while the cache-on engine demonstrably hits.
+#[test]
+fn prefix_cache_on_off_bitwise_at_int8() {
+    let variant = Variant::EliteKv { r: 4, d_ckv: 64 };
+    let budget = 8 << 20;
+    let mut on = int8_server(variant.clone(), Some(4), 3, budget, true);
+    let mut off = int8_server(variant, Some(4), 3, budget, false);
+    // 32-token shared system prompt (two 16-token blocks) + tails
+    let mut gen = elitekv::data::CorpusGen::new(512, 23);
+    let shared = gen.stream(32);
+    let prompts: Vec<Vec<u32>> = (0..5)
+        .map(|i| {
+            let mut p = shared.clone();
+            p.extend(gen.stream(5 + 3 * (i % 3)));
+            p
+        })
+        .collect();
+    let phases: [&[usize]; 2] = [&[0], &[1, 2, 3, 4]];
+    let mut responses_on = Vec::new();
+    let mut responses_off = Vec::new();
+    for phase in phases {
+        for &i in phase {
+            let max_new = 3 + (i % 4);
+            on.submit(greedy(i as u64, prompts[i].clone(), max_new))
+                .unwrap();
+            off.submit(greedy(i as u64, prompts[i].clone(), max_new))
+                .unwrap();
+        }
+        while on.busy() || off.busy() {
+            responses_on.extend(on.step().unwrap());
+            responses_off.extend(off.step().unwrap());
+            match (on.logits_snapshot(), off.logits_snapshot()) {
+                (Some(a), Some(b)) => assert_eq!(
+                    a.as_f32().unwrap(),
+                    b.as_f32().unwrap(),
+                    "int8 logits diverge with the prefix cache on"
+                ),
+                (a, b) => {
+                    assert_eq!(a.is_some(), b.is_some(), "desynchronized")
+                }
+            }
+        }
+    }
+    // final quantized slabs bitwise identical: payloads AND scales
+    for (sa, sb) in on.cache_snapshot().iter().zip(off.cache_snapshot()) {
+        let (da, sca, ..) = sa.as_q8().unwrap();
+        let (db, scb, ..) = sb.as_q8().unwrap();
+        assert_eq!(da, db, "int8 payloads diverge");
+        assert_eq!(sca, scb, "int8 scales diverge");
+    }
+    responses_on.sort_by_key(|r| r.id);
+    responses_off.sort_by_key(|r| r.id);
+    assert_eq!(responses_on.len(), 5);
+    for (a, b) in responses_on.iter().zip(&responses_off) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.tokens, b.tokens, "request {} diverged", a.id);
+    }
+    assert!(on.stats.prefix_hits >= 4, "sharing never happened");
+    assert!(
+        on.stats.prefill_tokens < off.stats.prefill_tokens,
+        "prefix cache saved no prefill work"
+    );
+    on.queue.allocator.check_invariants().unwrap();
+    off.queue.allocator.check_invariants().unwrap();
+}
+
+/// Quantized radix splice under eviction pressure: a pool tight enough
+/// to force LRU eviction of cached int8 prefixes must leave every
+/// request's greedy tokens identical to a prefix-cache-off int8 engine,
+/// with blocks conserved. (J-LRD tiny int8 layout: 512 B/token, so a
+/// 48 KiB budget is exactly six 16-token blocks.)
+#[test]
+fn quantized_radix_splice_survives_eviction_pressure() {
+    let var = Variant::EliteKv { r: 4, d_ckv: 64 };
+    let mut base = int8_server(var.clone(), Some(4), 1, 48 << 10, false);
+    assert_eq!(
+        base.queue.allocator.n_blocks(),
+        6,
+        "int8 budget sizing changed"
+    );
+    let mut on = int8_server(var, Some(4), 1, 48 << 10, true);
+    // three DISTINCT 32-token prompts: each completion caches 2 blocks,
+    // so the third admission must evict
+    let mut gen = elitekv::data::CorpusGen::new(512, 77);
+    let prompts: Vec<Vec<u32>> = (0..3).map(|_| gen.stream(32)).collect();
+    for (i, p) in prompts.iter().enumerate() {
+        base.submit(greedy(i as u64, p.clone(), 8)).unwrap();
+        on.submit(greedy(i as u64, p.clone(), 8)).unwrap();
+    }
+    let mut want = base.run_to_completion().unwrap();
+    let mut got = on.run_to_completion().unwrap();
+    want.sort_by_key(|r| r.id);
+    got.sort_by_key(|r| r.id);
+    assert_eq!(got.len(), 3);
+    for (a, b) in got.iter().zip(&want) {
+        assert_eq!(a.tokens.len(), 8);
+        assert_eq!(a.tokens, b.tokens, "eviction corrupted request {}", a.id);
+    }
+    assert!(
+        on.stats.prefix_evicted_blocks >= 2,
+        "no eviction under a 6-block pool"
+    );
+    let a = &on.queue.allocator;
+    assert_eq!(
+        a.free_blocks() + on.stats.prefix_cached_blocks,
+        a.n_blocks(),
+        "blocks leaked past the quantized cache"
+    );
+    a.check_invariants().unwrap();
+}
+
+/// Dtype agreement is enforced at engine construction: an int8
+/// scheduler config over an f32 backend (or vice versa) is a loud
+/// error, not silent byte-accounting drift.
+#[test]
+fn scheduler_and_backend_dtypes_must_agree() {
+    let r = runner(&Variant::Mha, None, CacheDtype::F32, 1, 32);
+    let cfg = SchedulerConfig {
+        cache_dtype: CacheDtype::Int8,
+        ..Default::default()
+    };
+    let err = InferenceServer::with_config(Box::new(r), &cfg)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("cache dtype"), "{err}");
+}
