@@ -44,6 +44,10 @@ pub struct NativeBenchOpts {
     pub decode_steps: usize,
     /// Serving window the runner is built with.
     pub max_seq: usize,
+    /// Top-k row budget for the sweep's sparse rows (DESIGN.md S20):
+    /// every variant/dtype cell is re-measured with `--sparse-k` at this
+    /// k after its dense pair. 0 disables the sparse rows entirely.
+    pub sparse_k: usize,
 }
 
 impl Default for NativeBenchOpts {
@@ -53,6 +57,7 @@ impl Default for NativeBenchOpts {
             prompt_len: 16,
             decode_steps: 48,
             max_seq: 128,
+            sparse_k: 8,
         }
     }
 }
@@ -163,6 +168,7 @@ fn bench_variant(
     variant: &Variant,
     opts: &NativeBenchOpts,
     dtype: CacheDtype,
+    sparse_k: Option<usize>,
     gemm: (f64, f64),
 ) -> Result<Json> {
     ensure!(opts.prompt_len >= 1, "--prompt must be at least 1");
@@ -178,6 +184,7 @@ fn bench_variant(
     let mut model =
         NativeModel::init(cfg, variant.clone(), 0xbe7c, sel.as_ref())?;
     model.set_cache_dtype(dtype);
+    model.set_sparse_k(sparse_k);
     let runner = NativeRunner::new(model, opts.batch, opts.max_seq)?;
     let (b, s) = runner.serve_shape()?;
     let mut tokens = vec![0i32; b * s];
@@ -212,6 +219,7 @@ fn bench_variant(
     Ok(Json::obj(vec![
         ("variant", Json::str(&variant.tag())),
         ("cache_dtype", Json::str(dtype.tag())),
+        ("sparse_k", Json::num(sparse_k.unwrap_or(0) as f64)),
         ("r", Json::num(variant.r().unwrap_or(0) as f64)),
         (
             "d_ckv",
@@ -243,21 +251,41 @@ pub fn native_decode_bench(
     out: &Path,
 ) -> Result<Json> {
     let mut rows = Vec::new();
+    // Each variant's cells: the f32/int8 dense pair, then (when
+    // `opts.sparse_k > 0`) the same pair re-measured under sparse decode
+    // — the sparse step-latency columns read directly against their
+    // dense siblings two rows up.
+    let mut grid: Vec<(CacheDtype, Option<usize>)> =
+        vec![(CacheDtype::F32, None), (CacheDtype::Int8, None)];
+    if opts.sparse_k > 0 {
+        grid.push((CacheDtype::F32, Some(opts.sparse_k)));
+        grid.push((CacheDtype::Int8, Some(opts.sparse_k)));
+    }
     for variant in variants {
         // The projection-GEMM microbench times the dtype-independent
         // f32 weight GEMMs (weights are never quantized): measure once
-        // per variant and share it across the f32/int8 pair.
+        // per variant and share it across every dense/sparse dtype cell.
         let gemm = gemm_microbench(cfg, variant, opts.batch);
-        for dtype in [CacheDtype::F32, CacheDtype::Int8] {
-            log::info!("native bench: {} ({})", variant.tag(), dtype.tag());
-            let row = bench_variant(cfg, variant, opts, dtype, gemm)
+        for &(dtype, sk) in &grid {
+            let sparse_tag =
+                sk.map(|k| format!("+k{k}")).unwrap_or_default();
+            log::info!(
+                "native bench: {}{sparse_tag} ({})",
+                variant.tag(),
+                dtype.tag()
+            );
+            let row = bench_variant(cfg, variant, opts, dtype, sk, gemm)
                 .with_context(|| {
-                    format!("bench {} ({})", variant.tag(), dtype.tag())
+                    format!(
+                        "bench {}{sparse_tag} ({})",
+                        variant.tag(),
+                        dtype.tag()
+                    )
                 })?;
             println!(
                 "bench native_decode/{:<24} {:<4} {:>8.1} tok/s  p50 \
                  {:>7.3} ms  {:>6} B/token",
-                variant.tag(),
+                format!("{}{sparse_tag}", variant.tag()),
                 dtype.tag(),
                 row.req("tokens_per_s").as_f64().unwrap_or(0.0),
                 row.req("step_ms_p50").as_f64().unwrap_or(0.0),
@@ -274,6 +302,7 @@ pub fn native_decode_bench(
         ("prompt_len", Json::num(opts.prompt_len as f64)),
         ("decode_steps", Json::num(opts.decode_steps as f64)),
         ("max_seq", Json::num(opts.max_seq as f64)),
+        ("sparse_k", Json::num(opts.sparse_k as f64)),
         ("rows", Json::Arr(rows)),
     ]);
     if let Some(parent) = out.parent() {
@@ -298,6 +327,7 @@ mod tests {
             prompt_len: 4,
             decode_steps: 3,
             max_seq: 16,
+            sparse_k: 2,
         };
         let dir = std::env::temp_dir().join("elitekv_native_bench.json");
         let variants =
@@ -305,8 +335,9 @@ mod tests {
         let json =
             native_decode_bench(&cfg, &variants, &opts, &dir).unwrap();
         let rows = json.req("rows").as_arr().unwrap();
-        // every variant is measured as an f32/int8 pair
-        assert_eq!(rows.len(), 4);
+        // every variant is measured as a dense f32/int8 pair plus a
+        // sparse f32/int8 pair
+        assert_eq!(rows.len(), 8);
         for row in rows {
             assert!(row.req("tokens_per_s").as_f64().unwrap() > 0.0);
             assert!(row.req("cache_bytes_per_token").as_usize().unwrap() > 0);
@@ -316,7 +347,7 @@ mod tests {
         // compressed point caches fewer bytes than dense (f32 rows), and
         // each int8 row is exactly a quarter of its f32 sibling
         let dense = rows[0].req("cache_bytes_per_token").as_f64().unwrap();
-        let comp = rows[2].req("cache_bytes_per_token").as_f64().unwrap();
+        let comp = rows[4].req("cache_bytes_per_token").as_f64().unwrap();
         assert!(comp < dense);
         for pair in rows.chunks(2) {
             assert_eq!(pair[0].req("cache_dtype").as_str(), Some("f32"));
@@ -326,6 +357,13 @@ mod tests {
             let bq =
                 pair[1].req("cache_bytes_per_token").as_usize().unwrap();
             assert_eq!(bq * 4, bf);
+        }
+        // per variant: dense pair (sparse_k 0) then sparse pair (k > 0)
+        for cell in rows.chunks(4) {
+            assert_eq!(cell[0].req("sparse_k").as_usize(), Some(0));
+            assert_eq!(cell[1].req("sparse_k").as_usize(), Some(0));
+            assert_eq!(cell[2].req("sparse_k").as_usize(), Some(2));
+            assert_eq!(cell[3].req("sparse_k").as_usize(), Some(2));
         }
         let text = std::fs::read_to_string(&dir).unwrap();
         assert!(Json::parse(&text).is_ok());

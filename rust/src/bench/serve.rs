@@ -19,6 +19,7 @@ use crate::coordinator::InferenceServer;
 use crate::kvcache::{CacheDtype, CacheLayout};
 use crate::native::{NativeModel, NativeRunner};
 use crate::search::uniform_selection;
+use crate::util::stats::Summary;
 use crate::util::Json;
 
 /// Settings for one continuous-batching sweep.
@@ -36,6 +37,14 @@ pub struct ServeBenchOpts {
     /// (replayed per variant with the radix cache off and on; 0 skips
     /// the shared-prefix rows entirely).
     pub shared_prefix_tokens: usize,
+    /// Top-k row budget of the long-context trace's sparse replays
+    /// (DESIGN.md S20): each variant replays a long-prompt workload
+    /// dense and then at `--sparse-k` this k, per dtype, so the
+    /// selection's bandwidth win shows up as measured engine-step
+    /// latency. 0 skips the long-context rows entirely. Each run's
+    /// scheduler `sparse_k` is set from this knob (the caller's
+    /// `scheduler.sparse_k` is ignored — the sweep owns the axis).
+    pub sparse_k: usize,
     /// Trace seed.
     pub seed: u64,
 }
@@ -67,6 +76,10 @@ impl Default for ServeBenchOpts {
             // --prefix-cache. Worst case 32+16+16 = 64 tokens still
             // fits the serving window.
             shared_prefix_tokens: 32,
+            // Long-context replays keep 8 of up to 63 rows — deep
+            // enough selection pressure to measure, coarse enough that
+            // greedy generations stay plausible at random init.
+            sparse_k: 8,
             seed: 0x5eed,
         }
     }
@@ -83,9 +96,12 @@ pub fn default_variants(cfg: &ModelConfig) -> Vec<Variant> {
 
 /// Replay `trace` through a fresh engine for one variant; returns the
 /// measured record. `trace_tag` labels the workload ("mixed" /
-/// "shared_prefix"), `prefix_cache` toggles the radix cache, and
-/// `dtype` selects the cache element storage (the backend's slabs AND
-/// the scheduler's byte accounting) for this run.
+/// "shared_prefix" / "long_context"), `prefix_cache` toggles the radix
+/// cache, `dtype` selects the cache element storage (the backend's
+/// slabs AND the scheduler's byte accounting), and `sparse_k` runs the
+/// engine under sparse decode (model and scheduler together, DESIGN.md
+/// S20) for this run.
+#[allow(clippy::too_many_arguments)]
 fn bench_variant(
     cfg: &ModelConfig,
     variant: &Variant,
@@ -94,15 +110,18 @@ fn bench_variant(
     trace_tag: &str,
     prefix_cache: bool,
     dtype: CacheDtype,
+    sparse_k: Option<usize>,
 ) -> Result<Json> {
     let sel = variant.r().map(|r| uniform_selection(cfg, r));
     let mut model =
         NativeModel::init(cfg, variant.clone(), opts.seed, sel.as_ref())?;
     model.set_cache_dtype(dtype);
+    model.set_sparse_k(sparse_k);
     let runner = NativeRunner::new(model, opts.max_batch, opts.max_seq)?;
     let scheduler = SchedulerConfig {
         prefix_cache,
         cache_dtype: dtype,
+        sparse_k,
         ..opts.scheduler.clone()
     };
     let mut server =
@@ -112,6 +131,7 @@ fn bench_variant(
     let mut next_arrival = 0usize;
     let mut responses = Vec::with_capacity(trace.items.len());
     let mut engine_step = 0usize;
+    let mut step_ms = Vec::new();
     while next_arrival < trace.items.len() || server.busy() {
         while next_arrival < trace.items.len()
             && trace.items[next_arrival].arrive_step <= engine_step
@@ -123,10 +143,13 @@ fn bench_variant(
             server.submit(req)?;
             next_arrival += 1;
         }
+        let ts = Instant::now();
         responses.extend(server.step()?);
+        step_ms.push(ts.elapsed().as_secs_f64() * 1e3);
         engine_step += 1;
     }
     let wall = t0.elapsed().as_secs_f64();
+    let step_stats = Summary::of(&step_ms);
     let toks: usize = responses.iter().map(|r| r.tokens.len()).sum();
     let stats = &server.stats;
     let mut waits = stats.admission_wait_recent_s.clone();
@@ -142,6 +165,7 @@ fn bench_variant(
         ("trace", Json::str(trace_tag)),
         ("prefix_cache", Json::Bool(prefix_cache)),
         ("cache_dtype", Json::str(dtype.tag())),
+        ("sparse_k", Json::num(sparse_k.unwrap_or(0) as f64)),
         ("cache_ratio", Json::num(layout.ratio)),
         ("cache_bytes_per_token", Json::num(layout.bytes_per_token() as f64)),
         ("pool_blocks", Json::num(stats.blocks_total as f64)),
@@ -164,6 +188,14 @@ fn bench_variant(
         ),
         ("decode_steps", Json::num(stats.decode_steps as f64)),
         ("peak_cache_kib", Json::num(stats.peak_cache_bytes as f64 / 1024.0)),
+        ("step_ms_mean", Json::num(step_stats.mean)),
+        ("step_ms_p50", Json::num(step_stats.p50)),
+        ("step_ms_p99", Json::num(step_stats.p99)),
+        (
+            "sparse_attended_rows",
+            Json::num(stats.sparse_attended_rows as f64),
+        ),
+        ("sparse_dense_rows", Json::num(stats.sparse_dense_rows as f64)),
     ]))
 }
 
@@ -189,6 +221,25 @@ pub fn continuous_batching_bench(
             },
         )
     });
+    // The long-context workload: prompts near the serving window, so
+    // every decode step attends a deep cache — the regime where the
+    // sparse top-k selection (DESIGN.md S20) cuts real bandwidth.
+    // Replayed dense then sparse per dtype; the step-latency columns of
+    // a pair differ only by the selection.
+    let long_trace = (opts.sparse_k > 0).then(|| {
+        ArrivalTrace::generate(
+            cfg.vocab,
+            opts.seed ^ 0x10c7,
+            &TraceOpts {
+                prompt_min: 24,
+                prompt_max: 40,
+                max_new_min: 12,
+                max_new_max: 24,
+                shared_prefix_tokens: 0,
+                ..opts.trace.clone()
+            },
+        )
+    });
     let mut rows = Vec::new();
     for variant in variants {
         log::info!("continuous-batching bench: {}", variant.tag());
@@ -197,10 +248,23 @@ pub fn continuous_batching_bench(
         // trace under the same byte budget, so the JSON carries the
         // capacity effect of the dtype axis directly. The shared-prefix
         // pair is always measured with the radix cache off AND on, at
-        // the caller's dtype.
-        let mut runs: Vec<(&ArrivalTrace, &str, bool, CacheDtype)> = vec![
-            (&trace, "mixed", opts.scheduler.prefix_cache, CacheDtype::F32),
-            (&trace, "mixed", opts.scheduler.prefix_cache, CacheDtype::Int8),
+        // the caller's dtype. The long-context rows come last: a
+        // dense/sparse pair per dtype, radix cache off.
+        let mut runs: Vec<(&ArrivalTrace, &str, bool, CacheDtype, Option<usize>)> = vec![
+            (
+                &trace,
+                "mixed",
+                opts.scheduler.prefix_cache,
+                CacheDtype::F32,
+                None,
+            ),
+            (
+                &trace,
+                "mixed",
+                opts.scheduler.prefix_cache,
+                CacheDtype::Int8,
+                None,
+            ),
         ];
         if let Some(st) = &shared_trace {
             runs.push((
@@ -208,16 +272,38 @@ pub fn continuous_batching_bench(
                 "shared_prefix",
                 false,
                 opts.scheduler.cache_dtype,
+                None,
             ));
-            runs.push((st, "shared_prefix", true, opts.scheduler.cache_dtype));
+            runs.push((
+                st,
+                "shared_prefix",
+                true,
+                opts.scheduler.cache_dtype,
+                None,
+            ));
         }
-        for (t, tag, pc, dtype) in runs {
-            let row = bench_variant(cfg, variant, opts, t, tag, pc, dtype)
-                .with_context(|| format!("bench {} ({tag})", variant.tag()))?;
+        if let Some(lt) = &long_trace {
+            for dtype in [CacheDtype::F32, CacheDtype::Int8] {
+                runs.push((lt, "long_context", false, dtype, None));
+                runs.push((
+                    lt,
+                    "long_context",
+                    false,
+                    dtype,
+                    Some(opts.sparse_k),
+                ));
+            }
+        }
+        for (t, tag, pc, dtype, sk) in runs {
+            let row =
+                bench_variant(cfg, variant, opts, t, tag, pc, dtype, sk)
+                    .with_context(|| {
+                        format!("bench {} ({tag})", variant.tag())
+                    })?;
             println!(
                 "bench continuous_batching/{:<22} {:<13} {:<4} cache={:<3} \
                  {:>4} max-concurrency  {:>8.1} tok/s  prefill toks \
-                 {:>6}  hits {:>3}",
+                 {:>6}  hits {:>3}  step p50 {:>7.3} ms{}",
                 variant.tag(),
                 tag,
                 dtype.tag(),
@@ -226,6 +312,8 @@ pub fn continuous_batching_bench(
                 row.req("tokens_per_s").as_f64().unwrap_or(0.0),
                 row.req("prefill_tokens").as_usize().unwrap_or(0),
                 row.req("prefix_hits").as_usize().unwrap_or(0),
+                row.req("step_ms_p50").as_f64().unwrap_or(0.0),
+                sk.map(|k| format!("  sparse k={k}")).unwrap_or_default(),
             );
             rows.push(row);
         }
@@ -245,6 +333,7 @@ pub fn continuous_batching_bench(
             "shared_prefix_tokens",
             Json::num(opts.shared_prefix_tokens as f64),
         ),
+        ("sparse_k", Json::num(opts.sparse_k as f64)),
         ("n_requests", Json::num(trace.items.len() as f64)),
         ("trace_new_tokens", Json::num(trace.total_new_tokens() as f64)),
         ("rows", Json::Arr(rows)),
@@ -276,6 +365,7 @@ mod tests {
                 inter_arrival_steps: 0, // burst: expose the admission cap
                 ..default.trace.clone()
             },
+            sparse_k: 0, // mixed + shared-prefix rows only: keep it fast
             ..default
         };
         let out = std::env::temp_dir().join("elitekv_cb_bench_test.json");
@@ -329,6 +419,7 @@ mod tests {
                 ..default.trace.clone()
             },
             shared_prefix_tokens: 0, // mixed pairs only: keep it fast
+            sparse_k: 0,
             ..default
         };
         let out = std::env::temp_dir().join("elitekv_cb_int8_test.json");
@@ -388,6 +479,7 @@ mod tests {
         let default = ServeBenchOpts::default();
         let opts = ServeBenchOpts {
             trace: TraceOpts { n_requests: 10, ..default.trace.clone() },
+            sparse_k: 0, // shared-prefix rows are the subject here
             ..default
         };
         let out = std::env::temp_dir().join("elitekv_cb_prefix_test.json");
@@ -435,6 +527,57 @@ mod tests {
                 0,
                 "{tag}: cache-off run reported hits"
             );
+        }
+    }
+
+    /// The S20 rows: the long-context trace replays dense then sparse
+    /// per dtype. Sparse rows report a selection strictly smaller than
+    /// the dense-equivalent row count; dense rows report zero; both
+    /// replays of a pair complete the whole trace (sparsity changes
+    /// which rows are attended, never the request stream).
+    #[test]
+    fn long_context_sparse_pair_reports_selection() {
+        let cfg = ModelConfig::tiny();
+        let default = ServeBenchOpts::default();
+        let opts = ServeBenchOpts {
+            trace: TraceOpts { n_requests: 6, ..default.trace.clone() },
+            shared_prefix_tokens: 0, // long-context rows are the subject
+            sparse_k: 4,
+            ..default
+        };
+        let out = std::env::temp_dir().join("elitekv_cb_sparse_test.json");
+        let variants = vec![Variant::EliteKv {
+            r: cfg.n_chunks() / 4,
+            d_ckv: cfg.d_model / 4,
+        }];
+        let json =
+            continuous_batching_bench(&cfg, &variants, &opts, &out).unwrap();
+        std::fs::remove_file(&out).ok();
+        let rows: Vec<&Json> = json
+            .req("rows")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter(|r| r.req("trace").as_str() == Some("long_context"))
+            .collect();
+        // dense/sparse pair at f32 and at int8
+        assert_eq!(rows.len(), 4);
+        for row in &rows {
+            assert_eq!(row.req("completed").as_usize().unwrap(), 6);
+            let k = row.req("sparse_k").as_usize().unwrap();
+            let att = row.req("sparse_attended_rows").as_usize().unwrap();
+            let dns = row.req("sparse_dense_rows").as_usize().unwrap();
+            if k == 0 {
+                assert_eq!((att, dns), (0, 0), "dense row reported selection");
+            } else {
+                // prompts are at least 24 tokens, so every decode step
+                // selects k=4 of >= 25 rows
+                assert!(
+                    att > 0 && att < dns,
+                    "sparse row kept {att} of {dns} rows"
+                );
+            }
+            assert!(row.req("step_ms_p50").as_f64().unwrap() > 0.0);
         }
     }
 }

@@ -44,6 +44,13 @@ pub struct SchedulerConfig {
     /// compounding straight into concurrency. Must match the backend's
     /// slabs; the engine constructor enforces agreement.
     pub cache_dtype: CacheDtype,
+    /// Sparse decode row budget (`--sparse-k`, DESIGN.md S20): `Some(k)`
+    /// attends only the top-k cache rows per step, `None` is exact dense
+    /// attention. Purely a compute/bandwidth knob — admission math is
+    /// unchanged (every row is still cached so evicted rows can rejoin
+    /// the top-k later). Must match the backend's own `sparse_k`; the
+    /// engine constructor enforces agreement.
+    pub sparse_k: Option<usize>,
 }
 
 impl Default for SchedulerConfig {
@@ -54,6 +61,7 @@ impl Default for SchedulerConfig {
             conservative: true,
             prefix_cache: false,
             cache_dtype: CacheDtype::F32,
+            sparse_k: None,
         }
     }
 }

@@ -85,6 +85,16 @@ pub struct ServerStats {
     pub prefix_evicted_blocks: usize,
     /// Blocks currently held by the prefix cache (gauge).
     pub prefix_cached_blocks: usize,
+    /// Cache rows actually attended across all decode steps under
+    /// sparse decode (`--sparse-k`, DESIGN.md S20): each active lane
+    /// contributes `min(k, seq_len)` per step. Zero when dense.
+    pub sparse_attended_rows: usize,
+    /// Cache rows a dense engine would have attended over the same
+    /// steps (each active lane contributes its full `seq_len`). The
+    /// ratio `sparse_attended_rows / sparse_dense_rows` is the measured
+    /// fraction of attention bandwidth the top-k selection kept. Zero
+    /// when dense.
+    pub sparse_dense_rows: usize,
 }
 
 /// Capacity of [`ServerStats::admission_wait_recent_s`].
@@ -176,6 +186,17 @@ impl InferenceServer {
              pass the same --cache-dtype to both",
             cfg.cache_dtype.tag(),
             dtype.tag()
+        );
+        // Same agreement for the sparse row budget: the backend's
+        // attention is what actually runs sparse; the config is how the
+        // workload was described. Silent divergence would make the
+        // mirrored selection stats lie.
+        anyhow::ensure!(
+            cfg.sparse_k == backend.sparse_k(),
+            "scheduler sparse_k {:?} != backend sparse_k {:?}; \
+             pass the same --sparse-k to both",
+            cfg.sparse_k,
+            backend.sparse_k()
         );
         let layout = CacheLayout::with_dtype(
             backend.config(),
@@ -499,6 +520,19 @@ impl InferenceServer {
             self.caches = caches;
             self.logits = Some(logits);
             self.stats.decode_steps += 1;
+            // Mirror the sparse selection into the stats: per active
+            // lane this step attended min(k, len) of the len rows a
+            // dense engine would have read (len = pos + 1).
+            if let Some(k) = self.backend.sparse_k() {
+                for slot in 0..self.batch {
+                    if !active[slot] {
+                        continue;
+                    }
+                    let rows = pos[slot] as usize + 1;
+                    self.stats.sparse_attended_rows += k.min(rows);
+                    self.stats.sparse_dense_rows += rows;
+                }
+            }
             for slot in 0..self.batch {
                 if self.lanes[slot].is_none() {
                     continue;

@@ -90,7 +90,7 @@ COMMANDS
              [--ckpt PATH] [--selection PATH] [--requests N] [--max-new N]
              [--max-batch B] [--max-seq S] [--block-tokens N]
              [--cache-budget-mb N] [--cache-dtype f32|int8]
-             [--optimistic-admission]
+             [--sparse-k N] [--optimistic-admission]
              [--prefix-cache] [--temperature F] [--top-p F] [--seed N]
              [--r N (ropelite uniform fallback)] [--pallas]
              native backend (default): no artifacts needed; random-init
@@ -104,17 +104,23 @@ COMMANDS
              int8 (native only) stores the cache slabs group-quantized —
              1/4 the bytes/token, so the same budget admits ~4x the
              tokens — with dequantization fused into the decode GEMMs.
+             --sparse-k N (native only) attends only the top-N cache
+             rows per decode step, picked by a cheap latent-space
+             scoring pass (N >= sequence length reproduces dense decode
+             bitwise).
   bench      [--config C] [--steps N] [--batch B] [--prompt N]
              [--out PATH]   native decode sweep -> BENCH_native_decode.json
-             (every variant at cache dtype f32 AND int8)
+             (every variant at cache dtype f32 AND int8, each measured
+             dense and again at --sparse-k N; 0 skips the sparse rows)
              then a continuous-batching capacity sweep
              [--max-batch B] [--cb-requests N] [--cb-max-seq S]
              [--block-tokens N] [--cache-budget-mb N] [--cb-out PATH]
-             [--shared-prefix N]
+             [--shared-prefix N] [--sparse-k N]
              -> BENCH_continuous_batching.json (dense vs J-LRD max
              concurrency under one cache budget with an f32/int8 pair
              per variant, plus a shared-system-prompt trace replayed
-             with the prefix radix cache off/on)
+             with the prefix radix cache off/on, plus a long-context
+             trace replayed dense vs sparse at --sparse-k)
   eval       [--backend native|pjrt] --config C --variant TAG [--ckpt PATH]
              [--selection PATH] [--probes N] [--seed N] [--r N]
              [--cache-dtype f32|int8]  (int8, native only: score the
@@ -260,6 +266,7 @@ fn native_backend(args: &Args) -> Result<NativeRunner> {
     };
     let mut model = model;
     model.set_cache_dtype(cache_dtype(args)?);
+    model.set_sparse_k(sparse_k(args)?);
     // `--max-batch` is the scheduler-facing name; `--batch` stays as the
     // historical alias.
     let batch =
@@ -275,6 +282,17 @@ fn cache_dtype(args: &Args) -> Result<elitekv::kvcache::CacheDtype> {
     let tag = args.str_or("cache-dtype", "f32");
     elitekv::kvcache::CacheDtype::parse(&tag)
         .with_context(|| format!("bad --cache-dtype `{tag}` (f32|int8)"))
+}
+
+/// `--sparse-k N` (DESIGN.md S20): the sparse-decode row budget of the
+/// native backend AND the scheduler config — parsed once (and clamped to
+/// >= 1, matching [`NativeModel::set_sparse_k`]) so the engine's
+/// config-vs-backend agreement check can never trip on CLI input.
+fn sparse_k(args: &Args) -> Result<Option<usize>> {
+    Ok(match args.get("sparse-k") {
+        Some(_) => Some(args.usize_or("sparse-k", 1)?.max(1)),
+        None => None,
+    })
 }
 
 /// Scheduler policy from the shared serve/bench flags. The commands
@@ -293,6 +311,7 @@ fn scheduler_config(
         conservative: !args.has("optimistic-admission"),
         prefix_cache: args.has("prefix-cache"),
         cache_dtype: cache_dtype(args)?,
+        sparse_k: sparse_k(args)?,
     })
 }
 
@@ -371,11 +390,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
 fn cmd_bench(args: &Args) -> Result<()> {
     let cfg_name = args.str_or("config", "tiny");
     let cfg = ModelConfig::by_name(&cfg_name).context("unknown config")?;
+    let native_defaults = elitekv::bench::native::NativeBenchOpts::default();
     let opts = elitekv::bench::native::NativeBenchOpts {
         batch: args.usize_or("batch", 4)?,
         prompt_len: args.usize_or("prompt", 16)?,
         decode_steps: args.usize_or("steps", 48)?,
         max_seq: args.usize_or("max-seq", cfg.max_seq.min(128))?,
+        sparse_k: args.usize_or("sparse-k", native_defaults.sparse_k)?,
     };
     let out = args.str_or("out", "BENCH_native_decode.json");
     let variants = elitekv::bench::native::default_sweep(&cfg);
@@ -405,6 +426,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         },
         shared_prefix_tokens: args
             .usize_or("shared-prefix", defaults.shared_prefix_tokens)?,
+        sparse_k: args.usize_or("sparse-k", defaults.sparse_k)?,
         seed: args.u64_or("seed", defaults.seed)?,
     };
     let cb_out = args.str_or("cb-out", "BENCH_continuous_batching.json");

@@ -24,6 +24,10 @@
 //!   dequantized *inside* the panel loop. Each is bitwise identical to
 //!   dequantize-the-window-then-run-the-f32-kernel, so the determinism
 //!   contract below covers them unchanged.
+//! * [`top_k_indices`] — the sparse-decode selection kernel (DESIGN.md
+//!   S20): deterministic top-k over a score vector via `total_cmp`,
+//!   ties to the lower index, indices returned ascending so the sparse
+//!   row gather visits cache rows in position order.
 //!
 //! # Blocking scheme
 //!
@@ -467,6 +471,72 @@ pub fn sgemm_nt(
     }
 }
 
+/// Heap entry for [`top_k_indices`], ordered so the [`BinaryHeap`] max is
+/// the *worst-kept* candidate: lowest score first (via `total_cmp`, so
+/// the order is total and deterministic even for NaN/-0.0), and among
+/// equal scores the **highest** index — ties prefer keeping the lower
+/// index, matching a stable full sort by (score desc, index asc).
+///
+/// [`BinaryHeap`]: std::collections::BinaryHeap
+struct WorstFirst {
+    score: f32,
+    idx: usize,
+}
+
+impl PartialEq for WorstFirst {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+impl Eq for WorstFirst {}
+impl PartialOrd for WorstFirst {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for WorstFirst {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other
+            .score
+            .total_cmp(&self.score)
+            .then(self.idx.cmp(&other.idx))
+    }
+}
+
+/// Indices of the `k` largest entries of `scores`, written into `out`
+/// sorted **ascending** — the row-gather order of the sparse decode path
+/// (DESIGN.md S20), so gathered-row GEMMs visit cache rows in the same
+/// position order the dense kernels do.
+///
+/// Selection is a pure function of `(scores, k)`: comparisons use
+/// [`f32::total_cmp`] (a total order, so NaN cannot make the result
+/// depend on encounter order) and ties prefer the **lower** index —
+/// identical to a stable full sort by score descending. `k >= len`
+/// returns `0..len` (every row; this is what makes sparse ≡ dense at
+/// `k = seq_len` exact), `k == 0` returns nothing (callers clamp to
+/// ≥ 1). Runs in `O(len · log k)` via a bounded worst-out heap instead
+/// of the `O(len · log len)` full sort it is tested against.
+pub fn top_k_indices(scores: &[f32], k: usize, out: &mut Vec<usize>) {
+    out.clear();
+    let len = scores.len();
+    if k >= len {
+        out.extend(0..len);
+        return;
+    }
+    if k == 0 {
+        return;
+    }
+    let mut heap = std::collections::BinaryHeap::with_capacity(k + 1);
+    for (idx, &score) in scores.iter().enumerate() {
+        heap.push(WorstFirst { score, idx });
+        if heap.len() > k {
+            heap.pop();
+        }
+    }
+    out.extend(heap.into_iter().map(|e| e.idx));
+    out.sort_unstable();
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -709,5 +779,63 @@ mod tests {
         assert!(gemm_threads(8, 1024, 1024, 8) == 8);
         assert_eq!(gemm_threads(8, 1024, 1024, 1), 1);
         assert_eq!(gemm_threads(0, 0, 0, 0), 1);
+    }
+
+    /// The naive reference the heap implementation must match: stable
+    /// full sort by (score desc, index asc), take k, re-sort ascending.
+    fn naive_top_k(scores: &[f32], k: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..scores.len()).collect();
+        idx.sort_by(|&a, &b| {
+            scores[b].total_cmp(&scores[a]).then(a.cmp(&b))
+        });
+        idx.truncate(k.min(scores.len()));
+        idx.sort_unstable();
+        idx
+    }
+
+    #[test]
+    fn top_k_matches_naive_and_handles_ties() {
+        let mut out = Vec::new();
+        // duplicates everywhere: ties must resolve to the LOWER index
+        let s = [1.0f32, 3.0, 3.0, -2.0, 3.0, 0.0, 1.0];
+        for k in 0..=s.len() + 2 {
+            top_k_indices(&s, k, &mut out);
+            assert_eq!(out, naive_top_k(&s, k), "k = {k}");
+        }
+        // the three-way tie at 3.0: k=2 keeps indices 1 and 2, never 4
+        top_k_indices(&s, 2, &mut out);
+        assert_eq!(out, vec![1, 2]);
+    }
+
+    #[test]
+    fn top_k_at_full_length_is_the_identity() {
+        // the sparse ≡ dense exactness hinge: k >= len returns 0..len
+        // unconditionally (ties, NaN, anything)
+        let mut out = Vec::new();
+        let s = [f32::NAN, 2.0, 2.0, -1.0];
+        top_k_indices(&s, s.len(), &mut out);
+        assert_eq!(out, vec![0, 1, 2, 3]);
+        top_k_indices(&s, 100, &mut out);
+        assert_eq!(out, vec![0, 1, 2, 3]);
+        top_k_indices(&[], 3, &mut out);
+        assert!(out.is_empty());
+        top_k_indices(&s, 0, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn top_k_output_is_sorted_ascending() {
+        let mut rng = Pcg64::seeded(55);
+        let mut out = Vec::new();
+        for _ in 0..50 {
+            let n = rng.range(1, 40);
+            let s: Vec<f32> =
+                (0..n).map(|_| (rng.f32() * 8.0).floor()).collect();
+            let k = rng.range(1, n + 1);
+            top_k_indices(&s, k, &mut out);
+            assert_eq!(out.len(), k.min(n));
+            assert!(out.windows(2).all(|w| w[0] < w[1]));
+            assert_eq!(out, naive_top_k(&s, k));
+        }
     }
 }

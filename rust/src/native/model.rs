@@ -23,6 +23,7 @@ use crate::native::forward::{
 };
 use crate::native::kernels::{
     sgemm, sgemm_acc, sgemm_nt, sgemm_nt_q8, sgemm_q8, sgemm_raw,
+    top_k_indices,
 };
 use crate::native::specs::param_specs;
 use crate::runtime::HostTensor;
@@ -41,6 +42,16 @@ pub struct NativeModel {
     /// group-quantized rows with quantize-on-append. Set via
     /// [`NativeModel::set_cache_dtype`] before building caches.
     pub cache_dtype: CacheDtype,
+    /// Sparse decode width (DESIGN.md S20): `Some(k)` makes every
+    /// attention step pick the top-`k` cache rows with a cheap scoring
+    /// pass ([`top_k_indices`] over latent-proxy scores for the latent
+    /// variants, exact per-head scores for the dense ones) and run the
+    /// full attention math over the selected rows only. `None`
+    /// (default) is exact dense attention over the whole window. Set
+    /// via [`NativeModel::set_sparse_k`] (clamps to ≥ 1); at every step
+    /// the width is further clamped to the live window length, so
+    /// `k >= seq_len` reproduces dense attention **bitwise**.
+    pub sparse_k: Option<usize>,
     weights: Checkpoint,
     /// Cached inverse-frequency ladder theta_i = base^(-i/nc), i in [0,nc).
     ladder: Vec<f64>,
@@ -244,6 +255,14 @@ fn window<'a>(
 /// dense inner loops cannot silently diverge. `scores` needs at least
 /// `len` slots; `kc`/`vc` are the full cache slabs with rows of width
 /// `kw` starting at `lane_base`.
+///
+/// With `sparse_k = Some(k)` (DESIGN.md S20) each query head keeps only
+/// its top-`min(k, len)` scoring positions: the key scoring pass still
+/// covers the whole window (the dense variants have no cheaper latent
+/// proxy), but softmax and the value accumulation — the V-slab read —
+/// run over the selected rows only, in ascending position order. At
+/// `k >= len` the selection is `0..len`, the compaction is an exact
+/// copy, and the result is bitwise equal to the dense branch.
 #[allow(clippy::too_many_arguments)]
 fn dense_attend_lane(
     q: &[f32],
@@ -256,6 +275,9 @@ fn dense_attend_lane(
     dh: usize,
     rep: usize,
     scale: f32,
+    sparse_k: Option<usize>,
+    sel: &mut Vec<usize>,
+    sel_scores: &mut Vec<f32>,
     scores: &mut [f32],
     o: &mut [f32],
 ) {
@@ -266,13 +288,29 @@ fn dense_attend_lane(
             let off = (lane_base + j) * kw + hk * dh;
             *sj = dot(qh, &kc[off..off + dh]) * scale;
         }
-        softmax_inplace(&mut scores[..len]);
         let oh = &mut o[h * dh..(h + 1) * dh];
         oh.fill(0.0);
-        for (j, &pj) in scores[..len].iter().enumerate() {
-            let off = (lane_base + j) * kw + hk * dh;
-            for (od, &vd) in oh.iter_mut().zip(&vc[off..off + dh]) {
-                *od += pj * vd;
+        if let Some(k0) = sparse_k {
+            let kk = k0.min(len);
+            top_k_indices(&scores[..len], kk, sel);
+            sel_scores.resize(kk, 0.0);
+            for (dst, &j) in sel_scores.iter_mut().zip(sel.iter()) {
+                *dst = scores[j];
+            }
+            softmax_inplace(&mut sel_scores[..kk]);
+            for (&j, &pj) in sel.iter().zip(sel_scores.iter()) {
+                let off = (lane_base + j) * kw + hk * dh;
+                for (od, &vd) in oh.iter_mut().zip(&vc[off..off + dh]) {
+                    *od += pj * vd;
+                }
+            }
+        } else {
+            softmax_inplace(&mut scores[..len]);
+            for (j, &pj) in scores[..len].iter().enumerate() {
+                let off = (lane_base + j) * kw + hk * dh;
+                for (od, &vd) in oh.iter_mut().zip(&vc[off..off + dh]) {
+                    *od += pj * vd;
+                }
             }
         }
     }
@@ -319,6 +357,13 @@ pub struct Scratch {
     win_k: Vec<f32>,
     win_a: Vec<f32>,
     win_b: Vec<f32>,
+    /// Sparse-decode buffers (DESIGN.md S20; untouched when the model's
+    /// `sparse_k` is `None`): the head-summed selection query `[d_ck]`,
+    /// the selection scores over a full window (grown to `[len]`), and
+    /// the selected row indices (ascending, `[k]`).
+    q_sum: Vec<f32>,
+    sel_scores: Vec<f32>,
+    sel: Vec<usize>,
 }
 
 /// Activation matrices for a batched decode step (the GEMM twin of
@@ -363,6 +408,26 @@ pub struct BatchScratch {
     /// V window, grown on demand.
     win_k: Vec<f32>,
     win_a: Vec<f32>,
+    /// Head-summed selection query `[d_ck]` for sparse decode (S20).
+    q_sum: Vec<f32>,
+    /// One lane's latent selection scores over its full window, grown
+    /// on demand to `[len]`.
+    sel_scores: Vec<f32>,
+    /// Selected cache-row indices (ascending), `[min(k, len)]`.
+    sel: Vec<usize>,
+    /// Gathered key-latent rows `[k, d_ck]` (f32 caches).
+    gk: Vec<f32>,
+    /// Gathered value-latent rows `[k, d_cv]` (f32 S-LRD caches; J-LRD
+    /// reuses `gk`, the shared slab gathers once).
+    gv: Vec<f32>,
+    /// Gathered quantized key-latent rows `[k, d_ck]` (int8 caches).
+    gk_q: Vec<i8>,
+    /// Their per-group scales `[k, ceil(d_ck/group)]`.
+    gk_s: Vec<f32>,
+    /// Gathered quantized value-latent rows (int8 S-LRD caches).
+    gv_q: Vec<i8>,
+    /// Their per-group scales.
+    gv_s: Vec<f32>,
 }
 
 impl NativeModel {
@@ -412,6 +477,7 @@ impl NativeModel {
             cfg,
             variant,
             cache_dtype: CacheDtype::F32,
+            sparse_k: None,
             weights,
             ladder,
             theta_e,
@@ -429,6 +495,16 @@ impl NativeModel {
     /// within one engine is never done by the runtimes.
     pub fn set_cache_dtype(&mut self, dtype: CacheDtype) {
         self.cache_dtype = dtype;
+    }
+
+    /// Enable (`Some(k)`) or disable (`None`) top-k sparse decode
+    /// (DESIGN.md S20). `k` is clamped to ≥ 1 here — a zero selection
+    /// width would leave softmax undefined — and clamped to the live
+    /// attention window length at every step, so a `k` larger than the
+    /// longest served sequence simply reproduces dense attention
+    /// (bitwise: selecting a full window is the identity gather).
+    pub fn set_sparse_k(&mut self, k: Option<usize>) {
+        self.sparse_k = k.map(|k| k.max(1));
     }
 
     /// Load a converted checkpoint produced by `convert`/`pretrain`.
@@ -530,6 +606,9 @@ impl NativeModel {
             win_k: Vec::new(),
             win_a: Vec::new(),
             win_b: Vec::new(),
+            q_sum: vec![0.0; lat_w],
+            sel_scores: Vec::new(),
+            sel: Vec::new(),
         }
     }
 
@@ -560,6 +639,15 @@ impl NativeModel {
             xl: vec![0.0; max_rows * d],
             win_k: Vec::new(),
             win_a: Vec::new(),
+            q_sum: vec![0.0; dc_k],
+            sel_scores: Vec::new(),
+            sel: Vec::new(),
+            gk: Vec::new(),
+            gv: Vec::new(),
+            gk_q: Vec::new(),
+            gk_s: Vec::new(),
+            gv_q: Vec::new(),
+            gv_s: Vec::new(),
         }
     }
 
@@ -904,6 +992,9 @@ impl NativeModel {
                     dh,
                     rep,
                     scale,
+                    self.sparse_k,
+                    &mut sc.sel,
+                    &mut sc.sel_scores,
                     &mut sc.scores,
                     &mut sc.o,
                 );
@@ -937,22 +1028,58 @@ impl NativeModel {
                 let (cc_all, lane_c) =
                     window(&caches[1], lane_row, len, d_ckv, &mut sc.win_a)?;
                 let bv = self.w(&n.b_v);
+                // S20: with sparse decode on, pick the rows once per
+                // lane per layer — one cheap head-summed pass over the
+                // shared c_kv window — then restrict every head's
+                // score/softmax/attend loops to the selection.
+                let kk = match self.sparse_k {
+                    Some(k0) => {
+                        let kk = k0.min(len);
+                        sc.q_sum[..d_ckv].fill(0.0);
+                        for h in 0..nh {
+                            for (qs, &ql) in sc.q_sum[..d_ckv]
+                                .iter_mut()
+                                .zip(&q_lat[h * d_ckv..(h + 1) * d_ckv])
+                            {
+                                *qs += ql;
+                            }
+                        }
+                        sc.sel_scores.resize(len, 0.0);
+                        for (j, ss) in
+                            sc.sel_scores[..len].iter_mut().enumerate()
+                        {
+                            let c_off = (lane_c + j) * d_ckv;
+                            *ss = dot(
+                                &sc.q_sum[..d_ckv],
+                                &cc_all[c_off..c_off + d_ckv],
+                            );
+                        }
+                        top_k_indices(&sc.sel_scores[..len], kk, &mut sc.sel);
+                        kk
+                    }
+                    None => {
+                        sc.sel.clear();
+                        sc.sel.extend(0..len);
+                        len
+                    }
+                };
                 for h in 0..nh {
                     let q_rot = &sc.q[h * dh..h * dh + r2];
                     let ql = &q_lat[h * d_ckv..(h + 1) * d_ckv];
-                    for (j, sj) in sc.scores[..len].iter_mut().enumerate() {
+                    for (jj, sj) in sc.scores[..kk].iter_mut().enumerate() {
+                        let j = sc.sel[jj];
                         let ke_off = (lane_ke + j) * kew + h * r2;
                         let c_off = (lane_c + j) * d_ckv;
                         *sj = (dot(q_rot, &kec[ke_off..ke_off + r2])
                             + dot(ql, &cc_all[c_off..c_off + d_ckv]))
                             * scale;
                     }
-                    softmax_inplace(&mut sc.scores[..len]);
+                    softmax_inplace(&mut sc.scores[..kk]);
                     // o_lat = p . c_kv  (attend the latent directly)
                     let o_lat = &mut sc.o_lat[..d_ckv];
                     o_lat.fill(0.0);
-                    for (j, &pj) in sc.scores[..len].iter().enumerate() {
-                        let c_off = (lane_c + j) * d_ckv;
+                    for (jj, &pj) in sc.scores[..kk].iter().enumerate() {
+                        let c_off = (lane_c + sc.sel[jj]) * d_ckv;
                         for (ol, &cv) in
                             o_lat.iter_mut().zip(&cc_all[c_off..c_off + d_ckv])
                         {
@@ -1006,21 +1133,55 @@ impl NativeModel {
                 let (cv_all, cv_b) =
                     window(&caches[2], lane_row, len, d_cv, &mut sc.win_b)?;
                 let bv = self.w(&n.b_v);
+                // S20: shared per-lane selection over the key-latent
+                // rows (the value latent rides the same indices).
+                let kk = match self.sparse_k {
+                    Some(k0) => {
+                        let kk = k0.min(len);
+                        sc.q_sum[..d_ck].fill(0.0);
+                        for h in 0..nh {
+                            for (qs, &ql) in sc.q_sum[..d_ck]
+                                .iter_mut()
+                                .zip(&q_lat[h * d_ck..(h + 1) * d_ck])
+                            {
+                                *qs += ql;
+                            }
+                        }
+                        sc.sel_scores.resize(len, 0.0);
+                        for (j, ss) in
+                            sc.sel_scores[..len].iter_mut().enumerate()
+                        {
+                            let ck_off = (ck_b + j) * d_ck;
+                            *ss = dot(
+                                &sc.q_sum[..d_ck],
+                                &ck_all[ck_off..ck_off + d_ck],
+                            );
+                        }
+                        top_k_indices(&sc.sel_scores[..len], kk, &mut sc.sel);
+                        kk
+                    }
+                    None => {
+                        sc.sel.clear();
+                        sc.sel.extend(0..len);
+                        len
+                    }
+                };
                 for h in 0..nh {
                     let q_rot = &sc.q[h * dh..h * dh + r2];
                     let ql = &q_lat[h * d_ck..(h + 1) * d_ck];
-                    for (j, sj) in sc.scores[..len].iter_mut().enumerate() {
+                    for (jj, sj) in sc.scores[..kk].iter_mut().enumerate() {
+                        let j = sc.sel[jj];
                         let ke_off = (ke_b + j) * kew + h * r2;
                         let ck_off = (ck_b + j) * d_ck;
                         *sj = (dot(q_rot, &kec[ke_off..ke_off + r2])
                             + dot(ql, &ck_all[ck_off..ck_off + d_ck]))
                             * scale;
                     }
-                    softmax_inplace(&mut sc.scores[..len]);
+                    softmax_inplace(&mut sc.scores[..kk]);
                     let o_lat = &mut sc.o_lat[..d_cv];
                     o_lat.fill(0.0);
-                    for (j, &pj) in sc.scores[..len].iter().enumerate() {
-                        let cv_off = (cv_b + j) * d_cv;
+                    for (jj, &pj) in sc.scores[..kk].iter().enumerate() {
+                        let cv_off = (cv_b + sc.sel[jj]) * d_cv;
                         for (ol, &cv) in
                             o_lat.iter_mut().zip(&cv_all[cv_off..cv_off + d_cv])
                         {
@@ -1139,6 +1300,9 @@ impl NativeModel {
                         dh,
                         rep,
                         scale,
+                        self.sparse_k,
+                        &mut sc.sel,
+                        &mut sc.sel_scores,
                         &mut sc.scores,
                         &mut sc.o[ri * nh * dh..(ri + 1) * nh * dh],
                     );
@@ -1289,6 +1453,14 @@ impl NativeModel {
     /// inside their panel loops with the same element expression the
     /// scalar window path uses, so batched ≡ scalar holds per dtype
     /// exactly as it does at f32.
+    ///
+    /// With `sparse_k = Some(k)` (DESIGN.md S20) a head-summed `[1,
+    /// d_ck]` scoring pass over the key-latent window picks the top-k
+    /// rows first ([`top_k_indices`], ascending), the selected rows are
+    /// gathered into contiguous scratch panels, and every GEMM above
+    /// runs over `kk = min(k, len)` rows instead of `len`. At `k >=
+    /// len` the selection is the identity and the gathered panels are
+    /// verbatim copies of the window, so sparse ≡ dense bitwise.
     #[allow(clippy::too_many_arguments)]
     fn latent_attend_rows(
         &self,
@@ -1331,71 +1503,209 @@ impl NativeModel {
                     false,
                 );
             }
-            // scores S [nh, len] = q_lat @ C_k^T over the key-latent
-            // slab window, one GEMM for all heads (fused dequant at int8)
+            // S20 sparse selection: one cheap [1, d_ck] x C_k^T scoring
+            // pass shared by all heads picks the rows the full GEMMs run
+            // over. The head-summed query makes selection nh x cheaper
+            // than exact scoring; fused-dequant keeps the q8 selection
+            // scores bitwise equal to the scalar dequant-window path.
+            let sparse = self.sparse_k.is_some();
+            let kk = match self.sparse_k {
+                Some(k0) => {
+                    let kk = k0.min(len);
+                    sc.q_sum[..d_ck].fill(0.0);
+                    for h in 0..nh {
+                        for (qs, &ql) in sc.q_sum[..d_ck]
+                            .iter_mut()
+                            .zip(&sc.q_lat[h * d_ck..(h + 1) * d_ck])
+                        {
+                            *qs += ql;
+                        }
+                    }
+                    sc.sel_scores.resize(len, 0.0);
+                    match ck_slab {
+                        HostTensor::F32(ck_all, _) => sgemm_nt(
+                            &sc.q_sum[..d_ck],
+                            1,
+                            d_ck,
+                            &ck_all
+                                [lane_base * d_ck..(lane_base + len) * d_ck],
+                            len,
+                            &mut sc.sel_scores[..len],
+                            max_threads,
+                        ),
+                        HostTensor::Q8 { data, scales, row, group, .. } => {
+                            ensure!(
+                                *row == d_ck,
+                                "key-latent q8 slab row mismatch"
+                            );
+                            let g = n_groups(d_ck, *group);
+                            sgemm_nt_q8(
+                                &sc.q_sum[..d_ck],
+                                1,
+                                d_ck,
+                                &data[lane_base * d_ck
+                                    ..(lane_base + len) * d_ck],
+                                &scales[lane_base * g..(lane_base + len) * g],
+                                *group,
+                                len,
+                                &mut sc.sel_scores[..len],
+                                max_threads,
+                            );
+                        }
+                        HostTensor::I32(..) => {
+                            bail!("cache slabs are never i32")
+                        }
+                    }
+                    top_k_indices(&sc.sel_scores[..len], kk, &mut sc.sel);
+                    kk
+                }
+                None => {
+                    sc.sel.clear();
+                    sc.sel.extend(0..len);
+                    len
+                }
+            };
+            // scores S [nh, kk] = q_lat @ C_k^T over the key-latent slab
+            // window (dense) or the gathered selected rows (sparse), one
+            // GEMM for all heads (fused dequant at int8)
             match ck_slab {
-                HostTensor::F32(ck_all, _) => sgemm_nt(
-                    &sc.q_lat[..nh * d_ck],
-                    nh,
-                    d_ck,
-                    &ck_all[lane_base * d_ck..(lane_base + len) * d_ck],
-                    len,
-                    &mut sc.scores[..nh * len],
-                    max_threads,
-                ),
+                HostTensor::F32(ck_all, _) => {
+                    let ck_rows: &[f32] = if sparse {
+                        sc.gk.resize(kk * d_ck, 0.0);
+                        for (dst, &j) in
+                            sc.gk.chunks_mut(d_ck).zip(sc.sel.iter())
+                        {
+                            let off = (lane_base + j) * d_ck;
+                            dst.copy_from_slice(&ck_all[off..off + d_ck]);
+                        }
+                        &sc.gk[..kk * d_ck]
+                    } else {
+                        &ck_all[lane_base * d_ck..(lane_base + len) * d_ck]
+                    };
+                    sgemm_nt(
+                        &sc.q_lat[..nh * d_ck],
+                        nh,
+                        d_ck,
+                        ck_rows,
+                        kk,
+                        &mut sc.scores[..nh * kk],
+                        max_threads,
+                    );
+                }
                 HostTensor::Q8 { data, scales, row, group, .. } => {
                     ensure!(*row == d_ck, "key-latent q8 slab row mismatch");
                     let g = n_groups(d_ck, *group);
+                    let (ck_q, ck_s): (&[i8], &[f32]) = if sparse {
+                        sc.gk_q.resize(kk * d_ck, 0);
+                        sc.gk_s.resize(kk * g, 0.0);
+                        for (jj, &j) in sc.sel.iter().enumerate() {
+                            let off = (lane_base + j) * d_ck;
+                            sc.gk_q[jj * d_ck..(jj + 1) * d_ck]
+                                .copy_from_slice(&data[off..off + d_ck]);
+                            let soff = (lane_base + j) * g;
+                            sc.gk_s[jj * g..(jj + 1) * g]
+                                .copy_from_slice(&scales[soff..soff + g]);
+                        }
+                        (&sc.gk_q[..kk * d_ck], &sc.gk_s[..kk * g])
+                    } else {
+                        (
+                            &data[lane_base * d_ck..(lane_base + len) * d_ck],
+                            &scales[lane_base * g..(lane_base + len) * g],
+                        )
+                    };
                     sgemm_nt_q8(
                         &sc.q_lat[..nh * d_ck],
                         nh,
                         d_ck,
-                        &data[lane_base * d_ck..(lane_base + len) * d_ck],
-                        &scales[lane_base * g..(lane_base + len) * g],
+                        ck_q,
+                        ck_s,
                         *group,
-                        len,
-                        &mut sc.scores[..nh * len],
+                        kk,
+                        &mut sc.scores[..nh * kk],
                         max_threads,
                     );
                 }
                 HostTensor::I32(..) => bail!("cache slabs are never i32"),
             }
-            // rotated-elite correction + scale + softmax per head
+            // rotated-elite correction + scale + softmax per head; the
+            // j-th kept score corrects against cache row sel[j]
             let (kec, ke_b) =
                 window(ke_slab, lane_base, len, kew, &mut sc.win_k)?;
             for h in 0..nh {
                 let q_rot = &sc.q
                     [ri * nh * dh + h * dh..ri * nh * dh + h * dh + r2];
-                let srow = &mut sc.scores[h * len..(h + 1) * len];
-                for (j, sj) in srow.iter_mut().enumerate() {
-                    let ke_off = (ke_b + j) * kew + h * r2;
+                let srow = &mut sc.scores[h * kk..(h + 1) * kk];
+                for (jj, sj) in srow.iter_mut().enumerate() {
+                    let ke_off = (ke_b + sc.sel[jj]) * kew + h * r2;
                     *sj =
                         (dot(q_rot, &kec[ke_off..ke_off + r2]) + *sj) * scale;
                 }
                 softmax_inplace(srow);
             }
             // o_lat [nh, d_cv] = P @ C_v — attend the value latent
-            // directly, one GEMM for all heads (fused dequant at int8)
+            // directly, one GEMM for all heads (fused dequant at int8).
+            // For J-LRD the value latent IS the already-gathered key
+            // latent (shared c_kv slab), so the gather is reused.
             match cv_slab {
-                HostTensor::F32(cv_all, _) => sgemm_raw(
-                    &sc.scores[..nh * len],
-                    nh,
-                    len,
-                    &cv_all[lane_base * d_cv..(lane_base + len) * d_cv],
-                    d_cv,
-                    &mut sc.o_lat[..nh * d_cv],
-                    max_threads,
-                    false,
-                ),
+                HostTensor::F32(cv_all, _) => {
+                    let cv_rows: &[f32] = if sparse {
+                        if std::ptr::eq(ck_slab, cv_slab) {
+                            &sc.gk[..kk * d_cv]
+                        } else {
+                            sc.gv.resize(kk * d_cv, 0.0);
+                            for (dst, &j) in
+                                sc.gv.chunks_mut(d_cv).zip(sc.sel.iter())
+                            {
+                                let off = (lane_base + j) * d_cv;
+                                dst.copy_from_slice(&cv_all[off..off + d_cv]);
+                            }
+                            &sc.gv[..kk * d_cv]
+                        }
+                    } else {
+                        &cv_all[lane_base * d_cv..(lane_base + len) * d_cv]
+                    };
+                    sgemm_raw(
+                        &sc.scores[..nh * kk],
+                        nh,
+                        kk,
+                        cv_rows,
+                        d_cv,
+                        &mut sc.o_lat[..nh * d_cv],
+                        max_threads,
+                        false,
+                    );
+                }
                 HostTensor::Q8 { data, scales, row, group, .. } => {
                     ensure!(*row == d_cv, "value-latent q8 slab row mismatch");
                     let g = n_groups(d_cv, *group);
+                    let (cv_q, cv_s): (&[i8], &[f32]) = if sparse {
+                        if std::ptr::eq(ck_slab, cv_slab) {
+                            (&sc.gk_q[..kk * d_cv], &sc.gk_s[..kk * g])
+                        } else {
+                            sc.gv_q.resize(kk * d_cv, 0);
+                            sc.gv_s.resize(kk * g, 0.0);
+                            for (jj, &j) in sc.sel.iter().enumerate() {
+                                let off = (lane_base + j) * d_cv;
+                                sc.gv_q[jj * d_cv..(jj + 1) * d_cv]
+                                    .copy_from_slice(&data[off..off + d_cv]);
+                                let soff = (lane_base + j) * g;
+                                sc.gv_s[jj * g..(jj + 1) * g]
+                                    .copy_from_slice(&scales[soff..soff + g]);
+                            }
+                            (&sc.gv_q[..kk * d_cv], &sc.gv_s[..kk * g])
+                        }
+                    } else {
+                        (
+                            &data[lane_base * d_cv..(lane_base + len) * d_cv],
+                            &scales[lane_base * g..(lane_base + len) * g],
+                        )
+                    };
                     sgemm_q8(
-                        &sc.scores[..nh * len],
+                        &sc.scores[..nh * kk],
                         nh,
-                        len,
-                        &data[lane_base * d_cv..(lane_base + len) * d_cv],
-                        &scales[lane_base * g..(lane_base + len) * g],
+                        kk,
+                        cv_q,
+                        cv_s,
                         *group,
                         d_cv,
                         &mut sc.o_lat[..nh * d_cv],

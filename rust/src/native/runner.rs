@@ -88,6 +88,10 @@ impl Backend for NativeRunner {
         self.model.cache_dtype
     }
 
+    fn sparse_k(&self) -> Option<usize> {
+        self.model.sparse_k
+    }
+
     fn serve_shape(&self) -> Result<(usize, usize)> {
         Ok((self.batch, self.max_seq))
     }

@@ -44,6 +44,15 @@ pub trait Backend {
         CacheDtype::F32
     }
 
+    /// Sparse-decode row budget (DESIGN.md S20): `Some(k)` when this
+    /// engine attends only the top-k cache rows per step, `None` for
+    /// exact dense attention. The server mirrors this into its
+    /// selection stats and the scheduler config cross-checks it. Only
+    /// the native runner implements sparse decode; the default is dense.
+    fn sparse_k(&self) -> Option<usize> {
+        None
+    }
+
     /// (decode lanes, serving window) of this engine instance.
     fn serve_shape(&self) -> Result<(usize, usize)>;
 

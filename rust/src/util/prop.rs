@@ -8,6 +8,13 @@
 //! the `ELITEKV_PROP_SEED` environment variable (decimal or `0x` hex):
 //! CI pins it so failures reproduce verbatim from the logged value, and
 //! developers can sweep it to explore fresh cases without code changes.
+//!
+//! The per-property case count can likewise be overridden with the
+//! `ELITEKV_PROP_CASES` environment variable (a positive integer): CI's
+//! second property shard raises it to widen coverage, and developers can
+//! crank it locally for a soak run. Failure messages echo the seed, the
+//! effective case count, and both environment values so any failure
+//! replays exactly.
 
 use crate::util::rng::Pcg64;
 
@@ -16,6 +23,9 @@ pub const DEFAULT_CASES: usize = 64;
 
 /// Environment variable mixed into every property's case stream.
 pub const PROP_SEED_ENV: &str = "ELITEKV_PROP_SEED";
+
+/// Environment variable overriding every property's case count.
+pub const PROP_CASES_ENV: &str = "ELITEKV_PROP_CASES";
 
 /// The `ELITEKV_PROP_SEED` override (0 when unset or unparsable).
 fn env_seed() -> u64 {
@@ -32,9 +42,27 @@ fn env_seed() -> u64 {
     })
 }
 
-/// Run `prop` against `cases` generated inputs. On failure, panics with
-/// the generating seed, case index, and `ELITEKV_PROP_SEED` value so the
-/// exact case replays.
+/// The `ELITEKV_PROP_CASES` override (`None` when unset, non-positive,
+/// or unparsable — the caller's count then stands).
+fn env_cases() -> Option<usize> {
+    let raw = std::env::var(PROP_CASES_ENV).ok()?;
+    let raw = raw.trim();
+    match raw.parse::<usize>() {
+        Ok(n) if n > 0 => Some(n),
+        _ => {
+            eprintln!(
+                "warning: ignoring {PROP_CASES_ENV}=`{raw}` \
+                 (want a positive integer)"
+            );
+            None
+        }
+    }
+}
+
+/// Run `prop` against `cases` generated inputs (`ELITEKV_PROP_CASES`
+/// overrides the count when set). On failure, panics with the generating
+/// seed, case index, effective case count, and both environment values
+/// so the exact case replays.
 pub fn check<T, G, P>(name: &str, cases: usize, mut gen: G, mut prop: P)
 where
     T: std::fmt::Debug,
@@ -42,15 +70,18 @@ where
     P: FnMut(&T) -> Result<(), String>,
 {
     let env = env_seed();
+    let cases = env_cases().unwrap_or(cases);
     let base_seed = fnv1a(name) ^ env;
     for case in 0..cases {
         let mut rng = Pcg64::new(base_seed, case as u64);
         let input = gen(&mut rng);
         if let Err(msg) = prop(&input) {
             panic!(
-                "property `{name}` failed at case {case} \
-                 (seed {base_seed:#x}, {PROP_SEED_ENV}={env}): \
-                 {msg}\ninput: {input:#?}"
+                "property `{name}` failed at case {case} of {cases} \
+                 (seed {base_seed:#x}, {PROP_SEED_ENV}={env}, \
+                 {PROP_CASES_ENV}={}): {msg}\ninput: {input:#?}",
+                std::env::var(PROP_CASES_ENV)
+                    .unwrap_or_else(|_| "unset".into()),
             );
         }
     }
@@ -87,5 +118,47 @@ mod tests {
     #[should_panic(expected = "property `always-fails` failed")]
     fn check_reports_failure() {
         check("always-fails", 4, |rng| rng.below(10), |_| Err("nope".into()));
+    }
+
+    /// Run `f` with `PROP_CASES_ENV` set to `val` (or removed), restoring
+    /// the previous value afterwards so parallel test threads see the
+    /// ambient CI configuration again.
+    fn with_cases_env<F: FnOnce()>(val: Option<&str>, f: F) {
+        let saved = std::env::var(PROP_CASES_ENV).ok();
+        match val {
+            Some(v) => std::env::set_var(PROP_CASES_ENV, v),
+            None => std::env::remove_var(PROP_CASES_ENV),
+        }
+        f();
+        match saved {
+            Some(v) => std::env::set_var(PROP_CASES_ENV, v),
+            None => std::env::remove_var(PROP_CASES_ENV),
+        }
+    }
+
+    /// Count how many cases a passing `check` call actually runs.
+    fn runs_with(cases: usize) -> usize {
+        let mut ran = 0usize;
+        check(
+            "cases-env-probe",
+            cases,
+            |rng| rng.below(10),
+            |_| {
+                ran += 1;
+                Ok(())
+            },
+        );
+        ran
+    }
+
+    #[test]
+    fn cases_env_overrides_caller_count() {
+        with_cases_env(Some("7"), || assert_eq!(runs_with(64), 7));
+        // Unset: the caller's count stands (even when CI exported an
+        // override for the rest of the run).
+        with_cases_env(None, || assert_eq!(runs_with(5), 5));
+        // Garbage and zero are warned about and ignored.
+        with_cases_env(Some("lots"), || assert_eq!(runs_with(3), 3));
+        with_cases_env(Some("0"), || assert_eq!(runs_with(3), 3));
     }
 }

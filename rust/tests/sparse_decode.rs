@@ -1,0 +1,412 @@
+//! Sparse latent-space decode differential suite (ISSUE 6 / DESIGN.md
+//! S20): `--sparse-k` attends only the top-k cache rows per step, picked
+//! by a cheap latent-space scoring pass over the `c_kv` slab.
+//!
+//! Four pins:
+//! * **exactness** — at `k >= seq_len` the selection is the identity and
+//!   the gathered panels are verbatim copies of the dense window, so
+//!   sparse decode is **bitwise** identical to dense decode: same
+//!   per-step logits, same final cache slabs (f32 values / int8 payloads
+//!   AND scales), same greedy tokens — across the dense (mha),
+//!   split-latent (slrd), and shared-latent (jlrd 25 %) variants at both
+//!   cache dtypes;
+//! * **selection** — the `top_k_indices` kernel matches a naive
+//!   full-sort reference on random score vectors (seeded property test),
+//!   including deterministic tie handling (ties go to the lower index);
+//! * **composition** — sparse decode composes with the prefix radix
+//!   cache: cache-on is bitwise identical to cache-off under a genuinely
+//!   sparse `k`, at both cache dtypes (spliced rows are byte-identical,
+//!   so selection is replay-stable);
+//! * **degenerates** — `k = 0` clamps to 1, `k` far beyond the window is
+//!   exactly dense, and `k = 1` decode runs to completion.
+
+use elitekv::config::{ModelConfig, Variant};
+use elitekv::coordinator::{
+    GenParams, InferenceServer, Request, SchedulerConfig,
+};
+use elitekv::kvcache::CacheDtype;
+use elitekv::native::kernels::top_k_indices;
+use elitekv::native::{NativeModel, NativeRunner};
+use elitekv::runtime::HostTensor;
+use elitekv::search::uniform_selection;
+use elitekv::util::prop;
+
+/// Decode window of every engine in this suite; `k = WINDOW` therefore
+/// satisfies `k >= seq_len` at every step of every request.
+const WINDOW: usize = 64;
+
+/// Engine over a 64-token window with the given cache dtype and sparse
+/// row budget. The scheduler carries the model's post-clamp `sparse_k`
+/// so the engine's agreement check is satisfied by construction.
+fn server(
+    variant: Variant,
+    sel_r: Option<usize>,
+    dtype: CacheDtype,
+    sparse_k: Option<usize>,
+    lanes: usize,
+    prefix_cache: bool,
+) -> InferenceServer {
+    let cfg = ModelConfig::tiny();
+    let sel = sel_r.map(|r| uniform_selection(&cfg, r));
+    let mut model =
+        NativeModel::init(&cfg, variant, 0x5a5, sel.as_ref()).unwrap();
+    model.set_cache_dtype(dtype);
+    model.set_sparse_k(sparse_k);
+    let sched_k = model.sparse_k;
+    let runner = NativeRunner::new(model, lanes, WINDOW).unwrap();
+    let cfg = SchedulerConfig {
+        cache_dtype: dtype,
+        sparse_k: sched_k,
+        prefix_cache,
+        ..Default::default()
+    };
+    InferenceServer::with_config(Box::new(runner), &cfg).unwrap()
+}
+
+fn greedy(id: u64, prompt: Vec<u32>, max_new: usize) -> Request {
+    Request::new(
+        id,
+        prompt,
+        GenParams {
+            max_new_tokens: max_new,
+            stop_token: None,
+            temperature: 0.0,
+            ..Default::default()
+        },
+    )
+}
+
+/// Bitwise slab equality at either dtype: f32 values, or int8 payloads
+/// AND scales (a scale drift with compensating payloads still fails).
+fn assert_slabs_eq(tag: &str, a: &[HostTensor], b: &[HostTensor]) {
+    assert_eq!(a.len(), b.len(), "{tag}: slab count diverges");
+    for (i, (sa, sb)) in a.iter().zip(b).enumerate() {
+        match sa.as_f32() {
+            Ok(fa) => assert_eq!(
+                fa,
+                sb.as_f32().unwrap(),
+                "{tag}: f32 slab {i} diverges"
+            ),
+            Err(_) => {
+                let (da, sca, ..) = sa.as_q8().unwrap();
+                let (db, scb, ..) = sb.as_q8().unwrap();
+                assert_eq!(da, db, "{tag}: int8 payload slab {i} diverges");
+                assert_eq!(sca, scb, "{tag}: int8 scale slab {i} diverges");
+            }
+        }
+    }
+}
+
+/// THE exactness pin: drive identical greedy request batches through a
+/// dense engine and a sparse engine with `k >= seq_len` in lockstep and
+/// require bitwise equality of the logits after every engine step, of
+/// the final cache slabs, and of the emitted token streams. The sparse
+/// engine still runs the full selection + row-gather machinery (the
+/// batched path always gathers when `sparse_k` is set), so this pins the
+/// gather as a verbatim copy — not a dense shortcut.
+fn assert_full_k_bitwise(
+    variant: Variant,
+    sel_r: Option<usize>,
+    dtype: CacheDtype,
+    k: usize,
+) {
+    let tag = format!("{}/{:?}/k={k}", variant.tag(), dtype);
+    let mut dense = server(variant.clone(), sel_r, dtype, None, 2, false);
+    let mut sparse = server(variant, sel_r, dtype, Some(k), 2, false);
+
+    // Three overlapping requests on two lanes: exercises batched decode
+    // with mixed positions and a lane being recycled mid-run.
+    let mut gen = elitekv::data::CorpusGen::new(512, 41);
+    let mut dense_out = Vec::new();
+    let mut sparse_out = Vec::new();
+    for i in 0..3u64 {
+        let prompt = gen.stream(8 + 5 * i as usize);
+        let max_new = 4 + (i as usize % 3);
+        dense.submit(greedy(i, prompt.clone(), max_new)).unwrap();
+        sparse.submit(greedy(i, prompt, max_new)).unwrap();
+    }
+    while dense.busy() || sparse.busy() {
+        dense_out.extend(dense.step().unwrap());
+        sparse_out.extend(sparse.step().unwrap());
+        match (dense.logits_snapshot(), sparse.logits_snapshot()) {
+            (Some(a), Some(b)) => assert_eq!(
+                a.as_f32().unwrap(),
+                b.as_f32().unwrap(),
+                "{tag}: per-step logits diverge"
+            ),
+            (a, b) => assert_eq!(
+                a.is_some(),
+                b.is_some(),
+                "{tag}: engines desynchronized"
+            ),
+        }
+    }
+    dense_out.sort_by_key(|r| r.id);
+    sparse_out.sort_by_key(|r| r.id);
+    assert_eq!(dense_out.len(), 3, "{tag}: requests lost");
+    for (a, b) in dense_out.iter().zip(&sparse_out) {
+        assert_eq!(a.id, b.id, "{tag}: response order diverges");
+        assert_eq!(
+            a.tokens, b.tokens,
+            "{tag}: request {} token streams diverge",
+            a.id
+        );
+    }
+    assert_slabs_eq(&tag, dense.cache_snapshot(), sparse.cache_snapshot());
+}
+
+#[test]
+fn full_k_bitwise_mha_f32() {
+    assert_full_k_bitwise(Variant::Mha, None, CacheDtype::F32, WINDOW);
+}
+
+#[test]
+fn full_k_bitwise_mha_int8() {
+    assert_full_k_bitwise(Variant::Mha, None, CacheDtype::Int8, WINDOW);
+}
+
+#[test]
+fn full_k_bitwise_slrd_f32() {
+    let v = Variant::Slrd { r: 4, d_ck: 32, d_cv: 48 };
+    assert_full_k_bitwise(v, Some(4), CacheDtype::F32, WINDOW);
+}
+
+#[test]
+fn full_k_bitwise_slrd_int8() {
+    let v = Variant::Slrd { r: 4, d_ck: 32, d_cv: 48 };
+    assert_full_k_bitwise(v, Some(4), CacheDtype::Int8, WINDOW);
+}
+
+#[test]
+fn full_k_bitwise_jlrd_25pct_f32() {
+    let v = Variant::EliteKv { r: 4, d_ckv: 64 };
+    assert_full_k_bitwise(v, Some(4), CacheDtype::F32, WINDOW);
+}
+
+#[test]
+fn full_k_bitwise_jlrd_25pct_int8() {
+    let v = Variant::EliteKv { r: 4, d_ckv: 64 };
+    assert_full_k_bitwise(v, Some(4), CacheDtype::Int8, WINDOW);
+}
+
+// ---------------------------------------------------------------------
+// Selection kernel: property test against a naive full-sort reference.
+// ---------------------------------------------------------------------
+
+/// Reference selection: full sort by score descending, ties to the
+/// LOWER index, truncate to k, report ascending — the contract
+/// `top_k_indices` promises without ever fully sorting.
+fn naive_top_k(scores: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| {
+        scores[b].total_cmp(&scores[a]).then(a.cmp(&b))
+    });
+    idx.truncate(k.min(scores.len()));
+    idx.sort_unstable();
+    idx
+}
+
+#[test]
+fn top_k_selection_matches_naive_full_sort() {
+    prop::check(
+        "sparse-top-k-vs-naive",
+        prop::DEFAULT_CASES,
+        |rng| {
+            let len = rng.range(0, 48);
+            // Half the cases draw from a 6-value lattice so duplicate
+            // scores (ties) are common rather than measure-zero.
+            let lattice = rng.chance(0.5);
+            let scores: Vec<f32> = (0..len)
+                .map(|_| {
+                    if lattice {
+                        rng.range(0, 6) as f32 * 0.5 - 1.0
+                    } else {
+                        rng.f32() * 4.0 - 2.0
+                    }
+                })
+                .collect();
+            let k = rng.range(0, len + 4);
+            (scores, k)
+        },
+        |(scores, k)| {
+            let mut got = Vec::new();
+            top_k_indices(scores, *k, &mut got);
+            let want = naive_top_k(scores, *k);
+            if got != want {
+                return Err(format!("got {got:?}, want {want:?}"));
+            }
+            // Tie handling must also be deterministic across calls.
+            let mut again = Vec::new();
+            top_k_indices(scores, *k, &mut again);
+            if again != got {
+                return Err(format!(
+                    "selection not deterministic: {got:?} then {again:?}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn top_k_all_ties_resolve_to_lowest_indices() {
+    let scores = vec![1.0f32; 10];
+    let mut out = Vec::new();
+    top_k_indices(&scores, 4, &mut out);
+    assert_eq!(out, vec![0, 1, 2, 3], "ties must go to the lower index");
+}
+
+// ---------------------------------------------------------------------
+// Composition: sparse decode × prefix radix cache.
+// ---------------------------------------------------------------------
+
+/// Cache-on ≡ cache-off under genuinely sparse decode (`k = 4` against
+/// 32+-row contexts): spliced prefix rows are byte-identical to
+/// recomputed ones, so the latent-space selection — a pure function of
+/// the query and the cache rows — picks the same rows and the engines
+/// stay in bitwise lockstep.
+fn assert_sparse_prefix_on_off_bitwise(dtype: CacheDtype) {
+    let v = Variant::EliteKv { r: 4, d_ckv: 64 };
+    let mut on = server(v.clone(), Some(4), dtype, Some(4), 3, true);
+    let mut off = server(v, Some(4), dtype, Some(4), 3, false);
+    let tag = format!("sparse+prefix/{dtype:?}");
+
+    // 32-token shared prefix (two full 16-token blocks) + distinct tails.
+    let mut gen = elitekv::data::CorpusGen::new(512, 23);
+    let shared = gen.stream(32);
+    let prompts: Vec<Vec<u32>> = (0..5)
+        .map(|i| {
+            let mut p = shared.clone();
+            p.extend(gen.stream(5 + 3 * (i % 3)));
+            p
+        })
+        .collect();
+
+    // Phase 1 seeds the radix cache; phase 2 admissions can hit it.
+    let phases: [&[usize]; 2] = [&[0], &[1, 2, 3, 4]];
+    let mut responses_on = Vec::new();
+    let mut responses_off = Vec::new();
+    for phase in phases {
+        for &i in phase {
+            let max_new = 3 + (i % 4);
+            on.submit(greedy(i as u64, prompts[i].clone(), max_new))
+                .unwrap();
+            off.submit(greedy(i as u64, prompts[i].clone(), max_new))
+                .unwrap();
+        }
+        while on.busy() || off.busy() {
+            responses_on.extend(on.step().unwrap());
+            responses_off.extend(off.step().unwrap());
+            match (on.logits_snapshot(), off.logits_snapshot()) {
+                (Some(a), Some(b)) => assert_eq!(
+                    a.as_f32().unwrap(),
+                    b.as_f32().unwrap(),
+                    "{tag}: logits diverge with the prefix cache on"
+                ),
+                (a, b) => assert_eq!(
+                    a.is_some(),
+                    b.is_some(),
+                    "{tag}: engines desynchronized"
+                ),
+            }
+        }
+    }
+    responses_on.sort_by_key(|r| r.id);
+    responses_off.sort_by_key(|r| r.id);
+    assert_eq!(responses_on.len(), 5);
+    for (a, b) in responses_on.iter().zip(&responses_off) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(
+            a.tokens, b.tokens,
+            "{tag}: request {} tokens diverge",
+            a.id
+        );
+    }
+    assert_slabs_eq(&tag, on.cache_snapshot(), off.cache_snapshot());
+    // ...and the composition was real on both axes: prefix reuse
+    // happened AND the selection stats show genuinely sparse attention.
+    assert!(
+        on.stats.prefix_hits >= 1,
+        "{tag}: prefix cache never hit ({} hits)",
+        on.stats.prefix_hits
+    );
+    assert!(
+        on.stats.sparse_attended_rows > 0
+            && on.stats.sparse_attended_rows < on.stats.sparse_dense_rows,
+        "{tag}: selection stats not sparse ({} of {} rows)",
+        on.stats.sparse_attended_rows,
+        on.stats.sparse_dense_rows
+    );
+}
+
+#[test]
+fn sparse_with_prefix_cache_on_off_bitwise_f32() {
+    assert_sparse_prefix_on_off_bitwise(CacheDtype::F32);
+}
+
+#[test]
+fn sparse_with_prefix_cache_on_off_bitwise_int8() {
+    assert_sparse_prefix_on_off_bitwise(CacheDtype::Int8);
+}
+
+// ---------------------------------------------------------------------
+// Degenerate budgets.
+// ---------------------------------------------------------------------
+
+/// `--sparse-k 0` makes no sense as "attend to nothing": the model
+/// clamps it to 1 (and the CLI clamps before the scheduler sees it, so
+/// the engine's agreement check can't trip).
+#[test]
+fn sparse_k_zero_clamps_to_one() {
+    let cfg = ModelConfig::tiny();
+    let sel = uniform_selection(&cfg, 4);
+    let mut model = NativeModel::init(
+        &cfg,
+        Variant::EliteKv { r: 4, d_ckv: 64 },
+        1,
+        Some(&sel),
+    )
+    .unwrap();
+    model.set_sparse_k(Some(0));
+    assert_eq!(model.sparse_k, Some(1), "k = 0 must clamp to 1");
+    model.set_sparse_k(Some(9));
+    assert_eq!(model.sparse_k, Some(9), "k = 9 must stand");
+    model.set_sparse_k(None);
+    assert_eq!(model.sparse_k, None, "None must disable sparse decode");
+}
+
+/// A `k` far beyond any reachable sequence length is exactly dense.
+#[test]
+fn k_beyond_window_is_exactly_dense() {
+    let v = Variant::EliteKv { r: 4, d_ckv: 64 };
+    assert_full_k_bitwise(v, Some(4), CacheDtype::F32, 1 << 20);
+}
+
+/// The harshest budget — one attended row per step — still completes
+/// every request with the right token counts at both dtypes.
+#[test]
+fn k_one_decode_runs_to_completion() {
+    for dtype in [CacheDtype::F32, CacheDtype::Int8] {
+        let v = Variant::EliteKv { r: 4, d_ckv: 64 };
+        let mut s = server(v, Some(4), dtype, Some(1), 2, false);
+        let mut gen = elitekv::data::CorpusGen::new(512, 7);
+        for i in 0..3u64 {
+            s.submit(greedy(i, gen.stream(12), 6)).unwrap();
+        }
+        let mut out = s.run_to_completion().unwrap();
+        out.sort_by_key(|r| r.id);
+        assert_eq!(out.len(), 3, "{dtype:?}: requests lost at k = 1");
+        for r in &out {
+            assert_eq!(
+                r.tokens.len(),
+                6,
+                "{dtype:?}: request {} truncated at k = 1",
+                r.id
+            );
+        }
+        assert!(
+            s.stats.sparse_dense_rows > s.stats.sparse_attended_rows,
+            "{dtype:?}: k = 1 must be sparse on 12+-token contexts"
+        );
+    }
+}
