@@ -1,0 +1,358 @@
+"""Tests for python/tools/lint.py — the toolchain-less lint runner.
+
+Four layers:
+
+* **Self-application** — linting this repository reports clean. In a
+  container without the Rust toolchain this test IS the executable form
+  of the project-contract audit (ROADMAP standing item).
+* **Golden fixture report** — the fake mini-repo under
+  ``rust/tests/lint_fixtures/`` makes every rule R0-R7 fire at least
+  once; the rendered report is pinned to ``rust/tests/lint_expected.txt``
+  (the same golden the Rust suite in ``rust/tests/lint_tool.rs`` pins,
+  so both runners are anchored to one byte-exact artifact).
+* **Lexer edge cases** — the literal forms that defeat naive scanners:
+  raw strings with hash depths, quotes inside chars, nested block
+  comments, byte/C strings, raw identifiers.
+* **Seeded soup invariants** — a port of the Rust prop harness
+  (``util/prop.rs`` seeding: fnv1a(name) ^ ELITEKV_PROP_SEED, one Pcg64
+  stream per case) drives the same random token soups the Rust
+  differential test feeds both lexers, checking totality and lossless
+  span coverage on this side.
+"""
+
+import importlib.util
+import os
+import subprocess
+import sys
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", ".."))
+LINT_PY = os.path.join(REPO, "python", "tools", "lint.py")
+FIXTURES = os.path.join(REPO, "rust", "tests", "lint_fixtures")
+GOLDEN = os.path.join(REPO, "rust", "tests", "lint_expected.txt")
+
+_spec = importlib.util.spec_from_file_location("elitekv_lint", LINT_PY)
+lint = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(lint)
+
+
+# ---------------------------------------------------------------------------
+# Reports
+# ---------------------------------------------------------------------------
+
+
+def test_repo_is_clean():
+    findings, scanned = lint.run(REPO)
+    assert scanned > 0
+    assert findings == [], lint.render(findings, scanned)
+
+
+def test_fixture_report_matches_golden():
+    findings, scanned = lint.run(FIXTURES)
+    with open(GOLDEN, "r", encoding="utf-8") as fh:
+        golden = fh.read()
+    assert lint.render(findings, scanned) == golden, (
+        "fixture report drifted; regenerate with `python3 "
+        "python/tools/lint.py --root rust/tests/lint_fixtures > "
+        "rust/tests/lint_expected.txt` if the change is intended"
+    )
+
+
+def test_fixture_corpus_fires_every_rule():
+    findings, _ = lint.run(FIXTURES)
+    fired = {rule for (_, _, rule, _) in findings}
+    assert fired == {"R0", "R1", "R2", "R3", "R4", "R5", "R6", "R7"}
+
+
+def test_cli_exit_codes():
+    clean = subprocess.run(
+        [sys.executable, LINT_PY, "--root", REPO],
+        capture_output=True,
+        text=True,
+    )
+    assert clean.returncode == 0, clean.stdout
+    assert clean.stdout.startswith("lint: clean")
+    dirty = subprocess.run(
+        [sys.executable, LINT_PY, "--root", FIXTURES],
+        capture_output=True,
+        text=True,
+    )
+    assert dirty.returncode == 1
+    usage = subprocess.run(
+        [sys.executable, LINT_PY, "--no-such-flag"],
+        capture_output=True,
+        text=True,
+    )
+    assert usage.returncode == 2
+
+
+def test_cli_dump_tokens_matches_module_dump(tmp_path):
+    src = 'fn f() { r#"raw " inside"# }\n'
+    p = tmp_path / "snippet.rs"
+    p.write_text(src, encoding="utf-8")
+    out = subprocess.run(
+        [sys.executable, LINT_PY, "--dump-tokens", str(p)],
+        capture_output=True,
+        text=True,
+    )
+    assert out.returncode == 0
+    assert out.stdout == lint.dump(src)
+
+
+# ---------------------------------------------------------------------------
+# Lexer edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_raw_string_with_quote_is_one_token():
+    toks, errs = lint.lex('let s = r#"has " quote"#;')
+    assert not errs
+    strs = [t for t in toks if t.kind == "str"]
+    assert [t.text for t in strs] == ['r#"has " quote"#']
+
+
+def test_raw_string_hash_depths():
+    toks, errs = lint.lex('r##"inner "# close"## r"plain"')
+    assert not errs
+    assert [t.text for t in toks] == ['r##"inner "# close"##', 'r"plain"']
+
+
+def test_byte_and_c_strings():
+    toks, errs = lint.lex("b\"by\" br#\"rb\"# c\"cs\" cr#\"rc\"# b'x'")
+    assert not errs
+    assert [t.kind for t in toks] == ["str", "str", "str", "str", "char"]
+
+
+def test_char_quote_and_lifetime_disambiguation():
+    toks, errs = lint.lex("'\"' 'a' '\\'' 'static '_")
+    assert not errs
+    assert [t.kind for t in toks] == [
+        "char",
+        "char",
+        "char",
+        "lifetime",
+        "lifetime",
+    ]
+
+
+def test_nested_block_comment_with_quotes():
+    toks, errs = lint.lex('/* outer "quote /* inner */ still */ fn')
+    assert not errs
+    assert [t.kind for t in toks] == ["comment", "ident"]
+
+
+def test_doc_comment_classification():
+    cases = [
+        ("/// d", "doc"),
+        ("//! d", "doc"),
+        ("//// not doc", "comment"),
+        ("// plain", "comment"),
+        ("/** d */", "doc"),
+        ("/*! d */", "doc"),
+        ("/*** not doc ***/", "comment"),
+        ("/**/", "comment"),
+    ]
+    for src, want in cases:
+        toks, errs = lint.lex(src)
+        assert not errs, src
+        assert [t.kind for t in toks] == [want], src
+
+
+def test_raw_identifier_and_macro_hash():
+    toks, errs = lint.lex("r#match x! # [cfg]")
+    assert not errs
+    assert [(t.kind, t.text) for t in toks][0] == ("ident", "r#match")
+
+
+def test_unterminated_forms_are_total():
+    for src, msg in [
+        ('"open', "unterminated string literal"),
+        ('r##"open"#', "unterminated raw string literal"),
+        ("/* open", "unterminated block comment"),
+        ("'\\n", "unterminated character literal"),
+    ]:
+        toks, errs = lint.lex(src)
+        assert len(toks) == 1, src
+        assert [m for (_, m) in errs] == [msg], src
+    # A lone quote at end of input is a harmless punct, not an error.
+    toks, errs = lint.lex("'")
+    assert [t.kind for t in toks] == ["punct"]
+    assert errs == []
+
+
+def test_util_json_raw_strings_lex_clean():
+    # Regression: the PR-5 ad-hoc bracket scanner miscounted the raw
+    # strings in util/json.rs; the real lexer must not.
+    path = os.path.join(REPO, "rust", "src", "util", "json.rs")
+    toks, errs = lint.lex(lint.read_text(path))
+    assert not errs
+    depth = 0
+    for t in toks:
+        if t.kind == "punct" and t.text in "([{":
+            depth += 1
+        elif t.kind == "punct" and t.text in ")]}":
+            depth -= 1
+            assert depth >= 0
+    assert depth == 0
+
+
+# ---------------------------------------------------------------------------
+# Seeded soup invariants (port of util/prop.rs + the Rust generator)
+# ---------------------------------------------------------------------------
+
+M64 = (1 << 64) - 1
+M128 = (1 << 128) - 1
+PCG_MUL = 0x2360ED051FC65DA44385DF649FCCF645
+
+
+class Pcg64:
+    """Port of rust/src/util/rng.rs (PCG-XSL-RR 128/64)."""
+
+    def __init__(self, seed, seq):
+        self.inc = (((seq & M64) << 1) | 1) & M128
+        self.state = 0
+        self.next_u64()
+        self.state = (self.state + (seed & M64)) & M128
+        self.next_u64()
+
+    def next_u64(self):
+        self.state = (self.state * PCG_MUL + self.inc) & M128
+        rot = self.state >> 122
+        xsl = ((self.state >> 64) ^ self.state) & M64
+        return ((xsl >> rot) | (xsl << ((64 - rot) % 64))) & M64
+
+    def below(self, n):
+        # Lemire's method, matching rng.rs bit-for-bit.
+        while True:
+            m = self.next_u64() * n
+            lo = m & M64
+            if lo >= n or lo >= (M64 - n + 1) % n:
+                return m >> 64
+
+    def range(self, lo, hi):
+        return lo + self.below(hi - lo)
+
+    def f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def chance(self, p):
+        return self.f64() < p
+
+
+def fnv1a(name):
+    h = 0xCBF29CE484222325
+    for b in name.encode("utf-8"):
+        h ^= b
+        h = (h * 0x100000001B3) & M64
+    return h
+
+
+def env_seed():
+    raw = os.environ.get("ELITEKV_PROP_SEED", "").strip()
+    if not raw:
+        return 0
+    try:
+        if raw.lower().startswith("0x"):
+            return int(raw[2:], 16)
+        return int(raw)
+    except ValueError:
+        return 0
+
+
+def env_cases(default):
+    raw = os.environ.get("ELITEKV_PROP_CASES", "").strip()
+    try:
+        n = int(raw)
+    except ValueError:
+        return default
+    return n if n > 0 else default
+
+
+# Mirrors the SOUP/SEP/TAIL tables in rust/tests/lint_tool.rs exactly:
+# same fragments, same order, same generator call sequence, so a given
+# (name, seed, case) produces the identical soup on both sides.
+SOUP = [
+    "fn",
+    "ident",
+    "x7",
+    "r#match",
+    "_",
+    "déjà_vu",
+    "0",
+    "42",
+    "0x1f",
+    "1.5e-3",
+    "1_000u64",
+    '"str \\" esc"',
+    '"multi\nline"',
+    'b"bytes"',
+    'c"cstr"',
+    'r"raw"',
+    'r#"has " quote"#',
+    'r##"nest "# deeper"##',
+    'br#"raw bytes"#',
+    "'a'",
+    "'\\n'",
+    "'\"'",
+    "b'x'",
+    "'static",
+    "'_",
+    "// line comment\n",
+    "/// doc\n",
+    "//! inner\n",
+    "/* block */",
+    "/* nested /* deep */ still */",
+    "{",
+    "}",
+]
+SEP = ["", " ", "\n", "\t", "  "]
+TAIL = ['"never closed', "/* never closed", 'r##"never closed"#', "'"]
+
+
+def gen_soup(rng):
+    n = rng.range(1, 40)
+    parts = []
+    for _ in range(n):
+        parts.append(SOUP[rng.range(0, len(SOUP))])
+        parts.append(SEP[rng.range(0, len(SEP))])
+    if rng.chance(0.15):
+        parts.append(TAIL[rng.range(0, len(TAIL))])
+    return "".join(parts)
+
+
+def soups(name, cases):
+    base = fnv1a(name) ^ env_seed()
+    for case in range(env_cases(cases)):
+        yield case, gen_soup(Pcg64(base, case))
+
+
+def test_soup_lexing_is_total_and_lossless():
+    # Same corpus the Rust differential test feeds both lexers.
+    for name, cases in [
+        ("lint.lexer.differential", 24),
+        ("lint.lexer.lossless", 64),
+    ]:
+        for case, soup in soups(name, cases):
+            toks, _errs = lint.lex(soup)
+            prev = 0
+            for t in toks:
+                assert prev <= t.start < t.end <= len(soup), (name, case)
+                gap = soup[prev : t.start]
+                assert gap.strip() == "", (name, case, gap)
+                assert soup[t.start : t.end] == t.text, (name, case)
+                prev = t.end
+            assert soup[prev:].strip() == "", (name, case)
+
+
+def test_soup_dump_is_deterministic_and_parseable():
+    for case, soup in soups("lint.lexer.deterministic", 16):
+        d1 = lint.dump(soup)
+        assert d1 == lint.dump(soup), case
+        toks, errs = lint.lex(soup)
+        lines = d1.splitlines()
+        assert len(lines) == len(toks) + len(errs), case
+        for line in lines:
+            head = line.split(" ", 2)[0]
+            if head.startswith("error:"):
+                continue
+            ln, _, col = head.partition(":")
+            assert ln.isdigit() and col.isdigit(), line

@@ -1,0 +1,1192 @@
+#!/usr/bin/env python3
+"""Toolchain-free runner for `elitekv lint` (DESIGN.md S21).
+
+This is a statement-for-statement port of the Rust analyzer in
+`rust/src/analysis/{lexer,rules,report}.rs`. The two runners are pinned
+to byte-identical output by the differential tests in
+`rust/tests/lint_tool.rs` and `python/tests/test_lint.py`: the same tree
+must produce the same report, and `--dump-tokens FILE` must print the
+same token stream as `elitekv lint --dump-tokens FILE`. Keep every
+format string, message template, sort key, and scan order in lockstep
+with the Rust side when editing either.
+
+Usage:
+    python3 python/tools/lint.py [--root DIR] [--dump-tokens FILE]
+
+Exit codes: 0 clean, 1 findings, 2 usage error. With no --root the
+repository root is derived from this file's location.
+"""
+
+import os
+import sys
+
+# ---------------------------------------------------------------------------
+# Lexer (port of rust/src/analysis/lexer.rs)
+# ---------------------------------------------------------------------------
+
+
+class Token:
+    """One lexed token: kind is the lowercase name the Rust side dumps."""
+
+    __slots__ = ("kind", "text", "line", "col", "start", "end")
+
+    def __init__(self, kind, text, line, col, start, end):
+        self.kind = kind
+        self.text = text
+        self.line = line
+        self.col = col
+        self.start = start
+        self.end = end
+
+
+def is_id_start(c):
+    return ord(c) >= 128 or "a" <= c <= "z" or "A" <= c <= "Z" or c == "_"
+
+
+def is_id_cont(c):
+    return is_id_start(c) or "0" <= c <= "9"
+
+
+def is_ws(c):
+    return c in " \t\r\n\x0b\x0c"
+
+
+def is_digit(c):
+    return "0" <= c <= "9"
+
+
+def is_alnum(c):
+    return "a" <= c <= "z" or "A" <= c <= "Z" or "0" <= c <= "9"
+
+
+def scan_cooked(c, q):
+    n = len(c)
+    j = q + 1
+    while j < n:
+        if c[j] == "\\":
+            j += 2
+            continue
+        if c[j] == '"':
+            return j + 1, True
+        j += 1
+    return n, False
+
+
+def scan_raw(c, j, hashes):
+    n = len(c)
+    while j < n:
+        if c[j] == '"':
+            m = 0
+            while m < hashes and j + 1 + m < n and c[j + 1 + m] == "#":
+                m += 1
+            if m == hashes:
+                return j + 1 + hashes, True
+        j += 1
+    return n, False
+
+
+def scan_char_like(c, q):
+    n = len(c)
+    if q + 1 >= n:
+        return None
+    if c[q + 1] == "\\":
+        j = q + 2
+        if j < n:
+            j += 1
+        while j < n and c[j] != "'" and c[j] != "\n":
+            j += 1
+        if j < n and c[j] == "'":
+            return j + 1, True
+        return j, False
+    if q + 2 < n and c[q + 2] == "'" and c[q + 1] != "'" and c[q + 1] != "\n":
+        return q + 3, True
+    return None
+
+
+def scan_number(c, s):
+    n = len(c)
+    i = s + 1
+    seen_dot = False
+    while i < n:
+        ch = c[i]
+        if is_alnum(ch) or ch == "_":
+            i += 1
+        elif ch == "." and not seen_dot and i + 1 < n and is_digit(c[i + 1]):
+            seen_dot = True
+            i += 1
+        elif (
+            ch in "+-"
+            and c[i - 1] in "eE"
+            and i + 1 < n
+            and is_digit(c[i + 1])
+        ):
+            i += 1
+        else:
+            break
+    return i
+
+
+def scan_prefixed(c, i):
+    n = len(c)
+    ch = c[i]
+    if ch not in "rbc":
+        return None
+    pl = 1
+    if ch in "bc" and i + 1 < n and c[i + 1] == "r":
+        pl = 2
+    k = i + pl
+    h = 0
+    while k + h < n and c[k + h] == "#":
+        h += 1
+    raw_capable = (ch == "r" and pl == 1) or pl == 2
+    if raw_capable and k + h < n and c[k + h] == '"':
+        end, ok = scan_raw(c, k + h + 1, h)
+        msg = "" if ok else "unterminated raw string literal"
+        return end, "str", msg
+    if pl == 1 and h == 0 and ch in "bc" and k < n and c[k] == '"':
+        end, ok = scan_cooked(c, k)
+        msg = "" if ok else "unterminated string literal"
+        return end, "str", msg
+    if pl == 1 and h == 0 and ch == "b" and k < n and c[k] == "'":
+        r = scan_char_like(c, k)
+        if r is not None:
+            end, ok = r
+            msg = "" if ok else "unterminated character literal"
+            return end, "char", msg
+        return None
+    if ch == "r" and pl == 1 and h == 1 and k + 1 < n and is_id_start(c[k + 1]):
+        j = k + 1
+        while j < n and is_id_cont(c[j]):
+            j += 1
+        return j, "ident", ""
+    return None
+
+
+def lex(src):
+    """Total lex of `src`: returns (tokens, errors)."""
+    c = list(src)
+    n = len(c)
+    toks = []
+    errs = []
+    i = 0
+    line = 1
+    col = 1
+    while i < n:
+        ch = c[i]
+        if is_ws(ch):
+            i += 1
+            if ch == "\n":
+                line += 1
+                col = 1
+            else:
+                col += 1
+            continue
+        start = i
+        end = i + 1
+        kind = "punct"
+        err = ""
+        if ch == "/" and i + 1 < n and c[i + 1] == "/":
+            j = i + 2
+            while j < n and c[j] != "\n":
+                j += 1
+            end = j
+            t = "".join(c[start:end])
+            if (t.startswith("///") and not t.startswith("////")) or t.startswith("//!"):
+                kind = "doc"
+            else:
+                kind = "comment"
+        elif ch == "/" and i + 1 < n and c[i + 1] == "*":
+            depth = 1
+            j = i + 2
+            while j < n and depth > 0:
+                if c[j] == "/" and j + 1 < n and c[j + 1] == "*":
+                    depth += 1
+                    j += 2
+                elif c[j] == "*" and j + 1 < n and c[j + 1] == "/":
+                    depth -= 1
+                    j += 2
+                else:
+                    j += 1
+            end = j
+            if depth > 0:
+                err = "unterminated block comment"
+            t = "".join(c[start:end])
+            if t.startswith("/*!") or (
+                t.startswith("/**") and not t.startswith("/***") and t != "/**/"
+            ):
+                kind = "doc"
+            else:
+                kind = "comment"
+        elif ch == '"':
+            end, ok = scan_cooked(c, i)
+            kind = "str"
+            if not ok:
+                err = "unterminated string literal"
+        elif ch == "'":
+            r = scan_char_like(c, i)
+            if r is not None:
+                end, ok = r
+                kind = "char"
+                if not ok:
+                    err = "unterminated character literal"
+            elif i + 1 < n and is_id_start(c[i + 1]):
+                j = i + 1
+                while j < n and is_id_cont(c[j]):
+                    j += 1
+                end = j
+                kind = "lifetime"
+        elif is_digit(ch):
+            end = scan_number(c, i)
+            kind = "num"
+        elif is_id_start(ch):
+            r = scan_prefixed(c, i)
+            if r is not None:
+                end, kind, err = r
+            else:
+                j = i + 1
+                while j < n and is_id_cont(c[j]):
+                    j += 1
+                end = j
+                kind = "ident"
+        if err:
+            errs.append((line, err))
+        text = "".join(c[start:end])
+        toks.append(Token(kind, text, line, col, start, end))
+        consumed = end - start
+        nl = 0
+        last = 0
+        for off in range(start, end):
+            if c[off] == "\n":
+                nl += 1
+                last = off - start
+        if nl > 0:
+            line += nl
+            col = consumed - last
+        else:
+            col += consumed
+        i = end
+    return toks, errs
+
+
+def escape(s):
+    out = []
+    for ch in s:
+        if ch == "\\":
+            out.append("\\\\")
+        elif ch == "\n":
+            out.append("\\n")
+        elif ch == "\t":
+            out.append("\\t")
+        elif ch == "\r":
+            out.append("\\r")
+        elif " " <= ch <= "~":
+            out.append(ch)
+        else:
+            out.append("\\u{%04x}" % ord(ch))
+    return "".join(out)
+
+
+def dump(src):
+    toks, errs = lex(src)
+    out = []
+    for t in toks:
+        out.append("%d:%d %s %s\n" % (t.line, t.col, t.kind, escape(t.text)))
+    for line, msg in errs:
+        out.append("error:%d %s\n" % (line, escape(msg)))
+    return "".join(out)
+
+
+# ---------------------------------------------------------------------------
+# Report rendering (port of rust/src/analysis/report.rs)
+# ---------------------------------------------------------------------------
+
+
+def render(findings, files_scanned):
+    """Findings are (path, line, rule, msg) tuples; render sorts,
+    dedups, and appends the summary line — byte-identical to Rust."""
+    ordered = sorted(findings)
+    dedup = []
+    for f in ordered:
+        if not dedup or dedup[-1] != f:
+            dedup.append(f)
+    out = []
+    for path, line, rule, msg in dedup:
+        out.append("%s:%d %s %s\n" % (path, line, rule, msg))
+    if not dedup:
+        out.append("lint: clean (%d files scanned)\n" % files_scanned)
+    else:
+        out.append(
+            "lint: %d finding(s) (%d files scanned)\n"
+            % (len(dedup), files_scanned)
+        )
+    return "".join(out)
+
+
+# ---------------------------------------------------------------------------
+# Rule engine (port of rust/src/analysis/rules.rs)
+# ---------------------------------------------------------------------------
+
+SCAN_DIRS = ["rust/src", "rust/tests", "rust/benches", "examples"]
+SKIP_DIR = "lint_fixtures"
+R2_FILES = ["rust/src/native/kernels.rs", "rust/src/native/model.rs"]
+R2_BANNED = [
+    "HashMap",
+    "HashSet",
+    "Instant",
+    "SystemTime",
+    "thread_rng",
+    "available_parallelism",
+]
+R3_DIR = "rust/src/coordinator/"
+R3_FILES = ["rust/src/kvcache/radix.rs", "rust/src/kvcache/block.rs"]
+R3_MACROS = ["panic", "unreachable", "todo", "unimplemented"]
+R3_METHODS = ["unwrap", "expect"]
+ARGS_API = ["get", "str_or", "usize_or", "u64_or", "f64_or", "has", "req"]
+MAIN_RS = "rust/src/main.rs"
+LIB_RS = "rust/src/lib.rs"
+SCHED_RS = "rust/src/coordinator/scheduler.rs"
+
+MALFORMED_MSG = (
+    "malformed lint control comment (grammar: "
+    "`// lint: allow(Rn[,Rn]) — reason`)"
+)
+
+
+class Attr:
+    __slots__ = (
+        "start_code",
+        "end_code",
+        "start_orig",
+        "end_orig",
+        "inner",
+        "idents",
+        "strs",
+    )
+
+    def __init__(self, start_code, end_code, start_orig, end_orig, inner,
+                 idents, strs):
+        self.start_code = start_code
+        self.end_code = end_code
+        self.start_orig = start_orig
+        self.end_orig = end_orig
+        self.inner = inner
+        self.idents = idents
+        self.strs = strs
+
+    def is_testish(self):
+        return "test" in self.idents
+
+    def is_pjrt(self):
+        return (
+            "cfg" in self.idents
+            and "feature" in self.idents
+            and "not" not in self.idents
+            and "pjrt" in self.strs
+        )
+
+    def is_docs_allow(self):
+        return "allow" in self.idents and "missing_docs" in self.idents
+
+    def is_doc(self):
+        return "doc" in self.idents
+
+
+class FileLex:
+    __slots__ = (
+        "toks",
+        "errs",
+        "code",
+        "attrs",
+        "test_spans",
+        "pjrt_spans",
+        "docs_allow_spans",
+        "inner_pjrt",
+        "mod_decls",
+        "allows",
+        "r0",
+    )
+
+
+def in_spans(spans, idx):
+    return any(a <= idx <= b for a, b in spans)
+
+
+def find_item_end(code_toks, s):
+    n = len(code_toks)
+    depth = 0
+    m = s
+    while m < n:
+        t = code_toks[m].text
+        if t == "(" or t == "[":
+            depth += 1
+        elif t == ")" or t == "]":
+            if depth == 0:
+                return m
+            depth -= 1
+        elif t == "{":
+            if depth == 0:
+                d = 1
+                m2 = m + 1
+                while m2 < n and d > 0:
+                    t2 = code_toks[m2].text
+                    if t2 in "([{":
+                        d += 1
+                    elif t2 in ")]}":
+                        d -= 1
+                    m2 += 1
+                return m2 - 1 if m2 > 0 else 0
+            depth += 1
+        elif t == "}":
+            if depth == 0:
+                return m
+            depth -= 1
+        elif t == ";" and depth == 0:
+            return m
+        m += 1
+    return n - 1 if n > 0 else 0
+
+
+def parse_allow_body(rest):
+    rest = rest.strip()
+    if not rest.startswith("allow("):
+        return [], MALFORMED_MSG
+    close = rest.find(")")
+    if close < 0:
+        return [], MALFORMED_MSG
+    inside = rest[6:close]
+    rules = []
+    err = None
+    for part in inside.split(","):
+        p = part.strip()
+        valid = len(p) == 2 and p[0] == "R" and "1" <= p[1] <= "7"
+        if valid:
+            rules.append(p)
+        else:
+            err = "unknown rule `%s` in lint control comment" % p
+    tail = rest[close + 1:].lstrip()
+    sep = False
+    for s in ("—", "–", "-", ":"):
+        if tail.startswith(s):
+            tail = tail[len(s):]
+            sep = True
+            break
+    if not sep or not tail.strip():
+        err = MALFORMED_MSG
+    return rules, err
+
+
+def unquote(s):
+    t = s
+    for p in ("br", "cr", "r", "b", "c"):
+        if t.startswith(p) and len(t) > len(p) and t[len(p)] in "\"#'":
+            t = t[len(p):]
+            break
+    t = t.strip("#")
+    return t.strip("\"'")
+
+
+def analyze(text):
+    fl = FileLex()
+    toks, errs = lex(text)
+    fl.toks = toks
+    fl.errs = errs
+    code = [i for i, t in enumerate(toks) if t.kind not in ("comment", "doc")]
+    fl.code = code
+    code_toks = [toks[i] for i in code]
+    n = len(code_toks)
+
+    # ---- attributes ----
+    attrs = []
+    i = 0
+    while i < n:
+        if code_toks[i].text == "#":
+            inner = i + 1 < n and code_toks[i + 1].text == "!"
+            b = i + 1 + (1 if inner else 0)
+            if b < n and code_toks[b].text == "[":
+                depth = 1
+                k = b + 1
+                while k < n and depth > 0:
+                    t = code_toks[k].text
+                    if t == "[":
+                        depth += 1
+                    elif t == "]":
+                        depth -= 1
+                    if depth > 0:
+                        k += 1
+                end = min(k, n - 1)
+                lo = min(b + 1, n)
+                hi = max(min(end, n), lo)
+                idents = []
+                strs = []
+                for ct in code_toks[lo:hi]:
+                    if ct.kind == "ident":
+                        idents.append(ct.text)
+                    elif ct.kind == "str":
+                        strs.append(unquote(ct.text))
+                attrs.append(
+                    Attr(i, end, code[i], code[end], inner, idents, strs)
+                )
+                i = end + 1
+                continue
+        i += 1
+    fl.attrs = attrs
+
+    # ---- attribute chains -> item spans ----
+    test_spans = []
+    pjrt_spans = []
+    docs_allow_spans = []
+    inner_pjrt = False
+    j = 0
+    while j < len(attrs):
+        if attrs[j].inner:
+            if attrs[j].is_pjrt():
+                inner_pjrt = True
+            j += 1
+            continue
+        chain_start = j
+        while (
+            j + 1 < len(attrs)
+            and not attrs[j + 1].inner
+            and attrs[j + 1].start_code == attrs[j].end_code + 1
+        ):
+            j += 1
+        item_start = attrs[j].end_code + 1
+        item_end = find_item_end(code_toks, item_start)
+        span = (attrs[chain_start].start_code, item_end)
+        for a in attrs[chain_start:j + 1]:
+            if a.is_testish():
+                test_spans.append(span)
+            if a.is_pjrt():
+                pjrt_spans.append(span)
+            if a.is_docs_allow():
+                docs_allow_spans.append(span)
+        j += 1
+    fl.test_spans = test_spans
+    fl.pjrt_spans = pjrt_spans
+    fl.docs_allow_spans = docs_allow_spans
+    fl.inner_pjrt = inner_pjrt
+
+    # ---- mod declarations ----
+    mod_decls = []
+    for t in range(n):
+        if (
+            code_toks[t].text == "mod"
+            and code_toks[t].kind == "ident"
+            and t + 1 < n
+            and code_toks[t + 1].kind == "ident"
+        ):
+            mod_decls.append((
+                code_toks[t + 1].text,
+                in_spans(pjrt_spans, t),
+                in_spans(docs_allow_spans, t),
+            ))
+    fl.mod_decls = mod_decls
+
+    # ---- allow comments ----
+    allows = {}
+    r0 = []
+    for ti, tok in enumerate(toks):
+        if tok.kind not in ("comment", "doc"):
+            continue
+        if not tok.text.startswith("//"):
+            continue
+        body = tok.text[2:].lstrip("/!").lstrip()
+        if not body.startswith("lint:"):
+            continue
+        rules, err = parse_allow_body(body[5:])
+        if err is not None:
+            r0.append((tok.line, err))
+        target = tok.line
+        for t2 in toks[ti + 1:]:
+            if t2.kind not in ("comment", "doc"):
+                target = t2.line
+                break
+        for r in rules:
+            e = allows.setdefault(r, [])
+            e.append(tok.line)
+            e.append(target)
+    fl.allows = allows
+    fl.r0 = r0
+    return fl
+
+
+def extract_flags(text):
+    c = list(text)
+    n = len(c)
+    out = []
+    i = 0
+    while i + 2 < n:
+        if (
+            c[i] == "-"
+            and c[i + 1] == "-"
+            and (i == 0 or c[i - 1] != "-")
+            and "a" <= c[i + 2] <= "z"
+        ):
+            j = i + 2
+            while j < n and ("a" <= c[j] <= "z" or is_digit(c[j]) or c[j] == "-"):
+                j += 1
+            flag = "".join(c[i + 2:j]).rstrip("-")
+            if flag and flag not in out:
+                out.append(flag)
+            i = j
+        else:
+            i += 1
+    return out
+
+
+class CargoTarget:
+    __slots__ = ("kind", "path", "path_line", "required")
+
+    def __init__(self, kind, path_line):
+        self.kind = kind
+        self.path = ""
+        self.path_line = path_line
+        self.required = []
+
+
+def parse_cargo(text):
+    targets = []
+    current = False
+    for ln0, raw in enumerate(text.split("\n")):
+        ln = ln0 + 1
+        raw = raw.removesuffix("\r")
+        line = []
+        in_str = False
+        for ch in raw:
+            if ch == '"':
+                in_str = not in_str
+            if ch == "#" and not in_str:
+                break
+            line.append(ch)
+        s = "".join(line).strip()
+        if s.startswith("[["):
+            name = s.strip("[]")
+            if name in ("test", "bench", "example"):
+                targets.append(CargoTarget(name, ln))
+                current = True
+            else:
+                current = False
+            continue
+        if s.startswith("["):
+            current = False
+            continue
+        if not current:
+            continue
+        if "=" not in s:
+            continue
+        key, val = s.split("=", 1)
+        key = key.strip()
+        quoted = val.split('"')[1::2]
+        if targets:
+            t = targets[-1]
+            if key == "path" and quoted:
+                t.path = quoted[0]
+                t.path_line = ln
+            elif key == "required-features":
+                t.required = quoted
+    return targets
+
+
+def discover(root):
+    out = []
+    for d in SCAN_DIRS:
+        base = os.path.join(root, d)
+        for dirpath, dirnames, filenames in os.walk(base):
+            dirnames[:] = sorted(x for x in dirnames if x != SKIP_DIR)
+            rel_dir = os.path.relpath(dirpath, root).replace(os.sep, "/")
+            for name in sorted(filenames):
+                if name.endswith(".rs"):
+                    out.append(rel_dir + "/" + name)
+    out.sort()
+    return out
+
+
+def mod_chain(rel):
+    if not rel.startswith("rust/src/"):
+        return []
+    comps = rel[len("rust/src/"):].split("/")
+    names = []
+    for k, comp in enumerate(comps):
+        if k + 1 == len(comps):
+            stem = comp[:-3] if comp.endswith(".rs") else comp
+            if stem not in ("mod", "lib", "main"):
+                names.append(stem)
+        else:
+            names.append(comp)
+    return names
+
+
+def file_pjrt_gated(rel, lexmap, cargo):
+    fl = lexmap.get(rel)
+    if fl is not None and fl.inner_pjrt:
+        return True
+    if rel.startswith("rust/src/"):
+        names = mod_chain(rel)
+        for i in range(len(names)):
+            if i == 0:
+                decl_file = LIB_RS
+            else:
+                decl_file = "rust/src/" + "/".join(names[:i]) + "/mod.rs"
+            dfl = lexmap.get(decl_file)
+            if dfl is not None:
+                for name, pjrt, _docs in dfl.mod_decls:
+                    if name == names[i] and pjrt:
+                        return True
+        return False
+    return any(
+        t.path == rel and "pjrt" in t.required for t in cargo
+    )
+
+
+def has_inner_doc(fl):
+    for t in fl.toks:
+        if t.kind == "comment":
+            continue
+        return t.kind == "doc" and (
+            t.text.startswith("//!") or t.text.startswith("/*!")
+        )
+    return False
+
+
+def documented(fl, oi):
+    by_end = {a.end_orig: a for a in fl.attrs}
+    p = oi
+    while p > 0:
+        p -= 1
+        tok = fl.toks[p]
+        if tok.kind == "doc":
+            return True
+        if tok.kind == "comment":
+            continue
+        a = by_end.get(p)
+        if a is not None:
+            if a.is_doc() or a.is_docs_allow():
+                return True
+            if a.start_orig == 0:
+                return False
+            p = a.start_orig
+            continue
+        return False
+    return False
+
+
+def read_text(path):
+    try:
+        with open(path, "rb") as fh:
+            data = fh.read()
+    except OSError:
+        data = b""
+    return data.decode("utf-8", errors="replace")
+
+
+def run(root):
+    """Apply every rule under `root`; returns (findings, files_scanned)."""
+    files = discover(root)
+    lexmap = {}
+    for f in files:
+        lexmap[f] = analyze(read_text(os.path.join(root, f)))
+    cargo = parse_cargo(read_text(os.path.join(root, "Cargo.toml")))
+    readme_text = read_text(os.path.join(root, "README.md"))
+
+    findings = []
+
+    # ---- R0: malformed allow comments ----
+    for f in files:
+        for line, msg in lexmap[f].r0:
+            findings.append((f, line, "R0", msg))
+
+    # ---- R1: target registration <-> files ----
+    for kind, prefix in (
+        ("test", "rust/tests/"),
+        ("bench", "rust/benches/"),
+        ("example", "examples/"),
+    ):
+        regs = [t for t in cargo if t.kind == kind]
+        for f in files:
+            if f.startswith(prefix) and not any(t.path == f for t in regs):
+                findings.append((
+                    f,
+                    1,
+                    "R1",
+                    "unregistered %s target: add a [[%s]] entry with "
+                    'path = "%s" to Cargo.toml (autotests=false)'
+                    % (kind, kind, f),
+                ))
+        for t in regs:
+            if t.path and t.path.startswith(prefix) and t.path not in files:
+                findings.append((
+                    "Cargo.toml",
+                    t.path_line,
+                    "R1",
+                    "[[%s]] entry points at missing file `%s`"
+                    % (kind, t.path),
+                ))
+
+    # ---- per-file token rules ----
+    for f in files:
+        fl = lexmap[f]
+        code_toks = [fl.toks[i] for i in fl.code]
+        n = len(code_toks)
+
+        # R6: delimiter balance + lexer errors.
+        for line, msg in fl.errs:
+            findings.append((f, line, "R6", msg))
+        stack = []
+        for ct in code_toks:
+            tx = ct.text
+            line = ct.line
+            if tx in ("(", "[", "{"):
+                stack.append((tx, line))
+            elif tx in (")", "]", "}"):
+                if not stack:
+                    findings.append(
+                        (f, line, "R6", "unmatched closing `%s`" % tx)
+                    )
+                else:
+                    o, ol = stack.pop()
+                    want = {"(": ")", "[": "]", "{": "}"}[o]
+                    if tx != want:
+                        findings.append((
+                            f,
+                            line,
+                            "R6",
+                            "mismatched delimiters: `%s` (line %d) "
+                            "closed by `%s`" % (o, ol, tx),
+                        ))
+        for o, ol in stack:
+            findings.append(
+                (f, ol, "R6", "unclosed `%s` at end of file" % o)
+            )
+
+        # R2: determinism-contract files.
+        if f in R2_FILES:
+            for t in range(n):
+                if (
+                    code_toks[t].kind == "ident"
+                    and code_toks[t].text in R2_BANNED
+                    and not in_spans(fl.test_spans, t)
+                ):
+                    findings.append((
+                        f,
+                        code_toks[t].line,
+                        "R2",
+                        "nondeterminism-prone symbol `%s` in a "
+                        "decode-path file (S17 bitwise contract)"
+                        % code_toks[t].text,
+                    ))
+
+        # R3: serving-path panic freedom.
+        if f.startswith(R3_DIR) or f in R3_FILES:
+            for t in range(n):
+                if in_spans(fl.test_spans, t):
+                    continue
+                tx = code_toks[t].text
+                line = code_toks[t].line
+                if (
+                    code_toks[t].kind == "ident"
+                    and tx in R3_METHODS
+                    and t > 0
+                    and code_toks[t - 1].text == "."
+                    and t + 1 < n
+                    and code_toks[t + 1].text == "("
+                ):
+                    findings.append((
+                        f,
+                        line,
+                        "R3",
+                        "`.%s()` in serving-path code (S11: return a "
+                        "Result instead)" % tx,
+                    ))
+                elif (
+                    code_toks[t].kind == "ident"
+                    and tx in R3_MACROS
+                    and t + 1 < n
+                    and code_toks[t + 1].text == "!"
+                ):
+                    findings.append((
+                        f,
+                        line,
+                        "R3",
+                        "`%s!` in serving-path code (S11: return a "
+                        "Result instead)" % tx,
+                    ))
+                elif (
+                    tx == "["
+                    and t > 0
+                    and (
+                        code_toks[t - 1].kind == "ident"
+                        or code_toks[t - 1].text == ")"
+                        or code_toks[t - 1].text == "]"
+                    )
+                    and t + 2 < n
+                    and code_toks[t + 1].kind == "num"
+                    and code_toks[t + 2].text == "]"
+                ):
+                    findings.append((
+                        f,
+                        line,
+                        "R3",
+                        "integer-literal index `[%s]` in serving-path "
+                        "code (S11: use .get or a checked bound)"
+                        % code_toks[t + 1].text,
+                    ))
+
+        # R4: xla references must be pjrt-gated.
+        if not file_pjrt_gated(f, lexmap, cargo):
+            for t in range(n):
+                if (
+                    code_toks[t].kind == "ident"
+                    and code_toks[t].text == "xla"
+                    and not in_spans(fl.pjrt_spans, t)
+                ):
+                    findings.append((
+                        f,
+                        code_toks[t].line,
+                        "R4",
+                        "reference to the `xla` crate outside "
+                        '#[cfg(feature = "pjrt")]',
+                    ))
+
+    # ---- R5: doc coverage on the enforced surface ----
+    enforced = []
+    libfl = lexmap.get(LIB_RS)
+    if libfl is not None:
+        for name, _pjrt, docs_allowed in libfl.mod_decls:
+            if not docs_allowed and name not in enforced:
+                enforced.append(name)
+    for f in files:
+        if not f.startswith("rust/src/"):
+            continue
+        chain = mod_chain(f)
+        in_scope = f == LIB_RS or (chain and chain[0] in enforced)
+        if not in_scope or file_pjrt_gated(f, lexmap, cargo):
+            continue
+        fl = lexmap[f]
+        code_toks = [fl.toks[i] for i in fl.code]
+        n = len(code_toks)
+        dir_ = f[:f.rfind("/")] if "/" in f else ""
+        for t in range(n):
+            if code_toks[t].text != "pub" or code_toks[t].kind != "ident":
+                continue
+            if (
+                in_spans(fl.test_spans, t)
+                or in_spans(fl.pjrt_spans, t)
+                or in_spans(fl.docs_allow_spans, t)
+            ):
+                continue
+            if t + 1 >= n:
+                continue
+            nxt = code_toks[t + 1].text
+            if nxt == "(" or nxt == "use":
+                continue
+            if nxt == "mod" and t + 3 < n and code_toks[t + 3].text == ";":
+                name = code_toks[t + 2].text
+                sub = lexmap.get("%s/%s.rs" % (dir_, name))
+                if sub is None:
+                    sub = lexmap.get("%s/%s/mod.rs" % (dir_, name))
+                if sub is not None and has_inner_doc(sub):
+                    continue
+            if not documented(fl, fl.code[t]):
+                findings.append((
+                    f,
+                    code_toks[t].line,
+                    "R5",
+                    "undocumented `pub` item in a missing_docs-enforced "
+                    "module (cargo doc -D warnings will fail)",
+                ))
+
+    # ---- R7: CLI flags <-> README table <-> SchedulerConfig ----
+    mainfl = lexmap.get(MAIN_RS)
+    if mainfl is not None:
+        code_toks = [mainfl.toks[i] for i in mainfl.code]
+        n = len(code_toks)
+        used = []
+        for t in range(n):
+            if (
+                code_toks[t].kind == "ident"
+                and code_toks[t].text == "args"
+                and t + 4 < n
+                and code_toks[t + 1].text == "."
+                and code_toks[t + 2].kind == "ident"
+                and code_toks[t + 2].text in ARGS_API
+                and code_toks[t + 3].text == "("
+                and code_toks[t + 4].kind == "str"
+            ):
+                flag = unquote(code_toks[t + 4].text)
+                if not any(u == flag for u, _ in used):
+                    used.append((flag, code_toks[t].line))
+        main_doc_flags = []
+        for i in mainfl.code:
+            if mainfl.toks[i].kind == "str":
+                for fl2 in extract_flags(mainfl.toks[i].text):
+                    if fl2 not in main_doc_flags:
+                        main_doc_flags.append(fl2)
+        readme_flags = extract_flags(readme_text)
+        table_flags = []
+        for ln0, raw in enumerate(readme_text.split("\n")):
+            s = raw.removesuffix("\r").lstrip()
+            if not s.startswith("|"):
+                continue
+            cs = list(s)
+            cell = []
+            k = 1
+            while k < len(cs):
+                if cs[k] == "|" and cs[k - 1] != "\\":
+                    break
+                cell.append(cs[k])
+                k += 1
+            for flag in extract_flags("".join(cell)):
+                table_flags.append((flag, ln0 + 1))
+        # R7a: stale table rows.
+        for flag, ln in table_flags:
+            if not any(u == flag for u, _ in used):
+                findings.append((
+                    "README.md",
+                    ln,
+                    "R7",
+                    "README flag-table row names `--%s` but "
+                    "rust/src/main.rs never reads it" % flag,
+                ))
+        # R7b: undocumented flags.
+        for flag, ln in used:
+            if flag not in main_doc_flags and flag not in readme_flags:
+                findings.append((
+                    MAIN_RS,
+                    ln,
+                    "R7",
+                    "CLI flag `--%s` is undocumented (absent from the "
+                    "main.rs help text and README.md)" % flag,
+                ))
+        # R7c: SchedulerConfig fields.
+        schedfl = lexmap.get(SCHED_RS)
+        if schedfl is not None:
+            sc = [schedfl.toks[i] for i in schedfl.code]
+            sn = len(sc)
+            fields = []
+            t = 0
+            while t + 2 < sn:
+                if (
+                    sc[t].text == "struct"
+                    and sc[t + 1].text == "SchedulerConfig"
+                    and sc[t + 2].text == "{"
+                ):
+                    depth = 1
+                    m = t + 3
+                    while m < sn and depth > 0:
+                        tx = sc[m].text
+                        if tx in ("(", "[", "{"):
+                            depth += 1
+                        elif tx in (")", "]", "}"):
+                            depth -= 1
+                        elif (
+                            tx == "pub"
+                            and depth == 1
+                            and m + 2 < sn
+                            and sc[m + 1].kind == "ident"
+                            and sc[m + 2].text == ":"
+                        ):
+                            doc = ""
+                            p = schedfl.code[m]
+                            while p > 0:
+                                p -= 1
+                                tk = schedfl.toks[p]
+                                if tk.kind == "doc":
+                                    doc = "%s %s" % (tk.text, doc)
+                                elif tk.kind == "comment":
+                                    continue
+                                else:
+                                    break
+                            fields.append((
+                                sc[m + 1].text,
+                                sc[m + 1].line,
+                                extract_flags(doc),
+                            ))
+                        m += 1
+                    break
+                t += 1
+            table_set = [f2 for f2, _ in table_flags]
+            for field, line, doc_flags in fields:
+                kebab = field.replace("_", "-")
+                cands = [kebab]
+                for d in doc_flags:
+                    if d not in cands:
+                        cands.append(d)
+                wired = [
+                    c2 for c2 in cands if any(u == c2 for u, _ in used)
+                ]
+                if not wired:
+                    findings.append((
+                        SCHED_RS,
+                        line,
+                        "R7",
+                        "SchedulerConfig field `%s` has no CLI flag in "
+                        "main.rs (name its `--flag` in the field's doc "
+                        "comment)" % field,
+                    ))
+                elif not any(w in table_set for w in wired):
+                    findings.append((
+                        SCHED_RS,
+                        line,
+                        "R7",
+                        "SchedulerConfig flag `--%s` is missing from "
+                        "the README flag table" % wired[0],
+                    ))
+
+    # ---- suppression ----
+    kept = []
+    for fi in findings:
+        path, line, rule, _msg = fi
+        suppressed = False
+        if rule != "R0":
+            fl = lexmap.get(path)
+            if fl is not None:
+                lines = fl.allows.get(rule)
+                if lines is not None and line in lines:
+                    suppressed = True
+        if not suppressed:
+            kept.append(fi)
+
+    return kept, len(files)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def main(argv):
+    root = None
+    dump_file = None
+    i = 1
+    while i < len(argv):
+        a = argv[i]
+        if a == "--root" and i + 1 < len(argv):
+            root = argv[i + 1]
+            i += 2
+        elif a == "--dump-tokens" and i + 1 < len(argv):
+            dump_file = argv[i + 1]
+            i += 2
+        else:
+            sys.stderr.write(
+                "usage: lint.py [--root DIR] [--dump-tokens FILE]\n"
+            )
+            return 2
+    if dump_file is not None:
+        try:
+            with open(dump_file, "rb") as fh:
+                data = fh.read()
+        except OSError as e:
+            sys.stderr.write("error: %s\n" % e)
+            return 1
+        sys.stdout.write(dump(data.decode("utf-8", errors="replace")))
+        return 0
+    if root is None:
+        here = os.path.abspath(__file__)
+        root = os.path.dirname(os.path.dirname(os.path.dirname(here)))
+    findings, files_scanned = run(root)
+    sys.stdout.write(render(findings, files_scanned))
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

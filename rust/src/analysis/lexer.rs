@@ -1,0 +1,618 @@
+//! Error-tolerant Rust lexer for the `elitekv lint` static analyzer.
+//!
+//! Produces a flat token stream (identifiers, literals, comments,
+//! punctuation) with line/column anchors, handling every literal form the
+//! repo's own sources use: line/doc comments, nested block comments,
+//! cooked strings with escapes, raw strings `r#"…"#` at any hash depth,
+//! byte strings `b"…"`/`br#"…"#`, C strings `c"…"`/`cr#"…"#`, byte chars
+//! `b'…'`, char literals (including `'"'` and `'\''`), lifetimes, raw
+//! identifiers `r#ident`, and numeric literals with exponents.
+//!
+//! The lexer is *total*: malformed input (an unterminated string, say)
+//! never panics — it consumes to end of file and records a [`LexError`]
+//! that the rule engine surfaces as an R6 finding. Every consumed span is
+//! covered by exactly one token and tokens never overlap, a property the
+//! seeded soup tests pin (`gap chars are whitespace` + full coverage).
+//!
+//! `python/tools/lint.py` carries a statement-for-statement port of this
+//! file; the differential suite in `rust/tests/lint_tool.rs` pins the two
+//! to byte-identical `--dump-tokens` output and lint reports (DESIGN.md
+//! S21).
+
+/// Lexical class of a [`Token`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (includes raw identifiers `r#ident`).
+    Ident,
+    /// Numeric literal (integers, floats, any radix, with suffixes).
+    Num,
+    /// String-like literal: cooked, raw, byte, or C string.
+    Str,
+    /// Character or byte-character literal.
+    Char,
+    /// Lifetime such as `'a` or `'static`.
+    Lifetime,
+    /// Non-doc comment (line or block).
+    Comment,
+    /// Doc comment: `///`, `//!`, `/**`, or `/*!`.
+    Doc,
+    /// Any other single character (delimiters, operators, `#`, …).
+    Punct,
+}
+
+impl TokKind {
+    /// Stable lowercase name used by `--dump-tokens` (shared with the
+    /// Python port byte-for-byte).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TokKind::Ident => "ident",
+            TokKind::Num => "num",
+            TokKind::Str => "str",
+            TokKind::Char => "char",
+            TokKind::Lifetime => "lifetime",
+            TokKind::Comment => "comment",
+            TokKind::Doc => "doc",
+            TokKind::Punct => "punct",
+        }
+    }
+}
+
+/// One lexed token with its exact source text and position.
+#[derive(Clone, Debug)]
+pub struct Token {
+    /// Lexical class.
+    pub kind: TokKind,
+    /// Exact source text of the token (lossless).
+    pub text: String,
+    /// 1-based line of the token's first character.
+    pub line: usize,
+    /// 1-based column (in chars) of the token's first character.
+    pub col: usize,
+    /// Char offset of the first character in the source.
+    pub start: usize,
+    /// Char offset one past the last character.
+    pub end: usize,
+}
+
+/// A recoverable lexing problem (the lexer still consumed the input).
+#[derive(Clone, Debug)]
+pub struct LexError {
+    /// 1-based line where the malformed construct starts.
+    pub line: usize,
+    /// Human-readable description (stable across the Rust/Python pair).
+    pub msg: String,
+}
+
+fn is_id_start(c: char) -> bool {
+    (c as u32) >= 128 || c.is_ascii_alphabetic() || c == '_'
+}
+
+fn is_id_cont(c: char) -> bool {
+    (c as u32) >= 128 || c.is_ascii_alphanumeric() || c == '_'
+}
+
+fn is_ws(c: char) -> bool {
+    matches!(c, ' ' | '\t' | '\r' | '\n' | '\u{b}' | '\u{c}')
+}
+
+/// Scan a cooked (escape-processing) string body starting at the opening
+/// quote index `q`. Returns `(end, terminated)` where `end` is one past
+/// the closing quote (or the source length when unterminated).
+fn scan_cooked(c: &[char], q: usize) -> (usize, bool) {
+    let n = c.len();
+    let mut j = q + 1;
+    while j < n {
+        if c[j] == '\\' {
+            j += 2;
+            continue;
+        }
+        if c[j] == '"' {
+            return (j + 1, true);
+        }
+        j += 1;
+    }
+    (n, false)
+}
+
+/// Scan a raw string body: `j` points one past the opening quote and the
+/// closer is a quote followed by `hashes` `#` characters.
+fn scan_raw(c: &[char], j: usize, hashes: usize) -> (usize, bool) {
+    let n = c.len();
+    let mut j = j;
+    while j < n {
+        if c[j] == '"' {
+            let mut m = 0;
+            while m < hashes && j + 1 + m < n && c[j + 1 + m] == '#' {
+                m += 1;
+            }
+            if m == hashes {
+                return (j + 1 + hashes, true);
+            }
+        }
+        j += 1;
+    }
+    (n, false)
+}
+
+/// Scan a char-like literal whose opening quote is at `q`. Returns
+/// `None` when the quote does not start a char literal (a lifetime or a
+/// stray quote); otherwise `(end, terminated)`.
+fn scan_char_like(c: &[char], q: usize) -> Option<(usize, bool)> {
+    let n = c.len();
+    if q + 1 >= n {
+        return None;
+    }
+    if c[q + 1] == '\\' {
+        // Escaped char: consume the escaped character, then scan to the
+        // closing quote (handles `'\u{1f600}'` and `'\''`).
+        let mut j = q + 2;
+        if j < n {
+            j += 1;
+        }
+        while j < n && c[j] != '\'' && c[j] != '\n' {
+            j += 1;
+        }
+        if j < n && c[j] == '\'' {
+            return Some((j + 1, true));
+        }
+        return Some((j, false));
+    }
+    if q + 2 < n && c[q + 2] == '\'' && c[q + 1] != '\'' && c[q + 1] != '\n'
+    {
+        return Some((q + 3, true));
+    }
+    None
+}
+
+/// Scan a numeric literal starting at digit index `s`; returns the end.
+fn scan_number(c: &[char], s: usize) -> usize {
+    let n = c.len();
+    let mut i = s + 1;
+    let mut seen_dot = false;
+    while i < n {
+        let ch = c[i];
+        if ch.is_ascii_alphanumeric() || ch == '_' {
+            i += 1;
+        } else if ch == '.'
+            && !seen_dot
+            && i + 1 < n
+            && c[i + 1].is_ascii_digit()
+        {
+            seen_dot = true;
+            i += 1;
+        } else if (ch == '+' || ch == '-')
+            && (c[i - 1] == 'e' || c[i - 1] == 'E')
+            && i + 1 < n
+            && c[i + 1].is_ascii_digit()
+        {
+            i += 1;
+        } else {
+            break;
+        }
+    }
+    i
+}
+
+/// Literal-prefix probe at index `i`: for `r`/`b`/`c`/`br`/`cr` starts,
+/// classify what follows. Returns `(end, kind, err_msg)` when the prefix
+/// begins a literal (or raw identifier), `None` when it is a plain
+/// identifier start.
+fn scan_prefixed(c: &[char], i: usize) -> Option<(usize, TokKind, String)> {
+    let n = c.len();
+    let ch = c[i];
+    if ch != 'r' && ch != 'b' && ch != 'c' {
+        return None;
+    }
+    let mut pl = 1;
+    if (ch == 'b' || ch == 'c') && i + 1 < n && c[i + 1] == 'r' {
+        pl = 2;
+    }
+    let k = i + pl;
+    let mut h = 0;
+    while k + h < n && c[k + h] == '#' {
+        h += 1;
+    }
+    let raw_capable = (ch == 'r' && pl == 1) || pl == 2;
+    if raw_capable && k + h < n && c[k + h] == '"' {
+        let (end, ok) = scan_raw(c, k + h + 1, h);
+        let msg = if ok {
+            String::new()
+        } else {
+            "unterminated raw string literal".to_string()
+        };
+        return Some((end, TokKind::Str, msg));
+    }
+    if pl == 1 && h == 0 && (ch == 'b' || ch == 'c') && k < n && c[k] == '"'
+    {
+        let (end, ok) = scan_cooked(c, k);
+        let msg = if ok {
+            String::new()
+        } else {
+            "unterminated string literal".to_string()
+        };
+        return Some((end, TokKind::Str, msg));
+    }
+    if pl == 1 && h == 0 && ch == 'b' && k < n && c[k] == '\'' {
+        if let Some((end, ok)) = scan_char_like(c, k) {
+            let msg = if ok {
+                String::new()
+            } else {
+                "unterminated character literal".to_string()
+            };
+            return Some((end, TokKind::Char, msg));
+        }
+        return None;
+    }
+    if ch == 'r' && pl == 1 && h == 1 && k + 1 < n && is_id_start(c[k + 1])
+    {
+        // Raw identifier `r#ident`.
+        let mut j = k + 1;
+        while j < n && is_id_cont(c[j]) {
+            j += 1;
+        }
+        return Some((j, TokKind::Ident, String::new()));
+    }
+    None
+}
+
+/// Lex `src` to a complete token stream plus any recoverable errors.
+///
+/// Whitespace is skipped (token positions make it recoverable); every
+/// non-whitespace char lands in exactly one token.
+pub fn lex(src: &str) -> (Vec<Token>, Vec<LexError>) {
+    let c: Vec<char> = src.chars().collect();
+    let n = c.len();
+    let mut toks: Vec<Token> = Vec::new();
+    let mut errs: Vec<LexError> = Vec::new();
+    let mut i = 0;
+    let mut line = 1;
+    let mut col = 1;
+    while i < n {
+        let ch = c[i];
+        if is_ws(ch) {
+            i += 1;
+            if ch == '\n' {
+                line += 1;
+                col = 1;
+            } else {
+                col += 1;
+            }
+            continue;
+        }
+        let start = i;
+        let mut end = i + 1;
+        let mut kind = TokKind::Punct;
+        let mut err = String::new();
+        if ch == '/' && i + 1 < n && c[i + 1] == '/' {
+            let mut j = i + 2;
+            while j < n && c[j] != '\n' {
+                j += 1;
+            }
+            end = j;
+            let t: String = c[start..end].iter().collect();
+            kind = if (t.starts_with("///") && !t.starts_with("////"))
+                || t.starts_with("//!")
+            {
+                TokKind::Doc
+            } else {
+                TokKind::Comment
+            };
+        } else if ch == '/' && i + 1 < n && c[i + 1] == '*' {
+            let mut depth = 1;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if c[j] == '/' && j + 1 < n && c[j + 1] == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if c[j] == '*' && j + 1 < n && c[j + 1] == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            end = j;
+            if depth > 0 {
+                err = "unterminated block comment".to_string();
+            }
+            let t: String = c[start..end].iter().collect();
+            kind = if t.starts_with("/*!")
+                || (t.starts_with("/**")
+                    && !t.starts_with("/***")
+                    && t != "/**/")
+            {
+                TokKind::Doc
+            } else {
+                TokKind::Comment
+            };
+        } else if ch == '"' {
+            let (e, ok) = scan_cooked(&c, i);
+            end = e;
+            kind = TokKind::Str;
+            if !ok {
+                err = "unterminated string literal".to_string();
+            }
+        } else if ch == '\'' {
+            if let Some((e, ok)) = scan_char_like(&c, i) {
+                end = e;
+                kind = TokKind::Char;
+                if !ok {
+                    err = "unterminated character literal".to_string();
+                }
+            } else if i + 1 < n && is_id_start(c[i + 1]) {
+                let mut j = i + 1;
+                while j < n && is_id_cont(c[j]) {
+                    j += 1;
+                }
+                end = j;
+                kind = TokKind::Lifetime;
+            }
+        } else if ch.is_ascii_digit() {
+            end = scan_number(&c, i);
+            kind = TokKind::Num;
+        } else if is_id_start(ch) {
+            match scan_prefixed(&c, i) {
+                Some((e, k, msg)) => {
+                    end = e;
+                    kind = k;
+                    err = msg;
+                }
+                None => {
+                    let mut j = i + 1;
+                    while j < n && is_id_cont(c[j]) {
+                        j += 1;
+                    }
+                    end = j;
+                    kind = TokKind::Ident;
+                }
+            }
+        }
+        if !err.is_empty() {
+            errs.push(LexError { line, msg: err });
+        }
+        let text: String = c[start..end].iter().collect();
+        toks.push(Token { kind, text, line, col, start, end });
+        let consumed = end - start;
+        let mut nl = 0;
+        let mut last = 0;
+        for (off, ch2) in c[start..end].iter().enumerate() {
+            if *ch2 == '\n' {
+                nl += 1;
+                last = off;
+            }
+        }
+        if nl > 0 {
+            line += nl;
+            col = consumed - last;
+        } else {
+            col += consumed;
+        }
+        i = end;
+    }
+    (toks, errs)
+}
+
+/// Escape token text for `--dump-tokens`: printable ASCII passes
+/// through, everything else becomes `\n`/`\t`/`\r`/`\\` or `\u{xxxx}` —
+/// chosen so the Rust and Python dumps are byte-identical.
+pub fn escape(s: &str) -> String {
+    let mut out = String::new();
+    for ch in s.chars() {
+        if ch == '\\' {
+            out.push_str("\\\\");
+        } else if ch == '\n' {
+            out.push_str("\\n");
+        } else if ch == '\t' {
+            out.push_str("\\t");
+        } else if ch == '\r' {
+            out.push_str("\\r");
+        } else if (' '..='~').contains(&ch) {
+            out.push(ch);
+        } else {
+            out.push_str(&format!("\\u{{{:04x}}}", ch as u32));
+        }
+    }
+    out
+}
+
+/// Render the full `--dump-tokens` listing for `src` (one line per
+/// token, then one `error:` line per recoverable lex error).
+pub fn dump(src: &str) -> String {
+    let (toks, errs) = lex(src);
+    let mut out = String::new();
+    for t in &toks {
+        out.push_str(&format!(
+            "{}:{} {} {}\n",
+            t.line,
+            t.col,
+            t.kind.as_str(),
+            escape(&t.text)
+        ));
+    }
+    for e in &errs {
+        out.push_str(&format!("error:{} {}\n", e.line, escape(&e.msg)));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        let (toks, _) = lex(src);
+        toks.into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    fn texts_of(src: &str, kind: TokKind) -> Vec<String> {
+        kinds(src)
+            .into_iter()
+            .filter(|(k, _)| *k == kind)
+            .map(|(_, t)| t)
+            .collect()
+    }
+
+    #[test]
+    fn idents_numbers_punct() {
+        let ks = kinds("let x2 = 0x1f + 1.5e-3;");
+        let names: Vec<&str> =
+            ks.iter().map(|(_, t)| t.as_str()).collect();
+        assert_eq!(
+            names,
+            vec!["let", "x2", "=", "0x1f", "+", "1.5e-3", ";"]
+        );
+        assert_eq!(ks[3].0, TokKind::Num);
+        assert_eq!(ks[5].0, TokKind::Num);
+    }
+
+    #[test]
+    fn raw_string_with_hashes_and_inner_quotes() {
+        let src = r###"let s = r#"a "quoted" {brace"#;"###;
+        let strs = texts_of(src, TokKind::Str);
+        assert_eq!(strs, vec![r###"r#"a "quoted" {brace"#"###]);
+        // The { inside the raw string must not register as a delimiter:
+        let (toks, errs) = lex(src);
+        assert!(errs.is_empty());
+        assert!(toks.iter().all(|t| t.text != "{"));
+    }
+
+    #[test]
+    fn nested_raw_hash_depths() {
+        let src = "r##\"outer r#\"inner\"# still\"## end";
+        let strs = texts_of(src, TokKind::Str);
+        assert_eq!(strs, vec!["r##\"outer r#\"inner\"# still\"##"]);
+    }
+
+    #[test]
+    fn byte_and_c_strings() {
+        let src = "b\"bytes\" br#\"raw \" bytes\"# c\"cstr\" cr#\"x\"#";
+        let strs = texts_of(src, TokKind::Str);
+        assert_eq!(strs.len(), 4);
+        assert_eq!(strs[0], "b\"bytes\"");
+        assert_eq!(strs[1], "br#\"raw \" bytes\"#");
+    }
+
+    #[test]
+    fn char_literals_including_quote_chars() {
+        // '"' and '\'' are the classic scanner-breakers.
+        let src = "let a = '\"'; let b = '\\''; let c = '\\u{1f600}';";
+        let chars = texts_of(src, TokKind::Char);
+        assert_eq!(chars, vec!["'\"'", "'\\''", "'\\u{1f600}'"]);
+        let (_, errs) = lex(src);
+        assert!(errs.is_empty());
+    }
+
+    #[test]
+    fn byte_char_literal() {
+        let chars = texts_of("m(b'x', b'\\n')", TokKind::Char);
+        assert_eq!(chars, vec!["b'x'", "b'\\n'"]);
+    }
+
+    #[test]
+    fn lifetimes_vs_chars() {
+        let src = "fn f<'a>(x: &'a str) -> &'static str";
+        let lts = texts_of(src, TokKind::Lifetime);
+        assert_eq!(lts, vec!["'a", "'a", "'static"]);
+        assert!(texts_of(src, TokKind::Char).is_empty());
+    }
+
+    #[test]
+    fn block_comment_with_string_quotes_and_nesting() {
+        let src = "a /* \"not a string { */ b /* outer /* inner */ } */ c";
+        let ids = texts_of(src, TokKind::Ident);
+        assert_eq!(ids, vec!["a", "b", "c"]);
+        let comments = texts_of(src, TokKind::Comment);
+        assert_eq!(comments.len(), 2);
+    }
+
+    #[test]
+    fn doc_comment_classification() {
+        assert_eq!(texts_of("/// d", TokKind::Doc).len(), 1);
+        assert_eq!(texts_of("//! d", TokKind::Doc).len(), 1);
+        assert_eq!(texts_of("//// not doc", TokKind::Doc).len(), 0);
+        assert_eq!(texts_of("/** d */", TokKind::Doc).len(), 1);
+        assert_eq!(texts_of("/*! d */", TokKind::Doc).len(), 1);
+        assert_eq!(texts_of("/**/", TokKind::Doc).len(), 0);
+        assert_eq!(texts_of("// plain", TokKind::Comment).len(), 1);
+    }
+
+    #[test]
+    fn raw_identifier() {
+        let ks = kinds("let r#type = 1;");
+        assert_eq!(ks[1], (TokKind::Ident, "r#type".to_string()));
+    }
+
+    #[test]
+    fn hash_in_macros_is_punct() {
+        // `#` outside an attribute/raw-string context stays punctuation.
+        let ks = kinds("#[derive(Debug)] struct S;");
+        assert_eq!(ks[0], (TokKind::Punct, "#".to_string()));
+        assert_eq!(ks[1], (TokKind::Punct, "[".to_string()));
+    }
+
+    #[test]
+    fn unterminated_forms_are_total() {
+        for src in ["\"abc", "r#\"abc", "/* abc", "'\\x"] {
+            let (_, errs) = lex(src);
+            assert_eq!(errs.len(), 1, "src={src:?}");
+        }
+    }
+
+    #[test]
+    fn positions_track_lines_and_cols() {
+        let (toks, _) = lex("ab\n  cd \"x\ny\" ef");
+        assert_eq!((toks[0].line, toks[0].col), (1, 1));
+        assert_eq!((toks[1].line, toks[1].col), (2, 3));
+        assert_eq!((toks[2].line, toks[2].col), (2, 6)); // the string
+        assert_eq!((toks[3].line, toks[3].col), (3, 4)); // ef after it
+    }
+
+    #[test]
+    fn lossless_span_coverage() {
+        let src = "fn f() { r#\"x\"#; 'a'; /* c */ }\n";
+        let (toks, _) = lex(src);
+        let chars: Vec<char> = src.chars().collect();
+        let mut pos = 0;
+        for t in &toks {
+            assert!(t.start >= pos);
+            for &g in &chars[pos..t.start] {
+                assert!(is_ws(g));
+            }
+            let text: String = chars[t.start..t.end].iter().collect();
+            assert_eq!(text, t.text);
+            pos = t.end;
+        }
+        for &g in &chars[pos..] {
+            assert!(is_ws(g));
+        }
+    }
+
+    /// Regression for the PR-5 ad-hoc bracket scanner: `util/json.rs`
+    /// holds raw strings whose bodies contain unbalanced-looking quotes
+    /// and braces (e.g. `r#"{"config": …"#`); a scanner without raw
+    /// string handling miscounts them. The real lexer must see the
+    /// actual file as balanced with zero errors.
+    #[test]
+    fn util_json_raw_strings_lex_clean() {
+        let path = concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/rust/src/util/json.rs"
+        );
+        let src = std::fs::read_to_string(path).unwrap();
+        let (toks, errs) = lex(&src);
+        assert!(errs.is_empty(), "{errs:?}");
+        let mut depth: i64 = 0;
+        for t in &toks {
+            if t.kind == TokKind::Punct {
+                match t.text.as_str() {
+                    "(" | "[" | "{" => depth += 1,
+                    ")" | "]" | "}" => depth -= 1,
+                    _ => {}
+                }
+                assert!(depth >= 0, "negative depth at {}:{}", t.line,
+                        t.col);
+            }
+        }
+        assert_eq!(depth, 0, "util/json.rs must balance");
+    }
+}

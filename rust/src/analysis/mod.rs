@@ -1,0 +1,35 @@
+//! Static analysis for the repo's own contracts (`elitekv lint`).
+//!
+//! Three layers, each mirrored line-for-line by the toolchain-free
+//! runner `python/tools/lint.py` (the differential tests in
+//! `rust/tests/lint_tool.rs` pin both to byte-identical output):
+//!
+//! * [`lexer`] — a total, error-tolerant Rust lexer: comments
+//!   (nested blocks, doc classification), cooked/raw/byte/C strings
+//!   with arbitrary `#` depth, char vs lifetime disambiguation, raw
+//!   identifiers. Never panics on malformed input; unterminated forms
+//!   become [`lexer::LexError`]s and lexing continues.
+//! * [`rules`] — the rule engine R1–R7 (plus R0 for malformed
+//!   `// lint: allow(…)` control comments); see DESIGN.md S21 for the
+//!   catalog and each rule's contract of origin.
+//! * [`report`] — finding collection and byte-exact rendering
+//!   (`path:line rule message`, sorted and deduplicated, summary line).
+//!
+//! Entry point: [`run_lint`].
+
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+use std::path::Path;
+
+/// Lint the repository tree rooted at `root` and return the report.
+///
+/// Scans `rust/src`, `rust/tests`, `rust/benches`, and `examples` for
+/// `.rs` files (skipping lint fixture corpora), reads `Cargo.toml` and
+/// `README.md` as contract inputs, and applies every rule. The caller
+/// decides what to do with findings; `elitekv lint` renders the report
+/// and exits nonzero when [`report::Report::is_clean`] is false.
+pub fn run_lint(root: &Path) -> report::Report {
+    rules::run(root)
+}

@@ -1,0 +1,107 @@
+//! Finding collection and byte-exact report rendering for `elitekv
+//! lint`.
+//!
+//! The rendered report is a contract: `python/tools/lint.py` must emit
+//! the identical bytes for the same tree (pinned by the differential
+//! tests in `rust/tests/lint_tool.rs`), so ordering, dedup, and the
+//! summary line formats are all fixed here and mirrored there.
+
+/// One lint finding, anchored to a file and line.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    /// Root-relative path with forward slashes.
+    pub path: String,
+    /// 1-based anchor line (1 for file-level findings).
+    pub line: usize,
+    /// Rule identifier: `"R0"` … `"R7"`.
+    pub rule: &'static str,
+    /// Human-readable message (stable template text).
+    pub msg: String,
+}
+
+impl Finding {
+    /// Construct a finding (convenience for the rule engine).
+    pub fn new(
+        path: &str,
+        line: usize,
+        rule: &'static str,
+        msg: String,
+    ) -> Finding {
+        Finding { path: path.to_string(), line, rule, msg }
+    }
+}
+
+/// The result of a lint run: findings plus scan statistics.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    /// All surviving (non-suppressed) findings, unsorted.
+    pub findings: Vec<Finding>,
+    /// Number of `.rs` files lexed.
+    pub files_scanned: usize,
+}
+
+impl Report {
+    /// True when no findings survived suppression.
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Render the report: one `path:line rule message` line per finding
+    /// sorted by (path, line, rule, message) with exact duplicates
+    /// removed, then a summary line. Byte-identical to the Python
+    /// runner's output.
+    pub fn render(&self) -> String {
+        let mut sorted = self.findings.clone();
+        sorted.sort_by(|a, b| {
+            (&a.path, a.line, a.rule, &a.msg)
+                .cmp(&(&b.path, b.line, b.rule, &b.msg))
+        });
+        sorted.dedup();
+        let mut out = String::new();
+        for f in &sorted {
+            out.push_str(&format!(
+                "{}:{} {} {}\n",
+                f.path, f.line, f.rule, f.msg
+            ));
+        }
+        if sorted.is_empty() {
+            out.push_str(&format!(
+                "lint: clean ({} files scanned)\n",
+                self.files_scanned
+            ));
+        } else {
+            out.push_str(&format!(
+                "lint: {} finding(s) ({} files scanned)\n",
+                sorted.len(),
+                self.files_scanned
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_sorted_and_deduped() {
+        let mut r = Report { findings: vec![], files_scanned: 3 };
+        r.findings.push(Finding::new("b.rs", 2, "R3", "x".into()));
+        r.findings.push(Finding::new("a.rs", 9, "R6", "y".into()));
+        r.findings.push(Finding::new("b.rs", 2, "R3", "x".into()));
+        r.findings.push(Finding::new("b.rs", 2, "R2", "z".into()));
+        assert_eq!(
+            r.render(),
+            "a.rs:9 R6 y\nb.rs:2 R2 z\nb.rs:2 R3 x\n\
+             lint: 3 finding(s) (3 files scanned)\n"
+        );
+    }
+
+    #[test]
+    fn clean_summary() {
+        let r = Report { findings: vec![], files_scanned: 7 };
+        assert!(r.is_clean());
+        assert_eq!(r.render(), "lint: clean (7 files scanned)\n");
+    }
+}

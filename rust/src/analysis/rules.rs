@@ -1,0 +1,1155 @@
+//! The `elitekv lint` rule engine: this repo's contracts as checks.
+//!
+//! Rules (DESIGN.md S21 documents each with its contract of origin):
+//!
+//! * **R1** — every file under `rust/tests/`, `rust/benches/`, and
+//!   `examples/` is registered in `Cargo.toml` (the manifest sets
+//!   `autotests=false`, so an unregistered suite silently never runs),
+//!   and every registered target path exists.
+//! * **R2** — no nondeterminism-prone symbols (`HashMap`, `HashSet`,
+//!   `Instant`, `SystemTime`, …) in the decode-path files
+//!   `native/kernels.rs` / `native/model.rs` (the S17 bitwise contract).
+//! * **R3** — no `unwrap`/`expect`/`panic!`-family/integer-literal
+//!   indexing in serving-path modules (`coordinator/*`, `kvcache/radix`,
+//!   `kvcache/block`) outside `#[cfg(test)]` code (S11: a request must
+//!   fail as a `Result`, not kill the engine).
+//! * **R4** — references to the `xla` crate only under
+//!   `#[cfg(feature = "pjrt")]` gating (S14), whether per-item, via a
+//!   gated `mod` declaration chain, an inner `#![cfg…]`, or a
+//!   `required-features` target entry.
+//! * **R5** — every `pub` item visible to the default-feature `cargo
+//!   doc` in a `missing_docs`-enforced module (parsed from `lib.rs`)
+//!   carries a doc comment.
+//! * **R6** — balanced `()[]{}` per file with full string/char/comment
+//!   awareness (formalizing, and fixing the raw-string false positive
+//!   of, the PR-5 ad-hoc bracket scanner), plus any lexer error.
+//! * **R7** — CLI flags in `main.rs`, the README flag table, and
+//!   `SchedulerConfig` fields agree.
+//!
+//! Escape hatch: `// lint: allow(Rn[,Rn]) — reason` on (or directly
+//! above) the offending line suppresses those rules there; a missing
+//! reason or unknown rule is itself a finding (**R0**).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::lexer::{lex, LexError, TokKind, Token};
+use super::report::{Finding, Report};
+
+/// Directories scanned for `.rs` files (root-relative).
+const SCAN_DIRS: [&str; 4] =
+    ["rust/src", "rust/tests", "rust/benches", "examples"];
+/// Directory name holding lint test fixtures — never scanned.
+const SKIP_DIR: &str = "lint_fixtures";
+/// Files under the S17 determinism contract (R2).
+const R2_FILES: [&str; 2] =
+    ["rust/src/native/kernels.rs", "rust/src/native/model.rs"];
+/// Symbols R2 bans in those files.
+const R2_BANNED: [&str; 6] = [
+    "HashMap",
+    "HashSet",
+    "Instant",
+    "SystemTime",
+    "thread_rng",
+    "available_parallelism",
+];
+/// Serving-path scope for R3: one directory prefix...
+const R3_DIR: &str = "rust/src/coordinator/";
+/// ...plus individual kvcache files on the request path.
+const R3_FILES: [&str; 2] =
+    ["rust/src/kvcache/radix.rs", "rust/src/kvcache/block.rs"];
+/// Panicking macros R3 bans.
+const R3_MACROS: [&str; 4] =
+    ["panic", "unreachable", "todo", "unimplemented"];
+/// Panicking methods R3 bans.
+const R3_METHODS: [&str; 2] = ["unwrap", "expect"];
+/// `Args` accessor methods whose first argument names a CLI flag (R7).
+const ARGS_API: [&str; 7] =
+    ["get", "str_or", "usize_or", "u64_or", "f64_or", "has", "req"];
+/// Contract-input files (R1/R5/R7 anchors).
+const MAIN_RS: &str = "rust/src/main.rs";
+const LIB_RS: &str = "rust/src/lib.rs";
+const SCHED_RS: &str = "rust/src/coordinator/scheduler.rs";
+
+/// One parsed `#[…]` / `#![…]` attribute with classification inputs.
+#[derive(Clone, Debug)]
+struct Attr {
+    /// Code-token index of the leading `#`.
+    start_code: usize,
+    /// Code-token index of the closing `]`.
+    end_code: usize,
+    /// Original-token index of the leading `#`.
+    start_orig: usize,
+    /// Original-token index of the closing `]`.
+    end_orig: usize,
+    /// Inner attribute (`#![…]`)?
+    inner: bool,
+    /// Identifier tokens inside the brackets.
+    idents: Vec<String>,
+    /// Unquoted string-literal tokens inside the brackets.
+    strs: Vec<String>,
+}
+
+impl Attr {
+    fn is_testish(&self) -> bool {
+        self.idents.iter().any(|s| s == "test")
+    }
+
+    fn is_pjrt(&self) -> bool {
+        self.idents.iter().any(|s| s == "cfg")
+            && self.idents.iter().any(|s| s == "feature")
+            && !self.idents.iter().any(|s| s == "not")
+            && self.strs.iter().any(|s| s == "pjrt")
+    }
+
+    fn is_docs_allow(&self) -> bool {
+        self.idents.iter().any(|s| s == "allow")
+            && self.idents.iter().any(|s| s == "missing_docs")
+    }
+
+    fn is_doc(&self) -> bool {
+        self.idents.iter().any(|s| s == "doc")
+    }
+}
+
+/// A `mod name;` / `mod name {` declaration found in a file.
+#[derive(Clone, Debug)]
+struct ModDecl {
+    name: String,
+    /// Declared under a `#[cfg(feature = "pjrt")]` span?
+    pjrt: bool,
+    /// Declared under an `#[allow(missing_docs)]` span?
+    docs_allowed: bool,
+}
+
+/// Everything the rules need about one lexed `.rs` file.
+struct FileLex {
+    toks: Vec<Token>,
+    errs: Vec<LexError>,
+    /// Indices into `toks` of non-comment tokens.
+    code: Vec<usize>,
+    attrs: Vec<Attr>,
+    /// Code-index spans (inclusive) gated by test-ish attributes.
+    test_spans: Vec<(usize, usize)>,
+    /// Code-index spans (inclusive) gated on `feature = "pjrt"`.
+    pjrt_spans: Vec<(usize, usize)>,
+    /// Code-index spans (inclusive) under `#[allow(missing_docs)]`.
+    docs_allow_spans: Vec<(usize, usize)>,
+    /// File carries an inner `#![cfg(feature = "pjrt")]`.
+    inner_pjrt: bool,
+    mod_decls: Vec<ModDecl>,
+    /// `rule -> lines` where an allow comment suppresses findings.
+    allows: BTreeMap<String, Vec<usize>>,
+    /// R0 findings (malformed allow comments), path left empty.
+    r0: Vec<(usize, String)>,
+}
+
+fn in_spans(spans: &[(usize, usize)], idx: usize) -> bool {
+    spans.iter().any(|&(a, b)| a <= idx && idx <= b)
+}
+
+/// Find the code-token index closing the item that starts at `s`
+/// (after its attributes): the matching `}` of its body, its `;`, or a
+/// stray closer/end-of-file.
+fn find_item_end(code_toks: &[&Token], s: usize) -> usize {
+    let n = code_toks.len();
+    let mut depth: i64 = 0;
+    let mut m = s;
+    while m < n {
+        let t = code_toks[m].text.as_str();
+        if t == "(" || t == "[" {
+            depth += 1;
+        } else if t == ")" || t == "]" {
+            if depth == 0 {
+                return m;
+            }
+            depth -= 1;
+        } else if t == "{" {
+            if depth == 0 {
+                let mut d = 1i64;
+                let mut m2 = m + 1;
+                while m2 < n && d > 0 {
+                    let t2 = code_toks[m2].text.as_str();
+                    if t2 == "(" || t2 == "[" || t2 == "{" {
+                        d += 1;
+                    } else if t2 == ")" || t2 == "]" || t2 == "}" {
+                        d -= 1;
+                    }
+                    m2 += 1;
+                }
+                return if m2 > 0 { m2 - 1 } else { 0 };
+            }
+            depth += 1;
+        } else if t == "}" {
+            if depth == 0 {
+                return m;
+            }
+            depth -= 1;
+        } else if t == ";" && depth == 0 {
+            return m;
+        }
+        m += 1;
+    }
+    if n > 0 {
+        n - 1
+    } else {
+        0
+    }
+}
+
+/// Parse one allow comment body (text after `lint:`). Returns the list
+/// of suppressed rules, or an error message for R0.
+fn parse_allow_body(rest: &str) -> (Vec<String>, Option<String>) {
+    let malformed = "malformed lint control comment (grammar: \
+                     `// lint: allow(Rn[,Rn]) \u{2014} reason`)";
+    let rest = rest.trim();
+    if !rest.starts_with("allow(") {
+        return (Vec::new(), Some(malformed.to_string()));
+    }
+    let close = match rest.find(')') {
+        Some(c) => c,
+        None => return (Vec::new(), Some(malformed.to_string())),
+    };
+    let inside = &rest[6..close];
+    let mut rules: Vec<String> = Vec::new();
+    let mut err: Option<String> = None;
+    for part in inside.split(',') {
+        let p = part.trim();
+        let valid = p.len() == 2
+            && p.starts_with('R')
+            && ('1'..='7').contains(&p.chars().nth(1).unwrap_or('x'));
+        if valid {
+            rules.push(p.to_string());
+        } else {
+            err = Some(format!(
+                "unknown rule `{p}` in lint control comment"
+            ));
+        }
+    }
+    let mut tail = rest[close + 1..].trim_start();
+    let mut sep = false;
+    for s in ["\u{2014}", "\u{2013}", "-", ":"] {
+        if let Some(t) = tail.strip_prefix(s) {
+            tail = t;
+            sep = true;
+            break;
+        }
+    }
+    if !sep || tail.trim().is_empty() {
+        err = Some(malformed.to_string());
+    }
+    (rules, err)
+}
+
+/// Lex and structurally annotate one file.
+fn analyze(text: &str) -> FileLex {
+    let (toks, errs) = lex(text);
+    let mut code: Vec<usize> = Vec::new();
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind != TokKind::Comment && t.kind != TokKind::Doc {
+            code.push(i);
+        }
+    }
+    let code_toks: Vec<&Token> = code.iter().map(|&i| &toks[i]).collect();
+    let n = code_toks.len();
+
+    // ---- attributes ----
+    let mut attrs: Vec<Attr> = Vec::new();
+    let mut i = 0;
+    while i < n {
+        if code_toks[i].text == "#" {
+            let inner = i + 1 < n && code_toks[i + 1].text == "!";
+            let b = i + 1 + usize::from(inner);
+            if b < n && code_toks[b].text == "[" {
+                let mut depth = 1i64;
+                let mut k = b + 1;
+                while k < n && depth > 0 {
+                    let t = code_toks[k].text.as_str();
+                    if t == "[" {
+                        depth += 1;
+                    } else if t == "]" {
+                        depth -= 1;
+                    }
+                    if depth > 0 {
+                        k += 1;
+                    }
+                }
+                let end = k.min(n - 1);
+                let lo = (b + 1).min(n);
+                let hi = end.min(n).max(lo);
+                let mut idents: Vec<String> = Vec::new();
+                let mut strs: Vec<String> = Vec::new();
+                for ct in &code_toks[lo..hi] {
+                    if ct.kind == TokKind::Ident {
+                        idents.push(ct.text.clone());
+                    } else if ct.kind == TokKind::Str {
+                        strs.push(unquote(&ct.text));
+                    }
+                }
+                attrs.push(Attr {
+                    start_code: i,
+                    end_code: end,
+                    start_orig: code[i],
+                    end_orig: code[end],
+                    inner,
+                    idents,
+                    strs,
+                });
+                i = end + 1;
+                continue;
+            }
+        }
+        i += 1;
+    }
+
+    // ---- attribute chains -> item spans ----
+    let mut test_spans: Vec<(usize, usize)> = Vec::new();
+    let mut pjrt_spans: Vec<(usize, usize)> = Vec::new();
+    let mut docs_allow_spans: Vec<(usize, usize)> = Vec::new();
+    let mut inner_pjrt = false;
+    let mut j = 0;
+    while j < attrs.len() {
+        if attrs[j].inner {
+            if attrs[j].is_pjrt() {
+                inner_pjrt = true;
+            }
+            j += 1;
+            continue;
+        }
+        let chain_start = j;
+        while j + 1 < attrs.len()
+            && !attrs[j + 1].inner
+            && attrs[j + 1].start_code == attrs[j].end_code + 1
+        {
+            j += 1;
+        }
+        let item_start = attrs[j].end_code + 1;
+        let item_end = find_item_end(&code_toks, item_start);
+        let span = (attrs[chain_start].start_code, item_end);
+        for a in &attrs[chain_start..=j] {
+            if a.is_testish() {
+                test_spans.push(span);
+            }
+            if a.is_pjrt() {
+                pjrt_spans.push(span);
+            }
+            if a.is_docs_allow() {
+                docs_allow_spans.push(span);
+            }
+        }
+        j += 1;
+    }
+
+    // ---- mod declarations ----
+    let mut mod_decls: Vec<ModDecl> = Vec::new();
+    for t in 0..n {
+        if code_toks[t].text == "mod"
+            && code_toks[t].kind == TokKind::Ident
+            && t + 1 < n
+            && code_toks[t + 1].kind == TokKind::Ident
+        {
+            mod_decls.push(ModDecl {
+                name: code_toks[t + 1].text.clone(),
+                pjrt: in_spans(&pjrt_spans, t),
+                docs_allowed: in_spans(&docs_allow_spans, t),
+            });
+        }
+    }
+
+    // ---- allow comments ----
+    let mut allows: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+    let mut r0: Vec<(usize, String)> = Vec::new();
+    for (ti, tok) in toks.iter().enumerate() {
+        if tok.kind != TokKind::Comment && tok.kind != TokKind::Doc {
+            continue;
+        }
+        if !tok.text.starts_with("//") {
+            continue;
+        }
+        let body = tok.text[2..]
+            .trim_start_matches(&['/', '!'][..])
+            .trim_start();
+        let Some(rest) = body.strip_prefix("lint:") else {
+            continue;
+        };
+        let (rules, err) = parse_allow_body(rest);
+        if let Some(msg) = err {
+            r0.push((tok.line, msg));
+        }
+        let mut target = tok.line;
+        for t2 in &toks[ti + 1..] {
+            if t2.kind != TokKind::Comment && t2.kind != TokKind::Doc {
+                target = t2.line;
+                break;
+            }
+        }
+        for r in rules {
+            let e = allows.entry(r).or_default();
+            e.push(tok.line);
+            e.push(target);
+        }
+    }
+
+    FileLex {
+        toks,
+        errs,
+        code,
+        attrs,
+        test_spans,
+        pjrt_spans,
+        docs_allow_spans,
+        inner_pjrt,
+        mod_decls,
+        allows,
+        r0,
+    }
+}
+
+fn unquote(s: &str) -> String {
+    let mut t = s;
+    for p in ["br", "cr", "r", "b", "c"] {
+        if let Some(rest) = t.strip_prefix(p) {
+            if rest.starts_with(&['"', '#', '\''][..]) {
+                t = rest;
+                break;
+            }
+        }
+    }
+    let t = t.trim_matches('#');
+    t.trim_matches(&['"', '\''][..]).to_string()
+}
+
+/// Extract `--flag` names from free text (README prose, help strings,
+/// doc comments). A flag starts with `--[a-z]` and continues over
+/// `[a-z0-9-]`; first-occurrence order, deduplicated.
+fn extract_flags(text: &str) -> Vec<String> {
+    let c: Vec<char> = text.chars().collect();
+    let n = c.len();
+    let mut out: Vec<String> = Vec::new();
+    let mut i = 0;
+    while i + 2 < n {
+        if c[i] == '-'
+            && c[i + 1] == '-'
+            && (i == 0 || c[i - 1] != '-')
+            && c[i + 2].is_ascii_lowercase()
+        {
+            let mut j = i + 2;
+            while j < n
+                && (c[j].is_ascii_lowercase()
+                    || c[j].is_ascii_digit()
+                    || c[j] == '-')
+            {
+                j += 1;
+            }
+            let flag: String = c[i + 2..j].iter().collect();
+            let flag = flag.trim_end_matches('-').to_string();
+            if !flag.is_empty() && !out.contains(&flag) {
+                out.push(flag);
+            }
+            i = j;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// One `[[test]]`/`[[bench]]`/`[[example]]` entry from `Cargo.toml`.
+struct CargoTarget {
+    kind: String,
+    path: String,
+    path_line: usize,
+    required: Vec<String>,
+}
+
+/// Line-based parse of the target tables in `Cargo.toml` (no TOML dep).
+fn parse_cargo(text: &str) -> Vec<CargoTarget> {
+    let mut targets: Vec<CargoTarget> = Vec::new();
+    let mut current = false;
+    for (ln0, raw) in text.lines().enumerate() {
+        let ln = ln0 + 1;
+        let mut line = String::new();
+        let mut in_str = false;
+        for ch in raw.chars() {
+            if ch == '"' {
+                in_str = !in_str;
+            }
+            if ch == '#' && !in_str {
+                break;
+            }
+            line.push(ch);
+        }
+        let s = line.trim();
+        if s.starts_with("[[") {
+            let name = s.trim_matches(&['[', ']'][..]).to_string();
+            if name == "test" || name == "bench" || name == "example" {
+                targets.push(CargoTarget {
+                    kind: name,
+                    path: String::new(),
+                    path_line: ln,
+                    required: Vec::new(),
+                });
+                current = true;
+            } else {
+                current = false;
+            }
+            continue;
+        }
+        if s.starts_with('[') {
+            current = false;
+            continue;
+        }
+        if !current {
+            continue;
+        }
+        let Some((key, val)) = s.split_once('=') else { continue };
+        let key = key.trim();
+        let quoted: Vec<String> = val
+            .split('"')
+            .skip(1)
+            .step_by(2)
+            .map(|x| x.to_string())
+            .collect();
+        if let Some(t) = targets.last_mut() {
+            if key == "path" && !quoted.is_empty() {
+                t.path = quoted[0].clone();
+                t.path_line = ln;
+            } else if key == "required-features" {
+                t.required = quoted;
+            }
+        }
+    }
+    targets
+}
+
+/// Recursive `.rs` discovery under the scan dirs, sorted, fixture
+/// directories excluded.
+fn discover(root: &Path) -> Vec<String> {
+    fn walk(dir: &Path, rel: &str, out: &mut Vec<String>) {
+        let Ok(rd) = std::fs::read_dir(dir) else { return };
+        let mut names: Vec<String> = Vec::new();
+        for e in rd.flatten() {
+            names.push(e.file_name().to_string_lossy().to_string());
+        }
+        names.sort();
+        for name in names {
+            let p = dir.join(&name);
+            let r = format!("{rel}/{name}");
+            if p.is_dir() {
+                if name != SKIP_DIR {
+                    walk(&p, &r, out);
+                }
+            } else if name.ends_with(".rs") {
+                out.push(r);
+            }
+        }
+    }
+    let mut out = Vec::new();
+    for d in SCAN_DIRS {
+        walk(&root.join(d), d, &mut out);
+    }
+    out.sort();
+    out
+}
+
+/// Module-chain names of a `rust/src` file: `rust/src/a/b.rs` ->
+/// `[a, b]`, `rust/src/a/mod.rs` -> `[a]`, `lib.rs`/`main.rs` -> `[]`.
+fn mod_chain(rel: &str) -> Vec<String> {
+    let Some(sub) = rel.strip_prefix("rust/src/") else {
+        return Vec::new();
+    };
+    let comps: Vec<&str> = sub.split('/').collect();
+    let mut names: Vec<String> = Vec::new();
+    for (k, comp) in comps.iter().enumerate() {
+        if k + 1 == comps.len() {
+            let stem = comp.trim_end_matches(".rs");
+            if stem != "mod" && stem != "lib" && stem != "main" {
+                names.push(stem.to_string());
+            }
+        } else {
+            names.push(comp.to_string());
+        }
+    }
+    names
+}
+
+/// Is a whole file compiled only under `--features pjrt`?
+fn file_pjrt_gated(
+    rel: &str,
+    lexmap: &BTreeMap<String, FileLex>,
+    cargo: &[CargoTarget],
+) -> bool {
+    if let Some(fl) = lexmap.get(rel) {
+        if fl.inner_pjrt {
+            return true;
+        }
+    }
+    if rel.starts_with("rust/src/") {
+        let names = mod_chain(rel);
+        for i in 0..names.len() {
+            let decl_file = if i == 0 {
+                LIB_RS.to_string()
+            } else {
+                format!("rust/src/{}/mod.rs", names[..i].join("/"))
+            };
+            if let Some(fl) = lexmap.get(&decl_file) {
+                for d in &fl.mod_decls {
+                    if d.name == names[i] && d.pjrt {
+                        return true;
+                    }
+                }
+            }
+        }
+        return false;
+    }
+    cargo.iter().any(|t| {
+        t.path == rel && t.required.iter().any(|r| r == "pjrt")
+    })
+}
+
+/// Does a module file open with inner docs (`//!` / `/*!`)?
+fn has_inner_doc(fl: &FileLex) -> bool {
+    for t in &fl.toks {
+        if t.kind == TokKind::Comment {
+            continue;
+        }
+        return t.kind == TokKind::Doc
+            && (t.text.starts_with("//!") || t.text.starts_with("/*!"));
+    }
+    false
+}
+
+/// Is the `pub` at original-token index `oi` documented? Walks back
+/// over plain comments and attributes; a doc comment, `#[doc…]`, or
+/// `#[allow(missing_docs)]` satisfies it.
+fn documented(fl: &FileLex, oi: usize) -> bool {
+    let by_end: BTreeMap<usize, &Attr> =
+        fl.attrs.iter().map(|a| (a.end_orig, a)).collect();
+    let mut p = oi;
+    while p > 0 {
+        p -= 1;
+        let tok = &fl.toks[p];
+        if tok.kind == TokKind::Doc {
+            return true;
+        }
+        if tok.kind == TokKind::Comment {
+            continue;
+        }
+        if let Some(a) = by_end.get(&p) {
+            if a.is_doc() || a.is_docs_allow() {
+                return true;
+            }
+            if a.start_orig == 0 {
+                return false;
+            }
+            p = a.start_orig;
+            continue;
+        }
+        return false;
+    }
+    false
+}
+
+/// Run every rule over the tree at `root` and return the report.
+pub fn run(root: &Path) -> Report {
+    let files = discover(root);
+    let mut lexmap: BTreeMap<String, FileLex> = BTreeMap::new();
+    for f in &files {
+        let bytes = std::fs::read(root.join(f)).unwrap_or_default();
+        let text = String::from_utf8_lossy(&bytes).to_string();
+        lexmap.insert(f.clone(), analyze(&text));
+    }
+    let cargo_text = std::fs::read(root.join("Cargo.toml"))
+        .map(|b| String::from_utf8_lossy(&b).to_string())
+        .unwrap_or_default();
+    let readme_text = std::fs::read(root.join("README.md"))
+        .map(|b| String::from_utf8_lossy(&b).to_string())
+        .unwrap_or_default();
+    let cargo = parse_cargo(&cargo_text);
+
+    let mut findings: Vec<Finding> = Vec::new();
+
+    // ---- R0: malformed allow comments ----
+    for f in &files {
+        for (line, msg) in &lexmap[f].r0 {
+            findings.push(Finding::new(f, *line, "R0", msg.clone()));
+        }
+    }
+
+    // ---- R1: target registration <-> files ----
+    for (kind, prefix) in [
+        ("test", "rust/tests/"),
+        ("bench", "rust/benches/"),
+        ("example", "examples/"),
+    ] {
+        let regs: Vec<&CargoTarget> =
+            cargo.iter().filter(|t| t.kind == kind).collect();
+        for f in &files {
+            if f.starts_with(prefix)
+                && !regs.iter().any(|t| &t.path == f)
+            {
+                findings.push(Finding::new(
+                    f,
+                    1,
+                    "R1",
+                    format!(
+                        "unregistered {kind} target: add a [[{kind}]] \
+                         entry with path = \"{f}\" to Cargo.toml \
+                         (autotests=false)"
+                    ),
+                ));
+            }
+        }
+        for t in regs {
+            if !t.path.is_empty()
+                && t.path.starts_with(prefix)
+                && !files.contains(&t.path)
+            {
+                findings.push(Finding::new(
+                    "Cargo.toml",
+                    t.path_line,
+                    "R1",
+                    format!(
+                        "[[{kind}]] entry points at missing file `{}`",
+                        t.path
+                    ),
+                ));
+            }
+        }
+    }
+
+    // ---- per-file token rules ----
+    for f in &files {
+        let fl = &lexmap[f];
+        let code_toks: Vec<&Token> =
+            fl.code.iter().map(|&i| &fl.toks[i]).collect();
+        let n = code_toks.len();
+
+        // R6: delimiter balance + lexer errors.
+        for e in &fl.errs {
+            findings.push(Finding::new(f, e.line, "R6", e.msg.clone()));
+        }
+        let mut stack: Vec<(String, usize)> = Vec::new();
+        for ct in &code_toks {
+            let tx = ct.text.as_str();
+            let line = ct.line;
+            if tx == "(" || tx == "[" || tx == "{" {
+                stack.push((tx.to_string(), line));
+            } else if tx == ")" || tx == "]" || tx == "}" {
+                match stack.pop() {
+                    None => findings.push(Finding::new(
+                        f,
+                        line,
+                        "R6",
+                        format!("unmatched closing `{tx}`"),
+                    )),
+                    Some((o, ol)) => {
+                        let want = match o.as_str() {
+                            "(" => ")",
+                            "[" => "]",
+                            _ => "}",
+                        };
+                        if tx != want {
+                            findings.push(Finding::new(
+                                f,
+                                line,
+                                "R6",
+                                format!(
+                                    "mismatched delimiters: `{o}` \
+                                     (line {ol}) closed by `{tx}`"
+                                ),
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        for (o, ol) in &stack {
+            findings.push(Finding::new(
+                f,
+                *ol,
+                "R6",
+                format!("unclosed `{o}` at end of file"),
+            ));
+        }
+
+        // R2: determinism-contract files.
+        if R2_FILES.contains(&f.as_str()) {
+            for t in 0..n {
+                if code_toks[t].kind == TokKind::Ident
+                    && R2_BANNED.contains(&code_toks[t].text.as_str())
+                    && !in_spans(&fl.test_spans, t)
+                {
+                    findings.push(Finding::new(
+                        f,
+                        code_toks[t].line,
+                        "R2",
+                        format!(
+                            "nondeterminism-prone symbol `{}` in a \
+                             decode-path file (S17 bitwise contract)",
+                            code_toks[t].text
+                        ),
+                    ));
+                }
+            }
+        }
+
+        // R3: serving-path panic freedom.
+        if f.starts_with(R3_DIR) || R3_FILES.contains(&f.as_str()) {
+            for t in 0..n {
+                if in_spans(&fl.test_spans, t) {
+                    continue;
+                }
+                let tx = code_toks[t].text.as_str();
+                let line = code_toks[t].line;
+                if code_toks[t].kind == TokKind::Ident
+                    && R3_METHODS.contains(&tx)
+                    && t > 0
+                    && code_toks[t - 1].text == "."
+                    && t + 1 < n
+                    && code_toks[t + 1].text == "("
+                {
+                    findings.push(Finding::new(
+                        f,
+                        line,
+                        "R3",
+                        format!(
+                            "`.{tx}()` in serving-path code (S11: \
+                             return a Result instead)"
+                        ),
+                    ));
+                } else if code_toks[t].kind == TokKind::Ident
+                    && R3_MACROS.contains(&tx)
+                    && t + 1 < n
+                    && code_toks[t + 1].text == "!"
+                {
+                    findings.push(Finding::new(
+                        f,
+                        line,
+                        "R3",
+                        format!(
+                            "`{tx}!` in serving-path code (S11: \
+                             return a Result instead)"
+                        ),
+                    ));
+                } else if tx == "["
+                    && t > 0
+                    && (code_toks[t - 1].kind == TokKind::Ident
+                        || code_toks[t - 1].text == ")"
+                        || code_toks[t - 1].text == "]")
+                    && t + 2 < n
+                    && code_toks[t + 1].kind == TokKind::Num
+                    && code_toks[t + 2].text == "]"
+                {
+                    findings.push(Finding::new(
+                        f,
+                        line,
+                        "R3",
+                        format!(
+                            "integer-literal index `[{}]` in \
+                             serving-path code (S11: use .get or a \
+                             checked bound)",
+                            code_toks[t + 1].text
+                        ),
+                    ));
+                }
+            }
+        }
+
+        // R4: xla references must be pjrt-gated.
+        if !file_pjrt_gated(f, &lexmap, &cargo) {
+            for t in 0..n {
+                if code_toks[t].kind == TokKind::Ident
+                    && code_toks[t].text == "xla"
+                    && !in_spans(&fl.pjrt_spans, t)
+                {
+                    findings.push(Finding::new(
+                        f,
+                        code_toks[t].line,
+                        "R4",
+                        "reference to the `xla` crate outside \
+                         #[cfg(feature = \"pjrt\")]"
+                            .to_string(),
+                    ));
+                }
+            }
+        }
+    }
+
+    // ---- R5: doc coverage on the enforced surface ----
+    let mut enforced: Vec<String> = Vec::new();
+    if let Some(libfl) = lexmap.get(LIB_RS) {
+        for d in &libfl.mod_decls {
+            if !d.docs_allowed && !enforced.contains(&d.name) {
+                enforced.push(d.name.clone());
+            }
+        }
+    }
+    for f in &files {
+        if !f.starts_with("rust/src/") {
+            continue;
+        }
+        let chain = mod_chain(f);
+        let in_scope = f == LIB_RS
+            || (!chain.is_empty() && enforced.contains(&chain[0]));
+        if !in_scope || file_pjrt_gated(f, &lexmap, &cargo) {
+            continue;
+        }
+        let fl = &lexmap[f];
+        let code_toks: Vec<&Token> =
+            fl.code.iter().map(|&i| &fl.toks[i]).collect();
+        let n = code_toks.len();
+        let dir = match f.rfind('/') {
+            Some(p) => &f[..p],
+            None => "",
+        };
+        for t in 0..n {
+            if code_toks[t].text != "pub"
+                || code_toks[t].kind != TokKind::Ident
+            {
+                continue;
+            }
+            if in_spans(&fl.test_spans, t)
+                || in_spans(&fl.pjrt_spans, t)
+                || in_spans(&fl.docs_allow_spans, t)
+            {
+                continue;
+            }
+            if t + 1 >= n {
+                continue;
+            }
+            let nxt = code_toks[t + 1].text.as_str();
+            if nxt == "(" || nxt == "use" {
+                continue;
+            }
+            if nxt == "mod"
+                && t + 3 < n
+                && code_toks[t + 3].text == ";"
+            {
+                let name = &code_toks[t + 2].text;
+                let cand1 = format!("{dir}/{name}.rs");
+                let cand2 = format!("{dir}/{name}/mod.rs");
+                let sub = lexmap.get(&cand1).or_else(|| {
+                    lexmap.get(&cand2)
+                });
+                if let Some(sfl) = sub {
+                    if has_inner_doc(sfl) {
+                        continue;
+                    }
+                }
+            }
+            if !documented(fl, fl.code[t]) {
+                findings.push(Finding::new(
+                    f,
+                    code_toks[t].line,
+                    "R5",
+                    "undocumented `pub` item in a \
+                     missing_docs-enforced module (cargo doc -D \
+                     warnings will fail)"
+                        .to_string(),
+                ));
+            }
+        }
+    }
+
+    // ---- R7: CLI flags <-> README table <-> SchedulerConfig ----
+    if let Some(mainfl) = lexmap.get(MAIN_RS) {
+        let code_toks: Vec<&Token> =
+            mainfl.code.iter().map(|&i| &mainfl.toks[i]).collect();
+        let n = code_toks.len();
+        let mut used: Vec<(String, usize)> = Vec::new();
+        for t in 0..n {
+            if code_toks[t].kind == TokKind::Ident
+                && code_toks[t].text == "args"
+                && t + 4 < n
+                && code_toks[t + 1].text == "."
+                && code_toks[t + 2].kind == TokKind::Ident
+                && ARGS_API.contains(&code_toks[t + 2].text.as_str())
+                && code_toks[t + 3].text == "("
+                && code_toks[t + 4].kind == TokKind::Str
+            {
+                let flag = unquote(&code_toks[t + 4].text);
+                if !used.iter().any(|(u, _)| *u == flag) {
+                    used.push((flag, code_toks[t].line));
+                }
+            }
+        }
+        let mut main_doc_flags: Vec<String> = Vec::new();
+        for &i in &mainfl.code {
+            if mainfl.toks[i].kind == TokKind::Str {
+                for fl2 in extract_flags(&mainfl.toks[i].text) {
+                    if !main_doc_flags.contains(&fl2) {
+                        main_doc_flags.push(fl2);
+                    }
+                }
+            }
+        }
+        let readme_flags = extract_flags(&readme_text);
+        let mut table_flags: Vec<(String, usize)> = Vec::new();
+        for (ln0, raw) in readme_text.lines().enumerate() {
+            let s = raw.trim_start();
+            if !s.starts_with('|') {
+                continue;
+            }
+            let cs: Vec<char> = s.chars().collect();
+            let mut cell = String::new();
+            let mut k = 1;
+            while k < cs.len() {
+                if cs[k] == '|' && cs[k - 1] != '\\' {
+                    break;
+                }
+                cell.push(cs[k]);
+                k += 1;
+            }
+            for flag in extract_flags(&cell) {
+                table_flags.push((flag, ln0 + 1));
+            }
+        }
+        // R7a: stale table rows.
+        for (flag, ln) in &table_flags {
+            if !used.iter().any(|(u, _)| u == flag) {
+                findings.push(Finding::new(
+                    "README.md",
+                    *ln,
+                    "R7",
+                    format!(
+                        "README flag-table row names `--{flag}` but \
+                         rust/src/main.rs never reads it"
+                    ),
+                ));
+            }
+        }
+        // R7b: undocumented flags.
+        for (flag, ln) in &used {
+            if !main_doc_flags.contains(flag)
+                && !readme_flags.contains(flag)
+            {
+                findings.push(Finding::new(
+                    MAIN_RS,
+                    *ln,
+                    "R7",
+                    format!(
+                        "CLI flag `--{flag}` is undocumented (absent \
+                         from the main.rs help text and README.md)"
+                    ),
+                ));
+            }
+        }
+        // R7c: SchedulerConfig fields.
+        if let Some(schedfl) = lexmap.get(SCHED_RS) {
+            let sc: Vec<&Token> =
+                schedfl.code.iter().map(|&i| &schedfl.toks[i]).collect();
+            let sn = sc.len();
+            let mut fields: Vec<(String, usize, Vec<String>)> =
+                Vec::new();
+            let mut t = 0;
+            while t + 2 < sn {
+                if sc[t].text == "struct"
+                    && sc[t + 1].text == "SchedulerConfig"
+                    && sc[t + 2].text == "{"
+                {
+                    let mut depth = 1i64;
+                    let mut m = t + 3;
+                    while m < sn && depth > 0 {
+                        let tx = sc[m].text.as_str();
+                        if tx == "(" || tx == "[" || tx == "{" {
+                            depth += 1;
+                        } else if tx == ")" || tx == "]" || tx == "}" {
+                            depth -= 1;
+                        } else if tx == "pub"
+                            && depth == 1
+                            && m + 2 < sn
+                            && sc[m + 1].kind == TokKind::Ident
+                            && sc[m + 2].text == ":"
+                        {
+                            let mut doc = String::new();
+                            let mut p = schedfl.code[m];
+                            // Walk back over the original stream
+                            // collecting contiguous doc comments.
+                            while p > 0 {
+                                p -= 1;
+                                let tk = &schedfl.toks[p];
+                                if tk.kind == TokKind::Doc {
+                                    doc = format!("{} {doc}", tk.text);
+                                } else if tk.kind == TokKind::Comment {
+                                    continue;
+                                } else {
+                                    break;
+                                }
+                            }
+                            fields.push((
+                                sc[m + 1].text.clone(),
+                                sc[m + 1].line,
+                                extract_flags(&doc),
+                            ));
+                        }
+                        m += 1;
+                    }
+                    break;
+                }
+                t += 1;
+            }
+            let table_set: Vec<String> = table_flags
+                .iter()
+                .map(|(f2, _)| f2.clone())
+                .collect();
+            for (field, line, doc_flags) in &fields {
+                let kebab = field.replace('_', "-");
+                let mut cands: Vec<String> = vec![kebab];
+                for d in doc_flags {
+                    if !cands.contains(d) {
+                        cands.push(d.clone());
+                    }
+                }
+                let wired: Vec<&String> = cands
+                    .iter()
+                    .filter(|c2| {
+                        used.iter().any(|(u, _)| u == *c2)
+                    })
+                    .collect();
+                if wired.is_empty() {
+                    findings.push(Finding::new(
+                        SCHED_RS,
+                        *line,
+                        "R7",
+                        format!(
+                            "SchedulerConfig field `{field}` has no \
+                             CLI flag in main.rs (name its `--flag` \
+                             in the field's doc comment)"
+                        ),
+                    ));
+                } else if !wired
+                    .iter()
+                    .any(|w| table_set.iter().any(|tf| tf == *w))
+                {
+                    findings.push(Finding::new(
+                        SCHED_RS,
+                        *line,
+                        "R7",
+                        format!(
+                            "SchedulerConfig flag `--{}` is missing \
+                             from the README flag table",
+                            wired[0]
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+
+    // ---- suppression ----
+    let mut kept: Vec<Finding> = Vec::new();
+    for fi in findings {
+        let suppressed = fi.rule != "R0"
+            && lexmap
+                .get(&fi.path)
+                .and_then(|fl| fl.allows.get(fi.rule))
+                .map(|lines| lines.contains(&fi.line))
+                .unwrap_or(false);
+        if !suppressed {
+            kept.push(fi);
+        }
+    }
+
+    Report { findings: kept, files_scanned: files.len() }
+}

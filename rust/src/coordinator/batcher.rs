@@ -142,6 +142,8 @@ impl AdmissionQueue {
                 // Defensive: an empty or over-long prompt that slipped
                 // past `admissible` must not panic/error the engine loop
                 // (prefill requires 1 <= len < window). Drop it.
+                // lint: allow(R3) — `front` above proves the queue is
+                // non-empty.
                 let req = self.queue.pop_front().unwrap();
                 log::error!(
                     "dropping request {}: prompt of {} tokens outside \
@@ -157,6 +159,8 @@ impl AdmissionQueue {
                 // Defensive twin of the prompt-bounds drop above: a head
                 // request larger than the WHOLE pool would never admit
                 // and busy-loop the engine; drop it instead of waiting.
+                // lint: allow(R3) — `front` above proves the queue is
+                // non-empty.
                 let req = self.queue.pop_front().unwrap();
                 log::error!(
                     "dropping request {}: worst-case need of {} blocks \
@@ -205,9 +209,13 @@ impl AdmissionQueue {
                 self.allocator.release(&chain);
                 break;
             }
+            // lint: allow(R3) — `front` above proves the queue is
+            // non-empty.
             let req = self.queue.pop_front().unwrap();
             let slot = slots
                 .claim(req.id, req.prompt.len())
+                // lint: allow(R3) — admission checked an idle slot and
+                // the prompt bounds before reaching claim.
                 .expect("idle slot and prompt length checked");
             if let Some(pc) = &mut self.prefix {
                 pc.record_admission(hit.tokens);

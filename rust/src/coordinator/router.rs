@@ -115,6 +115,8 @@ impl Router {
                             }
                         }
                     })
+                    // lint: allow(R3) — worker-pool construction runs
+                    // once at router startup, not on the request path.
                     .expect("spawn engine worker");
                 Worker { tx, outstanding: 0, handle: Some(handle) }
             })

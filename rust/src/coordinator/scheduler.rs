@@ -24,11 +24,13 @@ use crate::util::Pcg64;
 pub struct SchedulerConfig {
     /// Tokens per cache block (paging granularity of admission control).
     pub block_tokens: usize,
-    /// Byte budget the block pool is sized from; the per-variant
+    /// Byte budget the block pool is sized from (`--cache-budget-mb`,
+    /// CLI-side in MiB); the per-variant
     /// `CacheLayout::bytes_per_token` converts it into a block count.
     pub cache_budget_bytes: usize,
-    /// Admit only when prompt + max_new worst-case fits the pool (true),
-    /// or on prompt footprint alone, growing chains via `extend` (false).
+    /// Admit only when prompt + max_new worst-case fits the pool (true,
+    /// the default), or on prompt footprint alone, growing chains via
+    /// `extend` (false; `--optimistic-admission` clears this).
     pub conservative: bool,
     /// Enable the prefix radix cache (`--prefix-cache`): finished
     /// prompts' full-block prefixes are retained in a

@@ -343,6 +343,9 @@ impl InferenceServer {
                 if seed_caches.is_none() {
                     seed_caches = Some(self.backend.empty_caches()?);
                 }
+                // lint: allow(R3) — populated by the is_none() branch
+                // directly above; Option dance keeps empty_caches()?
+                // fallible.
                 let seed = seed_caches.as_mut().unwrap();
                 for (dst, rows) in seed.iter_mut().zip(&adm.cached_rows) {
                     splice_prefix_rows(dst, rows, slot, adm.cached_tokens)?;
@@ -466,6 +469,8 @@ impl InferenceServer {
         let logits = self
             .logits
             .as_ref()
+            // lint: allow(R3) — engine invariant: decode_busy_lanes is
+            // only entered after a prefill/decode stored logits.
             .expect("logits present when lanes busy")
             .clone();
         let lvals = logits.as_f32()?;
@@ -488,6 +493,8 @@ impl InferenceServer {
         for slot in 0..self.batch {
             let finished = match &self.lanes[slot] {
                 Some(lane) => {
+                    // lint: allow(R3) — a busy lane has sampled at
+                    // least one token (prefill pushes the first).
                     let last = *lane.generated.last().unwrap();
                     let hit_stop =
                         lane.request.params.stop_token == Some(last);
@@ -498,6 +505,8 @@ impl InferenceServer {
                 None => false,
             };
             if finished {
+                // lint: allow(R3) — `finished` is only true in the
+                // Some(lane) match arm above.
                 let lane = self.lanes[slot].take().unwrap();
                 let reason = if lane.request.params.stop_token
                     == lane.generated.last().copied()
@@ -539,6 +548,8 @@ impl InferenceServer {
                 }
                 self.slots.advance(slot)?;
                 let need = self.slots.len_of(slot);
+                // lint: allow(R3) — this loop iterates busy slots only;
+                // the lane was matched Some at the top of the pass.
                 let lane = self.lanes[slot].as_mut().unwrap();
                 if self
                     .queue
@@ -551,6 +562,8 @@ impl InferenceServer {
                 // optimistic admission (conservative reservations cover
                 // max_new up front). Truncate THIS lane's generation
                 // rather than killing every other in-flight request.
+                // lint: allow(R3) — same busy-slot invariant as the
+                // as_mut() above; take() ends this lane.
                 let lane = self.lanes[slot].take().unwrap();
                 log::warn!(
                     "request {}: block pool exhausted at {} tokens; \
@@ -587,6 +600,7 @@ fn splice_prefix_rows(
     if shape.len() < 4 {
         bail!("prefix splice expects [L, B, S, ...] slabs, got {shape:?}");
     }
+    // lint: allow(R3) — len >= 4 bailed on the line above.
     let (l_n, b_n, s_n) = (shape[0], shape[1], shape[2]);
     let w: usize = shape[3..].iter().product();
     if lane >= b_n || tokens > s_n {
@@ -652,6 +666,7 @@ fn extract_prefix_rows(
             if shape.len() < 4 {
                 bail!("prefix extract expects [L, B, S, ...] slabs");
             }
+            // lint: allow(R3) — len >= 4 bailed on the line above.
             let (l_n, b_n, s_n) = (shape[0], shape[1], shape[2]);
             let w: usize = shape[3..].iter().product();
             if lane >= b_n || tokens > s_n {
@@ -699,6 +714,7 @@ fn splice_lane(dst: &mut HostTensor, src: &HostTensor, lane: usize) -> Result<()
     if dst.shape() != shape.as_slice() || shape.len() < 2 {
         bail!("cache splice shape mismatch: {:?} vs {shape:?}", dst.shape());
     }
+    // lint: allow(R3) — len >= 2 bailed on the line above.
     let (layers, batch) = (shape[0], shape[1]);
     let lane_stride: usize = shape[2..].iter().product();
     let layer_stride = batch * lane_stride;
@@ -741,6 +757,7 @@ fn splice_row(dst: &mut HostTensor, src: &HostTensor, lane: usize) -> Result<()>
     if dst.shape() != shape.as_slice() || shape.len() != 2 {
         bail!("row splice shape mismatch");
     }
+    // lint: allow(R3) — len == 2 bailed on the line above.
     let w = shape[1];
     let (HostTensor::F32(d, _), HostTensor::F32(s, _)) = (dst, src) else {
         bail!("row splice expects f32");
@@ -752,12 +769,14 @@ fn splice_row(dst: &mut HostTensor, src: &HostTensor, lane: usize) -> Result<()>
 /// Greedy, temperature, or nucleus (top-p) sampling from one logit row.
 fn sample(row: &[f32], params: &GenParams, rng: &mut Pcg64) -> u32 {
     if params.temperature <= 0.0 {
-        let (arg, _) = row
+        // total_cmp: NaN-total order, so no panicking float unwrap on
+        // the per-token hot path (R3).
+        return row
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap();
-        return arg as u32;
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i as u32)
+            .unwrap_or(0);
     }
     let t = params.temperature;
     let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
@@ -768,7 +787,7 @@ fn sample(row: &[f32], params: &GenParams, rng: &mut Pcg64) -> u32 {
         // mass reaches top_p; zero the tail.
         let total: f64 = weights.iter().sum();
         let mut order: Vec<usize> = (0..weights.len()).collect();
-        order.sort_by(|&a, &b| weights[b].partial_cmp(&weights[a]).unwrap());
+        order.sort_by(|&a, &b| weights[b].total_cmp(&weights[a]));
         let target = (params.top_p.max(0.0) as f64) * total;
         let mut mass = 0.0;
         let mut keep = 0;
@@ -795,7 +814,7 @@ fn sample(row: &[f32], params: &GenParams, rng: &mut Pcg64) -> u32 {
     weights
         .iter()
         .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .max_by(|a, b| a.1.total_cmp(b.1))
         .map(|(i, _)| i as u32)
         .unwrap_or(0)
 }

@@ -88,6 +88,7 @@ impl BlockAllocator {
         }
         let mut out = Vec::with_capacity(need);
         for _ in 0..need {
+            // lint: allow(R3) — `need <= free.len()` bailed above.
             let b = self.free.pop().unwrap();
             self.refcnt.insert(b, 1);
             out.push(b);
@@ -117,10 +118,13 @@ impl BlockAllocator {
                 // Roll back the bumps already made so a failed fork
                 // leaves refcounts exactly as they were.
                 for bb in &chain[..i] {
+                    // lint: allow(R3) — every bb in chain[..i] passed
+                    // the contains_key check this pass.
                     *self.refcnt.get_mut(bb).unwrap() -= 1;
                 }
                 bail!("fork of dead block {b} (stale chain)");
             }
+            // lint: allow(R3) — contains_key checked directly above.
             *self.refcnt.get_mut(b).unwrap() += 1;
         }
         Ok(chain.to_vec())

@@ -187,10 +187,13 @@ impl RadixCache {
     }
 
     fn node(&self, i: usize) -> &Node {
+        // lint: allow(R3) — slab invariant: child edges only ever hold
+        // live node indices (removal unlinks the edge first).
         self.nodes[i].as_ref().expect("live node")
     }
 
     fn node_mut(&mut self, i: usize) -> &mut Node {
+        // lint: allow(R3) — same slab invariant as `node` above.
         self.nodes[i].as_mut().expect("live node")
     }
 
@@ -395,6 +398,8 @@ impl RadixCache {
     fn split(&mut self, i: usize, at: usize) {
         let bt = self.block_tokens;
         let (tail_tokens, tail_blocks, old_children, last_used, old_data) = {
+            // lint: allow(R3) — split is only called on a live interior
+            // node found by walk().
             let node = self.nodes[i].as_mut().expect("live node");
             debug_assert!(at > 0 && at < node.blocks.len());
             (
@@ -523,6 +528,8 @@ impl RadixCache {
 
     /// Drop a leaf: release the cache's block references and unlink it.
     fn remove_leaf(&mut self, leaf: usize, alloc: &mut BlockAllocator) -> usize {
+        // lint: allow(R3) — eviction candidates come from the live-leaf
+        // scan; the slab entry is Some until this take().
         let node = self.nodes[leaf].take().expect("live leaf");
         debug_assert!(node.children.is_empty() && leaf != 0);
         alloc.release(&node.blocks);

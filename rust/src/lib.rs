@@ -35,6 +35,7 @@
 //! * [`kvcache`] — paged KV-cache manager with per-variant slab layouts
 //! * [`coordinator`] — serving: router, continuous batcher, scheduler
 //! * [`bench`]   — experiment harness (paper tables/figures + native perf)
+//! * [`analysis`] — `elitekv lint`: Rust lexer + project-contract rules
 
 // Doc coverage is warned on crate-wide and enforced (the CI docs job
 // runs rustdoc with `-D warnings`) for the serving surface this repo is
@@ -44,6 +45,7 @@
 // module by module as those layers get their own doc passes.
 #![warn(missing_docs)]
 
+pub mod analysis;
 pub mod bench;
 #[allow(missing_docs)]
 pub mod cli;

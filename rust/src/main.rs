@@ -71,6 +71,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "eval" => cmd_eval(args),
         "serve" => cmd_serve(args),
         "bench" => cmd_bench(args),
+        "lint" => cmd_lint(args),
         "experiment" => cmd_experiment(args),
         "help" | "--help" => {
             print!("{HELP}");
@@ -134,8 +135,18 @@ COMMANDS
   pretrain   --config tiny|small|100m --steps N [--lr F] [--out PATH] [pjrt]
   uptrain    --config C --variant TAG --ckpt PATH [--selection PATH]
              --steps N [--lr F] [--out PATH] [pjrt]
+  lint       [--root DIR] [--dump-tokens FILE]
+             project-contract static analysis (DESIGN.md S21): test/bench
+             registration (R1), decode-path determinism (R2), serving-path
+             panic freedom (R3), pjrt gating (R4), doc coverage (R5),
+             delimiter balance (R6), CLI-flag drift (R7). Prints
+             `file:line rule message` and exits nonzero on any finding not
+             covered by a `// lint: allow(Rn) — reason` comment.
+             `python3 python/tools/lint.py` is the line-identical
+             toolchain-free runner; --dump-tokens prints the lexer's
+             token stream for one file (differential-test hook).
   experiment <table1|table2|fig2|fig3|fig5|fig6|fig7|serve|all>
-             [--config tiny] [--out results] [--full] [pjrt]
+             [--config tiny] [--out results] [--models A,B] [--full] [pjrt]
 
 COMMON FLAGS
   --artifacts DIR   artifact directory for pjrt commands (default: artifacts)
@@ -438,6 +449,27 @@ fn cmd_bench(args: &Args) -> Result<()> {
         std::path::Path::new(&cb_out),
     )?;
     println!("wrote {cb_out}");
+    Ok(())
+}
+
+/// `elitekv lint`: run the project-contract static analyzer (see
+/// `elitekv::analysis` and DESIGN.md S21). `--dump-tokens FILE` instead
+/// prints the lexer's token stream for one file — the hook the
+/// Rust↔Python differential tests use to compare lexers directly.
+fn cmd_lint(args: &Args) -> Result<()> {
+    if let Some(path) = args.get("dump-tokens") {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("read {path}"))?;
+        let text = String::from_utf8_lossy(&bytes);
+        print!("{}", elitekv::analysis::lexer::dump(&text));
+        return Ok(());
+    }
+    let root = args.str_or("root", ".");
+    let report = elitekv::analysis::run_lint(std::path::Path::new(&root));
+    print!("{}", report.render());
+    if !report.is_clean() {
+        std::process::exit(1);
+    }
     Ok(())
 }
 

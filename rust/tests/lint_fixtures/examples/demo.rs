@@ -1,0 +1,5 @@
+//! Ungated example touching the `xla` crate: R4 must flag it.
+
+fn main() {
+    let _client = xla::Client::new();
+}

@@ -1,0 +1,7 @@
+//! Allow-comment grammar failures: both R0 shapes.
+
+// lint: allow(R3)
+fn missing_reason() {}
+
+// lint: allow(R9) — not a rule this linter knows
+fn unknown_rule() {}

@@ -1,0 +1,9 @@
+//! Deliberately unbalanced delimiters plus a lexer error (R6).
+
+fn broken() {
+    let a = (1 + 2];
+}
+}
+
+fn truncated() {
+    let s = "unterminated

@@ -1,0 +1,4 @@
+//! Fixture coordinator: serving-path modules in R3/R5/R7c scope.
+
+pub mod scheduler;
+pub mod serve;

@@ -1,0 +1,10 @@
+//! Fixture scheduler config: the R7c field anchors.
+
+/// Policy knobs, two deliberately out of sync with the CLI: one flag
+/// is wired but missing from the README table, one field has no flag.
+pub struct SchedulerConfig {
+    /// Cache budget in MiB (`--cache-mb`), absent from the flag table.
+    pub cache_mb: usize,
+    /// Widget count with no CLI flag anywhere.
+    pub widget_count: usize,
+}

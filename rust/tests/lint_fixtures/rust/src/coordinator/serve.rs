@@ -1,0 +1,30 @@
+//! Fixture serving-path module exercising every R3 detector, the
+//! allow-comment suppression, and the `#[cfg(test)]` exemption.
+
+/// Sum of the first element and an unchecked lookup.
+pub fn run(xs: &[u32]) -> u32 {
+    if xs.len() < 2 {
+        panic!("too short");
+    }
+    let first = *xs.first().unwrap();
+    xs[0] + first
+}
+
+/// Queue head with a justified (suppressed) panic path.
+pub fn head(q: &[u32]) -> u32 {
+    // lint: allow(R3) — fixture: demonstrates a justified suppression
+    *q.first().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_and_unwrap_in_tests_are_exempt() {
+        let v = vec![1, 2];
+        assert_eq!(v[0], 1);
+        assert_eq!(*v.last().unwrap(), 2);
+        assert_eq!(run(&v), 2);
+    }
+}

@@ -1,0 +1,14 @@
+//! Fixture CLI shim: the R7 flag-agreement anchors. `--ghost` is read
+//! but documented nowhere (R7b); `--documented-flag` is fully wired.
+
+const HELP: &str = "\
+usage: fixture serve [--documented-flag NAME] [--cache-mb MIB]
+";
+
+fn main() {
+    let args = Args::parse();
+    let _ = args.str_or("documented-flag", "default");
+    let _ = args.usize_or("cache-mb", 64);
+    let _ = args.get("ghost");
+    println!("{HELP}");
+}

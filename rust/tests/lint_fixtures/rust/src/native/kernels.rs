@@ -1,0 +1,22 @@
+//! Fixture decode-path kernels under the S17 determinism contract:
+//! `HashMap` uses must be flagged (R2), the `Instant` use is allowed.
+
+use std::collections::HashMap;
+
+/// Histogram that leans on `HashMap` iteration order.
+pub fn decode(ids: &[u32]) -> usize {
+    let mut seen: HashMap<u32, u32> = HashMap::new();
+    for &id in ids {
+        *seen.entry(id).or_insert(0) += 1;
+    }
+    seen.len()
+}
+
+// R5 demo: deliberately missing its doc comment.
+pub fn helper() {}
+
+fn timed() -> u64 {
+    // lint: allow(R2) — fixture: demonstrates the escape hatch
+    let _ = std::time::Instant::now();
+    0
+}

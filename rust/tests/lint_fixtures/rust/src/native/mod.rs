@@ -1,0 +1,3 @@
+//! Fixture native backend (R2 decode-path scope).
+
+pub mod kernels;

@@ -1,0 +1,14 @@
+//! Raw-string regression corpus: the PR-5 ad-hoc bracket scanner
+//! miscounted delimiters inside these literals. A correct lexer (R6)
+//! reports this file clean.
+
+fn payloads() -> (&'static str, &'static str) {
+    (
+        r#"{"config": "tiny", "nested": {"x": [1, 2]}"#,
+        r##"closing brace } and bracket ] inside a raw "## ,
+    )
+}
+
+fn escapes() -> (&'static str, char, u8) {
+    ("quote \" brace { bracket [", '"', b'{')
+}

@@ -1,0 +1,9 @@
+//! PJRT-gated suite: `required-features = ["pjrt"]` in Cargo.toml
+//! exempts its `xla` references from R4.
+
+use xla::Client;
+
+#[test]
+fn needs_pjrt() {
+    let _ = Client::new();
+}

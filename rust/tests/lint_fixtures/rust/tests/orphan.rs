@@ -1,0 +1,5 @@
+//! Unregistered suite: with `autotests = false` this file never runs,
+//! which is exactly what R1 exists to catch.
+
+#[test]
+fn never_runs() {}

@@ -1,0 +1,250 @@
+//! `elitekv lint` fixture + differential suite (DESIGN.md S21).
+//!
+//! Three layers:
+//!
+//! 1. **Golden fixture report** — `rust/tests/lint_fixtures/` is a fake
+//!    mini-repo whose files make every rule R0–R7 fire at least once
+//!    (plus counter-cases that must stay silent: a suppressed finding,
+//!    a `#[cfg(test)]` block, a pjrt-gated file, and a raw-string file
+//!    the PR-5 ad-hoc bracket scanner miscounted). The engine's report
+//!    is pinned to `rust/tests/lint_expected.txt`.
+//! 2. **Self-application** — linting this repository itself reports
+//!    clean, so the contract checks gate CI without churn.
+//! 3. **Rust ↔ Python differential** — `python/tools/lint.py` is a
+//!    line-for-line port; its report must be byte-identical on both
+//!    the fixture corpus and the real repo, and its `--dump-tokens`
+//!    stream must match [`lexer::dump`] on seeded random token soup.
+//!    These tests skip (loudly) when `python3` is not installed.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+use elitekv::analysis::{lexer, run_lint};
+use elitekv::util::prop;
+use elitekv::util::rng::Pcg64;
+
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn fixture_root() -> PathBuf {
+    repo_root().join("rust/tests/lint_fixtures")
+}
+
+#[test]
+fn fixture_report_matches_golden() {
+    let golden = std::fs::read_to_string(
+        repo_root().join("rust/tests/lint_expected.txt"),
+    )
+    .expect("read rust/tests/lint_expected.txt");
+    let report = run_lint(&fixture_root());
+    assert!(!report.is_clean(), "fixture corpus must produce findings");
+    assert_eq!(
+        report.render(),
+        golden,
+        "fixture report drifted from the golden file; regenerate with \
+         `python3 python/tools/lint.py --root rust/tests/lint_fixtures \
+         > rust/tests/lint_expected.txt` if the change is intended"
+    );
+}
+
+#[test]
+fn fixture_corpus_fires_every_rule() {
+    let report = run_lint(&fixture_root());
+    let fired: std::collections::BTreeSet<&str> =
+        report.findings.iter().map(|f| f.rule).collect();
+    for rule in ["R0", "R1", "R2", "R3", "R4", "R5", "R6", "R7"] {
+        assert!(fired.contains(rule), "fixture never fired {rule}");
+    }
+}
+
+#[test]
+fn linting_this_repository_is_clean() {
+    let report = run_lint(&repo_root());
+    assert!(
+        report.is_clean(),
+        "repo lint found problems:\n{}",
+        report.render()
+    );
+}
+
+/// Run the Python linter with `args`; `None` when python3 is missing.
+fn python_lint(args: &[&str]) -> Option<std::process::Output> {
+    let script = repo_root().join("python/tools/lint.py");
+    match Command::new("python3").arg(script).args(args).output() {
+        Ok(out) => Some(out),
+        Err(e) => {
+            eprintln!("skipping differential test: python3 unavailable ({e})");
+            None
+        }
+    }
+}
+
+#[test]
+fn python_report_byte_identical_on_fixtures() {
+    let root = fixture_root();
+    let Some(out) = python_lint(&["--root", &root.to_string_lossy()]) else {
+        return;
+    };
+    let py = String::from_utf8_lossy(&out.stdout).to_string();
+    assert_eq!(
+        run_lint(&root).render(),
+        py,
+        "Rust and Python lint reports diverged on the fixture corpus"
+    );
+    assert_eq!(out.status.code(), Some(1), "findings must exit nonzero");
+}
+
+#[test]
+fn python_report_byte_identical_on_repo() {
+    let root = repo_root();
+    let Some(out) = python_lint(&["--root", &root.to_string_lossy()]) else {
+        return;
+    };
+    let py = String::from_utf8_lossy(&out.stdout).to_string();
+    assert_eq!(
+        run_lint(&root).render(),
+        py,
+        "Rust and Python lint reports diverged on the repository"
+    );
+    assert_eq!(out.status.code(), Some(0), "a clean repo must exit zero");
+}
+
+/// Source fragments the soup generator samples: every literal family
+/// the lexer distinguishes, plus pathological near-misses.
+const SOUP: [&str; 32] = [
+    "fn",
+    "ident",
+    "x7",
+    "r#match",
+    "_",
+    "déjà_vu",
+    "0",
+    "42",
+    "0x1f",
+    "1.5e-3",
+    "1_000u64",
+    "\"str \\\" esc\"",
+    "\"multi\nline\"",
+    "b\"bytes\"",
+    "c\"cstr\"",
+    "r\"raw\"",
+    "r#\"has \" quote\"#",
+    "r##\"nest \"# deeper\"##",
+    "br#\"raw bytes\"#",
+    "'a'",
+    "'\\n'",
+    "'\"'",
+    "b'x'",
+    "'static",
+    "'_",
+    "// line comment\n",
+    "/// doc\n",
+    "//! inner\n",
+    "/* block */",
+    "/* nested /* deep */ still */",
+    "{",
+    "}",
+];
+
+/// Whitespace (and empty: token-merging) separators between fragments.
+const SEP: [&str; 5] = ["", " ", "\n", "\t", "  "];
+
+/// Unterminated tails appended to some soups to hit the error paths.
+const TAIL: [&str; 4] =
+    ["\"never closed", "/* never closed", "r##\"never closed\"#", "'"];
+
+/// Deterministic random token soup. The Python suite
+/// (`python/tests/test_lint.py`) mirrors this generator and the prop
+/// harness seeding exactly, so both sides explore the same corpus.
+fn gen_soup(rng: &mut Pcg64) -> String {
+    let n = rng.range(1, 40);
+    let mut s = String::new();
+    for _ in 0..n {
+        s.push_str(SOUP[rng.range(0, SOUP.len())]);
+        s.push_str(SEP[rng.range(0, SEP.len())]);
+    }
+    if rng.chance(0.15) {
+        s.push_str(TAIL[rng.range(0, TAIL.len())]);
+    }
+    s
+}
+
+#[test]
+fn lexer_dump_byte_identical_on_token_soup() {
+    if python_lint(&["--dump-tokens", "/dev/null"]).is_none() {
+        return;
+    }
+    let script = repo_root().join("python/tools/lint.py");
+    let mut case = 0usize;
+    prop::check("lint.lexer.differential", 24, gen_soup, |soup| {
+        case += 1;
+        let path = std::env::temp_dir().join(format!(
+            "elitekv_lint_soup_{}_{case}.rs",
+            std::process::id()
+        ));
+        std::fs::write(&path, soup).map_err(|e| e.to_string())?;
+        let out = Command::new("python3")
+            .arg(&script)
+            .arg("--dump-tokens")
+            .arg(&path)
+            .output()
+            .map_err(|e| e.to_string())?;
+        let _ = std::fs::remove_file(&path);
+        let py = String::from_utf8_lossy(&out.stdout).to_string();
+        let rs = lexer::dump(soup);
+        if py == rs {
+            Ok(())
+        } else {
+            Err(format!(
+                "token dumps diverged\n--- rust ---\n{rs}--- python ---\n{py}"
+            ))
+        }
+    });
+}
+
+#[test]
+fn lexer_is_total_and_lossless_on_token_soup() {
+    prop::check("lint.lexer.lossless", 64, gen_soup, |soup| {
+        let c: Vec<char> = soup.chars().collect();
+        let (toks, _errs) = lexer::lex(soup);
+        let mut prev = 0usize;
+        for t in &toks {
+            if t.start < prev || t.start >= t.end || t.end > c.len() {
+                return Err(format!(
+                    "bad span [{}, {}) after offset {prev}",
+                    t.start, t.end
+                ));
+            }
+            if c[prev..t.start].iter().any(|&g| !g.is_whitespace()) {
+                return Err(format!(
+                    "non-whitespace gap before token at {}",
+                    t.start
+                ));
+            }
+            let slice: String = c[t.start..t.end].iter().collect();
+            if slice != t.text {
+                return Err(format!(
+                    "token text `{}` != source slice `{slice}`",
+                    t.text
+                ));
+            }
+            prev = t.end;
+        }
+        if c[prev..].iter().any(|&g| !g.is_whitespace()) {
+            return Err("non-whitespace tail after last token".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn lexer_dump_is_deterministic() {
+    prop::check("lint.lexer.deterministic", 16, gen_soup, |soup| {
+        if lexer::dump(soup) == lexer::dump(soup) {
+            Ok(())
+        } else {
+            Err("two dumps of the same source differ".into())
+        }
+    });
+}
