@@ -4,10 +4,15 @@ Hypothesis sweeps shapes and contents; tolerances are tight because both
 paths run f32 on CPU.
 """
 
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property sweeps need hypothesis installed"
+)
+
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels.elite_attention import (elite_attention_decode,

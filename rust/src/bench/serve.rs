@@ -14,8 +14,11 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::config::{ModelConfig, Variant};
-use crate::coordinator::scheduler::{ArrivalTrace, SchedulerConfig, TraceOpts};
-use crate::coordinator::InferenceServer;
+use crate::coordinator::scheduler::{
+    ArrivalTrace, SchedulerConfig, TraceItem, TraceOpts,
+};
+use crate::coordinator::{GenParams, InferenceServer, Request};
+use crate::data::CorpusGen;
 use crate::kvcache::{CacheDtype, CacheLayout};
 use crate::native::{NativeModel, NativeRunner};
 use crate::search::uniform_selection;
@@ -45,6 +48,15 @@ pub struct ServeBenchOpts {
     /// scheduler `sparse_k` is set from this knob (the caller's
     /// `scheduler.sparse_k` is ignored — the sweep owns the axis).
     pub sparse_k: usize,
+    /// Chunk size of the long-prompt-stall pair (`--prefill-chunk`,
+    /// DESIGN.md S22): a trace where a long prompt arrives while short
+    /// requests are mid-decode is replayed monolithic (chunk 0) and
+    /// chunked at this size, per dtype, so the JSON carries the
+    /// decode-stall reduction (`max_decode_gap_s`) directly. 0 skips
+    /// the stall rows entirely. The stall pair owns its chunk axis; the
+    /// other workloads run at the caller's
+    /// `scheduler.prefill_chunk_tokens`.
+    pub prefill_chunk: usize,
     /// Trace seed.
     pub seed: u64,
 }
@@ -80,6 +92,10 @@ impl Default for ServeBenchOpts {
             // enough selection pressure to measure, coarse enough that
             // greedy generations stay plausible at random init.
             sparse_k: 8,
+            // 4-token chunks against a 44-token stall prompt: ~11
+            // engine iterations of interleaved prefill, so the
+            // monolithic-vs-chunked gap contrast is unmistakable.
+            prefill_chunk: 4,
             seed: 0x5eed,
         }
     }
@@ -98,9 +114,10 @@ pub fn default_variants(cfg: &ModelConfig) -> Vec<Variant> {
 /// measured record. `trace_tag` labels the workload ("mixed" /
 /// "shared_prefix" / "long_context"), `prefix_cache` toggles the radix
 /// cache, `dtype` selects the cache element storage (the backend's
-/// slabs AND the scheduler's byte accounting), and `sparse_k` runs the
+/// slabs AND the scheduler's byte accounting), `sparse_k` runs the
 /// engine under sparse decode (model and scheduler together, DESIGN.md
-/// S20) for this run.
+/// S20) for this run, and `prefill_chunk` sets the chunked-prefill
+/// budget (S22; 0 = monolithic) for this run.
 #[allow(clippy::too_many_arguments)]
 fn bench_variant(
     cfg: &ModelConfig,
@@ -111,6 +128,7 @@ fn bench_variant(
     prefix_cache: bool,
     dtype: CacheDtype,
     sparse_k: Option<usize>,
+    prefill_chunk: usize,
 ) -> Result<Json> {
     let sel = variant.r().map(|r| uniform_selection(cfg, r));
     let mut model =
@@ -122,6 +140,7 @@ fn bench_variant(
         prefix_cache,
         cache_dtype: dtype,
         sparse_k,
+        prefill_chunk_tokens: prefill_chunk,
         ..opts.scheduler.clone()
     };
     let mut server =
@@ -159,6 +178,16 @@ fn bench_variant(
     } else {
         crate::util::stats::percentile(&waits, 0.99)
     };
+    // Per-request latency columns from the engine's bounded rings; a
+    // trace with zero completions has no samples to summarize.
+    let (ttft_p50, ttft_p95, ttft_p99, tpot_mean) =
+        if stats.ttft_recent_s.is_empty() {
+            (0.0, 0.0, 0.0, 0.0)
+        } else {
+            let t = Summary::of(&stats.ttft_recent_s);
+            let g = Summary::of(&stats.tpot_recent_s);
+            (t.p50, t.p95, t.p99, g.mean)
+        };
     let layout = CacheLayout::with_dtype(cfg, variant.clone(), dtype);
     Ok(Json::obj(vec![
         ("variant", Json::str(variant.tag())),
@@ -166,6 +195,7 @@ fn bench_variant(
         ("prefix_cache", Json::Bool(prefix_cache)),
         ("cache_dtype", Json::str(dtype.tag())),
         ("sparse_k", Json::num(sparse_k.unwrap_or(0) as f64)),
+        ("prefill_chunk", Json::num(prefill_chunk as f64)),
         ("cache_ratio", Json::num(layout.ratio)),
         ("cache_bytes_per_token", Json::num(layout.bytes_per_token() as f64)),
         ("pool_blocks", Json::num(stats.blocks_total as f64)),
@@ -175,6 +205,11 @@ fn bench_variant(
         ("max_concurrency", Json::num(stats.max_concurrency as f64)),
         ("admission_wait_mean_s", Json::num(stats.mean_admission_wait_s())),
         ("admission_wait_p99_s", Json::num(wait_p99)),
+        ("ttft_p50_s", Json::num(ttft_p50)),
+        ("ttft_p95_s", Json::num(ttft_p95)),
+        ("ttft_p99_s", Json::num(ttft_p99)),
+        ("tpot_mean_s", Json::num(tpot_mean)),
+        ("max_decode_gap_s", Json::num(stats.max_decode_gap_s)),
         ("peak_blocks_used", Json::num(stats.peak_blocks_used as f64)),
         ("mean_block_occupancy", Json::num(stats.mean_block_occupancy())),
         ("prefills", Json::num(stats.prefills as f64)),
@@ -197,6 +232,41 @@ fn bench_variant(
         ),
         ("sparse_dense_rows", Json::num(stats.sparse_dense_rows as f64)),
     ]))
+}
+
+/// The long-prompt-arrives-mid-decode workload (DESIGN.md S22): two
+/// short requests start decoding at step 0, then a 44-token prompt
+/// arrives at step 2 while they are mid-generation. Under monolithic
+/// prefill the whole 44-token prompt is computed inside one engine
+/// iteration, so the in-flight lanes see one giant inter-token gap;
+/// chunked prefill spreads it across ~`44 / chunk` iterations. Sized to
+/// the default bench budget: 2 + 2 + 4 sixteen-token blocks fill the
+/// dense-f32 8-block pool exactly, so the long prompt still admits the
+/// moment it arrives and the contrast is pure scheduling, not queueing.
+fn stall_trace(vocab: usize, seed: u64) -> ArrivalTrace {
+    let mut gen = CorpusGen::new(vocab, seed);
+    let mk = |id: u64, arrive_step: usize, prompt: Vec<u32>, max_new: usize| {
+        TraceItem {
+            arrive_step,
+            request: Request::new(
+                id,
+                prompt,
+                GenParams {
+                    max_new_tokens: max_new,
+                    temperature: 0.0,
+                    top_p: 1.0,
+                    stop_token: None, // fixed-length: comparable work
+                    seed: id,
+                },
+            ),
+        }
+    };
+    let items = vec![
+        mk(0, 0, gen.stream(8), 24),
+        mk(1, 0, gen.stream(8), 24),
+        mk(2, 2, gen.stream(44), 8),
+    ];
+    ArrivalTrace { items }
 }
 
 /// Sweep the continuous-batching benchmark and write `out` as JSON.
@@ -240,6 +310,11 @@ pub fn continuous_batching_bench(
             },
         )
     });
+    // The stall workload (S22): replayed monolithic vs chunked per
+    // dtype; the pair's `max_decode_gap_s` columns carry the headline.
+    let stall = (opts.prefill_chunk > 0)
+        .then(|| stall_trace(cfg.vocab, opts.seed ^ 0x57a11));
+    let base_chunk = opts.scheduler.prefill_chunk_tokens;
     let mut rows = Vec::new();
     for variant in variants {
         log::info!("continuous-batching bench: {}", variant.tag());
@@ -248,15 +323,25 @@ pub fn continuous_batching_bench(
         // trace under the same byte budget, so the JSON carries the
         // capacity effect of the dtype axis directly. The shared-prefix
         // pair is always measured with the radix cache off AND on, at
-        // the caller's dtype. The long-context rows come last: a
-        // dense/sparse pair per dtype, radix cache off.
-        let mut runs: Vec<(&ArrivalTrace, &str, bool, CacheDtype, Option<usize>)> = vec![
+        // the caller's dtype. The long-context rows are a dense/sparse
+        // pair per dtype, radix cache off. The long-prompt-stall rows
+        // come last: a monolithic/chunked pair per dtype.
+        #[allow(clippy::type_complexity)]
+        let mut runs: Vec<(
+            &ArrivalTrace,
+            &str,
+            bool,
+            CacheDtype,
+            Option<usize>,
+            usize,
+        )> = vec![
             (
                 &trace,
                 "mixed",
                 opts.scheduler.prefix_cache,
                 CacheDtype::F32,
                 None,
+                base_chunk,
             ),
             (
                 &trace,
@@ -264,6 +349,7 @@ pub fn continuous_batching_bench(
                 opts.scheduler.prefix_cache,
                 CacheDtype::Int8,
                 None,
+                base_chunk,
             ),
         ];
         if let Some(st) = &shared_trace {
@@ -273,6 +359,7 @@ pub fn continuous_batching_bench(
                 false,
                 opts.scheduler.cache_dtype,
                 None,
+                base_chunk,
             ));
             runs.push((
                 st,
@@ -280,30 +367,51 @@ pub fn continuous_batching_bench(
                 true,
                 opts.scheduler.cache_dtype,
                 None,
+                base_chunk,
             ));
         }
         if let Some(lt) = &long_trace {
             for dtype in [CacheDtype::F32, CacheDtype::Int8] {
-                runs.push((lt, "long_context", false, dtype, None));
+                runs.push((
+                    lt,
+                    "long_context",
+                    false,
+                    dtype,
+                    None,
+                    base_chunk,
+                ));
                 runs.push((
                     lt,
                     "long_context",
                     false,
                     dtype,
                     Some(opts.sparse_k),
+                    base_chunk,
                 ));
             }
         }
-        for (t, tag, pc, dtype, sk) in runs {
-            let row =
-                bench_variant(cfg, variant, opts, t, tag, pc, dtype, sk)
-                    .with_context(|| {
-                        format!("bench {} ({tag})", variant.tag())
-                    })?;
+        if let Some(st) = &stall {
+            for dtype in [CacheDtype::F32, CacheDtype::Int8] {
+                runs.push((st, "long_prompt_stall", false, dtype, None, 0));
+                runs.push((
+                    st,
+                    "long_prompt_stall",
+                    false,
+                    dtype,
+                    None,
+                    opts.prefill_chunk,
+                ));
+            }
+        }
+        for (t, tag, pc, dtype, sk, pch) in runs {
+            let row = bench_variant(
+                cfg, variant, opts, t, tag, pc, dtype, sk, pch,
+            )
+            .with_context(|| format!("bench {} ({tag})", variant.tag()))?;
             println!(
-                "bench continuous_batching/{:<22} {:<13} {:<4} cache={:<3} \
+                "bench continuous_batching/{:<22} {:<17} {:<4} cache={:<3} \
                  {:>4} max-concurrency  {:>8.1} tok/s  prefill toks \
-                 {:>6}  hits {:>3}  step p50 {:>7.3} ms{}",
+                 {:>6}  hits {:>3}  step p50 {:>7.3} ms{}{}",
                 variant.tag(),
                 tag,
                 dtype.tag(),
@@ -314,6 +422,16 @@ pub fn continuous_batching_bench(
                 row.req("prefix_hits").as_usize().unwrap_or(0),
                 row.req("step_ms_p50").as_f64().unwrap_or(0.0),
                 sk.map(|k| format!("  sparse k={k}")).unwrap_or_default(),
+                if tag == "long_prompt_stall" {
+                    format!(
+                        "  chunk={pch} max-gap {:.3} ms",
+                        1e3 * row.req("max_decode_gap_s")
+                            .as_f64()
+                            .unwrap_or(0.0)
+                    )
+                } else {
+                    String::new()
+                },
             );
             rows.push(row);
         }
@@ -334,6 +452,7 @@ pub fn continuous_batching_bench(
             Json::num(opts.shared_prefix_tokens as f64),
         ),
         ("sparse_k", Json::num(opts.sparse_k as f64)),
+        ("prefill_chunk", Json::num(opts.prefill_chunk as f64)),
         ("n_requests", Json::num(trace.items.len() as f64)),
         ("trace_new_tokens", Json::num(trace.total_new_tokens() as f64)),
         ("rows", Json::Arr(rows)),
@@ -366,6 +485,7 @@ mod tests {
                 ..default.trace.clone()
             },
             sparse_k: 0, // mixed + shared-prefix rows only: keep it fast
+            prefill_chunk: 0,
             ..default
         };
         let out = std::env::temp_dir().join("elitekv_cb_bench_test.json");
@@ -420,6 +540,7 @@ mod tests {
             },
             shared_prefix_tokens: 0, // mixed pairs only: keep it fast
             sparse_k: 0,
+            prefill_chunk: 0,
             ..default
         };
         let out = std::env::temp_dir().join("elitekv_cb_int8_test.json");
@@ -480,6 +601,7 @@ mod tests {
         let opts = ServeBenchOpts {
             trace: TraceOpts { n_requests: 10, ..default.trace.clone() },
             sparse_k: 0, // shared-prefix rows are the subject here
+            prefill_chunk: 0,
             ..default
         };
         let out = std::env::temp_dir().join("elitekv_cb_prefix_test.json");
@@ -530,6 +652,92 @@ mod tests {
         }
     }
 
+    /// The S22 acceptance property: on the long-prompt-arrives-mid-decode
+    /// trace, chunked prefill strictly reduces the worst inter-token gap
+    /// of in-flight lanes (`max_decode_gap_s`) vs the monolithic replay,
+    /// at equal completion counts, for every variant × dtype pair — and
+    /// the TTFT percentile columns are present and ordered.
+    #[test]
+    fn chunked_prefill_reduces_decode_stall() {
+        let cfg = ModelConfig::tiny();
+        let default = ServeBenchOpts::default();
+        let opts = ServeBenchOpts {
+            trace: TraceOpts {
+                n_requests: 4, // keep the mixed rows cheap
+                ..default.trace.clone()
+            },
+            shared_prefix_tokens: 0, // stall rows are the subject here
+            sparse_k: 0,
+            ..default
+        };
+        let out = std::env::temp_dir().join("elitekv_cb_stall_test.json");
+        let variants = default_variants(&cfg);
+        let json =
+            continuous_batching_bench(&cfg, &variants, &opts, &out).unwrap();
+        std::fs::remove_file(&out).ok();
+        for variant in &variants {
+            let tag = variant.tag();
+            for dtype in ["f32", "int8"] {
+                let find = |chunk: usize| {
+                    json.req("rows")
+                        .as_arr()
+                        .unwrap()
+                        .iter()
+                        .find(|r| {
+                            r.req("variant").as_str() == Some(tag.as_str())
+                                && r.req("trace").as_str()
+                                    == Some("long_prompt_stall")
+                                && r.req("cache_dtype").as_str()
+                                    == Some(dtype)
+                                && r.req("prefill_chunk").as_usize()
+                                    == Some(chunk)
+                        })
+                        .cloned()
+                        .unwrap()
+                };
+                let (mono, chunked) =
+                    (find(0), find(opts.prefill_chunk));
+                // equal completions: chunking reschedules work, it
+                // never changes the request stream
+                assert_eq!(
+                    mono.req("completed").as_usize().unwrap(),
+                    3,
+                    "{tag}/{dtype}: monolithic replay dropped requests"
+                );
+                assert_eq!(
+                    chunked.req("completed").as_usize().unwrap(),
+                    3,
+                    "{tag}/{dtype}: chunked replay dropped requests"
+                );
+                let (gm, gc) = (
+                    mono.req("max_decode_gap_s").as_f64().unwrap(),
+                    chunked.req("max_decode_gap_s").as_f64().unwrap(),
+                );
+                assert!(
+                    gc < gm,
+                    "{tag}/{dtype}: chunked max gap {gc:.6}s !< \
+                     monolithic {gm:.6}s"
+                );
+                for row in [&mono, &chunked] {
+                    let (p50, p95, p99) = (
+                        row.req("ttft_p50_s").as_f64().unwrap(),
+                        row.req("ttft_p95_s").as_f64().unwrap(),
+                        row.req("ttft_p99_s").as_f64().unwrap(),
+                    );
+                    assert!(
+                        p50 > 0.0 && p50 <= p95 && p95 <= p99,
+                        "{tag}/{dtype}: TTFT percentiles disordered \
+                         ({p50}, {p95}, {p99})"
+                    );
+                    assert!(
+                        row.req("tpot_mean_s").as_f64().unwrap() > 0.0,
+                        "{tag}/{dtype}: zero TPOT on a multi-token trace"
+                    );
+                }
+            }
+        }
+    }
+
     /// The S20 rows: the long-context trace replays dense then sparse
     /// per dtype. Sparse rows report a selection strictly smaller than
     /// the dense-equivalent row count; dense rows report zero; both
@@ -543,6 +751,7 @@ mod tests {
             trace: TraceOpts { n_requests: 6, ..default.trace.clone() },
             shared_prefix_tokens: 0, // long-context rows are the subject
             sparse_k: 4,
+            prefill_chunk: 0,
             ..default
         };
         let out = std::env::temp_dir().join("elitekv_cb_sparse_test.json");

@@ -59,6 +59,10 @@ pub struct Response {
     pub tokens: Vec<u32>,
     /// Seconds from enqueue to first generated token.
     pub ttft: f64,
+    /// Mean inter-token gap in seconds (time per output token over the
+    /// decode phase: first token to last token divided by `tokens - 1`;
+    /// 0 for single-token generations and rejections).
+    pub tpot: f64,
     /// Seconds from enqueue to completion.
     pub latency: f64,
     /// Why generation stopped.

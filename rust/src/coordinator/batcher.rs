@@ -5,6 +5,11 @@
 //! block allocator can cover its worst-case cache need. Because EliteKV
 //! shrinks bytes-per-token, the same block pool admits ~1/ratio times the
 //! sequences — the capacity effect the serving bench measures.
+//!
+//! Admission is deliberately agnostic to HOW the engine prefills: under
+//! chunked prefill (DESIGN.md S22) the same FIFO/budget decision admits a
+//! request whose prompt will then be computed a chunk per iteration, so
+//! new admissions keep landing while earlier lanes are still mid-prefill.
 
 use std::collections::VecDeque;
 
@@ -133,6 +138,10 @@ impl AdmissionQueue {
     /// prefix of each prompt is reused (forked, not re-allocated) and
     /// only the remaining worst-case footprint draws fresh blocks; when
     /// fresh blocks run short, LRU cache leaves are evicted first.
+    /// The engine decides what to DO with an admission — monolithic
+    /// prefill in the admission iteration, or parking the lane at a
+    /// prefill cursor to be advanced chunk-by-chunk (S22); either way
+    /// the admission proceeds while other lanes are mid-chunk-prefill.
     pub fn admit(&mut self, slots: &mut SlotManager) -> Vec<Admission> {
         let mut admitted = Vec::new();
         while slots.idle_count() > 0 {

@@ -83,6 +83,7 @@ impl Router {
                                                 id,
                                                 tokens: Vec::new(),
                                                 ttft: 0.0,
+                                                tpot: 0.0,
                                                 latency: 0.0,
                                                 finish:
                                                     FinishReason::Rejected,

@@ -53,6 +53,18 @@ pub struct SchedulerConfig {
     /// the top-k later). Must match the backend's own `sparse_k`; the
     /// engine constructor enforces agreement.
     pub sparse_k: Option<usize>,
+    /// Chunked prefill budget (`--prefill-chunk`, DESIGN.md S22): at
+    /// most this many prompt tokens are prefilled per engine iteration,
+    /// Sarathi-style, so already-live decode lanes advance every
+    /// iteration instead of stalling behind one long monolithic prefill.
+    /// `0` (the default) keeps today's behavior: each admission wave is
+    /// prefilled whole before its first decode step. Chunking is purely
+    /// a scheduling knob — chunked and monolithic prefill are bitwise
+    /// identical per request (S17 row-independence makes the chunk
+    /// boundaries invisible to the math). Requires a backend that can
+    /// resume a prefill mid-sequence (the native runner); the engine
+    /// constructor enforces support.
+    pub prefill_chunk_tokens: usize,
 }
 
 impl Default for SchedulerConfig {
@@ -64,6 +76,7 @@ impl Default for SchedulerConfig {
             prefix_cache: false,
             cache_dtype: CacheDtype::F32,
             sparse_k: None,
+            prefill_chunk_tokens: 0,
         }
     }
 }

@@ -2,12 +2,18 @@
 //! prefill splicing, sampling, and metrics — backend-agnostic.
 //!
 //! One engine iteration:
-//!   1. admit queued requests into idle lanes (block-budget permitting),
-//!      run one prefill for the newly admitted lanes and splice their
-//!      cache rows into the live cache tensors;
-//!   2. one decode step across all lanes (idle lanes run a masked dummy);
-//!   3. sample per busy lane (greedy / temperature / top-p), emit finished
-//!      responses, free lanes/blocks.
+//!   1. admit queued requests into idle lanes (block-budget permitting);
+//!      monolithic mode (`prefill_chunk_tokens == 0`) prefills the whole
+//!      admission wave here and splices its cache rows into the live
+//!      cache tensors, chunked mode (DESIGN.md S22) only parks the lanes
+//!      with a prefill cursor;
+//!   2. advance every mid-prefill lane by at most one chunk of prompt
+//!      tokens (chunked mode only; lanes reaching their prompt length
+//!      go live this same iteration);
+//!   3. one decode step across all live lanes (idle and mid-prefill
+//!      lanes run a masked dummy);
+//!   4. sample per live lane (greedy / temperature / top-p), emit
+//!      finished responses, free lanes/blocks.
 //!
 //! The engine drives any [`Backend`]: the pure-Rust native runner (no
 //! artifacts at all) or the PJRT executor (feature `pjrt`). Python is
@@ -18,7 +24,7 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use crate::coordinator::api::{FinishReason, GenParams, Request, Response};
-use crate::coordinator::batcher::AdmissionQueue;
+use crate::coordinator::batcher::{Admission, AdmissionQueue};
 use crate::coordinator::scheduler::SchedulerConfig;
 use crate::kvcache::block::BlockId;
 use crate::kvcache::quant::{n_groups, SlabRows};
@@ -33,8 +39,22 @@ struct Lane {
     request: Request,
     blocks: Vec<BlockId>,
     generated: Vec<u32>,
+    // Prompt tokens whose cache rows exist (computed or spliced from the
+    // prefix cache). The lane decodes only once this reaches the prompt
+    // length; monolithic admission sets it there immediately, chunked
+    // admission parks it at the cached prefix length.
+    cursor: usize,
     first_token_at: Option<Instant>,
+    last_token_at: Option<Instant>,
+    // Largest wall-clock gap between consecutive sampled tokens — the
+    // per-request decode-stall measure chunked prefill bounds.
+    max_gap_s: f64,
     rng: Pcg64,
+}
+
+/// A lane decodes only once its whole prompt has been prefilled.
+fn is_live(lane: &Option<Lane>) -> bool {
+    matches!(lane, Some(l) if l.cursor >= l.request.prompt.len())
 }
 
 /// Aggregate serving metrics.
@@ -95,10 +115,35 @@ pub struct ServerStats {
     /// fraction of attention bandwidth the top-k selection kept. Zero
     /// when dense.
     pub sparse_dense_rows: usize,
+    /// Ring of completed requests' time-to-first-token samples in
+    /// seconds (enqueue to first sampled token), bounded by
+    /// [`LATENCY_WINDOW`] like
+    /// [`ServerStats::admission_wait_recent_s`] — the bench derives its
+    /// TTFT p50/p95/p99 columns from this.
+    pub ttft_recent_s: Vec<f64>,
+    /// TTFT samples ever recorded (ring write index for
+    /// [`ServerStats::ttft_recent_s`]).
+    pub ttft_count: usize,
+    /// Ring of completed requests' mean inter-token gaps (TPOT) in
+    /// seconds, bounded by [`LATENCY_WINDOW`].
+    pub tpot_recent_s: Vec<f64>,
+    /// TPOT samples ever recorded (ring write index for
+    /// [`ServerStats::tpot_recent_s`]).
+    pub tpot_count: usize,
+    /// Worst wall-clock gap between two consecutive tokens of any
+    /// completed request, in seconds — the decode-stall measure chunked
+    /// prefill (`--prefill-chunk`, DESIGN.md S22) exists to bound: a
+    /// monolithic long-prompt prefill shows up here as one giant gap on
+    /// every lane that was mid-decode while it ran.
+    pub max_decode_gap_s: f64,
 }
 
 /// Capacity of [`ServerStats::admission_wait_recent_s`].
 pub const ADMISSION_WAIT_WINDOW: usize = 4096;
+
+/// Capacity of the per-request latency rings
+/// ([`ServerStats::ttft_recent_s`], [`ServerStats::tpot_recent_s`]).
+pub const LATENCY_WINDOW: usize = 4096;
 
 impl ServerStats {
     /// Record one enqueue-to-admission wait.
@@ -111,6 +156,28 @@ impl ServerStats {
         }
         self.admission_waits += 1;
         self.admission_wait_sum_s += seconds;
+    }
+
+    /// Record one completed request's time-to-first-token.
+    pub fn record_ttft(&mut self, seconds: f64) {
+        if self.ttft_recent_s.len() < LATENCY_WINDOW {
+            self.ttft_recent_s.push(seconds);
+        } else {
+            let i = self.ttft_count % LATENCY_WINDOW;
+            self.ttft_recent_s[i] = seconds;
+        }
+        self.ttft_count += 1;
+    }
+
+    /// Record one completed request's mean inter-token gap (TPOT).
+    pub fn record_tpot(&mut self, seconds: f64) {
+        if self.tpot_recent_s.len() < LATENCY_WINDOW {
+            self.tpot_recent_s.push(seconds);
+        } else {
+            let i = self.tpot_count % LATENCY_WINDOW;
+            self.tpot_recent_s[i] = seconds;
+        }
+        self.tpot_count += 1;
     }
 
     /// Mean admission wait in seconds (0 when nothing was admitted).
@@ -150,6 +217,9 @@ pub struct InferenceServer {
     pub stats: ServerStats,
     batch: usize,
     max_seq: usize,
+    // Chunked prefill budget (SchedulerConfig::prefill_chunk_tokens):
+    // 0 = monolithic admission-time prefill, today's default.
+    prefill_chunk: usize,
 }
 
 impl InferenceServer {
@@ -198,6 +268,15 @@ impl InferenceServer {
             cfg.sparse_k,
             backend.sparse_k()
         );
+        if cfg.prefill_chunk_tokens > 0 {
+            anyhow::ensure!(
+                backend.supports_chunked_prefill(),
+                "--prefill-chunk needs a backend that can resume a \
+                 prefill mid-sequence (`{}` cannot; use --backend native \
+                 or --prefill-chunk 0)",
+                backend.kind()
+            );
+        }
         let layout = CacheLayout::with_dtype(
             backend.config(),
             backend.variant().clone(),
@@ -256,6 +335,7 @@ impl InferenceServer {
             stats,
             batch,
             max_seq,
+            prefill_chunk: cfg.prefill_chunk_tokens,
         })
     }
 
@@ -291,6 +371,28 @@ impl InferenceServer {
         &self.caches
     }
 
+    /// Per-slot occupancy snapshot: `(request id, prefilled prompt
+    /// tokens, prompt length, generated tokens)` for busy lanes, `None`
+    /// for idle ones. Test/debug surface: the chunked-prefill
+    /// differential suite uses it to attribute logits rows to requests
+    /// and to check the prefill-cursor state machine against a
+    /// reference model.
+    pub fn lane_progress(&self) -> Vec<Option<(u64, usize, usize, usize)>> {
+        self.lanes
+            .iter()
+            .map(|l| {
+                l.as_ref().map(|lane| {
+                    (
+                        lane.request.id,
+                        lane.cursor,
+                        lane.request.prompt.len(),
+                        lane.generated.len(),
+                    )
+                })
+            })
+            .collect()
+    }
+
     /// Drive the engine until all submitted requests complete.
     pub fn run_to_completion(&mut self) -> Result<Vec<Response>> {
         let mut out = Vec::new();
@@ -303,6 +405,7 @@ impl InferenceServer {
     /// One engine iteration; returns any completed responses.
     pub fn step(&mut self) -> Result<Vec<Response>> {
         self.admit()?;
+        self.advance_prefill()?;
         self.decode_once()
     }
 
@@ -317,6 +420,9 @@ impl InferenceServer {
             return Ok(());
         }
         let now = Instant::now();
+        if self.prefill_chunk > 0 {
+            return self.admit_chunked(admitted, now);
+        }
         // One prefill covering the newly admitted lanes. `fresh_mask`
         // tells backends which lanes matter so they can skip the rest
         // (the native runner does; static PJRT artifacts compute all).
@@ -382,16 +488,137 @@ impl InferenceServer {
             let req = adm.request;
             let seed = req.params.seed ^ req.id;
             self.lanes[slot] = Some(Lane {
+                cursor: req.prompt.len(),
                 request: req,
                 blocks: adm.chain,
                 generated: Vec::new(),
                 first_token_at: None,
+                last_token_at: None,
+                max_gap_s: 0.0,
                 rng: Pcg64::seeded(seed),
             });
         }
         let busy = self.lanes.iter().filter(|l| l.is_some()).count();
         self.stats.max_concurrency = self.stats.max_concurrency.max(busy);
         self.sync_prefix_stats();
+        Ok(())
+    }
+
+    /// Chunked-mode admission (DESIGN.md S22): no prompt math runs here.
+    /// Each admitted lane's rows in the LIVE cache slabs are zeroed (a
+    /// recycled lane must be bitwise-indistinguishable from the
+    /// monolithic path, whose whole-lane splice from freshly zeroed
+    /// prefill slabs clears any stale rows), cached prefix rows are
+    /// spliced straight into the live slabs, and the lane parks with its
+    /// prefill cursor at the cached length. [`InferenceServer::step`]'s
+    /// `advance_prefill` then computes at most one chunk per engine
+    /// iteration until the cursor reaches the prompt length.
+    fn admit_chunked(
+        &mut self,
+        admitted: Vec<Admission>,
+        now: Instant,
+    ) -> Result<()> {
+        for adm in admitted {
+            let slot = adm.slot;
+            if adm.request.prompt.len() >= self.max_seq {
+                bail!("prompt exceeds serving window");
+            }
+            for dst in self.caches.iter_mut() {
+                zero_lane(dst, slot)?;
+            }
+            if adm.cached_tokens > 0 {
+                for (dst, rows) in
+                    self.caches.iter_mut().zip(&adm.cached_rows)
+                {
+                    splice_prefix_rows(dst, rows, slot, adm.cached_tokens)?;
+                }
+            }
+            self.stats.record_admission_wait(
+                (now - adm.request.enqueued).as_secs_f64(),
+            );
+            self.stats.prefill_tokens +=
+                adm.request.prompt.len() - adm.cached_tokens;
+            let req = adm.request;
+            let seed = req.params.seed ^ req.id;
+            self.lanes[slot] = Some(Lane {
+                cursor: adm.cached_tokens,
+                request: req,
+                blocks: adm.chain,
+                generated: Vec::new(),
+                first_token_at: None,
+                last_token_at: None,
+                max_gap_s: 0.0,
+                rng: Pcg64::seeded(seed),
+            });
+        }
+        let busy = self.lanes.iter().filter(|l| l.is_some()).count();
+        self.stats.max_concurrency = self.stats.max_concurrency.max(busy);
+        self.sync_prefix_stats();
+        Ok(())
+    }
+
+    /// Advance every mid-prefill lane by at most one chunk of prompt
+    /// tokens (a no-op in monolithic mode or when nothing is pending).
+    /// All pending lanes share ONE batched
+    /// [`Backend::prefill_lanes_from`] call on the live cache slabs —
+    /// the runner computes only the fresh lanes' `start..len` positions
+    /// and writes only their rows, so live lanes' rows are untouched
+    /// (S17 row-independence). A lane whose cursor reaches its prompt
+    /// length has its final-position logits row spliced into the live
+    /// logits and decodes THIS same iteration — exactly the iteration a
+    /// monolithic admission would first decode it.
+    fn advance_prefill(&mut self) -> Result<()> {
+        if self.prefill_chunk == 0 {
+            return Ok(());
+        }
+        let mut tokens = vec![0i32; self.batch * self.max_seq];
+        let mut lens = vec![1i32; self.batch];
+        let mut fresh = vec![false; self.batch];
+        let mut starts = vec![0i32; self.batch];
+        let mut any = false;
+        for slot in 0..self.batch {
+            let Some(lane) = &self.lanes[slot] else { continue };
+            let plen = lane.request.prompt.len();
+            if lane.cursor >= plen {
+                continue;
+            }
+            let end = plen.min(lane.cursor + self.prefill_chunk);
+            for i in lane.cursor..end {
+                tokens[slot * self.max_seq + i] =
+                    lane.request.prompt[i] as i32;
+            }
+            lens[slot] = end as i32;
+            starts[slot] = lane.cursor as i32;
+            fresh[slot] = true;
+            any = true;
+        }
+        if !any {
+            return Ok(());
+        }
+        let caches = std::mem::take(&mut self.caches);
+        let (logits, caches) = self
+            .backend
+            .prefill_lanes_from(&tokens, &lens, &fresh, &starts, caches)?;
+        self.caches = caches;
+        self.stats.prefills += 1;
+        for slot in 0..self.batch {
+            if !fresh[slot] {
+                continue;
+            }
+            let done = match self.lanes[slot].as_mut() {
+                Some(lane) => {
+                    lane.cursor = lens[slot] as usize;
+                    lane.cursor == lane.request.prompt.len()
+                }
+                None => false,
+            };
+            if done {
+                let lane_logits = self.logits.get_or_insert_with(|| {
+                    HostTensor::zeros(logits.shape())
+                });
+                splice_row(lane_logits, &logits, slot)?;
+            }
+        }
         Ok(())
     }
 
@@ -417,7 +644,16 @@ impl InferenceServer {
     ) -> Response {
         let now = Instant::now();
         self.stats.completed += 1;
-        self.stats.generated_tokens += lane.generated.len();
+        let n = lane.generated.len();
+        self.stats.generated_tokens += n;
+        // TPOT: mean inter-token gap across the decode phase. One-token
+        // generations have no gap to average; report 0.
+        let tpot = match (lane.first_token_at, lane.last_token_at) {
+            (Some(first), Some(last)) if n > 1 => {
+                (last - first).as_secs_f64() / (n - 1) as f64
+            }
+            _ => 0.0,
+        };
         let response = Response {
             id: lane.request.id,
             tokens: lane.generated,
@@ -425,9 +661,15 @@ impl InferenceServer {
                 .first_token_at
                 .map(|t| (t - lane.request.enqueued).as_secs_f64())
                 .unwrap_or(0.0),
+            tpot,
             latency: (now - lane.request.enqueued).as_secs_f64(),
             finish: reason,
         };
+        self.stats.record_ttft(response.ttft);
+        self.stats.record_tpot(tpot);
+        if lane.max_gap_s > self.stats.max_decode_gap_s {
+            self.stats.max_decode_gap_s = lane.max_gap_s;
+        }
         if self.queue.prefix_enabled() {
             let bt = self.queue.allocator.block_tokens;
             let aligned = lane.request.prompt.len() / bt * bt;
@@ -453,9 +695,12 @@ impl InferenceServer {
         response
     }
 
-    /// One decode step for every lane; sample + handle completions.
+    /// One decode step for every live lane; sample + handle completions.
+    /// Mid-prefill lanes (chunked mode) are skipped everywhere: they
+    /// have no logits row yet, never sample, and their slot chain does
+    /// not advance.
     fn decode_once(&mut self) -> Result<Vec<Response>> {
-        if self.lanes.iter().all(|l| l.is_none()) {
+        if !self.lanes.iter().any(is_live) {
             return Ok(Vec::new());
         }
         // Sample the block high-water mark BEFORE this step's releases,
@@ -478,11 +723,22 @@ impl InferenceServer {
         let mut pos = vec![0i32; self.batch];
         for slot in 0..self.batch {
             if let Some(lane) = &mut self.lanes[slot] {
+                if lane.cursor < lane.request.prompt.len() {
+                    continue; // mid-prefill: nothing to sample yet
+                }
                 let row = &lvals[slot * vocab..(slot + 1) * vocab];
                 let tok = sample(row, &lane.request.params, &mut lane.rng);
-                if lane.first_token_at.is_none() {
-                    lane.first_token_at = Some(Instant::now());
+                let tnow = Instant::now();
+                if let Some(prev) = lane.last_token_at {
+                    let gap = (tnow - prev).as_secs_f64();
+                    if gap > lane.max_gap_s {
+                        lane.max_gap_s = gap;
+                    }
                 }
+                if lane.first_token_at.is_none() {
+                    lane.first_token_at = Some(tnow);
+                }
+                lane.last_token_at = Some(tnow);
                 lane.generated.push(tok);
                 next[slot] = tok as i32;
                 pos[slot] = self.slots.len_of(slot) as i32;
@@ -492,9 +748,12 @@ impl InferenceServer {
         let mut done = Vec::new();
         for slot in 0..self.batch {
             let finished = match &self.lanes[slot] {
-                Some(lane) => {
-                    // lint: allow(R3) — a busy lane has sampled at
-                    // least one token (prefill pushes the first).
+                // Mid-prefill lanes have sampled nothing and cannot
+                // finish; the `_` arm covers them and idle slots.
+                Some(lane) if lane.cursor >= lane.request.prompt.len() => {
+                    // lint: allow(R3) — a live lane has sampled at
+                    // least one token (the loop above pushes one every
+                    // iteration a lane is live).
                     let last = *lane.generated.last().unwrap();
                     let hit_stop =
                         lane.request.params.stop_token == Some(last);
@@ -502,7 +761,7 @@ impl InferenceServer {
                         >= lane.request.params.max_new_tokens;
                     hit_stop || hit_len
                 }
-                None => false,
+                _ => false,
             };
             if finished {
                 // lint: allow(R3) — `finished` is only true in the
@@ -518,11 +777,11 @@ impl InferenceServer {
                 done.push(self.finish_lane(slot, lane, reason));
             }
         }
-        // Decode the sampled tokens for lanes still running; idle lanes
-        // are flagged so backends that can skip them (native) do.
-        if self.lanes.iter().any(|l| l.is_some()) {
-            let active: Vec<bool> =
-                self.lanes.iter().map(|l| l.is_some()).collect();
+        // Decode the sampled tokens for live lanes still running; idle
+        // and mid-prefill lanes are flagged inactive so backends that
+        // can skip them (native) do.
+        if self.lanes.iter().any(is_live) {
+            let active: Vec<bool> = self.lanes.iter().map(is_live).collect();
             let caches = std::mem::take(&mut self.caches);
             let (logits, caches) = self.backend.decode_active(
                 &next, &pos, &active, caches, self.use_pallas)?;
@@ -543,13 +802,13 @@ impl InferenceServer {
                 }
             }
             for slot in 0..self.batch {
-                if self.lanes[slot].is_none() {
-                    continue;
+                if !active[slot] {
+                    continue; // idle, or mid-prefill (no token decoded)
                 }
                 self.slots.advance(slot)?;
                 let need = self.slots.len_of(slot);
-                // lint: allow(R3) — this loop iterates busy slots only;
-                // the lane was matched Some at the top of the pass.
+                // lint: allow(R3) — this loop iterates live slots only;
+                // active[slot] proved the lane Some above.
                 let lane = self.lanes[slot].as_mut().unwrap();
                 if self
                     .queue
@@ -579,6 +838,8 @@ impl InferenceServer {
                 .peak_cache_bytes
                 .max(self.slots.live_cache_bytes());
         } else {
+            // No live lane remains (mid-prefill lanes may still exist:
+            // their completing chunk re-seeds logits via splice_row).
             self.logits = None;
         }
         Ok(done)
@@ -705,6 +966,49 @@ fn extract_prefix_rows(
             }
         })
         .collect()
+}
+
+/// Zero lane `lane`'s rows of a stacked `[L, B, ...]` cache tensor
+/// (payload AND scales for quantized slabs — `HostTensor::zeros_q8`
+/// starts all scales at 0, so this restores exactly that state).
+/// Chunked admission uses it so a recycled lane is
+/// bitwise-indistinguishable from the monolithic path, whose whole-lane
+/// splice from freshly zeroed prefill slabs clears any stale rows
+/// beyond the new prompt.
+fn zero_lane(dst: &mut HostTensor, lane: usize) -> Result<()> {
+    let shape = dst.shape().to_vec();
+    if shape.len() < 2 {
+        bail!("cache zero shape too small: {shape:?}");
+    }
+    // lint: allow(R3) — len >= 2 bailed on the line above.
+    let (layers, batch) = (shape[0], shape[1]);
+    let lane_stride: usize = shape[2..].iter().product();
+    let layer_stride = batch * lane_stride;
+    if lane >= batch {
+        bail!("cache zero lane {lane} outside [0, {batch})");
+    }
+    match dst {
+        HostTensor::F32(d, _) => {
+            for l in 0..layers {
+                let off = l * layer_stride + lane * lane_stride;
+                d[off..off + lane_stride].fill(0.0);
+            }
+        }
+        HostTensor::Q8 { data, scales, row, group, .. } => {
+            let g = n_groups(*row, *group);
+            let lane_rows = lane_stride / *row;
+            let scale_lane = lane_rows * g;
+            let scale_layer = batch * scale_lane;
+            for l in 0..layers {
+                let off = l * layer_stride + lane * lane_stride;
+                data[off..off + lane_stride].fill(0);
+                let soff = l * scale_layer + lane * scale_lane;
+                scales[soff..soff + scale_lane].fill(0.0);
+            }
+        }
+        HostTensor::I32(..) => bail!("cache slabs are never i32"),
+    }
+    Ok(())
 }
 
 /// Copy lane `b`'s rows of a stacked [L, B, ...] cache tensor (payload
@@ -872,6 +1176,22 @@ mod tests {
             seen[sample(&row, &p, &mut rng) as usize] = true;
         }
         assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn zero_lane_clears_only_target() {
+        let mut dst = HostTensor::F32(
+            (0..24).map(|x| x as f32).collect(),
+            vec![2, 3, 4], // L=2, B=3, rest=4
+        );
+        zero_lane(&mut dst, 1).unwrap();
+        let d = dst.as_f32().unwrap();
+        // lane 1 of layer 0 = elems 4..8; layer 1 = 16..20
+        assert!(d[4..8].iter().all(|&x| x == 0.0));
+        assert!(d[16..20].iter().all(|&x| x == 0.0));
+        assert_eq!(&d[0..4], &[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(&d[8..12], &[8.0, 9.0, 10.0, 11.0]);
+        assert_eq!(&d[20..24], &[20.0, 21.0, 22.0, 23.0]);
     }
 
     #[test]

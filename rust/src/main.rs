@@ -91,7 +91,7 @@ COMMANDS
              [--ckpt PATH] [--selection PATH] [--requests N] [--max-new N]
              [--max-batch B] [--max-seq S] [--block-tokens N]
              [--cache-budget-mb N] [--cache-dtype f32|int8]
-             [--sparse-k N] [--optimistic-admission]
+             [--sparse-k N] [--prefill-chunk N] [--optimistic-admission]
              [--prefix-cache] [--temperature F] [--top-p F] [--seed N]
              [--r N (ropelite uniform fallback)] [--pallas]
              native backend (default): no artifacts needed; random-init
@@ -108,7 +108,11 @@ COMMANDS
              --sparse-k N (native only) attends only the top-N cache
              rows per decode step, picked by a cheap latent-space
              scoring pass (N >= sequence length reproduces dense decode
-             bitwise).
+             bitwise). --prefill-chunk N (native only) splits prompt
+             prefill into N-token chunks interleaved with decode steps,
+             so live lanes never stall behind one long prompt; 0 (the
+             default) prefills each admission whole. Chunked and
+             monolithic runs are bitwise identical per request.
   bench      [--config C] [--steps N] [--batch B] [--prompt N]
              [--out PATH]   native decode sweep -> BENCH_native_decode.json
              (every variant at cache dtype f32 AND int8, each measured
@@ -116,12 +120,15 @@ COMMANDS
              then a continuous-batching capacity sweep
              [--max-batch B] [--cb-requests N] [--cb-max-seq S]
              [--block-tokens N] [--cache-budget-mb N] [--cb-out PATH]
-             [--shared-prefix N] [--sparse-k N]
+             [--shared-prefix N] [--sparse-k N] [--prefill-chunk N]
              -> BENCH_continuous_batching.json (dense vs J-LRD max
              concurrency under one cache budget with an f32/int8 pair
              per variant, plus a shared-system-prompt trace replayed
              with the prefix radix cache off/on, plus a long-context
-             trace replayed dense vs sparse at --sparse-k)
+             trace replayed dense vs sparse at --sparse-k, plus a
+             long-prompt-arrives-mid-decode trace replayed monolithic
+             vs chunked at --prefill-chunk; rows carry TTFT p50/p95/p99,
+             mean TPOT, and the max inter-token gap)
   eval       [--backend native|pjrt] --config C --variant TAG [--ckpt PATH]
              [--selection PATH] [--probes N] [--seed N] [--r N]
              [--cache-dtype f32|int8]  (int8, native only: score the
@@ -323,6 +330,7 @@ fn scheduler_config(
         prefix_cache: args.has("prefix-cache"),
         cache_dtype: cache_dtype(args)?,
         sparse_k: sparse_k(args)?,
+        prefill_chunk_tokens: args.usize_or("prefill-chunk", 0)?,
     })
 }
 
@@ -383,6 +391,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
         server.stats.max_concurrency,
         1e3 * server.stats.mean_admission_wait_s(),
     );
+    if !server.stats.ttft_recent_s.is_empty() {
+        let ttft =
+            elitekv::util::stats::Summary::of(&server.stats.ttft_recent_s);
+        let tpot =
+            elitekv::util::stats::Summary::of(&server.stats.tpot_recent_s);
+        println!(
+            "  latency: ttft p50 {:.2} / p95 {:.2} / p99 {:.2} ms, \
+             tpot mean {:.3} ms, max inter-token gap {:.2} ms",
+            1e3 * ttft.p50,
+            1e3 * ttft.p95,
+            1e3 * ttft.p99,
+            1e3 * tpot.mean,
+            1e3 * server.stats.max_decode_gap_s,
+        );
+    }
     if args.has("prefix-cache") {
         println!(
             "  prefix cache: {} hits / {} misses, {} tokens reused \
@@ -438,6 +461,8 @@ fn cmd_bench(args: &Args) -> Result<()> {
         shared_prefix_tokens: args
             .usize_or("shared-prefix", defaults.shared_prefix_tokens)?,
         sparse_k: args.usize_or("sparse-k", defaults.sparse_k)?,
+        prefill_chunk: args
+            .usize_or("prefill-chunk", defaults.prefill_chunk)?,
         seed: args.u64_or("seed", defaults.seed)?,
     };
     let cb_out = args.str_or("cb-out", "BENCH_continuous_batching.json");

@@ -91,6 +91,17 @@ pub trait Backend {
         false
     }
 
+    /// True when this backend can run chunked prefill (DESIGN.md S22):
+    /// the scheduler advances a pending lane's prompt a fixed number of
+    /// tokens per engine iteration via [`Backend::prefill_lanes_from`]
+    /// with a moving start offset, writing directly into the live cache
+    /// slabs. The machinery is exactly the mid-sequence resume the
+    /// prefix radix cache needs, so the default mirrors
+    /// [`Backend::supports_prefix_prefill`].
+    fn supports_chunked_prefill(&self) -> bool {
+        self.supports_prefix_prefill()
+    }
+
     /// [`Backend::prefill_lanes`] resuming from cached prefixes: lane
     /// `i`'s positions `0..start[i]` are already present in the passed
     /// `caches` (spliced there by the scheduler from the prefix radix

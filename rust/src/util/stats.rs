@@ -10,6 +10,7 @@ pub struct Summary {
     pub max: f64,
     pub p50: f64,
     pub p90: f64,
+    pub p95: f64,
     pub p99: f64,
 }
 
@@ -30,6 +31,7 @@ impl Summary {
             max: sorted[n - 1],
             p50: percentile(&sorted, 0.50),
             p90: percentile(&sorted, 0.90),
+            p95: percentile(&sorted, 0.95),
             p99: percentile(&sorted, 0.99),
         }
     }
@@ -37,8 +39,10 @@ impl Summary {
     /// Human-readable one-liner with the given unit.
     pub fn fmt(&self, unit: &str) -> String {
         format!(
-            "mean {:.3}{u} ± {:.3} (p50 {:.3}{u}, p90 {:.3}{u}, p99 {:.3}{u}, n={})",
-            self.mean, self.std, self.p50, self.p90, self.p99, self.n,
+            "mean {:.3}{u} ± {:.3} (p50 {:.3}{u}, p90 {:.3}{u}, p95 {:.3}{u}, \
+             p99 {:.3}{u}, n={})",
+            self.mean, self.std, self.p50, self.p90, self.p95, self.p99,
+            self.n,
             u = unit
         )
     }
@@ -127,9 +131,44 @@ mod tests {
     fn summary_percentiles_ordered() {
         let xs: Vec<f64> = (0..100).map(|i| i as f64).collect();
         let s = Summary::of(&xs);
-        assert!(s.min <= s.p50 && s.p50 <= s.p90 && s.p90 <= s.p99);
+        assert!(s.min <= s.p50 && s.p50 <= s.p90 && s.p90 <= s.p95);
+        assert!(s.p95 <= s.p99 && s.p99 <= s.max);
         assert!((s.p50 - 49.5).abs() < 1e-9);
+        assert!((s.p95 - 94.05).abs() < 1e-9);
         assert!((s.mean - 49.5).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty sample")]
+    fn summary_of_empty_panics() {
+        let _ = Summary::of(&[]);
+    }
+
+    #[test]
+    fn summary_single_sample_is_every_percentile() {
+        let s = Summary::of(&[7.5]);
+        assert_eq!(s.n, 1);
+        assert_eq!(s.min, 7.5);
+        assert_eq!(s.max, 7.5);
+        assert_eq!(s.p50, 7.5);
+        assert_eq!(s.p90, 7.5);
+        assert_eq!(s.p95, 7.5);
+        assert_eq!(s.p99, 7.5);
+        assert_eq!(s.std, 0.0);
+    }
+
+    #[test]
+    fn percentile_exact_quantile_boundaries() {
+        // 5 evenly spaced points: q*(n-1) lands exactly on indices, so
+        // the interpolation must return the sample values themselves.
+        let sorted = [0.0, 1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&sorted, 0.0), 0.0);
+        assert_eq!(percentile(&sorted, 0.25), 1.0);
+        assert_eq!(percentile(&sorted, 0.50), 2.0);
+        assert_eq!(percentile(&sorted, 0.75), 3.0);
+        assert_eq!(percentile(&sorted, 1.0), 4.0);
+        // midpoint between two samples interpolates linearly
+        assert!((percentile(&sorted, 0.125) - 0.5).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,683 @@
+//! Chunked-prefill differential suite (ISSUE 8 / DESIGN.md S22):
+//! `--prefill-chunk N` splits prompt prefill into N-token chunks
+//! interleaved with decode steps, Sarathi-style, so live lanes never
+//! stall behind one long monolithic prefill.
+//!
+//! The correctness contract is BITWISE: chunking is pure scheduling.
+//! S17 row-independence (a batched kernel step's row i depends only on
+//! row i) makes chunk boundaries invisible to the math, so a request's
+//! logits trajectory, greedy token stream, and final cache rows are
+//! identical bit-for-bit whether its prompt was prefilled in one call
+//! or in N-token pieces across many engine iterations.
+//!
+//! Pins:
+//! * **degenerates in lockstep** — `chunk = 0` is monolithic by
+//!   definition; `chunk >= prompt_len` completes prefill in the
+//!   admission iteration, so the whole engine runs step-for-step in
+//!   lockstep with the monolithic engine and EVERY per-step logits
+//!   tensor matches bitwise;
+//! * **general chunks by trajectory** — at chunk sizes {1, 3,
+//!   block_tokens, 2^20} the two engines desynchronize in iteration
+//!   timing, so equality is pinned per REQUEST: the sequence of logits
+//!   rows each request samples from, its greedy stream, and (on traces
+//!   with a deterministic slot mapping) the final cache slabs — across
+//!   {mha, slrd, jlrd-25%} × {f32, int8} × {prefix cache on/off} ×
+//!   {sparse-k on/off};
+//! * **lane recycling** — single-lane sequential traces pin the chunked
+//!   path's lane zeroing against the monolithic path's whole-lane
+//!   splice (stale rows from the previous occupant must vanish
+//!   identically);
+//! * **radix interplay** — a chunk boundary landing inside a radix
+//!   block still splices correctly (cached prefix rows are
+//!   block-aligned; chunk cursors are not);
+//! * **reference model** — a seeded property test drives random traces
+//!   through the chunked engine and checks its admission/cursor state
+//!   machine against a naive step-by-step reference: cursors monotone,
+//!   at most one chunk per iteration, no lane decodes twice per
+//!   iteration, and every live lane advances every iteration even
+//!   while a long prompt is mid-prefill (no head-of-line stall).
+
+use std::collections::BTreeMap;
+
+use elitekv::config::{ModelConfig, Variant};
+use elitekv::coordinator::{
+    GenParams, InferenceServer, Request, Response, SchedulerConfig,
+};
+use elitekv::data::CorpusGen;
+use elitekv::kvcache::CacheDtype;
+use elitekv::native::{NativeModel, NativeRunner};
+use elitekv::runtime::{Backend as _, HostTensor};
+use elitekv::search::uniform_selection;
+use elitekv::util::prop;
+
+/// Decode window of every engine in this suite.
+const WINDOW: usize = 64;
+
+/// A chunk size no prompt in this suite can reach: "whole prompt in one
+/// chunk", the upper degenerate.
+const HUGE_CHUNK: usize = 1 << 20;
+
+/// Engine over a 64-token window. Identical model seeds across calls:
+/// two engines differing only in `chunk` serve bitwise-identical
+/// weights, so any divergence is the scheduler's fault.
+fn server(
+    variant: Variant,
+    sel_r: Option<usize>,
+    dtype: CacheDtype,
+    sparse_k: Option<usize>,
+    lanes: usize,
+    prefix_cache: bool,
+    chunk: usize,
+) -> InferenceServer {
+    let cfg = ModelConfig::tiny();
+    let sel = sel_r.map(|r| uniform_selection(&cfg, r));
+    let mut model =
+        NativeModel::init(&cfg, variant, 0xc40c, sel.as_ref()).unwrap();
+    model.set_cache_dtype(dtype);
+    model.set_sparse_k(sparse_k);
+    let sched_k = model.sparse_k;
+    let runner = NativeRunner::new(model, lanes, WINDOW).unwrap();
+    let cfg = SchedulerConfig {
+        cache_dtype: dtype,
+        sparse_k: sched_k,
+        prefix_cache,
+        prefill_chunk_tokens: chunk,
+        ..Default::default()
+    };
+    InferenceServer::with_config(Box::new(runner), &cfg).unwrap()
+}
+
+fn greedy(id: u64, prompt: Vec<u32>, max_new: usize) -> Request {
+    Request::new(
+        id,
+        prompt,
+        GenParams {
+            max_new_tokens: max_new,
+            stop_token: None,
+            temperature: 0.0,
+            ..Default::default()
+        },
+    )
+}
+
+/// Bitwise slab equality at either dtype: f32 values, or int8 payloads
+/// AND scales (a scale drift with compensating payloads still fails).
+fn assert_slabs_eq(tag: &str, a: &[HostTensor], b: &[HostTensor]) {
+    assert_eq!(a.len(), b.len(), "{tag}: slab count diverges");
+    for (i, (sa, sb)) in a.iter().zip(b).enumerate() {
+        match sa.as_f32() {
+            Ok(fa) => assert_eq!(
+                fa,
+                sb.as_f32().unwrap(),
+                "{tag}: f32 slab {i} diverges"
+            ),
+            Err(_) => {
+                let (da, sca, ..) = sa.as_q8().unwrap();
+                let (db, scb, ..) = sb.as_q8().unwrap();
+                assert_eq!(da, db, "{tag}: int8 payload slab {i} diverges");
+                assert_eq!(sca, scb, "{tag}: int8 scale slab {i} diverges");
+            }
+        }
+    }
+}
+
+/// Replay `(arrive_step, request)` items through one engine; returns the
+/// id-sorted responses plus each request's observed logits-row
+/// trajectory. After every step, the post-step logits row of each LIVE
+/// occupied slot is recorded under its request id — a pure function of
+/// the request under S17 row-independence, so trajectories compare
+/// across engines regardless of iteration timing or slot mapping.
+fn run_trace(
+    s: &mut InferenceServer,
+    items: &[(usize, Request)],
+) -> (Vec<Response>, BTreeMap<u64, Vec<Vec<f32>>>) {
+    let vocab = s.backend.config().vocab;
+    let mut responses = Vec::new();
+    let mut rows: BTreeMap<u64, Vec<Vec<f32>>> = BTreeMap::new();
+    let mut next = 0usize;
+    let mut step = 0usize;
+    while next < items.len() || s.busy() {
+        while next < items.len() && items[next].0 <= step {
+            s.submit(items[next].1.clone()).unwrap();
+            next += 1;
+        }
+        responses.extend(s.step().unwrap());
+        if let Some(lg) = s.logits_snapshot() {
+            let lv = lg.as_f32().unwrap();
+            for (slot, lane) in s.lane_progress().iter().enumerate() {
+                if let Some((id, cursor, plen, _)) = lane {
+                    if cursor >= plen {
+                        rows.entry(*id).or_default().push(
+                            lv[slot * vocab..(slot + 1) * vocab].to_vec(),
+                        );
+                    }
+                }
+            }
+        }
+        step += 1;
+    }
+    responses.sort_by_key(|r| r.id);
+    (responses, rows)
+}
+
+/// THE general pin: run the same trace through a monolithic engine and a
+/// chunked engine and require per-request bitwise equality of greedy
+/// streams and logits-row trajectories; with `compare_slabs` (traces
+/// whose slot mapping is deterministic across the two engines) the
+/// final cache slabs must match bitwise too.
+#[allow(clippy::too_many_arguments)]
+fn assert_chunked_eq_monolithic(
+    variant: Variant,
+    sel_r: Option<usize>,
+    dtype: CacheDtype,
+    prefix_cache: bool,
+    sparse_k: Option<usize>,
+    lanes: usize,
+    chunk: usize,
+    items: &[(usize, Request)],
+    compare_slabs: bool,
+) {
+    let tag = format!(
+        "{}/{:?}/chunk={chunk}/prefix={prefix_cache}",
+        variant.tag(),
+        dtype
+    );
+    let mut mono =
+        server(variant.clone(), sel_r, dtype, sparse_k, lanes, prefix_cache, 0);
+    let mut chunked =
+        server(variant, sel_r, dtype, sparse_k, lanes, prefix_cache, chunk);
+    let (resp_m, rows_m) = run_trace(&mut mono, items);
+    let (resp_c, rows_c) = run_trace(&mut chunked, items);
+    assert_eq!(resp_m.len(), items.len(), "{tag}: monolithic lost requests");
+    assert_eq!(resp_c.len(), items.len(), "{tag}: chunked lost requests");
+    for (a, b) in resp_m.iter().zip(&resp_c) {
+        assert_eq!(a.id, b.id, "{tag}: response ids diverge");
+        assert_eq!(
+            a.tokens, b.tokens,
+            "{tag}: request {} greedy streams diverge",
+            a.id
+        );
+        assert_eq!(
+            a.finish, b.finish,
+            "{tag}: request {} finish reasons diverge",
+            a.id
+        );
+    }
+    assert_eq!(
+        rows_m.keys().collect::<Vec<_>>(),
+        rows_c.keys().collect::<Vec<_>>(),
+        "{tag}: observed request sets diverge"
+    );
+    for (id, tm) in &rows_m {
+        let tc = &rows_c[id];
+        assert_eq!(
+            tm.len(),
+            tc.len(),
+            "{tag}: request {id} trajectory lengths diverge"
+        );
+        for (j, (ra, rb)) in tm.iter().zip(tc).enumerate() {
+            assert_eq!(ra, rb, "{tag}: request {id} logits row {j} diverges");
+        }
+    }
+    if compare_slabs {
+        assert_slabs_eq(&tag, mono.cache_snapshot(), chunked.cache_snapshot());
+    }
+}
+
+/// Staggered mixed trace: one arrival per engine step, prompt lengths
+/// 6..=27, so admissions keep landing while other lanes are mid-prefill
+/// (at small chunks) or mid-decode. Generations are >= 4 tokens so no
+/// request can finish before the LAST arrival is admitted — request i
+/// therefore lands on slot i in both engines (the slot manager claims
+/// the lowest idle slot), making the final slabs directly comparable.
+fn mixed_items(n: usize, seed: u64) -> Vec<(usize, Request)> {
+    let mut gen = CorpusGen::new(512, seed);
+    (0..n)
+        .map(|i| {
+            let plen = 6 + 7 * (i % 4);
+            let max_new = 4 + (i % 4);
+            (i, greedy(i as u64, gen.stream(plen), max_new))
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// Degenerate chunks run in full per-step lockstep.
+// ---------------------------------------------------------------------
+
+/// `chunk >= prompt_len` finishes each admission's prefill inside its
+/// admission iteration, exactly when the monolithic path does — so the
+/// engines never desynchronize and EVERY per-step logits tensor (not
+/// just per-request rows) must match bitwise, lane recycling included.
+fn assert_degenerate_lockstep(
+    variant: Variant,
+    sel_r: Option<usize>,
+    dtype: CacheDtype,
+    chunk: usize,
+    prompt_len: usize,
+) {
+    let tag = format!("{}/{:?}/lockstep chunk={chunk}", variant.tag(), dtype);
+    let mut mono = server(variant.clone(), sel_r, dtype, None, 2, false, 0);
+    let mut chunked = server(variant, sel_r, dtype, None, 2, false, chunk);
+    let mut gen = CorpusGen::new(512, 77);
+    let mut out_m = Vec::new();
+    let mut out_c = Vec::new();
+    for i in 0..3u64 {
+        let prompt = gen.stream(prompt_len);
+        let max_new = 4 + (i as usize % 3);
+        mono.submit(greedy(i, prompt.clone(), max_new)).unwrap();
+        chunked.submit(greedy(i, prompt, max_new)).unwrap();
+    }
+    while mono.busy() || chunked.busy() {
+        out_m.extend(mono.step().unwrap());
+        out_c.extend(chunked.step().unwrap());
+        match (mono.logits_snapshot(), chunked.logits_snapshot()) {
+            (Some(a), Some(b)) => assert_eq!(
+                a.as_f32().unwrap(),
+                b.as_f32().unwrap(),
+                "{tag}: per-step logits diverge"
+            ),
+            (a, b) => assert_eq!(
+                a.is_some(),
+                b.is_some(),
+                "{tag}: engines desynchronized"
+            ),
+        }
+    }
+    out_m.sort_by_key(|r| r.id);
+    out_c.sort_by_key(|r| r.id);
+    assert_eq!(out_m.len(), 3, "{tag}: requests lost");
+    for (a, b) in out_m.iter().zip(&out_c) {
+        assert_eq!((a.id, &a.tokens), (b.id, &b.tokens), "{tag}: streams");
+    }
+    assert_slabs_eq(&tag, mono.cache_snapshot(), chunked.cache_snapshot());
+}
+
+#[test]
+fn chunk_zero_is_monolithic() {
+    // chunk = 0 must BE the monolithic path (not merely equivalent):
+    // the engine takes the admission-time prefill branch and issues one
+    // prefill per admission wave, never one per chunk.
+    let mut a = server(Variant::Mha, None, CacheDtype::F32, None, 2, false, 0);
+    let mut b = server(Variant::Mha, None, CacheDtype::F32, None, 2, false, 0);
+    let mut gen = CorpusGen::new(512, 5);
+    for i in 0..2u64 {
+        let p = gen.stream(10);
+        a.submit(greedy(i, p.clone(), 4)).unwrap();
+        b.submit(greedy(i, p, 4)).unwrap();
+    }
+    let ra = a.run_to_completion().unwrap();
+    let rb = b.run_to_completion().unwrap();
+    assert_eq!(ra.len(), rb.len());
+    assert_eq!(a.stats.prefills, 1, "chunk=0 must prefill once per wave");
+    assert_eq!(a.stats.prefills, b.stats.prefills);
+}
+
+#[test]
+fn huge_chunk_is_one_chunk_lockstep_mha_f32() {
+    assert_degenerate_lockstep(
+        Variant::Mha, None, CacheDtype::F32, HUGE_CHUNK, 13,
+    );
+}
+
+#[test]
+fn huge_chunk_is_one_chunk_lockstep_jlrd_int8() {
+    let v = Variant::EliteKv { r: 4, d_ckv: 64 };
+    assert_degenerate_lockstep(v, Some(4), CacheDtype::Int8, HUGE_CHUNK, 13);
+}
+
+#[test]
+fn chunk_exactly_prompt_len_is_one_chunk_lockstep() {
+    // chunk == prompt length: the boundary case of "one chunk".
+    assert_degenerate_lockstep(Variant::Mha, None, CacheDtype::F32, 12, 12);
+}
+
+// ---------------------------------------------------------------------
+// General chunk sizes: variants × dtypes, multi-lane overlapping trace.
+// Lanes == n_requests and no slot is freed before the last arrival (see
+// mixed_items), so both engines map request i to slot i and the final
+// cache slabs compare bitwise too.
+// ---------------------------------------------------------------------
+
+fn assert_matrix_case(
+    variant: Variant,
+    sel_r: Option<usize>,
+    dtype: CacheDtype,
+    chunk: usize,
+) {
+    let items = mixed_items(4, 0xa11ce);
+    assert_chunked_eq_monolithic(
+        variant, sel_r, dtype, false, None, 4, chunk, &items, true,
+    );
+}
+
+#[test]
+fn chunk_1_mha_f32() {
+    assert_matrix_case(Variant::Mha, None, CacheDtype::F32, 1);
+}
+
+#[test]
+fn chunk_3_mha_f32() {
+    assert_matrix_case(Variant::Mha, None, CacheDtype::F32, 3);
+}
+
+#[test]
+fn chunk_block_tokens_mha_f32() {
+    // chunk == block_tokens (16): chunk boundaries coincide with block
+    // boundaries, the aligned case.
+    assert_matrix_case(Variant::Mha, None, CacheDtype::F32, 16);
+}
+
+#[test]
+fn chunk_3_mha_int8() {
+    assert_matrix_case(Variant::Mha, None, CacheDtype::Int8, 3);
+}
+
+#[test]
+fn chunk_1_slrd_f32() {
+    let v = Variant::Slrd { r: 4, d_ck: 32, d_cv: 48 };
+    assert_matrix_case(v, Some(4), CacheDtype::F32, 1);
+}
+
+#[test]
+fn chunk_3_slrd_int8() {
+    let v = Variant::Slrd { r: 4, d_ck: 32, d_cv: 48 };
+    assert_matrix_case(v, Some(4), CacheDtype::Int8, 3);
+}
+
+#[test]
+fn chunk_3_jlrd_f32() {
+    let v = Variant::EliteKv { r: 4, d_ckv: 64 };
+    assert_matrix_case(v, Some(4), CacheDtype::F32, 3);
+}
+
+#[test]
+fn chunk_16_jlrd_int8() {
+    let v = Variant::EliteKv { r: 4, d_ckv: 64 };
+    assert_matrix_case(v, Some(4), CacheDtype::Int8, 16);
+}
+
+// ---------------------------------------------------------------------
+// Composition: chunked prefill × sparse decode (S20).
+// ---------------------------------------------------------------------
+
+#[test]
+fn chunk_3_with_sparse_k_f32_and_int8() {
+    // Genuinely sparse k = 4 against 6..27-token prompts: the selection
+    // is a pure function of the cache rows, which chunking reproduces
+    // bit-for-bit, so sparse decode composes bitwise.
+    for (di, dtype) in
+        [CacheDtype::F32, CacheDtype::Int8].into_iter().enumerate()
+    {
+        let v = Variant::EliteKv { r: 4, d_ckv: 64 };
+        let items = mixed_items(4, 0x5fa + di as u64);
+        assert_chunked_eq_monolithic(
+            v, Some(4), dtype, false, Some(4), 4, 3, &items, true,
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Lane recycling: batch = 1 serializes every request through slot 0,
+// so the chunked path's lane zeroing runs against the stale rows of
+// the previous occupant — and must match the monolithic path's
+// whole-lane splice bitwise (final slab compared).
+// ---------------------------------------------------------------------
+
+#[test]
+fn single_lane_recycling_matches_monolithic() {
+    for dtype in [CacheDtype::F32, CacheDtype::Int8] {
+        // Descending prompt lengths: each later request is SHORTER than
+        // its predecessor, so stale rows beyond the new prompt exist and
+        // must be zeroed identically by both paths.
+        let mut gen = CorpusGen::new(512, 0xbead);
+        let items: Vec<(usize, Request)> = (0..3)
+            .map(|i| (0, greedy(i as u64, gen.stream(20 - 6 * i), 3 + i)))
+            .collect();
+        assert_chunked_eq_monolithic(
+            Variant::Mha, None, dtype, false, None, 1, 3, &items, true,
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Radix interplay: a chunk boundary inside a radix block still splices
+// correctly. Cached prefixes are block-aligned (full 16-token blocks);
+// chunk = 3 puts every later chunk boundary mid-block.
+// ---------------------------------------------------------------------
+
+#[test]
+fn chunk_boundary_inside_radix_block_f32_and_int8() {
+    for dtype in [CacheDtype::F32, CacheDtype::Int8] {
+        let mut gen = CorpusGen::new(512, 0xb10c);
+        let shared = gen.stream(32); // two full blocks of cached prefix
+        let mut items = Vec::new();
+        // Phase 1 (step 0) seeds the radix cache on completion; phase 2
+        // arrives late enough that request 0 has finished in BOTH
+        // engines (the chunked one takes more iterations), so its
+        // admissions resume from cached_tokens = 32 with chunk cursors
+        // at 35, 38, ... — inside block 2.
+        let mut p0 = shared.clone();
+        p0.extend(gen.stream(8));
+        items.push((0usize, greedy(0, p0, 3)));
+        for i in 1..4u64 {
+            let mut p = shared.clone();
+            p.extend(gen.stream(4 + 3 * (i as usize % 3)));
+            items.push((60, greedy(i, p, 3 + (i as usize % 3))));
+        }
+        let tag = format!("radix-chunk/{dtype:?}");
+        let mut mono = server(Variant::Mha, None, dtype, None, 4, true, 0);
+        let mut chunked = server(Variant::Mha, None, dtype, None, 4, true, 3);
+        let (resp_m, rows_m) = run_trace(&mut mono, &items);
+        let (resp_c, rows_c) = run_trace(&mut chunked, &items);
+        assert_eq!(resp_m.len(), 4, "{tag}: monolithic lost requests");
+        assert_eq!(resp_c.len(), 4, "{tag}: chunked lost requests");
+        for (a, b) in resp_m.iter().zip(&resp_c) {
+            assert_eq!(
+                (a.id, &a.tokens),
+                (b.id, &b.tokens),
+                "{tag}: streams diverge"
+            );
+        }
+        assert_eq!(rows_m, rows_c, "{tag}: trajectories diverge");
+        assert_slabs_eq(&tag, mono.cache_snapshot(), chunked.cache_snapshot());
+        // The interplay was real: phase 2 resumed from the radix cache
+        // in BOTH engines, with identical reuse accounting.
+        assert!(
+            chunked.stats.prefix_hits >= 1,
+            "{tag}: chunked engine never hit the radix cache"
+        );
+        assert_eq!(
+            mono.stats.prefix_hit_tokens, chunked.stats.prefix_hit_tokens,
+            "{tag}: prefix reuse accounting diverges"
+        );
+        assert_eq!(
+            mono.stats.prefill_tokens, chunked.stats.prefill_tokens,
+            "{tag}: prefilled-token accounting diverges"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Latency accounting sanity on the new stats surface.
+// ---------------------------------------------------------------------
+
+#[test]
+fn latency_rings_record_one_sample_per_completion() {
+    let mut s = server(Variant::Mha, None, CacheDtype::F32, None, 2, false, 3);
+    let mut gen = CorpusGen::new(512, 3);
+    s.submit(greedy(0, gen.stream(9), 5)).unwrap();
+    s.submit(greedy(1, gen.stream(7), 1)).unwrap(); // single token: tpot 0
+    let mut out = s.run_to_completion().unwrap();
+    out.sort_by_key(|r| r.id);
+    assert_eq!(out.len(), 2);
+    assert_eq!(s.stats.ttft_count, 2);
+    assert_eq!(s.stats.ttft_recent_s.len(), 2);
+    assert_eq!(s.stats.tpot_count, 2);
+    assert!(s.stats.ttft_recent_s.iter().all(|&t| t > 0.0));
+    assert!(out[0].ttft > 0.0 && out[0].tpot > 0.0);
+    assert_eq!(
+        out[1].tpot, 0.0,
+        "single-token generation has no inter-token gap"
+    );
+    assert!(s.stats.max_decode_gap_s > 0.0, "5-token decode saw gaps");
+}
+
+// ---------------------------------------------------------------------
+// Property test: the chunked admission/cursor state machine vs a naive
+// step-by-step reference model.
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+struct RefLane {
+    id: u64,
+    cursor: usize,
+    plen: usize,
+    max_new: usize,
+    gen: usize,
+}
+
+/// One reference engine iteration over `slots`: admit FIFO into the
+/// lowest idle slots, advance every pending cursor by at most `chunk`,
+/// then decode exactly one token on every live lane and retire finished
+/// lanes. Mirrors the engine's admit -> advance_prefill -> decode_once
+/// order: a lane whose FINAL chunk completes in the advance pass is
+/// live for the decode pass of the SAME iteration, and a freed slot is
+/// reusable only from the next iteration's admit.
+fn reference_step(
+    slots: &mut [Option<RefLane>],
+    queue: &mut Vec<RefLane>,
+    chunk: usize,
+) {
+    while !queue.is_empty() {
+        let Some(idle) = slots.iter().position(|s| s.is_none()) else {
+            break;
+        };
+        slots[idle] = Some(queue.remove(0));
+    }
+    for lane in slots.iter_mut().flatten() {
+        if lane.cursor < lane.plen {
+            lane.cursor = lane.plen.min(lane.cursor + chunk);
+        }
+    }
+    for slot in slots.iter_mut() {
+        let finished = match slot {
+            Some(lane) if lane.cursor >= lane.plen => {
+                lane.gen += 1;
+                lane.gen >= lane.max_new
+            }
+            _ => false,
+        };
+        if finished {
+            *slot = None;
+        }
+    }
+}
+
+#[test]
+fn chunked_scheduler_matches_reference_model() {
+    prop::check(
+        "chunked-scheduler-vs-reference",
+        12,
+        |rng| {
+            let lanes = rng.range(1, 4);
+            let chunk = [1, 2, 3, 5, 16][rng.range(0, 5)];
+            let n = rng.range(2, 7);
+            let mut reqs: Vec<(usize, usize, usize)> = (0..n)
+                .map(|_| (rng.range(0, 6), rng.range(1, 30), rng.range(1, 8)))
+                .collect();
+            reqs.sort_by_key(|r| r.0); // FIFO submission = arrival order
+            (lanes, chunk, reqs)
+        },
+        |(lanes, chunk, reqs)| {
+            let mut s = server(
+                Variant::Mha,
+                None,
+                CacheDtype::F32,
+                None,
+                *lanes,
+                false,
+                *chunk,
+            );
+            let mut gen = CorpusGen::new(512, 0x9e0);
+            let items: Vec<(usize, Request)> = reqs
+                .iter()
+                .enumerate()
+                .map(|(i, &(step, plen, max_new))| {
+                    (step, greedy(i as u64, gen.stream(plen), max_new))
+                })
+                .collect();
+            let mut slots: Vec<Option<RefLane>> = vec![None; *lanes];
+            let mut queue: Vec<RefLane> = Vec::new();
+            let mut prev: BTreeMap<u64, (usize, usize)> = BTreeMap::new();
+            let mut next = 0usize;
+            let mut step = 0usize;
+            let mut completed = 0usize;
+            while next < items.len() || s.busy() {
+                while next < items.len() && items[next].0 <= step {
+                    let (item, req) = (&items[next], &reqs[next]);
+                    s.submit(item.1.clone()).unwrap();
+                    queue.push(RefLane {
+                        id: item.1.id,
+                        cursor: 0,
+                        plen: req.1,
+                        max_new: req.2,
+                        gen: 0,
+                    });
+                    next += 1;
+                }
+                completed += s.step().unwrap().len();
+                reference_step(&mut slots, &mut queue, *chunk);
+                let got = s.lane_progress();
+                for (slot, (g, r)) in got.iter().zip(&slots).enumerate() {
+                    let want =
+                        r.as_ref().map(|l| (l.id, l.cursor, l.plen, l.gen));
+                    if *g != want {
+                        return Err(format!(
+                            "step {step} slot {slot}: engine {g:?} != \
+                             reference {want:?}"
+                        ));
+                    }
+                }
+                // Invariants beyond the snapshot match: cursors are
+                // monotone and advance at most one chunk per iteration;
+                // live lanes decode exactly once per iteration.
+                for lane in got.iter().flatten() {
+                    let (id, cursor, plen, gen) = *lane;
+                    if let Some((pc, pg)) = prev.get(&id) {
+                        if cursor < *pc {
+                            return Err(format!(
+                                "request {id}: cursor moved backwards \
+                                 ({pc} -> {cursor})"
+                            ));
+                        }
+                        if cursor - pc > *chunk {
+                            return Err(format!(
+                                "request {id}: cursor advanced {} > \
+                                 chunk {chunk}",
+                                cursor - pc
+                            ));
+                        }
+                        if cursor >= plen && *pc >= plen && gen != pg + 1 {
+                            return Err(format!(
+                                "request {id}: live lane generated {} \
+                                 tokens in one iteration (head-of-line \
+                                 stall or double decode)",
+                                gen - pg
+                            ));
+                        }
+                    }
+                    prev.insert(id, (cursor, gen));
+                }
+                step += 1;
+            }
+            if completed != reqs.len() {
+                return Err(format!(
+                    "{completed} of {} requests completed",
+                    reqs.len()
+                ));
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,10 +1,13 @@
 //! Fixture scheduler config: the R7c field anchors.
 
-/// Policy knobs, two deliberately out of sync with the CLI: one flag
-/// is wired but missing from the README table, one field has no flag.
+/// Policy knobs, three deliberately out of sync with the CLI: one flag
+/// is wired but missing from the README table, one field has no flag,
+/// and one field's doc forgets to name the flag that feeds it.
 pub struct SchedulerConfig {
     /// Cache budget in MiB (`--cache-mb`), absent from the flag table.
     pub cache_mb: usize,
     /// Widget count with no CLI flag anywhere.
     pub widget_count: usize,
+    /// Prefill chunk size, wired to a CLI flag this doc fails to name.
+    pub prefill_chunk_tokens: usize,
 }

@@ -10,5 +10,6 @@ fn main() {
     let _ = args.str_or("documented-flag", "default");
     let _ = args.usize_or("cache-mb", 64);
     let _ = args.get("ghost");
+    let _ = args.usize_or("prefill-chunk", 0);
     println!("{HELP}");
 }
