@@ -141,6 +141,69 @@ def test_rope_masked_blend():
         np.asarray(x), atol=ATOL)
 
 
+# ---------------------------------------------------------------------------
+# S23 grounding: the Rust SIMD≡scalar tolerance vs a numpy oracle
+# ---------------------------------------------------------------------------
+
+S23_TOL_SCALE = 1e-6
+
+
+def s23_tol(k):
+    """Mirror of ``s23_tol`` in rust/tests/simd_kernels.rs (DESIGN.md
+    S23): the cross-ISA budget for one f32 accumulation over k terms."""
+    return S23_TOL_SCALE * (k + 1)
+
+
+def _sequential_dot_f32(a, w):
+    """Strict k-ascending f32 accumulation — the scalar kernel order."""
+    s = np.float32(0.0)
+    for j in range(len(a)):
+        s = np.float32(s + np.float32(a[j] * w[j]))
+    return float(s)
+
+
+def _lane_blocked_dot_f32(a, w, lanes):
+    """The SIMD accumulation order: ``lanes`` running sums over full
+    blocks, reduced in ascending lane order, then the scalar tail.
+    Takes two roundings per element where real FMA takes one, so its
+    reassociation error upper-bounds the vector kernels'."""
+    k = len(a)
+    main = k - k % lanes
+    acc = np.zeros(lanes, np.float32)
+    for j0 in range(0, main, lanes):
+        acc = (acc + a[j0:j0 + lanes] * w[j0:j0 + lanes]).astype(np.float32)
+    s = np.float32(0.0)
+    for lane in range(lanes):
+        s = np.float32(s + acc[lane])
+    for j in range(main, k):
+        s = np.float32(s + np.float32(a[j] * w[j]))
+    return float(s)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    k=st.integers(1, 1536),
+    lanes=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_s23_tolerance_bounds_lane_reassociation(k, lanes, seed):
+    """Grounds ``s23_tol(k) = 1e-6 * (k + 1)``: on standard-normal data
+    the sequential-f32 order (scalar kernels), the lane-blocked order
+    (AVX2's 8 / NEON's 4 running sums), and the f64 truth must all
+    agree within the S23 budget, so SIMD-vs-scalar drift in the Rust
+    differential suite stays well inside tolerance."""
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal(k).astype(np.float32)
+    w = rng.standard_normal(k).astype(np.float32)
+    seq = _sequential_dot_f32(a, w)
+    blk = _lane_blocked_dot_f32(a, w, lanes)
+    truth = float(np.dot(a.astype(np.float64), w.astype(np.float64)))
+    tol = s23_tol(k)
+    assert abs(seq - blk) <= tol, (k, lanes, seq, blk)
+    assert abs(seq - truth) <= tol, (k, seq, truth)
+    assert abs(blk - truth) <= tol, (k, lanes, blk, truth)
+
+
 def test_rope_elite_matches_full_when_ladder():
     """apply_rope_elite with the standard ladder == apply_rope."""
     rng = np.random.default_rng(5)

@@ -6,7 +6,7 @@ Four layers:
   container without the Rust toolchain this test IS the executable form
   of the project-contract audit (ROADMAP standing item).
 * **Golden fixture report** — the fake mini-repo under
-  ``rust/tests/lint_fixtures/`` makes every rule R0-R7 fire at least
+  ``rust/tests/lint_fixtures/`` makes every rule R0-R8 fire at least
   once; the rendered report is pinned to ``rust/tests/lint_expected.txt``
   (the same golden the Rust suite in ``rust/tests/lint_tool.rs`` pins,
   so both runners are anchored to one byte-exact artifact).
@@ -60,7 +60,7 @@ def test_fixture_report_matches_golden():
 def test_fixture_corpus_fires_every_rule():
     findings, _ = lint.run(FIXTURES)
     fired = {rule for (_, _, rule, _) in findings}
-    assert fired == {"R0", "R1", "R2", "R3", "R4", "R5", "R6", "R7"}
+    assert fired == {"R0", "R1", "R2", "R3", "R4", "R5", "R6", "R7", "R8"}
 
 
 def test_cli_exit_codes():

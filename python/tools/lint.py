@@ -342,6 +342,13 @@ R3_FILES = ["rust/src/kvcache/radix.rs", "rust/src/kvcache/block.rs"]
 R3_MACROS = ["panic", "unreachable", "todo", "unimplemented"]
 R3_METHODS = ["unwrap", "expect"]
 ARGS_API = ["get", "str_or", "usize_or", "u64_or", "f64_or", "has", "req"]
+R8_DIR = "rust/src/native/simd/"
+R8_BANNED = [
+    "target_arch",
+    "target_feature",
+    "is_x86_feature_detected",
+    "is_aarch64_feature_detected",
+]
 MAIN_RS = "rust/src/main.rs"
 LIB_RS = "rust/src/lib.rs"
 SCHED_RS = "rust/src/coordinator/scheduler.rs"
@@ -458,7 +465,7 @@ def parse_allow_body(rest):
     err = None
     for part in inside.split(","):
         p = part.strip()
-        valid = len(p) == 2 and p[0] == "R" and "1" <= p[1] <= "7"
+        valid = len(p) == 2 and p[0] == "R" and "1" <= p[1] <= "8"
         if valid:
             rules.append(p)
         else:
@@ -770,6 +777,30 @@ def documented(fl, oi):
     return False
 
 
+def has_safety_comment(fl, oi):
+    by_end = {a.end_orig: a for a in fl.attrs}
+    p = oi
+    while p > 0:
+        p -= 1
+        tok = fl.toks[p]
+        if tok.kind == "comment":
+            if tok.text.startswith("//") and tok.text[2:].lstrip().startswith(
+                "SAFETY:"
+            ):
+                return True
+            continue
+        if tok.kind == "doc":
+            continue
+        a = by_end.get(p)
+        if a is not None:
+            if a.start_orig == 0:
+                return False
+            p = a.start_orig
+            continue
+        return False
+    return False
+
+
 def read_text(path):
     try:
         with open(path, "rb") as fh:
@@ -945,6 +976,51 @@ def run(root):
                         "R4",
                         "reference to the `xla` crate outside "
                         '#[cfg(feature = "pjrt")]',
+                    ))
+
+        # R8: arch-specific code stays behind the simd dispatch layer.
+        if f.startswith(R8_DIR):
+            for t in range(n):
+                if (
+                    code_toks[t].kind == "ident"
+                    and code_toks[t].text == "unsafe"
+                    and t + 1 < n
+                    and code_toks[t + 1].text == "fn"
+                ):
+                    s = t - 1 if t > 0 and code_toks[t - 1].text == "pub" else t
+                    if not has_safety_comment(fl, fl.code[s]):
+                        findings.append((
+                            f,
+                            code_toks[t].line,
+                            "R8",
+                            "`unsafe fn` without a `// SAFETY:` comment "
+                            "in the simd module (S23: document the "
+                            "contract the caller must uphold)",
+                        ))
+        else:
+            for t in range(n):
+                if code_toks[t].kind != "ident":
+                    continue
+                tx = code_toks[t].text
+                named = None
+                if tx in R8_BANNED:
+                    named = tx
+                elif (
+                    tx == "arch"
+                    and t >= 3
+                    and code_toks[t - 1].text == ":"
+                    and code_toks[t - 2].text == ":"
+                    and code_toks[t - 3].text in ("std", "core")
+                ):
+                    named = "%s::arch" % code_toks[t - 3].text
+                if named is not None:
+                    findings.append((
+                        f,
+                        code_toks[t].line,
+                        "R8",
+                        "arch-specific identifier `%s` outside "
+                        "rust/src/native/simd/ (S23: SIMD intrinsics "
+                        "live behind the dispatch layer)" % named,
                     ))
 
     # ---- R5: doc coverage on the enforced surface ----

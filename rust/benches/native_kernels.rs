@@ -4,13 +4,17 @@
 //! artifacts: it times the batched GEMM kernels (DESIGN.md S17) on the
 //! decode-step projection shapes of each model config, at several batch
 //! sizes, plus one end-to-end batched decode step per serving variant.
-//! CI compiles it with `cargo bench --no-run` so the kernel API cannot
-//! rot silently.
+//! Every row is emitted twice on SIMD-capable hosts — once on the
+//! dispatched vector ISA and once forced to the scalar reference
+//! (DESIGN.md S23) — so the SIMD speedup is a first-class measurement,
+//! not an inference. CI compiles it with `cargo bench --no-run` so the
+//! kernel API cannot rot silently.
 
 use elitekv::bench::native::selection_for;
 use elitekv::bench::{bench_ns, BenchOpts};
 use elitekv::config::{ModelConfig, Variant};
 use elitekv::native::kernels::{sgemm, sgemm_nt};
+use elitekv::native::simd::{self, Isa};
 use elitekv::native::{LaneStep, NativeModel};
 use elitekv::tensor::Tensor;
 use elitekv::util::Pcg64;
@@ -22,14 +26,14 @@ fn threads() -> usize {
 }
 
 /// Time `c = a @ w` at the given shape and batch.
-fn bench_sgemm(name: &str, m: usize, k: usize, n: usize) {
+fn bench_sgemm(isa: &str, name: &str, m: usize, k: usize, n: usize) {
     let mut rng = Pcg64::seeded(0xbe);
     let w = Tensor::randn(vec![k, n], &mut rng);
     let a = Tensor::randn(vec![m, k], &mut rng).data;
     let mut c = vec![0.0f32; m * n];
     let t = threads();
     bench_ns(
-        &format!("sgemm/{name}/m{m}k{k}n{n}"),
+        &format!("sgemm/{isa}/{name}/m{m}k{k}n{n}"),
         BenchOpts { warmup_iters: 2, iters: 15 },
         || {
             sgemm(&a, m, &w, &mut c, t);
@@ -39,14 +43,14 @@ fn bench_sgemm(name: &str, m: usize, k: usize, n: usize) {
 }
 
 /// Time the tied-logits dot-product GEMM `c = a @ embed^T`.
-fn bench_logits(cfg: &ModelConfig, m: usize) {
+fn bench_logits(isa: &str, cfg: &ModelConfig, m: usize) {
     let mut rng = Pcg64::seeded(0xef);
     let embed = Tensor::randn(vec![cfg.vocab, cfg.d_model], &mut rng);
     let a = Tensor::randn(vec![m, cfg.d_model], &mut rng).data;
     let mut c = vec![0.0f32; m * cfg.vocab];
     let t = threads();
     bench_ns(
-        &format!("sgemm_nt/logits/{}/m{m}", cfg.name),
+        &format!("sgemm_nt/{isa}/logits/{}/m{m}", cfg.name),
         BenchOpts { warmup_iters: 2, iters: 15 },
         || {
             sgemm_nt(&a, m, cfg.d_model, &embed.data, cfg.vocab, &mut c, t);
@@ -58,7 +62,7 @@ fn bench_logits(cfg: &ModelConfig, m: usize) {
 /// Time the fused-dequant latent GEMMs (DESIGN.md S19) at a decode-like
 /// shape: scores `S = q_lat · Cᵀ` over `len` quantized latent rows and
 /// `O_lat = P · C` back, vs their f32 twins on the dequantized window.
-fn bench_q8_latent(cfg: &ModelConfig, len: usize) {
+fn bench_q8_latent(isa: &str, cfg: &ModelConfig, len: usize) {
     use elitekv::kvcache::quant::{n_groups, quantize_row, QUANT_GROUP};
     use elitekv::native::kernels::{sgemm_nt_q8, sgemm_q8, sgemm_raw};
     let (nh, d_c) = (cfg.n_heads, cfg.d_model / 4);
@@ -79,7 +83,7 @@ fn bench_q8_latent(cfg: &ModelConfig, len: usize) {
     let t = threads();
     let mut scores = vec![0.0f32; nh * len];
     bench_ns(
-        &format!("sgemm_nt_q8/{}/len{len}", cfg.name),
+        &format!("sgemm_nt_q8/{isa}/{}/len{len}", cfg.name),
         BenchOpts { warmup_iters: 2, iters: 15 },
         || {
             sgemm_nt_q8(&q_lat, nh, d_c, &cq, &cs, QUANT_GROUP, len, &mut scores, t);
@@ -87,7 +91,7 @@ fn bench_q8_latent(cfg: &ModelConfig, len: usize) {
         },
     );
     bench_ns(
-        &format!("sgemm_nt/f32-twin/{}/len{len}", cfg.name),
+        &format!("sgemm_nt/{isa}/f32-twin/{}/len{len}", cfg.name),
         BenchOpts { warmup_iters: 2, iters: 15 },
         || {
             sgemm_nt(&q_lat, nh, d_c, &c_rows, len, &mut scores, t);
@@ -97,7 +101,7 @@ fn bench_q8_latent(cfg: &ModelConfig, len: usize) {
     let p = Tensor::randn(vec![nh, len], &mut rng).data;
     let mut o_lat = vec![0.0f32; nh * d_c];
     bench_ns(
-        &format!("sgemm_q8/{}/len{len}", cfg.name),
+        &format!("sgemm_q8/{isa}/{}/len{len}", cfg.name),
         BenchOpts { warmup_iters: 2, iters: 15 },
         || {
             sgemm_q8(&p, nh, len, &cq, &cs, QUANT_GROUP, d_c, &mut o_lat, t, false);
@@ -105,7 +109,7 @@ fn bench_q8_latent(cfg: &ModelConfig, len: usize) {
         },
     );
     bench_ns(
-        &format!("sgemm_raw/f32-twin/{}/len{len}", cfg.name),
+        &format!("sgemm_raw/{isa}/f32-twin/{}/len{len}", cfg.name),
         BenchOpts { warmup_iters: 2, iters: 15 },
         || {
             sgemm_raw(&p, nh, len, &c_rows, d_c, &mut o_lat, t, false);
@@ -115,7 +119,7 @@ fn bench_q8_latent(cfg: &ModelConfig, len: usize) {
 }
 
 /// Time one full batched decode step for a serving variant.
-fn bench_decode_step(cfg: &ModelConfig, variant: Variant, lanes: usize) {
+fn bench_decode_step(isa: &str, cfg: &ModelConfig, variant: Variant, lanes: usize) {
     let tag = variant.tag();
     let sel = selection_for(cfg, &variant);
     let model = NativeModel::init(cfg, variant, 7, sel.as_ref())
@@ -140,7 +144,7 @@ fn bench_decode_step(cfg: &ModelConfig, variant: Variant, lanes: usize) {
     }
     let mut pos = 16usize;
     bench_ns(
-        &format!("decode_step/{}/{tag}/b{lanes}", cfg.name),
+        &format!("decode_step/{isa}/{}/{tag}/b{lanes}", cfg.name),
         BenchOpts { warmup_iters: 1, iters: 10 },
         || {
             let steps: Vec<LaneStep> = (0..lanes)
@@ -161,23 +165,37 @@ fn bench_decode_step(cfg: &ModelConfig, variant: Variant, lanes: usize) {
 }
 
 fn main() {
-    for cfg in [ModelConfig::tiny(), ModelConfig::small()] {
-        println!("== {} ==", cfg.name);
-        let (d, nh, dh, ffn) = (cfg.d_model, cfg.n_heads, cfg.d_head, cfg.d_ffn);
-        for m in [1usize, 4, 8] {
-            bench_sgemm(&format!("{}/qkv", cfg.name), m, d, nh * dh);
-            bench_sgemm(&format!("{}/mlp", cfg.name), m, d, ffn);
-            bench_logits(&cfg, m);
-        }
-        for len in [64usize, 192] {
-            bench_q8_latent(&cfg, len);
-        }
-        let nc = cfg.n_chunks();
-        for variant in [
-            Variant::Mha,
-            Variant::EliteKv { r: nc / 4, d_ckv: d / 4 },
-        ] {
-            bench_decode_step(&cfg, variant, 4);
+    // Twin rows: the dispatched (widest) ISA first, then the scalar
+    // reference forced, so each pair reads as the SIMD speedup. On a
+    // scalar-only host there is only one ISA and one set of rows.
+    let detected = simd::detect();
+    let mut isas = vec![detected];
+    if detected != Isa::Scalar {
+        isas.push(Isa::Scalar);
+    }
+    for &isa in &isas {
+        assert!(simd::force(isa), "detected/scalar ISA must be runnable");
+        let tag = isa.name();
+        println!("== kernel_isa: {tag} ==");
+        for cfg in [ModelConfig::tiny(), ModelConfig::small()] {
+            println!("== {} ==", cfg.name);
+            let (d, nh, dh, ffn) =
+                (cfg.d_model, cfg.n_heads, cfg.d_head, cfg.d_ffn);
+            for m in [1usize, 4, 8] {
+                bench_sgemm(tag, &format!("{}/qkv", cfg.name), m, d, nh * dh);
+                bench_sgemm(tag, &format!("{}/mlp", cfg.name), m, d, ffn);
+                bench_logits(tag, &cfg, m);
+            }
+            for len in [64usize, 192] {
+                bench_q8_latent(tag, &cfg, len);
+            }
+            let nc = cfg.n_chunks();
+            for variant in [
+                Variant::Mha,
+                Variant::EliteKv { r: nc / 4, d_ckv: d / 4 },
+            ] {
+                bench_decode_step(tag, &cfg, variant, 4);
+            }
         }
     }
     println!("native_kernels bench done");

@@ -25,6 +25,11 @@
 //!   of, the PR-5 ad-hoc bracket scanner), plus any lexer error.
 //! * **R7** — CLI flags in `main.rs`, the README flag table, and
 //!   `SchedulerConfig` fields agree.
+//! * **R8** — arch-specific SIMD code stays behind the dispatch layer
+//!   (S23): `target_arch` / `target_feature` / feature-detection
+//!   identifiers and `std::arch` paths only under
+//!   `rust/src/native/simd/`, where every `unsafe fn` must carry a
+//!   `// SAFETY:` comment.
 //!
 //! Escape hatch: `// lint: allow(Rn[,Rn]) — reason` on (or directly
 //! above) the offending line suppresses those rules there; a missing
@@ -66,6 +71,15 @@ const R3_METHODS: [&str; 2] = ["unwrap", "expect"];
 /// `Args` accessor methods whose first argument names a CLI flag (R7).
 const ARGS_API: [&str; 7] =
     ["get", "str_or", "usize_or", "u64_or", "f64_or", "has", "req"];
+/// Directory prefix where arch-specific SIMD code may live (R8).
+const R8_DIR: &str = "rust/src/native/simd/";
+/// Arch-coupled identifiers R8 bans outside that directory.
+const R8_BANNED: [&str; 4] = [
+    "target_arch",
+    "target_feature",
+    "is_x86_feature_detected",
+    "is_aarch64_feature_detected",
+];
 /// Contract-input files (R1/R5/R7 anchors).
 const MAIN_RS: &str = "rust/src/main.rs";
 const LIB_RS: &str = "rust/src/lib.rs";
@@ -217,7 +231,7 @@ fn parse_allow_body(rest: &str) -> (Vec<String>, Option<String>) {
         let p = part.trim();
         let valid = p.len() == 2
             && p.starts_with('R')
-            && ('1'..='7').contains(&p.chars().nth(1).unwrap_or('x'));
+            && ('1'..='8').contains(&p.chars().nth(1).unwrap_or('x'));
         if valid {
             rules.push(p.to_string());
         } else {
@@ -650,6 +664,40 @@ fn documented(fl: &FileLex, oi: usize) -> bool {
     false
 }
 
+/// Does the item whose first original token is at `oi` carry a
+/// `// SAFETY:` comment (R8)? Walks back over plain comments, doc
+/// comments, and attributes, accepting the first line comment whose
+/// body opens with `SAFETY:`.
+fn has_safety_comment(fl: &FileLex, oi: usize) -> bool {
+    let by_end: BTreeMap<usize, &Attr> =
+        fl.attrs.iter().map(|a| (a.end_orig, a)).collect();
+    let mut p = oi;
+    while p > 0 {
+        p -= 1;
+        let tok = &fl.toks[p];
+        if tok.kind == TokKind::Comment {
+            if tok.text.starts_with("//")
+                && tok.text[2..].trim_start().starts_with("SAFETY:")
+            {
+                return true;
+            }
+            continue;
+        }
+        if tok.kind == TokKind::Doc {
+            continue;
+        }
+        if let Some(a) = by_end.get(&p) {
+            if a.start_orig == 0 {
+                return false;
+            }
+            p = a.start_orig;
+            continue;
+        }
+        return false;
+    }
+    false
+}
+
 /// Run every rule over the tree at `root` and return the report.
 pub fn run(root: &Path) -> Report {
     let files = discover(root);
@@ -870,6 +918,66 @@ pub fn run(root: &Path) -> Report {
                         "reference to the `xla` crate outside \
                          #[cfg(feature = \"pjrt\")]"
                             .to_string(),
+                    ));
+                }
+            }
+        }
+
+        // R8: arch-specific code stays behind the simd dispatch layer.
+        if f.starts_with(R8_DIR) {
+            for t in 0..n {
+                if code_toks[t].kind == TokKind::Ident
+                    && code_toks[t].text == "unsafe"
+                    && t + 1 < n
+                    && code_toks[t + 1].text == "fn"
+                {
+                    let s = if t > 0 && code_toks[t - 1].text == "pub" {
+                        t - 1
+                    } else {
+                        t
+                    };
+                    if !has_safety_comment(fl, fl.code[s]) {
+                        findings.push(Finding::new(
+                            f,
+                            code_toks[t].line,
+                            "R8",
+                            "`unsafe fn` without a `// SAFETY:` comment \
+                             in the simd module (S23: document the \
+                             contract the caller must uphold)"
+                                .to_string(),
+                        ));
+                    }
+                }
+            }
+        } else {
+            for t in 0..n {
+                if code_toks[t].kind != TokKind::Ident {
+                    continue;
+                }
+                let tx = code_toks[t].text.as_str();
+                let named = if R8_BANNED.contains(&tx) {
+                    Some(tx.to_string())
+                } else if tx == "arch"
+                    && t >= 3
+                    && code_toks[t - 1].text == ":"
+                    && code_toks[t - 2].text == ":"
+                    && (code_toks[t - 3].text == "std"
+                        || code_toks[t - 3].text == "core")
+                {
+                    Some(format!("{}::arch", code_toks[t - 3].text))
+                } else {
+                    None
+                };
+                if let Some(name) = named {
+                    findings.push(Finding::new(
+                        f,
+                        code_toks[t].line,
+                        "R8",
+                        format!(
+                            "arch-specific identifier `{name}` outside \
+                             rust/src/native/simd/ (S23: SIMD \
+                             intrinsics live behind the dispatch layer)"
+                        ),
                     ));
                 }
             }

@@ -218,6 +218,7 @@ fn bench_variant(
     let layout = CacheLayout::with_dtype(cfg, variant.clone(), dtype);
     Ok(Json::obj(vec![
         ("variant", Json::str(&variant.tag())),
+        ("kernel_isa", Json::str(runner.kernel_isa())),
         ("cache_dtype", Json::str(dtype.tag())),
         ("sparse_k", Json::num(sparse_k.unwrap_or(0) as f64)),
         ("r", Json::num(variant.r().unwrap_or(0) as f64)),
@@ -343,6 +344,13 @@ mod tests {
             assert!(row.req("cache_bytes_per_token").as_usize().unwrap() > 0);
             assert!(row.req("gemm_ns_per_call").as_f64().unwrap() > 0.0);
             assert!(row.req("gemm_gflops").as_f64().unwrap() > 0.0);
+            // the ISA column carries the dispatched microkernel choice
+            let isa = row.req("kernel_isa").as_str().unwrap();
+            assert_eq!(
+                isa,
+                crate::native::simd::active().name(),
+                "bench row must report the dispatched kernel ISA"
+            );
         }
         // compressed point caches fewer bytes than dense (f32 rows), and
         // each int8 row is exactly a quarter of its f32 sibling

@@ -191,6 +191,7 @@ fn bench_variant(
     let layout = CacheLayout::with_dtype(cfg, variant.clone(), dtype);
     Ok(Json::obj(vec![
         ("variant", Json::str(variant.tag())),
+        ("kernel_isa", Json::str(stats.kernel_isa)),
         ("trace", Json::str(trace_tag)),
         ("prefix_cache", Json::Bool(prefix_cache)),
         ("cache_dtype", Json::str(dtype.tag())),
@@ -507,9 +508,13 @@ mod tests {
         let ekv = rows[1].req("max_concurrency").as_usize().unwrap();
         assert!(ekv >= 4, "compressed concurrency {ekv} < 4");
         assert!(ekv > mha, "compressed {ekv} !> dense {mha}");
-        // both served the full trace
+        // both served the full trace, reporting the dispatched ISA
         for row in rows {
             assert_eq!(row.req("completed").as_usize().unwrap(), 12);
+            assert_eq!(
+                row.req("kernel_isa").as_str(),
+                Some(crate::native::simd::active().name()),
+            );
         }
         let text = std::fs::read_to_string(&out).unwrap();
         assert!(Json::parse(&text).is_ok());

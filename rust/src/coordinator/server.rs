@@ -136,6 +136,11 @@ pub struct ServerStats {
     /// monolithic long-prompt prefill shows up here as one giant gap on
     /// every lane that was mid-decode while it ran.
     pub max_decode_gap_s: f64,
+    /// Kernel ISA the GEMM microkernels dispatched to (`scalar` /
+    /// `avx2` / `neon` — DESIGN.md S23), resolved once at server
+    /// construction from runtime detection and the `ELITEKV_KERNEL_ISA`
+    /// override. Empty only on a default-constructed stats value.
+    pub kernel_isa: &'static str,
 }
 
 /// Capacity of [`ServerStats::admission_wait_recent_s`].
@@ -322,6 +327,7 @@ impl InferenceServer {
         }
         let stats = ServerStats {
             blocks_total: queue.allocator.n_blocks(),
+            kernel_isa: crate::native::simd::active().name(),
             ..Default::default()
         };
         Ok(InferenceServer {

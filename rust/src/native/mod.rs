@@ -14,6 +14,11 @@
 //!   `A·Bᵀ` variants), panel-parallel on the in-repo thread pool, with
 //!   a bitwise thread-count/batch-mates determinism contract. This is
 //!   the decode hot path.
+//! * [`simd`]    — the inner microkernels those panels call (DESIGN.md
+//!   S23): AVX2/FMA and NEON `std::arch` implementations behind a
+//!   runtime-detected dispatch (`ELITEKV_KERNEL_ISA` overrides), with
+//!   the original scalar loops kept verbatim as the portable
+//!   reference.
 //! * [`model`]   — [`NativeModel`]: weights + variant extras + the cached
 //!   inverse-frequency tables, the per-token incremental step, and the
 //!   batched step ([`NativeModel::decode_batch`]) that advances all
@@ -35,6 +40,7 @@ pub mod forward;
 pub mod kernels;
 pub mod model;
 pub mod runner;
+pub mod simd;
 pub mod specs;
 
 pub use model::{BatchScratch, LaneStep, NativeModel};

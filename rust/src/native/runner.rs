@@ -60,6 +60,16 @@ impl NativeRunner {
         NativeRunner::new(model, 4, window)
     }
 
+    /// Name of the kernel ISA this runner's GEMMs dispatch to
+    /// (`scalar` / `avx2` / `neon` — DESIGN.md S23): runtime detection
+    /// combined with the `ELITEKV_KERNEL_ISA` override, resolved once
+    /// per process by [`crate::native::simd::active`]. Surfaced so
+    /// serving stats and bench rows can report which inner loops
+    /// actually ran.
+    pub fn kernel_isa(&self) -> &'static str {
+        crate::native::simd::active().name()
+    }
+
     /// Worker-thread cap handed to the kernel layer; the kernels
     /// themselves scale workers down to the FLOP volume of each GEMM
     /// ([`crate::native::kernels::gemm_threads`]), so this is an upper

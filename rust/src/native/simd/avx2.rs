@@ -1,0 +1,78 @@
+//! AVX2 + FMA microkernels (`x86_64`, 8 f32 lanes).
+//!
+//! Operation order is fixed: AXPY fuses multiply-add per element (one
+//! rounding where scalar takes two), and the dot keeps 8 running lane
+//! sums reduced in ascending lane order before the scalar tail. Both
+//! are deterministic for given inputs — the S23 contract — but neither
+//! matches scalar bitwise (FMA contraction / sum reassociation).
+//!
+//! Every entry is `unsafe fn`: callers must guarantee the `avx2` and
+//! `fma` CPU features, which the dispatch front does by routing only
+//! `supported()`-checked ISAs here.
+
+#![deny(unsafe_op_in_unsafe_fn)]
+
+use core::arch::x86_64::{
+    _mm256_fmadd_ps, _mm256_loadu_ps, _mm256_set1_ps, _mm256_setzero_ps,
+    _mm256_storeu_ps,
+};
+
+/// f32 lanes per AVX2 vector op.
+pub const LANES: usize = 8;
+
+/// `dst[j] += av * src[j]` over 8-lane FMA chunks, scalar mul-add tail.
+///
+// SAFETY: the caller must guarantee the CPU supports avx2 and
+// fma (the dispatch front only routes `supported()` ISAs here).
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn axpy(dst: &mut [f32], src: &[f32], av: f32) {
+    let n = dst.len().min(src.len());
+    // SAFETY: splat has no memory operand; avx2 is up per the fn contract.
+    let va = unsafe { _mm256_set1_ps(av) };
+    let mut j = 0;
+    while j + LANES <= n {
+        // SAFETY: `j + LANES <= n` bounds every lane inside both slices;
+        // loadu/storeu accept unaligned pointers.
+        unsafe {
+            let w = _mm256_loadu_ps(src.as_ptr().add(j));
+            let d = _mm256_loadu_ps(dst.as_ptr().add(j));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(j), _mm256_fmadd_ps(va, w, d));
+        }
+        j += LANES;
+    }
+    for (cv, &wv) in dst[j..n].iter_mut().zip(&src[j..n]) {
+        *cv += av * wv;
+    }
+}
+
+/// Dot product: 8 running lane sums via FMA, reduced in ascending lane
+/// order, then the scalar tail folded in sequentially.
+///
+// SAFETY: same as `axpy` — avx2+fma must be available.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    // SAFETY: register-only zero; avx2 is up per the fn contract.
+    let mut acc = unsafe { _mm256_setzero_ps() };
+    let mut j = 0;
+    while j + LANES <= n {
+        // SAFETY: `j + LANES <= n` bounds every lane inside both slices.
+        unsafe {
+            let x = _mm256_loadu_ps(a.as_ptr().add(j));
+            let y = _mm256_loadu_ps(b.as_ptr().add(j));
+            acc = _mm256_fmadd_ps(x, y, acc);
+        }
+        j += LANES;
+    }
+    let mut lanes = [0.0f32; LANES];
+    // SAFETY: `lanes` is exactly LANES f32s; storeu takes unaligned ptrs.
+    unsafe { _mm256_storeu_ps(lanes.as_mut_ptr(), acc) };
+    let mut s = 0.0f32;
+    for &l in &lanes {
+        s += l;
+    }
+    for (&x, &y) in a[j..n].iter().zip(&b[j..n]) {
+        s += x * y;
+    }
+    s
+}

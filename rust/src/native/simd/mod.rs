@@ -1,0 +1,427 @@
+//! SIMD GEMM microkernels with runtime ISA dispatch (DESIGN.md S23).
+//!
+//! The S17 panel kernels accumulate every output element in a fixed
+//! `k`-ascending order; this module supplies the *inner* loops of that
+//! scheme — the contiguous AXPY, its fused-dequant twin, and the
+//! contiguous dot product — in three interchangeable implementations:
+//!
+//! * [`Isa::Scalar`] — the portable reference, line-for-line the loops
+//!   the S17 kernels shipped with. Selecting it reproduces the
+//!   pre-SIMD results **bitwise**.
+//! * [`Isa::Avx2`] — AVX2 + FMA on `x86_64`, 8 lanes per op.
+//! * [`Isa::Neon`] — NEON on `aarch64`, 4 lanes per op.
+//!
+//! # Dispatch
+//!
+//! [`detect`] probes the host once ([`std::arch`] feature detection) and
+//! [`active`] caches the winner in an atomic, so the per-call cost of
+//! dispatch is one relaxed load. The `ELITEKV_KERNEL_ISA` environment
+//! variable ([`KERNEL_ISA_ENV`]) overrides detection; invalid or
+//! host-unsupported values warn on stderr and fall back to detection,
+//! matching the `ELITEKV_PROP_CASES` convention. [`resolve`] is the
+//! pure core of that policy so the override is unit-testable without
+//! touching process state; [`force`] pins the ISA directly for
+//! differential tests and benches.
+//!
+//! # Determinism contract (S23)
+//!
+//! Within one ISA, every microkernel is a pure function of its operand
+//! values with a fixed internal operation order — no
+//! data-dependent shortcuts, no lane-count changes at runtime — so the
+//! S17 guarantees survive unchanged per ISA: `1 thread ≡ N threads`
+//! bitwise, row independence, call-to-call identical results, and the
+//! fused-dequant kernels bitwise-equal to dequantize-then-f32. *Across*
+//! ISAs, FMA contraction and horizontal-sum reassociation make results
+//! differ in the last bits; SIMD ≡ scalar is pinned within the S23
+//! tolerance by `rust/tests/simd_kernels.rs`, never assumed bitwise.
+
+use crate::kvcache::quant::dequant;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+mod scalar;
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+
+#[cfg(target_arch = "aarch64")]
+mod neon;
+
+/// Environment variable overriding ISA dispatch
+/// (`scalar` | `avx2` | `neon`).
+pub const KERNEL_ISA_ENV: &str = "ELITEKV_KERNEL_ISA";
+
+/// An instruction-set choice for the GEMM inner microkernels.
+///
+/// All variants exist on every build target so tests and the env
+/// override can *name* any ISA anywhere; whether the host can *run* one
+/// is a separate, runtime question answered by [`supported`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Isa {
+    /// Portable scalar reference — the pre-SIMD S17 inner loops, verbatim.
+    Scalar = 0,
+    /// AVX2 + FMA (`x86_64`), 8 f32 lanes.
+    Avx2 = 1,
+    /// NEON (`aarch64`), 4 f32 lanes.
+    Neon = 2,
+}
+
+impl Isa {
+    /// Every ISA this build knows how to *name* (not necessarily run).
+    pub const ALL: [Isa; 3] = [Isa::Scalar, Isa::Avx2, Isa::Neon];
+
+    /// The lowercase name used by `ELITEKV_KERNEL_ISA`, stats, and
+    /// bench rows.
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+        }
+    }
+
+    /// Parse a (case-insensitive) ISA name; `None` if unrecognized.
+    pub fn from_name(raw: &str) -> Option<Isa> {
+        Isa::ALL
+            .into_iter()
+            .find(|isa| isa.name().eq_ignore_ascii_case(raw))
+    }
+
+    fn from_u8(raw: u8) -> Isa {
+        match raw {
+            1 => Isa::Avx2,
+            2 => Isa::Neon,
+            _ => Isa::Scalar,
+        }
+    }
+}
+
+/// Whether this host can execute `isa`'s microkernels. [`Isa::Scalar`]
+/// is always supported; the vector ISAs require both the matching build
+/// target and the runtime CPU features.
+pub fn supported(isa: Isa) -> bool {
+    match isa {
+        Isa::Scalar => true,
+        Isa::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            {
+                false
+            }
+        }
+        Isa::Neon => {
+            #[cfg(target_arch = "aarch64")]
+            {
+                std::arch::is_aarch64_feature_detected!("neon")
+            }
+            #[cfg(not(target_arch = "aarch64"))]
+            {
+                false
+            }
+        }
+    }
+}
+
+/// The widest ISA this host supports (probed fresh on every call;
+/// [`active`] caches it).
+pub fn detect() -> Isa {
+    if supported(Isa::Avx2) {
+        Isa::Avx2
+    } else if supported(Isa::Neon) {
+        Isa::Neon
+    } else {
+        Isa::Scalar
+    }
+}
+
+/// Pure dispatch policy: combine the raw `ELITEKV_KERNEL_ISA` value
+/// (`None` when unset) with the detected ISA. Returns the ISA to use
+/// plus the warning to print when the override is unparsable or names
+/// an ISA this host cannot run — in both cases detection stands, the
+/// same warn-and-fall-back convention as `ELITEKV_PROP_CASES`.
+pub fn resolve(raw: Option<&str>, detected: Isa) -> (Isa, Option<String>) {
+    let Some(raw) = raw else { return (detected, None) };
+    let trimmed = raw.trim();
+    match Isa::from_name(trimmed) {
+        Some(isa) if supported(isa) => (isa, None),
+        Some(isa) => (
+            detected,
+            Some(format!(
+                "warning: ignoring {KERNEL_ISA_ENV}=`{trimmed}` \
+                 ({} not supported on this host); using {}",
+                isa.name(),
+                detected.name(),
+            )),
+        ),
+        None => (
+            detected,
+            Some(format!(
+                "warning: ignoring unparsable {KERNEL_ISA_ENV}=`{trimmed}` \
+                 (want scalar|avx2|neon); using {}",
+                detected.name(),
+            )),
+        ),
+    }
+}
+
+/// Sentinel meaning "not resolved yet" in [`ACTIVE`].
+const ISA_UNSET: u8 = u8::MAX;
+
+/// The resolved ISA, cached after the first [`active`] call.
+static ACTIVE: AtomicU8 = AtomicU8::new(ISA_UNSET);
+
+/// The ISA the dispatched microkernels run on: detection combined with
+/// the `ELITEKV_KERNEL_ISA` override via [`resolve`], computed once and
+/// cached (so the env var is read once per process and the steady-state
+/// cost is one relaxed atomic load).
+pub fn active() -> Isa {
+    let raw = ACTIVE.load(Ordering::Relaxed);
+    if raw != ISA_UNSET {
+        return Isa::from_u8(raw);
+    }
+    let env = std::env::var(KERNEL_ISA_ENV).ok();
+    let (isa, warning) = resolve(env.as_deref(), detect());
+    if let Some(msg) = warning {
+        eprintln!("{msg}");
+    }
+    // Racing first calls compute the same value, so a plain store is a
+    // benign last-writer-wins.
+    ACTIVE.store(isa as u8, Ordering::Relaxed);
+    isa
+}
+
+/// Pin [`active`] to `isa` for the rest of the process (differential
+/// tests and scalar-vs-SIMD bench twins). Returns `false` — leaving the
+/// current choice untouched — when this host cannot run `isa`.
+pub fn force(isa: Isa) -> bool {
+    if !supported(isa) {
+        return false;
+    }
+    ACTIVE.store(isa as u8, Ordering::Relaxed);
+    true
+}
+
+/// `dst[j] += av * src[j]` — the panel AXPY of `sgemm`/`sgemm_raw`,
+/// dispatched on `isa` (callers hoist [`active`] once per GEMM call).
+/// Per-element accumulation order is independent of how callers split
+/// `dst`, provided splits land on [`AXPY_BLOCK`]-multiples.
+pub fn axpy(isa: Isa, dst: &mut [f32], src: &[f32], av: f32) {
+    match isa {
+        Isa::Scalar => scalar::axpy(dst, src, av),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: dispatch only carries Avx2 past `supported()` — via
+        // `detect`/`resolve`/`force` — so avx2+fma are present.
+        Isa::Avx2 => unsafe { avx2::axpy(dst, src, av) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: dispatch only carries Neon past `supported()`.
+        Isa::Neon => unsafe { neon::axpy(dst, src, av) },
+        #[allow(unreachable_patterns)] // arms the cfg'd ISAs leave behind
+        _ => scalar::axpy(dst, src, av),
+    }
+}
+
+/// `c[i] = Σ_j a[j]·b[j]` — the contiguous dot of `sgemm_nt`,
+/// dispatched on `isa`. The vector paths keep per-lane partial sums and
+/// reduce them in a fixed lane order, so the result is deterministic
+/// per ISA but *reassociated* relative to scalar (S23: toleranced, not
+/// bitwise, across ISAs).
+pub fn dot(isa: Isa, a: &[f32], b: &[f32]) -> f32 {
+    match isa {
+        Isa::Scalar => scalar::dot(a, b),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: dispatch only carries Avx2 past `supported()`.
+        Isa::Avx2 => unsafe { avx2::dot(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: dispatch only carries Neon past `supported()`.
+        Isa::Neon => unsafe { neon::dot(a, b) },
+        #[allow(unreachable_patterns)]
+        _ => scalar::dot(a, b),
+    }
+}
+
+/// Dequant staging width for [`axpy_q8`]: a multiple of every ISA's
+/// lane count, so splitting an AXPY at block boundaries preserves each
+/// element's operation sequence exactly.
+const AXPY_BLOCK: usize = 64;
+
+/// `dst[jj] += av * dequant(q_row[jj], s_row[(j0 + jj) / group])` — the
+/// fused-dequant panel AXPY of `sgemm_q8`. Weights are dequantized into
+/// an `AXPY_BLOCK` stack buffer and consumed by [`axpy`] on the same
+/// ISA: dequantization is a single correctly-rounded multiply per
+/// element (identical scalar or vector), so the result stays **bitwise
+/// identical** to dequantize-the-window-then-f32-AXPY *within every
+/// ISA* — the S19 contract survives dispatch for any `group`/alignment.
+pub fn axpy_q8(
+    isa: Isa,
+    dst: &mut [f32],
+    q_row: &[i8],
+    s_row: &[f32],
+    group: usize,
+    j0: usize,
+    av: f32,
+) {
+    debug_assert_eq!(dst.len(), q_row.len());
+    let mut tmp = [0.0f32; AXPY_BLOCK];
+    let mut off = 0;
+    while off < dst.len() {
+        let bw = (dst.len() - off).min(AXPY_BLOCK);
+        for jj in 0..bw {
+            tmp[jj] = dequant(q_row[off + jj], s_row[(j0 + off + jj) / group]);
+        }
+        axpy(isa, &mut dst[off..off + bw], &tmp[..bw], av);
+        off += bw;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn randv(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::seeded(seed);
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn names_round_trip_and_parse_case_insensitively() {
+        for isa in Isa::ALL {
+            assert_eq!(Isa::from_name(isa.name()), Some(isa));
+            assert_eq!(Isa::from_name(&isa.name().to_uppercase()), Some(isa));
+        }
+        assert_eq!(Isa::from_name("sse9"), None);
+        assert_eq!(Isa::from_name(""), None);
+    }
+
+    #[test]
+    fn resolve_unset_uses_detection() {
+        for isa in Isa::ALL {
+            assert_eq!(resolve(None, isa), (isa, None));
+        }
+    }
+
+    #[test]
+    fn resolve_accepts_supported_override() {
+        // Scalar is supported everywhere, so forcing it must always work
+        // regardless of what detection picked.
+        let (isa, warn) = resolve(Some("scalar"), detect());
+        assert_eq!(isa, Isa::Scalar);
+        assert!(warn.is_none());
+        let (isa, warn) = resolve(Some("  SCALAR  "), detect());
+        assert_eq!(isa, Isa::Scalar);
+        assert!(warn.is_none());
+    }
+
+    #[test]
+    fn resolve_warns_and_falls_back_on_garbage() {
+        let detected = detect();
+        let (isa, warn) = resolve(Some("sse9"), detected);
+        assert_eq!(isa, detected);
+        let msg = warn.expect("garbage override must warn");
+        assert!(msg.contains(KERNEL_ISA_ENV), "warning names the env var");
+        assert!(msg.contains("sse9"), "warning echoes the raw value");
+    }
+
+    #[test]
+    fn resolve_warns_and_falls_back_on_unsupported_isa() {
+        let detected = detect();
+        let foreign = Isa::ALL
+            .into_iter()
+            .find(|&isa| !supported(isa))
+            .expect("no build target supports every ISA at once");
+        let (isa, warn) = resolve(Some(foreign.name()), detected);
+        assert_eq!(isa, detected);
+        let msg = warn.expect("unsupported override must warn");
+        assert!(msg.contains(foreign.name()));
+        assert!(msg.contains("not supported"));
+    }
+
+    #[test]
+    fn detect_is_supported_and_force_rejects_foreign_isas() {
+        assert!(supported(detect()), "detect() must pick a runnable ISA");
+        assert!(supported(Isa::Scalar), "scalar is always runnable");
+        for isa in Isa::ALL {
+            if !supported(isa) {
+                assert!(!force(isa), "force must reject {isa:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_axpy_matches_reference_loop_bitwise() {
+        let (src, mut dst) = (randv(37, 1), randv(37, 2));
+        let mut want = dst.clone();
+        let av = 0.37f32;
+        for (cv, &wv) in want.iter_mut().zip(&src) {
+            *cv += av * wv; // the S17 inner loop, verbatim
+        }
+        axpy(Isa::Scalar, &mut dst, &src, av);
+        assert_eq!(dst, want);
+    }
+
+    #[test]
+    fn scalar_dot_matches_forward_dot_bitwise() {
+        let (a, b) = (randv(129, 3), randv(129, 4));
+        assert_eq!(dot(Isa::Scalar, &a, &b), crate::native::forward::dot(&a, &b));
+    }
+
+    #[test]
+    fn dispatched_axpy_and_dot_stay_close_to_scalar() {
+        // The real SIMD ≡ scalar pin lives in rust/tests/simd_kernels.rs;
+        // this is the in-module smoke version on the detected ISA.
+        let isa = detect();
+        let (a, b) = (randv(1000, 5), randv(1000, 6));
+        let scalar = dot(Isa::Scalar, &a, &b);
+        let vector = dot(isa, &a, &b);
+        assert!(
+            (scalar - vector).abs() <= 1e-6 * 1001.0,
+            "dot diverged: {scalar} vs {vector} on {isa:?}"
+        );
+        let mut d_s = randv(100, 7);
+        let mut d_v = d_s.clone();
+        axpy(Isa::Scalar, &mut d_s, &a[..100], 0.5);
+        axpy(isa, &mut d_v, &a[..100], 0.5);
+        for (s, v) in d_s.iter().zip(&d_v) {
+            assert!((s - v).abs() <= 1e-6, "axpy diverged: {s} vs {v}");
+        }
+    }
+
+    #[test]
+    fn axpy_q8_equals_dequantize_then_axpy_on_every_supported_isa() {
+        let group = 32usize;
+        // 70 columns: ragged tail group AND a ragged vector tail.
+        let n = 70usize;
+        let w = randv(n, 8);
+        let g = crate::kvcache::quant::n_groups(n, group);
+        let mut q = vec![0i8; n];
+        let mut s = vec![0.0f32; g];
+        crate::kvcache::quant::quantize_row(&w, group, &mut q, &mut s);
+        let mut deq = vec![0.0f32; n];
+        crate::kvcache::quant::dequantize_row(&q, &s, group, &mut deq);
+        for isa in Isa::ALL.into_iter().filter(|&isa| supported(isa)) {
+            let mut got = randv(n, 9);
+            let mut want = got.clone();
+            axpy_q8(isa, &mut got, &q, &s, group, 0, 1.25);
+            axpy(isa, &mut want, &deq, 1.25);
+            assert_eq!(got, want, "fused dequant diverged on {isa:?}");
+        }
+    }
+
+    #[test]
+    fn axpy_q8_honors_group_offset() {
+        // j0 = 64 with group 32: the scale index starts at group 2, the
+        // panel case sgemm_q8 actually exercises.
+        let group = 32usize;
+        let (n, j0) = (8usize, 64usize);
+        let q: Vec<i8> = (0..n as i8).collect();
+        let s = [1.0f32, 1.0, 0.5];
+        let mut dst = vec![0.0f32; n];
+        axpy_q8(Isa::Scalar, &mut dst, &q, &s, group, j0, 1.0);
+        for (jj, &d) in dst.iter().enumerate() {
+            assert_eq!(d, (jj as f32) * 0.5);
+        }
+    }
+}

@@ -1,0 +1,77 @@
+//! NEON microkernels (`aarch64`, 4 f32 lanes).
+//!
+//! Same structure and S23 determinism posture as the AVX2 file: fused
+//! multiply-add per element in the AXPY, 4 running lane sums reduced in
+//! ascending lane order in the dot, scalar tails — deterministic per
+//! ISA, toleranced (not bitwise) against scalar.
+//!
+//! Every entry is `unsafe fn`: callers must guarantee the `neon` CPU
+//! feature, which the dispatch front does by routing only
+//! `supported()`-checked ISAs here.
+
+#![deny(unsafe_op_in_unsafe_fn)]
+
+use core::arch::aarch64::{
+    vdupq_n_f32, vfmaq_f32, vgetq_lane_f32, vld1q_f32, vst1q_f32,
+};
+
+/// f32 lanes per NEON vector op.
+pub const LANES: usize = 4;
+
+/// `dst[j] += av * src[j]` over 4-lane FMA chunks, scalar mul-add tail.
+///
+// SAFETY: the caller must guarantee the CPU supports neon
+// (the dispatch front only routes `supported()` ISAs here).
+#[target_feature(enable = "neon")]
+pub unsafe fn axpy(dst: &mut [f32], src: &[f32], av: f32) {
+    let n = dst.len().min(src.len());
+    // SAFETY: splat has no memory operand; neon is up per the fn contract.
+    let va = unsafe { vdupq_n_f32(av) };
+    let mut j = 0;
+    while j + LANES <= n {
+        // SAFETY: `j + LANES <= n` bounds every lane inside both slices;
+        // vld1q/vst1q accept unaligned pointers.
+        unsafe {
+            let w = vld1q_f32(src.as_ptr().add(j));
+            let d = vld1q_f32(dst.as_ptr().add(j));
+            vst1q_f32(dst.as_mut_ptr().add(j), vfmaq_f32(d, va, w));
+        }
+        j += LANES;
+    }
+    for (cv, &wv) in dst[j..n].iter_mut().zip(&src[j..n]) {
+        *cv += av * wv;
+    }
+}
+
+/// Dot product: 4 running lane sums via FMA, reduced in ascending lane
+/// order, then the scalar tail folded in sequentially.
+///
+// SAFETY: same as `axpy` — neon must be available.
+#[target_feature(enable = "neon")]
+pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    // SAFETY: register-only zero; neon is up per the fn contract.
+    let mut acc = unsafe { vdupq_n_f32(0.0) };
+    let mut j = 0;
+    while j + LANES <= n {
+        // SAFETY: `j + LANES <= n` bounds every lane inside both slices.
+        unsafe {
+            let x = vld1q_f32(a.as_ptr().add(j));
+            let y = vld1q_f32(b.as_ptr().add(j));
+            acc = vfmaq_f32(acc, x, y);
+        }
+        j += LANES;
+    }
+    // SAFETY: constant lane indices 0..4 are in range for a float32x4_t.
+    let mut s = unsafe {
+        let mut t = vgetq_lane_f32::<0>(acc);
+        t += vgetq_lane_f32::<1>(acc);
+        t += vgetq_lane_f32::<2>(acc);
+        t += vgetq_lane_f32::<3>(acc);
+        t
+    };
+    for (&x, &y) in a[j..n].iter().zip(&b[j..n]) {
+        s += x * y;
+    }
+    s
+}

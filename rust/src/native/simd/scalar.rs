@@ -1,0 +1,22 @@
+//! Portable scalar microkernels — the S17 inner loops, kept verbatim.
+//!
+//! These are the *reference* implementations: [`super::Isa::Scalar`]
+//! must reproduce the pre-SIMD kernel layer bitwise, so each loop here
+//! is the exact expression the panel kernels inlined before dispatch
+//! existed (`sgemm_raw`'s AXPY and `forward::dot`'s mul-then-add fold).
+//! Every other ISA is pinned against these within the S23 tolerance.
+
+/// `dst[j] += av * src[j]`, one multiply and one add per element in
+/// ascending `j` — the original `sgemm_raw` panel AXPY.
+pub fn axpy(dst: &mut [f32], src: &[f32], av: f32) {
+    for (cv, &wv) in dst.iter_mut().zip(src) {
+        *cv += av * wv;
+    }
+}
+
+/// Sequential mul-then-add dot fold from index 0 — the original
+/// [`crate::native::forward::dot`], reproduced so the scalar ISA is
+/// self-contained.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(&x, &y)| x * y).sum()
+}

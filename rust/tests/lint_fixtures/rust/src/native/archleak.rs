@@ -1,0 +1,19 @@
+//! Fixture: arch-conditional code outside `native/simd/` fires R8 for
+//! each leaked identifier; the allow comment silences one occurrence.
+
+/// Wrong home for feature detection — the dispatch layer owns it (R8).
+#[cfg(target_arch = "x86_64")]
+pub fn probe() -> bool {
+    is_x86_feature_detected!("avx2")
+}
+
+/// A `std::arch` path reference outside the simd module also counts.
+pub fn path_leak() -> bool {
+    std::arch::is_x86_feature_detected!("fma")
+}
+
+/// Demonstrates the escape hatch on an R8 finding.
+pub fn tolerated() -> bool {
+    // lint: allow(R8) — fixture: demonstrates the escape hatch
+    cfg!(target_feature = "avx2")
+}

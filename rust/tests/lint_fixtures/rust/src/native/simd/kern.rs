@@ -1,0 +1,18 @@
+//! Fixture simd microkernels: an `unsafe fn` without a `// SAFETY:`
+//! comment fires R8; the annotated twin stays silent, and the arch
+//! identifiers are at home here (no outside-the-dispatch finding).
+
+/// Undocumented safety contract: fires R8.
+#[target_feature(enable = "avx2")]
+pub unsafe fn bad(dst: &mut [f32]) {
+    dst.fill(1.0);
+}
+
+/// Annotated safety contract: silent.
+///
+// SAFETY: the caller must guarantee avx2 (the dispatch front only
+// routes `supported()` ISAs here).
+#[target_feature(enable = "avx2")]
+pub unsafe fn good(dst: &mut [f32]) {
+    dst.fill(2.0);
+}

@@ -3,7 +3,7 @@
 //! Three layers:
 //!
 //! 1. **Golden fixture report** — `rust/tests/lint_fixtures/` is a fake
-//!    mini-repo whose files make every rule R0–R7 fire at least once
+//!    mini-repo whose files make every rule R0–R8 fire at least once
 //!    (plus counter-cases that must stay silent: a suppressed finding,
 //!    a `#[cfg(test)]` block, a pjrt-gated file, and a raw-string file
 //!    the PR-5 ad-hoc bracket scanner miscounted). The engine's report
@@ -53,7 +53,7 @@ fn fixture_corpus_fires_every_rule() {
     let report = run_lint(&fixture_root());
     let fired: std::collections::BTreeSet<&str> =
         report.findings.iter().map(|f| f.rule).collect();
-    for rule in ["R0", "R1", "R2", "R3", "R4", "R5", "R6", "R7"] {
+    for rule in ["R0", "R1", "R2", "R3", "R4", "R5", "R6", "R7", "R8"] {
         assert!(fired.contains(rule), "fixture never fired {rule}");
     }
 }
