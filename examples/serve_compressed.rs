@@ -15,7 +15,7 @@ use anyhow::Result;
 
 use elitekv::cli::Args;
 use elitekv::config::{ModelConfig, Variant};
-use elitekv::coordinator::router::EngineFactory;
+use elitekv::coordinator::cluster::EngineFactory;
 use elitekv::coordinator::{GenParams, InferenceServer, Request, Router};
 use elitekv::data::{CorpusGen, ProbeSet};
 use elitekv::kvcache::{BlockAllocator, CacheLayout};

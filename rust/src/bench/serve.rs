@@ -17,7 +17,10 @@ use crate::config::{ModelConfig, Variant};
 use crate::coordinator::scheduler::{
     ArrivalTrace, SchedulerConfig, TraceItem, TraceOpts,
 };
-use crate::coordinator::{GenParams, InferenceServer, Request};
+use crate::coordinator::{
+    EngineFactory, GenParams, InferenceServer, Request, RoutePolicyKind,
+    Router,
+};
 use crate::data::CorpusGen;
 use crate::kvcache::{CacheDtype, CacheLayout};
 use crate::native::{NativeModel, NativeRunner};
@@ -57,6 +60,15 @@ pub struct ServeBenchOpts {
     /// other workloads run at the caller's
     /// `scheduler.prefill_chunk_tokens`.
     pub prefill_chunk: usize,
+    /// Worker count of the sharded-routing pair (DESIGN.md S24): the
+    /// shared-prefix trace is replayed closed-loop through `--workers`
+    /// N engine workers twice — blind least-loaded, then
+    /// `route_policy` — so the JSON carries the affinity-routing hit
+    /// rate win directly. < 2 skips the multi-worker rows entirely.
+    pub workers: usize,
+    /// Routing policy of the second multi-worker row (the first is
+    /// always the blind [`RoutePolicyKind::LeastLoaded`] baseline).
+    pub route_policy: RoutePolicyKind,
     /// Trace seed.
     pub seed: u64,
 }
@@ -96,6 +108,11 @@ impl Default for ServeBenchOpts {
             // engine iterations of interleaved prefill, so the
             // monolithic-vs-chunked gap contrast is unmistakable.
             prefill_chunk: 4,
+            // Two workers is the smallest cluster where blind routing
+            // pays one extra shared-prefix miss — enough to measure
+            // the affinity contrast without doubling bench time again.
+            workers: 2,
+            route_policy: RoutePolicyKind::PrefixAffinity,
             seed: 0x5eed,
         }
     }
@@ -270,6 +287,137 @@ fn stall_trace(vocab: usize, seed: u64) -> ArrivalTrace {
     ArrivalTrace { items }
 }
 
+/// Closed-loop multi-worker replay (DESIGN.md S24): `workers`
+/// identical engines (same variant, same init seed, same scheduler,
+/// prefix cache ON) behind the sharded router, one request in flight
+/// at a time so the routing decision for request k always sees the
+/// cache deltas of requests 0..k — the policy contrast is then a
+/// deterministic property of the routing, not an artifact of arrival
+/// timing. Trace arrival steps are ignored (closed-loop serializes by
+/// construction), so `tokens_per_s` here measures single-stream
+/// engine throughput, not concurrency.
+fn bench_multi_worker(
+    cfg: &ModelConfig,
+    variant: &Variant,
+    opts: &ServeBenchOpts,
+    trace: &ArrivalTrace,
+    trace_tag: &str,
+    policy: RoutePolicyKind,
+    dtype: CacheDtype,
+) -> Result<Json> {
+    let workers = opts.workers;
+    let scheduler = SchedulerConfig {
+        prefix_cache: true,
+        cache_dtype: dtype,
+        sparse_k: None,
+        prefill_chunk_tokens: 0,
+        ..opts.scheduler.clone()
+    };
+    let factories: Vec<EngineFactory> = (0..workers)
+        .map(|_| {
+            let cfg = cfg.clone();
+            let variant = variant.clone();
+            let scheduler = scheduler.clone();
+            let (max_batch, max_seq, seed) =
+                (opts.max_batch, opts.max_seq, opts.seed);
+            let f: EngineFactory = Box::new(move || {
+                let sel = variant.r().map(|r| uniform_selection(&cfg, r));
+                let mut model = NativeModel::init(
+                    &cfg,
+                    variant.clone(),
+                    seed,
+                    sel.as_ref(),
+                )?;
+                model.set_cache_dtype(dtype);
+                model.set_sparse_k(None);
+                let runner = NativeRunner::new(model, max_batch, max_seq)?;
+                InferenceServer::with_config(Box::new(runner), &scheduler)
+            });
+            f
+        })
+        .collect();
+    let mut router =
+        Router::with_policy(factories, policy, scheduler.block_tokens);
+    let t0 = Instant::now();
+    for (k, item) in trace.items.iter().enumerate() {
+        let mut req = item.request.clone();
+        req.enqueued = Instant::now();
+        router.submit(req)?;
+        // Closed loop: wait for this request's response (and, by the
+        // deltas-before-response ordering, its cache insertions)
+        // before routing the next one.
+        let deadline =
+            Instant::now() + std::time::Duration::from_secs(120);
+        while router.poll() <= k {
+            anyhow::ensure!(
+                Instant::now() < deadline,
+                "multi-worker replay stalled at request {k}"
+            );
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        }
+    }
+    let responses = router.drain()?;
+    let wall = t0.elapsed().as_secs_f64();
+    let toks: usize = responses.iter().map(|r| r.tokens.len()).sum();
+    let rs = router.route_stats();
+    let worker_stats = router.stats();
+    let mut hits = 0usize;
+    let mut misses = 0usize;
+    let mut hit_tokens = 0usize;
+    let mut prefill_tokens = 0usize;
+    let mut cached_blocks = 0usize;
+    let mut per_worker_hit_rate = Vec::new();
+    for (_, s) in &worker_stats {
+        hits += s.prefix_hits;
+        misses += s.prefix_misses;
+        hit_tokens += s.prefix_hit_tokens;
+        prefill_tokens += s.prefill_tokens;
+        cached_blocks += s.prefix_cached_blocks;
+        per_worker_hit_rate.push(Json::num(s.prefix_hit_rate()));
+    }
+    let admissions = hits + misses;
+    let agg_rate = if admissions == 0 {
+        0.0
+    } else {
+        hits as f64 / admissions as f64
+    };
+    let nums =
+        |v: &[usize]| v.iter().map(|&x| Json::num(x as f64)).collect();
+    Ok(Json::obj(vec![
+        ("variant", Json::str(variant.tag())),
+        ("trace", Json::str(trace_tag)),
+        ("route_policy", Json::str(rs.policy)),
+        ("workers", Json::num(workers as f64)),
+        ("cache_dtype", Json::str(dtype.tag())),
+        ("prefix_cache", Json::Bool(true)),
+        ("completed", Json::num(responses.len() as f64)),
+        ("generated_tokens", Json::num(toks as f64)),
+        ("tokens_per_s", Json::num(toks as f64 / wall.max(1e-9))),
+        ("prefix_hits", Json::num(hits as f64)),
+        ("prefix_misses", Json::num(misses as f64)),
+        ("prefix_hit_tokens", Json::num(hit_tokens as f64)),
+        ("prefill_tokens", Json::num(prefill_tokens as f64)),
+        ("aggregate_prefix_hit_rate", Json::num(agg_rate)),
+        (
+            "affinity_hits",
+            Json::num(rs.affinity_hits.iter().sum::<usize>() as f64),
+        ),
+        (
+            "affinity_blocks",
+            Json::num(rs.affinity_blocks.iter().sum::<usize>() as f64),
+        ),
+        (
+            "shadow_blocks",
+            Json::num(rs.shadow_blocks.iter().sum::<usize>() as f64),
+        ),
+        ("prefix_cached_blocks", Json::num(cached_blocks as f64)),
+        ("per_worker_routed", Json::Arr(nums(&rs.routed))),
+        ("per_worker_affinity_hits", Json::Arr(nums(&rs.affinity_hits))),
+        ("per_worker_prefix_hit_rate", Json::Arr(per_worker_hit_rate)),
+        ("per_worker_shadow_blocks", Json::Arr(nums(&rs.shadow_blocks))),
+    ]))
+}
+
 /// Sweep the continuous-batching benchmark and write `out` as JSON.
 pub fn continuous_batching_bench(
     cfg: &ModelConfig,
@@ -436,6 +584,55 @@ pub fn continuous_batching_bench(
             );
             rows.push(row);
         }
+        // The sharded-routing pair (S24): the shared-prefix trace
+        // replayed closed-loop through the cluster router — blind
+        // least-loaded baseline first, then the caller's policy — at
+        // the caller's dtype, radix cache on. At equal completions the
+        // affinity row's aggregate prefix hit rate must strictly beat
+        // the blind row's (pinned in-test).
+        if opts.workers >= 2 {
+            if let Some(st) = &shared_trace {
+                for policy in
+                    [RoutePolicyKind::LeastLoaded, opts.route_policy]
+                {
+                    let row = bench_multi_worker(
+                        cfg,
+                        variant,
+                        opts,
+                        st,
+                        "multi_worker_shared_prefix",
+                        policy,
+                        opts.scheduler.cache_dtype,
+                    )
+                    .with_context(|| {
+                        format!(
+                            "bench {} (multi_worker {})",
+                            variant.tag(),
+                            policy.tag()
+                        )
+                    })?;
+                    println!(
+                        "bench continuous_batching/{:<22} {:<17} \
+                         {} workers {:<12}  {:>8.1} tok/s  hit rate \
+                         {:>5.1}%  affinity hits {:>3}  shadow blocks \
+                         {:>4}",
+                        variant.tag(),
+                        "multi_worker",
+                        opts.workers,
+                        policy.tag(),
+                        row.req("tokens_per_s").as_f64().unwrap_or(0.0),
+                        100.0
+                            * row
+                                .req("aggregate_prefix_hit_rate")
+                                .as_f64()
+                                .unwrap_or(0.0),
+                        row.req("affinity_hits").as_usize().unwrap_or(0),
+                        row.req("shadow_blocks").as_usize().unwrap_or(0),
+                    );
+                    rows.push(row);
+                }
+            }
+        }
     }
     let json = Json::obj(vec![
         ("experiment", Json::str("continuous_batching")),
@@ -454,6 +651,8 @@ pub fn continuous_batching_bench(
         ),
         ("sparse_k", Json::num(opts.sparse_k as f64)),
         ("prefill_chunk", Json::num(opts.prefill_chunk as f64)),
+        ("workers", Json::num(opts.workers as f64)),
+        ("route_policy", Json::str(opts.route_policy.tag())),
         ("n_requests", Json::num(trace.items.len() as f64)),
         ("trace_new_tokens", Json::num(trace.total_new_tokens() as f64)),
         ("rows", Json::Arr(rows)),
@@ -487,6 +686,7 @@ mod tests {
             },
             sparse_k: 0, // mixed + shared-prefix rows only: keep it fast
             prefill_chunk: 0,
+            workers: 0, // the multi-worker pair has its own pin below
             ..default
         };
         let out = std::env::temp_dir().join("elitekv_cb_bench_test.json");
@@ -607,6 +807,7 @@ mod tests {
             trace: TraceOpts { n_requests: 10, ..default.trace.clone() },
             sparse_k: 0, // shared-prefix rows are the subject here
             prefill_chunk: 0,
+            workers: 0, // the multi-worker pair has its own pin below
             ..default
         };
         let out = std::env::temp_dir().join("elitekv_cb_prefix_test.json");
@@ -792,6 +993,90 @@ mod tests {
                 );
             }
             assert!(row.req("step_ms_p50").as_f64().unwrap() > 0.0);
+        }
+    }
+
+    /// The S24 acceptance property: on the shared-prefix trace replayed
+    /// closed-loop over two workers, prefix-affinity routing yields a
+    /// strictly higher aggregate prefix hit rate than blind least-loaded
+    /// routing at equal completion counts — the shadow index turned
+    /// cache locality into a routing signal. Also pins that the blind
+    /// baseline really spreads load (both workers routed to) and that
+    /// the router's shadow view matches the workers' real block gauges
+    /// at drain.
+    #[test]
+    fn affinity_routing_beats_blind_on_shared_prefix_trace() {
+        let cfg = ModelConfig::tiny();
+        let default = ServeBenchOpts::default();
+        let opts = ServeBenchOpts {
+            trace: TraceOpts { n_requests: 10, ..default.trace.clone() },
+            sparse_k: 0, // multi-worker rows are the subject here
+            prefill_chunk: 0,
+            workers: 2,
+            ..default
+        };
+        let out = std::env::temp_dir().join("elitekv_cb_sharded_test.json");
+        let variants = vec![Variant::EliteKv {
+            r: cfg.n_chunks() / 4,
+            d_ckv: cfg.d_model / 4,
+        }];
+        let json =
+            continuous_batching_bench(&cfg, &variants, &opts, &out).unwrap();
+        std::fs::remove_file(&out).ok();
+        let find = |policy: &str| {
+            json.req("rows")
+                .as_arr()
+                .unwrap()
+                .iter()
+                .find(|r| {
+                    r.req("trace").as_str()
+                        == Some("multi_worker_shared_prefix")
+                        && r.req("route_policy").as_str() == Some(policy)
+                })
+                .cloned()
+                .unwrap()
+        };
+        let (blind, affinity) = (find("least-loaded"), find("affinity"));
+        // Equal completions: routing shards the stream, it never drops
+        // or changes a request.
+        for row in [&blind, &affinity] {
+            assert_eq!(row.req("completed").as_usize().unwrap(), 10);
+            assert_eq!(row.req("workers").as_usize().unwrap(), 2);
+        }
+        let (hb, ha) = (
+            blind.req("aggregate_prefix_hit_rate").as_f64().unwrap(),
+            affinity.req("aggregate_prefix_hit_rate").as_f64().unwrap(),
+        );
+        assert!(
+            ha > hb,
+            "affinity hit rate {ha:.3} !> blind hit rate {hb:.3}"
+        );
+        // The affinity row won because the shadow index actually fired.
+        assert!(
+            affinity.req("affinity_hits").as_usize().unwrap() >= 1,
+            "affinity row routed without a single shadow-prefix hit"
+        );
+        // The blind baseline is a fair contrast only if it spreads the
+        // stream: every worker must have been routed to.
+        let routed: Vec<usize> = blind
+            .req("per_worker_routed")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_usize().unwrap())
+            .collect();
+        assert!(
+            routed.iter().all(|&n| n > 0),
+            "blind routing starved a worker: {routed:?}"
+        );
+        // Shadow exactness at drain: the router's tokens-only mirror
+        // holds exactly as many blocks as the workers' radix caches.
+        for row in [&blind, &affinity] {
+            assert_eq!(
+                row.req("shadow_blocks").as_usize().unwrap(),
+                row.req("prefix_cached_blocks").as_usize().unwrap(),
+                "shadow index diverged from worker caches"
+            );
         }
     }
 }

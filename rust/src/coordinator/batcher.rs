@@ -18,7 +18,7 @@ use anyhow::Result;
 use crate::coordinator::api::Request;
 use crate::kvcache::block::BlockId;
 use crate::kvcache::quant::SlabRows;
-use crate::kvcache::radix::{PrefixHit, PrefixStats, RadixCache};
+use crate::kvcache::radix::{PrefixEvent, PrefixHit, PrefixStats, RadixCache};
 use crate::kvcache::{BlockAllocator, SlotManager};
 
 /// One admitted request: the lane it was assigned, the block chain
@@ -253,6 +253,23 @@ impl AdmissionQueue {
     /// Prefix-cache counter snapshot (None when disabled).
     pub fn prefix_stats(&self) -> Option<PrefixStats> {
         self.prefix.as_ref().map(|pc| pc.stats())
+    }
+
+    /// Enable or disable prefix delta-event tracking (no-op when the
+    /// radix cache is off). See [`RadixCache::set_event_tracking`].
+    pub fn set_prefix_event_tracking(&mut self, on: bool) {
+        if let Some(pc) = &mut self.prefix {
+            pc.set_event_tracking(on);
+        }
+    }
+
+    /// Drain pending prefix delta events (empty when the cache is off
+    /// or tracking is disabled). See [`PrefixEvent`].
+    pub fn take_prefix_events(&mut self) -> Vec<PrefixEvent> {
+        match &mut self.prefix {
+            Some(pc) => pc.take_events(),
+            None => Vec::new(),
+        }
     }
 
     /// Insert a finished request's full-block prompt prefix into the

@@ -1,0 +1,285 @@
+//! Worker membership for the sharded router (DESIGN.md S24): slot
+//! lifecycle (live / draining / dead), liveness sweeps over the worker
+//! thread handles, and the live in-flight load gauge the routing
+//! policies consume. This is pure bookkeeping — no channel traffic is
+//! interpreted here; `cluster/router.rs` drives the transitions.
+
+use std::sync::mpsc;
+use std::thread;
+
+use super::router::Cmd;
+
+/// Lifecycle state of one worker slot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkerState {
+    /// Accepting routed requests.
+    Live,
+    /// A drain barrier is outstanding: the worker is finishing its
+    /// in-flight work and no new requests are routed to it until the
+    /// barrier marker comes back.
+    Draining,
+    /// The worker thread exited (graceful leave, engine error, or
+    /// panic). Dead slots are never routed to again; slot ids are
+    /// stable, so surviving workers keep their identity.
+    Dead,
+}
+
+/// One worker slot: the command channel into the worker thread, the
+/// join handle liveness is swept through, and the routing gauges.
+pub(crate) struct WorkerSlot {
+    /// Command channel into the worker thread.
+    pub(crate) tx: mpsc::Sender<Cmd>,
+    /// Join handle; `is_finished()` is the liveness probe, `None` once
+    /// joined (leave/shutdown).
+    pub(crate) handle: Option<thread::JoinHandle<()>>,
+    /// Lifecycle state (see [`WorkerState`]).
+    pub(crate) state: WorkerState,
+    /// Requests in flight: incremented at route time, decremented as
+    /// each response streams back (NOT at drain — that was the PR-10
+    /// load-accounting bug this module fixes).
+    pub(crate) outstanding: usize,
+}
+
+/// Worker-slot table: join/leave, liveness sweeps, load accounting.
+/// All index-taking methods are total — an out-of-range slot id reads
+/// as dead/unloaded rather than panicking (R3: no panics on the
+/// serving path).
+#[derive(Default)]
+pub struct Membership {
+    slots: Vec<WorkerSlot>,
+}
+
+impl Membership {
+    /// Empty table.
+    pub(crate) fn new() -> Membership {
+        Membership { slots: Vec::new() }
+    }
+
+    /// Register a freshly spawned worker; returns its slot id.
+    pub(crate) fn join(
+        &mut self,
+        tx: mpsc::Sender<Cmd>,
+        handle: thread::JoinHandle<()>,
+    ) -> usize {
+        self.slots.push(WorkerSlot {
+            tx,
+            handle: Some(handle),
+            state: WorkerState::Live,
+            outstanding: 0,
+        });
+        self.slots.len() - 1
+    }
+
+    /// Number of slots ever joined (dead slots included — ids are
+    /// stable).
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// True when no worker ever joined.
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Slot ids currently routable (live, not draining, not dead).
+    pub fn live(&self) -> Vec<usize> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.state == WorkerState::Live)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Lifecycle state of slot `i` (out-of-range reads as dead).
+    pub fn state(&self, i: usize) -> WorkerState {
+        self.slots.get(i).map(|s| s.state).unwrap_or(WorkerState::Dead)
+    }
+
+    /// In-flight load of slot `i` (0 when out of range).
+    pub fn load(&self, i: usize) -> usize {
+        self.slots.get(i).map(|s| s.outstanding).unwrap_or(0)
+    }
+
+    /// Iterate `(slot id, slot)` pairs.
+    pub(crate) fn iter(
+        &self,
+    ) -> impl Iterator<Item = (usize, &WorkerSlot)> {
+        self.slots.iter().enumerate()
+    }
+
+    /// Send a command to slot `i`; false when the slot is out of range
+    /// or its worker thread hung up the channel.
+    pub(crate) fn send(&self, i: usize, cmd: Cmd) -> bool {
+        match self.slots.get(i) {
+            Some(s) => s.tx.send(cmd).is_ok(),
+            None => false,
+        }
+    }
+
+    /// Bump slot `i`'s in-flight load (route time).
+    pub(crate) fn inc_load(&mut self, i: usize) {
+        if let Some(s) = self.slots.get_mut(i) {
+            s.outstanding += 1;
+        }
+    }
+
+    /// Drop slot `i`'s in-flight load by one (response streamed back).
+    pub(crate) fn dec_load(&mut self, i: usize) {
+        if let Some(s) = self.slots.get_mut(i) {
+            s.outstanding = s.outstanding.saturating_sub(1);
+        }
+    }
+
+    /// Zero every slot's load (drain barrier: anything still counted
+    /// was lost to an engine error and is reported by the caller).
+    pub(crate) fn reset_loads(&mut self) {
+        for s in &mut self.slots {
+            s.outstanding = 0;
+        }
+    }
+
+    /// Mark a live slot draining (drain barrier sent).
+    pub(crate) fn begin_drain(&mut self, i: usize) {
+        if let Some(s) = self.slots.get_mut(i) {
+            if s.state == WorkerState::Live {
+                s.state = WorkerState::Draining;
+            }
+        }
+    }
+
+    /// Barrier marker received: a draining slot is routable again.
+    pub(crate) fn finish_drain(&mut self, i: usize) {
+        if let Some(s) = self.slots.get_mut(i) {
+            if s.state == WorkerState::Draining {
+                s.state = WorkerState::Live;
+            }
+        }
+    }
+
+    /// Mark slot `i` dead and zero its load (its in-flight requests
+    /// are lost; the router's drain accounting reports them).
+    pub(crate) fn mark_dead(&mut self, i: usize) {
+        if let Some(s) = self.slots.get_mut(i) {
+            s.state = WorkerState::Dead;
+            s.outstanding = 0;
+        }
+    }
+
+    /// Liveness sweep: any non-dead slot whose thread has exited (or
+    /// was already joined) becomes dead. Returns the newly dead ids.
+    pub(crate) fn sweep(&mut self) -> Vec<usize> {
+        let mut newly_dead = Vec::new();
+        for (i, s) in self.slots.iter_mut().enumerate() {
+            if s.state == WorkerState::Dead {
+                continue;
+            }
+            let finished = s
+                .handle
+                .as_ref()
+                .map(|h| h.is_finished())
+                .unwrap_or(true);
+            if finished {
+                s.state = WorkerState::Dead;
+                s.outstanding = 0;
+                newly_dead.push(i);
+            }
+        }
+        newly_dead
+    }
+
+    /// Graceful leave: tell slot `i`'s worker to shut down, join its
+    /// thread, and mark the slot dead.
+    pub(crate) fn leave(&mut self, i: usize) {
+        let _ = self.send(i, Cmd::Shutdown);
+        if let Some(s) = self.slots.get_mut(i) {
+            if let Some(h) = s.handle.take() {
+                let _ = h.join();
+            }
+            s.state = WorkerState::Dead;
+            s.outstanding = 0;
+        }
+    }
+
+    /// Shut every worker down and join all threads (router drop path).
+    pub(crate) fn shutdown_all(&mut self) {
+        for s in &self.slots {
+            let _ = s.tx.send(Cmd::Shutdown);
+        }
+        for s in &mut self.slots {
+            if let Some(h) = s.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idle_worker() -> (mpsc::Sender<Cmd>, thread::JoinHandle<()>) {
+        let (tx, rx) = mpsc::channel::<Cmd>();
+        let handle = thread::spawn(move || {
+            while let Ok(cmd) = rx.recv() {
+                if matches!(cmd, Cmd::Shutdown) {
+                    break;
+                }
+            }
+        });
+        (tx, handle)
+    }
+
+    #[test]
+    fn lifecycle_live_drain_dead() {
+        let mut m = Membership::new();
+        let (tx, h) = idle_worker();
+        let i = m.join(tx, h);
+        assert_eq!(m.state(i), WorkerState::Live);
+        assert_eq!(m.live(), vec![i]);
+        m.begin_drain(i);
+        assert_eq!(m.state(i), WorkerState::Draining);
+        assert!(m.live().is_empty());
+        m.finish_drain(i);
+        assert_eq!(m.state(i), WorkerState::Live);
+        m.leave(i);
+        assert_eq!(m.state(i), WorkerState::Dead);
+        assert!(m.live().is_empty());
+        // Totality: out-of-range ids read as dead/unloaded.
+        assert_eq!(m.state(99), WorkerState::Dead);
+        assert_eq!(m.load(99), 0);
+    }
+
+    #[test]
+    fn sweep_detects_exited_threads() {
+        let mut m = Membership::new();
+        let (tx, h) = idle_worker();
+        let i = m.join(tx, h);
+        assert!(m.sweep().is_empty());
+        // Ask the worker to exit, then wait for the thread to finish.
+        assert!(m.send(i, Cmd::Shutdown));
+        for _ in 0..200 {
+            if !m.sweep().is_empty() {
+                break;
+            }
+            thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert_eq!(m.state(i), WorkerState::Dead);
+    }
+
+    #[test]
+    fn load_accounting_saturates() {
+        let mut m = Membership::new();
+        let (tx, h) = idle_worker();
+        let i = m.join(tx, h);
+        m.inc_load(i);
+        m.inc_load(i);
+        assert_eq!(m.load(i), 2);
+        m.dec_load(i);
+        assert_eq!(m.load(i), 1);
+        m.dec_load(i);
+        m.dec_load(i); // saturates at 0, never underflows
+        assert_eq!(m.load(i), 0);
+        m.leave(i);
+    }
+}

@@ -1,0 +1,30 @@
+//! Sharded multi-worker serving (DESIGN.md S24): the scale-out layer
+//! that turns N isolated engine workers into one coordinated cluster.
+//!
+//! * [`membership`] — worker slots: join/leave lifecycle, liveness
+//!   sweeps over the thread handles, draining state, and the live
+//!   in-flight load gauge the policies route on.
+//! * [`policy`] — the [`RoutePolicy`] trait with the blind
+//!   [`LeastLoaded`] baseline and the shadow-index-driven
+//!   [`PrefixAffinity`] router, plus [`ShadowIndex`], the tokens-only
+//!   mirror of a worker's radix-cache contents.
+//! * [`router`] — command/response plumbing: fan requests over the
+//!   worker threads, stream responses (and piggybacked radix-cache
+//!   deltas) back live, and drain with exact missing-response
+//!   accounting when workers die.
+//!
+//! Routing never changes what a request generates: every worker runs
+//! the same engine configuration and sampling is seeded per request,
+//! so per-request outputs are bitwise identical no matter which worker
+//! serves them (`rust/tests/sharded_routing.rs` pins this).
+
+pub mod membership;
+pub mod policy;
+pub mod router;
+
+pub use membership::{Membership, WorkerState};
+pub use policy::{
+    Candidate, LeastLoaded, PrefixAffinity, RouteDecision, RoutePolicy,
+    RoutePolicyKind, ShadowIndex,
+};
+pub use router::{EngineFactory, RouteStats, Router};

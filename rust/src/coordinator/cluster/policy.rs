@@ -1,0 +1,357 @@
+//! Routing policies for the sharded router (DESIGN.md S24): the
+//! [`RoutePolicy`] trait, the blind [`LeastLoaded`] baseline, the
+//! shadow-index-driven [`PrefixAffinity`] policy, and the tokens-only
+//! [`ShadowIndex`] mirror of a worker's radix-cache contents that
+//! affinity routing consults.
+//!
+//! The shadow is exact, not approximate: the radix cache's delta
+//! stream ([`PrefixEvent`]) announces every block-granular change, and
+//! each cached block belongs to exactly one node path, so each
+//! block-aligned prefix string is inserted exactly once and removed
+//! exactly once — a plain set mirrors the cache with no refcounting.
+
+use std::collections::HashSet;
+
+use anyhow::{bail, Result};
+
+use crate::kvcache::radix::PrefixEvent;
+
+/// Tokens-only mirror of one worker's radix-cache contents: the set of
+/// block-aligned prompt prefixes the worker could serve from cache,
+/// with no slab rows attached. Kept current by replaying the worker's
+/// [`PrefixEvent`] deltas (piggybacked on its response channel).
+#[derive(Clone, Debug)]
+pub struct ShadowIndex {
+    /// Sharing granularity in tokens (must match the engines'
+    /// `SchedulerConfig::block_tokens`, or shadowed prefixes would
+    /// never align with real cache contents).
+    block_tokens: usize,
+    /// Every block-aligned cached prefix, one entry per cached block
+    /// (the entry for block `b` of a chain is the prefix of length
+    /// `b * block_tokens`).
+    prefixes: HashSet<Vec<u32>>,
+}
+
+impl ShadowIndex {
+    /// Empty shadow at the worker's block granularity.
+    pub fn new(block_tokens: usize) -> ShadowIndex {
+        ShadowIndex {
+            block_tokens: block_tokens.max(1),
+            prefixes: HashSet::new(),
+        }
+    }
+
+    /// Replay one worker delta into the mirror.
+    pub fn apply(&mut self, ev: &PrefixEvent) {
+        let bt = self.block_tokens;
+        match ev {
+            PrefixEvent::Insert { tokens, new_blocks } => {
+                let total = tokens.len() / bt;
+                let first = total.saturating_sub(*new_blocks);
+                for b in first + 1..=total {
+                    self.prefixes.insert(tokens[..b * bt].to_vec());
+                }
+            }
+            PrefixEvent::Evict { tokens, removed_blocks } => {
+                let total = tokens.len() / bt;
+                let first = total.saturating_sub(*removed_blocks);
+                for b in first + 1..=total {
+                    self.prefixes.remove(&tokens[..b * bt]);
+                }
+            }
+        }
+    }
+
+    /// Blocks currently mirrored (each block-aligned prefix is exactly
+    /// one cached block; equals the worker's `cached_blocks` gauge
+    /// once its deltas are applied).
+    pub fn blocks(&self) -> usize {
+        self.prefixes.len()
+    }
+
+    /// True when nothing is mirrored.
+    pub fn is_empty(&self) -> bool {
+        self.prefixes.is_empty()
+    }
+
+    /// True when this exact block-aligned prefix is mirrored (test
+    /// surface for the shadow-vs-cache property suite).
+    pub fn contains_prefix(&self, tokens: &[u32]) -> bool {
+        self.prefixes.contains(tokens)
+    }
+
+    /// Longest mirrored prefix of `prompt`, in blocks. Ascends one
+    /// block at a time and stops at the first miss — valid because the
+    /// radix tree is prefix-closed, so the mirror is too.
+    pub fn matched_blocks(&self, prompt: &[u32]) -> usize {
+        let bt = self.block_tokens;
+        let mut matched = 0usize;
+        while (matched + 1) * bt <= prompt.len()
+            && self.prefixes.contains(&prompt[..(matched + 1) * bt])
+        {
+            matched += 1;
+        }
+        matched
+    }
+}
+
+/// One routable worker as a policy sees it.
+#[derive(Debug)]
+pub struct Candidate<'a> {
+    /// Worker slot id.
+    pub worker: usize,
+    /// Requests in flight on this worker right now (incremented at
+    /// route time, decremented as responses stream back).
+    pub load: usize,
+    /// The worker's shadow index.
+    pub shadow: &'a ShadowIndex,
+}
+
+/// A policy's verdict for one request.
+#[derive(Clone, Copy, Debug)]
+pub struct RouteDecision {
+    /// Chosen worker slot id.
+    pub worker: usize,
+    /// Shadowed prefix blocks the choice was based on (0 for blind
+    /// policies and for affinity's least-loaded fallback).
+    pub affinity_blocks: usize,
+}
+
+/// A routing policy: pick one live worker for a prompt. Policies may
+/// keep state (`&mut self`) — e.g. a rotation counter — but must be
+/// deterministic given the same call sequence, so routed runs are
+/// reproducible. `candidates` is non-empty (the router bails out
+/// before routing when no live worker remains); a defensive
+/// implementation still returns worker 0 on an empty slice rather
+/// than panicking.
+pub trait RoutePolicy: Send {
+    /// Stable policy tag reported in stats and bench rows.
+    fn name(&self) -> &'static str;
+    /// Choose a worker from `candidates` for `prompt`.
+    fn route(
+        &mut self,
+        prompt: &[u32],
+        candidates: &[Candidate<'_>],
+    ) -> RouteDecision;
+}
+
+/// Blind baseline: the least-loaded live worker, with a rotating
+/// tie-break. The rotation matters: under closed-loop (serialized)
+/// traffic every submit sees all loads at zero, and a lowest-id
+/// tie-break would pin the whole trace to worker 0 — rotating spreads
+/// ties round-robin so the baseline actually exercises N workers.
+#[derive(Debug, Default)]
+pub struct LeastLoaded {
+    rr: usize,
+}
+
+impl RoutePolicy for LeastLoaded {
+    fn name(&self) -> &'static str {
+        "least-loaded"
+    }
+
+    fn route(
+        &mut self,
+        _prompt: &[u32],
+        candidates: &[Candidate<'_>],
+    ) -> RouteDecision {
+        let n = candidates.len();
+        let mut best: Option<(usize, usize)> = None; // (load, worker)
+        for k in 0..n {
+            let c = &candidates[(self.rr + k) % n];
+            if best.map(|(l, _)| c.load < l).unwrap_or(true) {
+                best = Some((c.load, c.worker));
+            }
+        }
+        self.rr = self.rr.wrapping_add(1);
+        let (_, worker) = best.unwrap_or((0, 0));
+        RouteDecision { worker, affinity_blocks: 0 }
+    }
+}
+
+/// Cache-affinity policy: route to the worker whose shadow index holds
+/// the longest block-aligned prefix of the prompt, so shared system
+/// prompts concentrate on one worker instead of re-missing once per
+/// worker. Ties among equally long matches go to the least loaded of
+/// the tied workers (lowest id on a full tie — sticky, so an affinity
+/// group does not migrate); a no-hit falls back to the
+/// [`LeastLoaded`] baseline entirely.
+#[derive(Debug, Default)]
+pub struct PrefixAffinity {
+    fallback: LeastLoaded,
+}
+
+impl RoutePolicy for PrefixAffinity {
+    fn name(&self) -> &'static str {
+        "affinity"
+    }
+
+    fn route(
+        &mut self,
+        prompt: &[u32],
+        candidates: &[Candidate<'_>],
+    ) -> RouteDecision {
+        let mut best_blocks = 0usize;
+        for c in candidates {
+            best_blocks = best_blocks.max(c.shadow.matched_blocks(prompt));
+        }
+        if best_blocks == 0 {
+            return self.fallback.route(prompt, candidates);
+        }
+        let mut winner: Option<(usize, usize)> = None; // (load, worker)
+        for c in candidates {
+            if c.shadow.matched_blocks(prompt) != best_blocks {
+                continue;
+            }
+            if winner.map(|(l, _)| c.load < l).unwrap_or(true) {
+                winner = Some((c.load, c.worker));
+            }
+        }
+        let (_, worker) = winner.unwrap_or((0, 0));
+        RouteDecision { worker, affinity_blocks: best_blocks }
+    }
+}
+
+/// CLI-facing policy selector (`--route-policy affinity|least-loaded`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutePolicyKind {
+    /// Blind least-loaded routing ([`LeastLoaded`]).
+    LeastLoaded,
+    /// Shadow-index cache-affinity routing ([`PrefixAffinity`]).
+    PrefixAffinity,
+}
+
+impl RoutePolicyKind {
+    /// Parse a `--route-policy` value.
+    pub fn parse(tag: &str) -> Result<RoutePolicyKind> {
+        match tag {
+            "least-loaded" => Ok(RoutePolicyKind::LeastLoaded),
+            "affinity" => Ok(RoutePolicyKind::PrefixAffinity),
+            other => bail!(
+                "unknown route policy `{other}` \
+                 (expected affinity or least-loaded)"
+            ),
+        }
+    }
+
+    /// Stable tag (round-trips through [`RoutePolicyKind::parse`]).
+    pub fn tag(&self) -> &'static str {
+        match self {
+            RoutePolicyKind::LeastLoaded => "least-loaded",
+            RoutePolicyKind::PrefixAffinity => "affinity",
+        }
+    }
+
+    /// Instantiate the policy.
+    pub fn build(&self) -> Box<dyn RoutePolicy> {
+        match self {
+            RoutePolicyKind::LeastLoaded => {
+                Box::new(LeastLoaded::default())
+            }
+            RoutePolicyKind::PrefixAffinity => {
+                Box::new(PrefixAffinity::default())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev_insert(tokens: Vec<u32>, new_blocks: usize) -> PrefixEvent {
+        PrefixEvent::Insert { tokens, new_blocks }
+    }
+
+    #[test]
+    fn shadow_mirrors_insert_and_evict() {
+        let mut s = ShadowIndex::new(2);
+        // Leaf [1,2,3,4]: blocks [1,2] and [1,2,3,4], both novel.
+        s.apply(&ev_insert(vec![1, 2, 3, 4], 2));
+        assert_eq!(s.blocks(), 2);
+        assert!(s.contains_prefix(&[1, 2]));
+        assert!(s.contains_prefix(&[1, 2, 3, 4]));
+        // Sibling tail [1,2,9,9]: only its last block is novel.
+        s.apply(&ev_insert(vec![1, 2, 9, 9], 1));
+        assert_eq!(s.blocks(), 3);
+        // Evicting the [3,4] leaf removes only its own block.
+        s.apply(&PrefixEvent::Evict {
+            tokens: vec![1, 2, 3, 4],
+            removed_blocks: 1,
+        });
+        assert_eq!(s.blocks(), 2);
+        assert!(s.contains_prefix(&[1, 2]));
+        assert!(!s.contains_prefix(&[1, 2, 3, 4]));
+        assert!(s.contains_prefix(&[1, 2, 9, 9]));
+    }
+
+    #[test]
+    fn shadow_matched_blocks_ascends_to_first_miss() {
+        let mut s = ShadowIndex::new(2);
+        s.apply(&ev_insert(vec![1, 2, 3, 4], 2));
+        assert_eq!(s.matched_blocks(&[1, 2, 3, 4, 5, 6]), 2);
+        assert_eq!(s.matched_blocks(&[1, 2, 7, 8]), 1);
+        assert_eq!(s.matched_blocks(&[9, 9, 9, 9]), 0);
+        // Partial trailing block never counts.
+        assert_eq!(s.matched_blocks(&[1, 2, 3]), 1);
+    }
+
+    #[test]
+    fn least_loaded_rotates_ties_and_prefers_low_load() {
+        let s0 = ShadowIndex::new(2);
+        let s1 = ShadowIndex::new(2);
+        let mut p = LeastLoaded::default();
+        let tied = [
+            Candidate { worker: 0, load: 0, shadow: &s0 },
+            Candidate { worker: 1, load: 0, shadow: &s1 },
+        ];
+        // All-zero loads: the rotation alternates the winner.
+        assert_eq!(p.route(&[], &tied).worker, 0);
+        assert_eq!(p.route(&[], &tied).worker, 1);
+        assert_eq!(p.route(&[], &tied).worker, 0);
+        // A genuinely lighter worker wins regardless of rotation.
+        let skewed = [
+            Candidate { worker: 0, load: 5, shadow: &s0 },
+            Candidate { worker: 1, load: 1, shadow: &s1 },
+        ];
+        for _ in 0..4 {
+            assert_eq!(p.route(&[], &skewed).worker, 1);
+        }
+    }
+
+    #[test]
+    fn affinity_prefers_longest_prefix_and_falls_back() {
+        let mut s0 = ShadowIndex::new(2);
+        let mut s1 = ShadowIndex::new(2);
+        s0.apply(&ev_insert(vec![1, 2], 1));
+        s1.apply(&ev_insert(vec![1, 2, 3, 4], 2));
+        let mut p = PrefixAffinity::default();
+        let cands = [
+            Candidate { worker: 0, load: 0, shadow: &s0 },
+            Candidate { worker: 1, load: 9, shadow: &s1 },
+        ];
+        // Longer shadowed prefix beats lighter load.
+        let d = p.route(&[1, 2, 3, 4, 5, 5], &cands);
+        assert_eq!(d.worker, 1);
+        assert_eq!(d.affinity_blocks, 2);
+        // Equal match length: load breaks the tie.
+        let d = p.route(&[1, 2, 9, 9], &cands);
+        assert_eq!(d.worker, 0);
+        assert_eq!(d.affinity_blocks, 1);
+        // No hit anywhere: least-loaded fallback, zero affinity.
+        let d = p.route(&[7, 7, 7, 7], &cands);
+        assert_eq!(d.worker, 0);
+        assert_eq!(d.affinity_blocks, 0);
+    }
+
+    #[test]
+    fn kind_round_trips_and_rejects_unknown() {
+        for kind in
+            [RoutePolicyKind::LeastLoaded, RoutePolicyKind::PrefixAffinity]
+        {
+            assert_eq!(RoutePolicyKind::parse(kind.tag()).unwrap(), kind);
+            assert_eq!(kind.build().name(), kind.tag());
+        }
+        assert!(RoutePolicyKind::parse("random").is_err());
+    }
+}

@@ -1,0 +1,586 @@
+//! Command/response plumbing of the sharded router (DESIGN.md S24):
+//! fan requests over engine worker threads, stream responses back
+//! *live* (so worker load decrements as work completes instead of
+//! resetting only at drain), mirror each worker's radix-cache deltas
+//! into a per-worker [`ShadowIndex`], and drain with exact
+//! missing-response accounting when workers die mid-round.
+//!
+//! Ordering contract: a worker flushes its cache deltas BEFORE the
+//! responses of the engine step that produced them. Per-sender FIFO
+//! then guarantees that once the router has seen a request's response,
+//! it has already seen that request's cache insertions — which is what
+//! makes closed-loop affinity routing deterministic.
+//!
+//! Routing invariance: workers run identical engine configurations and
+//! a request's sampling seed comes from its own params (xor'd with the
+//! request id), so per-request outputs are bitwise identical no matter
+//! which worker serves them (`rust/tests/sharded_routing.rs`).
+
+use std::sync::mpsc;
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::api::{FinishReason, Request, Response};
+use crate::coordinator::server::{InferenceServer, ServerStats};
+use crate::kvcache::radix::PrefixEvent;
+
+use super::membership::{Membership, WorkerState};
+use super::policy::{Candidate, RoutePolicyKind, ShadowIndex};
+
+/// Router -> worker commands.
+pub(crate) enum Cmd {
+    /// Run this request on the worker's engine.
+    Submit(Request),
+    /// Finish all in-flight work, streaming responses, then mark the
+    /// drain barrier.
+    Drain,
+    /// Snapshot the engine's scheduler stats through the one-shot sender.
+    Stats(mpsc::Sender<ServerStats>),
+    /// Exit the worker loop.
+    Shutdown,
+}
+
+/// Worker -> router traffic. `DrainDone(i)` is worker `i`'s barrier
+/// marker: it lets `Router::drain` terminate even when an engine
+/// errored mid-drain and some submitted requests will never produce a
+/// response.
+enum WorkerMsg {
+    /// Radix-cache deltas from one engine step, flushed BEFORE that
+    /// step's responses (see the module-level ordering contract).
+    Deltas { worker: usize, events: Vec<PrefixEvent> },
+    /// One completed (or rejected) request; `worker` keys the live
+    /// load decrement.
+    Response { worker: usize, response: Response },
+    /// Worker `i` finished draining.
+    DrainDone(usize),
+}
+
+/// A thread-local engine constructor. PJRT client handles are not Send,
+/// so each worker builds its own engine *inside* its thread.
+pub type EngineFactory =
+    Box<dyn FnOnce() -> anyhow::Result<InferenceServer> + Send>;
+
+/// Per-worker routing accounting (the S24 bench columns).
+#[derive(Clone, Debug, Default)]
+pub struct RouteStats {
+    /// Tag of the policy that routed (`"affinity"`/`"least-loaded"`).
+    pub policy: &'static str,
+    /// Requests routed to each worker slot (cumulative).
+    pub routed: Vec<usize>,
+    /// Routed requests whose decision matched a nonzero shadowed
+    /// prefix, per worker slot.
+    pub affinity_hits: Vec<usize>,
+    /// Shadowed prefix blocks those matches claimed, summed per slot.
+    pub affinity_blocks: Vec<usize>,
+    /// Current shadow-index size per worker slot, in blocks (gauge).
+    pub shadow_blocks: Vec<usize>,
+}
+
+/// Policy-routed request fan-out over N single-engine worker threads,
+/// with streaming response collection and per-worker shadow radix
+/// indexes (DESIGN.md S24).
+pub struct Router {
+    members: Membership,
+    policy: Box<dyn super::policy::RoutePolicy>,
+    policy_kind: RoutePolicyKind,
+    shadows: Vec<ShadowIndex>,
+    rx: mpsc::Receiver<WorkerMsg>,
+    /// Responses streamed in since the last drain returned.
+    pending: Vec<Response>,
+    submitted: usize,
+    collected: usize,
+    routed: Vec<usize>,
+    affinity_hits: Vec<usize>,
+    affinity_blocks: Vec<usize>,
+}
+
+/// Flush one engine step's output: cache deltas first, then the
+/// responses the same step completed (the module-level ordering
+/// contract).
+fn flush(
+    worker: usize,
+    engine: &mut InferenceServer,
+    out: &mpsc::Sender<WorkerMsg>,
+    responses: Vec<Response>,
+) {
+    let events = engine.take_prefix_events();
+    if !events.is_empty() {
+        let _ = out.send(WorkerMsg::Deltas { worker, events });
+    }
+    for response in responses {
+        let _ = out.send(WorkerMsg::Response { worker, response });
+    }
+}
+
+/// Body of one worker thread: build the engine in-thread, then
+/// interleave command handling with engine steps — while the engine is
+/// busy, commands are polled between steps so responses stream out
+/// live; while idle, the loop blocks on the channel. An engine error
+/// is terminal: the loop logs, exits, and the router's liveness sweep
+/// reclassifies the slot as dead.
+fn worker_loop(
+    i: usize,
+    factory: EngineFactory,
+    cmd_rx: mpsc::Receiver<Cmd>,
+    out: mpsc::Sender<WorkerMsg>,
+) {
+    let mut engine = match factory() {
+        Ok(mut e) => {
+            e.track_prefix_events(true);
+            e
+        }
+        Err(e) => {
+            log::error!("engine {i} init failed: {e:#}");
+            return;
+        }
+    };
+    loop {
+        let cmd = if engine.busy() {
+            match cmd_rx.try_recv() {
+                Ok(c) => Some(c),
+                Err(mpsc::TryRecvError::Empty) => None,
+                Err(mpsc::TryRecvError::Disconnected) => break,
+            }
+        } else {
+            match cmd_rx.recv() {
+                Ok(c) => Some(c),
+                Err(_) => break,
+            }
+        };
+        match cmd {
+            Some(Cmd::Submit(req)) => {
+                let id = req.id;
+                if let Err(e) = engine.submit(req) {
+                    log::error!("engine {i}: request {id} rejected: {e:#}");
+                    // Keep the router's response accounting exact: a
+                    // rejection still produces one response.
+                    let _ = out.send(WorkerMsg::Response {
+                        worker: i,
+                        response: Response {
+                            id,
+                            tokens: Vec::new(),
+                            ttft: 0.0,
+                            tpot: 0.0,
+                            latency: 0.0,
+                            finish: FinishReason::Rejected,
+                        },
+                    });
+                }
+            }
+            Some(Cmd::Stats(tx)) => {
+                let _ = tx.send(engine.stats.clone());
+            }
+            Some(Cmd::Drain) => {
+                let mut failed = false;
+                while engine.busy() {
+                    match engine.step() {
+                        Ok(responses) => {
+                            flush(i, &mut engine, &out, responses);
+                        }
+                        Err(e) => {
+                            log::error!("engine {i}: {e:#}");
+                            failed = true;
+                            break;
+                        }
+                    }
+                }
+                flush(i, &mut engine, &out, Vec::new());
+                // Always mark the barrier, even after an engine error —
+                // in-flight requests may be lost but drain() must
+                // return.
+                let _ = out.send(WorkerMsg::DrainDone(i));
+                if failed {
+                    // The engine is poisoned; exit so the liveness
+                    // sweep retires this slot instead of routing more
+                    // requests into errors.
+                    break;
+                }
+            }
+            Some(Cmd::Shutdown) => break,
+            None => match engine.step() {
+                Ok(responses) => flush(i, &mut engine, &out, responses),
+                Err(e) => {
+                    log::error!("engine {i}: {e:#}");
+                    break;
+                }
+            },
+        }
+    }
+}
+
+impl Router {
+    /// Least-loaded router at the default 16-token shadow granularity
+    /// (the blind policy never reads shadow contents, so the
+    /// granularity is irrelevant here; this is the back-compatible
+    /// constructor).
+    pub fn new(factories: Vec<EngineFactory>) -> Router {
+        Router::with_policy(factories, RoutePolicyKind::LeastLoaded, 16)
+    }
+
+    /// Build a router with one worker thread per factory, routing with
+    /// `policy`. `block_tokens` sets the shadow-index granularity and
+    /// must match the engines' `SchedulerConfig::block_tokens` for
+    /// affinity routing to see real cache contents.
+    pub fn with_policy(
+        factories: Vec<EngineFactory>,
+        policy: RoutePolicyKind,
+        block_tokens: usize,
+    ) -> Router {
+        let (resp_tx, rx) = mpsc::channel::<WorkerMsg>();
+        let mut members = Membership::new();
+        let n = factories.len();
+        for (i, factory) in factories.into_iter().enumerate() {
+            let (tx, cmd_rx) = mpsc::channel::<Cmd>();
+            let out = resp_tx.clone();
+            let handle = thread::Builder::new()
+                .name(format!("elitekv-engine-{i}"))
+                .spawn(move || worker_loop(i, factory, cmd_rx, out))
+                // lint: allow(R3) — worker-pool construction runs
+                // once at router startup, not on the request path.
+                .expect("spawn engine worker");
+            members.join(tx, handle);
+        }
+        // `resp_tx` is dropped here: only workers hold senders, so the
+        // channel disconnects (and drain/recv errors out) when every
+        // worker thread has exited.
+        drop(resp_tx);
+        Router {
+            members,
+            policy: policy.build(),
+            policy_kind: policy,
+            shadows: (0..n).map(|_| ShadowIndex::new(block_tokens)).collect(),
+            rx,
+            pending: Vec::new(),
+            submitted: 0,
+            collected: 0,
+            routed: vec![0; n],
+            affinity_hits: vec![0; n],
+            affinity_blocks: vec![0; n],
+        }
+    }
+
+    /// Number of engine worker slots (dead slots included; ids are
+    /// stable).
+    pub fn n_workers(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Live in-flight load per worker slot: incremented at route time,
+    /// decremented as each response streams back (dead slots read 0).
+    pub fn loads(&self) -> Vec<usize> {
+        (0..self.members.len()).map(|i| self.members.load(i)).collect()
+    }
+
+    /// Lifecycle state per worker slot.
+    pub fn states(&self) -> Vec<WorkerState> {
+        (0..self.members.len()).map(|i| self.members.state(i)).collect()
+    }
+
+    /// Per-worker routing accounting under the active policy.
+    pub fn route_stats(&self) -> RouteStats {
+        RouteStats {
+            policy: self.policy_kind.tag(),
+            routed: self.routed.clone(),
+            affinity_hits: self.affinity_hits.clone(),
+            affinity_blocks: self.affinity_blocks.clone(),
+            shadow_blocks: self.shadows.iter().map(|s| s.blocks()).collect(),
+        }
+    }
+
+    /// Drain worker traffic without blocking and return how many
+    /// responses have streamed in this round so far. This is the live
+    /// half of collection: loads decrement and shadow indexes update
+    /// here (and inside submit/drain, which pump too), not only at the
+    /// drain barrier.
+    pub fn poll(&mut self) -> usize {
+        self.pump();
+        self.collected
+    }
+
+    /// Consume every buffered worker message. Stale `DrainDone`
+    /// markers (from a worker that died right after barrier-marking a
+    /// previous round) are ignored here — barrier masks are per-drain.
+    fn pump(&mut self) {
+        while let Ok(msg) = self.rx.try_recv() {
+            self.apply(msg);
+        }
+    }
+
+    /// Fold one worker message into router state; returns the worker
+    /// id when the message was a drain barrier marker.
+    fn apply(&mut self, msg: WorkerMsg) -> Option<usize> {
+        match msg {
+            WorkerMsg::Deltas { worker, events } => {
+                if let Some(shadow) = self.shadows.get_mut(worker) {
+                    for ev in &events {
+                        shadow.apply(ev);
+                    }
+                }
+                None
+            }
+            WorkerMsg::Response { worker, response } => {
+                self.members.dec_load(worker);
+                self.collected += 1;
+                self.pending.push(response);
+                None
+            }
+            WorkerMsg::DrainDone(i) => Some(i),
+        }
+    }
+
+    /// Route one request. Pumps pending worker traffic first (so loads
+    /// and shadows are current), asks the policy for a worker, and
+    /// reroutes if the chosen worker's channel is gone (marking the
+    /// slot dead). Errors only when no live worker remains.
+    pub fn submit(&mut self, req: Request) -> Result<()> {
+        self.pump();
+        self.members.sweep();
+        loop {
+            let live = self.members.live();
+            if live.is_empty() {
+                bail!("router has no live workers");
+            }
+            let candidates: Vec<Candidate<'_>> = live
+                .iter()
+                .filter_map(|&w| {
+                    self.shadows.get(w).map(|shadow| Candidate {
+                        worker: w,
+                        load: self.members.load(w),
+                        shadow,
+                    })
+                })
+                .collect();
+            let decision = self.policy.route(&req.prompt, &candidates);
+            let w = decision.worker;
+            if !self.members.send(w, Cmd::Submit(req.clone())) {
+                log::error!(
+                    "worker {w} hung up; rerouting request {}",
+                    req.id
+                );
+                self.members.mark_dead(w);
+                continue;
+            }
+            self.members.inc_load(w);
+            self.submitted += 1;
+            if let Some(r) = self.routed.get_mut(w) {
+                *r += 1;
+            }
+            if decision.affinity_blocks > 0 {
+                if let Some(h) = self.affinity_hits.get_mut(w) {
+                    *h += 1;
+                }
+                if let Some(b) = self.affinity_blocks.get_mut(w) {
+                    *b += decision.affinity_blocks;
+                }
+            }
+            return Ok(());
+        }
+    }
+
+    /// Snapshot scheduler stats from every non-dead worker, keyed by
+    /// slot id (dead workers are skipped — their engine is gone). Call
+    /// after [`Router::drain`] for end-of-run numbers.
+    pub fn stats(&self) -> Vec<(usize, ServerStats)> {
+        let mut out = Vec::new();
+        for (i, slot) in self.members.iter() {
+            if slot.state == WorkerState::Dead {
+                continue;
+            }
+            let (tx, rx) = mpsc::channel();
+            if !self.members.send(i, Cmd::Stats(tx)) {
+                continue;
+            }
+            match rx.recv() {
+                Ok(s) => out.push((i, s)),
+                Err(_) => {
+                    log::error!("worker {i} exited before reporting stats");
+                }
+            }
+        }
+        out
+    }
+
+    /// Gracefully remove worker `i` from the cluster: its thread is
+    /// told to shut down and joined, and the slot goes dead. Requests
+    /// still in flight on it are NOT recovered — the next
+    /// [`Router::drain`] reports them as missing — so leave idle
+    /// workers, or drain first.
+    pub fn leave(&mut self, i: usize) {
+        self.pump();
+        self.members.leave(i);
+        // Sweep up anything it flushed between the pump and its exit.
+        self.pump();
+    }
+
+    /// Run all workers to completion and return every response routed
+    /// since the last drain (both the already-streamed and the ones
+    /// collected during the barrier). Returns once every worker has
+    /// finished draining (or died); responses lost to engine errors or
+    /// worker panics are reported as an error instead of blocking
+    /// forever.
+    pub fn drain(&mut self) -> Result<Vec<Response>> {
+        self.members.sweep();
+        let n = self.members.len();
+        let mut done_mask = vec![false; n];
+        for i in 0..n {
+            // A dead worker (init failure / engine error / panic) will
+            // never send its barrier marker: count it done up front.
+            if self.members.state(i) == WorkerState::Dead {
+                if let Some(d) = done_mask.get_mut(i) {
+                    *d = true;
+                }
+                continue;
+            }
+            if self.members.send(i, Cmd::Drain) {
+                self.members.begin_drain(i);
+            } else {
+                self.members.mark_dead(i);
+                if let Some(d) = done_mask.get_mut(i) {
+                    *d = true;
+                }
+            }
+        }
+        // Consume until EVERY live worker has marked its barrier —
+        // per-sender FIFO means all of a worker's responses (and
+        // deltas) precede its marker, so nothing is left behind for
+        // the next round. The timeout arm sweeps for workers that
+        // died mid-drain (their thread is finished but no marker ever
+        // arrives).
+        while done_mask.iter().any(|d| !d) {
+            match self.rx.recv_timeout(Duration::from_millis(250)) {
+                Ok(msg) => {
+                    if let Some(i) = self.apply(msg) {
+                        if let Some(d) = done_mask.get_mut(i) {
+                            *d = true;
+                        }
+                        self.members.finish_drain(i);
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    for i in self.members.sweep() {
+                        log::error!(
+                            "worker {i} died during drain; its \
+                             in-flight requests are lost"
+                        );
+                        if let Some(d) = done_mask.get_mut(i) {
+                            *d = true;
+                        }
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        // A worker that died between flushing output and its marker
+        // leaves messages buffered: sweep them up now so they are not
+        // mis-attributed to the NEXT round's accounting.
+        self.pump();
+        let out = std::mem::take(&mut self.pending);
+        let missing = self.submitted.saturating_sub(self.collected);
+        // Full barrier: reset the accounting either way so a later
+        // submit/drain round starts clean.
+        self.submitted = 0;
+        self.collected = 0;
+        self.members.reset_loads();
+        if missing > 0 {
+            bail!(
+                "{missing} request(s) lost to engine errors during drain \
+                 ({} responses collected; see worker logs)",
+                out.len()
+            );
+        }
+        Ok(out)
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        self.members.shutdown_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::time::Instant;
+
+    use super::*;
+    use crate::config::{ModelConfig, Variant};
+    use crate::coordinator::api::GenParams;
+    use crate::coordinator::scheduler::SchedulerConfig;
+    use crate::native::{NativeModel, NativeRunner};
+
+    fn tiny_factory() -> EngineFactory {
+        Box::new(|| {
+            let cfg = ModelConfig::tiny();
+            let model = NativeModel::init(&cfg, Variant::Mha, 7, None)?;
+            let runner = NativeRunner::new(model, 2, 64)?;
+            let scheduler = SchedulerConfig {
+                prefix_cache: true,
+                ..SchedulerConfig::with_budget(1 << 20)
+            };
+            InferenceServer::with_config(Box::new(runner), &scheduler)
+        })
+    }
+
+    fn req(id: u64, prompt: Vec<u32>) -> Request {
+        Request::new(
+            id,
+            prompt,
+            GenParams {
+                max_new_tokens: 4,
+                stop_token: None,
+                ..Default::default()
+            },
+        )
+    }
+
+    /// The PR-10 satellite pin: `outstanding` used to be incremented at
+    /// submit and only reset at drain, so "least-loaded" was really
+    /// "fewest-submitted-this-round". With streaming collection the
+    /// load must hit zero as responses arrive, BEFORE any drain.
+    #[test]
+    fn streaming_collection_decrements_load_before_drain() {
+        let cfg = ModelConfig::tiny();
+        let mut router = Router::new(vec![tiny_factory(), tiny_factory()]);
+        let n_req = 4u64;
+        for i in 0..n_req {
+            let prompt: Vec<u32> =
+                (0..8).map(|t| ((i * 8 + t) % cfg.vocab as u64) as u32).collect();
+            router.submit(req(i, prompt)).unwrap();
+        }
+        let deadline = Instant::now() + Duration::from_secs(60);
+        while router.poll() < n_req as usize {
+            assert!(
+                Instant::now() < deadline,
+                "responses never streamed back"
+            );
+            thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(
+            router.loads(),
+            vec![0, 0],
+            "loads must decrement live as responses stream back"
+        );
+        let responses = router.drain().unwrap();
+        assert_eq!(responses.len(), n_req as usize);
+        let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..n_req).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn leave_retires_worker_but_cluster_keeps_serving() {
+        let cfg = ModelConfig::tiny();
+        let mut router = Router::new(vec![tiny_factory(), tiny_factory()]);
+        router.leave(0);
+        assert_eq!(router.states()[0], WorkerState::Dead);
+        let prompt: Vec<u32> = (0..8).map(|t| t % cfg.vocab as u32).collect();
+        for i in 0..3 {
+            router.submit(req(i, prompt.clone())).unwrap();
+        }
+        let responses = router.drain().unwrap();
+        assert_eq!(responses.len(), 3);
+        assert_eq!(router.route_stats().routed, vec![0, 3]);
+    }
+}

@@ -12,17 +12,22 @@
 //!   latency metrics. Drives any [`crate::runtime::Backend`] — the native
 //!   Rust decode path (no artifacts) or the PJRT executor (feature
 //!   `pjrt`).
-//! * [`router`]  — leader/worker scale-out: routes requests to the
-//!   least-loaded worker thread, each running its own engine instance.
+//! * [`cluster`] — sharded multi-worker scale-out (DESIGN.md S24):
+//!   worker membership and liveness, routing policies (blind
+//!   least-loaded vs. cache-affinity over a shadow radix index kept
+//!   current by worker deltas), and the streaming router that fans
+//!   requests over N engine worker threads.
 
 pub mod api;
 pub mod batcher;
-pub mod router;
+pub mod cluster;
 pub mod scheduler;
 pub mod server;
 
 pub use api::{GenParams, Request, Response};
 pub use batcher::{Admission, AdmissionQueue};
-pub use router::Router;
+pub use cluster::{
+    EngineFactory, RoutePolicyKind, RouteStats, Router, WorkerState,
+};
 pub use scheduler::{ArrivalTrace, SchedulerConfig, TraceOpts};
 pub use server::{InferenceServer, ServerStats};

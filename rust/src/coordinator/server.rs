@@ -203,6 +203,19 @@ impl ServerStats {
                 / (self.occupancy_samples * self.blocks_total) as f64
         }
     }
+
+    /// Admission-scoped prefix hit rate `hits / (hits + misses)` in
+    /// [0, 1]; 0.0 when the prefix cache is off or nothing was
+    /// admitted. The sharded bench reports this per worker and in
+    /// aggregate (DESIGN.md S24).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let total = self.prefix_hits + self.prefix_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.prefix_hits as f64 / total as f64
+        }
+    }
 }
 
 /// Single-worker inference engine over one [`Backend`].
@@ -358,6 +371,20 @@ impl InferenceServer {
     /// True while requests are queued or lanes are mid-generation.
     pub fn busy(&self) -> bool {
         !self.queue.is_empty() || self.lanes.iter().any(|l| l.is_some())
+    }
+
+    /// Enable prefix delta-event tracking so a sharded router can keep
+    /// a shadow index of this engine's radix-cache contents (DESIGN.md
+    /// S24). No-op when the prefix cache is off.
+    pub fn track_prefix_events(&mut self, on: bool) {
+        self.queue.set_prefix_event_tracking(on);
+    }
+
+    /// Drain prefix delta events accumulated since the last call
+    /// (always empty unless [`InferenceServer::track_prefix_events`]
+    /// enabled tracking).
+    pub fn take_prefix_events(&mut self) -> Vec<crate::kvcache::radix::PrefixEvent> {
+        self.queue.take_prefix_events()
     }
 
     /// Cache bytes currently held by busy lanes.

@@ -32,4 +32,4 @@ pub use block::BlockAllocator;
 pub use layout::{slab_row_widths, slab_specs, CacheDtype, CacheLayout};
 pub use manager::SlotManager;
 pub use quant::SlabRows;
-pub use radix::{PrefixHit, PrefixStats, RadixCache};
+pub use radix::{PrefixEvent, PrefixHit, PrefixStats, RadixCache};

@@ -77,6 +77,36 @@ pub struct PrefixHit {
     pub rows: Vec<SlabRows>,
 }
 
+/// One change to the set of cached block-aligned prefixes, emitted by
+/// the [`RadixCache`] when delta tracking is on
+/// ([`RadixCache::set_event_tracking`]). The sharded router's shadow
+/// index (DESIGN.md S24) replays these to mirror a worker's cache
+/// contents tokens-only — no slab rows ride along, so an event costs
+/// bytes proportional to the token run, not the cache payload.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PrefixEvent {
+    /// A novel tail was cached. `tokens` is the full block-aligned
+    /// root path of the new leaf; its trailing `new_blocks` blocks are
+    /// the newly cached ones (the leading blocks were already held by
+    /// ancestor nodes and were announced by earlier events).
+    Insert {
+        /// Full root-path token run of the inserted leaf.
+        tokens: Vec<u32>,
+        /// How many trailing blocks of `tokens` are newly cached.
+        new_blocks: usize,
+    },
+    /// A leaf was evicted. `tokens` is the removed leaf's full
+    /// block-aligned root path; its trailing `removed_blocks` blocks
+    /// left the cache (ancestor blocks survive until they become
+    /// childless leaves and are evicted by their own event).
+    Evict {
+        /// Full root-path token run of the removed leaf.
+        tokens: Vec<u32>,
+        /// How many trailing blocks of `tokens` left the cache.
+        removed_blocks: usize,
+    },
+}
+
 /// One tree node: a block-aligned token run plus its cached slab rows.
 #[derive(Debug)]
 struct Node {
@@ -115,6 +145,12 @@ pub struct RadixCache {
     free_slots: Vec<usize>,
     clock: u64,
     stats: PrefixStats,
+    /// When true, insert/evict mutations append [`PrefixEvent`]s for
+    /// [`RadixCache::take_events`]. Off by default: a single-worker
+    /// engine has no delta consumer and the backlog would only grow.
+    track_events: bool,
+    /// Pending delta events since the last `take_events`.
+    events: Vec<PrefixEvent>,
 }
 
 impl RadixCache {
@@ -155,7 +191,42 @@ impl RadixCache {
             free_slots: Vec::new(),
             clock: 0,
             stats: PrefixStats::default(),
+            track_events: false,
+            events: Vec::new(),
         }
+    }
+
+    /// Enable or disable delta-event tracking (see [`PrefixEvent`]).
+    /// Disabling discards any pending events.
+    pub fn set_event_tracking(&mut self, on: bool) {
+        self.track_events = on;
+        if !on {
+            self.events.clear();
+        }
+    }
+
+    /// Drain the pending delta events (always empty unless
+    /// [`RadixCache::set_event_tracking`] turned tracking on). Events
+    /// are ordered exactly as the mutations happened, so replaying them
+    /// into an empty mirror reproduces the cached-prefix set.
+    pub fn take_events(&mut self) -> Vec<PrefixEvent> {
+        std::mem::take(&mut self.events)
+    }
+
+    /// Full block-aligned root-path token run of node `i` (ancestor
+    /// runs concatenated with its own run).
+    fn full_path_tokens(&self, i: usize) -> Vec<u32> {
+        let mut chain = Vec::new();
+        let mut cur = i;
+        while cur != 0 {
+            chain.push(cur);
+            cur = self.node(cur).parent;
+        }
+        let mut out = Vec::new();
+        for &n in chain.iter().rev() {
+            out.extend_from_slice(&self.node(n).tokens);
+        }
+        out
     }
 
     /// The element dtype stored rows carry.
@@ -361,6 +432,12 @@ impl RadixCache {
                 self.node_mut(cur).children.insert(key, slot);
                 self.touch(slot);
                 self.stats.cached_blocks += n_new;
+                if self.track_events {
+                    self.events.push(PrefixEvent::Insert {
+                        tokens: tokens[..total * bt].to_vec(),
+                        new_blocks: n_new,
+                    });
+                }
                 return Ok(n_new);
             };
             let nb = self.node(child).blocks.len();
@@ -528,6 +605,13 @@ impl RadixCache {
 
     /// Drop a leaf: release the cache's block references and unlink it.
     fn remove_leaf(&mut self, leaf: usize, alloc: &mut BlockAllocator) -> usize {
+        // Root path must be walked while the node is still in the
+        // arena (the parent chain dies with the take() below).
+        let path = if self.track_events {
+            Some(self.full_path_tokens(leaf))
+        } else {
+            None
+        };
         // lint: allow(R3) — eviction candidates come from the live-leaf
         // scan; the slab entry is Some until this take().
         let node = self.nodes[leaf].take().expect("live leaf");
@@ -539,6 +623,12 @@ impl RadixCache {
         self.free_slots.push(leaf);
         self.stats.cached_blocks -= released;
         self.stats.evicted_blocks += released;
+        if let Some(tokens) = path {
+            self.events.push(PrefixEvent::Evict {
+                tokens,
+                removed_blocks: released,
+            });
+        }
         released
     }
 

@@ -26,7 +26,8 @@ use elitekv::cli::Args;
 use elitekv::config::{ModelConfig, Variant};
 use elitekv::convert::{self, EliteSelection};
 use elitekv::coordinator::{
-    GenParams, InferenceServer, Request, SchedulerConfig,
+    EngineFactory, GenParams, InferenceServer, Request, RoutePolicyKind,
+    Router, SchedulerConfig,
 };
 use elitekv::data::{CorpusGen, ProbeSet};
 use elitekv::io::Checkpoint;
@@ -94,6 +95,7 @@ COMMANDS
              [--sparse-k N] [--prefill-chunk N] [--optimistic-admission]
              [--prefix-cache] [--temperature F] [--top-p F] [--seed N]
              [--r N (ropelite uniform fallback)] [--pallas]
+             [--workers N] [--route-policy affinity|least-loaded]
              native backend (default): no artifacts needed; random-init
              weights unless --ckpt points at a (converted) checkpoint.
              Requests are continuously batched: admission is gated on the
@@ -113,6 +115,12 @@ COMMANDS
              so live lanes never stall behind one long prompt; 0 (the
              default) prefills each admission whole. Chunked and
              monolithic runs are bitwise identical per request.
+             --workers N (native only, N >= 2) shards the stream over N
+             identical engine worker threads behind the cluster router
+             (DESIGN.md S24); --route-policy picks how: `affinity` (the
+             default) routes each request to the worker whose shadow
+             radix index holds its longest cached prefix, `least-loaded`
+             routes blind. Routing never changes any request's tokens.
   bench      [--config C] [--steps N] [--batch B] [--prompt N]
              [--out PATH]   native decode sweep -> BENCH_native_decode.json
              (every variant at cache dtype f32 AND int8, each measured
@@ -121,6 +129,7 @@ COMMANDS
              [--max-batch B] [--cb-requests N] [--cb-max-seq S]
              [--block-tokens N] [--cache-budget-mb N] [--cb-out PATH]
              [--shared-prefix N] [--sparse-k N] [--prefill-chunk N]
+             [--workers N] [--route-policy affinity|least-loaded]
              -> BENCH_continuous_batching.json (dense vs J-LRD max
              concurrency under one cache budget with an f32/int8 pair
              per variant, plus a shared-system-prompt trace replayed
@@ -128,7 +137,11 @@ COMMANDS
              trace replayed dense vs sparse at --sparse-k, plus a
              long-prompt-arrives-mid-decode trace replayed monolithic
              vs chunked at --prefill-chunk; rows carry TTFT p50/p95/p99,
-             mean TPOT, and the max inter-token gap)
+             mean TPOT, and the max inter-token gap; plus — when
+             --workers >= 2 — the shared-prefix trace replayed
+             closed-loop through the sharded router under blind
+             least-loaded AND --route-policy routing, with per-worker
+             routed/affinity-hit/hit-rate/shadow columns)
   eval       [--backend native|pjrt] --config C --variant TAG [--ckpt PATH]
              [--selection PATH] [--probes N] [--seed N] [--r N]
              [--cache-dtype f32|int8]  (int8, native only: score the
@@ -339,6 +352,12 @@ fn scheduler_config(
 // ---------------------------------------------------------------------------
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    let workers = args.usize_or("workers", 1)?;
+    let route_policy =
+        RoutePolicyKind::parse(&args.str_or("route-policy", "affinity"))?;
+    if workers > 1 {
+        return cmd_serve_sharded(args, workers, route_policy);
+    }
     let backend = args.str_or("backend", "native");
     let boxed: Box<dyn Backend> = match backend.as_str() {
         "native" => Box::new(native_backend(args)?),
@@ -421,6 +440,91 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `serve --workers N` (N >= 2): shard the synthetic request stream
+/// over N identical native engines behind the cluster router
+/// (DESIGN.md S24), then print aggregate throughput plus per-worker
+/// routing, shadow, and prefix-hit columns.
+fn cmd_serve_sharded(
+    args: &Args,
+    workers: usize,
+    route_policy: RoutePolicyKind,
+) -> Result<()> {
+    let backend = args.str_or("backend", "native");
+    if backend != "native" {
+        bail!("--workers > 1 currently supports the native backend only");
+    }
+    let cfg_name = args.str_or("config", "tiny");
+    let cfg = ModelConfig::by_name(&cfg_name).context("unknown config")?;
+    let scheduler = scheduler_config(args, 64, 16)?;
+    let n = args.usize_or("requests", 24)?;
+    let max_new = args.usize_or("max-new", 16)?;
+    let temperature = args.f64_or("temperature", 0.0)? as f32;
+    let top_p = args.f64_or("top-p", 1.0)? as f32;
+    let use_pallas = args.has("pallas");
+    let factories: Vec<EngineFactory> = (0..workers)
+        .map(|_| {
+            let args = args.clone();
+            let scheduler = scheduler.clone();
+            let f: EngineFactory = Box::new(move || {
+                let runner = native_backend(&args)?;
+                let mut server = InferenceServer::with_config(
+                    Box::new(runner),
+                    &scheduler,
+                )?;
+                server.use_pallas = use_pallas;
+                Ok(server)
+            });
+            f
+        })
+        .collect();
+    let mut router =
+        Router::with_policy(factories, route_policy, scheduler.block_tokens);
+    let gen = CorpusGen::new(cfg.vocab, 1);
+    let probes = ProbeSet::generate(&gen, n.div_ceil(6), 7777);
+    let t0 = std::time::Instant::now();
+    for (i, item) in probes.items.iter().take(n).enumerate() {
+        router.submit(Request::new(
+            i as u64,
+            item.prompt.clone(),
+            GenParams {
+                max_new_tokens: max_new,
+                temperature,
+                top_p,
+                ..Default::default()
+            },
+        ))?;
+    }
+    let responses = router.drain()?;
+    let wall = t0.elapsed().as_secs_f64();
+    let toks: usize = responses.iter().map(|r| r.tokens.len()).sum();
+    println!(
+        "[native/sharded] {workers} workers ({} routing): served {} \
+         requests, {} tokens in {:.2}s ({:.1} tok/s)",
+        route_policy.tag(),
+        responses.len(),
+        toks,
+        wall,
+        toks as f64 / wall.max(1e-9),
+    );
+    let rs = router.route_stats();
+    for (w, stats) in router.stats() {
+        println!(
+            "  worker {w}: routed {}, affinity hits {} ({} shadowed \
+             blocks claimed), shadow {} blocks, prefix hit rate {:.0}%, \
+             prefills {}, decode steps {}, peak cache {} KiB",
+            rs.routed.get(w).copied().unwrap_or(0),
+            rs.affinity_hits.get(w).copied().unwrap_or(0),
+            rs.affinity_blocks.get(w).copied().unwrap_or(0),
+            rs.shadow_blocks.get(w).copied().unwrap_or(0),
+            100.0 * stats.prefix_hit_rate(),
+            stats.prefills,
+            stats.decode_steps,
+            stats.peak_cache_bytes / 1024,
+        );
+    }
+    Ok(())
+}
+
 fn cmd_bench(args: &Args) -> Result<()> {
     let cfg_name = args.str_or("config", "tiny");
     let cfg = ModelConfig::by_name(&cfg_name).context("unknown config")?;
@@ -463,6 +567,10 @@ fn cmd_bench(args: &Args) -> Result<()> {
         sparse_k: args.usize_or("sparse-k", defaults.sparse_k)?,
         prefill_chunk: args
             .usize_or("prefill-chunk", defaults.prefill_chunk)?,
+        workers: args.usize_or("workers", defaults.workers)?,
+        route_policy: RoutePolicyKind::parse(
+            &args.str_or("route-policy", defaults.route_policy.tag()),
+        )?,
         seed: args.u64_or("seed", defaults.seed)?,
     };
     let cb_out = args.str_or("cb-out", "BENCH_continuous_batching.json");

@@ -1,0 +1,359 @@
+//! Sharded routing differential suite (ISSUE 10, DESIGN.md S24).
+//!
+//! Three contracts of the multi-worker serving layer:
+//!
+//! 1. **Routing invariance**: an N-worker routed run is bitwise
+//!    identical, per request, to the same request stream served by one
+//!    engine — same token streams, same finish reasons — for dense
+//!    (mha) and shared-latent (jlrd 25 %) variants at f32 and int8.
+//!    Workers run identical engine configurations and greedy decoding
+//!    depends only on the request's own prompt (the S17 batch
+//!    determinism contract), so WHERE a request runs must never change
+//!    WHAT it generates.
+//! 2. **Shadow exactness**: the router's tokens-only [`ShadowIndex`],
+//!    fed solely by the radix cache's [`PrefixEvent`] delta stream,
+//!    mirrors the real cache exactly — block gauge equal at every step,
+//!    and shadowed prefix matches agreeing with real `lookup` results
+//!    (the shadow never claims a prefix the cache doesn't hold).
+//!    Seeded property test honoring `ELITEKV_PROP_SEED` /
+//!    `ELITEKV_PROP_CASES`.
+//! 3. **Death accounting**: a worker whose engine errors mid-round
+//!    still lets `drain` terminate, with the exact number of lost
+//!    responses reported — and the surviving workers keep serving.
+
+use std::collections::BTreeMap;
+
+use elitekv::config::{ModelConfig, Variant};
+use elitekv::coordinator::cluster::ShadowIndex;
+use elitekv::coordinator::{
+    EngineFactory, GenParams, InferenceServer, Request, RoutePolicyKind,
+    Router, SchedulerConfig,
+};
+use elitekv::coordinator::{Response, WorkerState};
+use elitekv::kvcache::{
+    BlockAllocator, CacheDtype, RadixCache, SlabRows,
+};
+use elitekv::native::{NativeModel, NativeRunner};
+use elitekv::search::uniform_selection;
+use elitekv::util::prop;
+use elitekv::util::rng::Pcg64;
+
+/// One serving engine: 3 decode lanes over a 64-token window, prefix
+/// cache ON, roomy budget. Identical across the baseline and every
+/// router worker — the invariance contract requires it.
+fn engine(
+    variant: &Variant,
+    sel_r: Option<usize>,
+    dtype: CacheDtype,
+) -> anyhow::Result<InferenceServer> {
+    let cfg = ModelConfig::tiny();
+    let sel = sel_r.map(|r| uniform_selection(&cfg, r));
+    let mut model =
+        NativeModel::init(&cfg, variant.clone(), 0xe11e, sel.as_ref())?;
+    model.set_cache_dtype(dtype);
+    let runner = NativeRunner::new(model, 3, 64)?;
+    let sched = SchedulerConfig {
+        cache_budget_bytes: 8 << 20,
+        prefix_cache: true,
+        cache_dtype: dtype,
+        ..Default::default()
+    };
+    InferenceServer::with_config(Box::new(runner), &sched)
+}
+
+fn factory(
+    variant: &Variant,
+    sel_r: Option<usize>,
+    dtype: CacheDtype,
+) -> EngineFactory {
+    let variant = variant.clone();
+    Box::new(move || engine(&variant, sel_r, dtype))
+}
+
+fn greedy(id: u64, prompt: Vec<u32>, max_new: usize) -> Request {
+    Request::new(
+        id,
+        prompt,
+        GenParams {
+            max_new_tokens: max_new,
+            stop_token: None,
+            temperature: 0.0,
+            ..Default::default()
+        },
+    )
+}
+
+/// A 32-token (two 16-token blocks) shared system prompt plus distinct
+/// per-request tails — the workload where affinity routing matters and
+/// where routing-dependent cache state could most plausibly leak into
+/// outputs if the invariance contract broke.
+fn shared_prefix_prompts(n: usize) -> Vec<Vec<u32>> {
+    let mut gen = elitekv::data::CorpusGen::new(512, 611);
+    let shared = gen.stream(32);
+    (0..n)
+        .map(|i| {
+            let mut p = shared.clone();
+            p.extend(gen.stream(5 + 3 * (i % 3)));
+            p
+        })
+        .collect()
+}
+
+fn by_id(responses: Vec<Response>) -> BTreeMap<u64, Response> {
+    responses.into_iter().map(|r| (r.id, r)).collect()
+}
+
+/// Contract 1: serve the same stream on one engine and on a 2-worker
+/// affinity-routed cluster; every request's tokens and finish reason
+/// must be bitwise identical. Also pins shadow exactness end-to-end:
+/// after drain the router's shadow block gauges equal the workers'
+/// real radix-cache gauges.
+fn assert_routed_matches_single(
+    variant: Variant,
+    sel_r: Option<usize>,
+    dtype: CacheDtype,
+) {
+    let tag = variant.tag();
+    let prompts = shared_prefix_prompts(8);
+    let reqs: Vec<Request> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| greedy(i as u64, p.clone(), 3 + i % 4))
+        .collect();
+
+    let mut single = engine(&variant, sel_r, dtype).unwrap();
+    for r in &reqs {
+        single.submit(r.clone()).unwrap();
+    }
+    let base = by_id(single.run_to_completion().unwrap());
+
+    let mut router = Router::with_policy(
+        vec![
+            factory(&variant, sel_r, dtype),
+            factory(&variant, sel_r, dtype),
+        ],
+        RoutePolicyKind::PrefixAffinity,
+        16,
+    );
+    for r in &reqs {
+        router.submit(r.clone()).unwrap();
+    }
+    let routed = by_id(router.drain().unwrap());
+
+    assert_eq!(base.len(), 8, "{tag}: single-engine run dropped requests");
+    assert_eq!(routed.len(), 8, "{tag}: routed run dropped requests");
+    for (id, b) in &base {
+        let r = &routed[id];
+        assert_eq!(
+            r.tokens, b.tokens,
+            "{tag}/{:?}: request {id} tokens diverge under routing",
+            dtype
+        );
+        assert_eq!(
+            r.finish, b.finish,
+            "{tag}/{:?}: request {id} finish reason diverges",
+            dtype
+        );
+    }
+    // The stream really was sharded (both workers served requests)...
+    let rs = router.route_stats();
+    assert!(
+        rs.routed.iter().all(|&n| n > 0),
+        "{tag}: routing starved a worker: {:?}",
+        rs.routed
+    );
+    // ...and the shadow mirror agrees with the real caches at drain.
+    let real: usize = router
+        .stats()
+        .iter()
+        .map(|(_, s)| s.prefix_cached_blocks)
+        .sum();
+    let shadowed: usize = rs.shadow_blocks.iter().sum();
+    assert_eq!(
+        shadowed, real,
+        "{tag}: shadow mirrors {shadowed} blocks, workers hold {real}"
+    );
+}
+
+#[test]
+fn routed_matches_single_mha_f32() {
+    assert_routed_matches_single(Variant::Mha, None, CacheDtype::F32);
+}
+
+#[test]
+fn routed_matches_single_mha_int8() {
+    assert_routed_matches_single(Variant::Mha, None, CacheDtype::Int8);
+}
+
+#[test]
+fn routed_matches_single_jlrd_f32() {
+    assert_routed_matches_single(
+        Variant::EliteKv { r: 4, d_ckv: 64 },
+        Some(4),
+        CacheDtype::F32,
+    );
+}
+
+#[test]
+fn routed_matches_single_jlrd_int8() {
+    assert_routed_matches_single(
+        Variant::EliteKv { r: 4, d_ckv: 64 },
+        Some(4),
+        CacheDtype::Int8,
+    );
+}
+
+/// Fake slab rows for the shadow property cache (2 slabs of widths
+/// 3 and 2, 2 layers, matching the `RadixCache` below).
+fn rows_for(toks: &[u32]) -> Vec<SlabRows> {
+    [3usize, 2]
+        .iter()
+        .enumerate()
+        .map(|(si, &w)| {
+            let mut out = vec![0.0f32; 2 * toks.len() * w];
+            for l in 0..2 {
+                for (p, &t) in toks.iter().enumerate() {
+                    for e in 0..w {
+                        out[(l * toks.len() + p) * w + e] =
+                            (si * 1000 + l * 100 + p * 10 + e) as f32
+                                + t as f32 / 64.0;
+                    }
+                }
+            }
+            SlabRows::F32(out)
+        })
+        .collect()
+}
+
+/// Contract 2: random insert/lookup/evict workloads, with every delta
+/// event replayed into a [`ShadowIndex`]. At every step the shadow's
+/// block gauge equals the cache's, and on lookups the shadow's match
+/// agrees exactly with the real matched prefix (capped the way
+/// admission caps it). Exactness, not just soundness: the mirror never
+/// over- OR under-claims.
+#[test]
+fn prop_shadow_index_mirrors_radix_cache() {
+    prop::check(
+        "sharded-routing.shadow-mirror",
+        24,
+        |rng: &mut Pcg64| {
+            (0..40)
+                .map(|_| (rng.next_u64(), rng.below(4) as u8))
+                .collect::<Vec<_>>()
+        },
+        |ops| {
+            let mut a = BlockAllocator::new(24, 4);
+            let mut c = RadixCache::new(4, 2, vec![3, 2], CacheDtype::F32);
+            c.set_event_tracking(true);
+            let mut shadow = ShadowIndex::new(4);
+            for &(x, kind) in ops {
+                // tiny alphabet so prefixes collide across prompts
+                let len = 4 + (x % 17) as usize;
+                let toks: Vec<u32> = (0..len)
+                    .map(|i| ((x >> (i % 8)) & 1) as u32)
+                    .collect();
+                match kind {
+                    0 | 1 => {
+                        // request lifecycle: alloc, insert prefix, free
+                        if !a.can_admit(len) {
+                            continue;
+                        }
+                        let chain =
+                            a.alloc(len).map_err(|e| e.to_string())?;
+                        let aligned = len / 4 * 4;
+                        if aligned > 0 {
+                            let full = &toks[..aligned];
+                            let rows = rows_for(full);
+                            c.insert(full, &chain, || Ok(rows), &mut a)
+                                .map_err(|e| e.to_string())?;
+                        }
+                        a.release(&chain);
+                    }
+                    2 => {
+                        let cap = len.saturating_sub(1);
+                        let hit = c
+                            .lookup(&toks, cap, &mut a)
+                            .map_err(|e| e.to_string())?;
+                        a.release(&hit.chain);
+                        // exact agreement: the shadow's uncapped match,
+                        // capped like lookup caps, IS the real match
+                        let want =
+                            shadow.matched_blocks(&toks).min(cap / 4) * 4;
+                        if hit.tokens != want {
+                            return Err(format!(
+                                "cache matched {} tokens, shadow \
+                                 predicts {want}",
+                                hit.tokens
+                            ));
+                        }
+                    }
+                    _ => {
+                        c.evict((x % 8) as usize, &mut a);
+                    }
+                }
+                // replay this step's deltas, then the gauges must agree
+                for ev in c.take_events() {
+                    shadow.apply(&ev);
+                }
+                if shadow.blocks() != c.cached_blocks() {
+                    return Err(format!(
+                        "shadow holds {} blocks, cache holds {}",
+                        shadow.blocks(),
+                        c.cached_blocks()
+                    ));
+                }
+                // soundness spot-check: every shadowed prefix of this
+                // op's prompt resolves in the real cache
+                let m = shadow.matched_blocks(&toks);
+                for b in 1..=m {
+                    if !shadow.contains_prefix(&toks[..b * 4]) {
+                        return Err(format!(
+                            "shadow match of {m} blocks skipped block {b}"
+                        ));
+                    }
+                }
+                c.check_consistency(&a).map_err(|e| e.to_string())?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Contract 3: a request whose prompt passes admission but errors
+/// inside the engine (out-of-vocab token trips the kernel's ensure
+/// mid-prefill) kills its worker; `drain` still terminates, reports
+/// exactly one lost response, and the surviving worker keeps serving
+/// subsequent rounds.
+#[test]
+fn worker_death_mid_round_drains_with_exact_accounting() {
+    let mk = || factory(&Variant::Mha, None, CacheDtype::F32);
+    let mut router =
+        Router::with_policy(vec![mk(), mk()], RoutePolicyKind::LeastLoaded, 16);
+    let cfg = ModelConfig::tiny();
+    let mut gen = elitekv::data::CorpusGen::new(512, 97);
+
+    // First submit lands on worker 0 (rotation starts there); the
+    // poison token is in-window for admission but out of vocab for the
+    // kernel, so worker 0's engine errors and its thread exits.
+    let poison = vec![cfg.vocab as u32 + 5; 8];
+    router.submit(greedy(0, poison, 4)).unwrap();
+    // Worker 0 now carries in-flight load (its response never comes),
+    // so least-loaded sends the good request to worker 1.
+    router.submit(greedy(1, gen.stream(12), 4)).unwrap();
+
+    let err = router.drain().unwrap_err().to_string();
+    assert!(
+        err.contains("1 request(s) lost"),
+        "wrong missing-response accounting: {err}"
+    );
+
+    // The cluster is degraded, not down: the next round routes around
+    // the dead slot and completes normally.
+    router.submit(greedy(2, gen.stream(12), 4)).unwrap();
+    let out = router.drain().unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].id, 2);
+    assert_eq!(out[0].tokens.len(), 4);
+    assert_eq!(router.states()[0], WorkerState::Dead);
+    assert_eq!(router.states()[1], WorkerState::Live);
+}
